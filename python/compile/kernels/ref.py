@@ -1,0 +1,78 @@
+"""Pure-numpy oracle for the AP pass engine — the correctness reference the
+Pallas kernel (and therefore every AOT artifact) is checked against.
+
+Semantics mirror the paper exactly (§IV compare/write, §V blocked D-FF):
+within a write block, compares see the block-start ("frozen") state; the
+block's single write commits every row whose flip-flop was armed. The
+non-blocked case is the degenerate one-pass-per-block instance.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..luts import Lut
+
+
+def apply_lut_ref(state: np.ndarray, lut: Lut):
+    """Apply one digit-wise LUT to ``state`` [R, arity] (int array).
+
+    Returns ``(new_state, hist, sets)`` where ``hist[p, k]`` counts rows
+    with exactly k mismatching cells during pass p's compare, and
+    ``sets[p]`` counts changed-digit writes attributed to the first pass of
+    each block (a changed digit = 1 set + 1 reset on the cell).
+    """
+    state = state.copy()
+    rows, arity = state.shape
+    assert arity == lut.arity
+    num_passes = len(lut.passes)
+    hist = np.zeros((num_passes, arity + 1), dtype=np.int64)
+    sets = np.zeros(num_passes, dtype=np.int64)
+    pass_index = {id(p): i for i, p in enumerate(lut.passes)}
+
+    for block in lut.blocks():
+        frozen = state.copy()
+        enable = np.zeros(rows, dtype=bool)
+        for p in block:
+            i = pass_index[id(p)]
+            key = np.array(lut.decode(p.input), dtype=state.dtype)
+            mismatches = (frozen != key[None, :]).sum(axis=1)
+            hist[i] = np.bincount(mismatches, minlength=arity + 1)
+            enable |= mismatches == 0
+        first = pass_index[id(block[0])]
+        start, written = lut.write_of(block[0])
+        written = np.array(written, dtype=state.dtype)
+        changed = (state[:, start:] != written[None, :]) & enable[:, None]
+        sets[first] += int(changed.sum())
+        state[np.ix_(enable, range(start, arity))] = written[None, :]
+    return state, hist, sets
+
+
+def inplace_op_ref(array: np.ndarray, lut: Lut, p: int):
+    """p-digit in-place op over ``array`` [R, 2p+1] (layout A|B|carry,
+    LSB first). Returns (array', hist [p, P, arity+1], sets [p, P])."""
+    array = array.copy()
+    rows, cols = array.shape
+    assert cols == 2 * p + 1
+    hists, sets = [], []
+    for d in range(p):
+        cols_d = [d, p + d, 2 * p]
+        state = array[:, cols_d]
+        new_state, h, s = apply_lut_ref(state, lut)
+        array[:, cols_d] = new_state
+        hists.append(h)
+        sets.append(s)
+    return array, np.stack(hists), np.stack(sets)
+
+
+def add_words_ref(a_digits: np.ndarray, b_digits: np.ndarray, radix: int):
+    """Digit-wise reference addition: [R, p] little-endian operands →
+    (sum [R, p], carry [R])."""
+    rows, p = a_digits.shape
+    out = np.zeros_like(a_digits)
+    carry = np.zeros(rows, dtype=a_digits.dtype)
+    for d in range(p):
+        t = a_digits[:, d] + b_digits[:, d] + carry
+        out[:, d] = t % radix
+        carry = t // radix
+    return out, carry

@@ -1,0 +1,328 @@
+"""LUT generation (build-time Python mirror of ``rust/src/lutgen``).
+
+The Rust crate is the reference implementation; this module re-derives the
+same LUTs so the AOT pipeline is self-contained at build time. Semantic
+equivalence with the Rust generator is enforced two ways:
+
+* pytest goldens here assert the paper's invariants (21 passes / 9 blocks
+  for the ternary full adder, the 101→020 cycle break, Table X block
+  contents);
+* the Rust integration tests cross-check the AOT-compiled engine against
+  the native Rust simulator element-exactly on random workloads.
+
+States are encoded big-endian base-n, matching the paper ('020' = 6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class Pass:
+    """One LUT pass: compare ``input`` (state id), write the trailing
+    ``write_dim`` digits of ``output`` into matching rows."""
+
+    input: int
+    output: int
+    write_dim: int
+    group: int
+
+
+@dataclass
+class Lut:
+    name: str
+    radix: int
+    arity: int
+    write_start: int
+    passes: list[Pass] = field(default_factory=list)
+    num_groups: int = 0
+
+    def decode(self, sid: int) -> tuple[int, ...]:
+        out = []
+        for _ in range(self.arity):
+            out.append(sid % self.radix)
+            sid //= self.radix
+        return tuple(reversed(out))
+
+    def encode(self, digits) -> int:
+        sid = 0
+        for d in digits:
+            sid = sid * self.radix + int(d)
+        return sid
+
+    def write_of(self, p: Pass) -> tuple[int, tuple[int, ...]]:
+        """(first written column, written digits)."""
+        out = self.decode(p.output)
+        start = self.arity - p.write_dim
+        return start, out[start:]
+
+    def blocks(self) -> list[list[Pass]]:
+        blocks: list[list[Pass]] = [[] for _ in range(self.num_groups)]
+        for p in self.passes:
+            blocks[p.group].append(p)
+        return blocks
+
+
+# ---------------------------------------------------------------------------
+# truth tables
+
+
+def full_add(radix: int) -> tuple[str, int, int, Callable]:
+    """(name, arity, write_start, f) for the in-place full adder."""
+
+    def f(s):
+        total = s[0] + s[1] + s[2]
+        return (s[0], total % radix, total // radix)
+
+    return (f"full_add_r{radix}", 3, 1, f)
+
+
+def full_sub(radix: int) -> tuple[str, int, int, Callable]:
+    def f(s):
+        d = s[0] - s[1] - s[2]
+        borrow = 0
+        while d < 0:
+            d += radix
+            borrow += 1
+        return (s[0], d, borrow)
+
+    return (f"full_sub_r{radix}", 3, 1, f)
+
+
+def mac_digit(radix: int) -> tuple[str, int, int, Callable]:
+    def f(s):
+        v = s[0] * s[1] + s[2]
+        return (s[0], v % radix, v // radix)
+
+    return (f"mac_r{radix}", 3, 1, f)
+
+
+# ---------------------------------------------------------------------------
+# state diagram
+
+
+class Diagram:
+    """Functional graph of a truth table with cycle breaking — mirrors
+    ``rust/src/diagram/graph.rs`` (same tie-breaks, same results)."""
+
+    def __init__(self, name: str, radix: int, arity: int, write_start: int, f: Callable):
+        self.name = name
+        self.radix = radix
+        self.arity = arity
+        self.write_start = write_start
+        self.count = radix**arity
+        self.next: list[int] = []
+        self.write_dim = [arity - write_start] * self.count
+        for sid in range(self.count):
+            digits = self._decode(sid)
+            out = f(digits)
+            assert tuple(out[:write_start]) == digits[:write_start]
+            self.next.append(self._encode(out))
+        self.no_action = [self.next[s] == s for s in range(self.count)]
+        self.rewrites: list[tuple[int, int, int]] = []
+        self._break_cycles()
+        self.children: list[list[int]] = [[] for _ in range(self.count)]
+        for s in range(self.count):
+            if not self.no_action[s]:
+                self.children[self.next[s]].append(s)
+        self.level = [0] * self.count
+        queue = [s for s in range(self.count) if self.no_action[s]]
+        seen = set(queue)
+        while queue:
+            parent = queue.pop(0)
+            for c in self.children[parent]:
+                assert c not in seen, f"{self.name}: not a forest"
+                seen.add(c)
+                self.level[c] = self.level[parent] + 1
+                queue.append(c)
+        assert len(seen) == self.count, f"{self.name}: unbroken cycle"
+
+    def _decode(self, sid: int) -> tuple[int, ...]:
+        out = []
+        for _ in range(self.arity):
+            out.append(sid % self.radix)
+            sid //= self.radix
+        return tuple(reversed(out))
+
+    def _encode(self, digits) -> int:
+        sid = 0
+        for d in digits:
+            sid = sid * self.radix + int(d)
+        return sid
+
+    def _break_cycles(self) -> None:
+        """Round-based (mirrors rust diagram::graph): redirect targets must
+        currently reach a root, so chained cycle-merges are impossible; a
+        function with no fixed point is rejected."""
+        if not any(self.no_action):
+            raise ValueError(
+                f"{self.name}: no noAction state — not implementable in-place"
+            )
+        while True:
+            reach = self._reach_root()
+            cycles = self._find_cycles(reach)
+            if not cycles:
+                return
+            progressed = False
+            for cycle in cycles:
+                pick = self._pick_redirect(cycle, reach)
+                if pick is not None:
+                    x, y2 = pick
+                    self.rewrites.append((x, self.next[x], y2))
+                    self.next[x] = y2
+                    self.write_dim[x] = self.arity
+                    progressed = True
+            if not progressed:
+                raise ValueError(
+                    f"{self.name}: cycle {cycles[0]} admits no alternate "
+                    "output reaching a root"
+                )
+
+    def _reach_root(self) -> list[bool]:
+        color = [2 if self.no_action[s] else 0 for s in range(self.count)]
+        for start in range(self.count):
+            if color[start] != 0:
+                continue
+            path, cur = [], start
+            while color[cur] == 0:
+                color[cur] = 1
+                path.append(cur)
+                cur = self.next[cur]
+            verdict = 2 if color[cur] == 2 else 3
+            for s in path:
+                color[s] = verdict
+        return [c == 2 for c in color]
+
+    def _find_cycles(self, reach: list[bool]) -> list[list[int]]:
+        seen = [False] * self.count
+        cycles = []
+        for start in range(self.count):
+            if reach[start] or seen[start]:
+                continue
+            path, on_path, cur = [], set(), start
+            while not seen[cur] and cur not in on_path:
+                on_path.add(cur)
+                path.append(cur)
+                cur = self.next[cur]
+            if cur in on_path:
+                cycles.append(path[path.index(cur):])
+            for s in path:
+                seen[s] = True
+        return cycles
+
+    def _pick_redirect(self, cycle: list[int], reach: list[bool]):
+        kept = self.write_start
+        best = None  # (score, -x, -y2) maximised
+        for x in cycle:
+            y = self.next[x]
+            out = list(self._decode(y))
+            for variant in range(self.radix**kept):
+                digits = out[:]
+                v = variant
+                for i in reversed(range(kept)):
+                    digits[i] = v % self.radix
+                    v //= self.radix
+                y2 = self._encode(digits)
+                if y2 == y or y2 in cycle or not reach[y2]:
+                    continue
+                score = 3 if self.no_action[y2] else 2
+                cand = (score, -x, -y2)
+                if best is None or cand > best[0]:
+                    best = (cand, x, y2)
+        return None if best is None else (best[1], best[2])
+
+    def out_val(self, sid: int, dim: int) -> int:
+        digits = self._decode(sid)
+        v = 0
+        for d in digits[self.arity - dim:]:
+            v = v * self.radix + d
+        return v
+
+    def group_key(self, sid: int) -> int:
+        dim = self.write_dim[sid]
+        offset = sum(self.radix**i for i in range(dim))
+        return self.out_val(self.next[sid], dim) + offset
+
+
+# ---------------------------------------------------------------------------
+# generators
+
+
+def _skeleton(d: Diagram) -> Lut:
+    return Lut(name=d.name, radix=d.radix, arity=d.arity, write_start=d.write_start)
+
+
+def generate_non_blocked(d: Diagram) -> Lut:
+    """Algorithm 1: preorder DFS per tree, roots ascending."""
+    lut = _skeleton(d)
+    for root in (s for s in range(d.count) if d.no_action[s]):
+        stack = list(reversed(d.children[root]))
+        while stack:
+            s = stack.pop()
+            lut.passes.append(Pass(s, d.next[s], d.write_dim[s], len(lut.passes)))
+            stack.extend(reversed(d.children[s]))
+    lut.num_groups = len(lut.passes)
+    return lut
+
+
+def generate_blocked(d: Diagram) -> Lut:
+    """Algorithms 2–4: grpLvl grouping (same sweep order as the Rust
+    implementation: all eligible groups ascending per iteration)."""
+    lut = _skeleton(d)
+    level = list(d.level)
+    grp = [d.group_key(s) if not d.no_action[s] else -1 for s in range(d.count)]
+    next_group = max((g for g in grp if g >= 0), default=0) + 1
+    blocks_emitted = 0
+
+    def grp_lvl(l: int, g: int) -> int:
+        return sum(1 for s in range(d.count) if grp[s] == g and level[s] == l)
+
+    def top_total() -> int:
+        return sum(1 for s in range(d.count) if grp[s] >= 0 and level[s] == 1)
+
+    def update_lut(g_tgt: int) -> None:
+        nonlocal blocks_emitted
+        block = blocks_emitted
+        blocks_emitted += 1
+        members = [s for s in range(d.count) if grp[s] == g_tgt and level[s] == 1]
+        assert members
+        for j in members:
+            lut.passes.append(Pass(j, d.next[j], d.write_dim[j], block))
+            stack = list(d.children[j])
+            while stack:
+                v = stack.pop()
+                level[v] -= 1
+                stack.extend(d.children[v])
+            grp[j] = -1
+
+    while top_total() > 0:
+        groups = sorted({g for g in grp if g >= 0})
+        eligible = [
+            g
+            for g in groups
+            if grp_lvl(1, g) > 0
+            and all(grp_lvl(l, g) == 0 for l in range(2, max(level) + 1))
+        ]
+        if eligible:
+            for g in eligible:
+                update_lut(g)
+        else:
+            g_tgt = max(groups, key=lambda g: (grp_lvl(1, g), -g))
+            for s in range(d.count):
+                if grp[s] == g_tgt and level[s] > 1:
+                    grp[s] = next_group
+            next_group += 1
+            update_lut(g_tgt)
+
+    lut.num_groups = blocks_emitted
+    return lut
+
+
+def build_lut(fn: str, radix: int, blocked: bool) -> Lut:
+    """Build a LUT by function name ('add' | 'sub' | 'mac')."""
+    builders = {"add": full_add, "sub": full_sub, "mac": mac_digit}
+    name, arity, ws, f = builders[fn](radix)
+    d = Diagram(name, radix, arity, ws, f)
+    return generate_blocked(d) if blocked else generate_non_blocked(d)

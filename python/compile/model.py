@@ -1,0 +1,54 @@
+"""Layer-2 JAX model: the p-digit in-place vector operation.
+
+Composes the L1 kernel over digit positions with ``lax.scan`` (one trace of
+the 21-pass kernel regardless of p — keeps the lowered HLO compact for
+80-digit operands). The array layout is the paper's `A | B | carry` row of
+N = 2p+1 cells, least-significant digit first.
+
+This module is build-time only: ``aot.py`` lowers `inplace_op` to HLO text
+which the Rust runtime executes via PJRT. Nothing here runs at request time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ap_pass import apply_lut
+from .luts import Lut
+
+
+def inplace_op(array: jax.Array, lut: Lut, p: int):
+    """Run the p-digit in-place op on `array` [R, 2p+1] int32.
+
+    Returns (array', hist [p, P, arity+1], sets [p, P]).
+    """
+    rows, cols = array.shape
+    assert cols == 2 * p + 1, f"expected {2 * p + 1} columns, got {cols}"
+    carry_col = 2 * p
+
+    def digit_step(arr, d):
+        a_col = jax.lax.dynamic_slice(arr, (0, d), (rows, 1))
+        b_col = jax.lax.dynamic_slice(arr, (0, p + d), (rows, 1))
+        c_col = jax.lax.dynamic_slice(arr, (0, carry_col), (rows, 1))
+        state = jnp.concatenate([a_col, b_col, c_col], axis=1)
+        new_state, hist, sets = apply_lut(state, lut)
+        arr = jax.lax.dynamic_update_slice(arr, new_state[:, 0:1], (0, d))
+        arr = jax.lax.dynamic_update_slice(arr, new_state[:, 1:2], (0, p + d))
+        arr = jax.lax.dynamic_update_slice(arr, new_state[:, 2:3], (0, carry_col))
+        return arr, (hist, sets)
+
+    array, (hists, sets) = jax.lax.scan(digit_step, array, jnp.arange(p, dtype=jnp.int32))
+    return array, hists, sets
+
+
+def make_engine(lut: Lut, rows: int, p: int):
+    """A jit-able engine closure of static shape (rows × 2p+1) for `lut`."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def engine(array):
+        return inplace_op(array, lut, p)
+
+    return engine

@@ -1,0 +1,42 @@
+"""AOT pipeline smoke tests: lowering produces parseable HLO text with the
+expected I/O signature (checked structurally, not by re-executing — the
+execution check is the Rust integration test against the native sim)."""
+
+import re
+
+import pytest
+
+from compile.aot import lower_variant, variant_name
+
+
+@pytest.mark.parametrize(
+    "fn,mode,radix,rows,digits",
+    [("add", "blocked", 3, 256, 4), ("add", "non_blocked", 2, 256, 8)],
+)
+def test_lowering_produces_hlo_text(fn, mode, radix, rows, digits):
+    text, meta = lower_variant(fn, mode, radix, rows, digits)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # input parameter: rows × (2p+1) int32
+    assert f"s32[{rows},{2 * digits + 1}]" in text
+    assert meta["passes"] >= 1 and meta["groups"] >= 1
+    if mode == "blocked" and radix == 3 and fn == "add":
+        assert meta["passes"] == 21 and meta["groups"] == 9
+
+
+def test_output_tuple_shapes():
+    """Lowered module returns (array, hist, sets) as a tuple."""
+    text, meta = lower_variant("add", "blocked", 3, 256, 4)
+    root = re.search(r"entry_computation_layout=\{.*?->\((.*?)\)\}", text)
+    assert root, "tuple return signature missing"
+    sig = root.group(1)
+    assert f"s32[256,9]" in sig  # array'
+    assert f"s32[4,21,4]" in sig  # hist [p, P, classes]
+    assert f"s32[4,21]" in sig  # sets [p, P]
+
+
+def test_variant_names_unique():
+    from compile.aot import VARIANTS
+
+    names = [variant_name(*v) for v in VARIANTS]
+    assert len(names) == len(set(names))

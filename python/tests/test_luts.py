@@ -1,0 +1,112 @@
+"""Golden + property tests for the Python LUT generator (mirror of the Rust
+reference — same invariants as rust/src/lutgen tests)."""
+
+import itertools
+
+import pytest
+
+from compile.luts import Diagram, Lut, build_lut, full_add, full_sub, mac_digit
+
+
+def replay(lut: Lut, initial: int) -> tuple[int, int]:
+    """Deferred-semantics replay of one stored state; returns (final,
+    applications)."""
+    state = list(lut.decode(initial))
+    apps = 0
+    for block in lut.blocks():
+        sid = lut.encode(state)
+        hit = next((p for p in block if p.input == sid), None)
+        if hit is not None:
+            start, written = lut.write_of(hit)
+            state[start:] = list(written)
+            apps += 1
+    return lut.encode(state), apps
+
+
+@pytest.mark.parametrize("radix", [2, 3, 4, 5])
+@pytest.mark.parametrize("fn", ["add", "sub", "mac"])
+@pytest.mark.parametrize("blocked", [False, True])
+def test_lut_soundness(radix, fn, blocked):
+    """Replaying the LUT over every state yields the function's written
+    digits with exactly one application for action states."""
+    builders = {"add": full_add, "sub": full_sub, "mac": mac_digit}
+    name, arity, ws, f = builders[fn](radix)
+    lut = build_lut(fn, radix, blocked)
+    for sid in range(radix**arity):
+        digits = lut.decode(sid)
+        expect = f(digits)
+        final, apps = replay(lut, sid)
+        got = lut.decode(final)
+        assert got[ws:] == tuple(expect[ws:]), f"{name} state {digits}"
+        is_noaction = tuple(expect) == digits
+        assert apps == (0 if is_noaction else 1), f"{name} state {digits}"
+
+
+def test_tfa_pass_and_group_counts():
+    """Table VII: 21 passes; Table X: 9 write blocks."""
+    nb = build_lut("add", 3, blocked=False)
+    b = build_lut("add", 3, blocked=True)
+    assert len(nb.passes) == 21 and nb.num_groups == 21
+    assert len(b.passes) == 21 and b.num_groups == 9
+
+
+def test_tfa_cycle_break_is_101_to_020():
+    """§IV-B: input 101 is rewritten to output 020 with a 3-trit write."""
+    lut = build_lut("add", 3, blocked=False)
+    widened = [p for p in lut.passes if p.write_dim == 3]
+    assert len(widened) == 1
+    assert lut.decode(widened[0].input) == (1, 0, 1)
+    assert lut.decode(widened[0].output) == (0, 2, 0)
+
+
+def test_tfa_blocked_contents_match_table_x():
+    """Block contents equal Table X (order among simultaneously-eligible
+    blocks is arbitrary — compared as a set of sets)."""
+    lut = build_lut("add", 3, blocked=True)
+    ours = {
+        frozenset("".join(map(str, lut.decode(p.input))) for p in block)
+        for block in lut.blocks()
+    }
+    paper = {
+        frozenset(b)
+        for b in [
+            {"101"},
+            {"102", "111", "120", "210"},
+            {"112", "121", "202", "220"},
+            {"002", "011", "110", "200"},
+            {"122", "212"},
+            {"001", "100"},
+            {"222"},
+            {"012", "021"},
+            {"022"},
+        ]
+    }
+    assert ours == paper
+
+
+def test_binary_adder_is_table_vi():
+    """Radix-2 full adder: 4 action passes over {001, 011, 100, 110}."""
+    lut = build_lut("add", 2, blocked=False)
+    inputs = sorted("".join(map(str, lut.decode(p.input))) for p in lut.passes)
+    assert inputs == ["001", "011", "100", "110"]
+
+
+def test_parent_before_child_everywhere():
+    for radix, fn in itertools.product([2, 3, 4], ["add", "sub", "mac"]):
+        lut = build_lut(fn, radix, blocked=True)
+        builders = {"add": full_add, "sub": full_sub, "mac": mac_digit}
+        name, arity, ws, f = builders[fn](radix)
+        d = Diagram(name, radix, arity, ws, f)
+        pos = {p.input: i for i, p in enumerate(lut.passes)}
+        for p in lut.passes:
+            parent = d.next[p.input]
+            if not d.no_action[parent]:
+                assert pos[parent] < pos[p.input], f"{name}: {p.input}"
+
+
+def test_blocks_share_write_action():
+    for radix in [2, 3, 4]:
+        lut = build_lut("add", radix, blocked=True)
+        for block in lut.blocks():
+            actions = {lut.write_of(p) for p in block}
+            assert len(actions) == 1

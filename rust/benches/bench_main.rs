@@ -1,0 +1,202 @@
+//! `cargo bench` — one benchmark per paper table/figure (the regeneration
+//! cost of each experiment) plus the hot-path microbenches the §Perf pass
+//! optimises. Hand-rolled harness (criterion unavailable offline).
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+mod harness;
+
+use harness::{bench, black_box};
+use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
+use mvap::circuit::{CellTech, MatchClass, MatchlineSim};
+use mvap::coordinator::{Backend, EngineService, Job, NativeBackend, OpKind, PjrtBackend, VectorEngine};
+use mvap::diagram::StateDiagram;
+use mvap::energy::{delay_cycles, DelayScheme, OpShape};
+use mvap::exp;
+use mvap::func::full_add;
+use mvap::lutgen::{generate_blocked, generate_non_blocked};
+use mvap::mvl::{Radix, Word};
+use mvap::util::Rng;
+use std::path::PathBuf;
+
+fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
+    (0..rows)
+        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
+        .collect()
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "--bench");
+    let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+    let mut results = Vec::new();
+    println!("mvap benchmarks (filter: {:?})\n", filter);
+
+    // ---- hot paths -------------------------------------------------------
+    if run("hot/lutgen_non_blocked") {
+        let table = full_add(Radix::TERNARY);
+        results.push(bench("hot/lutgen_non_blocked_tfa", None, || {
+            let d = StateDiagram::build(table.clone()).unwrap();
+            black_box(generate_non_blocked(&d));
+        }));
+    }
+    if run("hot/lutgen_blocked") {
+        let table = full_add(Radix::TERNARY);
+        results.push(bench("hot/lutgen_blocked_tfa", None, || {
+            let d = StateDiagram::build(table.clone()).unwrap();
+            black_box(generate_blocked(&d));
+        }));
+    }
+    if run("hot/native_add") {
+        let radix = Radix::TERNARY;
+        let (rows, p) = (1024usize, 20usize);
+        let mut rng = Rng::new(1);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        results.push(bench(
+            "hot/native_add_20t_1024rows_faithful",
+            Some((rows * p) as u64),
+            || {
+                let (array, layout) = load_operands(radix, &a, &b, None);
+                let mut ap = Ap::new(array);
+                black_box(add_vectors(&mut ap, &layout, &lut, ExecMode::Blocked));
+            },
+        ));
+        results.push(bench(
+            "hot/native_add_20t_1024rows_fast",
+            Some((rows * p) as u64),
+            || {
+                let (array, layout) = load_operands(radix, &a, &b, None);
+                let mut ap = Ap::new(array);
+                ap.apply_lut_multi_fast(&lut, &layout.positions(), ExecMode::Blocked);
+                black_box(mvap::ap::extract_operand(ap.array(), &layout));
+            },
+        ));
+    }
+    if run("hot/native_compare") {
+        // pure compare throughput: one pass over a wide array
+        let radix = Radix::TERNARY;
+        let rows = 4096usize;
+        let mut rng = Rng::new(2);
+        let mut data = vec![0u8; rows * 41];
+        rng.fill_digits(&mut data, 3);
+        let array = mvap::cam::CamArray::from_data(radix, rows, 41, data);
+        results.push(bench("hot/native_compare_4096rows", Some(rows as u64), || {
+            black_box(array.compare(&[3, 23, 40], &[1, 2, 0]));
+        }));
+    }
+    if run("hot/pjrt_add") {
+        let dir = PathBuf::from("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let radix = Radix::TERNARY;
+            let (rows, p) = (1024usize, 20usize);
+            let mut rng = Rng::new(3);
+            let a = random_words(&mut rng, rows, p, radix);
+            let b = random_words(&mut rng, rows, p, radix);
+            let backend = PjrtBackend::new(&dir).expect("pjrt backend");
+            let mut eng = VectorEngine::new(Box::new(backend));
+            // prime the compile cache outside the timed region
+            let job = Job::new(0, OpKind::Add, radix, true, a.clone(), b.clone());
+            eng.execute(&job).unwrap();
+            let mut id = 1u64;
+            results.push(bench(
+                "hot/pjrt_add_20t_1024rows",
+                Some((rows * p) as u64),
+                || {
+                    let job = Job::new(id, OpKind::Add, radix, true, a.clone(), b.clone());
+                    id += 1;
+                    black_box(eng.execute(&job).unwrap());
+                },
+            ));
+        } else {
+            eprintln!("hot/pjrt_add skipped: run `make artifacts`");
+        }
+    }
+    if run("hot/service_throughput") {
+        let radix = Radix::TERNARY;
+        let (rows, p, jobs) = (256usize, 20usize, 8usize);
+        let mut rng = Rng::new(4);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let svc = EngineService::start(4, 16, || {
+            Ok(Box::new(NativeBackend) as Box<dyn Backend>)
+        })
+        .unwrap();
+        results.push(bench(
+            "hot/service_4workers_8jobs",
+            Some((jobs * rows) as u64),
+            || {
+                let rxs: Vec<_> = (0..jobs as u64)
+                    .map(|id| {
+                        svc.submit(Job::new(id, OpKind::Add, radix, true, a.clone(), b.clone()))
+                    })
+                    .collect();
+                for rx in rxs {
+                    black_box(rx.recv().unwrap().unwrap());
+                }
+            },
+        ));
+        svc.shutdown();
+    }
+    if run("hot/matchline_transient") {
+        let sim = MatchlineSim { tech: CellTech::ternary_default(), masked_cells: 3 };
+        results.push(bench("hot/matchline_transient_400steps", None, || {
+            black_box(sim.evaluate(MatchClass(1)));
+        }));
+    }
+
+    // ---- per-table / per-figure regeneration (render only, no stdout) ----
+    if run("exp/table6") {
+        results.push(bench("exp/table6", None, || {
+            black_box(exp::tables::table6().0.render());
+        }));
+    }
+    if run("exp/table7") {
+        results.push(bench("exp/table7", None, || {
+            black_box(exp::tables::table7().0.render());
+        }));
+    }
+    if run("exp/table9") {
+        results.push(bench("exp/table9_grplvl_trace", None, || {
+            black_box(exp::tables::table9());
+        }));
+    }
+    if run("exp/table10") {
+        results.push(bench("exp/table10", None, || {
+            black_box(exp::tables::table10().0.render());
+        }));
+    }
+    if run("exp/fig9") {
+        results.push(bench("exp/fig9", None, || {
+            black_box(exp::fig9::run(DelayScheme::Traditional).tap_b);
+        }));
+    }
+    if run("exp/fig6") || run("exp/fig7") {
+        results.push(bench("exp/fig6+fig7_sweep", None, || {
+            black_box(exp::circuit_dse::sweep());
+        }));
+    }
+    if run("exp/table11") {
+        results.push(bench("exp/table11_1000rows", Some(6 * 1000), || {
+            black_box(exp::table11::run(1000, 1));
+        }));
+    }
+    if run("exp/fig8") {
+        results.push(bench("exp/fig8_1000rows", None, || {
+            black_box(exp::fig8::run(1000, 1));
+        }));
+    }
+    if run("model/delay") {
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        results.push(bench("model/delay_cycles", None, || {
+            black_box(delay_cycles(OpShape::of(&lut, 20), DelayScheme::Traditional));
+        }));
+    }
+
+    println!("\n==== summary ====");
+    for r in &results {
+        r.print();
+    }
+}

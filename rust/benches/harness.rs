@@ -1,0 +1,66 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set):
+//! warmup + timed iterations, reporting mean / p50 / p95 and a derived
+//! throughput where the bench provides an item count.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing summary.
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// items/second if the bench declared a per-iteration item count.
+    pub throughput: Option<f64>,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>12.0} items/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<38} {:>5} iters  mean {:>11?}  p50 {:>11?}  p95 {:>11?}{tp}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        );
+    }
+}
+
+/// Run a benchmark: `f` is called once per iteration; `items` (optional)
+/// is the per-iteration workload size for throughput reporting.
+pub fn bench<F: FnMut()>(name: &str, items: Option<u64>, mut f: F) -> Summary {
+    // Warmup: run until 0.3 s or 3 iterations, whichever is later.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0;
+    while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(300) {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 50 {
+            break;
+        }
+    }
+    // Measure: aim for ~1.5 s of samples, 5..=200 iterations.
+    let per_iter = warm_start.elapsed() / warm_iters as u32;
+    let target = Duration::from_millis(1500);
+    let iters = (target.as_nanos() / per_iter.as_nanos().max(1)).clamp(5, 200) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let p50 = samples[iters / 2];
+    let p95 = samples[(iters * 95 / 100).min(iters - 1)];
+    let throughput = items.map(|n| n as f64 / mean.as_secs_f64());
+    Summary { name: name.to_string(), iters, mean, p50, p95, throughput }
+}
+
+/// Prevent the optimiser from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,441 @@
+//! The AP controller: applies LUT pass programs to the CAM array.
+//!
+//! Non-blocked execution (§IV): every pass is a compare immediately
+//! followed by a masked write of the matching rows.
+//!
+//! Blocked execution (§V): compares of one block accumulate per-row
+//! write-enable flags (the D flip-flop clocked by the Tag bit); a single
+//! write cycle at the end of the block commits every flagged row. The
+//! flip-flops are reset after each block.
+
+use super::stats::ApStats;
+use crate::cam::{CamArray, CompareOutcome};
+use crate::lutgen::Lut;
+
+/// Execution mode for a LUT program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Compare+write per pass (the non-blocked approach).
+    NonBlocked,
+    /// Deferred per-block writes via the per-row D-FF (the blocked
+    /// approach). Correct for any LUT, but only *saves* cycles when the
+    /// LUT was generated blocked.
+    Blocked,
+}
+
+/// An associative processor: one CAM array plus controller state.
+#[derive(Clone, Debug)]
+pub struct Ap {
+    array: CamArray,
+    stats: ApStats,
+    /// Write-enable flip-flops (blocked mode), one per row.
+    write_enable: Vec<bool>,
+}
+
+impl Ap {
+    /// Wrap an array.
+    pub fn new(array: CamArray) -> Self {
+        let rows = array.rows();
+        Ap { array, stats: ApStats::default(), write_enable: vec![false; rows] }
+    }
+
+    /// The underlying array.
+    pub fn array(&self) -> &CamArray {
+        &self.array
+    }
+
+    /// Mutable array access (initialisation/loading).
+    pub fn array_mut(&mut self) -> &mut CamArray {
+        &mut self.array
+    }
+
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &ApStats {
+        &self.stats
+    }
+
+    /// Take and reset the statistics.
+    pub fn take_stats(&mut self) -> ApStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// One raw compare over `cols` with `keys`, with stats recording.
+    pub fn compare(&mut self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
+        let out = self.array.compare(cols, keys);
+        self.stats.record_compare(&out.mismatch_hist);
+        out
+    }
+
+    /// One raw write cycle of `values` into `cols` of tagged rows.
+    pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) {
+        let ops = self.array.write(tags, cols, values);
+        self.stats.write_cycles += 1;
+        self.stats.sets += ops.sets as u64;
+        self.stats.resets += ops.resets as u64;
+        self.stats.rows_written += tags.iter().filter(|&&t| t).count() as u64;
+    }
+
+    /// Apply one digit-wise LUT over the given columns. `cols` maps the
+    /// LUT's state digits to array columns, e.g. `[a_d, b_d, carry]` for
+    /// the full adder at digit position d.
+    pub fn apply_lut(&mut self, lut: &Lut, cols: &[usize], mode: ExecMode) {
+        assert_eq!(cols.len(), lut.arity);
+        match mode {
+            ExecMode::NonBlocked => {
+                for p in &lut.passes {
+                    let key = lut.decode(p.input);
+                    let out = self.compare(cols, &key);
+                    let (start, vals) = lut.write_of(p);
+                    self.write(&out.tags, &cols[start..], &vals);
+                }
+            }
+            ExecMode::Blocked => {
+                for block in lut.blocks() {
+                    debug_assert!(!block.is_empty());
+                    self.write_enable.iter_mut().for_each(|w| *w = false);
+                    for p in &block {
+                        let key = lut.decode(p.input);
+                        let out = self.compare(cols, &key);
+                        for (w, t) in self.write_enable.iter_mut().zip(&out.tags) {
+                            *w |= t; // Tag clocks the D-FF
+                        }
+                    }
+                    // all passes of a block share the write action
+                    let (start, vals) = lut.write_of(block[0]);
+                    let enables = self.write_enable.clone();
+                    self.write(&enables, &cols[start..], &vals);
+                }
+            }
+        }
+    }
+
+    /// Apply a LUT across `positions.len()` digit positions, where
+    /// `positions[d]` lists the state columns at digit d (ripple order).
+    pub fn apply_lut_multi(&mut self, lut: &Lut, positions: &[Vec<usize>], mode: ExecMode) {
+        for cols in positions {
+            self.apply_lut(lut, cols, mode);
+        }
+    }
+
+    /// Fast-path LUT application with identical results *and statistics*
+    /// to [`Self::apply_lut`] (cross-checked in tests), exploiting the
+    /// soundness invariant of generated LUTs: every row matches **at most
+    /// one** pass of the whole program (§IV-A — the validator enforces
+    /// exactly this). So instead of `passes × rows` cell compares, bucket
+    /// rows by their state id once, then combine per-state precomputed
+    /// contribution tables:
+    ///
+    /// * `hist[p][k]` gains `count(s)` at `k = dist(state-at-p, key_p)`,
+    ///   where state-at-p is the initial state before (and at) the
+    ///   matching pass and the written state after it (after the *block*
+    ///   for blocked mode);
+    /// * set/reset = changed digits in the (possibly widened) write;
+    /// * the array update is a single row rewrite.
+    ///
+    /// Rows holding don't-care digits fall back to the faithful path
+    /// (don't-care matching is not representable as a single state id).
+    pub fn apply_lut_fast(&mut self, lut: &Lut, cols: &[usize], mode: ExecMode) {
+        let tables = FastTables::build(lut, mode);
+        self.apply_lut_fast_with(lut, cols, mode, &tables);
+    }
+
+    /// [`Self::apply_lut_fast`] with caller-provided precomputed tables
+    /// (hoisted out of multi-digit loops — §Perf iteration 2).
+    fn apply_lut_fast_with(
+        &mut self,
+        lut: &Lut,
+        cols: &[usize],
+        mode: ExecMode,
+        tables: &FastTables,
+    ) {
+        let rows = self.array.rows();
+        let radix = self.array.radix().n() as usize;
+
+        // bucket rows by state id; fall back if any don't-care appears
+        let mut counts = vec![0u64; tables.num_states];
+        let mut row_state = vec![0u32; rows];
+        for r in 0..rows {
+            let mut sid = 0usize;
+            for &c in cols {
+                let d = self.array.get(r, c);
+                if d == crate::mvl::DONT_CARE {
+                    return self.apply_lut(lut, cols, mode);
+                }
+                sid = sid * radix + d as usize;
+            }
+            counts[sid] += 1;
+            row_state[r] = sid as u32;
+        }
+
+        // stats from the per-state tables
+        let num_passes = lut.passes.len();
+        if self.stats.mismatch_hist.len() < cols.len() + 1 {
+            self.stats.mismatch_hist.resize(cols.len() + 1, 0);
+        }
+        for (sid, &count) in counts.iter().enumerate() {
+            if count == 0 {
+                continue;
+            }
+            let st = &tables.per_state[sid];
+            for p in 0..num_passes {
+                self.stats.mismatch_hist[st.hist_class[p] as usize] += count;
+            }
+            self.stats.sets += st.sets as u64 * count;
+            self.stats.resets += st.resets as u64 * count;
+            if st.matched {
+                self.stats.rows_written += count;
+            }
+        }
+        self.stats.compare_cycles += num_passes as u64;
+        self.stats.write_cycles += match mode {
+            ExecMode::NonBlocked => num_passes as u64,
+            ExecMode::Blocked => lut.num_groups as u64,
+        };
+
+        // single-scan array rewrite
+        for r in 0..rows {
+            let st = &tables.per_state[row_state[r] as usize];
+            if st.matched {
+                for (i, &c) in cols.iter().enumerate() {
+                    self.array.set(r, c, st.final_digits[i]);
+                }
+            }
+        }
+    }
+
+    /// Fast-path variant of [`Self::apply_lut_multi`]: the contribution
+    /// tables are built once and shared across digit positions.
+    pub fn apply_lut_multi_fast(&mut self, lut: &Lut, positions: &[Vec<usize>], mode: ExecMode) {
+        let tables = FastTables::build(lut, mode);
+        for cols in positions {
+            self.apply_lut_fast_with(lut, cols, mode, &tables);
+        }
+    }
+}
+
+/// Precomputed per-state contribution tables for [`Ap::apply_lut_fast`].
+struct FastTables {
+    num_states: usize,
+    per_state: Vec<StateEntry>,
+}
+
+struct StateEntry {
+    /// Mismatch class this state contributes to at each pass.
+    hist_class: Vec<u8>,
+    /// Did any pass match (⇒ the row is rewritten)?
+    matched: bool,
+    /// Digits after the program (valid when `matched`).
+    final_digits: Vec<u8>,
+    sets: u32,
+    resets: u32,
+}
+
+impl FastTables {
+    fn build(lut: &Lut, mode: ExecMode) -> FastTables {
+        let num_states = (lut.radix.n() as usize).pow(lut.arity as u32);
+        let keys: Vec<Vec<u8>> = lut.passes.iter().map(|p| lut.decode(p.input)).collect();
+        // index of the pass matching each state (soundness ⇒ at most one)
+        let mut match_pass: Vec<Option<usize>> = vec![None; num_states];
+        for (i, p) in lut.passes.iter().enumerate() {
+            match_pass[p.input] = Some(i);
+        }
+        // last pass index of each block (the blocked-mode switch point)
+        let mut block_end = vec![0usize; lut.num_groups];
+        for (i, p) in lut.passes.iter().enumerate() {
+            block_end[p.group] = block_end[p.group].max(i);
+        }
+        let dist = |a: &[u8], b: &[u8]| -> u8 {
+            a.iter().zip(b).filter(|(x, y)| x != y).count() as u8
+        };
+        let per_state = (0..num_states)
+            .map(|sid| {
+                let s0 = lut.decode(sid);
+                match match_pass[sid] {
+                    None => StateEntry {
+                        hist_class: keys.iter().map(|k| dist(&s0, k)).collect(),
+                        matched: false,
+                        final_digits: s0,
+                        sets: 0,
+                        resets: 0,
+                    },
+                    Some(m) => {
+                        let pass = &lut.passes[m];
+                        let (start, written) = lut.write_of(pass);
+                        let mut s1 = s0.clone();
+                        s1[start..].copy_from_slice(&written);
+                        // switch point: immediately after the matching pass
+                        // (non-blocked) or after its block (blocked)
+                        let switch = match mode {
+                            ExecMode::NonBlocked => m,
+                            ExecMode::Blocked => block_end[pass.group],
+                        };
+                        let hist_class = keys
+                            .iter()
+                            .enumerate()
+                            .map(|(p, k)| if p <= switch { dist(&s0, k) } else { dist(&s1, k) })
+                            .collect();
+                        let changed =
+                            s0.iter().zip(&s1).filter(|(a, b)| a != b).count() as u32;
+                        StateEntry {
+                            hist_class,
+                            matched: true,
+                            final_digits: s1,
+                            sets: changed,
+                            resets: changed,
+                        }
+                    }
+                }
+            })
+            .collect();
+        FastTables { num_states, per_state }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cam::CamArray;
+    use crate::diagram::StateDiagram;
+    use crate::func::full_add;
+    use crate::lutgen::{generate_blocked, generate_non_blocked};
+    use crate::mvl::Radix;
+
+    /// Single-trit addition over all 27 initial states, both modes/LUTs.
+    #[test]
+    fn single_digit_add_all_states() {
+        let table = full_add(Radix::TERNARY);
+        let d = StateDiagram::build(table).unwrap();
+        let luts = [
+            (generate_non_blocked(&d), ExecMode::NonBlocked),
+            (generate_blocked(&d), ExecMode::Blocked),
+        ];
+        for (lut, mode) in &luts {
+            // one row per possible (A,B,C) state
+            let mut data = Vec::new();
+            for id in 0..27 {
+                data.extend(d.table().decode(id));
+            }
+            let mut ap = Ap::new(CamArray::from_data(Radix::TERNARY, 27, 3, data));
+            ap.apply_lut(lut, &[0, 1, 2], *mode);
+            for id in 0..27 {
+                let row = ap.array().row(id);
+                let expect = d.table().decode(d.table().output_of(id));
+                // written digits (B, C) must equal the function output
+                assert_eq!(&row[1..], &expect[1..], "state {id} mode {mode:?}");
+            }
+        }
+    }
+
+    /// Pass/write cycle accounting: 21 compares with 21 (non-blocked) or
+    /// 9 (blocked) writes per digit — the §VI-C delay inputs.
+    #[test]
+    fn cycle_accounting_matches_lut_shape() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let nb = generate_non_blocked(&d);
+        let b = generate_blocked(&d);
+
+        let mut ap = Ap::new(CamArray::new(Radix::TERNARY, 8, 3));
+        ap.apply_lut(&nb, &[0, 1, 2], ExecMode::NonBlocked);
+        let s = ap.take_stats();
+        assert_eq!(s.compare_cycles, 21);
+        assert_eq!(s.write_cycles, 21);
+
+        let mut ap = Ap::new(CamArray::new(Radix::TERNARY, 8, 3));
+        ap.apply_lut(&b, &[0, 1, 2], ExecMode::Blocked);
+        let s = ap.take_stats();
+        assert_eq!(s.compare_cycles, 21);
+        assert_eq!(s.write_cycles, 9);
+    }
+
+    /// Blocked execution of a blocked LUT equals non-blocked execution of
+    /// the non-blocked LUT, row for row.
+    #[test]
+    fn modes_agree_on_results() {
+        use crate::util::Rng;
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let nb = generate_non_blocked(&d);
+        let b = generate_blocked(&d);
+        let mut rng = Rng::new(99);
+        let rows = 64;
+        let mut data = vec![0u8; rows * 3];
+        rng.fill_digits(&mut data, 3);
+        let a1 = CamArray::from_data(Radix::TERNARY, rows, 3, data.clone());
+        let a2 = CamArray::from_data(Radix::TERNARY, rows, 3, data);
+        let mut ap1 = Ap::new(a1);
+        let mut ap2 = Ap::new(a2);
+        ap1.apply_lut(&nb, &[0, 1, 2], ExecMode::NonBlocked);
+        ap2.apply_lut(&b, &[0, 1, 2], ExecMode::Blocked);
+        for r in 0..rows {
+            assert_eq!(ap1.array().row(r)[1..], ap2.array().row(r)[1..], "row {r}");
+        }
+    }
+
+    /// The §Perf fast path is indistinguishable from the faithful path:
+    /// identical array contents AND identical statistics, for the whole
+    /// function zoo, both modes, random arrays.
+    #[test]
+    fn fast_path_equals_faithful_path() {
+        use crate::func::{full_sub, mac4, mac_digit};
+        use crate::util::prop::{forall, Config};
+        forall(Config::cases(60), |rng| {
+            let radix = Radix(2 + rng.digit(3));
+            let tables = [
+                full_add(radix),
+                full_sub(radix),
+                mac_digit(radix),
+                mac4(radix),
+            ];
+            let table = tables[rng.index(4)].clone();
+            let arity = table.arity();
+            let d = StateDiagram::build(table).unwrap();
+            let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+            let lut = match mode {
+                ExecMode::Blocked => generate_blocked(&d),
+                ExecMode::NonBlocked => generate_non_blocked(&d),
+            };
+            let rows = 1 + rng.index(200);
+            let mut data = vec![0u8; rows * arity];
+            rng.fill_digits(&mut data, radix.n());
+            let cols: Vec<usize> = (0..arity).collect();
+
+            let mut slow = Ap::new(CamArray::from_data(radix, rows, arity, data.clone()));
+            slow.apply_lut(&lut, &cols, mode);
+            let mut fast = Ap::new(CamArray::from_data(radix, rows, arity, data));
+            fast.apply_lut_fast(&lut, &cols, mode);
+
+            assert_eq!(fast.array().data(), slow.array().data(), "{} {mode:?}", lut.name);
+            assert_eq!(fast.stats(), slow.stats(), "{} {mode:?}", lut.name);
+        });
+    }
+
+    /// Fast path falls back (correctly) when don't-care digits appear.
+    #[test]
+    fn fast_path_dont_care_fallback() {
+        use crate::mvl::DONT_CARE;
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        let mut data = vec![0u8; 4 * 3];
+        data[0] = DONT_CARE;
+        let mut fast = Ap::new(CamArray::from_data(Radix::TERNARY, 4, 3, data.clone()));
+        fast.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        let mut slow = Ap::new(CamArray::from_data(Radix::TERNARY, 4, 3, data));
+        slow.apply_lut(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        assert_eq!(fast.array().data(), slow.array().data());
+        assert_eq!(fast.stats(), slow.stats());
+    }
+
+    /// Every row matches exactly one pass or is a noAction state, so
+    /// rows_written == #action-state rows.
+    #[test]
+    fn rows_written_equals_action_rows() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        let mut data = Vec::new();
+        for id in 0..27 {
+            data.extend(d.table().decode(id));
+        }
+        let mut ap = Ap::new(CamArray::from_data(Radix::TERNARY, 27, 3, data));
+        ap.apply_lut(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        assert_eq!(ap.stats().rows_written, 21);
+    }
+}

@@ -1,0 +1,14 @@
+//! The associative processor proper (§IV–§V): controller, registers, pass
+//! execution over a [`crate::cam::CamArray`], multi-digit in-place
+//! arithmetic, and event statistics for the energy/delay models.
+
+pub mod stats;
+pub mod controller;
+pub mod ops;
+
+pub use controller::{Ap, ExecMode};
+pub use ops::{
+    add_vectors, adder_lut, extract_operand, load_operands, mac_lut, mac_vectors, sub_lut,
+    sub_vectors, VectorLayout,
+};
+pub use stats::ApStats;

@@ -1,0 +1,410 @@
+//! Vector arithmetic on the AP: the p-digit in-place operations of §IV,
+//! operating on the paper's row layout of `N = 2p + 1` cells
+//! (`A[0..p] | B[0..p] | carry`), least-significant digit first.
+
+use super::controller::{Ap, ExecMode};
+use crate::cam::CamArray;
+use crate::diagram::StateDiagram;
+use crate::func::{full_add, full_sub, mac_digit};
+use crate::lutgen::{generate_blocked, generate_non_blocked, Lut};
+use crate::mvl::{Radix, Word};
+
+/// Column layout for two-operand p-digit vector ops.
+#[derive(Clone, Copy, Debug)]
+pub struct VectorLayout {
+    /// Digits per operand.
+    pub p: usize,
+}
+
+impl VectorLayout {
+    /// Cells per row (`2p + 1`, §VI-A).
+    pub fn cols(&self) -> usize {
+        2 * self.p + 1
+    }
+
+    /// Column of A's digit d.
+    pub fn a(&self, d: usize) -> usize {
+        d
+    }
+
+    /// Column of B's digit d.
+    pub fn b(&self, d: usize) -> usize {
+        self.p + d
+    }
+
+    /// Carry/borrow column.
+    pub fn carry(&self) -> usize {
+        2 * self.p
+    }
+
+    /// State columns `[a_d, b_d, carry]` for digit position d.
+    pub fn digit_cols(&self, d: usize) -> Vec<usize> {
+        vec![self.a(d), self.b(d), self.carry()]
+    }
+
+    /// All digit positions in ripple order.
+    pub fn positions(&self) -> Vec<Vec<usize>> {
+        (0..self.p).map(|d| self.digit_cols(d)).collect()
+    }
+}
+
+/// Load operand vectors into a fresh array: `a[r]`, `b[r]` are the r-th
+/// row's operands; the carry column is cleared to `carry_in[r]` (or 0).
+pub fn load_operands(
+    radix: Radix,
+    a: &[Word],
+    b: &[Word],
+    carry_in: Option<&[u8]>,
+) -> (CamArray, VectorLayout) {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let p = a[0].width();
+    let layout = VectorLayout { p };
+    let rows = a.len();
+    let mut array = CamArray::new(radix, rows, layout.cols());
+    for r in 0..rows {
+        assert_eq!(a[r].width(), p);
+        assert_eq!(b[r].width(), p);
+        for d in 0..p {
+            array.set(r, layout.a(d), a[r].digits()[d]);
+            array.set(r, layout.b(d), b[r].digits()[d]);
+        }
+        array.set(r, layout.carry(), carry_in.map(|c| c[r]).unwrap_or(0));
+    }
+    (array, layout)
+}
+
+/// Extract the B-operand columns (where in-place results land) plus the
+/// carry column, per row.
+pub fn extract_operand(array: &CamArray, layout: &VectorLayout) -> Vec<(Word, u8)> {
+    (0..array.rows())
+        .map(|r| {
+            let digits: Vec<u8> = (0..layout.p).map(|d| array.get(r, layout.b(d))).collect();
+            (Word::from_digits(digits, array.radix()), array.get(r, layout.carry()))
+        })
+        .collect()
+}
+
+/// Generate the adder LUT for the requested mode.
+pub fn adder_lut(radix: Radix, mode: ExecMode) -> Lut {
+    let d = StateDiagram::build(full_add(radix)).expect("adder diagram");
+    match mode {
+        ExecMode::NonBlocked => generate_non_blocked(&d),
+        ExecMode::Blocked => generate_blocked(&d),
+    }
+}
+
+/// Generate the subtractor LUT for the requested mode.
+pub fn sub_lut(radix: Radix, mode: ExecMode) -> Lut {
+    let d = StateDiagram::build(full_sub(radix)).expect("sub diagram");
+    match mode {
+        ExecMode::NonBlocked => generate_non_blocked(&d),
+        ExecMode::Blocked => generate_blocked(&d),
+    }
+}
+
+/// Generate the multiply-accumulate digit LUT.
+pub fn mac_lut(radix: Radix, mode: ExecMode) -> Lut {
+    let d = StateDiagram::build(mac_digit(radix)).expect("mac diagram");
+    match mode {
+        ExecMode::NonBlocked => generate_non_blocked(&d),
+        ExecMode::Blocked => generate_blocked(&d),
+    }
+}
+
+/// In-place vector addition `B ← A + B` (+ carry), all rows in parallel.
+/// Returns per-row (sum, carry-out). `ap` accumulates stats.
+pub fn add_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
+    ap.apply_lut_multi(lut, &layout.positions(), mode);
+    extract_operand(ap.array(), layout)
+}
+
+/// In-place vector subtraction `B ← A - B`… (the LUT computes A - B with
+/// the borrow column; see [`crate::func::full_sub`]).
+pub fn sub_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
+    ap.apply_lut_multi(lut, &layout.positions(), mode);
+    extract_operand(ap.array(), layout)
+}
+
+/// In-place digit-wise multiply-accumulate `B_d ← (A_d·B_d + carry)`,
+/// rippling the carry column.
+pub fn mac_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
+    ap.apply_lut_multi(lut, &layout.positions(), mode);
+    extract_operand(ap.array(), layout)
+}
+
+/// Column layout for full word multiplication:
+/// `A_pristine(p) | A_work(p) | B(p) | R(2p) | carry` — see
+/// [`mul_vectors`] for why A needs a pristine copy.
+#[derive(Clone, Copy, Debug)]
+pub struct MulLayout {
+    pub p: usize,
+}
+
+impl MulLayout {
+    pub fn cols(&self) -> usize {
+        5 * self.p + 1
+    }
+    pub fn a_pristine(&self, d: usize) -> usize {
+        d
+    }
+    pub fn a_work(&self, d: usize) -> usize {
+        self.p + d
+    }
+    pub fn b(&self, d: usize) -> usize {
+        2 * self.p + d
+    }
+    pub fn r(&self, d: usize) -> usize {
+        debug_assert!(d < 2 * self.p);
+        3 * self.p + d
+    }
+    pub fn carry(&self) -> usize {
+        5 * self.p
+    }
+}
+
+/// Load multiplicand vectors for [`mul_vectors`] (work copy, R and carry
+/// cleared — the first refresh populates A_work on the AP itself).
+pub fn load_mul_operands(radix: Radix, a: &[Word], b: &[Word]) -> (CamArray, MulLayout) {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let p = a[0].width();
+    let layout = MulLayout { p };
+    let mut array = CamArray::new(radix, a.len(), layout.cols());
+    for (r, (wa, wb)) in a.iter().zip(b).enumerate() {
+        for d in 0..p {
+            array.set(r, layout.a_pristine(d), wa.digits()[d]);
+            array.set(r, layout.a_work(d), 0);
+            array.set(r, layout.b(d), wb.digits()[d]);
+        }
+        for d in 0..2 * p {
+            array.set(r, layout.r(d), 0);
+        }
+        array.set(r, layout.carry(), 0);
+    }
+    (array, layout)
+}
+
+/// Full row-parallel word multiplication `R ← A × B` (schoolbook over the
+/// AP) — the §I claim that the LUT methodology covers multiplication,
+/// realised end-to-end:
+///
+/// * per multiplier digit j, [`crate::func::mac4`] steps accumulate
+///   `A_i·B_j` into `R_{i+j}` with the carry column rippling between
+///   steps, then [`crate::func::addc`] steps absorb the leftover carry;
+/// * `mac4`'s accumulator dynamics force cycle-broken (widened) writes
+///   that may clobber its kept digit — by construction that digit is the
+///   *working* copy of `A_i`, which is consumed exactly once per j and
+///   refreshed from the pristine column with the acyclic
+///   [`crate::func::copy_digit`] LUT at the top of each iteration. `B`
+///   lives in `mac4`'s written region as an identity write and is never
+///   altered. This containment is exactly the paper's "minor cost
+///   consisting of an extra [digit] to be written" (§IV-B), engineered so
+///   composition stays correct.
+///
+/// Returns the 2p-digit products per row.
+pub fn mul_vectors(ap: &mut Ap, layout: &MulLayout, radix: Radix, mode: ExecMode) -> Vec<Word> {
+    use crate::func::{addc, copy_digit, mac4};
+    let build = |t| {
+        let d = StateDiagram::build(t).expect("mul diagram");
+        match mode {
+            ExecMode::NonBlocked => generate_non_blocked(&d),
+            ExecMode::Blocked => generate_blocked(&d),
+        }
+    };
+    let mac4_lut = build(mac4(radix));
+    let addc_lut = build(addc(radix));
+    let copy_lut = build(copy_digit(radix));
+    let p = layout.p;
+    for j in 0..p {
+        // refresh the working multiplicand digits (clobbered by any
+        // widened mac4 writes of the previous iteration)
+        for i in 0..p {
+            ap.apply_lut_fast(&copy_lut, &[layout.a_pristine(i), layout.a_work(i)], mode);
+        }
+        for i in 0..p {
+            let cols = vec![layout.a_work(i), layout.b(j), layout.r(i + j), layout.carry()];
+            ap.apply_lut_fast(&mac4_lut, &cols, mode);
+        }
+        // absorb the leftover carry into the high result digits
+        for k in (p + j)..(2 * p) {
+            let cols = vec![layout.r(k), layout.carry()];
+            ap.apply_lut_fast(&addc_lut, &cols, mode);
+        }
+    }
+    (0..ap.array().rows())
+        .map(|r| {
+            let digits: Vec<u8> = (0..2 * p).map(|d| ap.array().get(r, layout.r(d))).collect();
+            Word::from_digits(digits, radix)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::Rng;
+
+    fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
+        (0..rows)
+            .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
+            .collect()
+    }
+
+    /// The headline functional result: p-trit AP vector addition equals the
+    /// software oracle for random vectors, both modes.
+    #[test]
+    fn vector_addition_matches_oracle() {
+        forall(Config::cases(40), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(20);
+            let rows = 1 + rng.index(64);
+            let a = random_words(rng, rows, p, radix);
+            let b = random_words(rng, rows, p, radix);
+            for mode in [ExecMode::NonBlocked, ExecMode::Blocked] {
+                let lut = adder_lut(radix, mode);
+                let (array, layout) = load_operands(radix, &a, &b, None);
+                let mut ap = Ap::new(array);
+                let results = add_vectors(&mut ap, &layout, &lut, mode);
+                for r in 0..rows {
+                    let (expect, cout) = a[r].add_ref(&b[r], 0);
+                    assert_eq!(results[r].0, expect, "row {r} mode {mode:?}");
+                    assert_eq!(results[r].1, cout, "carry row {r} mode {mode:?}");
+                }
+            }
+        });
+    }
+
+    /// Binary AP addition (the baseline of [6]) with the same machinery.
+    #[test]
+    fn binary_vector_addition() {
+        forall(Config::cases(40), |rng| {
+            let radix = Radix::BINARY;
+            let p = 1 + rng.index(32);
+            let rows = 1 + rng.index(64);
+            let a = random_words(rng, rows, p, radix);
+            let b = random_words(rng, rows, p, radix);
+            let lut = adder_lut(radix, ExecMode::NonBlocked);
+            let (array, layout) = load_operands(radix, &a, &b, None);
+            let mut ap = Ap::new(array);
+            let results = add_vectors(&mut ap, &layout, &lut, ExecMode::NonBlocked);
+            for r in 0..rows {
+                let (expect, cout) = a[r].add_ref(&b[r], 0);
+                assert_eq!((results[r].0.clone(), results[r].1), (expect, cout));
+            }
+        });
+    }
+
+    /// Subtraction against the oracle (ternary + quaternary).
+    #[test]
+    fn vector_subtraction_matches_oracle() {
+        forall(Config::cases(30), |rng| {
+            let radix = Radix(3 + rng.digit(2)); // 3 or 4
+            let p = 1 + rng.index(12);
+            let rows = 1 + rng.index(32);
+            let a = random_words(rng, rows, p, radix);
+            let b = random_words(rng, rows, p, radix);
+            let lut = sub_lut(radix, ExecMode::Blocked);
+            let (array, layout) = load_operands(radix, &a, &b, None);
+            let mut ap = Ap::new(array);
+            let results = sub_vectors(&mut ap, &layout, &lut, ExecMode::Blocked);
+            for r in 0..rows {
+                let (expect, bout) = a[r].sub_ref(&b[r], 0);
+                assert_eq!(results[r].0, expect, "row {r}");
+                assert_eq!(results[r].1, bout, "borrow row {r}");
+            }
+        });
+    }
+
+    /// MAC digit op: B_d ← (A_d · B_d + c) with ripple carry equals the
+    /// digit-wise software model.
+    #[test]
+    fn vector_mac_matches_model() {
+        forall(Config::cases(30), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(10);
+            let rows = 1 + rng.index(32);
+            let a = random_words(rng, rows, p, radix);
+            let b = random_words(rng, rows, p, radix);
+            let lut = mac_lut(radix, ExecMode::NonBlocked);
+            let (array, layout) = load_operands(radix, &a, &b, None);
+            let mut ap = Ap::new(array);
+            let results = mac_vectors(&mut ap, &layout, &lut, ExecMode::NonBlocked);
+            for r in 0..rows {
+                let mut carry = 0u8;
+                let n = radix.n() as u16;
+                let mut digits = Vec::new();
+                for d in 0..p {
+                    let v = a[r].digits()[d] as u16 * b[r].digits()[d] as u16 + carry as u16;
+                    digits.push((v % n) as u8);
+                    carry = (v / n) as u8;
+                }
+                assert_eq!(results[r].0.digits(), &digits[..], "row {r}");
+                assert_eq!(results[r].1, carry, "carry row {r}");
+            }
+        });
+    }
+
+    /// Word multiplication equals integer multiplication, radix 2–4, both
+    /// modes — the §I multiplication claim end-to-end.
+    #[test]
+    fn vector_multiplication_matches_integers() {
+        forall(Config::cases(20), |rng| {
+            let radix = Radix(2 + rng.digit(3));
+            let p = 1 + rng.index(6);
+            let rows = 1 + rng.index(24);
+            let a = random_words(rng, rows, p, radix);
+            let b = random_words(rng, rows, p, radix);
+            let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+            let (array, layout) = load_mul_operands(radix, &a, &b);
+            let mut ap = Ap::new(array);
+            let products = mul_vectors(&mut ap, &layout, radix, mode);
+            for r in 0..rows {
+                let expect = a[r].to_u128() * b[r].to_u128();
+                assert_eq!(
+                    products[r].to_u128(),
+                    expect,
+                    "row {r}: {} × {} (radix {}, {mode:?})",
+                    a[r],
+                    b[r],
+                    radix.n()
+                );
+            }
+        });
+    }
+
+    /// mac4 LUT shape sanity: 81 ternary states, 24 noAction.
+    #[test]
+    fn mac4_lut_shape() {
+        use crate::func::mac4;
+        let d = StateDiagram::build(mac4(Radix::TERNARY)).unwrap();
+        assert_eq!(d.nodes().len(), 81);
+        assert_eq!(d.roots().len(), 24);
+        let lut = generate_blocked(&d);
+        assert_eq!(lut.passes.len(), 57);
+        crate::lutgen::validate::assert_sound(&lut, d.table());
+    }
+
+    /// Carry-in column is honoured.
+    #[test]
+    fn carry_in_respected() {
+        let radix = Radix::TERNARY;
+        let a = vec![Word::from_u128(5, 4, radix)];
+        let b = vec![Word::from_u128(7, 4, radix)];
+        let lut = adder_lut(radix, ExecMode::NonBlocked);
+        let (array, layout) = load_operands(radix, &a, &b, Some(&[2]));
+        let mut ap = Ap::new(array);
+        let results = add_vectors(&mut ap, &layout, &lut, ExecMode::NonBlocked);
+        assert_eq!(results[0].0.to_u128(), 5 + 7 + 2);
+    }
+
+    #[test]
+    fn layout_geometry() {
+        let l = VectorLayout { p: 20 };
+        assert_eq!(l.cols(), 41); // N = 41 for 20-trit addition (§VI-A)
+        assert_eq!(l.a(0), 0);
+        assert_eq!(l.b(0), 20);
+        assert_eq!(l.carry(), 40);
+    }
+}

@@ -1,0 +1,90 @@
+//! Event statistics collected during AP execution — the inputs to the
+//! energy model (§VI-B: the MATLAB functional simulator "estimates the
+//! number of set/reset operations … and utilizes the 1-bit and 1-trit
+//! compare energy values obtained using HSPICE").
+
+/// Counters accumulated over AP operation.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ApStats {
+    /// Compare cycles issued (one per LUT pass per digit position).
+    pub compare_cycles: u64,
+    /// Write cycles issued (one per pass non-blocked; one per block
+    /// blocked — issued "irrespective of whether a match occurs", §VI-C).
+    pub write_cycles: u64,
+    /// Memristor set operations actually performed.
+    pub sets: u64,
+    /// Memristor reset operations actually performed.
+    pub resets: u64,
+    /// Rows overwritten (tag hits across all write cycles).
+    pub rows_written: u64,
+    /// `mismatch_hist[k]` = row-compare events with exactly k mismatching
+    /// masked cells (k=0 ⇒ full match). Sized for the widest compare seen.
+    pub mismatch_hist: Vec<u64>,
+}
+
+impl ApStats {
+    /// Merge another stats block into this one.
+    pub fn merge(&mut self, other: &ApStats) {
+        self.compare_cycles += other.compare_cycles;
+        self.write_cycles += other.write_cycles;
+        self.sets += other.sets;
+        self.resets += other.resets;
+        self.rows_written += other.rows_written;
+        if self.mismatch_hist.len() < other.mismatch_hist.len() {
+            self.mismatch_hist.resize(other.mismatch_hist.len(), 0);
+        }
+        for (i, &v) in other.mismatch_hist.iter().enumerate() {
+            self.mismatch_hist[i] += v;
+        }
+    }
+
+    /// Record one compare outcome histogram.
+    pub fn record_compare(&mut self, hist: &[u64]) {
+        self.compare_cycles += 1;
+        if self.mismatch_hist.len() < hist.len() {
+            self.mismatch_hist.resize(hist.len(), 0);
+        }
+        for (i, &v) in hist.iter().enumerate() {
+            self.mismatch_hist[i] += v;
+        }
+    }
+
+    /// Total set+reset operations.
+    pub fn write_ops(&self) -> u64 {
+        self.sets + self.resets
+    }
+
+    /// Row-compare events in total (rows × compare cycles).
+    pub fn row_compares(&self) -> u64 {
+        self.mismatch_hist.iter().sum()
+    }
+
+    /// Full-match row events.
+    pub fn full_matches(&self) -> u64 {
+        self.mismatch_hist.first().copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_resizes_histogram() {
+        let mut a = ApStats { mismatch_hist: vec![1, 2], ..Default::default() };
+        let b = ApStats { mismatch_hist: vec![0, 1, 5, 7], sets: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.mismatch_hist, vec![1, 3, 5, 7]);
+        assert_eq!(a.sets, 3);
+    }
+
+    #[test]
+    fn record_compare_accumulates() {
+        let mut s = ApStats::default();
+        s.record_compare(&[5, 1, 0, 2]);
+        s.record_compare(&[3, 0, 1, 0]);
+        assert_eq!(s.compare_cycles, 2);
+        assert_eq!(s.row_compares(), 12);
+        assert_eq!(s.full_matches(), 8);
+    }
+}

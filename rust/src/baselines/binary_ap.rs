@@ -1,0 +1,92 @@
+//! The binary AP adder baseline [6]: the same LUT machinery at radix 2.
+//! Its LUT is Table VI (4 passes); this module packages it with the
+//! binary energy model for the Table XI comparison.
+
+use crate::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
+use crate::energy::{delay_cycles, DelayScheme, EnergyBreakdown, EnergyModel, OpShape};
+use crate::lutgen::Lut;
+use crate::mvl::{Radix, Word};
+
+/// Packaged binary AP adder.
+pub struct BinaryApAdder {
+    lut: Lut,
+    energy: EnergyModel,
+}
+
+impl Default for BinaryApAdder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinaryApAdder {
+    /// Build with the Table VI LUT and default binary energy model.
+    pub fn new() -> Self {
+        BinaryApAdder {
+            lut: adder_lut(Radix::BINARY, ExecMode::NonBlocked),
+            energy: EnergyModel::binary_default(),
+        }
+    }
+
+    /// The LUT (Table VI).
+    pub fn lut(&self) -> &Lut {
+        &self.lut
+    }
+
+    /// Run q-bit vector addition over the given rows, returning per-row
+    /// (sum, carry) and the energy breakdown.
+    pub fn add(&self, a: &[Word], b: &[Word]) -> (Vec<(Word, u8)>, EnergyBreakdown) {
+        let (array, layout) = load_operands(Radix::BINARY, a, b, None);
+        let mut ap = Ap::new(array);
+        let results = add_vectors(&mut ap, &layout, &self.lut, ExecMode::NonBlocked);
+        let breakdown = self.energy.price(ap.stats());
+        (results, breakdown)
+    }
+
+    /// Delay in cycles for a q-bit add (row-parallel).
+    pub fn delay(&self, q: usize) -> u64 {
+        delay_cycles(OpShape::of(&self.lut, q), DelayScheme::Traditional)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn table_vi_pass_count() {
+        let adder = BinaryApAdder::new();
+        assert_eq!(adder.lut().passes.len(), 4);
+    }
+
+    #[test]
+    fn delay_32bit_is_256() {
+        assert_eq!(BinaryApAdder::new().delay(32), 256);
+    }
+
+    #[test]
+    fn addition_and_energy() {
+        let mut rng = Rng::new(7);
+        let rows = 100;
+        let q = 8;
+        let a: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(q, 2), Radix::BINARY))
+            .collect();
+        let b: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(q, 2), Radix::BINARY))
+            .collect();
+        let adder = BinaryApAdder::new();
+        let (results, energy) = adder.add(&a, &b);
+        for r in 0..rows {
+            let (expect, cout) = a[r].add_ref(&b[r], 0);
+            assert_eq!(results[r].0, expect);
+            assert_eq!(results[r].1, cout);
+        }
+        // Table XI 8b: ~6 sets + 6 resets per row-add on average ⇒ for 100
+        // rows, write_ops ≈ 1200 (loose band: ±15%).
+        let per_row = energy.write_ops as f64 / rows as f64;
+        assert!((per_row - 12.0).abs() < 1.8, "write ops/row = {per_row}");
+        assert!(energy.write > 0.0 && energy.compare > 0.0);
+    }
+}

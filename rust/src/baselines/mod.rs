@@ -1,0 +1,8 @@
+//! Baseline comparators (§VI-B/§VI-C): the binary AP adder of [6] and the
+//! hybrid CNTFET+memristor ternary adders (CRA/CSA/CLA) of [15].
+
+pub mod binary_ap;
+pub mod ternary_adders;
+
+pub use binary_ap::BinaryApAdder;
+pub use ternary_adders::{cla_model, cra_model, csa_model, CircuitAdderModel};

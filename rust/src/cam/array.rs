@@ -1,0 +1,263 @@
+//! The MvCAM array (§II-C): rows of cells with parallel masked compare and
+//! tagged masked write. This is the simulator hot path — digits are raw
+//! `u8`s in a row-major buffer; per-compare mismatch *counts* are returned
+//! so the energy model can price fm/1mm/2mm/3mm outcomes (§VI-A).
+
+use super::cell::{write_ops, WriteOps};
+use crate::mvl::{Radix, DONT_CARE};
+
+/// Tag register contents after a compare: `tags[r]` = row r matched.
+pub type TagVector = Vec<bool>;
+
+/// Result of a masked compare over the whole array.
+#[derive(Clone, Debug)]
+pub struct CompareOutcome {
+    /// Per-row match flags (the Tag register).
+    pub tags: TagVector,
+    /// Histogram of per-row mismatching-cell counts over the masked
+    /// columns: `hist[k]` = number of rows with exactly k mismatching
+    /// cells (k = 0 is the full-match bucket). Length = #masked cols + 1.
+    pub mismatch_hist: Vec<u64>,
+}
+
+impl CompareOutcome {
+    /// Number of matching (tagged) rows.
+    pub fn match_count(&self) -> usize {
+        self.tags.iter().filter(|&&t| t).count()
+    }
+}
+
+/// A rows × cols MvCAM array of digits.
+#[derive(Clone, Debug)]
+pub struct CamArray {
+    radix: Radix,
+    rows: usize,
+    cols: usize,
+    /// Row-major digit storage; `DONT_CARE` is a valid stored value.
+    data: Vec<u8>,
+}
+
+impl CamArray {
+    /// All-don't-care array (freshly erased: every memristor HRS).
+    pub fn new(radix: Radix, rows: usize, cols: usize) -> Self {
+        CamArray { radix, rows, cols, data: vec![DONT_CARE; rows * cols] }
+    }
+
+    /// From row-major digits.
+    pub fn from_data(radix: Radix, rows: usize, cols: usize, data: Vec<u8>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        assert!(data.iter().all(|&d| radix.valid(d)));
+        CamArray { radix, rows, cols, data }
+    }
+
+    pub fn radix(&self) -> Radix {
+        self.radix
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored digit at (row, col).
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        self.data[row * self.cols + col]
+    }
+
+    /// Store a digit directly (initialisation path, not a counted write).
+    pub fn set(&mut self, row: usize, col: usize, value: u8) {
+        assert!(self.radix.valid(value));
+        self.data[row * self.cols + col] = value;
+    }
+
+    /// Borrow a whole row.
+    pub fn row(&self, row: usize) -> &[u8] {
+        &self.data[row * self.cols..(row + 1) * self.cols]
+    }
+
+    /// Raw row-major data (for the PJRT backend bridge).
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    pub fn data_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Load a row from a digit slice (initialisation path).
+    pub fn load_row(&mut self, row: usize, digits: &[u8]) {
+        assert_eq!(digits.len(), self.cols);
+        assert!(digits.iter().all(|&d| self.radix.valid(d)));
+        self.data[row * self.cols..(row + 1) * self.cols].copy_from_slice(digits);
+    }
+
+    /// Parallel masked compare (§II-C.1): key digit `keys[i]` is compared
+    /// in column `cols[i]` for every row. Don't-care stored values match
+    /// any key; a `DONT_CARE` key matches anything (decoder emits all-low
+    /// signals). Returns tags and the mismatch histogram.
+    pub fn compare(&self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
+        assert_eq!(cols.len(), keys.len());
+        debug_assert!(cols.iter().all(|&c| c < self.cols));
+        let mut tags = vec![false; self.rows];
+        let mut hist = vec![0u64; cols.len() + 1];
+        for r in 0..self.rows {
+            let base = r * self.cols;
+            let mut mismatches = 0usize;
+            for (&c, &k) in cols.iter().zip(keys) {
+                let stored = self.data[base + c];
+                let cell_match = k == DONT_CARE || stored == DONT_CARE || stored == k;
+                mismatches += usize::from(!cell_match);
+            }
+            tags[r] = mismatches == 0;
+            hist[mismatches] += 1;
+        }
+        CompareOutcome { tags, mismatch_hist: hist }
+    }
+
+    /// Parallel masked write (§II-C.2): for every tagged row, write
+    /// `values[i]` into column `cols[i]`. Returns total set/reset ops
+    /// (the write-energy events).
+    pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) -> WriteOps {
+        assert_eq!(tags.len(), self.rows);
+        assert_eq!(cols.len(), values.len());
+        debug_assert!(values.iter().all(|&v| self.radix.valid(v)));
+        let mut ops = WriteOps::default();
+        for (r, &tag) in tags.iter().enumerate() {
+            if !tag {
+                continue;
+            }
+            let base = r * self.cols;
+            for (&c, &v) in cols.iter().zip(values) {
+                let old = self.data[base + c];
+                ops.add(write_ops(old, v));
+                self.data[base + c] = v;
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::Rng;
+
+    const T: Radix = Radix::TERNARY;
+
+    fn demo_array() -> CamArray {
+        // 4 rows × 3 cols
+        CamArray::from_data(
+            T,
+            4,
+            3,
+            vec![
+                0, 1, 2, //
+                0, 1, 1, //
+                2, 2, 2, //
+                DONT_CARE, 1, 0,
+            ],
+        )
+    }
+
+    #[test]
+    fn compare_full_and_partial() {
+        let a = demo_array();
+        let out = a.compare(&[0, 1, 2], &[0, 1, 2]);
+        // row0 full match; row1 mismatches col2 (1 vs 2); row2 mismatches
+        // cols 0,1 (2 vs 0, 2 vs 1); row3: X matches key 0, col1 matches,
+        // col2 mismatches (0 vs 2).
+        assert_eq!(out.tags, vec![true, false, false, false]);
+        assert_eq!(out.mismatch_hist, vec![1, 2, 1, 0]);
+        assert_eq!(out.match_count(), 1);
+    }
+
+    #[test]
+    fn masked_subset_compare() {
+        let a = demo_array();
+        // Only column 1 active with key 1: rows 0,1,3 match.
+        let out = a.compare(&[1], &[1]);
+        assert_eq!(out.tags, vec![true, true, false, true]);
+        assert_eq!(out.mismatch_hist, vec![3, 1]);
+    }
+
+    #[test]
+    fn dont_care_key_matches_all() {
+        let a = demo_array();
+        let out = a.compare(&[0, 2], &[DONT_CARE, 2]);
+        assert_eq!(out.tags, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn write_only_tagged_rows() {
+        let mut a = demo_array();
+        let tags = vec![true, false, true, false];
+        let ops = a.write(&tags, &[1, 2], &[0, 0]);
+        assert_eq!(a.row(0), &[0, 0, 0]);
+        assert_eq!(a.row(1), &[0, 1, 1]); // untouched
+        assert_eq!(a.row(2), &[2, 0, 0]);
+        assert_eq!(a.row(3), &[DONT_CARE, 1, 0]); // untouched
+        // ops: row0 col1 1→0 (1s1r), col2 2→0 (1s1r); row2 col1 2→0, col2 2→0
+        assert_eq!(ops, WriteOps { sets: 4, resets: 4 });
+    }
+
+    #[test]
+    fn write_from_dont_care_counts_single_set() {
+        let mut a = demo_array();
+        let ops = a.write(&[false, false, false, true], &[0], &[2]);
+        assert_eq!(ops, WriteOps { sets: 1, resets: 0 });
+        assert_eq!(a.get(3, 0), 2);
+    }
+
+    /// Histogram mass always equals the row count, and bucket 0 equals the
+    /// number of tags set — for random arrays, keys, and mask widths.
+    #[test]
+    fn histogram_invariants() {
+        forall(Config::cases(200), |rng: &mut Rng| {
+            let rows = 1 + rng.index(50);
+            let cols = 1 + rng.index(8);
+            let mut data = vec![0u8; rows * cols];
+            for d in data.iter_mut() {
+                *d = if rng.chance(0.1) { DONT_CARE } else { rng.digit(3) };
+            }
+            let a = CamArray::from_data(T, rows, cols, data);
+            let width = 1 + rng.index(cols);
+            let mut all: Vec<usize> = (0..cols).collect();
+            rng.shuffle(&mut all);
+            let sel = &all[..width];
+            let keys: Vec<u8> = (0..width).map(|_| rng.digit(3)).collect();
+            let out = a.compare(sel, &keys);
+            assert_eq!(out.mismatch_hist.iter().sum::<u64>(), rows as u64);
+            assert_eq!(out.mismatch_hist[0], out.match_count() as u64);
+        });
+    }
+
+    /// Compare→write→compare: after writing key digits to matching rows,
+    /// re-comparing the written columns with the written values matches at
+    /// least the previously tagged rows.
+    #[test]
+    fn write_then_recompare_consistent() {
+        forall(Config::cases(100), |rng: &mut Rng| {
+            let rows = 1 + rng.index(30);
+            let cols = 3;
+            let mut data = vec![0u8; rows * cols];
+            rng.fill_digits(&mut data, 3);
+            let mut a = CamArray::from_data(T, rows, cols, data);
+            let keys = [rng.digit(3), rng.digit(3), rng.digit(3)];
+            let out = a.compare(&[0, 1, 2], &keys);
+            let vals = [rng.digit(3), rng.digit(3)];
+            a.write(&out.tags, &[1, 2], &vals);
+            let re = a.compare(&[1, 2], &vals);
+            for r in 0..rows {
+                if out.tags[r] {
+                    assert!(re.tags[r], "row {r} lost its written value");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! The "nTnR" MvCAM cell (§II-A): n memristors, one per logic level.
+//!
+//! Storage (Table I): value `i` ⇔ memristor `M_i` in R_LRS, all others in
+//! R_HRS; don't-care ⇔ all R_HRS. Search: signal `S_i` low selects level
+//! `i`; a match means only high-resistance discharge paths remain.
+//! Writes (Table V / §II-C.2): one set + one reset per value change, a
+//! single reset when writing *to* don't-care, a single set when writing
+//! *from* don't-care, nothing when unchanged.
+
+use crate::mvl::{Radix, DONT_CARE};
+
+/// State of a single memristor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemristorState {
+    /// Low-resistance state (R_LRS) — "L" in the paper's tables.
+    Lrs,
+    /// High-resistance state (R_HRS) — "H".
+    Hrs,
+}
+
+/// Set/reset operation counts for a write (the unit of write energy:
+/// ~1 nJ per operation, §VI-B citing [26]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WriteOps {
+    pub sets: u32,
+    pub resets: u32,
+}
+
+impl WriteOps {
+    /// Total programming operations.
+    pub fn total(self) -> u32 {
+        self.sets + self.resets
+    }
+
+    /// Accumulate.
+    pub fn add(&mut self, other: WriteOps) {
+        self.sets += other.sets;
+        self.resets += other.resets;
+    }
+}
+
+/// Digit-level write-op accounting — the rule the hot path uses without
+/// materialising memristors. Proven equal to the cell model in tests.
+pub fn write_ops(old: u8, new: u8) -> WriteOps {
+    if old == new {
+        WriteOps::default()
+    } else if old == DONT_CARE {
+        // from don't-care: only the target memristor must be set
+        WriteOps { sets: 1, resets: 0 }
+    } else if new == DONT_CARE {
+        // to don't-care: only the previously-set memristor must be reset
+        WriteOps { sets: 0, resets: 1 }
+    } else {
+        WriteOps { sets: 1, resets: 1 }
+    }
+}
+
+/// An explicit n-memristor cell.
+#[derive(Clone, Debug)]
+pub struct MvCamCell {
+    radix: Radix,
+    memristors: Vec<MemristorState>,
+}
+
+impl MvCamCell {
+    /// New cell storing `value` (or don't-care).
+    pub fn new(radix: Radix, value: u8) -> Self {
+        let mut cell = MvCamCell {
+            radix,
+            memristors: vec![MemristorState::Hrs; radix.n() as usize],
+        };
+        let _ = cell.write(value);
+        cell
+    }
+
+    /// The stored value per Table I, derived from memristor states.
+    /// Returns `DONT_CARE` when all memristors are HRS. Panics if the cell
+    /// is in an illegal multi-LRS state (cannot happen through `write`).
+    pub fn value(&self) -> u8 {
+        let lrs: Vec<usize> = self
+            .memristors
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m == MemristorState::Lrs)
+            .map(|(i, _)| i)
+            .collect();
+        match lrs.as_slice() {
+            [] => DONT_CARE,
+            [i] => *i as u8,
+            _ => panic!("illegal cell state: multiple LRS memristors"),
+        }
+    }
+
+    /// Memristor states, index i = M_i.
+    pub fn memristors(&self) -> &[MemristorState] {
+        &self.memristors
+    }
+
+    /// Program the cell to `value`, returning the set/reset ops performed
+    /// (Table V semantics).
+    pub fn write(&mut self, value: u8) -> WriteOps {
+        assert!(self.radix.valid(value), "write of invalid digit {value}");
+        let old = self.value();
+        if old == value {
+            return WriteOps::default();
+        }
+        let mut ops = WriteOps::default();
+        if old != DONT_CARE {
+            self.memristors[old as usize] = MemristorState::Hrs;
+            ops.resets += 1;
+        }
+        if value != DONT_CARE {
+            self.memristors[value as usize] = MemristorState::Lrs;
+            ops.sets += 1;
+        }
+        ops
+    }
+
+    /// Compare against a decoded signal vector (`signals[i]` = S_i, values
+    /// in {0, n-1}): the cell *mismatches* iff some conducting path is
+    /// low-resistance, i.e. some `S_j` is high while `M_j` is LRS.
+    /// An all-zero signal vector (masked column) always matches.
+    pub fn matches_signals(&self, signals: &[u8]) -> bool {
+        assert_eq!(signals.len(), self.memristors.len());
+        !signals
+            .iter()
+            .zip(&self.memristors)
+            .any(|(&s, &m)| s != 0 && m == MemristorState::Lrs)
+    }
+
+    /// Digit-level match semantics: key `k` (or don't-care / inactive mask)
+    /// against the stored value. Equivalent to `matches_signals` over the
+    /// decoded key — see tests.
+    pub fn matches_key(&self, key: u8, mask_active: bool) -> bool {
+        if !mask_active || key == DONT_CARE {
+            return true;
+        }
+        let v = self.value();
+        v == DONT_CARE || v == key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvl::decoder::decode;
+
+    const T: Radix = Radix::TERNARY;
+
+    /// Table I: stored state ⇔ memristor pattern.
+    #[test]
+    fn table_i_storage_pattern() {
+        use MemristorState::*;
+        let c0 = MvCamCell::new(T, 0);
+        assert_eq!(c0.memristors(), &[Lrs, Hrs, Hrs]); // M_0 low
+        let c2 = MvCamCell::new(T, 2);
+        assert_eq!(c2.memristors(), &[Hrs, Hrs, Lrs]); // M_2 low
+        let cx = MvCamCell::new(T, DONT_CARE);
+        assert_eq!(cx.memristors(), &[Hrs, Hrs, Hrs]);
+        assert_eq!(cx.value(), DONT_CARE);
+    }
+
+    /// Table III: every (mask, key, stored) combination for ternary.
+    #[test]
+    fn table_iii_match_semantics() {
+        for stored in [0u8, 1, 2, DONT_CARE] {
+            let cell = MvCamCell::new(T, stored);
+            // masked → always match
+            assert!(cell.matches_key(0, false));
+            for key in 0..3u8 {
+                let expect = stored == DONT_CARE || stored == key;
+                assert_eq!(cell.matches_key(key, true), expect, "key={key} stored={stored}");
+            }
+        }
+    }
+
+    /// Signal-level and digit-level match agree through the decoder.
+    #[test]
+    fn signals_equal_digit_semantics() {
+        for stored in [0u8, 1, 2, DONT_CARE] {
+            let cell = MvCamCell::new(T, stored);
+            for key in 0..3u8 {
+                for mask in [false, true] {
+                    let sig = decode(T, mask, key);
+                    assert_eq!(
+                        cell.matches_signals(&sig),
+                        cell.matches_key(key, mask),
+                        "stored={stored} key={key} mask={mask}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Table V: writing B: 1→0 costs (reset M_1, set M_0); writing an
+    /// unchanged digit costs nothing; to/from don't-care costs one op.
+    #[test]
+    fn table_v_write_actions() {
+        let mut b = MvCamCell::new(T, 1);
+        let ops = b.write(0);
+        assert_eq!(ops, WriteOps { sets: 1, resets: 1 });
+        assert_eq!(b.value(), 0);
+
+        let mut a = MvCamCell::new(T, 0);
+        assert_eq!(a.write(0), WriteOps::default());
+
+        let mut c = MvCamCell::new(T, 2);
+        assert_eq!(c.write(DONT_CARE), WriteOps { sets: 0, resets: 1 });
+        assert_eq!(c.write(1), WriteOps { sets: 1, resets: 0 });
+    }
+
+    /// The digit-level `write_ops` rule equals the cell model for every
+    /// old/new pair and radix.
+    #[test]
+    fn write_ops_rule_matches_cell_model() {
+        for n in 2..6u8 {
+            let radix = Radix(n);
+            let domain: Vec<u8> = (0..n).chain(std::iter::once(DONT_CARE)).collect();
+            for &old in &domain {
+                for &new in &domain {
+                    let mut cell = MvCamCell::new(radix, old);
+                    let expect = cell.write(new);
+                    assert_eq!(write_ops(old, new), expect, "n={n} old={old} new={new}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid digit")]
+    fn invalid_write_rejected() {
+        MvCamCell::new(T, 0).write(3);
+    }
+}

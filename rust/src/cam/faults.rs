@@ -1,0 +1,232 @@
+//! Fault injection for the MvCAM array: stuck cells and their detection.
+//!
+//! Memristive arrays suffer stuck-at faults (a memristor that cannot leave
+//! R_LRS or R_HRS). At the digit level these appear as:
+//!
+//! * **stuck-at-value v** — `M_v` stuck LRS (and programming cannot move
+//!   it): the cell always stores `v` regardless of writes;
+//! * **stuck-don't-care** — every memristor stuck HRS: the cell matches
+//!   *any* key (a silent, dangerous fault for compute: it satisfies every
+//!   compare) and ignores writes.
+//!
+//! [`FaultyArray`] wraps a [`CamArray`] with a fault map; write energy is
+//! still accounted for attempted transitions (the controller pulses the
+//! cell; the device simply fails to switch). [`march_detect`] is the
+//! march-style test the controller can run to locate faulty cells.
+
+use super::array::CamArray;
+use super::cell::{write_ops, WriteOps};
+use crate::mvl::{Radix, DONT_CARE};
+use std::collections::HashMap;
+
+/// A stuck-cell fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Cell permanently stores digit `v`.
+    StuckAtValue(u8),
+    /// Cell permanently reads don't-care (matches everything).
+    StuckDontCare,
+}
+
+impl Fault {
+    fn effective(&self) -> u8 {
+        match *self {
+            Fault::StuckAtValue(v) => v,
+            Fault::StuckDontCare => DONT_CARE,
+        }
+    }
+}
+
+/// A CAM array with injected stuck faults.
+#[derive(Clone, Debug)]
+pub struct FaultyArray {
+    inner: CamArray,
+    faults: HashMap<(usize, usize), Fault>,
+}
+
+impl FaultyArray {
+    /// Wrap a healthy array.
+    pub fn new(inner: CamArray) -> Self {
+        FaultyArray { inner, faults: HashMap::new() }
+    }
+
+    /// Inject a fault (applies immediately to the visible state).
+    pub fn inject(&mut self, row: usize, col: usize, fault: Fault) {
+        self.inner.set(row, col, fault.effective());
+        self.faults.insert((row, col), fault);
+    }
+
+    /// Injected faults.
+    pub fn faults(&self) -> &HashMap<(usize, usize), Fault> {
+        &self.faults
+    }
+
+    /// The wrapped array (fault-effective values).
+    pub fn array(&self) -> &CamArray {
+        &self.inner
+    }
+
+    pub fn radix(&self) -> Radix {
+        self.inner.radix()
+    }
+
+    /// Masked compare — faults are already materialised in the stored
+    /// values, so this is the plain array compare.
+    pub fn compare(&self, cols: &[usize], keys: &[u8]) -> super::array::CompareOutcome {
+        self.inner.compare(cols, keys)
+    }
+
+    /// Masked write: attempted transitions are priced (the driver pulses
+    /// every tagged cell), but faulty cells do not change state.
+    pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) -> WriteOps {
+        let mut ops = WriteOps::default();
+        for (r, &tag) in tags.iter().enumerate() {
+            if !tag {
+                continue;
+            }
+            for (&c, &v) in cols.iter().zip(values) {
+                let old = self.inner.get(r, c);
+                ops.add(write_ops(old, v)); // energy of the attempted pulse
+                if !self.faults.contains_key(&(r, c)) {
+                    self.inner.set(r, c, v);
+                }
+            }
+        }
+        ops
+    }
+}
+
+/// March-style fault detection: for every digit value v, write v to every
+/// cell (all rows tagged) and verify by compare; a cell that ever fails to
+/// hold a written value is reported. Detects both fault kinds: stuck-at-w
+/// fails for all v ≠ w; stuck-don't-care never mismatches a compare, so it
+/// is caught by the *inverse* check (it also matches v+1).
+///
+/// Destroys array contents (run before loading operands, as a controller
+/// self-test would).
+pub fn march_detect(array: &mut FaultyArray) -> Vec<(usize, usize)> {
+    let radix = array.radix();
+    let rows = array.array().rows();
+    let cols = array.array().cols();
+    let all_tags = vec![true; rows];
+    let mut suspects = std::collections::BTreeSet::new();
+    for v in radix.digits() {
+        for c in 0..cols {
+            array.write(&all_tags, &[c], &[v]);
+            // positive check: every row must match v in column c
+            let out = array.compare(&[c], &[v]);
+            for (r, &tag) in out.tags.iter().enumerate() {
+                if !tag {
+                    suspects.insert((r, c));
+                }
+            }
+            // negative check: no row may *also* match a different value
+            // (catches stuck-don't-care, which matches everything)
+            let other = (v + 1) % radix.n();
+            let out = array.compare(&[c], &[other]);
+            for (r, &tag) in out.tags.iter().enumerate() {
+                if tag {
+                    suspects.insert((r, c));
+                }
+            }
+        }
+    }
+    suspects.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+
+    const T: Radix = Radix::TERNARY;
+
+    #[test]
+    fn stuck_value_ignores_writes() {
+        let mut a = FaultyArray::new(CamArray::new(T, 4, 3));
+        a.inject(1, 2, Fault::StuckAtValue(2));
+        let ops = a.write(&[true, true, false, false], &[2], &[0]);
+        assert_eq!(a.array().get(0, 2), 0);
+        assert_eq!(a.array().get(1, 2), 2); // stuck
+        // both pulses priced
+        assert!(ops.total() >= 2);
+    }
+
+    #[test]
+    fn stuck_dont_care_matches_everything() {
+        let mut a = FaultyArray::new(CamArray::new(T, 2, 2));
+        a.inject(0, 0, Fault::StuckDontCare);
+        a.write(&[true, true], &[0, 1], &[1, 1]);
+        for key in 0..3u8 {
+            let out = a.compare(&[0], &[key]);
+            assert!(out.tags[0], "stuck-DC must match key {key}");
+        }
+        assert!(a.compare(&[0], &[2]).tags[1] == false);
+    }
+
+    #[test]
+    fn march_detects_planted_faults() {
+        forall(Config::cases(40), |rng| {
+            let rows = 2 + rng.index(12);
+            let cols = 1 + rng.index(6);
+            let mut a = FaultyArray::new(CamArray::new(T, rows, cols));
+            let mut planted = std::collections::BTreeSet::new();
+            for _ in 0..1 + rng.index(3) {
+                let r = rng.index(rows);
+                let c = rng.index(cols);
+                let fault = if rng.chance(0.5) {
+                    Fault::StuckAtValue(rng.digit(3))
+                } else {
+                    Fault::StuckDontCare
+                };
+                a.inject(r, c, fault);
+                planted.insert((r, c));
+            }
+            let found: std::collections::BTreeSet<(usize, usize)> =
+                march_detect(&mut a).into_iter().collect();
+            assert_eq!(found, planted, "rows={rows} cols={cols}");
+        });
+    }
+
+    #[test]
+    fn march_is_clean_on_healthy_array() {
+        let mut a = FaultyArray::new(CamArray::new(T, 16, 8));
+        assert!(march_detect(&mut a).is_empty());
+    }
+
+    /// A stuck cell corrupts AP addition in exactly the affected rows —
+    /// the failure-injection check on the full op path.
+    #[test]
+    fn stuck_cell_corrupts_only_its_row() {
+        use crate::ap::{adder_lut, ExecMode};
+        use crate::mvl::Word;
+        let p = 4;
+        let lut = adder_lut(T, ExecMode::NonBlocked);
+        let a: Vec<Word> = (0..8).map(|i| Word::from_u128(i * 7 + 3, p, T)).collect();
+        let b: Vec<Word> = (0..8).map(|i| Word::from_u128(i * 5 + 1, p, T)).collect();
+        let (array, layout) = crate::ap::load_operands(T, &a, &b, None);
+        let mut faulty = FaultyArray::new(array);
+        // stick row 3's B digit 0 at value 2
+        faulty.inject(3, layout.b(0), Fault::StuckAtValue(2));
+        // run the LUT program manually over the faulty array
+        for d in 0..p {
+            let cols = layout.digit_cols(d);
+            for pass in &lut.passes {
+                let key = lut.decode(pass.input);
+                let out = faulty.compare(&cols, &key);
+                let (start, vals) = lut.write_of(pass);
+                faulty.write(&out.tags, &cols[start..], &vals);
+            }
+        }
+        for r in 0..8 {
+            let digits: Vec<u8> = (0..p).map(|d| faulty.array().get(r, layout.b(d))).collect();
+            let got = Word::from_digits(digits, T);
+            let (expect, _) = a[r].add_ref(&b[r], 0);
+            if r == 3 {
+                assert_ne!(got, expect, "faulty row should corrupt");
+            } else {
+                assert_eq!(got, expect, "healthy row {r}");
+            }
+        }
+    }
+}

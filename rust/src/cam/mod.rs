@@ -1,0 +1,18 @@
+//! Functional model of the nTnR MvCAM (§II-A/§II-C): cells, rows, arrays.
+//!
+//! Two levels of fidelity coexist:
+//!
+//! * [`cell::MvCamCell`] models individual memristor states (Table I) and
+//!   derives set/reset actions per write (Table V) — used for golden tests
+//!   and the write-energy accounting rules.
+//! * [`array::CamArray`] is the vectorised digit-level model the simulator
+//!   hot path runs on; its write-op accounting is proven equivalent to the
+//!   cell model by tests.
+
+pub mod cell;
+pub mod array;
+pub mod faults;
+
+pub use array::{CamArray, CompareOutcome, TagVector};
+pub use cell::{MemristorState, MvCamCell, WriteOps};
+pub use faults::{march_detect, Fault, FaultyArray};

@@ -1,0 +1,22 @@
+//! Analog circuit substrate — the HSPICE substitute (§VI-A).
+//!
+//! The paper characterises the "3T3R" cell with HSPICE on a 45 nm PTM
+//! (V_t = 0.4 V, V_DD = 0.8 V): matchline dynamic range and compare energy
+//! per match class, swept over R_L ∈ {20..100} kΩ and α = R_H/R_L ∈
+//! {10..50} (Figs. 6–7). We rebuild that substrate from scratch:
+//!
+//! * [`solver`] — a small modified-nodal-analysis (MNA) transient solver:
+//!   backward-Euler integration with Newton iteration for the nonlinear
+//!   square-law NMOS model; dense LU for the linear solves.
+//! * [`matchline`] — netlist builder for an MvCAM row's matchline under a
+//!   given compare outcome (match class), plus precharge/evaluate
+//!   simulation extracting V_ML(t), dynamic range, and compare energy.
+//! * [`sweep`] — the §VI-A design-space exploration driving Figs. 6–7.
+
+pub mod solver;
+pub mod matchline;
+pub mod sweep;
+
+pub use matchline::{CellTech, MatchClass, MatchlineSim};
+pub use solver::{Circuit, Element, TransientResult};
+pub use sweep::{sweep_design_space, DesignPoint, SweepResult};

@@ -1,0 +1,386 @@
+//! A compact MNA (modified nodal analysis) transient solver.
+//!
+//! Scope: the circuits this library simulates are matchline discharge
+//! networks — capacitors, resistors, square-law NMOS devices and ideal
+//! sources — with a handful of nodes, so a dense-LU Newton/backward-Euler
+//! solver is both simple and exact enough. Element multiplicity (`mult`)
+//! lets N identical parallel paths be modelled as one element carrying
+//! N× the current, which keeps 41-cell rows at 2–4 nodes.
+
+/// Circuit elements. Node 0 is ground; nodes are `1..=num_nodes`.
+#[derive(Clone, Debug)]
+pub enum Element {
+    /// Linear resistor between nodes a and b.
+    Resistor { a: usize, b: usize, ohms: f64, mult: f64 },
+    /// Capacitor between nodes a and b with initial voltage `ic` (V(a)-V(b)).
+    Capacitor { a: usize, b: usize, farads: f64, ic: f64 },
+    /// N-channel MOSFET, square-law model, gate driven by a fixed voltage
+    /// during the analysed phase (signals are static per compare phase).
+    /// Drain `d`, source `s`; conducts when V_GS > vt.
+    Nmos { d: usize, s: usize, gate_v: f64, k: f64, vt: f64, mult: f64 },
+    /// Ideal DC voltage source from node to ground (modelled as a Norton
+    /// equivalent with a very large conductance).
+    VSource { node: usize, volts: f64 },
+}
+
+/// A circuit: nodes + elements.
+#[derive(Clone, Debug, Default)]
+pub struct Circuit {
+    num_nodes: usize,
+    elements: Vec<Element>,
+}
+
+/// Result of a transient run.
+#[derive(Clone, Debug)]
+pub struct TransientResult {
+    /// Time points (s).
+    pub t: Vec<f64>,
+    /// Node voltages per time point: `v[step][node-1]`.
+    pub v: Vec<Vec<f64>>,
+    /// Cumulative energy dissipated in resistive elements (J) per step.
+    pub dissipated: Vec<f64>,
+}
+
+impl TransientResult {
+    /// Voltage of `node` at the final time point.
+    pub fn final_v(&self, node: usize) -> f64 {
+        self.v.last().expect("empty transient")[node - 1]
+    }
+
+    /// Voltage of `node` at (or just after) time `time`.
+    pub fn v_at(&self, node: usize, time: f64) -> f64 {
+        let idx = self
+            .t
+            .iter()
+            .position(|&ti| ti >= time)
+            .unwrap_or(self.t.len() - 1);
+        self.v[idx][node - 1]
+    }
+
+    /// Total dissipated energy (J).
+    pub fn energy(&self) -> f64 {
+        *self.dissipated.last().unwrap_or(&0.0)
+    }
+}
+
+impl Circuit {
+    /// New circuit with `num_nodes` non-ground nodes.
+    pub fn new(num_nodes: usize) -> Self {
+        Circuit { num_nodes, elements: Vec::new() }
+    }
+
+    /// Add an element.
+    pub fn add(&mut self, e: Element) -> &mut Self {
+        self.check(&e);
+        self.elements.push(e);
+        self
+    }
+
+    fn check(&self, e: &Element) {
+        let ok = |n: usize| n <= self.num_nodes;
+        let valid = match e {
+            Element::Resistor { a, b, ohms, mult } => ok(*a) && ok(*b) && *ohms > 0.0 && *mult > 0.0,
+            Element::Capacitor { a, b, farads, .. } => ok(*a) && ok(*b) && *farads > 0.0,
+            Element::Nmos { d, s, k, mult, .. } => ok(*d) && ok(*s) && *k > 0.0 && *mult > 0.0,
+            Element::VSource { node, .. } => *node >= 1 && ok(*node),
+        };
+        assert!(valid, "invalid element {e:?}");
+    }
+
+    /// Square-law NMOS drain current and transconductances.
+    /// Returns (I_D, dI/dVd, dI/dVs) for drain/source voltages (vd, vs).
+    fn nmos_current(gate_v: f64, vt: f64, k: f64, vd: f64, vs: f64) -> (f64, f64, f64) {
+        // Handle reverse conduction by symmetry (drain/source swap).
+        if vd < vs {
+            let (i, did, dis) = Self::nmos_current(gate_v, vt, k, vs, vd);
+            return (-i, -dis, -did);
+        }
+        let vgs = gate_v - vs;
+        let vov = vgs - vt;
+        if vov <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let vds = vd - vs;
+        if vds < vov {
+            // triode: I = k (vov·vds − vds²/2)
+            let i = k * (vov * vds - 0.5 * vds * vds);
+            let did = k * (vov - vds);
+            // dI/dvs = k(−vds·dvov/dvs... vov depends on vs) : I = k((g−vs−vt)(vd−vs) − (vd−vs)²/2)
+            // dI/dvs = k(−(vd−vs) − (g−vs−vt) + (vd−vs)) = −k·vov
+            let dis = -k * vov;
+            (i, did, dis)
+        } else {
+            // saturation: I = k/2 · vov² (channel-length modulation ignored)
+            let i = 0.5 * k * vov * vov;
+            (i, 1e-12, -k * vov)
+        }
+    }
+
+    /// Backward-Euler transient from 0 to `t_stop` with `steps` uniform
+    /// steps. Initial node voltages come from capacitor `ic`s (nodes not
+    /// touched by a capacitor start at 0, or at the source voltage if a
+    /// VSource drives them).
+    pub fn transient(&self, t_stop: f64, steps: usize) -> TransientResult {
+        assert!(steps >= 1 && t_stop > 0.0);
+        let n = self.num_nodes;
+        let dt = t_stop / steps as f64;
+
+        // initial condition
+        let mut v = vec![0.0f64; n];
+        for e in &self.elements {
+            match *e {
+                Element::Capacitor { a, b, ic, .. } => {
+                    if a >= 1 && b == 0 {
+                        v[a - 1] = ic;
+                    } else if b >= 1 && a == 0 {
+                        v[b - 1] = -ic;
+                    } else if a >= 1 && b >= 1 {
+                        v[a - 1] = ic; // relative IC against an assumed-0 b
+                    }
+                }
+                Element::VSource { node, volts } => v[node - 1] = volts,
+                _ => {}
+            }
+        }
+
+        let mut out = TransientResult {
+            t: vec![0.0],
+            v: vec![v.clone()],
+            dissipated: vec![0.0],
+        };
+        let mut energy = 0.0f64;
+
+        for step in 1..=steps {
+            let v_prev = v.clone();
+            // Newton iteration on the BE system
+            for _iter in 0..50 {
+                let mut g = vec![vec![0.0f64; n]; n];
+                let mut rhs = vec![0.0f64; n];
+                let stamp_g = |g: &mut Vec<Vec<f64>>, i: usize, j: usize, val: f64| {
+                    if i >= 1 && j >= 1 {
+                        g[i - 1][j - 1] += val;
+                    }
+                };
+                for e in &self.elements {
+                    match *e {
+                        Element::Resistor { a, b, ohms, mult } => {
+                            let gc = mult / ohms;
+                            stamp_g(&mut g, a, a, gc);
+                            stamp_g(&mut g, b, b, gc);
+                            stamp_g(&mut g, a, b, -gc);
+                            stamp_g(&mut g, b, a, -gc);
+                        }
+                        Element::Capacitor { a, b, farads, .. } => {
+                            let gc = farads / dt;
+                            let vp = Self::node_v(&v_prev, a) - Self::node_v(&v_prev, b);
+                            stamp_g(&mut g, a, a, gc);
+                            stamp_g(&mut g, b, b, gc);
+                            stamp_g(&mut g, a, b, -gc);
+                            stamp_g(&mut g, b, a, -gc);
+                            if a >= 1 {
+                                rhs[a - 1] += gc * vp;
+                            }
+                            if b >= 1 {
+                                rhs[b - 1] -= gc * vp;
+                            }
+                        }
+                        Element::Nmos { d, s, gate_v, k, vt, mult } => {
+                            let vd = Self::node_v(&v, d);
+                            let vs = Self::node_v(&v, s);
+                            let (i, did, dis) = Self::nmos_current(gate_v, vt, k, vd, vs);
+                            let (i, did, dis) = (i * mult, did * mult, dis * mult);
+                            // linearise: I ≈ i + did·(Vd − vd) + dis·(Vs − vs)
+                            stamp_g(&mut g, d, d, did);
+                            stamp_g(&mut g, d, s, dis);
+                            stamp_g(&mut g, s, d, -did);
+                            stamp_g(&mut g, s, s, -dis);
+                            let i0 = i - did * vd - dis * vs;
+                            if d >= 1 {
+                                rhs[d - 1] -= i0;
+                            }
+                            if s >= 1 {
+                                rhs[s - 1] += i0;
+                            }
+                        }
+                        Element::VSource { node, volts } => {
+                            let big = 1e3; // 1 kS ≫ any circuit conductance
+                            stamp_g(&mut g, node, node, big);
+                            rhs[node - 1] += big * volts;
+                        }
+                    }
+                }
+                let v_new = Self::solve_dense(g, rhs);
+                let delta: f64 = v_new
+                    .iter()
+                    .zip(&v)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max);
+                v = v_new;
+                if delta < 1e-9 {
+                    break;
+                }
+            }
+            // accumulate resistive + transistor dissipation over the step
+            for e in &self.elements {
+                match *e {
+                    Element::Resistor { a, b, ohms, mult } => {
+                        let vd = Self::node_v(&v, a) - Self::node_v(&v, b);
+                        energy += mult * vd * vd / ohms * dt;
+                    }
+                    Element::Nmos { d, s, gate_v, k, vt, mult } => {
+                        let vd = Self::node_v(&v, d);
+                        let vs = Self::node_v(&v, s);
+                        let (i, _, _) = Self::nmos_current(gate_v, vt, k, vd, vs);
+                        energy += mult * i * (vd - vs) * dt;
+                    }
+                    _ => {}
+                }
+            }
+            out.t.push(step as f64 * dt);
+            out.v.push(v.clone());
+            out.dissipated.push(energy);
+        }
+        out
+    }
+
+    #[inline]
+    fn node_v(v: &[f64], node: usize) -> f64 {
+        if node == 0 {
+            0.0
+        } else {
+            v[node - 1]
+        }
+    }
+
+    /// Dense Gaussian elimination with partial pivoting.
+    fn solve_dense(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+        let n = b.len();
+        for col in 0..n {
+            // pivot
+            let piv = (col..n)
+                .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+                .unwrap();
+            a.swap(col, piv);
+            b.swap(col, piv);
+            let diag = a[col][col];
+            assert!(diag.abs() > 1e-30, "singular MNA matrix (floating node?)");
+            for row in col + 1..n {
+                let f = a[row][col] / diag;
+                if f == 0.0 {
+                    continue;
+                }
+                for k in col..n {
+                    a[row][k] -= f * a[col][k];
+                }
+                b[row] -= f * b[col];
+            }
+        }
+        let mut x = vec![0.0; n];
+        for row in (0..n).rev() {
+            let mut s = b[row];
+            for k in row + 1..n {
+                s -= a[row][k] * x[k];
+            }
+            x[row] = s / a[row][row];
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RC discharge: V(t) = V0·exp(−t/RC), checked at 1τ and 2τ.
+    #[test]
+    fn rc_discharge_matches_analytic() {
+        let mut c = Circuit::new(1);
+        c.add(Element::Capacitor { a: 1, b: 0, farads: 100e-15, ic: 0.8 });
+        c.add(Element::Resistor { a: 1, b: 0, ohms: 10_000.0, mult: 1.0 });
+        let tau = 10_000.0 * 100e-15; // 1 ns
+        let r = c.transient(2.0 * tau, 2000);
+        let v1 = r.v_at(1, tau);
+        assert!((v1 - 0.8 * (-1.0f64).exp()).abs() < 0.002, "v(τ)={v1}");
+        let v2 = r.final_v(1);
+        assert!((v2 - 0.8 * (-2.0f64).exp()).abs() < 0.002, "v(2τ)={v2}");
+    }
+
+    /// Parallel multiplicity: 6 identical paths == 1 path at mult 6.
+    #[test]
+    fn multiplicity_equivalence() {
+        let run = |mult: f64, copies: usize| {
+            let mut c = Circuit::new(1);
+            c.add(Element::Capacitor { a: 1, b: 0, farads: 100e-15, ic: 0.8 });
+            for _ in 0..copies {
+                c.add(Element::Resistor { a: 1, b: 0, ohms: 1e6, mult });
+            }
+            c.transient(1e-9, 200).final_v(1)
+        };
+        assert!((run(6.0, 1) - run(1.0, 6)).abs() < 1e-9);
+    }
+
+    /// Energy conservation in RC discharge: dissipated = ΔE_cap.
+    #[test]
+    fn rc_energy_balance() {
+        let mut c = Circuit::new(1);
+        c.add(Element::Capacitor { a: 1, b: 0, farads: 100e-15, ic: 0.8 });
+        c.add(Element::Resistor { a: 1, b: 0, ohms: 50_000.0, mult: 1.0 });
+        let r = c.transient(20e-9, 4000);
+        let vf = r.final_v(1);
+        let de = 0.5 * 100e-15 * (0.8 * 0.8 - vf * vf);
+        assert!(
+            (r.energy() - de).abs() / de < 0.01,
+            "dissipated {} vs ΔE {}",
+            r.energy(),
+            de
+        );
+    }
+
+    /// NMOS with grounded source in series with R behaves like a reduced
+    /// resistance: on-resistance ≈ 1/(k·V_ov) in deep triode.
+    #[test]
+    fn nmos_series_discharge() {
+        let k = 5e-4; // 1/(k·0.4) = 5 kΩ
+        let mut c = Circuit::new(2);
+        c.add(Element::Capacitor { a: 1, b: 0, farads: 100e-15, ic: 0.8 });
+        c.add(Element::Resistor { a: 1, b: 2, ohms: 20_000.0, mult: 1.0 });
+        c.add(Element::Nmos { d: 2, s: 0, gate_v: 0.8, k, vt: 0.4, mult: 1.0 });
+        let r = c.transient(5e-9, 1000);
+        // Effective tau ≈ (20k + ~5k) * 100 fF = 2.5 ns
+        let v = r.v_at(1, 2.5e-9);
+        assert!((v - 0.8 * (-1.0f64).exp()).abs() < 0.05, "v={v}");
+        // monotone decay
+        for w in r.v.windows(2) {
+            assert!(w[1][0] <= w[0][0] + 1e-12);
+        }
+    }
+
+    /// Gate below threshold: no conduction, capacitor holds.
+    #[test]
+    fn nmos_off_no_discharge() {
+        let mut c = Circuit::new(2);
+        c.add(Element::Capacitor { a: 1, b: 0, farads: 100e-15, ic: 0.8 });
+        c.add(Element::Resistor { a: 1, b: 2, ohms: 20_000.0, mult: 1.0 });
+        c.add(Element::Nmos { d: 2, s: 0, gate_v: 0.3, k: 5e-4, vt: 0.4, mult: 1.0 });
+        let r = c.transient(5e-9, 500);
+        assert!((r.final_v(1) - 0.8).abs() < 1e-6);
+    }
+
+    /// VSource pins its node.
+    #[test]
+    fn vsource_pins_node() {
+        let mut c = Circuit::new(2);
+        c.add(Element::VSource { node: 1, volts: 0.8 });
+        c.add(Element::Resistor { a: 1, b: 2, ohms: 1000.0, mult: 1.0 });
+        c.add(Element::Resistor { a: 2, b: 0, ohms: 1000.0, mult: 1.0 });
+        let r = c.transient(1e-9, 10);
+        assert!((r.final_v(1) - 0.8).abs() < 1e-3);
+        assert!((r.final_v(2) - 0.4).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid element")]
+    fn rejects_bad_element() {
+        Circuit::new(1).add(Element::Resistor { a: 1, b: 0, ohms: -5.0, mult: 1.0 });
+    }
+}

@@ -1,0 +1,126 @@
+//! §VI-A design-space exploration: sweep (R_L, α) and extract the dynamic
+//! range (Fig. 6) and per-class compare energies (Fig. 7).
+
+use super::matchline::{CellTech, MatchClass, MatchlineSim};
+
+/// One (R_L, α) grid point's measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignPoint {
+    pub r_l: f64,
+    pub alpha: f64,
+    /// Dynamic range, V.
+    pub dr: f64,
+    /// Compare energies [E_fm, E_1mm, E_2mm, E_3mm], J.
+    pub energy: [f64; 4],
+}
+
+/// Full sweep output.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub points: Vec<DesignPoint>,
+}
+
+impl SweepResult {
+    /// Look up a grid point.
+    pub fn at(&self, r_l: f64, alpha: f64) -> Option<&DesignPoint> {
+        self.points
+            .iter()
+            .find(|p| (p.r_l - r_l).abs() < 1.0 && (p.alpha - alpha).abs() < 1e-9)
+    }
+
+    /// The design point the paper adopts: best DR with lowest compare
+    /// energy for that R_L — i.e. max DR, ties to max α.
+    pub fn best(&self) -> &DesignPoint {
+        self.points
+            .iter()
+            .max_by(|a, b| {
+                (a.dr, a.alpha)
+                    .partial_cmp(&(b.dr, b.alpha))
+                    .unwrap()
+            })
+            .expect("empty sweep")
+    }
+}
+
+/// Run the paper's sweep: R_L ∈ {20, 30, 50, 100} kΩ, α ∈ {10..50},
+/// ternary cell, 3 masked cells (1-trit add compare), N = 41-cell rows
+/// (inactive cells contribute no paths, so N only matters for parasitics
+/// we do not model — recorded in DESIGN.md).
+pub fn sweep_design_space(base: CellTech) -> SweepResult {
+    let r_ls = [20e3, 30e3, 50e3, 100e3];
+    let alphas = [10.0, 20.0, 30.0, 40.0, 50.0];
+    let mut points = Vec::new();
+    for &r_l in &r_ls {
+        for &alpha in &alphas {
+            let sim = MatchlineSim {
+                tech: base.with_resistances(r_l, alpha),
+                masked_cells: 3,
+            };
+            let energy = [
+                sim.compare_energy(MatchClass(0)),
+                sim.compare_energy(MatchClass(1)),
+                sim.compare_energy(MatchClass(2)),
+                sim.compare_energy(MatchClass(3)),
+            ];
+            points.push(DesignPoint { r_l, alpha, dr: sim.dynamic_range(), energy });
+        }
+    }
+    SweepResult { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep() -> SweepResult {
+        sweep_design_space(CellTech::ternary_default())
+    }
+
+    #[test]
+    fn grid_is_complete() {
+        let s = sweep();
+        assert_eq!(s.points.len(), 20);
+        assert!(s.at(20e3, 50.0).is_some());
+        assert!(s.at(100e3, 10.0).is_some());
+    }
+
+    /// Fig. 6: "The maximum, thus, best dynamic range is observed for
+    /// lowest R_L values … DR ≈ 240 mV when R_L = 20 kΩ and α = 50."
+    #[test]
+    fn best_point_is_paper_choice() {
+        let s = sweep();
+        let best = s.best();
+        assert_eq!(best.r_l, 20e3);
+        assert_eq!(best.alpha, 50.0);
+        assert!((0.20..=0.31).contains(&best.dr), "DR={}", best.dr);
+    }
+
+    /// Fig. 7: at R_L = 20 kΩ, energies fall as α rises, for every class.
+    #[test]
+    fn energy_decreases_with_alpha() {
+        let s = sweep();
+        for class in 0..4 {
+            let mut prev = f64::MAX;
+            for &alpha in &[10.0, 20.0, 30.0, 40.0, 50.0] {
+                let e = s.at(20e3, alpha).unwrap().energy[class];
+                assert!(e < prev, "class {class} α={alpha}");
+                prev = e;
+            }
+        }
+    }
+
+    /// DR monotone in both axes at the paper's grid: increases with α,
+    /// decreases with R_L.
+    #[test]
+    fn dr_monotonicity() {
+        let s = sweep();
+        for &r_l in &[20e3, 30e3, 50e3, 100e3] {
+            let mut prev = -1.0;
+            for &alpha in &[10.0, 20.0, 30.0, 40.0, 50.0] {
+                let dr = s.at(r_l, alpha).unwrap().dr;
+                assert!(dr > prev, "r_l={r_l} alpha={alpha}");
+                prev = dr;
+            }
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Execution backends: where a tile's LUT program actually runs.
+//!
+//! * [`NativeBackend`] — the in-process Rust functional simulator
+//!   ([`crate::ap`]); always available, bit-exact reference.
+//! * [`PjrtBackend`] — AOT-compiled XLA engines via PJRT
+//!   ([`crate::runtime`]); requires `make artifacts`. Cross-checked
+//!   against the native backend in `rust/tests/pjrt_integration.rs`.
+
+use super::batcher::Tile;
+use super::job::OpKind;
+use crate::ap::{Ap, ApStats, ExecMode};
+use crate::cam::CamArray;
+use crate::lutgen::Lut;
+use crate::mvl::Radix;
+use crate::runtime::artifact::ArtifactMode;
+use crate::runtime::{PjrtRuntime, Registry};
+
+/// Identifies a backend for CLI/config selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+        }
+    }
+}
+
+/// A tile executor.
+///
+/// Not `Send`: the PJRT client wraps non-thread-safe FFI handles, so each
+/// worker thread constructs its own backend ([`super::service`]).
+pub trait Backend {
+    /// Execute `lut` (for `op`) over the tile in-place; returns the
+    /// updated tile data and the run's stats (padding not yet stripped).
+    fn run_tile(
+        &mut self,
+        op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        tile: &Tile,
+    ) -> anyhow::Result<(Vec<u8>, ApStats)>;
+
+    /// Preferred tile height (static engine shape), if any.
+    fn preferred_rows(&self, op: OpKind, radix: Radix, blocked: bool, digits: usize)
+        -> Option<usize>;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+}
+
+/// The native functional simulator backend.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn run_tile(
+        &mut self,
+        _op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        tile: &Tile,
+    ) -> anyhow::Result<(Vec<u8>, ApStats)> {
+        let layout = tile.layout;
+        let array = CamArray::from_data(radix, tile.tile_rows, layout.cols(), tile.data.clone());
+        let mut ap = Ap::new(array);
+        let mode = if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
+        // §Perf: state-bucketing fast path — proven identical (values and
+        // stats) to the faithful per-pass path in controller tests.
+        ap.apply_lut_multi_fast(lut, &layout.positions(), mode);
+        let stats = ap.take_stats();
+        Ok((ap.array().data().to_vec(), stats))
+    }
+
+    fn preferred_rows(&self, _: OpKind, _: Radix, _: bool, _: usize) -> Option<usize> {
+        None // any tile height works; batcher picks its default
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The PJRT backend over AOT artifacts.
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+    registry: Registry,
+}
+
+impl PjrtBackend {
+    /// Load the registry from `artifacts_dir` and start a CPU client.
+    pub fn new(artifacts_dir: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(PjrtBackend {
+            runtime: PjrtRuntime::cpu()?,
+            registry: Registry::load(artifacts_dir)?,
+        })
+    }
+
+    fn mode(blocked: bool) -> ArtifactMode {
+        if blocked {
+            ArtifactMode::Blocked
+        } else {
+            ArtifactMode::NonBlocked
+        }
+    }
+
+    /// The artifact registry (for diagnostics).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn run_tile(
+        &mut self,
+        op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        _lut: &Lut,
+        tile: &Tile,
+    ) -> anyhow::Result<(Vec<u8>, ApStats)> {
+        let meta = self
+            .registry
+            .select(op.tag(), Self::mode(blocked), radix.n(), tile.layout.p, tile.tile_rows)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for fn={} mode={:?} radix={} digits={} (run `make artifacts`)",
+                    op.tag(),
+                    Self::mode(blocked),
+                    radix.n(),
+                    tile.layout.p
+                )
+            })?
+            .clone();
+        anyhow::ensure!(
+            meta.rows == tile.tile_rows,
+            "tile rows {} != engine rows {} — batcher must match engine shape",
+            tile.tile_rows,
+            meta.rows
+        );
+        let out = self.runtime.run(&meta, &tile.data)?;
+        let stats = out.to_stats(meta.groups, tile.tile_rows);
+        Ok((out.array, stats))
+    }
+
+    fn preferred_rows(
+        &self,
+        op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        digits: usize,
+    ) -> Option<usize> {
+        self.registry
+            .select(op.tag(), Self::mode(blocked), radix.n(), digits, usize::MAX)
+            .map(|m| m.rows)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::adder_lut;
+    use crate::coordinator::batcher::make_tiles;
+    use crate::mvl::Word;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_backend_runs_tiles() {
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(21);
+        let p = 6;
+        let a: Vec<Word> = (0..10).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..10).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let tiles = make_tiles(&a, &b, 4);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let mut be = NativeBackend;
+        let mut all = Vec::new();
+        for t in &tiles {
+            let (data, stats) = be.run_tile(OpKind::Add, radix, true, &lut, t).unwrap();
+            assert!(stats.compare_cycles > 0);
+            all.extend(t.extract(&data, radix));
+        }
+        assert_eq!(all.len(), 10);
+        for r in 0..10 {
+            let (expect, c) = a[r].add_ref(&b[r], 0);
+            assert_eq!(all[r].0, expect, "row {r}");
+            assert_eq!(all[r].1, c);
+        }
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Row tiling: split a job's rows into fixed-size tiles (the AOT engines
+//! have static shapes), pad the tail, and reassemble results.
+//!
+//! Padding rows are all-zero `(A, B, carry) = (0…, 0…, 0)` rows — the
+//! noAction state of every supported function — so they are never tagged
+//! for a write and only add full-match compare events, which the stats
+//! correction below subtracts again.
+
+use crate::ap::VectorLayout;
+use crate::mvl::Word;
+
+/// One tile of rows, padded to `tile_rows`.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    /// Row-major digit data, `tile_rows × (2p+1)`.
+    pub data: Vec<u8>,
+    /// Real (unpadded) rows in this tile.
+    pub live_rows: usize,
+    /// Geometry.
+    pub layout: VectorLayout,
+    pub tile_rows: usize,
+}
+
+/// Split (a, b) row pairs into padded tiles of `tile_rows`.
+pub fn make_tiles(a: &[Word], b: &[Word], tile_rows: usize) -> Vec<Tile> {
+    assert!(tile_rows > 0);
+    assert_eq!(a.len(), b.len());
+    let p = a[0].width();
+    let layout = VectorLayout { p };
+    let cols = layout.cols();
+    let mut tiles = Vec::new();
+    for chunk in a.chunks(tile_rows).zip(b.chunks(tile_rows)) {
+        let (ca, cb) = chunk;
+        let live = ca.len();
+        let mut data = vec![0u8; tile_rows * cols];
+        for (r, (wa, wb)) in ca.iter().zip(cb).enumerate() {
+            let base = r * cols;
+            data[base..base + p].copy_from_slice(wa.digits());
+            data[base + p..base + 2 * p].copy_from_slice(wb.digits());
+            // carry column already 0
+        }
+        tiles.push(Tile { data, live_rows: live, layout, tile_rows });
+    }
+    tiles
+}
+
+impl Tile {
+    /// Extract per-live-row (B-operand word, carry digit) from result data
+    /// of the same geometry.
+    pub fn extract(&self, result: &[u8], radix: crate::mvl::Radix) -> Vec<(Word, u8)> {
+        let cols = self.layout.cols();
+        let p = self.layout.p;
+        assert_eq!(result.len(), self.tile_rows * cols);
+        (0..self.live_rows)
+            .map(|r| {
+                let base = r * cols;
+                let digits = result[base + p..base + 2 * p].to_vec();
+                (Word::from_digits(digits, radix), result[base + 2 * p])
+            })
+            .collect()
+    }
+
+    /// Padding rows in this tile.
+    pub fn pad_rows(&self) -> usize {
+        self.tile_rows - self.live_rows
+    }
+}
+
+/// Remove the padding rows' contribution from a mismatch histogram: each
+/// pad row contributes one event per compare cycle, in the class equal to
+/// the pass key's nonzero digits (pad rows are all zeros). The caller
+/// passes the per-pass pad classes; this subtracts `pad_rows` events each.
+pub fn strip_padding(hist: &mut [u64], pad_rows: u64, pad_classes: &[usize]) {
+    for &k in pad_classes {
+        if k < hist.len() {
+            hist[k] = hist[k].saturating_sub(pad_rows);
+        }
+    }
+}
+
+/// The per-pass padding class for a LUT: number of nonzero digits in each
+/// pass key (an all-zero row mismatches exactly those cells). Multiplied
+/// by `digits` applications in a p-digit op by the caller.
+pub fn pad_classes(lut: &crate::lutgen::Lut) -> Vec<usize> {
+    lut.passes
+        .iter()
+        .map(|p| lut.decode(p.input).iter().filter(|&&d| d != 0).count())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvl::Radix;
+
+    fn words(vals: &[u64], p: usize) -> Vec<Word> {
+        vals.iter()
+            .map(|&v| Word::from_u128(v as u128, p, Radix::TERNARY))
+            .collect()
+    }
+
+    #[test]
+    fn tiles_split_and_pad() {
+        let a = words(&[1, 2, 3, 4, 5], 3);
+        let b = words(&[9, 8, 7, 6, 5], 3);
+        let tiles = make_tiles(&a, &b, 2);
+        assert_eq!(tiles.len(), 3);
+        assert_eq!(tiles[0].live_rows, 2);
+        assert_eq!(tiles[2].live_rows, 1);
+        assert_eq!(tiles[2].pad_rows(), 1);
+        // pad row all zero
+        let cols = tiles[2].layout.cols();
+        assert!(tiles[2].data[cols..].iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn extract_roundtrip() {
+        let a = words(&[10, 20, 30], 4);
+        let b = words(&[1, 2, 3], 4);
+        let tiles = make_tiles(&a, &b, 4);
+        let t = &tiles[0];
+        // identity "result": extract should return the b words
+        let out = t.extract(&t.data, Radix::TERNARY);
+        assert_eq!(out.len(), 3);
+        for (i, (w, c)) in out.iter().enumerate() {
+            assert_eq!(w.to_u128(), [1u128, 2, 3][i]);
+            assert_eq!(*c, 0);
+        }
+    }
+
+    #[test]
+    fn pad_class_counts() {
+        use crate::ap::{adder_lut, ExecMode};
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        let classes = pad_classes(&lut);
+        assert_eq!(classes.len(), 21);
+        // pass 101 has two nonzero digits
+        let i101 = lut
+            .passes
+            .iter()
+            .position(|p| lut.fmt_state(p.input) == "101")
+            .unwrap();
+        assert_eq!(classes[i101], 2);
+        // all-zero key would be class 0 — but 000 is noAction, so min is 1
+        assert!(classes.iter().all(|&k| k >= 1));
+    }
+
+    #[test]
+    fn strip_padding_subtracts() {
+        let mut hist = vec![100, 50, 20, 10];
+        strip_padding(&mut hist, 5, &[1, 1, 3]);
+        assert_eq!(hist, vec![100, 40, 20, 5]);
+    }
+}

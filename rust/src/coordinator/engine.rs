@@ -1,0 +1,210 @@
+//! The vector engine: LUT cache + tile orchestration + metric pricing for
+//! one worker. [`super::service::EngineService`] runs several of these on
+//! a thread pool.
+
+use super::backend::Backend;
+use super::batcher::{make_tiles, pad_classes, strip_padding};
+use super::job::{Job, JobResult, OpKind};
+use super::metrics::Metrics;
+use crate::ap::ApStats;
+use crate::diagram::StateDiagram;
+use crate::energy::{delay_cycles, DelayScheme, EnergyModel, OpShape};
+use crate::func::{full_add, full_sub, mac_digit};
+use crate::lutgen::{generate_blocked, generate_non_blocked, Lut};
+use crate::mvl::Radix;
+use std::collections::HashMap;
+
+/// Default tile height when the backend has no static shape requirement.
+pub const DEFAULT_TILE_ROWS: usize = 256;
+
+/// A single-threaded vector engine over one backend.
+pub struct VectorEngine {
+    backend: Box<dyn Backend>,
+    luts: HashMap<(OpKind, u8, bool), Lut>,
+    energy_ternary: EnergyModel,
+    energy_binary: EnergyModel,
+    metrics: Metrics,
+}
+
+impl VectorEngine {
+    /// Create over a backend with default energy models.
+    pub fn new(backend: Box<dyn Backend>) -> Self {
+        VectorEngine {
+            backend,
+            luts: HashMap::new(),
+            energy_ternary: EnergyModel::ternary_default(),
+            energy_binary: EnergyModel::binary_default(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Backend name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Accumulated metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Get or build the LUT for (op, radix, blocked).
+    pub fn lut(&mut self, op: OpKind, radix: Radix, blocked: bool) -> &Lut {
+        self.luts.entry((op, radix.n(), blocked)).or_insert_with(|| {
+            let table = match op {
+                OpKind::Add => full_add(radix),
+                OpKind::Sub => full_sub(radix),
+                OpKind::Mac => mac_digit(radix),
+            };
+            let d = StateDiagram::build(table).expect("diagram build");
+            if blocked {
+                generate_blocked(&d)
+            } else {
+                generate_non_blocked(&d)
+            }
+        })
+    }
+
+    /// Execute a job: tile, dispatch, reassemble, price.
+    pub fn execute(&mut self, job: &Job) -> anyhow::Result<JobResult> {
+        let started = std::time::Instant::now();
+        let digits = job.digits();
+        let tile_rows = self
+            .backend
+            .preferred_rows(job.op, job.radix, job.blocked, digits)
+            .unwrap_or(DEFAULT_TILE_ROWS);
+        let lut = self.lut(job.op, job.radix, job.blocked).clone();
+        let tiles = make_tiles(&job.a, &job.b, tile_rows);
+        let pad_cls = pad_classes(&lut);
+
+        let mut values = Vec::with_capacity(job.rows());
+        let mut stats = ApStats::default();
+        for tile in &tiles {
+            let (data, mut tile_stats) =
+                self.backend
+                    .run_tile(job.op, job.radix, job.blocked, &lut, tile)?;
+            // padding rows contribute `digits` compare events per pass in
+            // a known class and never any writes — subtract them so stats
+            // reflect live rows only.
+            if tile.pad_rows() > 0 {
+                for _ in 0..digits {
+                    strip_padding(
+                        &mut tile_stats.mismatch_hist,
+                        tile.pad_rows() as u64,
+                        &pad_cls,
+                    );
+                }
+            }
+            values.extend(tile.extract(&data, job.radix));
+            stats.merge(&tile_stats);
+        }
+        // Cycle counts are the AP *program length* (tiles execute the same
+        // program on parallel arrays), not a per-tile sum — normalise so
+        // results are tiling-invariant.
+        stats.compare_cycles = (digits * lut.compare_cycles()) as u64;
+        stats.write_cycles = (digits * lut.write_cycles()) as u64;
+
+        let model = if job.radix.n() == 2 { &self.energy_binary } else { &self.energy_ternary };
+        let energy = model.price(&stats);
+        let delay = delay_cycles(OpShape::of(&lut, digits), DelayScheme::Traditional);
+        let elapsed = started.elapsed();
+        self.metrics.record(job.rows(), digits, &energy, elapsed);
+        Ok(JobResult {
+            id: job.id,
+            values,
+            stats,
+            energy,
+            delay_cycles: delay,
+            elapsed,
+            tiles: tiles.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::mvl::Word;
+    use crate::util::prop::{forall, Config};
+
+    fn engine() -> VectorEngine {
+        VectorEngine::new(Box::new(NativeBackend))
+    }
+
+    #[test]
+    fn executes_add_job_correctly() {
+        forall(Config::cases(15), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(12);
+            let rows = 1 + rng.index(500);
+            let a: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let b: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let job = Job::new(1, OpKind::Add, radix, true, a.clone(), b.clone());
+            let mut eng = engine();
+            let res = eng.execute(&job).unwrap();
+            assert_eq!(res.values.len(), rows);
+            for r in 0..rows {
+                let (expect, c) = a[r].add_ref(&b[r], 0);
+                assert_eq!(res.values[r].0, expect, "row {r}");
+                assert_eq!(res.values[r].1, c);
+            }
+            assert!(res.energy.total() > 0.0);
+            assert!(res.delay_cycles > 0);
+        });
+    }
+
+    #[test]
+    fn padding_does_not_inflate_stats() {
+        // 1 live row in a 256-row tile: stats must equal a 1-row run.
+        let radix = Radix::TERNARY;
+        let p = 4;
+        let a = vec![Word::from_u128(42, p, radix)];
+        let b = vec![Word::from_u128(61, p, radix)];
+        let job = Job::new(7, OpKind::Add, radix, true, a, b);
+        let mut eng = engine();
+        let res = eng.execute(&job).unwrap();
+        // row-compares after padding strip = live rows × passes × digits
+        assert_eq!(res.stats.row_compares(), (1 * 21 * p) as u64);
+    }
+
+    #[test]
+    fn delay_uses_blocked_shape() {
+        let radix = Radix::TERNARY;
+        let p = 20;
+        let mk = |blocked| {
+            let a = vec![Word::from_u128(100, p, radix)];
+            let b = vec![Word::from_u128(200, p, radix)];
+            Job::new(1, OpKind::Add, radix, blocked, a, b)
+        };
+        let mut eng = engine();
+        assert_eq!(eng.execute(&mk(true)).unwrap().delay_cycles, 600);
+        assert_eq!(eng.execute(&mk(false)).unwrap().delay_cycles, 840);
+    }
+
+    #[test]
+    fn lut_cache_reuses() {
+        let mut eng = engine();
+        let l1 = eng.lut(OpKind::Add, Radix::TERNARY, true) as *const Lut;
+        let l2 = eng.lut(OpKind::Add, Radix::TERNARY, true) as *const Lut;
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn sub_and_mac_jobs() {
+        let radix = Radix::TERNARY;
+        let p = 5;
+        let a = vec![Word::from_u128(200, p, radix); 3];
+        let b = vec![Word::from_u128(77, p, radix); 3];
+        let mut eng = engine();
+        let sub = eng
+            .execute(&Job::new(1, OpKind::Sub, radix, true, a.clone(), b.clone()))
+            .unwrap();
+        let (expect, _) = a[0].sub_ref(&b[0], 0);
+        assert_eq!(sub.values[0].0, expect);
+        let mac = eng.execute(&Job::new(2, OpKind::Mac, radix, true, a, b)).unwrap();
+        assert_eq!(mac.values.len(), 3);
+    }
+}

@@ -1,0 +1,111 @@
+//! Vector-arithmetic jobs and results.
+
+use crate::ap::ApStats;
+use crate::energy::EnergyBreakdown;
+use crate::mvl::{Radix, Word};
+
+/// Operation kind (maps to the LUT family and AOT artifact `fn=` tag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// B ← A + B (+carry ripple).
+    Add,
+    /// B ← A − B (borrow ripple).
+    Sub,
+    /// B_d ← (A_d·B_d + carry) per digit (carry ripple).
+    Mac,
+}
+
+impl OpKind {
+    /// Artifact/function tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mac => "mac",
+        }
+    }
+}
+
+/// A unit of work: one vector op over `rows()` row pairs.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub op: OpKind,
+    pub radix: Radix,
+    /// Blocked (true) or non-blocked LUT program.
+    pub blocked: bool,
+    pub a: Vec<Word>,
+    pub b: Vec<Word>,
+}
+
+impl Job {
+    /// Build a job, validating operand geometry.
+    pub fn new(id: u64, op: OpKind, radix: Radix, blocked: bool, a: Vec<Word>, b: Vec<Word>) -> Self {
+        assert_eq!(a.len(), b.len(), "operand vectors must have equal length");
+        assert!(!a.is_empty(), "empty job");
+        let p = a[0].width();
+        for w in a.iter().chain(&b) {
+            assert_eq!(w.width(), p, "ragged operand widths");
+            assert_eq!(w.radix(), radix, "operand radix mismatch");
+        }
+        Job { id, op, radix, blocked, a, b }
+    }
+
+    /// Rows in the job.
+    pub fn rows(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Digits per operand.
+    pub fn digits(&self) -> usize {
+        self.a[0].width()
+    }
+}
+
+/// Result of a completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// Per-row (value, carry/borrow digit).
+    pub values: Vec<(Word, u8)>,
+    /// Functional-simulator event counts (merged over tiles).
+    pub stats: ApStats,
+    /// Priced energy.
+    pub energy: EnergyBreakdown,
+    /// Modeled AP delay in clock cycles (per §VI-C, row-parallel).
+    pub delay_cycles: u64,
+    /// Wall-clock execution time of the backend.
+    pub elapsed: std::time::Duration,
+    /// Tiles the job was split into.
+    pub tiles: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: u128) -> Word {
+        Word::from_u128(v, 4, Radix::TERNARY)
+    }
+
+    #[test]
+    fn job_geometry() {
+        let j = Job::new(1, OpKind::Add, Radix::TERNARY, true, vec![w(5), w(6)], vec![w(1), w(2)]);
+        assert_eq!(j.rows(), 2);
+        assert_eq!(j.digits(), 4);
+        assert_eq!(j.op.tag(), "add");
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn rejects_ragged_rows() {
+        Job::new(1, OpKind::Add, Radix::TERNARY, true, vec![w(5)], vec![w(1), w(2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "radix mismatch")]
+    fn rejects_radix_mismatch() {
+        let bin = Word::from_u128(3, 4, Radix::BINARY);
+        Job::new(1, OpKind::Add, Radix::TERNARY, true, vec![w(5)], vec![bin]);
+    }
+}

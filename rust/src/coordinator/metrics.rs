@@ -1,0 +1,76 @@
+//! Engine metrics: rows/ops processed, modeled energy, wall-clock.
+
+use crate::energy::EnergyBreakdown;
+use std::time::Duration;
+
+/// Accumulated engine metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub jobs: u64,
+    pub rows: u64,
+    pub digit_ops: u64,
+    pub modeled_energy_j: f64,
+    pub busy: Duration,
+}
+
+impl Metrics {
+    /// Record one completed job.
+    pub fn record(&mut self, rows: usize, digits: usize, energy: &EnergyBreakdown, elapsed: Duration) {
+        self.jobs += 1;
+        self.rows += rows as u64;
+        self.digit_ops += (rows * digits) as u64;
+        self.modeled_energy_j += energy.total();
+        self.busy += elapsed;
+    }
+
+    /// Merge (for aggregating worker metrics).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.jobs += other.jobs;
+        self.rows += other.rows;
+        self.digit_ops += other.digit_ops;
+        self.modeled_energy_j += other.modeled_energy_j;
+        self.busy += other.busy;
+    }
+
+    /// Row-operations per second of busy time.
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.busy.is_zero() {
+            0.0
+        } else {
+            self.rows as f64 / self.busy.as_secs_f64()
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} rows={} digit_ops={} energy={:.3e} J busy={:.3}s ({:.0} rows/s)",
+            self.jobs,
+            self.rows,
+            self.digit_ops,
+            self.modeled_energy_j,
+            self.busy.as_secs_f64(),
+            self.rows_per_sec()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_merge() {
+        let e = EnergyBreakdown { write: 1e-9, compare: 1e-12, write_ops: 2 };
+        let mut m = Metrics::default();
+        m.record(100, 20, &e, Duration::from_millis(10));
+        let mut n = Metrics::default();
+        n.record(50, 20, &e, Duration::from_millis(5));
+        m.merge(&n);
+        assert_eq!(m.jobs, 2);
+        assert_eq!(m.rows, 150);
+        assert_eq!(m.digit_ops, 3000);
+        assert!(m.rows_per_sec() > 0.0);
+        assert!(m.summary().contains("jobs=2"));
+    }
+}

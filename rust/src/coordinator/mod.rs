@@ -1,0 +1,30 @@
+//! Layer-3 coordinator: the vector-processing engine around the AP.
+//!
+//! The paper's AP is a *vector co-processor*: thousands of rows compute a
+//! digit-wise operation in lockstep. The coordinator turns that into a
+//! service a host application can use:
+//!
+//! * [`job`] — vector-arithmetic jobs (add/sub/mac over word vectors) and
+//!   their results (values + energy/delay/stats).
+//! * [`batcher`] — tiles job rows onto fixed-size CAM arrays (the AOT
+//!   engines have static shapes), padding the tail tile with noAction
+//!   rows that provably cost nothing extra in writes.
+//! * [`backend`] — where a tile executes: the native Rust simulator or an
+//!   AOT-compiled XLA engine via PJRT ([`crate::runtime`]).
+//! * [`engine`] — per-thread engine: LUT cache, dispatch, metric pricing.
+//! * [`service`] — a leader/worker thread pool (std::thread + mpsc; the
+//!   offline crate set has no tokio) with backpressure via bounded queues.
+//! * [`metrics`] — throughput/latency/energy accounting.
+
+pub mod job;
+pub mod batcher;
+pub mod backend;
+pub mod engine;
+pub mod service;
+pub mod metrics;
+
+pub use backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+pub use engine::VectorEngine;
+pub use job::{Job, JobResult, OpKind};
+pub use metrics::Metrics;
+pub use service::EngineService;

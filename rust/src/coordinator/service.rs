@@ -1,0 +1,182 @@
+//! Leader/worker engine service: a bounded job queue feeding a pool of
+//! worker threads, each owning a [`VectorEngine`]. Built on std::thread +
+//! mpsc (tokio is not in the offline crate set); the bounded queue gives
+//! natural backpressure.
+
+use super::backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+use super::engine::VectorEngine;
+use super::job::{Job, JobResult};
+use super::metrics::Metrics;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Message {
+    Run(Job, SyncSender<anyhow::Result<JobResult>>),
+    Shutdown,
+}
+
+/// A running engine service.
+pub struct EngineService {
+    tx: SyncSender<Message>,
+    workers: Vec<JoinHandle<Metrics>>,
+    aggregated: Arc<Mutex<Metrics>>,
+}
+
+impl EngineService {
+    /// Start `workers` threads, each constructing its own backend inside
+    /// the thread via `make_backend` (PJRT handles are not `Send`, and
+    /// backends are stateful: engine caches etc.). Fails fast if any
+    /// worker's backend cannot be built.
+    pub fn start<F>(workers: usize, queue_depth: usize, make_backend: F) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        assert!(workers >= 1);
+        let make_backend = Arc::new(make_backend);
+        let (tx, rx) = sync_channel::<Message>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let aggregated = Arc::new(Mutex::new(Metrics::default()));
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(workers);
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let make_backend = Arc::clone(&make_backend);
+            let rx = Arc::clone(&rx);
+            let agg = Arc::clone(&aggregated);
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return Metrics::default();
+                    }
+                };
+                let mut engine = VectorEngine::new(backend);
+                loop {
+                    let msg = {
+                        let guard = rx.lock().expect("rx poisoned");
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Message::Run(job, reply)) => {
+                            let result = engine.execute(&job);
+                            // receiver may have given up; ignore send errors
+                            let _ = reply.send(result);
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                }
+                let metrics = engine.metrics().clone();
+                agg.lock().expect("agg poisoned").merge(&metrics);
+                metrics
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker startup channel closed")?;
+        }
+        Ok(EngineService { tx, workers: handles, aggregated })
+    }
+
+    /// Convenience: start with a [`BackendKind`].
+    pub fn start_kind(
+        workers: usize,
+        queue_depth: usize,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+    ) -> anyhow::Result<Self> {
+        Self::start(workers, queue_depth, move || -> anyhow::Result<Box<dyn Backend>> {
+            Ok(match kind {
+                BackendKind::Native => Box::new(NativeBackend),
+                BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
+            })
+        })
+    }
+
+    /// Submit a job; blocks if the queue is full (backpressure). Returns a
+    /// receiver for the result.
+    pub fn submit(&self, job: Job) -> Receiver<anyhow::Result<JobResult>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Message::Run(job, reply_tx))
+            .expect("service stopped");
+        reply_rx
+    }
+
+    /// Submit and wait.
+    pub fn run(&self, job: Job) -> anyhow::Result<JobResult> {
+        self.submit(job).recv().expect("worker dropped reply")
+    }
+
+    /// Stop all workers and return aggregated metrics.
+    pub fn shutdown(self) -> Metrics {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        drop(self.tx);
+        for h in self.workers {
+            let _ = h.join();
+        }
+        let m = self.aggregated.lock().expect("agg poisoned").clone();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::OpKind;
+    use crate::mvl::{Radix, Word};
+    use crate::util::Rng;
+
+    fn add_job(id: u64, rng: &mut Rng, rows: usize, p: usize) -> (Job, Vec<(Word, u8)>) {
+        let radix = Radix::TERNARY;
+        let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let expect = a.iter().zip(&b).map(|(x, y)| x.add_ref(y, 0)).collect();
+        (Job::new(id, OpKind::Add, radix, true, a, b), expect)
+    }
+
+    #[test]
+    fn service_processes_concurrent_jobs() {
+        let svc = EngineService::start(4, 8, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let mut pending = Vec::new();
+        for id in 0..16 {
+            let (job, expect) = add_job(id, &mut rng, 37, 6);
+            pending.push((svc.submit(job), expect, id));
+        }
+        for (rx, expect, id) in pending {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.id, id);
+            assert_eq!(res.values, expect);
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.jobs, 16);
+        assert_eq!(metrics.rows, 16 * 37);
+    }
+
+    #[test]
+    fn shutdown_is_clean_without_jobs() {
+        let svc = EngineService::start(2, 2, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+            .unwrap();
+        let m = svc.shutdown();
+        assert_eq!(m.jobs, 0);
+    }
+
+    #[test]
+    fn run_blocks_for_result() {
+        let svc = EngineService::start(1, 1, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+            .unwrap();
+        let mut rng = Rng::new(9);
+        let (job, expect) = add_job(3, &mut rng, 10, 4);
+        let res = svc.run(job).unwrap();
+        assert_eq!(res.values, expect);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,73 @@
+//! Graphviz DOT export of a state diagram — the programmatic equivalent of
+//! the paper's Figs. 4 and 5, handy for inspecting new functions.
+
+use super::graph::StateDiagram;
+
+/// Render the diagram in DOT format. noAction roots are drawn as double
+/// circles; cycle-break rewrites are annotated on the edge.
+pub fn to_dot(d: &StateDiagram) -> String {
+    let t = d.table();
+    let mut out = String::from("digraph state_diagram {\n  rankdir=RL;\n");
+    for node in d.nodes() {
+        let label = t.fmt_state(node.id);
+        if node.no_action {
+            out.push_str(&format!(
+                "  \"{label}\" [shape=doublecircle, style=filled, fillcolor=lightgray];\n"
+            ));
+        } else {
+            out.push_str(&format!("  \"{label}\" [shape=circle];\n"));
+        }
+    }
+    let rewrites: std::collections::HashMap<usize, (usize, usize)> = d
+        .rewrites()
+        .iter()
+        .map(|&(x, y, y2)| (x, (y, y2)))
+        .collect();
+    for node in d.nodes() {
+        if node.no_action {
+            // self-loop for clarity, as in Fig. 4/5
+            let l = t.fmt_state(node.id);
+            out.push_str(&format!("  \"{l}\" -> \"{l}\" [style=dotted];\n"));
+            continue;
+        }
+        let from = t.fmt_state(node.id);
+        let to = t.fmt_state(node.next);
+        if let Some(&(orig, _)) = rewrites.get(&node.id) {
+            out.push_str(&format!(
+                "  \"{from}\" -> \"{to}\" [color=green, label=\"cycle-break (was {})\"];\n",
+                t.fmt_state(orig)
+            ));
+        } else {
+            out.push_str(&format!("  \"{from}\" -> \"{to}\";\n"));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::StateDiagram;
+    use crate::func::full_add;
+    use crate::mvl::Radix;
+
+    #[test]
+    fn dot_contains_all_states_and_rewrite() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let dot = to_dot(&d);
+        assert!(dot.contains("\"101\" -> \"020\" [color=green"));
+        assert!(dot.contains("\"000\" [shape=doublecircle"));
+        for id in 0..27 {
+            assert!(dot.contains(&format!("\"{}\"", d.table().fmt_state(id))));
+        }
+    }
+
+    #[test]
+    fn dot_is_parseable_shape() {
+        let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+        let dot = to_dot(&d);
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+}

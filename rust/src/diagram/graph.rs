@@ -1,0 +1,457 @@
+//! State-diagram construction, cycle breaking, levels.
+
+use crate::func::TruthTable;
+
+/// One state of the diagram, with the attributes of Table VIII.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// State id (n-ary encoding of the digit vector).
+    pub id: usize,
+    /// Output state id (`parent` in tree terms — reached via the function
+    /// edge; the paper's backward edges propagate towards the roots).
+    pub next: usize,
+    /// `f(x) == x`.
+    pub no_action: bool,
+    /// Number of trailing digits written when this state is processed as an
+    /// input (`writeDim`). Equals `arity - write_start` unless widened by
+    /// cycle breaking.
+    pub write_dim: usize,
+    /// Preimage states (children in the tree).
+    pub children: Vec<usize>,
+    /// Distance from the root (noAction = level 0, its direct preimages
+    /// level 1, matching Fig. 5 / Table IX).
+    pub level: u32,
+}
+
+/// The full diagram for one truth table.
+#[derive(Clone, Debug)]
+pub struct StateDiagram {
+    table: TruthTable,
+    nodes: Vec<Node>,
+    /// Root (noAction) state ids in ascending order.
+    roots: Vec<usize>,
+    /// Edges rewritten by cycle breaking: (state, original next, new next).
+    rewrites: Vec<(usize, usize, usize)>,
+}
+
+impl StateDiagram {
+    /// Build the diagram and break all cycles (§IV-B). Returns an error if
+    /// some cycle admits no alternate output (cannot happen for functions
+    /// whose written digits take at least two distinct kept-prefix
+    /// variants, but the API surfaces it rather than panicking).
+    pub fn build(table: TruthTable) -> anyhow::Result<Self> {
+        let count = table.num_states();
+        let base_dim = table.arity() - table.write_start();
+        let mut nodes: Vec<Node> = (0..count)
+            .map(|id| Node {
+                id,
+                next: table.output_of(id),
+                no_action: table.is_no_action(id),
+                write_dim: base_dim,
+                children: Vec::new(),
+                level: 0,
+            })
+            .collect();
+        let mut diagram = StateDiagram {
+            roots: (0..count).filter(|&i| nodes[i].no_action).collect(),
+            rewrites: Vec::new(),
+            table,
+            nodes: Vec::new(),
+        };
+        diagram.break_cycles(&mut nodes)?;
+        diagram.nodes = nodes;
+        diagram.rebuild_children_and_levels();
+        Ok(diagram)
+    }
+
+    /// The underlying truth table.
+    pub fn table(&self) -> &TruthTable {
+        &self.table
+    }
+
+    /// All nodes, indexed by state id.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Node by id.
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Root (noAction) ids, ascending.
+    pub fn roots(&self) -> &[usize] {
+        &self.roots
+    }
+
+    /// Action-state count (nodes that receive LUT passes).
+    pub fn num_action_states(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.no_action).count()
+    }
+
+    /// Cycle-breaking rewrites applied: (state, original next, new next).
+    pub fn rewrites(&self) -> &[(usize, usize, usize)] {
+        &self.rewrites
+    }
+
+    /// The digits actually written when `id` is processed: the trailing
+    /// `write_dim` digits of its (possibly rewritten) output.
+    pub fn write_action(&self, id: usize) -> Vec<u8> {
+        let n = &self.nodes[id];
+        let out = self.table.decode(n.next);
+        out[self.table.arity() - n.write_dim..].to_vec()
+    }
+
+    /// `outVal(writeDim)` of the paper (§V.1): the n-ary→decimal value of
+    /// the trailing `dim` digits of this state's vector. Used (on the
+    /// *parent*) as the grouping key of the blocked algorithm.
+    pub fn out_val(&self, id: usize, dim: usize) -> usize {
+        let digits = self.table.decode(id);
+        let n = self.table.radix().n() as usize;
+        digits[self.table.arity() - dim..]
+            .iter()
+            .fold(0usize, |acc, &d| acc * n + d as usize)
+    }
+
+    /// The *adjusted* group key of Algorithm 2 line 5:
+    /// `parent.outVal(writeDim) + Σ_{i=0}^{writeDim-1} n^i`, which keeps
+    /// different write dimensions from colliding.
+    pub fn group_key(&self, id: usize) -> usize {
+        let node = &self.nodes[id];
+        let n = self.table.radix().n() as usize;
+        let offset: usize = (0..node.write_dim).map(|i| n.pow(i as u32)).sum();
+        self.out_val(node.next, node.write_dim) + offset
+    }
+
+    // ---- construction internals ------------------------------------------
+
+    /// Break every non-trivial cycle of the functional graph by redirecting
+    /// one edge per cycle to an alternate target with identical written
+    /// digits (widening that state's write to full arity).
+    ///
+    /// Round-based: a redirect target must *currently reach a root* —
+    /// otherwise two cycles could redirect into each other and chain into
+    /// a bigger cycle. Each round breaks every breakable cycle (preferring
+    /// noAction targets, ties to the smallest x then smallest y', which
+    /// reproduces the paper's 101 → 020 choice on the TFA); breaking a
+    /// cycle makes its members root-reaching, unlocking later rounds.
+    /// A function with no fixed point at all (e.g. an involution like the
+    /// in-place NOT) has no roots to anchor to and is reported as not
+    /// implementable in-place.
+    fn break_cycles(&mut self, nodes: &mut [Node]) -> anyhow::Result<()> {
+        if self.roots.is_empty() {
+            anyhow::bail!(
+                "{}: no noAction state — the function has no fixed point, so \
+                 no in-place LUT pass ordering exists",
+                self.table.name()
+            );
+        }
+        loop {
+            // reach[v] = true ⇔ v's functional path terminates at a root.
+            let reach = Self::reach_root(nodes);
+            let cycles = Self::find_cycles(nodes, &reach);
+            if cycles.is_empty() {
+                return Ok(());
+            }
+            let mut progressed = false;
+            for cycle in &cycles {
+                if let Some((x, y2)) = self.pick_redirect(nodes, cycle, &reach) {
+                    let y = nodes[x].next;
+                    nodes[x].next = y2;
+                    nodes[x].write_dim = self.table.arity(); // widened write
+                    self.rewrites.push((x, y, y2));
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                anyhow::bail!(
+                    "{}: cycle {:?} admits no alternate output reaching a root",
+                    self.table.name(),
+                    cycles[0]
+                        .iter()
+                        .map(|&c| self.table.fmt_state(c))
+                        .collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    /// Which nodes' functional paths terminate at a noAction root.
+    fn reach_root(nodes: &[Node]) -> Vec<bool> {
+        let count = nodes.len();
+        // color: 0 unknown, 1 on current walk, 2 reaches root, 3 does not.
+        let mut color = vec![0u8; count];
+        for n in nodes {
+            if n.no_action {
+                color[n.id] = 2;
+            }
+        }
+        for start in 0..count {
+            if color[start] != 0 {
+                continue;
+            }
+            let mut path = Vec::new();
+            let mut cur = start;
+            while color[cur] == 0 {
+                color[cur] = 1;
+                path.push(cur);
+                cur = nodes[cur].next;
+            }
+            let verdict = if color[cur] == 2 { 2 } else { 3 }; // 1 ⇒ cycle ⇒ 3
+            for &p in &path {
+                color[p] = verdict;
+            }
+        }
+        color.iter().map(|&c| c == 2).collect()
+    }
+
+    /// All distinct cycles among non-root-reaching nodes.
+    fn find_cycles(nodes: &[Node], reach: &[bool]) -> Vec<Vec<usize>> {
+        let count = nodes.len();
+        let mut seen = vec![false; count];
+        let mut cycles = Vec::new();
+        for start in 0..count {
+            if reach[start] || seen[start] {
+                continue;
+            }
+            let mut path = Vec::new();
+            let mut on_path = vec![false; count];
+            let mut cur = start;
+            while !seen[cur] && !on_path[cur] {
+                on_path[cur] = true;
+                path.push(cur);
+                cur = nodes[cur].next;
+            }
+            if on_path[cur] {
+                let pos = path.iter().position(|&p| p == cur).unwrap();
+                cycles.push(path[pos..].to_vec());
+            }
+            for p in path {
+                seen[p] = true;
+            }
+        }
+        cycles
+    }
+
+    /// Best (x, y') redirect for a cycle: y' has the same written digits
+    /// as f(x), is outside the cycle, and currently reaches a root.
+    /// Preference: noAction y' first, then smallest x, then smallest y'.
+    fn pick_redirect(
+        &self,
+        nodes: &[Node],
+        cycle: &[usize],
+        reach: &[bool],
+    ) -> Option<(usize, usize)> {
+        let n = self.table.radix().n() as usize;
+        let kept = self.table.write_start();
+        let in_cycle = |id: usize| cycle.contains(&id);
+        let mut best: Option<(usize, usize, u32)> = None;
+        for &x in cycle {
+            let y = nodes[x].next;
+            let out = self.table.decode(y);
+            let kept_count = n.pow(kept as u32);
+            for variant in 0..kept_count {
+                let mut digits = out.clone();
+                let mut v = variant;
+                for i in (0..kept).rev() {
+                    digits[i] = (v % n) as u8;
+                    v /= n;
+                }
+                let y2 = self.table.encode_state(&digits);
+                if y2 == y || in_cycle(y2) || !reach[y2] {
+                    continue;
+                }
+                let score = if nodes[y2].no_action { 3 } else { 2 };
+                let better = match best {
+                    None => true,
+                    Some((bx, by, bs)) => {
+                        (score, std::cmp::Reverse(x), std::cmp::Reverse(y2))
+                            > (bs, std::cmp::Reverse(bx), std::cmp::Reverse(by))
+                    }
+                };
+                if better {
+                    best = Some((x, y2, score));
+                }
+            }
+        }
+        best.map(|(x, y2, _)| (x, y2))
+    }
+
+    /// Populate children lists and levels by BFS from the roots.
+    fn rebuild_children_and_levels(&mut self) {
+        for n in self.nodes.iter_mut() {
+            n.children.clear();
+        }
+        let edges: Vec<(usize, usize)> = self
+            .nodes
+            .iter()
+            .filter(|n| !n.no_action)
+            .map(|n| (n.next, n.id))
+            .collect();
+        for (parent, child) in edges {
+            self.nodes[parent].children.push(child);
+        }
+        for n in self.nodes.iter_mut() {
+            n.children.sort_unstable();
+        }
+        // BFS levels from roots.
+        let mut queue: std::collections::VecDeque<usize> = self.roots.iter().copied().collect();
+        for &r in &self.roots {
+            self.nodes[r].level = 0;
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        for &r in &self.roots {
+            seen[r] = true;
+        }
+        while let Some(p) = queue.pop_front() {
+            let lvl = self.nodes[p].level;
+            let children = self.nodes[p].children.clone();
+            for c in children {
+                debug_assert!(!seen[c], "state {} reached twice — not a forest", c);
+                seen[c] = true;
+                self.nodes[c].level = lvl + 1;
+                queue.push_back(c);
+            }
+        }
+        debug_assert!(seen.iter().all(|&s| s), "unreached states — cycle left unbroken");
+    }
+
+    /// Maximum level over all nodes.
+    pub fn max_level(&self) -> u32 {
+        self.nodes.iter().map(|n| n.level).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::func::{full_add, full_sub, logic2, mac_digit, Logic2};
+    use crate::mvl::Radix;
+
+    fn tfa_diagram() -> StateDiagram {
+        StateDiagram::build(full_add(Radix::TERNARY)).unwrap()
+    }
+
+    #[test]
+    fn binary_adder_is_cycle_free() {
+        let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+        assert!(d.rewrites().is_empty());
+        // Fig. 4: 4 noAction roots (000, 010, 101, 111), 4 action states.
+        assert_eq!(d.roots().len(), 4);
+        assert_eq!(d.num_action_states(), 4);
+    }
+
+    #[test]
+    fn tfa_cycle_break_matches_paper() {
+        // §IV-B: the single cycle is 101 ⇄ 120; the paper redirects
+        // 101 → 020 (a noAction root), widening 101's write to 3 trits.
+        let d = tfa_diagram();
+        let t = d.table();
+        assert_eq!(d.rewrites().len(), 1);
+        let (x, y, y2) = d.rewrites()[0];
+        assert_eq!(t.fmt_state(x), "101");
+        assert_eq!(t.fmt_state(y), "120");
+        assert_eq!(t.fmt_state(y2), "020");
+        assert_eq!(d.node(x).write_dim, 3);
+        // 120 keeps its normal edge 120 → 101 and normal write dim.
+        let s120 = t.encode_state(&[1, 2, 0]);
+        assert_eq!(t.fmt_state(d.node(s120).next), "101");
+        assert_eq!(d.node(s120).write_dim, 2);
+    }
+
+    #[test]
+    fn tfa_levels_match_fig5() {
+        // Level-1 nodes per the Table IX walk-through:
+        // 001, 210, 202, 220, 002, 011, 212, 101.
+        let d = tfa_diagram();
+        let t = d.table();
+        let mut level1: Vec<String> = d
+            .nodes()
+            .iter()
+            .filter(|n| n.level == 1)
+            .map(|n| t.fmt_state(n.id))
+            .collect();
+        level1.sort();
+        assert_eq!(
+            level1,
+            vec!["001", "002", "011", "101", "202", "210", "212", "220"]
+        );
+        assert_eq!(d.max_level(), 4);
+        // Level 4 = {122, 100}.
+        let mut level4: Vec<String> = d
+            .nodes()
+            .iter()
+            .filter(|n| n.level == 4)
+            .map(|n| t.fmt_state(n.id))
+            .collect();
+        level4.sort();
+        assert_eq!(level4, vec!["100", "122"]);
+    }
+
+    #[test]
+    fn tfa_group_keys_match_table_ix_examples() {
+        // §V.1: node '101' has g = outVal(3) of parent '020' = 6 + 13 = 19;
+        // node '011' has g = outVal(2) of parent '020' = 6 + 4 = 10;
+        // 5 nodes at level 2 share g = 1 + 4 = 5.
+        let d = tfa_diagram();
+        let t = d.table();
+        assert_eq!(d.group_key(t.encode_state(&[1, 0, 1])), 19);
+        assert_eq!(d.group_key(t.encode_state(&[0, 1, 1])), 10);
+        let g5_level2 = d
+            .nodes()
+            .iter()
+            .filter(|n| !n.no_action && n.level == 2 && d.group_key(n.id) == 5)
+            .count();
+        assert_eq!(g5_level2, 5);
+    }
+
+    #[test]
+    fn forest_property_for_function_zoo() {
+        // Every supported function, at radices 2..5, becomes a forest
+        // (each non-root has exactly one parent; levels consistent).
+        for radix in [Radix(2), Radix(3), Radix(4), Radix(5)] {
+            let tables = vec![
+                full_add(radix),
+                full_sub(radix),
+                mac_digit(radix),
+                logic2(Logic2::And, radix),
+                logic2(Logic2::Or, radix),
+                logic2(Logic2::Nor, radix),
+                logic2(Logic2::Xor, radix),
+            ];
+            for table in tables {
+                let name = table.name().to_string();
+                let d = StateDiagram::build(table)
+                    .unwrap_or_else(|e| panic!("{name}: {e}"));
+                for node in d.nodes() {
+                    if node.no_action {
+                        assert_eq!(node.level, 0, "{name}");
+                    } else {
+                        let parent = d.node(node.next);
+                        assert_eq!(node.level, parent.level + 1, "{name}");
+                        assert!(parent.children.contains(&node.id), "{name}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_action_reflects_widened_dim() {
+        let d = tfa_diagram();
+        let t = d.table();
+        // 101 (widened) writes "020"; 120 (normal) writes "01".
+        assert_eq!(d.write_action(t.encode_state(&[1, 0, 1])), vec![0, 2, 0]);
+        assert_eq!(d.write_action(t.encode_state(&[1, 2, 0])), vec![0, 1]);
+    }
+
+    #[test]
+    fn out_val_is_trailing_digits_value() {
+        let d = tfa_diagram();
+        let t = d.table();
+        let s020 = t.encode_state(&[0, 2, 0]);
+        assert_eq!(d.out_val(s020, 3), 6);
+        assert_eq!(d.out_val(s020, 2), 6); // "20" = 6
+        assert_eq!(d.out_val(s020, 1), 0);
+    }
+}

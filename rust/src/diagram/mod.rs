@@ -1,0 +1,17 @@
+//! Directed state-diagram interpretation of a truth table (§IV-A/§IV-B).
+//!
+//! * **State** = stored input vector; **directed edge** x → f(x) =
+//!   application of the arithmetic function; **noAction state** = fixed
+//!   point of `f` (LUT input equals LUT output).
+//! * The functional graph of any total `f : S → S` decomposes into
+//!   components each containing exactly one cycle; self-loop cycles are the
+//!   noAction roots. Longer cycles make a naive in-place LUT unsound (the
+//!   "domino effect" of §IV-A), so [`StateDiagram::break_cycles`] rewrites
+//!   one edge per cycle to an alternate output with the *same written
+//!   digits* but different kept digits (a widened write, §IV-B) until the
+//!   diagram is a forest of trees rooted at noAction states.
+
+pub mod graph;
+pub mod dot;
+
+pub use graph::{Node, StateDiagram};

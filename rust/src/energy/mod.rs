@@ -1,0 +1,17 @@
+//! Energy, delay and area models (§VI).
+//!
+//! * [`model`] — the energy model: compare energy per match class
+//!   (fm/1mm/2mm/3mm, HSPICE-characterised in the paper, circuit-simulated
+//!   here by [`crate::circuit`]) × event counts from [`crate::ap::ApStats`],
+//!   plus 1 nJ per memristor set/reset [26].
+//! * [`delay`] — the cycle-accurate delay schedule generator for the
+//!   traditional and optimized-precharge schemes, blocked and non-blocked.
+//! * [`area`] — normalized area (2T2R cell = 0.67 × 3T3R cell, §VI-B).
+
+pub mod model;
+pub mod delay;
+pub mod area;
+
+pub use area::{area_normalized, CellArea};
+pub use delay::{delay_cycles, DelayScheme, OpShape};
+pub use model::{CompareEnergy, EnergyBreakdown, EnergyModel};

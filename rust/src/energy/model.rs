@@ -1,0 +1,142 @@
+//! The energy model: write energy from set/reset counts (1 nJ per
+//! operation, §VI-B citing [26]) and compare energy from per-class
+//! matchline discharge energies × the mismatch histogram collected by the
+//! functional simulator — exactly the paper's MATLAB+HSPICE composition.
+
+use crate::ap::ApStats;
+
+/// Per-row compare energy by mismatch class, in joules.
+///
+/// `by_class[k]` prices a row-compare with k mismatching cells; compares
+/// with more mismatches than the table covers are priced at the last entry
+/// (discharge saturates once several low-resistance paths exist — cf.
+/// E_2mm ≈ E_3mm in Fig. 7).
+#[derive(Clone, Debug)]
+pub struct CompareEnergy {
+    pub by_class: Vec<f64>,
+}
+
+impl CompareEnergy {
+    /// Energy for a row-compare with `k` mismatching cells.
+    pub fn class(&self, k: usize) -> f64 {
+        *self
+            .by_class
+            .get(k)
+            .or(self.by_class.last())
+            .expect("empty compare-energy table")
+    }
+
+    /// Default table from the §VI-A design point (R_L = 20 kΩ, α = 50,
+    /// C_L = 100 fF, V_DD = 0.8 V, 1 ns evaluate): values produced by the
+    /// matchline simulator (`mvap exp fig7`, our HSPICE substitute) for the
+    /// 3T3R row. See EXPERIMENTS.md. Order: [fm, 1mm, 2mm, 3mm].
+    pub fn default_ternary() -> Self {
+        CompareEnergy { by_class: vec![3.60e-15, 18.49e-15, 25.66e-15, 29.05e-15] }
+    }
+
+    /// Binary 2T2R default at the same design point (classes fm/1mm/2mm/3mm
+    /// over the three masked cells of a bit-add compare).
+    pub fn default_binary() -> Self {
+        CompareEnergy { by_class: vec![1.85e-15, 17.65e-15, 25.26e-15, 28.86e-15] }
+    }
+}
+
+/// Energy model combining write and compare pricing.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// Energy per memristor set or reset operation (J). Paper: 1 nJ [26].
+    pub write_op_energy: f64,
+    /// Compare energy table.
+    pub compare: CompareEnergy,
+}
+
+/// A priced execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Total write energy (J).
+    pub write: f64,
+    /// Total compare energy (J).
+    pub compare: f64,
+    /// Set+reset operation count.
+    pub write_ops: u64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy (J).
+    pub fn total(&self) -> f64 {
+        self.write + self.compare
+    }
+}
+
+impl EnergyModel {
+    /// Paper-default ternary model.
+    pub fn ternary_default() -> Self {
+        EnergyModel { write_op_energy: 1e-9, compare: CompareEnergy::default_ternary() }
+    }
+
+    /// Paper-default binary model.
+    pub fn binary_default() -> Self {
+        EnergyModel { write_op_energy: 1e-9, compare: CompareEnergy::default_binary() }
+    }
+
+    /// Price a stats block.
+    pub fn price(&self, stats: &ApStats) -> EnergyBreakdown {
+        let write_ops = stats.write_ops();
+        let write = write_ops as f64 * self.write_op_energy;
+        let compare: f64 = stats
+            .mismatch_hist
+            .iter()
+            .enumerate()
+            .map(|(k, &count)| count as f64 * self.compare.class(k))
+            .sum();
+        EnergyBreakdown { write, compare, write_ops }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(hist: Vec<u64>, sets: u64, resets: u64) -> ApStats {
+        ApStats { mismatch_hist: hist, sets, resets, ..Default::default() }
+    }
+
+    #[test]
+    fn write_energy_is_ops_times_unit() {
+        let m = EnergyModel::ternary_default();
+        let b = m.price(&stats(vec![], 3, 3));
+        assert_eq!(b.write_ops, 6);
+        assert!((b.write - 6e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn compare_energy_weighted_by_class() {
+        let m = EnergyModel {
+            write_op_energy: 0.0,
+            compare: CompareEnergy { by_class: vec![1.0, 10.0, 20.0, 30.0] },
+        };
+        let b = m.price(&stats(vec![2, 1, 0, 4], 0, 0));
+        assert!((b.compare - (2.0 + 10.0 + 120.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_class_saturates() {
+        let m = EnergyModel {
+            write_op_energy: 0.0,
+            compare: CompareEnergy { by_class: vec![1.0, 5.0] },
+        };
+        // class 3 → priced at last entry (5.0)
+        let b = m.price(&stats(vec![0, 0, 0, 2], 0, 0));
+        assert!((b.compare - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_are_ordered() {
+        // fm < 1mm < 2mm < 3mm (more discharge paths, more energy)
+        for t in [CompareEnergy::default_ternary(), CompareEnergy::default_binary()] {
+            for w in t.by_class.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

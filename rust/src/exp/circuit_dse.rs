@@ -1,0 +1,104 @@
+//! Figs. 6–7: the "3T3R" design-space exploration (dynamic range and
+//! per-class compare energy vs R_L and α) on the circuit substrate.
+
+use crate::circuit::{sweep_design_space, CellTech, SweepResult};
+use crate::util::csv::Csv;
+use crate::util::table::fnum;
+use crate::util::Table;
+
+/// Run the sweep once (shared by fig6/fig7).
+pub fn sweep() -> SweepResult {
+    sweep_design_space(CellTech::ternary_default())
+}
+
+/// Fig. 6: DR (mV) grid, rows = α, cols = R_L.
+pub fn fig6(s: &SweepResult) -> (Table, Csv) {
+    let r_ls = [20e3, 30e3, 50e3, 100e3];
+    let alphas = [10.0, 20.0, 30.0, 40.0, 50.0];
+    let mut header = vec!["alpha \\ R_L".to_string()];
+    header.extend(r_ls.iter().map(|r| format!("{}k", r / 1e3)));
+    let mut t = Table::new(
+        "Fig. 6 — dynamic range (mV) for the 3T3R cell, 20-trit addition \
+         (paper anchor: ~240 mV at R_L=20k, α=50)",
+    )
+    .header(&header);
+    let mut csv = Csv::new(&["r_l_ohm", "alpha", "dr_mv"]);
+    for &a in &alphas {
+        let mut row = vec![format!("{a}")];
+        for &r in &r_ls {
+            let p = s.at(r, a).expect("grid point");
+            row.push(fnum(p.dr * 1e3, 1));
+            csv.row(&[r.to_string(), a.to_string(), format!("{:.3}", p.dr * 1e3)]);
+        }
+        t.row(&row);
+    }
+    (t, csv)
+}
+
+/// Fig. 7: compare energy (fJ) per match class, rows = (R_L, α).
+pub fn fig7(s: &SweepResult) -> (Table, Csv) {
+    let mut t = Table::new(
+        "Fig. 7 — compare energy (fJ) per row-compare by match class \
+         (paper anchors at R_L=20k: E_fm −71.6%, E_1mm −22.3%, E_2mm −9.5%, \
+         E_3mm −4.4% from α=10→50)",
+    )
+    .header(&["R_L", "alpha", "E_fm", "E_1mm", "E_2mm", "E_3mm"]);
+    let mut csv = Csv::new(&["r_l_ohm", "alpha", "e_fm_fj", "e_1mm_fj", "e_2mm_fj", "e_3mm_fj"]);
+    for p in &s.points {
+        let e: Vec<String> = p.energy.iter().map(|&x| fnum(x * 1e15, 2)).collect();
+        t.row(&[
+            format!("{}k", p.r_l / 1e3),
+            format!("{}", p.alpha),
+            e[0].clone(),
+            e[1].clone(),
+            e[2].clone(),
+            e[3].clone(),
+        ]);
+        csv.row(&[
+            p.r_l.to_string(),
+            p.alpha.to_string(),
+            format!("{:.4}", p.energy[0] * 1e15),
+            format!("{:.4}", p.energy[1] * 1e15),
+            format!("{:.4}", p.energy[2] * 1e15),
+            format!("{:.4}", p.energy[3] * 1e15),
+        ]);
+    }
+    (t, csv)
+}
+
+/// The α-sensitivity summary the paper quotes in §VI-A.
+pub fn alpha_drops(s: &SweepResult) -> [f64; 4] {
+    let e10 = s.at(20e3, 10.0).unwrap().energy;
+    let e50 = s.at(20e3, 50.0).unwrap().energy;
+    [
+        1.0 - e50[0] / e10[0],
+        1.0 - e50[1] / e10[1],
+        1.0 - e50[2] / e10[2],
+        1.0 - e50[3] / e10[3],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_grid_complete() {
+        let s = sweep();
+        let (t, csv) = fig6(&s);
+        assert_eq!(t.len(), 5);
+        assert_eq!(csv.render().lines().count(), 21);
+    }
+
+    #[test]
+    fn fig7_rows_and_alpha_drop_shape() {
+        let s = sweep();
+        let (t, _) = fig7(&s);
+        assert_eq!(t.len(), 20);
+        let drops = alpha_drops(&s);
+        // paper: −71.61%, −22.27%, −9.45%, −4.37%; our substrate bands
+        assert!((0.55..0.9).contains(&drops[0]), "fm drop {}", drops[0]);
+        assert!(drops[0] > drops[1] && drops[1] > drops[2] && drops[2] > drops[3]);
+        assert!(drops[3] < 0.12);
+    }
+}

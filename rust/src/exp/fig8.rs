@@ -1,0 +1,82 @@
+//! Fig. 8: total energy vs #Rows — TAP versus the CRA/CSA/CLA ternary
+//! adders of [15] (20-trit additions, set/reset energy 1 nJ).
+
+use super::table11::measure;
+use crate::baselines::{cla_model, cra_model, csa_model};
+use crate::mvl::Radix;
+use crate::util::csv::Csv;
+use crate::util::table::fnum;
+use crate::util::Table;
+
+/// Row counts on the paper's log grid.
+pub const ROW_GRID: [usize; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+
+/// Energy series per implementation (J), indexed like [`ROW_GRID`].
+pub struct Fig8Series {
+    pub tap: Vec<f64>,
+    pub cla: Vec<f64>,
+    pub csa: Vec<f64>,
+    pub cra: Vec<f64>,
+}
+
+/// Compute the series. `sim_rows` controls the functional-sim sample used
+/// to calibrate TAP energy per op (the per-op energy is row-independent).
+pub fn run(sim_rows: usize, seed: u64) -> Fig8Series {
+    let tap_per_op = measure(Radix::TERNARY, 20, sim_rows, seed).total_energy;
+    let (cla, csa, cra) = (cla_model(), csa_model(), cra_model());
+    Fig8Series {
+        tap: ROW_GRID.iter().map(|&r| tap_per_op * r as f64).collect(),
+        cla: ROW_GRID.iter().map(|&r| cla.energy(r, 20)).collect(),
+        csa: ROW_GRID.iter().map(|&r| csa.energy(r, 20)).collect(),
+        cra: ROW_GRID.iter().map(|&r| cra.energy(r, 20)).collect(),
+    }
+}
+
+/// Render the series.
+pub fn render(s: &Fig8Series) -> (Table, Csv, f64) {
+    let mut t = Table::new(
+        "Fig. 8 — energy (nJ) vs #Rows, 20-trit additions \
+         (paper: TAP ≈ 52.64% below CLA; CLA < CSA < CRA; all linear in rows)",
+    )
+    .header(&["#Rows", "TAP", "CLA [15]", "CSA [15]", "CRA [15]"]);
+    let mut csv = Csv::new(&["rows", "tap_nj", "cla_nj", "csa_nj", "cra_nj"]);
+    for (i, &r) in ROW_GRID.iter().enumerate() {
+        t.row(&[
+            r.to_string(),
+            fnum(s.tap[i] * 1e9, 1),
+            fnum(s.cla[i] * 1e9, 1),
+            fnum(s.csa[i] * 1e9, 1),
+            fnum(s.cra[i] * 1e9, 1),
+        ]);
+        csv.row(&[
+            r.to_string(),
+            format!("{:.3}", s.tap[i] * 1e9),
+            format!("{:.3}", s.cla[i] * 1e9),
+            format!("{:.3}", s.csa[i] * 1e9),
+            format!("{:.3}", s.cra[i] * 1e9),
+        ]);
+    }
+    let saving = 1.0 - s.tap[9] / s.cla[9];
+    (t, csv, saving)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let s = run(1000, 3);
+        // ordering at every row count: TAP < CLA < CSA < CRA
+        for i in 0..ROW_GRID.len() {
+            assert!(s.tap[i] < s.cla[i], "row {i}");
+            assert!(s.cla[i] < s.csa[i]);
+            assert!(s.csa[i] < s.cra[i]);
+        }
+        // linearity
+        assert!((s.tap[9] / s.tap[0] - 512.0).abs() < 1e-6);
+        // headline saving ≈ 52.64%
+        let (_, _, saving) = render(&s);
+        assert!((0.45..=0.60).contains(&saving), "saving {saving}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Experiment harness: regenerate every table and figure of §VI (plus the
+//! LUT tables of §IV–§V). Each runner prints the paper-style rows/series
+//! and writes a CSV under `results/`.
+//!
+//! | id       | paper artefact                      | runner        |
+//! |----------|-------------------------------------|---------------|
+//! | table6   | Table VI  binary adder LUT          | [`tables`]    |
+//! | table7   | Table VII TFA non-blocked LUT       | [`tables`]    |
+//! | table9   | Table IX + Supp. 1–3 grpLvl trace   | [`tables`]    |
+//! | table10  | Table X   TFA blocked LUT           | [`tables`]    |
+//! | fig6     | Fig. 6 dynamic range sweep          | [`circuit_dse`] |
+//! | fig7     | Fig. 7 compare-energy sweep         | [`circuit_dse`] |
+//! | table11  | Table XI energy/area binary vs TAP  | [`table11`]   |
+//! | fig8     | Fig. 8 energy vs #Rows              | [`fig8`]      |
+//! | fig9     | Fig. 9 delay vs #Rows               | [`fig9`]      |
+
+pub mod tables;
+pub mod circuit_dse;
+pub mod table11;
+pub mod fig8;
+pub mod fig9;
+pub mod ablation;
+pub mod runner;
+
+pub use runner::{run_experiment, EXPERIMENTS};

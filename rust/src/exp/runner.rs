@@ -1,0 +1,156 @@
+//! Experiment dispatcher: `mvap exp <id>` runs one (or `all`) experiment,
+//! printing the paper-style table and writing `results/<id>.csv`.
+
+use super::{ablation, circuit_dse, fig8, fig9, table11, tables};
+use crate::energy::DelayScheme;
+use crate::util::cli::Args;
+use crate::util::table::fnum;
+use std::path::Path;
+
+/// Known experiment ids (`ablation` is ours, not a paper artefact).
+pub const EXPERIMENTS: [&str; 10] = [
+    "table6", "table7", "table9", "table10", "table11", "fig6", "fig7", "fig8", "fig9",
+    "ablation",
+];
+
+fn write_csv(results_dir: &Path, id: &str, csv: &crate::util::csv::Csv) {
+    let path = results_dir.join(format!("{id}.csv"));
+    match csv.write_to(&path) {
+        Ok(()) => println!("  → {}", path.display()),
+        Err(e) => eprintln!("  ! csv write failed: {e}"),
+    }
+}
+
+/// Run one experiment by id. `args` supplies optional overrides
+/// (`--rows`, `--seed`, `--scheme traditional|optimized`).
+pub fn run_experiment(id: &str, args: &Args, results_dir: &Path) -> anyhow::Result<()> {
+    match id {
+        "table6" => {
+            let (t, csv) = tables::table6();
+            t.print();
+            write_csv(results_dir, id, &csv);
+        }
+        "table7" => {
+            let (t, csv) = tables::table7();
+            t.print();
+            write_csv(results_dir, id, &csv);
+        }
+        "table9" => {
+            let (ts, csv) = tables::table9();
+            for t in &ts {
+                t.print();
+                println!();
+            }
+            write_csv(results_dir, id, &csv);
+        }
+        "table10" => {
+            let (t, csv) = tables::table10();
+            t.print();
+            write_csv(results_dir, id, &csv);
+        }
+        "table11" => {
+            let rows = args.get_parse_or("rows", 10_000usize);
+            let seed = args.get_parse_or("seed", 2021u64);
+            let results = table11::run(rows, seed);
+            let (t, csv, d_sets, d_energy, d_area) = table11::render(&results);
+            t.print();
+            println!(
+                "ternary vs binary: sets/resets −{}%, total energy −{}%, area −{}%  \
+                 (paper: −12.6%, −12.25%, −6.2%)",
+                fnum(d_sets * 100.0, 2),
+                fnum(d_energy * 100.0, 2),
+                fnum(d_area * 100.0, 2)
+            );
+            write_csv(results_dir, id, &csv);
+        }
+        "fig6" => {
+            let s = circuit_dse::sweep();
+            let (t, csv) = circuit_dse::fig6(&s);
+            t.print();
+            write_csv(results_dir, id, &csv);
+        }
+        "fig7" => {
+            let s = circuit_dse::sweep();
+            let (t, csv) = circuit_dse::fig7(&s);
+            t.print();
+            let d = circuit_dse::alpha_drops(&s);
+            println!(
+                "α=10→50 drops at R_L=20k: E_fm −{}% E_1mm −{}% E_2mm −{}% E_3mm −{}%  \
+                 (paper: −71.61%, −22.27%, −9.45%, −4.37%)",
+                fnum(d[0] * 100.0, 2),
+                fnum(d[1] * 100.0, 2),
+                fnum(d[2] * 100.0, 2),
+                fnum(d[3] * 100.0, 2)
+            );
+            write_csv(results_dir, id, &csv);
+        }
+        "fig8" => {
+            let rows = args.get_parse_or("rows", 10_000usize);
+            let seed = args.get_parse_or("seed", 2021u64);
+            let s = fig8::run(rows, seed);
+            let (t, csv, saving) = fig8::render(&s);
+            t.print();
+            println!(
+                "TAP vs CLA energy saving: {}% (paper: 52.64%)",
+                fnum(saving * 100.0, 2)
+            );
+            write_csv(results_dir, id, &csv);
+        }
+        "fig9" => {
+            let scheme = match args.get_or("scheme", "traditional").as_str() {
+                "optimized" => DelayScheme::Optimized,
+                _ => DelayScheme::Traditional,
+            };
+            let s = fig9::run(scheme);
+            let (t, csv) = fig9::render(&s);
+            t.print();
+            for (label, v) in fig9::ratios(&s) {
+                println!("  {label}: {}x", fnum(v, 2));
+            }
+            if let Some(x) = fig9::crossover(&s, true) {
+                println!("  blocked TAP beats CLA from {x} rows");
+            }
+            if let Some(x) = fig9::crossover(&s, false) {
+                println!("  non-blocked TAP beats CLA from {x} rows");
+            }
+            write_csv(results_dir, id, &csv);
+        }
+        "ablation" => {
+            let rows = args.get_parse_or("rows", 4000usize);
+            let seed = args.get_parse_or("seed", 2021u64);
+            let pts = ablation::run(rows, seed);
+            let (t, csv) = ablation::render(&pts);
+            t.print();
+            write_csv(results_dir, id, &csv);
+        }
+        "all" => {
+            for e in EXPERIMENTS {
+                println!("\n===== {e} =====");
+                run_experiment(e, args, results_dir)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (one of {EXPERIMENTS:?} or 'all')"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ids_run_with_small_rows() {
+        let dir = std::env::temp_dir().join("mvap_exp_test");
+        let args = Args::parse(["--rows".to_string(), "200".to_string()]);
+        for id in EXPERIMENTS {
+            run_experiment(id, &args, &dir).unwrap_or_else(|e| panic!("{id}: {e}"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let dir = std::env::temp_dir();
+        assert!(run_experiment("nope", &Args::default(), &dir).is_err());
+    }
+}

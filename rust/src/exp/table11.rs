@@ -1,0 +1,151 @@
+//! Table XI: energy and area of the ternary AP adder vs the binary AP
+//! adder over the paper's width pairings, via the functional simulator on
+//! 10 000 random additions per point (§VI-B).
+
+use crate::coordinator::{Job, NativeBackend, OpKind, VectorEngine};
+use crate::energy::area_normalized;
+use crate::mvl::{Radix, Word};
+use crate::util::csv::Csv;
+use crate::util::table::fnum;
+use crate::util::{Rng, Table};
+
+/// One width pairing's measurements.
+#[derive(Clone, Debug)]
+pub struct PairingResult {
+    pub label: String,
+    pub radix: u8,
+    pub digits: usize,
+    /// Average #set (== #reset) operations per row-addition.
+    pub sets_per_add: f64,
+    /// Average write energy per row-addition (J).
+    pub write_energy: f64,
+    /// Average compare energy per row-addition (J).
+    pub compare_energy: f64,
+    /// Total energy per row-addition (J).
+    pub total_energy: f64,
+    /// Normalized area (2T2R-cell units over both operand fields).
+    pub area: f64,
+}
+
+/// The paper's width pairings: (q-bit, p-trit).
+pub const PAIRINGS: [(usize, usize); 6] = [(8, 5), (16, 10), (32, 20), (51, 32), (64, 40), (128, 80)];
+
+/// Measure one (radix, digits) point over `rows` random additions.
+pub fn measure(radix: Radix, digits: usize, rows: usize, seed: u64) -> PairingResult {
+    let mut rng = Rng::new(seed);
+    let a: Vec<Word> = (0..rows)
+        .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+        .collect();
+    let b: Vec<Word> = (0..rows)
+        .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+        .collect();
+    let mut eng = VectorEngine::new(Box::new(NativeBackend));
+    // Energy/area metrics are mode-independent (§VI-B uses non-blocked);
+    // blocked changes only delay.
+    let job = Job::new(1, OpKind::Add, radix, false, a, b);
+    let res = eng.execute(&job).expect("table11 job");
+    let rows_f = rows as f64;
+    PairingResult {
+        label: format!("{digits}{}", if radix.n() == 2 { "b" } else { "t" }),
+        radix: radix.n(),
+        digits,
+        sets_per_add: res.stats.sets as f64 / rows_f,
+        write_energy: res.energy.write / rows_f,
+        compare_energy: res.energy.compare / rows_f,
+        total_energy: res.energy.total() / rows_f,
+        area: area_normalized(digits, radix.n()),
+    }
+}
+
+/// Run the full Table XI matrix.
+pub fn run(rows: usize, seed: u64) -> Vec<(PairingResult, PairingResult)> {
+    PAIRINGS
+        .iter()
+        .map(|&(q, p)| {
+            (
+                measure(Radix::BINARY, q, rows, seed ^ q as u64),
+                measure(Radix::TERNARY, p, rows, seed ^ (p as u64) << 32),
+            )
+        })
+        .collect()
+}
+
+/// Render the paper-style table + CSV, and the headline savings.
+pub fn render(results: &[(PairingResult, PairingResult)]) -> (Table, Csv, f64, f64, f64) {
+    let mut t = Table::new(
+        "Table XI — ternary AP adder vs binary AP adder [6] \
+         (10k random additions per point; write op = 1 nJ)",
+    )
+    .header(&[
+        "pair", "#Set=#Reset", "Write (nJ)", "Compare (pJ)", "Total (nJ)", "Area (norm)",
+    ]);
+    let mut csv = Csv::new(&[
+        "label", "radix", "digits", "sets_per_add", "write_nj", "compare_pj", "total_nj", "area",
+    ]);
+    let mut row = |r: &PairingResult| {
+        t.row(&[
+            r.label.clone(),
+            fnum(r.sets_per_add, 2),
+            fnum(r.write_energy * 1e9, 2),
+            fnum(r.compare_energy * 1e12, 2),
+            fnum(r.total_energy * 1e9, 2),
+            fnum(r.area, 0),
+        ]);
+        csv.row(&[
+            r.label.clone(),
+            r.radix.to_string(),
+            r.digits.to_string(),
+            format!("{:.4}", r.sets_per_add),
+            format!("{:.4}", r.write_energy * 1e9),
+            format!("{:.4}", r.compare_energy * 1e12),
+            format!("{:.4}", r.total_energy * 1e9),
+            format!("{}", r.area),
+        ]);
+    };
+    for (bin, ter) in results {
+        row(bin);
+        row(ter);
+    }
+    // headline aggregates (paper: −12.6% sets/resets, −12.25% energy, −6.2% area)
+    let agg = |f: &dyn Fn(&PairingResult) -> f64| -> (f64, f64) {
+        let b: f64 = results.iter().map(|(b, _)| f(b)).sum();
+        let t: f64 = results.iter().map(|(_, t)| f(t)).sum();
+        (b, t)
+    };
+    let (bs, ts) = agg(&|r| r.sets_per_add);
+    let (be, te) = agg(&|r| r.total_energy);
+    let (ba, ta) = agg(&|r| r.area);
+    (t, csv, 1.0 - ts / bs, 1.0 - te / be, 1.0 - ta / ba)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reduced-row smoke reproduction of the Table XI headline: ternary
+    /// saves ~12% ops/energy and ~6% area vs binary.
+    #[test]
+    fn headline_savings_band() {
+        let results = run(1500, 42);
+        let (_, _, d_sets, d_energy, d_area) = render(&results);
+        assert!((0.08..=0.17).contains(&d_sets), "sets saving {d_sets}");
+        assert!((0.08..=0.17).contains(&d_energy), "energy saving {d_energy}");
+        assert!((0.055..=0.07).contains(&d_area), "area saving {d_area}");
+    }
+
+    /// Spot-check the 8b point against the paper's 5.99 sets/add.
+    #[test]
+    fn binary_8b_sets_anchor() {
+        let r = measure(Radix::BINARY, 8, 4000, 7);
+        assert!((r.sets_per_add - 5.99).abs() < 0.35, "sets {}", r.sets_per_add);
+        // write energy ≈ 2 × sets × 1 nJ
+        assert!((r.write_energy - 2.0 * r.sets_per_add * 1e-9).abs() < 1e-12);
+    }
+
+    /// Ternary 5t anchor: ~5.22 sets/add.
+    #[test]
+    fn ternary_5t_sets_anchor() {
+        let r = measure(Radix::TERNARY, 5, 4000, 7);
+        assert!((r.sets_per_add - 5.22).abs() < 0.35, "sets {}", r.sets_per_add);
+    }
+}

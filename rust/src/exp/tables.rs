@@ -1,0 +1,182 @@
+//! LUT-structure tables: Table VI (binary adder), Table VII (TFA
+//! non-blocked), Table IX + Supplementary 1–3 (grpLvl trace), Table X
+//! (TFA blocked).
+
+use crate::diagram::StateDiagram;
+use crate::func::full_add;
+use crate::lutgen::{
+    generate_blocked, generate_blocked_traced, generate_non_blocked, validate_lut, Lut,
+};
+use crate::mvl::Radix;
+use crate::util::csv::Csv;
+use crate::util::Table;
+
+fn lut_table(title: &str, lut: &Lut, d: &StateDiagram, show_groups: bool) -> (Table, Csv) {
+    let mut header = vec!["Input".to_string(), "Output".to_string(), "Pass".to_string()];
+    if show_groups {
+        header.push("Group".into());
+        header.push("Write".into());
+    }
+    let mut t = Table::new(title).header(&header);
+    let mut csv = Csv::new(&header);
+    for (i, p) in lut.passes.iter().enumerate() {
+        let (_, w) = lut.write_of(p);
+        let ws: String = w.iter().map(|d| char::from(b'0' + d)).collect();
+        let mut row = vec![
+            lut.fmt_state(p.input),
+            lut.fmt_state(p.output),
+            (i + 1).to_string(),
+        ];
+        if show_groups {
+            row.push((p.group + 1).to_string());
+            row.push(format!("W{ws}"));
+        }
+        t.row(&row);
+        csv.row(&row);
+    }
+    for &na in d.roots() {
+        let mut row = vec![
+            d.table().fmt_state(na),
+            d.table().fmt_state(na),
+            "No action".to_string(),
+        ];
+        if show_groups {
+            row.push(String::new());
+            row.push(String::new());
+        }
+        t.row(&row);
+        csv.row(&row);
+    }
+    (t, csv)
+}
+
+/// Table VI: the binary AP adder LUT of [6].
+pub fn table6() -> (Table, Csv) {
+    let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+    let lut = generate_non_blocked(&d);
+    assert!(validate_lut(&lut, d.table()).is_empty());
+    lut_table(
+        "Table VI — binary AP adder LUT (pass order = our canonical DFS; \
+         soundness-validated, see EXPERIMENTS.md)",
+        &lut,
+        &d,
+        false,
+    )
+}
+
+/// Table VII: the TFA non-blocked LUT (21 passes, 101→020 cycle break).
+pub fn table7() -> (Table, Csv) {
+    let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+    let lut = generate_non_blocked(&d);
+    assert!(validate_lut(&lut, d.table()).is_empty());
+    lut_table(
+        "Table VII — LUT-based TFA, non-blocked (21 passes; tree/sibling \
+         order is canonical-ascending, validated equivalent to the paper's)",
+        &lut,
+        &d,
+        false,
+    )
+}
+
+/// Table X: the TFA blocked LUT (21 passes in 9 write blocks).
+pub fn table10() -> (Table, Csv) {
+    let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+    let lut = generate_blocked(&d);
+    assert!(validate_lut(&lut, d.table()).is_empty());
+    lut_table(
+        "Table X — LUT-based TFA, blocked (9 write blocks; contents match \
+         the paper's Table X as sets)",
+        &lut,
+        &d,
+        true,
+    )
+}
+
+/// Table IX + Supplementary Tables: the grpLvl trace. Returns one table
+/// per snapshot (initial + per selected block).
+pub fn table9() -> (Vec<Table>, Csv) {
+    let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+    let (_, trace) = generate_blocked_traced(&d);
+    let mut tables = Vec::new();
+    let mut csv = Csv::new(&["iteration", "chosen_group", "split", "level", "group", "count"]);
+    for snap in &trace {
+        let title = match snap.chosen {
+            None => "Table IX — initial grpLvl (level × group counts)".to_string(),
+            Some(g) => format!(
+                "grpLvl after iteration {} — chose group {}{}",
+                snap.iteration,
+                g,
+                if snap.split { " (split)" } else { "" }
+            ),
+        };
+        let groups: Vec<usize> = {
+            let mut g: Vec<usize> = snap.entries.iter().map(|&(_, g, _)| g).collect();
+            g.sort_unstable();
+            g.dedup();
+            g
+        };
+        let max_level = snap.entries.iter().map(|&(l, _, _)| l).max().unwrap_or(1);
+        let mut header = vec!["level".to_string()];
+        header.extend(groups.iter().map(|g| format!("g{g}")));
+        let mut t = Table::new(&title).header(&header);
+        for l in 1..=max_level {
+            let mut row = vec![l.to_string()];
+            for &g in &groups {
+                let count = snap
+                    .entries
+                    .iter()
+                    .find(|&&(el, eg, _)| el == l && eg == g)
+                    .map(|&(_, _, c)| c)
+                    .unwrap_or(0);
+                row.push(count.to_string());
+            }
+            t.row(&row);
+        }
+        for &(l, g, c) in &snap.entries {
+            csv.row(&[
+                snap.iteration.to_string(),
+                snap.chosen.map(|g| g.to_string()).unwrap_or_default(),
+                snap.split.to_string(),
+                l.to_string(),
+                g.to_string(),
+                c.to_string(),
+            ]);
+        }
+        tables.push(t);
+    }
+    (tables, csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_has_8_rows() {
+        let (t, csv) = table6();
+        assert_eq!(t.len(), 8); // 4 passes + 4 noAction
+        assert!(csv.render().lines().count() == 9);
+    }
+
+    #[test]
+    fn table7_has_27_rows() {
+        let (t, _) = table7();
+        assert_eq!(t.len(), 27);
+    }
+
+    #[test]
+    fn table10_shows_groups() {
+        let (t, _) = table10();
+        let r = t.render();
+        assert!(r.contains("W020"));
+        assert!(r.contains("Group"));
+    }
+
+    #[test]
+    fn table9_trace_has_initial_plus_blocks() {
+        let (tables, _) = table9();
+        // initial + 9 block selections
+        assert_eq!(tables.len(), 10);
+        assert!(tables[0].render().contains("g19"));
+    }
+}

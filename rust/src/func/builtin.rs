@@ -1,0 +1,233 @@
+//! Built-in function library (§I: the methodology is "universal and can be
+//! employed for different logic or arithmetic functions such as NOR, XOR,
+//! AND, multiplication, addition and subtraction").
+
+use super::truth_table::TruthTable;
+use crate::mvl::Radix;
+
+/// In-place full adder over state `(A, B, C_in)` → `(A, S, C_out)` for any
+/// radix. For radix 3 this is the paper's TFA (Table VII / Fig. 5); for
+/// radix 2 the binary AP adder of [6] (Table VI / Fig. 4).
+pub fn full_add(radix: Radix) -> TruthTable {
+    let n = radix.n();
+    TruthTable::from_fn(&format!("full_add_r{n}"), radix, 3, 1, move |s| {
+        let sum = s[0] + s[1] + s[2];
+        vec![s[0], sum % n, sum / n]
+    })
+}
+
+/// In-place full subtractor over `(A, B, B_in)` → `(A, D, B_out)` computing
+/// `A - B - B_in` digit-wise (D = difference, B_out = borrow).
+pub fn full_sub(radix: Radix) -> TruthTable {
+    let n = radix.n() as i16;
+    TruthTable::from_fn(&format!("full_sub_r{}", radix.n()), radix, 3, 1, move |s| {
+        // Borrow-in spans the full digit domain (the truth table is total),
+        // so the deficit can reach -(2n-2) and the borrow-out digit can be 2.
+        let mut d = s[0] as i16 - s[1] as i16 - s[2] as i16;
+        let mut borrow = 0u8;
+        while d < 0 {
+            d += n;
+            borrow += 1;
+        }
+        vec![s[0], d as u8, borrow]
+    })
+}
+
+/// In-place half adder over `(A, B)` → `(A, S)` with S = (A+B) mod n —
+/// i.e. the modular "XOR" generalisation.
+pub fn half_add(radix: Radix) -> TruthTable {
+    let n = radix.n();
+    TruthTable::from_fn(&format!("half_add_r{n}"), radix, 2, 1, move |s| {
+        vec![s[0], (s[0] + s[1]) % n]
+    })
+}
+
+/// Two-operand digit-wise logic ops `(A, B)` → `(A, f(A,B))`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Logic2 {
+    /// min(A, B) — the MVL AND.
+    And,
+    /// max(A, B) — the MVL OR.
+    Or,
+    /// (n-1) - max(A, B) — the MVL NOR.
+    Nor,
+    /// (A + B) mod n — the MVL XOR analogue.
+    Xor,
+    /// |A - B| — useful for comparison workloads.
+    AbsDiff,
+}
+
+/// Build the truth table for a [`Logic2`] op.
+pub fn logic2(op: Logic2, radix: Radix) -> TruthTable {
+    let n = radix.n();
+    let name = format!("{op:?}_r{n}").to_lowercase();
+    TruthTable::from_fn(&name, radix, 2, 1, move |s| {
+        let (a, b) = (s[0], s[1]);
+        let r = match op {
+            Logic2::And => a.min(b),
+            Logic2::Or => a.max(b),
+            Logic2::Nor => (n - 1) - a.max(b),
+            Logic2::Xor => (a + b) % n,
+            Logic2::AbsDiff => a.abs_diff(b),
+        };
+        vec![a, r]
+    })
+}
+
+/// In-place multiply-accumulate digit step over `(A, B, C)`:
+/// `(A, (A·B + C) mod n, (A·B + C) div n)`. Chaining this digit-wise
+/// implements vector multiplication on the AP (the paper lists
+/// multiplication among the supported functions); it is the kernel of the
+/// `ternary_nn` example. Note `A·B + C ≤ (n-1)² + (n-1) = (n-1)·n`, so the
+/// carry digit is at most `n-1` and the state stays in-radix.
+pub fn mac_digit(radix: Radix) -> TruthTable {
+    let n = radix.n();
+    TruthTable::from_fn(&format!("mac_r{n}"), radix, 3, 1, move |s| {
+        let v = s[0] as u16 * s[1] as u16 + s[2] as u16;
+        vec![s[0], (v % n as u16) as u8, (v / n as u16) as u8]
+    })
+}
+
+/// Four-digit multiply-accumulate step over `(A, B, S, C)`:
+/// `(A, B, (A·B + S + C) mod n, (A·B + S + C) div n)` — the partial-
+/// product kernel of the schoolbook word multiplier
+/// ([`crate::ap::ops::mul_vectors`]). `A·B + S + C ≤ (n-1)² + 2(n-1)
+/// = n² - 1`, so the (S, C) pair exactly holds the result.
+///
+/// Write region: `(B, S, C)` with B written back *unchanged* (a zero-cost
+/// identity write). Only A is a kept digit — deliberately: the (S, C)
+/// accumulator dynamics contain cycles (e.g. A·B = 1 walks S around the
+/// radix), and cycle breaking widens writes into the *kept* digits. With
+/// this layout the widened write can only corrupt A, which the multiplier
+/// reads exactly once per outer iteration and refreshes from a pristine
+/// copy (see [`copy_digit`] and `mul_vectors`). B — reused across the
+/// whole inner loop — sits in the written region and is provably never
+/// altered.
+pub fn mac4(radix: Radix) -> TruthTable {
+    let n = radix.n() as u16;
+    TruthTable::from_fn(&format!("mac4_r{}", radix.n()), radix, 4, 1, move |s| {
+        let v = s[0] as u16 * s[1] as u16 + s[2] as u16 + s[3] as u16;
+        vec![s[0], s[1], (v % n) as u8, (v / n) as u8]
+    })
+}
+
+/// Column copy `(src, dst)` → `(src, src)`: the AP "move" primitive used
+/// to refresh working operand columns. Its diagram is cycle-free by
+/// construction ((s,s) are the roots; every (s,d≠s) points straight at
+/// one), so it never incurs widened writes.
+pub fn copy_digit(radix: Radix) -> TruthTable {
+    TruthTable::from_fn(&format!("copy_r{}", radix.n()), radix, 2, 1, move |s| {
+        vec![s[0], s[0]]
+    })
+}
+
+/// Carry-absorb step over `(S, C)` → `((S+C) mod n, (S+C) div n)`:
+/// ripples a leftover carry digit into the next result column. No kept
+/// digits (write_start = 0) — its diagram is a forest without cycle
+/// breaking (every `(s, 0)` is a fixed point).
+pub fn addc(radix: Radix) -> TruthTable {
+    let n = radix.n() as u16;
+    TruthTable::from_fn(&format!("addc_r{}", radix.n()), radix, 2, 0, move |s| {
+        let v = s[0] as u16 + s[1] as u16;
+        vec![(v % n) as u8, (v / n) as u8]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_full_add_matches_table_vi() {
+        // Table VI inputs → outputs (A,B,C), big-endian ids.
+        let t = full_add(Radix::BINARY);
+        let cases = [
+            ([0, 0, 0], [0, 0, 0]),
+            ([0, 0, 1], [0, 1, 0]),
+            ([0, 1, 0], [0, 1, 0]),
+            ([0, 1, 1], [0, 0, 1]),
+            ([1, 0, 0], [1, 1, 0]),
+            ([1, 0, 1], [1, 0, 1]),
+            ([1, 1, 0], [1, 0, 1]),
+            ([1, 1, 1], [1, 1, 1]),
+        ];
+        for (inp, out) in cases {
+            assert_eq!(t.output_of(t.encode_state(&inp)), t.encode_state(&out));
+        }
+    }
+
+    #[test]
+    fn ternary_full_add_matches_table_vii_io() {
+        // Spot-check Table VII's input→output pairs (before pass ordering).
+        let t = full_add(Radix::TERNARY);
+        let cases = [
+            ([0, 1, 2], [0, 0, 1]),
+            ([1, 0, 1], [1, 2, 0]), // pre-cycle-break output
+            ([2, 2, 2], [2, 0, 2]),
+            ([1, 2, 2], [1, 2, 1]),
+        ];
+        for (inp, out) in cases {
+            assert_eq!(
+                t.fmt_state(t.output_of(t.encode_state(&inp))),
+                t.fmt_state(t.encode_state(&out))
+            );
+        }
+    }
+
+    #[test]
+    fn sub_is_add_inverse_digitwise() {
+        for n in 2..6u8 {
+            let radix = Radix(n);
+            let add = full_add(radix);
+            let sub = full_sub(radix);
+            // For every (a,b): (a+b) then (sum - b) recovers a (with
+            // carry/borrow digits consistent).
+            for a in 0..n {
+                for b in 0..n {
+                    let s = add.decode(add.output_of(add.encode_state(&[a, b, 0])));
+                    // s = (a, sum, carry); subtract: (sum, a, 0) → diff = sum - a = b mod n
+                    let d = sub.decode(sub.output_of(sub.encode_state(&[s[1], a, 0])));
+                    // ((a+b) mod n) - a ≡ b (mod n)
+                    assert_eq!(d[1], b, "a={a} b={b} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logic2_tables() {
+        let r = Radix::TERNARY;
+        let and = logic2(Logic2::And, r);
+        let nor = logic2(Logic2::Nor, r);
+        assert_eq!(and.output_of(and.encode_state(&[1, 2])), and.encode_state(&[1, 1]));
+        assert_eq!(nor.output_of(nor.encode_state(&[0, 0])), nor.encode_state(&[0, 2]));
+        assert_eq!(nor.output_of(nor.encode_state(&[2, 1])), nor.encode_state(&[2, 0]));
+    }
+
+    #[test]
+    fn mac_digit_value_identity() {
+        for n in 2..6u8 {
+            let t = mac_digit(Radix(n));
+            for a in 0..n {
+                for b in 0..n {
+                    for c in 0..n {
+                        let o = t.decode(t.output_of(t.encode_state(&[a, b, c])));
+                        let v = a as u16 * b as u16 + c as u16;
+                        assert_eq!(o[1] as u16 + o[2] as u16 * n as u16, v);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn half_add_xor_equivalence() {
+        for n in 2..5u8 {
+            let ha = half_add(Radix(n));
+            let xo = logic2(Logic2::Xor, Radix(n));
+            for id in 0..ha.num_states() {
+                assert_eq!(ha.output_of(id), xo.output_of(id));
+            }
+        }
+    }
+}

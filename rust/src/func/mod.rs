@@ -1,0 +1,16 @@
+//! Radix-n truth tables for in-place arithmetic / logic functions (§IV).
+//!
+//! A [`TruthTable`] describes a digit-wise function over a `arity`-digit
+//! state vector. In-place AP operation overwrites the trailing
+//! `arity - write_start` digits of the state with the function output
+//! (e.g. the full adder keeps `A` and overwrites `(B, C_in)` with
+//! `(S, C_out)`); LUT generation ([`crate::lutgen`]) may *widen* individual
+//! writes while breaking cycles.
+
+pub mod truth_table;
+pub mod builtin;
+
+pub use truth_table::TruthTable;
+pub use builtin::{
+    addc, copy_digit, full_add, full_sub, half_add, logic2, mac4, mac_digit, Logic2,
+};

@@ -1,0 +1,184 @@
+//! The [`TruthTable`] type: the function-level input to LUT generation.
+
+use crate::mvl::Radix;
+
+/// A total function `f : [0,n)^arity → [0,n)^arity` with in-place write
+/// semantics: digits `[0, write_start)` are *kept* (must be preserved by
+/// `f`), digits `[write_start, arity)` are *written back*.
+///
+/// States are indexed by their big-endian n-ary encoding, matching the
+/// paper's vector notation: state `(A, B, C)` has
+/// `id = A·n² + B·n + C` (so the paper's "ternary-to-decimal conversion
+/// of '020' = 6" holds).
+#[derive(Clone, Debug)]
+pub struct TruthTable {
+    radix: Radix,
+    arity: usize,
+    write_start: usize,
+    /// `outputs[id]` = output state id for input state `id`.
+    outputs: Vec<usize>,
+    name: String,
+}
+
+impl TruthTable {
+    /// Build from a function on digit vectors (big-endian, paper order).
+    ///
+    /// Panics if `f` modifies a kept digit (those are not written back, so
+    /// a function that changes them is not implementable in-place as given;
+    /// cycle-breaking *extends* writes, it never starts with them).
+    pub fn from_fn<F>(name: &str, radix: Radix, arity: usize, write_start: usize, f: F) -> Self
+    where
+        F: Fn(&[u8]) -> Vec<u8>,
+    {
+        assert!(arity >= 1 && write_start < arity);
+        let n = radix.n() as usize;
+        let count = n.pow(arity as u32);
+        let mut outputs = Vec::with_capacity(count);
+        let mut state = vec![0u8; arity];
+        for id in 0..count {
+            Self::decode_into(id, radix, &mut state);
+            let out = f(&state);
+            assert_eq!(out.len(), arity, "{name}: output arity mismatch");
+            assert!(
+                out.iter().all(|&d| (d as usize) < n),
+                "{name}: output digit out of radix"
+            );
+            assert_eq!(
+                &out[..write_start],
+                &state[..write_start],
+                "{name}: f modifies kept digits of {state:?}"
+            );
+            outputs.push(Self::encode(&out, radix));
+        }
+        TruthTable { radix, arity, write_start, outputs, name: name.to_string() }
+    }
+
+    /// Function name (used in reports).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Radix.
+    pub fn radix(&self) -> Radix {
+        self.radix
+    }
+
+    /// State width in digits.
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// First written digit index.
+    pub fn write_start(&self) -> usize {
+        self.write_start
+    }
+
+    /// Number of states (`n^arity`).
+    pub fn num_states(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Output state id for input state id.
+    pub fn output_of(&self, id: usize) -> usize {
+        self.outputs[id]
+    }
+
+    /// Is `id` a no-action state (`f(x) == x`)?
+    pub fn is_no_action(&self, id: usize) -> bool {
+        self.outputs[id] == id
+    }
+
+    /// Decode a state id into big-endian digits.
+    pub fn decode(&self, id: usize) -> Vec<u8> {
+        let mut v = vec![0u8; self.arity];
+        Self::decode_into(id, self.radix, &mut v);
+        v
+    }
+
+    /// Encode big-endian digits into a state id.
+    pub fn encode_state(&self, digits: &[u8]) -> usize {
+        assert_eq!(digits.len(), self.arity);
+        Self::encode(digits, self.radix)
+    }
+
+    fn decode_into(mut id: usize, radix: Radix, out: &mut [u8]) {
+        let n = radix.n() as usize;
+        for slot in out.iter_mut().rev() {
+            *slot = (id % n) as u8;
+            id /= n;
+        }
+    }
+
+    fn encode(digits: &[u8], radix: Radix) -> usize {
+        let n = radix.n() as usize;
+        digits.iter().fold(0usize, |acc, &d| acc * n + d as usize)
+    }
+
+    /// Render a state id as a compact digit string (e.g. "120").
+    pub fn fmt_state(&self, id: usize) -> String {
+        self.decode(id).iter().map(|d| char::from(b'0' + d)).collect()
+    }
+
+    /// All (input id, output id) pairs.
+    pub fn entries(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.outputs.iter().copied().enumerate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tfa() -> TruthTable {
+        TruthTable::from_fn("tfa", Radix::TERNARY, 3, 1, |s| {
+            let sum = s[0] + s[1] + s[2];
+            vec![s[0], sum % 3, sum / 3]
+        })
+    }
+
+    #[test]
+    fn encoding_matches_paper_examples() {
+        let t = tfa();
+        // "ternary-to-decimal conversion of the vector '020' is 6" (§V.1)
+        assert_eq!(t.encode_state(&[0, 2, 0]), 6);
+        assert_eq!(t.fmt_state(6), "020");
+        assert_eq!(t.encode_state(&[1, 0, 1]), 10);
+        assert_eq!(t.decode(19), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn tfa_outputs_are_correct_sums() {
+        let t = tfa();
+        for (id, out) in t.entries() {
+            let s = t.decode(id);
+            let o = t.decode(out);
+            let sum = s[0] + s[1] + s[2];
+            assert_eq!(o, vec![s[0], sum % 3, sum / 3]);
+        }
+    }
+
+    #[test]
+    fn tfa_no_action_states() {
+        // Fig. 5: roots are 000, 010, 020, 201, 211, 221.
+        let t = tfa();
+        let roots: Vec<String> = (0..t.num_states())
+            .filter(|&id| t.is_no_action(id))
+            .map(|id| t.fmt_state(id))
+            .collect();
+        assert_eq!(roots, vec!["000", "010", "020", "201", "211", "221"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "modifies kept digits")]
+    fn kept_digit_modification_rejected() {
+        TruthTable::from_fn("bad", Radix::TERNARY, 2, 1, |s| vec![(s[0] + 1) % 3, s[1]]);
+    }
+
+    #[test]
+    fn roundtrip_ids() {
+        let t = tfa();
+        for id in 0..t.num_states() {
+            assert_eq!(t.encode_state(&t.decode(id)), id);
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # mvap — In-memory Multi-valued Associative Processor
+//!
+//! A full-system reproduction of *"In-memory Multi-valued Associative
+//! Processor"* (Hout, Fouda, Kanj, Eltawil, 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`mvl`] — multi-valued logic primitives (nits, ternary inverters, the
+//!   search-key decoder of §II-B/§III).
+//! * [`func`] — radix-n truth tables for arithmetic/logic functions.
+//! * [`diagram`] — the directed state-diagram interpretation of a truth
+//!   table (§IV-A), including forward-edge (cycle) detection and the
+//!   widened-write cycle-breaking transform (§IV-B).
+//! * [`lutgen`] — automatic LUT generation: the *non-blocked* DFS ordering
+//!   (Algorithm 1) and the *blocked* BFS + grpLvl grouping (Algorithms 2–4).
+//! * [`cam`] — functional model of the nTnR MvCAM cell/row/array (§II).
+//! * [`ap`] — the associative-processor controller: key/mask/tag registers,
+//!   pass execution, multi-digit in-place arithmetic, blocked-mode write
+//!   coalescing, and event-count statistics.
+//! * [`circuit`] — the HSPICE substitute: a small MNA transient solver and
+//!   matchline netlists used for the dynamic-range / compare-energy design
+//!   space exploration (Figs. 6–7).
+//! * [`energy`] — energy / delay / area models (Table XI, Figs. 8–9).
+//! * [`baselines`] — the binary AP adder [6] and ternary CRA/CSA/CLA
+//!   models extrapolated from [15].
+//! * [`coordinator`] — the L3 vector engine: jobs, row batching, scheduling
+//!   across CAM arrays, backends (native simulator or AOT-compiled XLA
+//!   executables via PJRT).
+//! * [`runtime`] — PJRT client wrapper and artifact loading.
+//! * [`exp`] — experiment harness regenerating every paper table/figure.
+//!
+//! Python (JAX + Pallas) exists only on the compile path: `make artifacts`
+//! lowers the vectorised AP pass engine to HLO text under `artifacts/`,
+//! which [`runtime`] loads and executes; nothing Python runs at request
+//! time.
+
+pub mod util;
+pub mod mvl;
+pub mod func;
+pub mod diagram;
+pub mod lutgen;
+pub mod cam;
+pub mod ap;
+pub mod circuit;
+pub mod energy;
+pub mod baselines;
+pub mod coordinator;
+pub mod runtime;
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,395 @@
+//! Algorithms 2–4 — the *blocked* pass ordering.
+//!
+//! Write cycles are far more expensive than compares, and many inputs share
+//! an output write action; the blocked approach orders passes so that all
+//! inputs sharing a write action are compared consecutively (their rows
+//! accumulating write-enable flags in the per-row D-FF, §V), then a single
+//! write cycle commits the whole block.
+//!
+//! * **Algorithm 2** initialises the `grpLvl` table: each action state j is
+//!   keyed by `g = parent.outVal(writeDim) + Σ n^i` (its write action,
+//!   dimension-adjusted) and its tree level; `grpLvl[l][g]` counts states.
+//! * **Algorithm 3** repeatedly selects the next target group `g_tgt`: a
+//!   group entirely at the top level if one exists, otherwise the group
+//!   with the most top-level states, which is *split* (its deeper states
+//!   move to a fresh group id).
+//! * **Algorithm 4** (UPDATELUT) assigns pass numbers to the target group's
+//!   states and elevates their subtrees one level, updating `grpLvl`.
+//!
+//! The produced block *contents* are deterministic; block *order* among
+//! simultaneously-eligible groups is semantically free (the paper numbers
+//! within-group passes arbitrarily, Table X note) — we take ascending group
+//! id for determinism and verify soundness in [`super::validate`].
+
+use super::lut::{Lut, Pass};
+use crate::diagram::StateDiagram;
+use std::collections::BTreeMap;
+
+/// Working state for the blocked generation.
+struct Gen<'a> {
+    d: &'a StateDiagram,
+    /// Mutable level per state (levels decay as subtrees are elevated).
+    level: Vec<u32>,
+    /// Mutable group id per action state.
+    grp: Vec<usize>,
+    /// grpLvl[(level, group)] = count of action states.
+    grp_lvl: BTreeMap<(u32, usize), usize>,
+    /// Next fresh group id (G in the paper).
+    next_group: usize,
+    /// Output accumulation: (state, block index) in pass order.
+    ordered: Vec<(usize, usize)>,
+    blocks_emitted: usize,
+}
+
+/// A snapshot of the grpLvl table at one algorithm step (for Table IX and
+/// the supplementary tables).
+#[derive(Clone, Debug)]
+pub struct GrpLvlSnapshot {
+    /// Which iteration (0 = initial table, before any block is chosen).
+    pub iteration: usize,
+    /// Group chosen in this iteration (None for the initial snapshot).
+    pub chosen: Option<usize>,
+    /// Whether choosing required splitting the group.
+    pub split: bool,
+    /// (level, group) → count, only nonzero entries.
+    pub entries: Vec<(u32, usize, usize)>,
+}
+
+/// Generate the blocked LUT per Algorithms 2–4.
+pub fn generate_blocked(d: &StateDiagram) -> Lut {
+    generate_blocked_traced(d).0
+}
+
+/// As [`generate_blocked`], also returning grpLvl snapshots: the initial
+/// table (Table IX) and one per selected block (Supplementary Tables 1–3).
+pub fn generate_blocked_traced(d: &StateDiagram) -> (Lut, Vec<GrpLvlSnapshot>) {
+    let mut lut = Lut::skeleton(d);
+    let nodes = d.nodes();
+
+    // ---- Algorithm 2: initialise grpLvl ---------------------------------
+    let mut gen = Gen {
+        d,
+        level: nodes.iter().map(|n| n.level).collect(),
+        grp: vec![usize::MAX; nodes.len()],
+        grp_lvl: BTreeMap::new(),
+        next_group: 0,
+        ordered: Vec::new(),
+        blocks_emitted: 0,
+    };
+    for n in nodes {
+        if n.no_action {
+            continue;
+        }
+        let g = d.group_key(n.id);
+        gen.grp[n.id] = g;
+        *gen.grp_lvl.entry((n.level, g)).or_insert(0) += 1;
+        gen.next_group = gen.next_group.max(g + 1);
+    }
+
+    // ---- Algorithm 3: select groups until the top level drains ----------
+    let mut trace = vec![GrpLvlSnapshot {
+        iteration: 0,
+        chosen: None,
+        split: false,
+        entries: gen.snapshot_entries(),
+    }];
+    let mut iteration = 0usize;
+    while gen.top_level_total() > 0 {
+        let eligible = gen.eligible_groups();
+        if !eligible.is_empty() {
+            for g in eligible {
+                iteration += 1;
+                gen.update_lut(g);
+                trace.push(GrpLvlSnapshot {
+                    iteration,
+                    chosen: Some(g),
+                    split: false,
+                    entries: gen.snapshot_entries(),
+                });
+            }
+        } else {
+            // Split the group with the most top-level states.
+            let g_tgt = gen.max_top_group();
+            gen.split(g_tgt);
+            iteration += 1;
+            gen.update_lut(g_tgt);
+            trace.push(GrpLvlSnapshot {
+                iteration,
+                chosen: Some(g_tgt),
+                split: true,
+                entries: gen.snapshot_entries(),
+            });
+        }
+    }
+
+    // ---- materialise the Lut ---------------------------------------------
+    for (state, block) in &gen.ordered {
+        let node = d.node(*state);
+        lut.passes.push(Pass {
+            input: *state,
+            output: node.next,
+            write_dim: node.write_dim,
+            group: *block,
+        });
+    }
+    lut.num_groups = gen.blocks_emitted;
+    (lut, trace)
+}
+
+impl<'a> Gen<'a> {
+    /// Nonzero grpLvl entries, sorted by (level, group).
+    fn snapshot_entries(&self) -> Vec<(u32, usize, usize)> {
+        self.grp_lvl
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(&(l, g), &c)| (l, g, c))
+            .collect()
+    }
+
+    fn top_level_total(&self) -> usize {
+        self.grp_lvl
+            .range((1, 0)..(2, 0))
+            .map(|(_, &c)| c)
+            .sum()
+    }
+
+    /// Groups with states at level 1 and none deeper (cond1 ∧ cond2),
+    /// ascending.
+    fn eligible_groups(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (&(l, g), &c) in &self.grp_lvl {
+            if l == 1 && c > 0 {
+                let deeper: usize = self
+                    .grp_lvl
+                    .iter()
+                    .filter(|(&(l2, g2), _)| l2 >= 2 && g2 == g)
+                    .map(|(_, &c2)| c2)
+                    .sum();
+                if deeper == 0 {
+                    out.push(g);
+                }
+            }
+        }
+        out
+    }
+
+    /// Group with the maximum top-level count (ties: smallest id).
+    fn max_top_group(&self) -> usize {
+        self.grp_lvl
+            .range((1, 0)..(2, 0))
+            .filter(|(_, &c)| c > 0)
+            .max_by_key(|(&(_, g), &c)| (c, std::cmp::Reverse(g)))
+            .map(|(&(_, g), _)| g)
+            .expect("top level empty in max_top_group")
+    }
+
+    /// Move the >level-1 states of `g` into a fresh group (Algorithm 3
+    /// lines 15–24).
+    fn split(&mut self, g: usize) {
+        let fresh = self.next_group;
+        self.next_group += 1;
+        for id in 0..self.grp.len() {
+            if self.grp[id] == g && self.level[id] > 1 {
+                self.grp[id] = fresh;
+                let l = self.level[id];
+                *self.grp_lvl.get_mut(&(l, g)).unwrap() -= 1;
+                *self.grp_lvl.entry((l, fresh)).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Algorithm 4: emit a block for `g_tgt`, elevate subtrees, clear the
+    /// top-level entry.
+    fn update_lut(&mut self, g_tgt: usize) {
+        let block = self.blocks_emitted;
+        self.blocks_emitted += 1;
+        let members: Vec<usize> = (0..self.grp.len())
+            .filter(|&id| self.grp[id] == g_tgt && self.level[id] == 1)
+            .collect();
+        debug_assert!(!members.is_empty(), "empty block for group {g_tgt}");
+        for j in members {
+            self.ordered.push((j, block));
+            // Elevate every descendant of j by one level.
+            let mut stack: Vec<usize> = self.d.node(j).children.clone();
+            while let Some(v) = stack.pop() {
+                let l = self.level[v];
+                let g = self.grp[v];
+                *self.grp_lvl.get_mut(&(l, g)).unwrap() -= 1;
+                *self.grp_lvl.entry((l - 1, g)).or_insert(0) += 1;
+                self.level[v] = l - 1;
+                stack.extend_from_slice(&self.d.node(v).children);
+            }
+            // Remove j itself from the accounting (its entry is at level 1).
+            let c = self.grp_lvl.get_mut(&(1, g_tgt)).unwrap();
+            *c -= 1;
+            self.grp[j] = usize::MAX;
+        }
+        // Line 13: grpLvl[topLevel][g_tgt] = 0 (already drained above; the
+        // entry may linger at 0 in the map, which is harmless).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::StateDiagram;
+    use crate::func::{full_add, full_sub, mac_digit};
+    use crate::mvl::Radix;
+    use std::collections::BTreeSet;
+
+    fn tfa_lut() -> Lut {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        generate_blocked(&d)
+    }
+
+    /// Table X: 21 passes in 9 write blocks.
+    #[test]
+    fn tfa_block_count_matches_table_x() {
+        let lut = tfa_lut();
+        assert_eq!(lut.passes.len(), 21);
+        assert_eq!(lut.num_groups, 9);
+    }
+
+    /// Table X block *contents* (block order among simultaneously-eligible
+    /// groups is arbitrary — see module docs — so compare as a set of sets).
+    #[test]
+    fn tfa_block_contents_match_table_x() {
+        let lut = tfa_lut();
+        let mut ours: BTreeSet<BTreeSet<String>> = BTreeSet::new();
+        for block in lut.blocks() {
+            ours.insert(block.iter().map(|p| lut.fmt_state(p.input)).collect());
+        }
+        let paper: [&[&str]; 9] = [
+            &["101"],
+            &["102", "111", "120", "210"],
+            &["112", "121", "202", "220"],
+            &["002", "011", "110", "200"],
+            &["122", "212"],
+            &["001", "100"],
+            &["222"],
+            &["012", "021"],
+            &["022"],
+        ];
+        let expect: BTreeSet<BTreeSet<String>> = paper
+            .iter()
+            .map(|b| b.iter().map(|s| s.to_string()).collect())
+            .collect();
+        assert_eq!(ours, expect);
+    }
+
+    /// Every block shares a single write action (the D-FF coalescing
+    /// requirement of §V).
+    #[test]
+    fn blocks_share_write_action() {
+        for radix in [Radix(2), Radix(3), Radix(4)] {
+            for table in [full_add(radix), full_sub(radix), mac_digit(radix)] {
+                let d = StateDiagram::build(table).unwrap();
+                let lut = generate_blocked(&d);
+                for block in lut.blocks() {
+                    let first = lut.write_of(block[0]);
+                    for p in &block[1..] {
+                        assert_eq!(lut.write_of(p), first, "{}", lut.name);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The first emitted block is group 19 = {101} (Table IX: "Group 19
+    /// should be processed first since it is the only group that has no
+    /// entries beyond Level 1").
+    #[test]
+    fn tfa_first_block_is_101() {
+        let lut = tfa_lut();
+        let b0: Vec<String> = lut.blocks()[0]
+            .iter()
+            .map(|p| lut.fmt_state(p.input))
+            .collect();
+        assert_eq!(b0, vec!["101"]);
+        let (start, w) = lut.write_of(lut.blocks()[0][0]);
+        assert_eq!((start, w), (0, vec![0, 2, 0])); // W020
+    }
+
+    /// Parent-before-child ordering holds across blocks.
+    #[test]
+    fn blocked_respects_dependencies() {
+        for radix in [Radix(2), Radix(3), Radix(4), Radix(5)] {
+            for table in [full_add(radix), full_sub(radix), mac_digit(radix)] {
+                let d = StateDiagram::build(table).unwrap();
+                let lut = generate_blocked(&d);
+                let pos: std::collections::HashMap<usize, usize> = lut
+                    .passes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (p.input, i))
+                    .collect();
+                for p in &lut.passes {
+                    let parent = d.node(p.input).next;
+                    if !d.node(parent).no_action {
+                        assert!(
+                            pos[&parent] < pos[&p.input],
+                            "{}: {} before {}",
+                            lut.name,
+                            lut.fmt_state(p.input),
+                            lut.fmt_state(parent)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocked and non-blocked cover the same pass inputs.
+    #[test]
+    fn same_inputs_as_non_blocked() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let nb = super::super::generate_non_blocked(&d);
+        let b = generate_blocked(&d);
+        let set = |l: &Lut| -> BTreeSet<usize> { l.passes.iter().map(|p| p.input).collect() };
+        assert_eq!(set(&nb), set(&b));
+    }
+
+    /// Table IX initial grpLvl values, verbatim from the paper:
+    /// level 1: g5:1 g7:1 g8:2 g10:2 g11:1 g19:1; level 2: g5:5 g6:1 g8:1
+    /// g10:1; level 3: g8:2 g10:1; level 4: g7:1 g11:1.
+    #[test]
+    fn initial_grplvl_matches_table_ix() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let (_, trace) = generate_blocked_traced(&d);
+        let initial: BTreeSet<(u32, usize, usize)> =
+            trace[0].entries.iter().copied().collect();
+        let expect: BTreeSet<(u32, usize, usize)> = [
+            (1, 5, 1), (1, 7, 1), (1, 8, 2), (1, 10, 2), (1, 11, 1), (1, 19, 1),
+            (2, 5, 5), (2, 6, 1), (2, 8, 1), (2, 10, 1),
+            (3, 8, 2), (3, 10, 1),
+            (4, 7, 1), (4, 11, 1),
+        ]
+        .into_iter()
+        .collect();
+        assert_eq!(initial, expect);
+        // first chosen group is 19, without splitting (Table IX caption)
+        assert_eq!(trace[1].chosen, Some(19));
+        assert!(!trace[1].split);
+        // second block requires the split of group 5 (Supp. Table 1)
+        assert_eq!(trace[2].chosen, Some(5));
+        assert!(trace[2].split);
+    }
+
+    /// Binary adder: 4 passes; blocking still helps (2 distinct write
+    /// actions of Table VI: W10 {001-group} … verify groups < passes).
+    #[test]
+    fn binary_adder_blocked_groups() {
+        let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+        let lut = generate_blocked(&d);
+        assert_eq!(lut.passes.len(), 4);
+        // Write actions: 001→W10, 011→W01, 100→W10, 110→W01 → but grouping
+        // also respects ordering constraints, so num_groups ∈ [2, 4].
+        assert!(lut.num_groups >= 2 && lut.num_groups <= 4, "{}", lut.num_groups);
+        for block in lut.blocks() {
+            let first = lut.write_of(block[0]);
+            for p in &block[1..] {
+                assert_eq!(lut.write_of(p), first);
+            }
+        }
+    }
+}

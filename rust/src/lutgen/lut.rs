@@ -1,0 +1,154 @@
+//! The [`Lut`] produced by either generation algorithm: an ordered list of
+//! (compare key → write action) passes, grouped into write blocks.
+
+use crate::diagram::StateDiagram;
+use crate::mvl::Radix;
+
+/// One LUT pass: compare the full input vector, write the trailing
+/// `write_dim` digits of `output` into matching rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pass {
+    /// Input state id — the compare key (all `arity` digit columns masked).
+    pub input: usize,
+    /// Output state id. The written digits are the trailing `write_dim`
+    /// digits; leading digits are unchanged in the array unless
+    /// `write_dim == arity` (a widened, cycle-breaking write).
+    pub output: usize,
+    /// Number of trailing digits written.
+    pub write_dim: usize,
+    /// Block index (0-based). Non-blocked LUTs have one block per pass.
+    pub group: usize,
+}
+
+/// A generated look-up table for one digit-wise function.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// Function name (from the truth table).
+    pub name: String,
+    /// Radix of the digits.
+    pub radix: Radix,
+    /// State width (number of compared columns).
+    pub arity: usize,
+    /// First in-place-written digit index of the *function* (individual
+    /// passes may write more via `write_dim`).
+    pub write_start: usize,
+    /// Ordered passes.
+    pub passes: Vec<Pass>,
+    /// Number of write blocks (== passes.len() for non-blocked).
+    pub num_groups: usize,
+    /// noAction state ids (no pass needed).
+    pub no_action: Vec<usize>,
+}
+
+impl Lut {
+    /// Decode a state id to big-endian digits (convenience mirror of the
+    /// truth table's codec, so a `Lut` is self-contained for execution).
+    pub fn decode(&self, id: usize) -> Vec<u8> {
+        let n = self.radix.n() as usize;
+        let mut v = vec![0u8; self.arity];
+        let mut x = id;
+        for slot in v.iter_mut().rev() {
+            *slot = (x % n) as u8;
+            x /= n;
+        }
+        v
+    }
+
+    /// Encode big-endian digits to a state id.
+    pub fn encode(&self, digits: &[u8]) -> usize {
+        let n = self.radix.n() as usize;
+        digits.iter().fold(0usize, |acc, &d| acc * n + d as usize)
+    }
+
+    /// The write action of a pass: (column offset of first written digit,
+    /// digits to write).
+    pub fn write_of(&self, pass: &Pass) -> (usize, Vec<u8>) {
+        let out = self.decode(pass.output);
+        let start = self.arity - pass.write_dim;
+        (start, out[start..].to_vec())
+    }
+
+    /// Group the passes into their write blocks, in block order.
+    pub fn blocks(&self) -> Vec<Vec<&Pass>> {
+        let mut blocks: Vec<Vec<&Pass>> = vec![Vec::new(); self.num_groups];
+        for p in &self.passes {
+            blocks[p.group].push(p);
+        }
+        blocks
+    }
+
+    /// Total compare cycles for one digit-wise application (== #passes).
+    pub fn compare_cycles(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Total write cycles: one per pass (non-blocked) or one per group
+    /// (blocked). Both are derivable because `num_groups` distinguishes
+    /// the two ("irrespective of whether a match occurs or not, we account
+    /// for the write cycle", §VI-C).
+    pub fn write_cycles(&self) -> usize {
+        self.num_groups
+    }
+
+    /// Construct a `Lut` skeleton from a diagram (shared by generators).
+    pub(crate) fn skeleton(d: &StateDiagram) -> Lut {
+        let t = d.table();
+        Lut {
+            name: t.name().to_string(),
+            radix: t.radix(),
+            arity: t.arity(),
+            write_start: t.write_start(),
+            passes: Vec::new(),
+            num_groups: 0,
+            no_action: d.roots().to_vec(),
+        }
+    }
+
+    /// Render one pass as "input -> output (Wxyz)" for reports.
+    pub fn fmt_pass(&self, p: &Pass) -> String {
+        let (_, w) = self.write_of(p);
+        let ws: String = w.iter().map(|d| char::from(b'0' + d)).collect();
+        format!(
+            "{} -> {} (W{})",
+            self.fmt_state(p.input),
+            self.fmt_state(p.output),
+            ws
+        )
+    }
+
+    /// Render a state id as digits.
+    pub fn fmt_state(&self, id: usize) -> String {
+        self.decode(id).iter().map(|d| char::from(b'0' + d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::StateDiagram;
+    use crate::func::full_add;
+    use crate::mvl::Radix;
+
+    #[test]
+    fn codec_roundtrip() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = Lut::skeleton(&d);
+        for id in 0..27 {
+            assert_eq!(lut.encode(&lut.decode(id)), id);
+        }
+    }
+
+    #[test]
+    fn write_of_widened_pass() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = Lut::skeleton(&d);
+        let p = Pass { input: 10, output: 6, write_dim: 3, group: 0 };
+        let (start, w) = lut.write_of(&p);
+        assert_eq!(start, 0);
+        assert_eq!(w, vec![0, 2, 0]);
+        let q = Pass { input: 15, output: 10, write_dim: 2, group: 0 };
+        let (start, w) = lut.write_of(&q);
+        assert_eq!(start, 1);
+        assert_eq!(w, vec![0, 1]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Automatic LUT generation (§IV-B, §V).
+//!
+//! Two generators over a cycle-free [`crate::diagram::StateDiagram`]:
+//!
+//! * [`non_blocked`] — Algorithm 1: depth-first preorder traversal of each
+//!   tree; every pass is a compare immediately followed by a write.
+//! * [`blocked`] — Algorithms 2–4: breadth-first grouping via the `grpLvl`
+//!   table; passes sharing a write action are *blocked* so the (expensive)
+//!   write is issued once per group.
+//!
+//! Both produce a [`Lut`], and both are checked by [`validate`]: replaying
+//! the pass sequence over **every** possible stored state must yield the
+//! truth table's written digits (the §IV-A pass-order properties).
+
+pub mod lut;
+pub mod non_blocked;
+pub mod blocked;
+pub mod validate;
+
+pub use blocked::{generate_blocked, generate_blocked_traced, GrpLvlSnapshot};
+pub use lut::{Lut, Pass};
+pub use non_blocked::generate_non_blocked;
+pub use validate::validate_lut;

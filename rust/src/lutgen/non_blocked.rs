@@ -1,0 +1,134 @@
+//! Algorithm 1 — the *non-blocked* pass ordering.
+//!
+//! Trees of the (cycle-free) state diagram are visited root by root; within
+//! a tree, passes are assigned in **depth-first preorder** starting from the
+//! root's children (roots are noAction states and get no pass). Visiting a
+//! parent before its children realises the §IV-A ordering property: by the
+//! time a state x is compared, every state on the path from x to its root
+//! has already been processed, so no later pass can overwrite x's output.
+//!
+//! Tree order and sibling order are semantically arbitrary (the paper picks
+//! a right-to-left drawing order in Fig. 5); we use ascending state id for
+//! determinism, and [`super::validate`] proves any such order sound.
+
+use super::lut::{Lut, Pass};
+use crate::diagram::StateDiagram;
+
+/// Generate the non-blocked LUT. Each pass is its own write block.
+pub fn generate_non_blocked(d: &StateDiagram) -> Lut {
+    let mut lut = Lut::skeleton(d);
+    for &root in d.roots() {
+        // preorder DFS below the root
+        let mut stack: Vec<usize> = d.node(root).children.iter().rev().copied().collect();
+        while let Some(id) = stack.pop() {
+            let node = d.node(id);
+            let group = lut.passes.len();
+            lut.passes.push(Pass {
+                input: id,
+                output: node.next,
+                write_dim: node.write_dim,
+                group,
+            });
+            for &c in node.children.iter().rev() {
+                stack.push(c);
+            }
+        }
+    }
+    lut.num_groups = lut.passes.len();
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::StateDiagram;
+    use crate::func::{full_add, full_sub, logic2, mac_digit, Logic2};
+    use crate::mvl::Radix;
+
+    #[test]
+    fn binary_adder_four_passes() {
+        // Table VI: exactly 4 action passes (001, 011, 100, 110).
+        let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        assert_eq!(lut.passes.len(), 4);
+        let mut inputs: Vec<String> =
+            lut.passes.iter().map(|p| lut.fmt_state(p.input)).collect();
+        inputs.sort();
+        assert_eq!(inputs, vec!["001", "011", "100", "110"]);
+    }
+
+    #[test]
+    fn binary_adder_parent_before_child() {
+        // The Fig. 4 constraint: 110 (child of 101-root) before 100
+        // (child of 110); 011 after 001's subtree is irrelevant, but the
+        // general parent-first property must hold.
+        let d = StateDiagram::build(full_add(Radix::BINARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        let pos = |s: &str| {
+            lut.passes
+                .iter()
+                .position(|p| lut.fmt_state(p.input) == s)
+                .unwrap()
+        };
+        assert!(pos("110") < pos("100"), "110 must be processed before 100");
+    }
+
+    #[test]
+    fn tfa_has_21_passes_and_one_widened() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        assert_eq!(lut.passes.len(), 21); // Table VII
+        assert_eq!(lut.num_groups, 21);
+        let widened: Vec<&Pass> =
+            lut.passes.iter().filter(|p| p.write_dim == 3).collect();
+        assert_eq!(widened.len(), 1);
+        assert_eq!(lut.fmt_state(widened[0].input), "101");
+        assert_eq!(lut.fmt_state(widened[0].output), "020");
+    }
+
+    #[test]
+    fn preorder_property_holds_everywhere() {
+        // For every function/radix: a node's pass index is greater than its
+        // parent's (when the parent is an action state).
+        for radix in [Radix(2), Radix(3), Radix(4)] {
+            for table in [
+                full_add(radix),
+                full_sub(radix),
+                mac_digit(radix),
+                logic2(Logic2::Xor, radix),
+            ] {
+                let d = StateDiagram::build(table).unwrap();
+                let lut = generate_non_blocked(&d);
+                let pass_of: std::collections::HashMap<usize, usize> = lut
+                    .passes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (p.input, i))
+                    .collect();
+                for p in &lut.passes {
+                    let parent = d.node(p.input).next;
+                    if !d.node(parent).no_action {
+                        assert!(
+                            pass_of[&parent] < pass_of[&p.input],
+                            "{}: parent {} not before {}",
+                            lut.name,
+                            lut.fmt_state(parent),
+                            lut.fmt_state(p.input)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_action_state_exactly_once() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        let mut seen = std::collections::HashSet::new();
+        for p in &lut.passes {
+            assert!(seen.insert(p.input), "duplicate pass for {}", p.input);
+        }
+        assert_eq!(seen.len() + lut.no_action.len(), 27);
+    }
+}

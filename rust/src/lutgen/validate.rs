@@ -1,0 +1,234 @@
+//! LUT soundness checker: the executable form of the §IV-A ordering
+//! properties.
+//!
+//! A LUT is *sound* for in-place operation iff replaying its pass sequence
+//! over **every** possible stored state yields exactly the function's
+//! written digits — i.e. each row is rewritten at most once, and rows
+//! already rewritten are never matched by a later pass (no "domino
+//! effect"). Kept digits may legitimately change only through widened
+//! (cycle-breaking) writes.
+
+use super::lut::Lut;
+use crate::func::TruthTable;
+
+/// Replay semantics for validation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Replay {
+    /// Compare, then write immediately (non-blocked hardware).
+    Immediate,
+    /// Writes deferred to the end of each block (blocked hardware with the
+    /// per-row D-FF of §V).
+    Deferred,
+}
+
+/// Errors found by validation.
+#[derive(Debug)]
+pub struct Violation {
+    pub initial_state: usize,
+    pub final_state: usize,
+    pub expected_written: Vec<u8>,
+    pub got_written: Vec<u8>,
+    pub applications: usize,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "state {}: expected written {:?}, got {:?} ({} applications)",
+            self.initial_state, self.expected_written, self.got_written, self.applications
+        )
+    }
+}
+
+/// Replay `lut` over one stored state; returns (final state, #writes that
+/// hit this row).
+pub fn replay_state(lut: &Lut, initial: usize, mode: Replay) -> (usize, usize) {
+    let mut current = lut.decode(initial);
+    let mut applications = 0usize;
+    match mode {
+        Replay::Immediate => {
+            for p in &lut.passes {
+                if lut.encode(&current) == p.input {
+                    let (start, w) = lut.write_of(p);
+                    current[start..].copy_from_slice(&w);
+                    applications += 1;
+                }
+            }
+        }
+        Replay::Deferred => {
+            for block in lut.blocks() {
+                // Within a block the row state is frozen; a match on any
+                // pass arms the write-enable flip-flop.
+                let id = lut.encode(&current);
+                let hit = block.iter().find(|p| p.input == id);
+                if let Some(p) = hit {
+                    let (start, w) = lut.write_of(p);
+                    current[start..].copy_from_slice(&w);
+                    applications += 1;
+                }
+            }
+        }
+    }
+    (lut.encode(&current), applications)
+}
+
+/// Validate `lut` against its truth table under both replay modes.
+/// Returns all violations (empty = sound).
+pub fn validate_lut(lut: &Lut, table: &TruthTable) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let written = |id: usize| -> Vec<u8> {
+        table.decode(id)[table.write_start()..].to_vec()
+    };
+    for mode in [Replay::Immediate, Replay::Deferred] {
+        for s0 in 0..table.num_states() {
+            let (fin, apps) = replay_state(lut, s0, mode);
+            let expect = written(table.output_of(s0));
+            let got = written(fin);
+            // Each state must be transformed by exactly one write (action
+            // states) or none (noAction states), and the written digits
+            // must match the single-application function output.
+            let want_apps = usize::from(!table.is_no_action(s0));
+            if got != expect || apps != want_apps {
+                violations.push(Violation {
+                    initial_state: s0,
+                    final_state: fin,
+                    expected_written: expect,
+                    got_written: got,
+                    applications: apps,
+                });
+            }
+        }
+    }
+    violations
+}
+
+/// Convenience: panic with a readable report if unsound.
+pub fn assert_sound(lut: &Lut, table: &TruthTable) {
+    let v = validate_lut(lut, table);
+    assert!(
+        v.is_empty(),
+        "{}: LUT unsound — first violation: {} (of {})",
+        lut.name,
+        v[0],
+        v.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::StateDiagram;
+    use crate::func::{full_add, full_sub, half_add, logic2, mac_digit, Logic2};
+    use crate::lutgen::{generate_blocked, generate_non_blocked};
+    use crate::mvl::Radix;
+
+    /// The central correctness result: both generators are sound for the
+    /// whole function zoo across radices 2–5.
+    #[test]
+    fn generators_sound_for_function_zoo() {
+        for n in 2..=5u8 {
+            let radix = Radix(n);
+            for table in [
+                full_add(radix),
+                full_sub(radix),
+                half_add(radix),
+                mac_digit(radix),
+                logic2(Logic2::And, radix),
+                logic2(Logic2::Or, radix),
+                logic2(Logic2::Nor, radix),
+                logic2(Logic2::Xor, radix),
+                logic2(Logic2::AbsDiff, radix),
+            ] {
+                let d = StateDiagram::build(table).unwrap();
+                let nb = generate_non_blocked(&d);
+                assert_sound(&nb, d.table());
+                let b = generate_blocked(&d);
+                assert_sound(&b, d.table());
+            }
+        }
+    }
+
+    /// A deliberately wrong ordering (paper §IV-A: exchanging passes 1 and 2
+    /// of the binary adder causes the domino effect) must be caught.
+    #[test]
+    fn detects_domino_effect() {
+        let table = full_add(Radix::BINARY);
+        let d = StateDiagram::build(table).unwrap();
+        let mut lut = generate_non_blocked(&d);
+        // Find the passes for 110 and 100 and swap them: now 100→110 runs
+        // first, and the later 110→101 pass re-matches the rewritten row.
+        let i110 = lut.passes.iter().position(|p| lut.fmt_state(p.input) == "110").unwrap();
+        let i100 = lut.passes.iter().position(|p| lut.fmt_state(p.input) == "100").unwrap();
+        lut.passes.swap(i110, i100);
+        let v = validate_lut(&lut, d.table());
+        assert!(!v.is_empty(), "swapped LUT must be unsound");
+        // And specifically state 100 double-applies.
+        let bad = v
+            .iter()
+            .find(|vi| d.table().fmt_state(vi.initial_state) == "100")
+            .expect("100 should be a violation");
+        assert_eq!(bad.applications, 2);
+    }
+
+    /// Reversing the full pass list of the TFA must be unsound too.
+    #[test]
+    fn reversed_tfa_lut_is_unsound() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let mut lut = generate_non_blocked(&d);
+        lut.passes.reverse();
+        // group ids no longer ascending but Immediate replay ignores them
+        let v: Vec<_> = validate_lut(&lut, d.table());
+        assert!(!v.is_empty());
+    }
+
+    /// Random pass-order property: shuffled orders are only sound when they
+    /// respect the parent-first partial order (checked on the binary adder
+    /// where all 24 permutations can be enumerated).
+    #[test]
+    fn exhaustive_binary_permutations() {
+        let table = full_add(Radix::BINARY);
+        let d = StateDiagram::build(table).unwrap();
+        let base = generate_non_blocked(&d);
+        let idx = [0usize, 1, 2, 3];
+        let mut perms = Vec::new();
+        permute(&idx, &mut vec![], &mut perms);
+        let pos_in =
+            |perm: &[usize], want: usize| perm.iter().position(|&i| i == want).unwrap();
+        // dependency: the pass whose input is a child must come after its
+        // parent's pass.
+        let pass_idx = |s: &str| {
+            base.passes
+                .iter()
+                .position(|p| base.fmt_state(p.input) == s)
+                .unwrap()
+        };
+        let deps = [(pass_idx("110"), pass_idx("100")), (pass_idx("001"), pass_idx("011"))];
+        for perm in perms {
+            let mut lut = base.clone();
+            lut.passes = perm.iter().map(|&i| base.passes[i].clone()).collect();
+            for (gi, p) in lut.passes.iter_mut().enumerate() {
+                p.group = gi;
+            }
+            let sound = validate_lut(&lut, d.table()).is_empty();
+            let respects = deps
+                .iter()
+                .all(|&(parent, child)| pos_in(&perm, parent) < pos_in(&perm, child));
+            assert_eq!(sound, respects, "perm {perm:?}");
+        }
+    }
+
+    fn permute(rest: &[usize], acc: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if rest.is_empty() {
+            out.push(acc.clone());
+            return;
+        }
+        for (i, &x) in rest.iter().enumerate() {
+            let mut r = rest.to_vec();
+            r.remove(i);
+            acc.push(x);
+            permute(&r, acc, out);
+            acc.pop();
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! `mvap` — CLI for the in-memory multi-valued associative processor.
+//!
+//! Subcommands:
+//!   exp <id|all>      regenerate a paper table/figure (results/ CSVs)
+//!   lut <fn>          generate + print a LUT (add|sub|mac, any radix)
+//!   run               run a vector workload through the engine service
+//!   artifacts         list the AOT artifact registry
+//!   sweep             circuit design-space exploration summary
+
+use mvap::coordinator::{BackendKind, EngineService, Job, OpKind};
+use mvap::diagram::{dot, StateDiagram};
+use mvap::exp::run_experiment;
+use mvap::func::{full_add, full_sub, mac_digit};
+use mvap::lutgen::{generate_blocked, generate_non_blocked, validate_lut};
+use mvap::mvl::{Radix, Word};
+use mvap::runtime::Registry;
+use mvap::util::cli::Args;
+use mvap::util::Rng;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+mvap — in-memory multi-valued associative processor
+
+USAGE:
+  mvap exp <table6|table7|table9|table10|table11|fig6|fig7|fig8|fig9|all>
+           [--rows N] [--seed S] [--scheme traditional|optimized] [--results DIR]
+  mvap lut <add|sub|mac> [--radix N] [--blocked] [--dot]
+  mvap run [--op add|sub|mac] [--rows N] [--digits P] [--radix N]
+           [--backend native|pjrt] [--workers W] [--jobs J] [--blocked]
+           [--artifacts DIR] [--seed S]
+  mvap artifacts [--artifacts DIR]
+  mvap help
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("exp") => cmd_exp(&args),
+        Some("lut") => cmd_lut(&args),
+        Some("run") => cmd_run(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("exp: missing experiment id"))?
+        .clone();
+    let results = PathBuf::from(args.get_or("results", "results"));
+    run_experiment(&id, args, &results)
+}
+
+fn cmd_lut(args: &Args) -> anyhow::Result<()> {
+    let func = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("lut: missing function (add|sub|mac)"))?
+        .clone();
+    let radix = Radix(args.get_parse_or("radix", 3u8));
+    let blocked = args.flag("blocked");
+    let want_dot = args.flag("dot");
+    args.reject_unknown();
+    let table = match func.as_str() {
+        "add" => full_add(radix),
+        "sub" => full_sub(radix),
+        "mac" => mac_digit(radix),
+        other => anyhow::bail!("unknown function '{other}'"),
+    };
+    let d = StateDiagram::build(table)?;
+    if want_dot {
+        print!("{}", dot::to_dot(&d));
+        return Ok(());
+    }
+    let lut = if blocked { generate_blocked(&d) } else { generate_non_blocked(&d) };
+    let violations = validate_lut(&lut, d.table());
+    println!(
+        "{} — {} passes, {} write blocks, {} noAction states, {} cycle rewrites, soundness: {}",
+        lut.name,
+        lut.passes.len(),
+        lut.num_groups,
+        lut.no_action.len(),
+        d.rewrites().len(),
+        if violations.is_empty() { "OK" } else { "VIOLATED" }
+    );
+    for (i, p) in lut.passes.iter().enumerate() {
+        println!("  pass {:>2} (block {:>2}): {}", i + 1, p.group + 1, lut.fmt_pass(p));
+    }
+    anyhow::ensure!(violations.is_empty(), "generated LUT failed validation");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let op = match args.get_or("op", "add").as_str() {
+        "add" => OpKind::Add,
+        "sub" => OpKind::Sub,
+        "mac" => OpKind::Mac,
+        other => anyhow::bail!("unknown op '{other}'"),
+    };
+    let rows = args.get_parse_or("rows", 1024usize);
+    let digits = args.get_parse_or("digits", 20usize);
+    let radix = Radix(args.get_parse_or("radix", 3u8));
+    let backend: BackendKind = args.get_or("backend", "native").parse().map_err(anyhow::Error::msg)?;
+    let workers = args.get_parse_or("workers", 2usize);
+    let jobs = args.get_parse_or("jobs", 4usize);
+    let blocked = args.flag("blocked") || !args.flag("non-blocked");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let seed = args.get_parse_or("seed", 7u64);
+    args.reject_unknown();
+
+    let svc = EngineService::start_kind(workers, jobs.max(2), backend, artifacts)?;
+    let mut rng = Rng::new(seed);
+    let started = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    for id in 0..jobs as u64 {
+        let a: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+            .collect();
+        let b: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+            .collect();
+        receivers.push(svc.submit(Job::new(id, op, radix, blocked, a, b)));
+    }
+    for rx in receivers {
+        let res = rx.recv().expect("worker died")?;
+        println!(
+            "job {:>2}: {} rows × {} digits — energy {:.3e} J, delay {} cycles, {} tiles, {:?}",
+            res.id,
+            res.values.len(),
+            digits,
+            res.energy.total(),
+            res.delay_cycles,
+            res.tiles,
+            res.elapsed
+        );
+    }
+    let wall = started.elapsed();
+    let metrics = svc.shutdown();
+    println!("—— {}", metrics.summary());
+    println!(
+        "—— wall {:?} ({:.0} rows/s end-to-end)",
+        wall,
+        metrics.rows as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown();
+    let reg = Registry::load(&dir)?;
+    println!("{} artifacts in {}:", reg.all().len(), dir.display());
+    for a in reg.all() {
+        println!(
+            "  {:<34} fn={:<4} radix={} rows={:<5} digits={:<3} passes={} groups={}",
+            a.name, a.func, a.radix, a.rows, a.digits, a.passes, a.groups
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Search-key n-ary decoder (§II-B, Table II; ternary circuit of Fig. 3).
+//!
+//! The decoder maps a (mask, key) pair to the signal vector
+//! `(S_{n-1}, …, S_1, S_0)` driving the cell transistors:
+//!
+//! * mask = 0 (column inactive) → all signals 0 (no transistor conducts,
+//!   the cell contributes no discharge path → unconditional match);
+//! * mask = n-1 (column active), key = j → `S_j = 0`, all others = n-1.
+//!
+//! The logic is *inverting*: the searched-for position is the one driven
+//! low. Two implementations are provided: a behavioural one for arbitrary
+//! radix (the "successive-approximation ADC" route in the paper) and the
+//! gate-level ternary circuit of Fig. 3 (Eqs. 1a–1c), which the tests prove
+//! equivalent on the ternary domain.
+
+use super::gates::{binv2, nti, pti, tand, tor};
+use super::nit::{Radix, DONT_CARE};
+
+/// Decoded signal vector, index i = S_i, values in logic levels {0, n-1}.
+pub type Signals = Vec<u8>;
+
+/// Behavioural decoder for arbitrary radix (Table II).
+pub fn decode(radix: Radix, mask_active: bool, key: u8) -> Signals {
+    let n = radix.n();
+    if !mask_active || key == DONT_CARE {
+        return vec![0; n as usize];
+    }
+    assert!(key < n, "key {key} invalid for radix {n}");
+    (0..n).map(|i| if i == key { 0 } else { n - 1 }).collect()
+}
+
+/// Gate-level ternary decoder (Fig. 3 / Eqs. 1a–1c):
+///
+/// ```text
+/// S2 = Mask · PTI(Key)
+/// S1 = Mask · (NTI(Key) + ~PTI(Key))
+/// S0 = Mask · ~NTI(Key)
+/// ```
+///
+/// `mask` is a binary rail (0 or 2), `key` a trit.
+pub fn decode_ternary_gates(mask: u8, key: u8) -> [u8; 3] {
+    debug_assert!(mask == 0 || mask == 2, "mask is a binary {{0,2}} rail");
+    debug_assert!(key <= 2);
+    let p = pti(key); // {0,2} rail
+    let nt = nti(key); // {0,2} rail
+    let s2 = tand(mask, p); // Eq. (1a)
+    let s1 = tand(mask, tor(nt, binv2(p))); // Eq. (1b)
+    let s0 = tand(mask, binv2(nt)); // Eq. (1c)
+    [s2, s1, s0]
+}
+
+/// Convenience: decode a full (key, mask) register pair into per-column
+/// signal vectors. `keys[i]` may be [`DONT_CARE`]; `masks[i]` is a boolean
+/// column-activation.
+pub fn decode_registers(radix: Radix, keys: &[u8], masks: &[bool]) -> Vec<Signals> {
+    assert_eq!(keys.len(), masks.len());
+    keys.iter()
+        .zip(masks)
+        .map(|(&k, &m)| decode(radix, m, k))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II for ternary: masked → all-zero; key j → S_j = 0, rest 2.
+    #[test]
+    fn table_ii_ternary() {
+        let r = Radix::TERNARY;
+        assert_eq!(decode(r, false, 0), vec![0, 0, 0]);
+        assert_eq!(decode(r, true, 0), vec![0, 2, 2]); // index 0 = S_0
+        assert_eq!(decode(r, true, 1), vec![2, 0, 2]);
+        assert_eq!(decode(r, true, 2), vec![2, 2, 0]);
+    }
+
+    /// Fig. 3 truth table: (S2,S1,S0) = (2,2,0) for key 0, (2,0,2) for 1,
+    /// (0,2,2) for 2, (0,0,0) when masked.
+    #[test]
+    fn fig3_gate_level() {
+        assert_eq!(decode_ternary_gates(0, 0), [0, 0, 0]);
+        assert_eq!(decode_ternary_gates(0, 1), [0, 0, 0]);
+        assert_eq!(decode_ternary_gates(2, 0), [2, 2, 0]);
+        assert_eq!(decode_ternary_gates(2, 1), [2, 0, 2]);
+        assert_eq!(decode_ternary_gates(2, 2), [0, 2, 2]);
+    }
+
+    /// The gate-level circuit equals the behavioural decoder on ternary.
+    #[test]
+    fn gate_level_matches_behavioural() {
+        let r = Radix::TERNARY;
+        for key in 0..3u8 {
+            for mask in [false, true] {
+                let beh = decode(r, mask, key);
+                let gat = decode_ternary_gates(if mask { 2 } else { 0 }, key);
+                // behavioural is indexed S_0..S_2; gates return [S2,S1,S0]
+                assert_eq!(beh[2], gat[0], "S2 key={key} mask={mask}");
+                assert_eq!(beh[1], gat[1], "S1 key={key} mask={mask}");
+                assert_eq!(beh[0], gat[2], "S0 key={key} mask={mask}");
+            }
+        }
+    }
+
+    /// Exactly one low signal when active, for every radix.
+    #[test]
+    fn one_hot_low_property() {
+        for n in 2..8u8 {
+            let r = Radix(n);
+            for key in 0..n {
+                let s = decode(r, true, key);
+                assert_eq!(s.iter().filter(|&&v| v == 0).count(), 1);
+                assert_eq!(s[key as usize], 0);
+                assert!(s.iter().all(|&v| v == 0 || v == n - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn dont_care_key_decodes_inactive() {
+        assert_eq!(decode(Radix::TERNARY, true, DONT_CARE), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn register_decode_shapes() {
+        let r = Radix::TERNARY;
+        let sigs = decode_registers(r, &[0, 1, 2], &[true, false, true]);
+        assert_eq!(sigs.len(), 3);
+        assert_eq!(sigs[1], vec![0, 0, 0]);
+        assert_eq!(sigs[2], vec![2, 2, 0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Ternary logic gates (Table IV) and generic MVL gate helpers.
+//!
+//! The paper's ternary decoder (Fig. 3) is built from the *standard*,
+//! *positive* and *negative* ternary inverters (STI/PTI/NTI) plus
+//! conventional binary gates; those primitives live here, the decoder
+//! itself in [`crate::mvl::decoder`].
+
+/// Standard ternary inverter: `STI(x) = 2 - x` (Table IV).
+#[inline]
+pub fn sti(x: u8) -> u8 {
+    debug_assert!(x <= 2);
+    2 - x
+}
+
+/// Positive ternary inverter: `PTI(0)=2, PTI(1)=2, PTI(2)=0` (Table IV).
+#[inline]
+pub fn pti(x: u8) -> u8 {
+    debug_assert!(x <= 2);
+    if x <= 1 { 2 } else { 0 }
+}
+
+/// Negative ternary inverter: `NTI(0)=2, NTI(1)=0, NTI(2)=0` (Table IV).
+#[inline]
+pub fn nti(x: u8) -> u8 {
+    debug_assert!(x <= 2);
+    if x == 0 { 2 } else { 0 }
+}
+
+/// Ternary AND = min (used when composing MVL gates; the paper's decoder
+/// uses a *binary* AND on already-binary {0,2} signals, which coincides
+/// with min on that domain).
+#[inline]
+pub fn tand(a: u8, b: u8) -> u8 {
+    a.min(b)
+}
+
+/// Ternary OR = max.
+#[inline]
+pub fn tor(a: u8, b: u8) -> u8 {
+    a.max(b)
+}
+
+/// Binary inverter on the {0,2} two-rail domain the decoder operates in
+/// after the PTI/NTI stages ("conventional binary gates" in Fig. 3).
+#[inline]
+pub fn binv2(x: u8) -> u8 {
+    debug_assert!(x == 0 || x == 2, "binv2 on non-binary rail {x}");
+    2 - x
+}
+
+/// Generalised MVL inverter for radix n: `x ↦ (n-1) - x`.
+#[inline]
+pub fn mv_inv(x: u8, n: u8) -> u8 {
+    debug_assert!(x < n);
+    (n - 1) - x
+}
+
+/// Generalised "window literal" gate: outputs n-1 when `lo <= x <= hi`
+/// else 0. PTI and NTI are the windows [0,1] and [0,0] composed with
+/// inversion; window literals are the standard building block for MVL
+/// decoders at arbitrary radix (§II-B's successive-approximation remark).
+#[inline]
+pub fn window(x: u8, lo: u8, hi: u8, n: u8) -> u8 {
+    debug_assert!(x < n);
+    if x >= lo && x <= hi { n - 1 } else { 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table IV, verbatim.
+    #[test]
+    fn table_iv_truth_tables() {
+        assert_eq!([sti(0), sti(1), sti(2)], [2, 1, 0]);
+        assert_eq!([pti(0), pti(1), pti(2)], [2, 2, 0]);
+        assert_eq!([nti(0), nti(1), nti(2)], [2, 0, 0]);
+    }
+
+    #[test]
+    fn min_max_gates() {
+        assert_eq!(tand(1, 2), 1);
+        assert_eq!(tor(1, 2), 2);
+        for a in 0..3u8 {
+            for b in 0..3u8 {
+                // De Morgan with STI on the min/max algebra
+                assert_eq!(sti(tand(a, b)), tor(sti(a), sti(b)));
+                assert_eq!(sti(tor(a, b)), tand(sti(a), sti(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn window_generalises_ternary_inverters() {
+        for x in 0..3u8 {
+            assert_eq!(window(x, 0, 1, 3), pti(x));
+            assert_eq!(window(x, 0, 0, 3), nti(x));
+        }
+    }
+
+    #[test]
+    fn mv_inv_involution() {
+        for n in 2..6u8 {
+            for x in 0..n {
+                assert_eq!(mv_inv(mv_inv(x, n), n), x);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Multi-valued logic (MVL) primitives — §II of the paper.
+//!
+//! Radix-n ("n-ary") digits are called *nits*; radix-3 digits are *trits*.
+//! The paper uses the **unbalanced** representation: logic value
+//! `i ∈ [0, n-1]` is realised with voltage `i·V_DD/(n-1)`.
+
+pub mod nit;
+pub mod gates;
+pub mod words;
+pub mod decoder;
+
+pub use nit::{Nit, Radix, DONT_CARE};
+pub use words::Word;

@@ -1,0 +1,153 @@
+//! The `Nit` digit type and radix descriptor.
+
+/// Sentinel digit value for the "don't care" state ('X' in the paper).
+/// Stored in a CAM cell as *all* memristors in R_HRS (Table I); as a search
+/// key it matches every stored value (mask = 0 semantics are handled at the
+/// register level, but `DONT_CARE` keys are also supported directly).
+pub const DONT_CARE: u8 = u8::MAX;
+
+/// A radix descriptor: the number of logic levels `n >= 2`.
+///
+/// Voltage realisation (unbalanced): level `i` ↦ `i * V_DD / (n-1)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Radix(pub u8);
+
+impl Radix {
+    pub const BINARY: Radix = Radix(2);
+    pub const TERNARY: Radix = Radix(3);
+
+    /// Number of levels.
+    #[inline]
+    pub fn n(self) -> u8 {
+        self.0
+    }
+
+    /// All digit values `0..n`.
+    pub fn digits(self) -> impl Iterator<Item = u8> {
+        0..self.0
+    }
+
+    /// Is `d` a valid digit (or don't-care)?
+    #[inline]
+    pub fn valid(self, d: u8) -> bool {
+        d < self.0 || d == DONT_CARE
+    }
+
+    /// Voltage level of digit `d` for supply `vdd` (unbalanced system).
+    pub fn voltage(self, d: u8, vdd: f64) -> f64 {
+        assert!(d < self.0, "voltage of invalid digit {d}");
+        vdd * d as f64 / (self.0 - 1) as f64
+    }
+
+    /// Number of digits needed to represent values `< 2^bits`, i.e. the
+    /// "equivalent width" used by the paper's binary-vs-ternary comparison
+    /// (e.g. 32-bit ≈ 20-trit: ceil(32·ln2/ln3) = 21 — the paper pairs
+    /// 32b with 20t, see [`crate::exp::table11`] for the exact pairing).
+    pub fn digits_for_bits(self, bits: u32) -> u32 {
+        ((bits as f64) * (2f64).ln() / (self.0 as f64).ln()).ceil() as u32
+    }
+}
+
+/// A single n-valued digit paired with its radix. Most hot-path code uses
+/// raw `u8` digits for compactness; `Nit` is the typed, validated wrapper
+/// used at API boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Nit {
+    value: u8,
+    radix: Radix,
+}
+
+impl Nit {
+    /// Construct a validated digit.
+    pub fn new(value: u8, radix: Radix) -> Self {
+        assert!(radix.valid(value), "digit {value} invalid for radix {}", radix.n());
+        Nit { value, radix }
+    }
+
+    /// The don't-care digit.
+    pub fn dont_care(radix: Radix) -> Self {
+        Nit { value: DONT_CARE, radix }
+    }
+
+    /// Raw value (or [`DONT_CARE`]).
+    #[inline]
+    pub fn value(self) -> u8 {
+        self.value
+    }
+
+    /// Radix.
+    #[inline]
+    pub fn radix(self) -> Radix {
+        self.radix
+    }
+
+    /// Is this the don't-care digit?
+    #[inline]
+    pub fn is_dont_care(self) -> bool {
+        self.value == DONT_CARE
+    }
+
+    /// Digit-wise match semantics of the CAM (Table III): don't-care on
+    /// either side matches; otherwise exact equality.
+    pub fn matches(self, other: Nit) -> bool {
+        debug_assert_eq!(self.radix, other.radix);
+        self.is_dont_care() || other.is_dont_care() || self.value == other.value
+    }
+}
+
+impl std::fmt::Display for Nit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_dont_care() {
+            write!(f, "x")
+        } else {
+            write!(f, "{}", self.value)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radix_validity() {
+        let t = Radix::TERNARY;
+        assert!(t.valid(0) && t.valid(2) && t.valid(DONT_CARE));
+        assert!(!t.valid(3));
+    }
+
+    #[test]
+    fn unbalanced_voltages() {
+        let t = Radix::TERNARY;
+        assert_eq!(t.voltage(0, 0.8), 0.0);
+        assert!((t.voltage(1, 0.8) - 0.4).abs() < 1e-12);
+        assert!((t.voltage(2, 0.8) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_digit_panics() {
+        Nit::new(3, Radix::TERNARY);
+    }
+
+    #[test]
+    fn dont_care_matches_everything() {
+        let t = Radix::TERNARY;
+        let x = Nit::dont_care(t);
+        for d in t.digits() {
+            assert!(x.matches(Nit::new(d, t)));
+            assert!(Nit::new(d, t).matches(x));
+        }
+        assert!(!Nit::new(0, t).matches(Nit::new(1, t)));
+    }
+
+    #[test]
+    fn equivalent_widths() {
+        // The paper pairs 8b↔5t, 16b↔10t, 32b↔20t, 51b↔32t, 64b↔40t, 128b↔80t
+        // using floor-ish pairing p = q * ln2/ln3 rounded; our helper is the
+        // ceil variant used for capacity checks.
+        assert_eq!(Radix::TERNARY.digits_for_bits(8), 6);
+        assert_eq!(Radix::TERNARY.digits_for_bits(3), 2);
+        assert_eq!(Radix::BINARY.digits_for_bits(8), 8);
+    }
+}

@@ -1,0 +1,206 @@
+//! Multi-digit radix-n words: conversions, arithmetic reference helpers.
+//!
+//! Words are stored **little-endian** (least-significant digit first), the
+//! natural order for ripple-style digit-wise AP operation (§IV: "the process
+//! is performed digit-wise and repeated for multi-digit operations").
+
+use super::nit::Radix;
+
+/// A little-endian, fixed-width, radix-n unsigned word.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Word {
+    digits: Vec<u8>,
+    radix: Radix,
+}
+
+impl Word {
+    /// From raw little-endian digits.
+    pub fn from_digits(digits: Vec<u8>, radix: Radix) -> Self {
+        assert!(
+            digits.iter().all(|&d| d < radix.n()),
+            "invalid digit for radix {}",
+            radix.n()
+        );
+        Word { digits, radix }
+    }
+
+    /// Zero of a given width.
+    pub fn zero(width: usize, radix: Radix) -> Self {
+        Word { digits: vec![0; width], radix }
+    }
+
+    /// Encode `value` into `width` digits (truncating mod radix^width).
+    pub fn from_u128(mut value: u128, width: usize, radix: Radix) -> Self {
+        let n = radix.n() as u128;
+        let digits = (0..width)
+            .map(|_| {
+                let d = (value % n) as u8;
+                value /= n;
+                d
+            })
+            .collect();
+        Word { digits, radix }
+    }
+
+    /// Decode to a u128 (panics on overflow > 2^128, fine for test widths).
+    pub fn to_u128(&self) -> u128 {
+        let n = self.radix.n() as u128;
+        self.digits
+            .iter()
+            .rev()
+            .fold(0u128, |acc, &d| acc * n + d as u128)
+    }
+
+    /// Width in digits.
+    pub fn width(&self) -> usize {
+        self.digits.len()
+    }
+
+    /// Radix.
+    pub fn radix(&self) -> Radix {
+        self.radix
+    }
+
+    /// Little-endian digit slice.
+    pub fn digits(&self) -> &[u8] {
+        &self.digits
+    }
+
+    /// Mutable digit slice.
+    pub fn digits_mut(&mut self) -> &mut [u8] {
+        &mut self.digits
+    }
+
+    /// Reference (software) addition with carry-in, returning
+    /// (sum word of the same width, carry-out digit). This is the oracle
+    /// every AP adder run is checked against.
+    pub fn add_ref(&self, other: &Word, carry_in: u8) -> (Word, u8) {
+        assert_eq!(self.radix, other.radix);
+        assert_eq!(self.width(), other.width());
+        let n = self.radix.n() as u16;
+        let mut carry = carry_in as u16;
+        let mut out = Vec::with_capacity(self.width());
+        for i in 0..self.width() {
+            let s = self.digits[i] as u16 + other.digits[i] as u16 + carry;
+            out.push((s % n) as u8);
+            carry = s / n;
+        }
+        (Word::from_digits(out, self.radix), carry as u8)
+    }
+
+    /// Reference subtraction (self - other - borrow_in) mod radix^width,
+    /// returning (difference, borrow-out).
+    pub fn sub_ref(&self, other: &Word, borrow_in: u8) -> (Word, u8) {
+        assert_eq!(self.radix, other.radix);
+        assert_eq!(self.width(), other.width());
+        let n = self.radix.n() as i16;
+        let mut borrow = borrow_in as i16;
+        let mut out = Vec::with_capacity(self.width());
+        for i in 0..self.width() {
+            let mut d = self.digits[i] as i16 - other.digits[i] as i16 - borrow;
+            if d < 0 {
+                d += n;
+                borrow = 1;
+            } else {
+                borrow = 0;
+            }
+            out.push(d as u8);
+        }
+        (Word::from_digits(out, self.radix), borrow as u8)
+    }
+}
+
+impl std::fmt::Display for Word {
+    /// Most-significant digit first, e.g. "120₃".
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for &d in self.digits.iter().rev() {
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Convert a decimal value to fixed-width little-endian digits (helper for
+/// hot paths that work on raw `u8` buffers instead of `Word`).
+pub fn to_digits(value: u64, width: usize, radix: u8) -> Vec<u8> {
+    let mut v = value;
+    (0..width)
+        .map(|_| {
+            let d = (v % radix as u64) as u8;
+            v /= radix as u64;
+            d
+        })
+        .collect()
+}
+
+/// Inverse of [`to_digits`].
+pub fn from_digits(digits: &[u8], radix: u8) -> u64 {
+    digits
+        .iter()
+        .rev()
+        .fold(0u64, |acc, &d| acc * radix as u64 + d as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+
+    #[test]
+    fn roundtrip_u128() {
+        for v in [0u128, 1, 2, 5, 26, 27, 242, 1000] {
+            let w = Word::from_u128(v, 8, Radix::TERNARY);
+            assert_eq!(w.to_u128(), v % 3u128.pow(8));
+        }
+    }
+
+    #[test]
+    fn add_ref_matches_integers() {
+        forall(Config::cases(300), |rng| {
+            let radix = Radix(2 + rng.digit(4)); // radix 2..=5
+            let width = 1 + rng.index(12);
+            let a = rng.below(u64::MAX.into()) as u128;
+            let b = rng.below(u64::MAX.into()) as u128;
+            let cin = rng.digit(2);
+            let wa = Word::from_u128(a, width, radix);
+            let wb = Word::from_u128(b, width, radix);
+            let (sum, cout) = wa.add_ref(&wb, cin);
+            let modulus = (radix.n() as u128).pow(width as u32);
+            let expect = wa.to_u128() + wb.to_u128() + cin as u128;
+            assert_eq!(sum.to_u128(), expect % modulus);
+            assert_eq!(cout as u128, expect / modulus);
+        });
+    }
+
+    #[test]
+    fn sub_then_add_roundtrip() {
+        forall(Config::cases(300), |rng| {
+            let radix = Radix(2 + rng.digit(3));
+            let width = 1 + rng.index(10);
+            let a = Word::from_u128(rng.next_u64() as u128, width, radix);
+            let b = Word::from_u128(rng.next_u64() as u128, width, radix);
+            let (diff, _borrow) = a.sub_ref(&b, 0);
+            let (back, _carry) = diff.add_ref(&b, 0);
+            assert_eq!(back.to_u128(), a.to_u128());
+        });
+    }
+
+    #[test]
+    fn display_msb_first() {
+        let w = Word::from_digits(vec![0, 2, 1], Radix::TERNARY); // 1·9+2·3+0 = 15
+        assert_eq!(format!("{w}"), "120");
+        assert_eq!(w.to_u128(), 15);
+    }
+
+    #[test]
+    fn raw_digit_helpers_roundtrip() {
+        forall(Config::cases(200), |rng| {
+            let radix = 2 + rng.digit(4);
+            let width = 1 + rng.index(10);
+            let modulus = (radix as u64).saturating_pow(width as u32);
+            let v = rng.below(modulus.max(1));
+            let d = to_digits(v, width, radix);
+            assert_eq!(from_digits(&d, radix), v);
+        });
+    }
+}

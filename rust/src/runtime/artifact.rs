@@ -1,0 +1,182 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (plain `key=value`
+//! lines — the offline crate set has no serde) and resolves engine
+//! variants by their workload signature.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Execution-mode tag matching the AOT variant naming.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactMode {
+    NonBlocked,
+    Blocked,
+}
+
+impl ArtifactMode {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "non_blocked" => Ok(ArtifactMode::NonBlocked),
+            "blocked" => Ok(ArtifactMode::Blocked),
+            other => anyhow::bail!("unknown mode {other}"),
+        }
+    }
+}
+
+/// Metadata for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text path (absolute or manifest-relative, resolved).
+    pub path: PathBuf,
+    /// Function tag ("add" | "sub" | "mac").
+    pub func: String,
+    pub mode: ArtifactMode,
+    pub radix: u8,
+    /// Static row tile the engine was lowered for.
+    pub rows: usize,
+    /// Digits per operand.
+    pub digits: usize,
+    /// LUT passes per digit.
+    pub passes: usize,
+    /// Write blocks per digit.
+    pub groups: usize,
+}
+
+impl ArtifactMeta {
+    /// Columns of the engine's input array (`2p + 1`).
+    pub fn cols(&self) -> usize {
+        2 * self.digits + 1
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts`)", manifest.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; paths resolve against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: HashMap<&str, &str> = line
+                .split_whitespace()
+                .filter_map(|kv| kv.split_once('='))
+                .collect();
+            let get = |k: &str| -> anyhow::Result<&str> {
+                fields
+                    .get(k)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing {k}", lineno + 1))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get("name")?.to_string(),
+                path: dir.join(get("file")?),
+                func: get("fn")?.to_string(),
+                mode: ArtifactMode::parse(get("mode")?)?,
+                radix: get("radix")?.parse()?,
+                rows: get("rows")?.parse()?,
+                digits: get("digits")?.parse()?,
+                passes: get("passes")?.parse()?,
+                groups: get("groups")?.parse()?,
+            });
+        }
+        Ok(Registry { artifacts })
+    }
+
+    /// All artifacts.
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the best engine for a workload: exact (func, mode, radix,
+    /// digits) match with the smallest row tile ≥ `rows` (or the largest
+    /// available tile if none is big enough — the batcher will split).
+    pub fn select(
+        &self,
+        func: &str,
+        mode: ArtifactMode,
+        radix: u8,
+        digits: usize,
+        rows: usize,
+    ) -> Option<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.func == func && a.mode == mode && a.radix == radix && a.digits == digits)
+            .collect();
+        candidates.sort_by_key(|a| a.rows);
+        candidates
+            .iter()
+            .find(|a| a.rows >= rows)
+            .copied()
+            .or(candidates.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=ap_add_b_r3_rows256_p20 file=a.hlo.txt fn=add mode=blocked radix=3 rows=256 digits=20 passes=21 groups=9
+name=ap_add_b_r3_rows1024_p20 file=b.hlo.txt fn=add mode=blocked radix=3 rows=1024 digits=20 passes=21 groups=9
+
+# comment
+name=ap_add_nb_r2_rows256_p32 file=c.hlo.txt fn=add mode=non_blocked radix=2 rows=256 digits=32 passes=4 groups=4
+";
+
+    #[test]
+    fn parses_manifest() {
+        let r = Registry::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(r.all().len(), 3);
+        let a = r.by_name("ap_add_b_r3_rows256_p20").unwrap();
+        assert_eq!(a.passes, 21);
+        assert_eq!(a.groups, 9);
+        assert_eq!(a.cols(), 41);
+        assert_eq!(a.path, Path::new("/tmp/artifacts/a.hlo.txt"));
+    }
+
+    #[test]
+    fn selects_smallest_sufficient_tile() {
+        let r = Registry::parse(SAMPLE, Path::new("/x")).unwrap();
+        let a = r.select("add", ArtifactMode::Blocked, 3, 20, 100).unwrap();
+        assert_eq!(a.rows, 256);
+        let a = r.select("add", ArtifactMode::Blocked, 3, 20, 500).unwrap();
+        assert_eq!(a.rows, 1024);
+        // larger than any tile: batcher splits over the largest
+        let a = r.select("add", ArtifactMode::Blocked, 3, 20, 5000).unwrap();
+        assert_eq!(a.rows, 1024);
+    }
+
+    #[test]
+    fn select_misses_wrong_signature() {
+        let r = Registry::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert!(r.select("add", ArtifactMode::Blocked, 3, 99, 10).is_none());
+        assert!(r.select("mul", ArtifactMode::Blocked, 3, 20, 10).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let bad = "name=x file=y.hlo.txt fn=add mode=blocked radix=3 rows=256 digits=20 passes=21";
+        assert!(Registry::parse(bad, Path::new("/x")).is_err());
+    }
+}

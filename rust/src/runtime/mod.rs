@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path. Python never runs here — `make artifacts` produced
+//! the `.hlo.txt` files at build time.
+//!
+//! * [`artifact`] — the plain-text manifest and artifact registry.
+//! * [`client`] — `xla` crate wrapper: CPU PJRT client, compile cache,
+//!   literal conversions, execution.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactMeta, Registry};
+pub use client::{EngineOutput, PjrtEngine, PjrtRuntime};

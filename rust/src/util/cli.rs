@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (stand-in for `clap`, not in the offline set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and "unknown flag" detection.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order, options by name.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI entry points want loud, early failure).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("error: --{key} {v}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (`--foo`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    /// Names of options/flags never accessed — used to reject typos.
+    pub fn unknown(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect()
+    }
+
+    /// Exit with an error if any unrecognised options remain.
+    pub fn reject_unknown(&self) {
+        let u = self.unknown();
+        if !u.is_empty() {
+            eprintln!("error: unknown option(s): {}", u.join(", "));
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["exp", "fig6", "--rl", "20", "--alpha=50", "--csv"]);
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "fig6");
+        assert_eq!(a.get("rl"), Some("20"));
+        assert_eq!(a.get("alpha"), Some("50"));
+        assert!(a.flag("csv"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--rows", "512"]);
+        assert_eq!(a.get_parse_or("rows", 64usize), 512);
+        assert_eq!(a.get_parse_or("digits", 20usize), 20);
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse(&["--used", "1", "--typo", "2"]);
+        let _ = a.get("used");
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--rl", "20, 30,50"]);
+        assert_eq!(
+            a.get_list("rl").unwrap(),
+            vec!["20".to_string(), "30".into(), "50".into()]
+        );
+    }
+
+    #[test]
+    fn flag_followed_by_positional_consumes_value() {
+        // `--key value` binds value; a trailing flag stays a flag.
+        let a = parse(&["--mode", "blocked", "--verbose"]);
+        assert_eq!(a.get("mode"), Some("blocked"));
+        assert!(a.flag("verbose"));
+    }
+}

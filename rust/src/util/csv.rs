@@ -1,0 +1,86 @@
+//! Minimal CSV writer for experiment outputs (`results/*.csv`). Quoting is
+//! applied only when needed; all experiment data is numeric/simple strings.
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV document.
+#[derive(Debug, Default)]
+pub struct Csv {
+    lines: Vec<String>,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    /// New document with a header row.
+    pub fn new<S: ToString>(header: &[S]) -> Self {
+        let mut c = Csv::default();
+        c.row(header);
+        c
+    }
+
+    /// Append a row.
+    pub fn row<S: ToString>(&mut self, fields: &[S]) -> &mut Self {
+        self.lines.push(
+            fields
+                .iter()
+                .map(|f| quote(&f.to_string()))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        self
+    }
+
+    /// Render the document.
+    pub fn render(&self) -> String {
+        let mut s = self.lines.join("\n");
+        s.push('\n');
+        s
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1", "2"]);
+        assert_eq!(c.render(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quotes_when_needed() {
+        let mut c = Csv::new(&["x"]);
+        c.row(&["has,comma"]);
+        c.row(&["has\"quote"]);
+        let r = c.render();
+        assert!(r.contains("\"has,comma\""));
+        assert!(r.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let p = std::env::temp_dir().join("mvap_csv_test.csv");
+        Csv::new(&["h"]).write_to(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "h\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

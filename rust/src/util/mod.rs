@@ -1,0 +1,13 @@
+//! Small self-contained substrates that stand in for crates unavailable in
+//! the offline environment (see DESIGN.md §6): a seeded PRNG (`rand`),
+//! a property-test runner (`proptest`), a CLI argument parser (`clap`),
+//! an aligned table printer, and a CSV writer.
+
+pub mod rng;
+pub mod prop;
+pub mod cli;
+pub mod table;
+pub mod csv;
+
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,126 @@
+//! Minimal property-based testing harness (stand-in for `proptest`, which is
+//! not in the offline crate set).
+//!
+//! Usage:
+//! ```
+//! use mvap::util::prop::{forall, Config};
+//! forall(Config::cases(200), |rng| {
+//!     let x = rng.below(1000);
+//!     assert!(x < 1000, "x={x}");
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic [`Rng`] derived from the base seed
+//! and the case index; on failure the panic message includes the seed and
+//! case index so the exact case can be re-run in isolation.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Base seed. Every case `i` runs with `Rng::new(seed ^ splitmix(i))`.
+    pub seed: u64,
+    /// Number of cases to run.
+    pub cases: usize,
+}
+
+impl Config {
+    /// Default seed, `n` cases.
+    pub fn cases(n: usize) -> Self {
+        Config { seed: 0x5EED_CAFE_F00D_D00D, cases: n }
+    }
+
+    /// Explicit seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Derive the per-case seed (kept public so a failing case can be replayed).
+pub fn case_seed(base: u64, case: usize) -> u64 {
+    // SplitMix64 finalizer over (base, case).
+    let mut z = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Run `f` for `cfg.cases` independent random cases. Panics (with replay
+/// info) on the first failing case.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cfg: Config, f: F) {
+    for case in 0..cfg.cases {
+        let seed = case_seed(cfg.seed, case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{} (replay: Rng::new({seed:#x})): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Run a property that returns `Result<(), String>` instead of panicking —
+/// convenient for checks composed of many assertions.
+pub fn forall_ok<F>(cfg: Config, f: F)
+where
+    F: Fn(&mut Rng) -> std::result::Result<(), String> + std::panic::RefUnwindSafe,
+{
+    forall(cfg, |rng| {
+        if let Err(e) = f(rng) {
+            panic!("{e}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(Config::cases(50), |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_case_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(Config::cases(50), |rng| {
+                let x = rng.below(10);
+                assert!(x < 5, "x={x} too big");
+            });
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay: Rng::new("), "msg={msg}");
+    }
+
+    #[test]
+    fn forall_ok_propagates_error() {
+        let r = std::panic::catch_unwind(|| {
+            forall_ok(Config::cases(10), |_| Err("boom".to_string()));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn case_seed_distinct() {
+        let s: std::collections::HashSet<u64> =
+            (0..1000).map(|i| case_seed(1, i)).collect();
+        assert_eq!(s.len(), 1000);
+    }
+}

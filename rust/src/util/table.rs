@@ -1,0 +1,150 @@
+//! Aligned plain-text table printer used by the experiment harness to emit
+//! paper-style tables.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title line.
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    /// Set the header row.
+    pub fn header<S: ToString>(mut self, cols: &[S]) -> Self {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    /// Append a data row.
+    pub fn row<S: ToString>(&mut self, cols: &[S]) -> &mut Self {
+        self.rows.push(cols.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Append a row of already-owned strings.
+    pub fn row_strings(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let measure = |widths: &mut Vec<usize>, row: &[String]| {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        };
+        measure(&mut widths, &self.header);
+        for r in &self.rows {
+            measure(&mut widths, r);
+        }
+        let fmt_row = |row: &[String]| -> String {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| {
+                    let c = row.get(i).map(|s| s.as_str()).unwrap_or("");
+                    format!("{:width$}", c, width = widths[i])
+                })
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let sep = format!(
+            "+{}+",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with engineering-style trimming (up to `prec` decimals,
+/// trailing zeros removed).
+pub fn fnum(x: f64, prec: usize) -> String {
+    let s = format!("{:.*}", prec, x);
+    if s.contains('.') {
+        let t = s.trim_end_matches('0').trim_end_matches('.');
+        t.to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T").header(&["a", "bbbb"]);
+        t.row(&["1", "2"]);
+        t.row(&["333", "4"]);
+        let r = t.render();
+        assert!(r.contains("| a   | bbbb |"), "{r}");
+        assert!(r.contains("| 333 | 4    |"), "{r}");
+    }
+
+    #[test]
+    fn ragged_rows_padded() {
+        let mut t = Table::new("").header(&["x", "y", "z"]);
+        t.row(&["1"]);
+        let r = t.render();
+        assert!(r.lines().all(|l| l.len() == r.lines().next().unwrap().len()));
+    }
+
+    #[test]
+    fn fnum_trims() {
+        assert_eq!(fnum(1.5000, 4), "1.5");
+        assert_eq!(fnum(2.0, 2), "2");
+        assert_eq!(fnum(0.123456, 3), "0.123");
+    }
+}

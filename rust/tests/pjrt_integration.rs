@@ -1,0 +1,128 @@
+//! Integration tests for the AOT path: artifacts → PJRT engines →
+//! cross-check against the native functional simulator, element-exactly.
+//!
+//! These tests require `make artifacts`; they skip (with a note) when the
+//! manifest is missing so `cargo test` stays green on a fresh checkout.
+
+use mvap::coordinator::{Backend, Job, NativeBackend, OpKind, PjrtBackend, VectorEngine};
+use mvap::mvl::{Radix, Word};
+use mvap::util::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
+    (0..rows)
+        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
+        .collect()
+}
+
+/// Stats equality modulo `rows_written`, which the AOT engine does not
+/// re-derive (it is not an energy/delay input — see EngineOutput docs).
+fn assert_stats_match(got: &mvap::ap::ApStats, want: &mvap::ap::ApStats, ctx: &str) {
+    assert_eq!(got.compare_cycles, want.compare_cycles, "{ctx}: compare_cycles");
+    assert_eq!(got.write_cycles, want.write_cycles, "{ctx}: write_cycles");
+    assert_eq!(got.sets, want.sets, "{ctx}: sets");
+    assert_eq!(got.resets, want.resets, "{ctx}: resets");
+    assert_eq!(got.mismatch_hist, want.mismatch_hist, "{ctx}: mismatch_hist");
+}
+
+/// The central three-layer check: the AOT-compiled XLA engine and the
+/// native Rust simulator produce identical values AND identical energy
+/// stats for the same workload.
+#[test]
+fn pjrt_matches_native_ternary_add() {
+    let Some(dir) = artifacts_dir() else { return };
+    let radix = Radix::TERNARY;
+    let mut rng = Rng::new(2024);
+    for &(rows, p, blocked) in &[(100usize, 20usize, true), (256, 20, false), (300, 20, true)] {
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let job = |id| Job::new(id, OpKind::Add, radix, blocked, a.clone(), b.clone());
+
+        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let want = native.execute(&job(1)).unwrap();
+
+        let pjrt_backend = PjrtBackend::new(&dir).expect("pjrt backend");
+        let mut pjrt = VectorEngine::new(Box::new(pjrt_backend));
+        let got = pjrt.execute(&job(2)).unwrap();
+
+        assert_eq!(got.values, want.values, "values rows={rows} p={p} blocked={blocked}");
+        assert_eq!(
+            got.stats.mismatch_hist, want.stats.mismatch_hist,
+            "mismatch hist rows={rows} p={p} blocked={blocked}"
+        );
+        assert_eq!(got.stats.sets, want.stats.sets, "sets");
+        assert_eq!(got.stats.resets, want.stats.resets, "resets");
+        assert_eq!(got.stats.compare_cycles, want.stats.compare_cycles);
+        assert_eq!(got.stats.write_cycles, want.stats.write_cycles);
+        // identical stats ⇒ identical modeled energy
+        assert_eq!(got.energy, want.energy);
+    }
+}
+
+#[test]
+fn pjrt_matches_native_binary_add() {
+    let Some(dir) = artifacts_dir() else { return };
+    let radix = Radix::BINARY;
+    let mut rng = Rng::new(7);
+    let a = random_words(&mut rng, 200, 32, radix);
+    let b = random_words(&mut rng, 200, 32, radix);
+    let mk = |id, blocked| Job::new(id, OpKind::Add, radix, blocked, a.clone(), b.clone());
+    for blocked in [false, true] {
+        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let want = native.execute(&mk(1, blocked)).unwrap();
+        let mut pjrt = VectorEngine::new(Box::new(PjrtBackend::new(&dir).unwrap()));
+        let got = pjrt.execute(&mk(2, blocked)).unwrap();
+        assert_eq!(got.values, want.values);
+        assert_stats_match(&got.stats, &want.stats, &format!("binary blocked={blocked}"));
+    }
+}
+
+#[test]
+fn pjrt_sub_and_mac() {
+    let Some(dir) = artifacts_dir() else { return };
+    let radix = Radix::TERNARY;
+    let mut rng = Rng::new(99);
+    for (op, p) in [(OpKind::Sub, 20usize), (OpKind::Mac, 8)] {
+        let a = random_words(&mut rng, 64, p, radix);
+        let b = random_words(&mut rng, 64, p, radix);
+        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let want = native
+            .execute(&Job::new(1, op, radix, true, a.clone(), b.clone()))
+            .unwrap();
+        let mut pjrt = VectorEngine::new(Box::new(PjrtBackend::new(&dir).unwrap()));
+        let got = pjrt.execute(&Job::new(2, op, radix, true, a, b)).unwrap();
+        assert_eq!(got.values, want.values, "{op:?}");
+        assert_stats_match(&got.stats, &want.stats, &format!("{op:?}"));
+    }
+}
+
+/// Tile selection picks the 1024-row engine for large jobs.
+#[test]
+fn pjrt_large_job_uses_bigger_tile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::new(&dir).unwrap();
+    let rows = backend.preferred_rows(OpKind::Add, Radix::TERNARY, true, 20);
+    assert_eq!(rows, Some(1024));
+    let mut rng = Rng::new(1);
+    let a = random_words(&mut rng, 1500, 20, Radix::TERNARY);
+    let b = random_words(&mut rng, 1500, 20, Radix::TERNARY);
+    let mut eng = VectorEngine::new(Box::new(backend));
+    let res = eng
+        .execute(&Job::new(1, OpKind::Add, Radix::TERNARY, true, a.clone(), b.clone()))
+        .unwrap();
+    assert_eq!(res.tiles, 2); // 1500 rows over 1024-row tiles
+    for r in 0..1500 {
+        let (expect, c) = a[r].add_ref(&b[r], 0);
+        assert_eq!(res.values[r], (expect, c), "row {r}");
+    }
+}
