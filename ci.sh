@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Local CI gate for the mvap repo — documented in README.md.
+#
+#   ./ci.sh            run everything
+#   ./ci.sh --fast     skip the doc and fmt stages
+#
+# Stages:
+#   1. cargo build --release        (tier-1, part 1)
+#   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
+#   3. cargo doc --no-deps          (warnings as errors; the crate also denies
+#                                    rustdoc::broken_intra_doc_links)
+#   4. cargo fmt --check            (skipped with a note if rustfmt is absent)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "$fast" == "0" ]]; then
+    echo "==> cargo doc --no-deps (warnings as errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "==> cargo fmt --check"
+        cargo fmt --check
+    else
+        echo "==> cargo fmt --check skipped (rustfmt not installed)"
+    fi
+fi
+
+echo "CI gate passed."

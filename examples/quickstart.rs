@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         .map(|_| Word::from_digits(rng.number(digits, 3), radix))
         .collect();
 
-    let mut engine = VectorEngine::new(Box::new(NativeBackend));
+    let mut engine = VectorEngine::new(Box::new(NativeBackend::default()));
     let job = Job::new(1, OpKind::Add, radix, true, a.clone(), b.clone());
     let result = engine.execute(&job)?;
 

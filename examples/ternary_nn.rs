@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         match backend {
             BackendKind::Pjrt => "PJRT (AOT XLA engines)",
             BackendKind::Native => "native simulator",
+            BackendKind::NativeBitSliced => "native simulator (bit-sliced digit planes)",
         }
     );
 

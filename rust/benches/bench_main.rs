@@ -8,6 +8,7 @@ mod harness;
 
 use harness::{bench, black_box};
 use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
+use mvap::cam::{BitSlicedArray, CamArray, StorageKind};
 use mvap::circuit::{CellTech, MatchClass, MatchlineSim};
 use mvap::coordinator::{Backend, EngineService, Job, NativeBackend, OpKind, PjrtBackend, VectorEngine};
 use mvap::diagram::StateDiagram;
@@ -71,7 +72,23 @@ fn main() {
                 let (array, layout) = load_operands(radix, &a, &b, None);
                 let mut ap = Ap::new(array);
                 ap.apply_lut_multi_fast(&lut, &layout.positions(), ExecMode::Blocked);
-                black_box(mvap::ap::extract_operand(ap.array(), &layout));
+                black_box(mvap::ap::extract_operand(ap.storage(), &layout));
+            },
+        ));
+        results.push(bench(
+            "hot/native_add_20t_1024rows_bitsliced",
+            Some((rows * p) as u64),
+            || {
+                let (storage, layout) = mvap::ap::load_operands_storage(
+                    StorageKind::BitSliced,
+                    radix,
+                    &a,
+                    &b,
+                    None,
+                );
+                let mut ap = Ap::with_storage(storage);
+                ap.apply_lut_multi(&lut, &layout.positions(), ExecMode::Blocked);
+                black_box(mvap::ap::extract_operand(ap.storage(), &layout));
             },
         ));
     }
@@ -86,6 +103,59 @@ fn main() {
         results.push(bench("hot/native_compare_4096rows", Some(rows as u64), || {
             black_box(array.compare(&[3, 23, 40], &[1, 2, 0]));
         }));
+    }
+    if run("hot/compare_storage") {
+        // scalar vs bit-sliced compare throughput across array heights:
+        // the tentpole claim (≥5x at ≥16k rows) is measured here.
+        let radix = Radix::TERNARY;
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(12);
+            let cols = 41;
+            let mut data = vec![0u8; rows * cols];
+            rng.fill_digits(&mut data, 3);
+            let scalar = CamArray::from_data(radix, rows, cols, data.clone());
+            let sliced = BitSlicedArray::from_data(radix, rows, cols, &data);
+            results.push(bench(
+                &format!("hot/compare_storage_scalar_{rows}rows"),
+                Some(rows as u64),
+                || {
+                    black_box(scalar.compare(&[3, 23, 40], &[1, 2, 0]));
+                },
+            ));
+            results.push(bench(
+                &format!("hot/compare_storage_bitsliced_{rows}rows"),
+                Some(rows as u64),
+                || {
+                    black_box(sliced.compare(&[3, 23, 40], &[1, 2, 0]));
+                },
+            ));
+        }
+    }
+    if run("hot/write_storage") {
+        // tagged masked write throughput, half the rows tagged
+        let radix = Radix::TERNARY;
+        let rows = 16 * 1024usize;
+        let mut rng = Rng::new(13);
+        let cols = 41;
+        let mut data = vec![0u8; rows * cols];
+        rng.fill_digits(&mut data, 3);
+        let tags: Vec<bool> = (0..rows).map(|r| r % 2 == 0).collect();
+        let mut scalar = CamArray::from_data(radix, rows, cols, data.clone());
+        let mut sliced = BitSlicedArray::from_data(radix, rows, cols, &data);
+        results.push(bench(
+            "hot/write_storage_scalar_16384rows",
+            Some(rows as u64),
+            || {
+                black_box(scalar.write(&tags, &[5, 17], &[2, 0]));
+            },
+        ));
+        results.push(bench(
+            "hot/write_storage_bitsliced_16384rows",
+            Some(rows as u64),
+            || {
+                black_box(sliced.write(&tags, &[5, 17], &[2, 0]));
+            },
+        ));
     }
     if run("hot/pjrt_add") {
         let dir = PathBuf::from("artifacts");
@@ -121,7 +191,7 @@ fn main() {
         let a = random_words(&mut rng, rows, p, radix);
         let b = random_words(&mut rng, rows, p, radix);
         let svc = EngineService::start(4, 16, || {
-            Ok(Box::new(NativeBackend) as Box<dyn Backend>)
+            Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
         })
         .unwrap();
         results.push(bench(

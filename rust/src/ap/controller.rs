@@ -9,7 +9,7 @@
 //! flip-flops are reset after each block.
 
 use super::stats::ApStats;
-use crate::cam::{CamArray, CompareOutcome};
+use crate::cam::{CamArray, CamStorage, CompareOutcome};
 use crate::lutgen::Lut;
 
 /// Execution mode for a LUT program.
@@ -23,30 +23,37 @@ pub enum ExecMode {
     Blocked,
 }
 
-/// An associative processor: one CAM array plus controller state.
+/// An associative processor: one CAM array plus controller state. The
+/// array may live in either storage backend ([`CamStorage`]): scalar
+/// row-major digits or the bit-sliced digit-plane layout.
 #[derive(Clone, Debug)]
 pub struct Ap {
-    array: CamArray,
+    storage: CamStorage,
     stats: ApStats,
     /// Write-enable flip-flops (blocked mode), one per row.
     write_enable: Vec<bool>,
 }
 
 impl Ap {
-    /// Wrap an array.
+    /// Wrap a scalar array (the default storage backend).
     pub fn new(array: CamArray) -> Self {
-        let rows = array.rows();
-        Ap { array, stats: ApStats::default(), write_enable: vec![false; rows] }
+        Self::with_storage(CamStorage::Scalar(array))
     }
 
-    /// The underlying array.
-    pub fn array(&self) -> &CamArray {
-        &self.array
+    /// Wrap an array in an explicitly chosen storage backend.
+    pub fn with_storage(storage: CamStorage) -> Self {
+        let rows = storage.rows();
+        Ap { storage, stats: ApStats::default(), write_enable: vec![false; rows] }
     }
 
-    /// Mutable array access (initialisation/loading).
-    pub fn array_mut(&mut self) -> &mut CamArray {
-        &mut self.array
+    /// The underlying storage.
+    pub fn storage(&self) -> &CamStorage {
+        &self.storage
+    }
+
+    /// Mutable storage access (initialisation/loading).
+    pub fn storage_mut(&mut self) -> &mut CamStorage {
+        &mut self.storage
     }
 
     /// Statistics accumulated so far.
@@ -61,14 +68,14 @@ impl Ap {
 
     /// One raw compare over `cols` with `keys`, with stats recording.
     pub fn compare(&mut self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
-        let out = self.array.compare(cols, keys);
+        let out = self.storage.compare(cols, keys);
         self.stats.record_compare(&out.mismatch_hist);
         out
     }
 
     /// One raw write cycle of `values` into `cols` of tagged rows.
     pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) {
-        let ops = self.array.write(tags, cols, values);
+        let ops = self.storage.write(tags, cols, values);
         self.stats.write_cycles += 1;
         self.stats.sets += ops.sets as u64;
         self.stats.resets += ops.resets as u64;
@@ -148,8 +155,8 @@ impl Ap {
         mode: ExecMode,
         tables: &FastTables,
     ) {
-        let rows = self.array.rows();
-        let radix = self.array.radix().n() as usize;
+        let rows = self.storage.rows();
+        let radix = self.storage.radix().n() as usize;
 
         // bucket rows by state id; fall back if any don't-care appears
         let mut counts = vec![0u64; tables.num_states];
@@ -157,7 +164,7 @@ impl Ap {
         for r in 0..rows {
             let mut sid = 0usize;
             for &c in cols {
-                let d = self.array.get(r, c);
+                let d = self.storage.get(r, c);
                 if d == crate::mvl::DONT_CARE {
                     return self.apply_lut(lut, cols, mode);
                 }
@@ -197,7 +204,7 @@ impl Ap {
             let st = &tables.per_state[row_state[r] as usize];
             if st.matched {
                 for (i, &c) in cols.iter().enumerate() {
-                    self.array.set(r, c, st.final_digits[i]);
+                    self.storage.set(r, c, st.final_digits[i]);
                 }
             }
         }
@@ -318,7 +325,7 @@ mod tests {
             let mut ap = Ap::new(CamArray::from_data(Radix::TERNARY, 27, 3, data));
             ap.apply_lut(lut, &[0, 1, 2], *mode);
             for id in 0..27 {
-                let row = ap.array().row(id);
+                let row = ap.storage().row_digits(id);
                 let expect = d.table().decode(d.table().output_of(id));
                 // written digits (B, C) must equal the function output
                 assert_eq!(&row[1..], &expect[1..], "state {id} mode {mode:?}");
@@ -366,7 +373,11 @@ mod tests {
         ap1.apply_lut(&nb, &[0, 1, 2], ExecMode::NonBlocked);
         ap2.apply_lut(&b, &[0, 1, 2], ExecMode::Blocked);
         for r in 0..rows {
-            assert_eq!(ap1.array().row(r)[1..], ap2.array().row(r)[1..], "row {r}");
+            assert_eq!(
+                ap1.storage().row_digits(r)[1..],
+                ap2.storage().row_digits(r)[1..],
+                "row {r}"
+            );
         }
     }
 
@@ -403,7 +414,12 @@ mod tests {
             let mut fast = Ap::new(CamArray::from_data(radix, rows, arity, data));
             fast.apply_lut_fast(&lut, &cols, mode);
 
-            assert_eq!(fast.array().data(), slow.array().data(), "{} {mode:?}", lut.name);
+            assert_eq!(
+                fast.storage().to_digits(),
+                slow.storage().to_digits(),
+                "{} {mode:?}",
+                lut.name
+            );
             assert_eq!(fast.stats(), slow.stats(), "{} {mode:?}", lut.name);
         });
     }
@@ -420,7 +436,7 @@ mod tests {
         fast.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
         let mut slow = Ap::new(CamArray::from_data(Radix::TERNARY, 4, 3, data));
         slow.apply_lut(&lut, &[0, 1, 2], ExecMode::NonBlocked);
-        assert_eq!(fast.array().data(), slow.array().data());
+        assert_eq!(fast.storage().to_digits(), slow.storage().to_digits());
         assert_eq!(fast.stats(), slow.stats());
     }
 

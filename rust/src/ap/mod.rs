@@ -1,6 +1,8 @@
 //! The associative processor proper (§IV–§V): controller, registers, pass
-//! execution over a [`crate::cam::CamArray`], multi-digit in-place
-//! arithmetic, and event statistics for the energy/delay models.
+//! execution over a [`crate::cam::CamStorage`] (scalar
+//! [`crate::cam::CamArray`] or bit-sliced
+//! [`crate::cam::BitSlicedArray`]), multi-digit in-place arithmetic, and
+//! event statistics for the energy/delay models.
 
 pub mod stats;
 pub mod controller;
@@ -8,7 +10,7 @@ pub mod ops;
 
 pub use controller::{Ap, ExecMode};
 pub use ops::{
-    add_vectors, adder_lut, extract_operand, load_operands, mac_lut, mac_vectors, sub_lut,
-    sub_vectors, VectorLayout,
+    add_vectors, adder_lut, extract_operand, load_operands, load_operands_storage, mac_lut,
+    mac_vectors, sub_lut, sub_vectors, VectorLayout,
 };
 pub use stats::ApStats;

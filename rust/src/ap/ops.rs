@@ -3,7 +3,7 @@
 //! (`A[0..p] | B[0..p] | carry`), least-significant digit first.
 
 use super::controller::{Ap, ExecMode};
-use crate::cam::CamArray;
+use crate::cam::{CamArray, CamStorage, StorageKind};
 use crate::diagram::StateDiagram;
 use crate::func::{full_add, full_sub, mac_digit};
 use crate::lutgen::{generate_blocked, generate_non_blocked, Lut};
@@ -74,13 +74,26 @@ pub fn load_operands(
     (array, layout)
 }
 
+/// As [`load_operands`], but housing the array in the chosen storage
+/// backend ([`StorageKind`]).
+pub fn load_operands_storage(
+    kind: StorageKind,
+    radix: Radix,
+    a: &[Word],
+    b: &[Word],
+    carry_in: Option<&[u8]>,
+) -> (CamStorage, VectorLayout) {
+    let (array, layout) = load_operands(radix, a, b, carry_in);
+    (CamStorage::from_cam(kind, array), layout)
+}
+
 /// Extract the B-operand columns (where in-place results land) plus the
 /// carry column, per row.
-pub fn extract_operand(array: &CamArray, layout: &VectorLayout) -> Vec<(Word, u8)> {
-    (0..array.rows())
+pub fn extract_operand(storage: &CamStorage, layout: &VectorLayout) -> Vec<(Word, u8)> {
+    (0..storage.rows())
         .map(|r| {
-            let digits: Vec<u8> = (0..layout.p).map(|d| array.get(r, layout.b(d))).collect();
-            (Word::from_digits(digits, array.radix()), array.get(r, layout.carry()))
+            let digits: Vec<u8> = (0..layout.p).map(|d| storage.get(r, layout.b(d))).collect();
+            (Word::from_digits(digits, storage.radix()), storage.get(r, layout.carry()))
         })
         .collect()
 }
@@ -116,21 +129,21 @@ pub fn mac_lut(radix: Radix, mode: ExecMode) -> Lut {
 /// Returns per-row (sum, carry-out). `ap` accumulates stats.
 pub fn add_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
     ap.apply_lut_multi(lut, &layout.positions(), mode);
-    extract_operand(ap.array(), layout)
+    extract_operand(ap.storage(), layout)
 }
 
 /// In-place vector subtraction `B ← A - B`… (the LUT computes A - B with
 /// the borrow column; see [`crate::func::full_sub`]).
 pub fn sub_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
     ap.apply_lut_multi(lut, &layout.positions(), mode);
-    extract_operand(ap.array(), layout)
+    extract_operand(ap.storage(), layout)
 }
 
 /// In-place digit-wise multiply-accumulate `B_d ← (A_d·B_d + carry)`,
 /// rippling the carry column.
 pub fn mac_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
     ap.apply_lut_multi(lut, &layout.positions(), mode);
-    extract_operand(ap.array(), layout)
+    extract_operand(ap.storage(), layout)
 }
 
 /// Column layout for full word multiplication:
@@ -232,9 +245,9 @@ pub fn mul_vectors(ap: &mut Ap, layout: &MulLayout, radix: Radix, mode: ExecMode
             ap.apply_lut_fast(&addc_lut, &cols, mode);
         }
     }
-    (0..ap.array().rows())
+    (0..ap.storage().rows())
         .map(|r| {
-            let digits: Vec<u8> = (0..2 * p).map(|d| ap.array().get(r, layout.r(d))).collect();
+            let digits: Vec<u8> = (0..2 * p).map(|d| ap.storage().get(r, layout.r(d))).collect();
             Word::from_digits(digits, radix)
         })
         .collect()

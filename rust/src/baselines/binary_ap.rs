@@ -2,7 +2,8 @@
 //! Its LUT is Table VI (4 passes); this module packages it with the
 //! binary energy model for the Table XI comparison.
 
-use crate::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
+use crate::ap::{add_vectors, adder_lut, load_operands_storage, Ap, ExecMode};
+use crate::cam::StorageKind;
 use crate::energy::{delay_cycles, DelayScheme, EnergyBreakdown, EnergyModel, OpShape};
 use crate::lutgen::Lut;
 use crate::mvl::{Radix, Word};
@@ -11,6 +12,7 @@ use crate::mvl::{Radix, Word};
 pub struct BinaryApAdder {
     lut: Lut,
     energy: EnergyModel,
+    storage: StorageKind,
 }
 
 impl Default for BinaryApAdder {
@@ -22,9 +24,17 @@ impl Default for BinaryApAdder {
 impl BinaryApAdder {
     /// Build with the Table VI LUT and default binary energy model.
     pub fn new() -> Self {
+        Self::with_storage(StorageKind::Scalar)
+    }
+
+    /// As [`BinaryApAdder::new`], with an explicit CAM storage backend —
+    /// at radix 2 the bit-sliced layout is a single digit plane, so large
+    /// baseline sweeps run one word op per 64 rows.
+    pub fn with_storage(storage: StorageKind) -> Self {
         BinaryApAdder {
             lut: adder_lut(Radix::BINARY, ExecMode::NonBlocked),
             energy: EnergyModel::binary_default(),
+            storage,
         }
     }
 
@@ -36,8 +46,8 @@ impl BinaryApAdder {
     /// Run q-bit vector addition over the given rows, returning per-row
     /// (sum, carry) and the energy breakdown.
     pub fn add(&self, a: &[Word], b: &[Word]) -> (Vec<(Word, u8)>, EnergyBreakdown) {
-        let (array, layout) = load_operands(Radix::BINARY, a, b, None);
-        let mut ap = Ap::new(array);
+        let (storage, layout) = load_operands_storage(self.storage, Radix::BINARY, a, b, None);
+        let mut ap = Ap::with_storage(storage);
         let results = add_vectors(&mut ap, &layout, &self.lut, ExecMode::NonBlocked);
         let breakdown = self.energy.price(ap.stats());
         (results, breakdown)
@@ -88,5 +98,25 @@ mod tests {
         let per_row = energy.write_ops as f64 / rows as f64;
         assert!((per_row - 12.0).abs() < 1.8, "write ops/row = {per_row}");
         assert!(energy.write > 0.0 && energy.compare > 0.0);
+    }
+
+    /// The baseline is storage-agnostic: scalar and bit-sliced runs give
+    /// identical sums AND identical modeled energy.
+    #[test]
+    fn storage_kinds_agree() {
+        use crate::cam::StorageKind;
+        let mut rng = Rng::new(19);
+        let rows = 130; // not a multiple of 64
+        let q = 16;
+        let a: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(q, 2), Radix::BINARY))
+            .collect();
+        let b: Vec<Word> = (0..rows)
+            .map(|_| Word::from_digits(rng.number(q, 2), Radix::BINARY))
+            .collect();
+        let (r1, e1) = BinaryApAdder::new().add(&a, &b);
+        let (r2, e2) = BinaryApAdder::with_storage(StorageKind::BitSliced).add(&a, &b);
+        assert_eq!(r1, r2);
+        assert_eq!(e1, e2);
     }
 }

@@ -100,6 +100,20 @@ impl CamArray {
     /// in column `cols[i]` for every row. Don't-care stored values match
     /// any key; a `DONT_CARE` key matches anything (decoder emits all-low
     /// signals). Returns tags and the mismatch histogram.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mvap::cam::CamArray;
+    /// use mvap::mvl::{Radix, DONT_CARE};
+    ///
+    /// // 3 rows × 2 cols; row 2 stores a don't-care in column 0
+    /// let a = CamArray::from_data(Radix::TERNARY, 3, 2, vec![0, 1, 2, 1, DONT_CARE, 1]);
+    /// let out = a.compare(&[0, 1], &[0, 1]);
+    /// assert_eq!(out.tags, vec![true, false, true]); // X matches the key
+    /// assert_eq!(out.mismatch_hist, vec![2, 1, 0]); // 2 full matches, 1 row 1-off
+    /// assert_eq!(out.match_count(), 2);
+    /// ```
     pub fn compare(&self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
         assert_eq!(cols.len(), keys.len());
         debug_assert!(cols.iter().all(|&c| c < self.cols));

@@ -1,0 +1,462 @@
+//! Bit-sliced "digit-plane" CAM backend: the row-parallel simulator.
+//!
+//! The paper's defining property is that compare and write passes are
+//! *massively parallel across rows* (§II-C) — yet the scalar
+//! [`CamArray`](super::CamArray) walks rows one `u8` digit at a time. This
+//! backend restores that parallelism in software: each column is stored as
+//! `ceil(log2(n))` *bit-planes* plus a *present* plane (the don't-care
+//! plane), each packed 64 rows per `u64` word, so a masked compare
+//! evaluates 64 rows per AND/XOR/OR operation and a tagged write commits
+//! 64 rows per merge mask.
+//!
+//! Layout for ternary (2 digit planes + present):
+//!
+//! ```text
+//! column c:  plane 0   [u64; words]   bit r = digit LSB of row r
+//!            plane 1   [u64; words]   bit r = digit MSB of row r
+//!            present   [u64; words]   bit r = 1 ⇔ row r stores a digit
+//!                                              0 ⇔ row r is don't-care
+//! ```
+//!
+//! The compare contract is *identical* to the scalar array — the same
+//! [`CompareOutcome`] with tags **and** the per-row mismatch histogram the
+//! energy model prices (fm/1mm/2mm/3mm, §VI-A). Histograms need per-row
+//! mismatch *counts*, which are kept bit-sliced too: a ripple carry-save
+//! adder over `ceil(log2(width+1))` counter planes accumulates one
+//! mismatch bit-vector per masked column, and per-count populations fall
+//! out as popcounts of plane-equality masks.
+//!
+//! Equivalence with the scalar array (tags, histogram, write-op counts,
+//! contents) is proven by differential property tests for radix 2–5,
+//! including row counts that are not multiples of 64 — see
+//! `rust/tests/bitsliced_differential.rs`.
+
+use super::array::{CamArray, CompareOutcome};
+use super::cell::WriteOps;
+use crate::mvl::{Radix, DONT_CARE};
+
+/// Bits needed to represent every value in `0..=x` (0 for `x == 0`).
+#[inline]
+fn bits_needed(x: usize) -> usize {
+    (usize::BITS - x.leading_zeros()) as usize
+}
+
+/// A rows × cols MvCAM array stored as per-column digit planes.
+#[derive(Clone, Debug)]
+pub struct BitSlicedArray {
+    radix: Radix,
+    rows: usize,
+    cols: usize,
+    /// `u64` words per plane (`ceil(rows / 64)`).
+    words: usize,
+    /// Digit planes per column (`ceil(log2(n))`).
+    planes: usize,
+    /// Digit-plane words, indexed `[col][plane][word]` (flattened).
+    digit_planes: Vec<u64>,
+    /// Present-plane words, indexed `[col][word]` (flattened). A zero bit
+    /// marks a stored don't-care (all memristors HRS, Table I).
+    present: Vec<u64>,
+}
+
+impl BitSlicedArray {
+    /// All-don't-care array (freshly erased), matching [`CamArray::new`].
+    pub fn new(radix: Radix, rows: usize, cols: usize) -> Self {
+        let words = (rows + 63) / 64;
+        let planes = bits_needed(radix.n() as usize - 1);
+        BitSlicedArray {
+            radix,
+            rows,
+            cols,
+            words,
+            planes,
+            digit_planes: vec![0; cols * planes * words],
+            present: vec![0; cols * words],
+        }
+    }
+
+    /// From row-major digits, matching [`CamArray::from_data`].
+    pub fn from_data(radix: Radix, rows: usize, cols: usize, data: &[u8]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut array = Self::new(radix, rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                array.set(r, c, data[r * cols + c]);
+            }
+        }
+        array
+    }
+
+    /// Transpose a scalar array into planes.
+    pub fn from_cam(array: &CamArray) -> Self {
+        Self::from_data(array.radix(), array.rows(), array.cols(), array.data())
+    }
+
+    /// Materialise back into a scalar array (tests, extraction).
+    pub fn to_cam(&self) -> CamArray {
+        CamArray::from_data(self.radix, self.rows, self.cols, self.to_digits())
+    }
+
+    pub fn radix(&self) -> Radix {
+        self.radix
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Digit planes per column (`ceil(log2(n))` — 1 binary, 2 ternary
+    /// through radix 4, 3 for radix 5..8).
+    pub fn digit_plane_count(&self) -> usize {
+        self.planes
+    }
+
+    #[inline]
+    fn plane_base(&self, col: usize, plane: usize) -> usize {
+        (col * self.planes + plane) * self.words
+    }
+
+    #[inline]
+    fn present_base(&self, col: usize) -> usize {
+        col * self.words
+    }
+
+    /// All-ones for full words; the live-row prefix for the tail word.
+    #[inline]
+    fn valid_mask(&self, word: usize) -> u64 {
+        if word + 1 == self.words && self.rows % 64 != 0 {
+            (1u64 << (self.rows % 64)) - 1
+        } else {
+            !0
+        }
+    }
+
+    /// Stored digit at (row, col), [`DONT_CARE`] when the present bit is
+    /// clear.
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        debug_assert!(row < self.rows && col < self.cols);
+        let word = row >> 6;
+        let bit = 1u64 << (row & 63);
+        if self.present[self.present_base(col) + word] & bit == 0 {
+            return DONT_CARE;
+        }
+        let mut value = 0u8;
+        for p in 0..self.planes {
+            if self.digit_planes[self.plane_base(col, p) + word] & bit != 0 {
+                value |= 1 << p;
+            }
+        }
+        value
+    }
+
+    /// Store a digit directly (initialisation path, not a counted write).
+    pub fn set(&mut self, row: usize, col: usize, value: u8) {
+        assert!(self.radix.valid(value));
+        assert!(row < self.rows && col < self.cols);
+        let word = row >> 6;
+        let bit = 1u64 << (row & 63);
+        let pb = self.present_base(col);
+        if value == DONT_CARE {
+            self.present[pb + word] &= !bit;
+            for p in 0..self.planes {
+                self.digit_planes[self.plane_base(col, p) + word] &= !bit;
+            }
+        } else {
+            self.present[pb + word] |= bit;
+            for p in 0..self.planes {
+                let idx = self.plane_base(col, p) + word;
+                if (value >> p) & 1 == 1 {
+                    self.digit_planes[idx] |= bit;
+                } else {
+                    self.digit_planes[idx] &= !bit;
+                }
+            }
+        }
+    }
+
+    /// Load a row from a digit slice (initialisation path).
+    pub fn load_row(&mut self, row: usize, digits: &[u8]) {
+        assert_eq!(digits.len(), self.cols);
+        for (c, &d) in digits.iter().enumerate() {
+            self.set(row, c, d);
+        }
+    }
+
+    /// One row, materialised.
+    pub fn row_digits(&self, row: usize) -> Vec<u8> {
+        (0..self.cols).map(|c| self.get(row, c)).collect()
+    }
+
+    /// Row-major digits, materialised (the scalar array's `data()` view).
+    pub fn to_digits(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Parallel masked compare — same contract as [`CamArray::compare`],
+    /// evaluated 64 rows per word. Per column: a mismatch word is
+    /// `present AND (digit != key)` (don't-care stored values and
+    /// [`DONT_CARE`] keys never mismatch), rippled into bit-sliced
+    /// mismatch counters; tags and the histogram are then read out with
+    /// per-count popcounts.
+    pub fn compare(&self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
+        assert_eq!(cols.len(), keys.len());
+        debug_assert!(cols.iter().all(|&c| c < self.cols));
+        // out-of-radix keys would be silently truncated to the digit
+        // planes, diverging from the scalar backend's digit comparison
+        debug_assert!(keys.iter().all(|&k| self.radix.valid(k)));
+        let width = cols.len();
+        let cnt_planes = bits_needed(width);
+        // Counter planes, indexed [plane][word] (flattened): the per-row
+        // mismatch count in bit-sliced form.
+        let mut counters = vec![0u64; cnt_planes * self.words];
+        for (&c, &k) in cols.iter().zip(keys) {
+            if k == DONT_CARE {
+                continue; // decoder emits all-low signals: every row matches
+            }
+            let pb = self.present_base(c);
+            for w in 0..self.words {
+                // diff bit r = 1 ⇔ stored digit bits differ from the key's
+                let mut diff = 0u64;
+                for p in 0..self.planes {
+                    let plane = self.digit_planes[self.plane_base(c, p) + w];
+                    let key_plane = if (k >> p) & 1 == 1 { !0u64 } else { 0 };
+                    diff |= plane ^ key_plane;
+                }
+                // ripple carry-save add of the mismatch bit-vector
+                let mut carry = self.present[pb + w] & diff;
+                for cp in 0..cnt_planes {
+                    if carry == 0 {
+                        break;
+                    }
+                    let slot = &mut counters[cp * self.words + w];
+                    let next = *slot & carry;
+                    *slot ^= carry;
+                    carry = next;
+                }
+                debug_assert_eq!(carry, 0, "mismatch counter overflow");
+            }
+        }
+        // Read out: per mismatch count k, the population of rows whose
+        // counter planes spell k.
+        let mut tags = vec![false; self.rows];
+        let mut hist = vec![0u64; width + 1];
+        for w in 0..self.words {
+            let valid = self.valid_mask(w);
+            for k in 0..=width {
+                let mut eq = valid;
+                for cp in 0..cnt_planes {
+                    let plane = counters[cp * self.words + w];
+                    eq &= if (k >> cp) & 1 == 1 { plane } else { !plane };
+                }
+                if eq == 0 {
+                    continue;
+                }
+                hist[k] += u64::from(eq.count_ones());
+                if k == 0 {
+                    // zero mismatches ⇔ the Tag bit is set
+                    let mut m = eq;
+                    while m != 0 {
+                        tags[(w << 6) + m.trailing_zeros() as usize] = true;
+                        m &= m - 1;
+                    }
+                }
+            }
+        }
+        CompareOutcome { tags, mismatch_hist: hist }
+    }
+
+    /// Parallel masked write — same contract as [`CamArray::write`],
+    /// applied 64 rows per merge mask. Set/reset accounting follows
+    /// Table V via word masks: `changed` rows cost one set + one reset,
+    /// writes *from* don't-care one set, writes *to* don't-care one reset.
+    pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) -> WriteOps {
+        assert_eq!(tags.len(), self.rows);
+        assert_eq!(cols.len(), values.len());
+        debug_assert!(values.iter().all(|&v| self.radix.valid(v)));
+        let mut tag_words = vec![0u64; self.words];
+        for (r, &t) in tags.iter().enumerate() {
+            if t {
+                tag_words[r >> 6] |= 1u64 << (r & 63);
+            }
+        }
+        let mut ops = WriteOps::default();
+        for (&c, &v) in cols.iter().zip(values) {
+            let pb = self.present_base(c);
+            if v == DONT_CARE {
+                // to don't-care: reset the previously-set memristor of
+                // every tagged row that stored a digit
+                for w in 0..self.words {
+                    let t = tag_words[w];
+                    if t == 0 {
+                        continue;
+                    }
+                    let erased = self.present[pb + w] & t;
+                    ops.resets += erased.count_ones();
+                    self.present[pb + w] &= !t;
+                    for p in 0..self.planes {
+                        self.digit_planes[self.plane_base(c, p) + w] &= !t;
+                    }
+                }
+            } else {
+                for w in 0..self.words {
+                    let t = tag_words[w];
+                    if t == 0 {
+                        continue;
+                    }
+                    // eq bit r = 1 ⇔ stored digit bits equal the value's
+                    let mut eq = !0u64;
+                    for p in 0..self.planes {
+                        let plane = self.digit_planes[self.plane_base(c, p) + w];
+                        eq &= if (v >> p) & 1 == 1 { plane } else { !plane };
+                    }
+                    let present = self.present[pb + w];
+                    let changed = t & present & !eq; // digit → different digit
+                    let from_x = t & !present; // don't-care → digit
+                    ops.sets += (changed | from_x).count_ones();
+                    ops.resets += changed.count_ones();
+                    for p in 0..self.planes {
+                        let idx = self.plane_base(c, p) + w;
+                        if (v >> p) & 1 == 1 {
+                            self.digit_planes[idx] |= t;
+                        } else {
+                            self.digit_planes[idx] &= !t;
+                        }
+                    }
+                    self.present[pb + w] |= t;
+                }
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::Rng;
+
+    const T: Radix = Radix::TERNARY;
+
+    fn demo_array() -> BitSlicedArray {
+        // the scalar array.rs demo, transposed into planes
+        BitSlicedArray::from_data(
+            T,
+            4,
+            3,
+            &[
+                0, 1, 2, //
+                0, 1, 1, //
+                2, 2, 2, //
+                DONT_CARE, 1, 0,
+            ],
+        )
+    }
+
+    #[test]
+    fn get_set_roundtrip_including_dont_care() {
+        let mut a = BitSlicedArray::new(T, 130, 3);
+        assert_eq!(a.get(129, 2), DONT_CARE);
+        a.set(129, 2, 1);
+        assert_eq!(a.get(129, 2), 1);
+        a.set(129, 2, DONT_CARE);
+        assert_eq!(a.get(129, 2), DONT_CARE);
+        assert_eq!(a.digit_plane_count(), 2);
+    }
+
+    #[test]
+    fn compare_matches_scalar_demo() {
+        let a = demo_array();
+        let out = a.compare(&[0, 1, 2], &[0, 1, 2]);
+        assert_eq!(out.tags, vec![true, false, false, false]);
+        assert_eq!(out.mismatch_hist, vec![1, 2, 1, 0]);
+        let out = a.compare(&[1], &[1]);
+        assert_eq!(out.tags, vec![true, true, false, true]);
+        assert_eq!(out.mismatch_hist, vec![3, 1]);
+        let out = a.compare(&[0, 2], &[DONT_CARE, 2]);
+        assert_eq!(out.tags, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn write_matches_scalar_demo() {
+        let mut a = demo_array();
+        let tags = vec![true, false, true, false];
+        let ops = a.write(&tags, &[1, 2], &[0, 0]);
+        assert_eq!(a.row_digits(0), vec![0, 0, 0]);
+        assert_eq!(a.row_digits(1), vec![0, 1, 1]); // untouched
+        assert_eq!(a.row_digits(2), vec![2, 0, 0]);
+        assert_eq!(a.row_digits(3), vec![DONT_CARE, 1, 0]); // untouched
+        assert_eq!(ops, WriteOps { sets: 4, resets: 4 });
+    }
+
+    #[test]
+    fn write_from_and_to_dont_care_op_counts() {
+        let mut a = demo_array();
+        let ops = a.write(&[false, false, false, true], &[0], &[2]);
+        assert_eq!(ops, WriteOps { sets: 1, resets: 0 });
+        assert_eq!(a.get(3, 0), 2);
+        let ops = a.write(&[true, false, false, true], &[0], &[DONT_CARE]);
+        assert_eq!(ops, WriteOps { sets: 0, resets: 2 });
+        assert_eq!(a.get(0, 0), DONT_CARE);
+    }
+
+    /// Tail-word masking: rows beyond the live count must never leak into
+    /// tags or the histogram, for row counts straddling word boundaries.
+    #[test]
+    fn tail_word_rows_do_not_leak() {
+        for rows in [1usize, 63, 64, 65, 127, 128, 129] {
+            let a = BitSlicedArray::new(T, rows, 2); // all don't-care
+            let out = a.compare(&[0, 1], &[1, 2]);
+            assert_eq!(out.tags.len(), rows);
+            assert!(out.tags.iter().all(|&t| t), "rows={rows}");
+            assert_eq!(out.mismatch_hist[0], rows as u64, "rows={rows}");
+            assert_eq!(out.mismatch_hist.iter().sum::<u64>(), rows as u64);
+        }
+    }
+
+    /// Same invariants the scalar array proves: histogram mass equals the
+    /// row count; bucket 0 equals the tag population.
+    #[test]
+    fn histogram_invariants() {
+        forall(Config::cases(200), |rng: &mut Rng| {
+            let rows = 1 + rng.index(200);
+            let cols = 1 + rng.index(8);
+            let mut data = vec![0u8; rows * cols];
+            for d in data.iter_mut() {
+                *d = if rng.chance(0.1) { DONT_CARE } else { rng.digit(3) };
+            }
+            let a = BitSlicedArray::from_data(T, rows, cols, &data);
+            let width = 1 + rng.index(cols);
+            let mut all: Vec<usize> = (0..cols).collect();
+            rng.shuffle(&mut all);
+            let sel = &all[..width];
+            let keys: Vec<u8> = (0..width).map(|_| rng.digit(3)).collect();
+            let out = a.compare(sel, &keys);
+            assert_eq!(out.mismatch_hist.iter().sum::<u64>(), rows as u64);
+            assert_eq!(out.mismatch_hist[0], out.match_count() as u64);
+        });
+    }
+
+    #[test]
+    fn cam_roundtrip_preserves_contents() {
+        let mut rng = Rng::new(77);
+        let mut data = vec![0u8; 100 * 5];
+        for d in data.iter_mut() {
+            *d = if rng.chance(0.2) { DONT_CARE } else { rng.digit(5) };
+        }
+        let cam = CamArray::from_data(Radix(5), 100, 5, data);
+        let sliced = BitSlicedArray::from_cam(&cam);
+        assert_eq!(sliced.digit_plane_count(), 3);
+        assert_eq!(sliced.to_cam().data(), cam.data());
+    }
+}

@@ -1,18 +1,29 @@
 //! Functional model of the nTnR MvCAM (§II-A/§II-C): cells, rows, arrays.
 //!
-//! Two levels of fidelity coexist:
+//! Three levels of fidelity coexist:
 //!
 //! * [`cell::MvCamCell`] models individual memristor states (Table I) and
 //!   derives set/reset actions per write (Table V) — used for golden tests
 //!   and the write-energy accounting rules.
-//! * [`array::CamArray`] is the vectorised digit-level model the simulator
-//!   hot path runs on; its write-op accounting is proven equivalent to the
-//!   cell model by tests.
+//! * [`array::CamArray`] is the scalar digit-level model: row-major `u8`
+//!   digits, one cell at a time; its write-op accounting is proven
+//!   equivalent to the cell model by tests.
+//! * [`bitsliced::BitSlicedArray`] is the row-parallel digit-plane model:
+//!   columns stored as bit-planes packed 64 rows per `u64`, evaluating a
+//!   masked compare with pure AND/XOR/OR word ops — observably identical
+//!   to the scalar array (differential tests), much faster at scale.
+//!
+//! [`storage::CamStorage`] selects between the scalar and bit-sliced
+//! backends at runtime.
 
 pub mod cell;
 pub mod array;
+pub mod bitsliced;
+pub mod storage;
 pub mod faults;
 
 pub use array::{CamArray, CompareOutcome, TagVector};
+pub use bitsliced::BitSlicedArray;
 pub use cell::{MemristorState, MvCamCell, WriteOps};
 pub use faults::{march_detect, Fault, FaultyArray};
+pub use storage::{CamStorage, StorageKind};

@@ -1,0 +1,228 @@
+//! Storage-backend selection for CAM arrays.
+//!
+//! Two interchangeable implementations of the compare/write contract:
+//!
+//! * [`CamArray`] — scalar row-major digits. Fastest per-cell random
+//!   access (`get`/`set`), which the controller's state-bucketing fast
+//!   path leans on; the natural choice for small arrays and for LUT
+//!   programs that touch few rows per pass.
+//! * [`BitSlicedArray`] — digit planes packed 64 rows per word. The
+//!   compare/write *kernels* process 64 rows per word op (tag
+//!   materialisation at the `Vec<bool>` API boundary is still O(rows),
+//!   so the end-to-end win is a large constant factor rather than a full
+//!   64x), which makes it the right choice for faithful pass-by-pass
+//!   simulation of large arrays (≥ a few thousand rows) — see
+//!   `rust/benches/bench_main.rs` (`hot/compare_storage_*`).
+//!
+//! [`CamStorage`] is the runtime-selectable sum of the two; the
+//! coordinator's native backend, the AP controller, and the binary-AP
+//! baseline all accept a [`StorageKind`] so configurations can pick per
+//! workload (CLI: `--backend native|native-bitsliced`).
+
+use super::array::{CamArray, CompareOutcome};
+use super::bitsliced::BitSlicedArray;
+use super::cell::WriteOps;
+use crate::mvl::Radix;
+
+/// Which CAM storage implementation to use (CLI/config selection).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StorageKind {
+    /// Row-major `u8` digits ([`CamArray`]).
+    #[default]
+    Scalar,
+    /// Packed digit planes ([`BitSlicedArray`]).
+    BitSliced,
+}
+
+impl std::str::FromStr for StorageKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(StorageKind::Scalar),
+            "bitsliced" | "bit-sliced" => Ok(StorageKind::BitSliced),
+            other => Err(format!("unknown storage '{other}' (scalar|bitsliced)")),
+        }
+    }
+}
+
+impl std::fmt::Display for StorageKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            StorageKind::Scalar => "scalar",
+            StorageKind::BitSliced => "bitsliced",
+        })
+    }
+}
+
+/// A CAM array with a runtime-selected storage backend. Both variants
+/// implement the exact same compare/write contract ([`CompareOutcome`]
+/// with tags + mismatch histogram, [`WriteOps`] accounting) — proven
+/// observably identical by differential tests.
+#[derive(Clone, Debug)]
+pub enum CamStorage {
+    Scalar(CamArray),
+    BitSliced(BitSlicedArray),
+}
+
+impl CamStorage {
+    /// All-don't-care array of the chosen kind.
+    pub fn new(kind: StorageKind, radix: Radix, rows: usize, cols: usize) -> Self {
+        match kind {
+            StorageKind::Scalar => CamStorage::Scalar(CamArray::new(radix, rows, cols)),
+            StorageKind::BitSliced => {
+                CamStorage::BitSliced(BitSlicedArray::new(radix, rows, cols))
+            }
+        }
+    }
+
+    /// From row-major digits.
+    pub fn from_data(kind: StorageKind, radix: Radix, rows: usize, cols: usize, data: &[u8]) -> Self {
+        match kind {
+            StorageKind::Scalar => {
+                CamStorage::Scalar(CamArray::from_data(radix, rows, cols, data.to_vec()))
+            }
+            StorageKind::BitSliced => {
+                CamStorage::BitSliced(BitSlicedArray::from_data(radix, rows, cols, data))
+            }
+        }
+    }
+
+    /// Re-house an already-loaded scalar array in the chosen kind.
+    pub fn from_cam(kind: StorageKind, array: CamArray) -> Self {
+        match kind {
+            StorageKind::Scalar => CamStorage::Scalar(array),
+            StorageKind::BitSliced => CamStorage::BitSliced(BitSlicedArray::from_cam(&array)),
+        }
+    }
+
+    /// Which backend this is.
+    pub fn kind(&self) -> StorageKind {
+        match self {
+            CamStorage::Scalar(_) => StorageKind::Scalar,
+            CamStorage::BitSliced(_) => StorageKind::BitSliced,
+        }
+    }
+
+    pub fn radix(&self) -> Radix {
+        match self {
+            CamStorage::Scalar(a) => a.radix(),
+            CamStorage::BitSliced(a) => a.radix(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            CamStorage::Scalar(a) => a.rows(),
+            CamStorage::BitSliced(a) => a.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            CamStorage::Scalar(a) => a.cols(),
+            CamStorage::BitSliced(a) => a.cols(),
+        }
+    }
+
+    /// Stored digit at (row, col).
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        match self {
+            CamStorage::Scalar(a) => a.get(row, col),
+            CamStorage::BitSliced(a) => a.get(row, col),
+        }
+    }
+
+    /// Store a digit directly (initialisation path, not a counted write).
+    pub fn set(&mut self, row: usize, col: usize, value: u8) {
+        match self {
+            CamStorage::Scalar(a) => a.set(row, col, value),
+            CamStorage::BitSliced(a) => a.set(row, col, value),
+        }
+    }
+
+    /// Load a row from a digit slice (initialisation path).
+    pub fn load_row(&mut self, row: usize, digits: &[u8]) {
+        match self {
+            CamStorage::Scalar(a) => a.load_row(row, digits),
+            CamStorage::BitSliced(a) => a.load_row(row, digits),
+        }
+    }
+
+    /// One row, materialised.
+    pub fn row_digits(&self, row: usize) -> Vec<u8> {
+        match self {
+            CamStorage::Scalar(a) => a.row(row).to_vec(),
+            CamStorage::BitSliced(a) => a.row_digits(row),
+        }
+    }
+
+    /// Row-major digits, materialised.
+    pub fn to_digits(&self) -> Vec<u8> {
+        match self {
+            CamStorage::Scalar(a) => a.data().to_vec(),
+            CamStorage::BitSliced(a) => a.to_digits(),
+        }
+    }
+
+    /// Parallel masked compare — see [`CamArray::compare`].
+    pub fn compare(&self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
+        match self {
+            CamStorage::Scalar(a) => a.compare(cols, keys),
+            CamStorage::BitSliced(a) => a.compare(cols, keys),
+        }
+    }
+
+    /// Parallel masked write — see [`CamArray::write`].
+    pub fn write(&mut self, tags: &[bool], cols: &[usize], values: &[u8]) -> WriteOps {
+        match self {
+            CamStorage::Scalar(a) => a.write(tags, cols, values),
+            CamStorage::BitSliced(a) => a.write(tags, cols, values),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvl::DONT_CARE;
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!("scalar".parse::<StorageKind>().unwrap(), StorageKind::Scalar);
+        assert_eq!("bitsliced".parse::<StorageKind>().unwrap(), StorageKind::BitSliced);
+        assert_eq!("bit-sliced".parse::<StorageKind>().unwrap(), StorageKind::BitSliced);
+        assert!("columnar".parse::<StorageKind>().is_err());
+        assert_eq!(StorageKind::default(), StorageKind::Scalar);
+        assert_eq!(StorageKind::BitSliced.to_string(), "bitsliced");
+    }
+
+    #[test]
+    fn both_kinds_share_the_contract() {
+        let data = vec![0, 1, 2, DONT_CARE, 1, 0];
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut s = CamStorage::from_data(kind, Radix::TERNARY, 2, 3, &data);
+            assert_eq!(s.kind(), kind);
+            assert_eq!(s.rows(), 2);
+            assert_eq!(s.cols(), 3);
+            assert_eq!(s.to_digits(), data);
+            assert_eq!(s.row_digits(1), vec![DONT_CARE, 1, 0]);
+            let out = s.compare(&[1], &[1]);
+            assert_eq!(out.tags, vec![true, true]);
+            let ops = s.write(&out.tags, &[0], &[2]);
+            assert_eq!((ops.sets, ops.resets), (2, 1)); // 0→2 and X→2
+            assert_eq!(s.get(0, 0), 2);
+            assert_eq!(s.get(1, 0), 2);
+        }
+    }
+
+    #[test]
+    fn new_arrays_are_all_dont_care() {
+        use crate::mvl::DONT_CARE as X;
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let s = CamStorage::new(kind, Radix::TERNARY, 4, 2);
+            assert_eq!(s.to_digits(), vec![X; 8], "{kind}");
+        }
+    }
+}

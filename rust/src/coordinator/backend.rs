@@ -9,7 +9,7 @@
 use super::batcher::Tile;
 use super::job::OpKind;
 use crate::ap::{Ap, ApStats, ExecMode};
-use crate::cam::CamArray;
+use crate::cam::{CamStorage, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::Radix;
 use crate::runtime::artifact::ArtifactMode;
@@ -18,7 +18,11 @@ use crate::runtime::{PjrtRuntime, Registry};
 /// Identifies a backend for CLI/config selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// Native simulator, scalar storage, state-bucketing fast path.
     Native,
+    /// Native simulator over the bit-sliced digit-plane storage, faithful
+    /// pass-by-pass execution (word-parallel compares/writes).
+    NativeBitSliced,
     Pjrt,
 }
 
@@ -27,8 +31,11 @@ impl std::str::FromStr for BackendKind {
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "native" => Ok(BackendKind::Native),
+            "native-bitsliced" | "bitsliced" => Ok(BackendKind::NativeBitSliced),
             "pjrt" => Ok(BackendKind::Pjrt),
-            other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+            other => Err(format!(
+                "unknown backend '{other}' (native|native-bitsliced|pjrt)"
+            )),
         }
     }
 }
@@ -57,9 +64,29 @@ pub trait Backend {
     fn name(&self) -> &'static str;
 }
 
-/// The native functional simulator backend.
+/// The native functional simulator backend, over either CAM storage
+/// backend ([`StorageKind`]).
 #[derive(Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    storage: StorageKind,
+}
+
+impl NativeBackend {
+    /// Native backend over the chosen storage.
+    pub fn new(storage: StorageKind) -> Self {
+        NativeBackend { storage }
+    }
+
+    /// Native backend over bit-sliced digit-plane storage.
+    pub fn bit_sliced() -> Self {
+        Self::new(StorageKind::BitSliced)
+    }
+
+    /// The configured storage kind.
+    pub fn storage(&self) -> StorageKind {
+        self.storage
+    }
+}
 
 impl Backend for NativeBackend {
     fn run_tile(
@@ -71,14 +98,20 @@ impl Backend for NativeBackend {
         tile: &Tile,
     ) -> anyhow::Result<(Vec<u8>, ApStats)> {
         let layout = tile.layout;
-        let array = CamArray::from_data(radix, tile.tile_rows, layout.cols(), tile.data.clone());
-        let mut ap = Ap::new(array);
+        let storage =
+            CamStorage::from_data(self.storage, radix, tile.tile_rows, layout.cols(), &tile.data);
+        let mut ap = Ap::with_storage(storage);
         let mode = if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
-        // §Perf: state-bucketing fast path — proven identical (values and
-        // stats) to the faithful per-pass path in controller tests.
-        ap.apply_lut_multi_fast(lut, &layout.positions(), mode);
+        match self.storage {
+            // §Perf: state-bucketing fast path — proven identical (values
+            // and stats) to the faithful per-pass path in controller tests.
+            StorageKind::Scalar => ap.apply_lut_multi_fast(lut, &layout.positions(), mode),
+            // Faithful pass-by-pass execution; the digit planes make each
+            // compare/write word-parallel across rows.
+            StorageKind::BitSliced => ap.apply_lut_multi(lut, &layout.positions(), mode),
+        }
         let stats = ap.take_stats();
-        Ok((ap.array().data().to_vec(), stats))
+        Ok((ap.storage().to_digits(), stats))
     }
 
     fn preferred_rows(&self, _: OpKind, _: Radix, _: bool, _: usize) -> Option<usize> {
@@ -86,7 +119,10 @@ impl Backend for NativeBackend {
     }
 
     fn name(&self) -> &'static str {
-        "native"
+        match self.storage {
+            StorageKind::Scalar => "native",
+            StorageKind::BitSliced => "native-bitsliced",
+        }
     }
 }
 
@@ -186,7 +222,7 @@ mod tests {
         let b: Vec<Word> = (0..10).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
         let tiles = make_tiles(&a, &b, 4);
         let lut = adder_lut(radix, ExecMode::Blocked);
-        let mut be = NativeBackend;
+        let mut be = NativeBackend::default();
         let mut all = Vec::new();
         for t in &tiles {
             let (data, stats) = be.run_tile(OpKind::Add, radix, true, &lut, t).unwrap();
@@ -201,10 +237,47 @@ mod tests {
         }
     }
 
+    /// The scalar and bit-sliced native backends produce identical tile
+    /// data AND identical stats (fast path ≡ faithful path ≡ bit-sliced).
+    #[test]
+    fn storage_kinds_agree_on_tiles() {
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(33);
+        let p = 5;
+        let rows = 70; // straddles a 64-row word boundary inside a tile
+        let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        for blocked in [false, true] {
+            let lut = adder_lut(
+                radix,
+                if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked },
+            );
+            let tiles = make_tiles(&a, &b, 100);
+            let mut scalar = NativeBackend::default();
+            let mut sliced = NativeBackend::bit_sliced();
+            for t in &tiles {
+                let (d1, s1) = scalar.run_tile(OpKind::Add, radix, blocked, &lut, t).unwrap();
+                let (d2, s2) = sliced.run_tile(OpKind::Add, radix, blocked, &lut, t).unwrap();
+                assert_eq!(d1, d2, "blocked={blocked}");
+                assert_eq!(s1, s2, "blocked={blocked}");
+            }
+        }
+    }
+
     #[test]
     fn backend_kind_parses() {
         assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!(
+            "native-bitsliced".parse::<BackendKind>().unwrap(),
+            BackendKind::NativeBitSliced
+        );
+        assert_eq!(
+            "bitsliced".parse::<BackendKind>().unwrap(),
+            BackendKind::NativeBitSliced
+        );
         assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
         assert!("gpu".parse::<BackendKind>().is_err());
+        assert_eq!(NativeBackend::default().name(), "native");
+        assert_eq!(NativeBackend::bit_sliced().name(), "native-bitsliced");
     }
 }

@@ -129,7 +129,7 @@ mod tests {
     use crate::util::prop::{forall, Config};
 
     fn engine() -> VectorEngine {
-        VectorEngine::new(Box::new(NativeBackend))
+        VectorEngine::new(Box::new(NativeBackend::default()))
     }
 
     #[test]
@@ -182,6 +182,29 @@ mod tests {
         let mut eng = engine();
         assert_eq!(eng.execute(&mk(true)).unwrap().delay_cycles, 600);
         assert_eq!(eng.execute(&mk(false)).unwrap().delay_cycles, 840);
+    }
+
+    /// Same job through the scalar-storage and bit-sliced-storage native
+    /// backends: identical values, stats, and modeled energy.
+    #[test]
+    fn bitsliced_backend_matches_scalar() {
+        forall(Config::cases(10), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(10);
+            let rows = 1 + rng.index(400);
+            let a: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let b: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let job = Job::new(1, OpKind::Add, radix, rng.chance(0.5), a, b);
+            let mut scalar = VectorEngine::new(Box::new(NativeBackend::default()));
+            let mut sliced = VectorEngine::new(Box::new(NativeBackend::bit_sliced()));
+            let want = scalar.execute(&job).unwrap();
+            let got = sliced.execute(&job).unwrap();
+            assert_eq!(got.values, want.values, "rows={rows} p={p}");
+            assert_eq!(got.stats, want.stats, "rows={rows} p={p}");
+            assert_eq!(got.energy, want.energy);
+        });
     }
 
     #[test]

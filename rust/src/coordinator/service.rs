@@ -91,7 +91,8 @@ impl EngineService {
     ) -> anyhow::Result<Self> {
         Self::start(workers, queue_depth, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
-                BackendKind::Native => Box::new(NativeBackend),
+                BackendKind::Native => Box::new(NativeBackend::default()),
+                BackendKind::NativeBitSliced => Box::new(NativeBackend::bit_sliced()),
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })
@@ -143,7 +144,7 @@ mod tests {
 
     #[test]
     fn service_processes_concurrent_jobs() {
-        let svc = EngineService::start(4, 8, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+        let svc = EngineService::start(4, 8, || Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>))
             .unwrap();
         let mut rng = Rng::new(5);
         let mut pending = Vec::new();
@@ -163,7 +164,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_clean_without_jobs() {
-        let svc = EngineService::start(2, 2, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+        let svc = EngineService::start(2, 2, || Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>))
             .unwrap();
         let m = svc.shutdown();
         assert_eq!(m.jobs, 0);
@@ -171,7 +172,7 @@ mod tests {
 
     #[test]
     fn run_blocks_for_result() {
-        let svc = EngineService::start(1, 1, || Ok(Box::new(NativeBackend) as Box<dyn Backend>))
+        let svc = EngineService::start(1, 1, || Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>))
             .unwrap();
         let mut rng = Rng::new(9);
         let (job, expect) = add_job(3, &mut rng, 10, 4);

@@ -6,7 +6,7 @@
 //! * The functional graph of any total `f : S → S` decomposes into
 //!   components each containing exactly one cycle; self-loop cycles are the
 //!   noAction roots. Longer cycles make a naive in-place LUT unsound (the
-//!   "domino effect" of §IV-A), so [`StateDiagram::break_cycles`] rewrites
+//!   "domino effect" of §IV-A), so [`StateDiagram::build`] rewrites
 //!   one edge per cycle to an alternate output with the *same written
 //!   digits* but different kept digits (a widened write, §IV-B) until the
 //!   diagram is a forest of trees rooted at noAction states.

@@ -39,7 +39,7 @@ pub fn measure(radix: Radix, digits: usize, rows: usize, seed: u64) -> PairingRe
     let b: Vec<Word> = (0..rows)
         .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
         .collect();
-    let mut eng = VectorEngine::new(Box::new(NativeBackend));
+    let mut eng = VectorEngine::new(Box::new(NativeBackend::default()));
     // Energy/area metrics are mode-independent (§VI-B uses non-blocked);
     // blocked changes only delay.
     let job = Job::new(1, OpKind::Add, radix, false, a, b);

@@ -26,6 +26,26 @@ impl TruthTable {
     /// Panics if `f` modifies a kept digit (those are not written back, so
     /// a function that changes them is not implementable in-place as given;
     /// cycle-breaking *extends* writes, it never starts with them).
+    ///
+    /// # Examples
+    ///
+    /// The ternary full adder of §IV: state `(A, B, C)`, `A` kept,
+    /// `(B, C)` overwritten with `(sum, carry)`:
+    ///
+    /// ```
+    /// use mvap::func::TruthTable;
+    /// use mvap::mvl::Radix;
+    ///
+    /// let tfa = TruthTable::from_fn("tfa", Radix::TERNARY, 3, 1, |s| {
+    ///     let sum = s[0] + s[1] + s[2];
+    ///     vec![s[0], sum % 3, sum / 3]
+    /// });
+    /// // (1, 2, 0): 1 + 2 + 0 = 3 ⇒ sum digit 0, carry 1
+    /// let out = tfa.output_of(tfa.encode_state(&[1, 2, 0]));
+    /// assert_eq!(tfa.decode(out), vec![1, 0, 1]);
+    /// // fixed points are the noAction states
+    /// assert!(tfa.is_no_action(tfa.encode_state(&[0, 0, 0])));
+    /// ```
     pub fn from_fn<F>(name: &str, radix: Radix, arity: usize, write_start: usize, f: F) -> Self
     where
         F: Fn(&[u8]) -> Vec<u8>,

@@ -12,7 +12,11 @@
 //!   widened-write cycle-breaking transform (§IV-B).
 //! * [`lutgen`] — automatic LUT generation: the *non-blocked* DFS ordering
 //!   (Algorithm 1) and the *blocked* BFS + grpLvl grouping (Algorithms 2–4).
-//! * [`cam`] — functional model of the nTnR MvCAM cell/row/array (§II).
+//! * [`cam`] — functional model of the nTnR MvCAM cell/row/array (§II),
+//!   with two interchangeable storage backends: the scalar
+//!   [`cam::CamArray`] and the row-parallel bit-sliced
+//!   [`cam::BitSlicedArray`] (digit planes packed 64 rows per `u64`),
+//!   selected at runtime through [`cam::CamStorage`].
 //! * [`ap`] — the associative-processor controller: key/mask/tag registers,
 //!   pass execution, multi-digit in-place arithmetic, blocked-mode write
 //!   coalescing, and event-count statistics.
@@ -32,6 +36,11 @@
 //! lowers the vectorised AP pass engine to HLO text under `artifacts/`,
 //! which [`runtime`] loads and executes; nothing Python runs at request
 //! time.
+//!
+//! See `README.md` for quickstart commands and `docs/ARCHITECTURE.md` for
+//! the end-to-end data flow.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod util;
 pub mod mvl;

@@ -56,6 +56,28 @@ pub struct GrpLvlSnapshot {
 }
 
 /// Generate the blocked LUT per Algorithms 2–4.
+///
+/// # Examples
+///
+/// The ternary full adder compresses 21 write cycles (one per pass,
+/// non-blocked) into 9 write blocks (Table X):
+///
+/// ```
+/// use mvap::diagram::StateDiagram;
+/// use mvap::func::full_add;
+/// use mvap::lutgen::generate_blocked;
+/// use mvap::mvl::Radix;
+///
+/// let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+/// let lut = generate_blocked(&d);
+/// assert_eq!(lut.passes.len(), 21); // compare cycles unchanged
+/// assert_eq!(lut.num_groups, 9); // write cycles: 21 → 9
+/// // every pass in a block shares one write action
+/// for block in lut.blocks() {
+///     let action = lut.write_of(block[0]);
+///     assert!(block.iter().all(|p| lut.write_of(p) == action));
+/// }
+/// ```
 pub fn generate_blocked(d: &StateDiagram) -> Lut {
     generate_blocked_traced(d).0
 }

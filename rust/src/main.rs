@@ -26,8 +26,8 @@ USAGE:
            [--rows N] [--seed S] [--scheme traditional|optimized] [--results DIR]
   mvap lut <add|sub|mac> [--radix N] [--blocked] [--dot]
   mvap run [--op add|sub|mac] [--rows N] [--digits P] [--radix N]
-           [--backend native|pjrt] [--workers W] [--jobs J] [--blocked]
-           [--artifacts DIR] [--seed S]
+           [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
+           [--blocked] [--artifacts DIR] [--seed S]
   mvap artifacts [--artifacts DIR]
   mvap help
 ";

@@ -9,6 +9,103 @@ use crate::ap::ApStats;
 use std::collections::HashMap;
 use std::path::Path;
 
+/// Compile-time stub for the `xla` crate (the offline crate set does not
+/// ship it).
+///
+/// The client type is an *empty enum*, so a stub client can never be
+/// constructed: `PjRtClient::cpu` fails with a clear message and every
+/// other method is statically unreachable (`match *self {}`). To use the
+/// real runtime, add the `xla` crate as a dependency and delete this
+/// module — every `xla::` path below then resolves to the extern crate.
+mod xla {
+    /// Error type for the stub runtime.
+    #[derive(Debug)]
+    pub struct XlaError(pub &'static str);
+
+    impl std::fmt::Display for XlaError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str(self.0)
+        }
+    }
+
+    impl std::error::Error for XlaError {}
+
+    const DISABLED: &str =
+        "built against the in-tree XLA stub — the PJRT runtime is unavailable \
+         (use the native backend, or add the real `xla` crate; see rust/Cargo.toml)";
+
+    /// Uninhabited: construction always fails, so methods are unreachable.
+    pub enum PjRtClient {}
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<Self, XlaError> {
+            Err(XlaError(DISABLED))
+        }
+
+        pub fn platform_name(&self) -> String {
+            match *self {}
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+            match *self {}
+        }
+    }
+
+    /// Uninhabited: only produced by `PjRtClient::compile`.
+    pub enum PjRtLoadedExecutable {}
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+            match *self {}
+        }
+    }
+
+    /// Uninhabited: only produced by `PjRtLoadedExecutable::execute`.
+    pub enum PjRtBuffer {}
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+            match *self {}
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+            Err(XlaError(DISABLED))
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1(_values: &[i32]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+            Ok(Literal)
+        }
+
+        pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), XlaError> {
+            Err(XlaError(DISABLED))
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+            Err(XlaError(DISABLED))
+        }
+    }
+}
+
 /// One compiled AP engine (a lowered L2 `inplace_op` variant).
 pub struct PjrtEngine {
     pub meta: ArtifactMeta,

@@ -48,7 +48,7 @@ fn pjrt_matches_native_ternary_add() {
         let b = random_words(&mut rng, rows, p, radix);
         let job = |id| Job::new(id, OpKind::Add, radix, blocked, a.clone(), b.clone());
 
-        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let mut native = VectorEngine::new(Box::new(NativeBackend::default()));
         let want = native.execute(&job(1)).unwrap();
 
         let pjrt_backend = PjrtBackend::new(&dir).expect("pjrt backend");
@@ -78,7 +78,7 @@ fn pjrt_matches_native_binary_add() {
     let b = random_words(&mut rng, 200, 32, radix);
     let mk = |id, blocked| Job::new(id, OpKind::Add, radix, blocked, a.clone(), b.clone());
     for blocked in [false, true] {
-        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let mut native = VectorEngine::new(Box::new(NativeBackend::default()));
         let want = native.execute(&mk(1, blocked)).unwrap();
         let mut pjrt = VectorEngine::new(Box::new(PjrtBackend::new(&dir).unwrap()));
         let got = pjrt.execute(&mk(2, blocked)).unwrap();
@@ -95,7 +95,7 @@ fn pjrt_sub_and_mac() {
     for (op, p) in [(OpKind::Sub, 20usize), (OpKind::Mac, 8)] {
         let a = random_words(&mut rng, 64, p, radix);
         let b = random_words(&mut rng, 64, p, radix);
-        let mut native = VectorEngine::new(Box::new(NativeBackend));
+        let mut native = VectorEngine::new(Box::new(NativeBackend::default()));
         let want = native
             .execute(&Job::new(1, op, radix, true, a.clone(), b.clone()))
             .unwrap();

@@ -19,7 +19,7 @@ fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word>
 #[test]
 fn service_end_to_end_mixed_workload() {
     let svc = EngineService::start(4, 16, || {
-        Ok(Box::new(NativeBackend) as Box<dyn Backend>)
+        Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
     })
     .unwrap();
     let mut rng = Rng::new(404);
@@ -86,7 +86,7 @@ fn tiling_invariance_property() {
         let want_stats = ap.take_stats();
 
         // Coordinator path (DEFAULT_TILE_ROWS tiling + padding).
-        let mut eng = mvap::coordinator::VectorEngine::new(Box::new(NativeBackend));
+        let mut eng = mvap::coordinator::VectorEngine::new(Box::new(NativeBackend::default()));
         let job = Job::new(1, OpKind::Add, radix, true, a, b);
         let got = eng.execute(&job).unwrap();
 
@@ -102,6 +102,30 @@ fn tiling_invariance_property() {
     });
 }
 
+/// The threaded service over the bit-sliced backend kind produces the
+/// same results as the scalar-native service.
+#[test]
+fn bitsliced_service_matches_native() {
+    use mvap::coordinator::BackendKind;
+    let run = |kind: BackendKind| {
+        let svc = EngineService::start_kind(2, 4, kind, "artifacts".into()).unwrap();
+        let mut rng = Rng::new(88);
+        let mut out = Vec::new();
+        for id in 0..6 {
+            let rows = 65 + 13 * id as usize; // straddle word boundaries
+            let a = random_words(&mut rng, rows, 7, Radix::TERNARY);
+            let b = random_words(&mut rng, rows, 7, Radix::TERNARY);
+            let res = svc
+                .run(Job::new(id, OpKind::Add, Radix::TERNARY, true, a, b))
+                .unwrap();
+            out.push((res.values, res.stats));
+        }
+        svc.shutdown();
+        out
+    };
+    assert_eq!(run(BackendKind::Native), run(BackendKind::NativeBitSliced));
+}
+
 /// Energy model cross-check at the Table XI design point: the ternary AP
 /// consumes ~12% less total energy than the equivalent binary AP.
 #[test]
@@ -111,7 +135,7 @@ fn ternary_beats_binary_energy() {
     let run = |radix: Radix, p: usize, rng: &mut Rng| {
         let a = random_words(rng, rows, p, radix);
         let b = random_words(rng, rows, p, radix);
-        let mut eng = mvap::coordinator::VectorEngine::new(Box::new(NativeBackend));
+        let mut eng = mvap::coordinator::VectorEngine::new(Box::new(NativeBackend::default()));
         let res = eng
             .execute(&Job::new(1, OpKind::Add, radix, false, a, b))
             .unwrap();

@@ -1,0 +1,135 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate — the offline crate set has no registry access, so the subset of
+//! the API this repository uses is vendored here:
+//!
+//! * [`Error`] — an opaque, message-carrying error type convertible from
+//!   any `std::error::Error` via `?` (the source chain is flattened into
+//!   the message rather than retained).
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//!
+//! The crate is intentionally API-compatible for this subset: replacing
+//! the `path` dependency with `anyhow = "1"` requires no source changes.
+
+use std::fmt;
+
+/// An opaque error carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Build an error from a standard error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (the alternate chain format) degrades to the flat message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any standard error. `Error` itself deliberately does
+// NOT implement `std::error::Error`, exactly like the real `anyhow::Error`,
+// so this blanket impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tokens:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tokens)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($tokens:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($tokens)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let value = 7;
+        let e = anyhow!("bad value {value}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("bad value {}", 9);
+        assert_eq!(e.to_string(), "bad value 9");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(format!("{e:#}"), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+    }
+}
