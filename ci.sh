@@ -2,14 +2,18 @@
 # Local CI gate for the mvap repo — documented in README.md.
 #
 #   ./ci.sh            run everything
-#   ./ci.sh --fast     skip the doc and fmt stages
+#   ./ci.sh --fast     skip the release-test, clippy, doc and fmt stages
 #
 # Stages:
 #   1. cargo build --release        (tier-1, part 1)
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
-#   3. cargo doc --no-deps          (warnings as errors; the crate also denies
+#   3. cargo test --release -q      (the coalescing/bit-sliced fast paths,
+#                                    exercised with optimizations on)
+#   4. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#                                    if clippy is absent)
+#   5. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#   4. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#   6. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -23,6 +27,16 @@ echo "==> cargo test -q"
 cargo test -q
 
 if [[ "$fast" == "0" ]]; then
+    echo "==> cargo test --release -q"
+    cargo test --release -q
+
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "==> cargo clippy --all-targets (warnings as errors)"
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "==> cargo clippy skipped (clippy not installed)"
+    fi
+
     echo "==> cargo doc --no-deps (warnings as errors)"
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

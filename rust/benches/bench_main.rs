@@ -10,7 +10,10 @@ use harness::{bench, black_box};
 use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
 use mvap::cam::{BitSlicedArray, CamArray, StorageKind};
 use mvap::circuit::{CellTech, MatchClass, MatchlineSim};
-use mvap::coordinator::{Backend, EngineService, Job, NativeBackend, OpKind, PjrtBackend, VectorEngine};
+use mvap::coordinator::{
+    Backend, EngineService, Job, NativeBackend, OpKind, PjrtBackend, ShardConfig,
+    ShardedService, VectorEngine,
+};
 use mvap::diagram::StateDiagram;
 use mvap::energy::{delay_cycles, DelayScheme, OpShape};
 use mvap::exp;
@@ -209,6 +212,88 @@ fn main() {
             },
         ));
         svc.shutdown();
+    }
+    if run("hot/coalesce") {
+        // solo vs coalesced dispatch of a burst of small same-signature
+        // jobs, at 1k/16k/256k total rows, on both storage backends: the
+        // tentpole claim is that coalescing fills the row-parallel tiles
+        // (watch the fill-rate lines) and raises throughput.
+        let radix = Radix::TERNARY;
+        let (p, job_rows) = (8usize, 32usize);
+        for &total in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(41);
+            let jobs: Vec<Job> = (0..(total / job_rows) as u64)
+                .map(|id| {
+                    let a = random_words(&mut rng, job_rows, p, radix);
+                    let b = random_words(&mut rng, job_rows, p, radix);
+                    Job::new(id, OpKind::Add, radix, true, a, b)
+                })
+                .collect();
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let tag = match kind {
+                    StorageKind::Scalar => "scalar",
+                    StorageKind::BitSliced => "bitsliced",
+                };
+                let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                results.push(bench(
+                    &format!("hot/coalesce_solo_{tag}_{total}rows"),
+                    Some(total as u64),
+                    || {
+                        for job in &jobs {
+                            black_box(solo.execute(job).unwrap());
+                        }
+                    },
+                ));
+                let mut co = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                results.push(bench(
+                    &format!("hot/coalesce_batch_{tag}_{total}rows"),
+                    Some(total as u64),
+                    || {
+                        black_box(co.execute_coalesced(&jobs).unwrap());
+                    },
+                ));
+                println!(
+                    "    fill rate ({tag}, {total} rows): solo {:.1}% -> coalesced {:.1}%",
+                    100.0 * solo.metrics().fill_rate(),
+                    100.0 * co.metrics().fill_rate()
+                );
+            }
+        }
+    }
+    if run("hot/sharded_service") {
+        // end-to-end sharded dispatch with cross-submission coalescing
+        let radix = Radix::TERNARY;
+        let (p, job_rows, jobs_n) = (8usize, 32usize, 64usize);
+        let mut rng = Rng::new(42);
+        let jobs: Vec<Job> = (0..jobs_n as u64)
+            .map(|id| {
+                let a = random_words(&mut rng, job_rows, p, radix);
+                let b = random_words(&mut rng, job_rows, p, radix);
+                Job::new(id, OpKind::Add, radix, true, a, b)
+            })
+            .collect();
+        let cfg = ShardConfig {
+            shards: 4,
+            queue_depth: 128,
+            flush_after: std::time::Duration::from_micros(500),
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start(cfg, || {
+            Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+        })
+        .unwrap();
+        results.push(bench(
+            "hot/sharded_4x_64jobs_32rows",
+            Some((jobs_n * job_rows) as u64),
+            || {
+                let rxs: Vec<_> = jobs.iter().map(|j| svc.submit(j.clone())).collect();
+                for rx in rxs {
+                    black_box(rx.recv().unwrap().unwrap());
+                }
+            },
+        ));
+        let (agg, _) = svc.shutdown();
+        println!("    sharded metrics: {}", agg.summary());
     }
     if run("hot/matchline_transient") {
         let sim = MatchlineSim { tech: CellTech::ternary_default(), masked_cells: 3 };

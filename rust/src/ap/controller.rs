@@ -218,6 +218,204 @@ impl Ap {
             self.apply_lut_fast_with(lut, cols, mode, &tables);
         }
     }
+
+    /// [`Self::apply_lut_multi_fast`] with *segment-attributed* statistics:
+    /// in addition to the aggregate counters in `self.stats`, the
+    /// data-dependent events (mismatch histogram, set/reset ops, rows
+    /// written) are attributed to contiguous row segments.
+    ///
+    /// `bounds` are cumulative end offsets: segment `i` covers rows
+    /// `[bounds[i-1], bounds[i])` (with an implicit 0 before the first);
+    /// bounds must be non-decreasing and the last must equal the row
+    /// count. Empty segments are allowed and record nothing.
+    ///
+    /// Exactness: rows evolve independently in a CAM (a compare/write
+    /// never couples rows), so every statistic except the program-length
+    /// cycle counters is a sum of per-row contributions. Each returned
+    /// block therefore equals — events *and* cycles — what a solo
+    /// [`Self::apply_lut_multi`] run over just that segment's rows would
+    /// record. This is what lets the coordinator pack rows of many jobs
+    /// into one shared tile and still report exact per-job statistics.
+    ///
+    /// Rows holding don't-care digits fall back to faithful per-segment
+    /// replays (slower, still exact).
+    pub fn apply_lut_multi_fast_segmented(
+        &mut self,
+        lut: &Lut,
+        positions: &[Vec<usize>],
+        mode: ExecMode,
+        bounds: &[usize],
+    ) -> Vec<ApStats> {
+        let rows = self.storage.rows();
+        assert!(!bounds.is_empty(), "at least one segment required");
+        assert_eq!(*bounds.last().unwrap(), rows, "segments must cover all rows");
+        assert!(
+            bounds.windows(2).all(|w| w[0] <= w[1]),
+            "segment bounds must be non-decreasing"
+        );
+        let mut segs = vec![ApStats::default(); bounds.len()];
+        let tables = FastTables::build(lut, mode);
+        for (i, cols) in positions.iter().enumerate() {
+            if !self.apply_lut_fast_segmented_with(lut, cols, mode, &tables, bounds, &mut segs) {
+                // A don't-care digit appeared: finish the remaining digit
+                // positions on isolated per-segment replays.
+                self.apply_lut_segmented_isolated(lut, &positions[i..], mode, bounds, &mut segs);
+                return segs;
+            }
+        }
+        segs
+    }
+
+    /// One digit position of the segmented fast path. Returns `false`
+    /// (with nothing recorded or mutated) if a don't-care digit makes the
+    /// state-bucketing inapplicable.
+    fn apply_lut_fast_segmented_with(
+        &mut self,
+        lut: &Lut,
+        cols: &[usize],
+        mode: ExecMode,
+        tables: &FastTables,
+        bounds: &[usize],
+        segs: &mut [ApStats],
+    ) -> bool {
+        let rows = self.storage.rows();
+        let radix = self.storage.radix().n() as usize;
+        let nstates = tables.num_states;
+
+        // bucket rows by (segment, state id)
+        let mut counts = vec![0u64; bounds.len() * nstates];
+        let mut row_state = vec![0u32; rows];
+        let mut seg = 0usize;
+        for r in 0..rows {
+            while r >= bounds[seg] {
+                seg += 1; // skips empty segments
+            }
+            let mut sid = 0usize;
+            for &c in cols {
+                let d = self.storage.get(r, c);
+                if d == crate::mvl::DONT_CARE {
+                    return false;
+                }
+                sid = sid * radix + d as usize;
+            }
+            counts[seg * nstates + sid] += 1;
+            row_state[r] = sid as u32;
+        }
+
+        // per-segment stats from the per-state tables
+        let num_passes = lut.passes.len();
+        let write_cycles = match mode {
+            ExecMode::NonBlocked => num_passes as u64,
+            ExecMode::Blocked => lut.num_groups as u64,
+        };
+        let hist_len = cols.len() + 1;
+        if self.stats.mismatch_hist.len() < hist_len {
+            self.stats.mismatch_hist.resize(hist_len, 0);
+        }
+        let mut start = 0usize;
+        for (s, seg_stats) in segs.iter_mut().enumerate() {
+            let end = bounds[s];
+            if end == start {
+                continue; // empty segment: records nothing
+            }
+            start = end;
+            if seg_stats.mismatch_hist.len() < hist_len {
+                seg_stats.mismatch_hist.resize(hist_len, 0);
+            }
+            for (sid, st) in tables.per_state.iter().enumerate() {
+                let count = counts[s * nstates + sid];
+                if count == 0 {
+                    continue;
+                }
+                for p in 0..num_passes {
+                    let k = st.hist_class[p] as usize;
+                    seg_stats.mismatch_hist[k] += count;
+                    self.stats.mismatch_hist[k] += count;
+                }
+                seg_stats.sets += st.sets as u64 * count;
+                seg_stats.resets += st.resets as u64 * count;
+                self.stats.sets += st.sets as u64 * count;
+                self.stats.resets += st.resets as u64 * count;
+                if st.matched {
+                    seg_stats.rows_written += count;
+                    self.stats.rows_written += count;
+                }
+            }
+            // every (non-empty) segment observes the broadcast program
+            seg_stats.compare_cycles += num_passes as u64;
+            seg_stats.write_cycles += write_cycles;
+        }
+        self.stats.compare_cycles += num_passes as u64;
+        self.stats.write_cycles += write_cycles;
+
+        // single-scan array rewrite
+        for r in 0..rows {
+            let st = &tables.per_state[row_state[r] as usize];
+            if st.matched {
+                for (i, &c) in cols.iter().enumerate() {
+                    self.storage.set(r, c, st.final_digits[i]);
+                }
+            }
+        }
+        true
+    }
+
+    /// Don't-care fallback for segmented execution: replay each segment on
+    /// an isolated clone of its rows with the faithful pass-by-pass path.
+    /// Exact because rows evolve independently; the aggregate cycle
+    /// counters are corrected to one application's worth (cycles are
+    /// program length, not per-segment sums).
+    fn apply_lut_segmented_isolated(
+        &mut self,
+        lut: &Lut,
+        positions: &[Vec<usize>],
+        mode: ExecMode,
+        bounds: &[usize],
+        segs: &mut [ApStats],
+    ) {
+        if positions.is_empty() {
+            return;
+        }
+        let kind = self.storage.kind();
+        let radix = self.storage.radix();
+        let cols = self.storage.cols();
+        let mut total = ApStats::default();
+        let mut start = 0usize;
+        for (s, &end) in bounds.iter().enumerate() {
+            let seg_rows = end - start;
+            if seg_rows > 0 {
+                let mut sub = CamStorage::new(kind, radix, seg_rows, cols);
+                for r in 0..seg_rows {
+                    sub.load_row(r, &self.storage.row_digits(start + r));
+                }
+                let mut ap = Ap::with_storage(sub);
+                ap.apply_lut_multi(lut, positions, mode);
+                let stats = ap.take_stats();
+                for r in 0..seg_rows {
+                    self.storage.load_row(start + r, &ap.storage().row_digits(r));
+                }
+                total.merge(&stats);
+                segs[s].merge(&stats);
+            }
+            start = end;
+        }
+        // data-dependent events sum over segments; cycles count once
+        self.stats.sets += total.sets;
+        self.stats.resets += total.resets;
+        self.stats.rows_written += total.rows_written;
+        if self.stats.mismatch_hist.len() < total.mismatch_hist.len() {
+            self.stats.mismatch_hist.resize(total.mismatch_hist.len(), 0);
+        }
+        for (i, &v) in total.mismatch_hist.iter().enumerate() {
+            self.stats.mismatch_hist[i] += v;
+        }
+        let write_cycles = match mode {
+            ExecMode::NonBlocked => lut.passes.len(),
+            ExecMode::Blocked => lut.num_groups,
+        };
+        self.stats.compare_cycles += (positions.len() * lut.passes.len()) as u64;
+        self.stats.write_cycles += (positions.len() * write_cycles) as u64;
+    }
 }
 
 /// Precomputed per-state contribution tables for [`Ap::apply_lut_fast`].
@@ -438,6 +636,104 @@ mod tests {
         slow.apply_lut(&lut, &[0, 1, 2], ExecMode::NonBlocked);
         assert_eq!(fast.storage().to_digits(), slow.storage().to_digits());
         assert_eq!(fast.stats(), slow.stats());
+    }
+
+    /// Segment-attributed execution: per-segment stats equal solo runs of
+    /// the segment's rows, their sum equals the unsegmented aggregate, and
+    /// the array contents are unchanged by segmentation — for random
+    /// segment cuts, radices, modes, and (via planted don't-cares) both
+    /// the fast path and the isolated fallback.
+    #[test]
+    fn segmented_stats_match_solo_runs() {
+        use crate::util::prop::{forall, Config};
+        forall(Config::cases(40), |rng| {
+            let radix = Radix(2 + rng.digit(3));
+            let d = StateDiagram::build(full_add(radix)).unwrap();
+            let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+            let lut = match mode {
+                ExecMode::Blocked => generate_blocked(&d),
+                ExecMode::NonBlocked => generate_non_blocked(&d),
+            };
+            let rows = 1 + rng.index(150);
+            let p = 1 + rng.index(4);
+            let cols = 2 * p + 1;
+            let mut data = vec![0u8; rows * cols];
+            rng.fill_digits(&mut data, radix.n());
+            if rng.chance(0.3) {
+                // exercise the isolated fallback path
+                data[rng.index(rows * cols)] = crate::mvl::DONT_CARE;
+            }
+            // random non-decreasing cuts (possibly empty segments)
+            let mut bounds: Vec<usize> =
+                (0..rng.index(4)).map(|_| rng.index(rows + 1)).collect();
+            bounds.push(rows);
+            bounds.sort_unstable();
+            let positions: Vec<Vec<usize>> =
+                (0..p).map(|d| vec![d, p + d, 2 * p]).collect();
+
+            let mut seg_ap =
+                Ap::new(CamArray::from_data(radix, rows, cols, data.clone()));
+            let segs =
+                seg_ap.apply_lut_multi_fast_segmented(&lut, &positions, mode, &bounds);
+            assert_eq!(segs.len(), bounds.len());
+
+            // whole-array reference
+            let mut solo_ap = Ap::new(CamArray::from_data(radix, rows, cols, data.clone()));
+            solo_ap.apply_lut_multi(&lut, &positions, mode);
+            assert_eq!(
+                seg_ap.storage().to_digits(),
+                solo_ap.storage().to_digits(),
+                "segmentation changed contents"
+            );
+            let total = crate::ap::ApStats::sum_of(&segs);
+            assert!(
+                total.same_events(solo_ap.stats()),
+                "segment sum != aggregate: {total:?} vs {:?}",
+                solo_ap.stats()
+            );
+            assert!(seg_ap.stats().same_events(solo_ap.stats()));
+            assert_eq!(seg_ap.stats().compare_cycles, solo_ap.stats().compare_cycles);
+            assert_eq!(seg_ap.stats().write_cycles, solo_ap.stats().write_cycles);
+
+            // each segment equals a solo run of exactly its rows
+            let mut start = 0usize;
+            for (s, &end) in bounds.iter().enumerate() {
+                let seg_rows = end - start;
+                if seg_rows == 0 {
+                    assert_eq!(segs[s], crate::ap::ApStats::default());
+                    start = end;
+                    continue;
+                }
+                let sub: Vec<u8> = data[start * cols..end * cols].to_vec();
+                let mut ap = Ap::new(CamArray::from_data(radix, seg_rows, cols, sub));
+                ap.apply_lut_multi(&lut, &positions, mode);
+                assert_eq!(
+                    &segs[s],
+                    ap.stats(),
+                    "segment {s} ({start}..{end}) of {rows} rows"
+                );
+                start = end;
+            }
+        });
+    }
+
+    /// Trivial segmentation (one segment) is indistinguishable from the
+    /// plain fast path.
+    #[test]
+    fn single_segment_equals_fast_path() {
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_blocked(&d);
+        let mut data = vec![0u8; 50 * 5];
+        crate::util::Rng::new(3).fill_digits(&mut data, 3);
+        let positions = vec![vec![0, 2, 4], vec![1, 3, 4]];
+        let mut a = Ap::new(CamArray::from_data(Radix::TERNARY, 50, 5, data.clone()));
+        let segs =
+            a.apply_lut_multi_fast_segmented(&lut, &positions, ExecMode::Blocked, &[50]);
+        let mut b = Ap::new(CamArray::from_data(Radix::TERNARY, 50, 5, data));
+        b.apply_lut_multi_fast(&lut, &positions, ExecMode::Blocked);
+        assert_eq!(a.storage().to_digits(), b.storage().to_digits());
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(&segs[0], b.stats());
     }
 
     /// Every row matches exactly one pass or is a noAction state, so

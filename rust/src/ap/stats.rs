@@ -63,6 +63,32 @@ impl ApStats {
     pub fn full_matches(&self) -> u64 {
         self.mismatch_hist.first().copied().unwrap_or(0)
     }
+
+    /// Do two stats blocks record the same *data-dependent* events —
+    /// set/reset ops, rows written, mismatch histogram — ignoring the
+    /// program-length cycle counters? Trailing zero classes are ignored so
+    /// histograms of different allocated lengths compare structurally.
+    /// Used to cross-check segment-attributed statistics against measured
+    /// aggregates (see [`crate::ap::Ap::apply_lut_multi_fast_segmented`]).
+    pub fn same_events(&self, other: &ApStats) -> bool {
+        fn trimmed(h: &[u64]) -> &[u64] {
+            let end = h.iter().rposition(|&v| v != 0).map_or(0, |i| i + 1);
+            &h[..end]
+        }
+        self.sets == other.sets
+            && self.resets == other.resets
+            && self.rows_written == other.rows_written
+            && trimmed(&self.mismatch_hist) == trimmed(&other.mismatch_hist)
+    }
+
+    /// Merge a slice of stats blocks into one.
+    pub fn sum_of(blocks: &[ApStats]) -> ApStats {
+        let mut total = ApStats::default();
+        for b in blocks {
+            total.merge(b);
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +102,39 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.mismatch_hist, vec![1, 3, 5, 7]);
         assert_eq!(a.sets, 3);
+    }
+
+    #[test]
+    fn same_events_ignores_cycles_and_trailing_zeros() {
+        let a = ApStats {
+            compare_cycles: 21,
+            write_cycles: 9,
+            sets: 4,
+            resets: 4,
+            rows_written: 2,
+            mismatch_hist: vec![1, 2, 0, 0],
+        };
+        let b = ApStats {
+            compare_cycles: 42, // different cycles: still "same events"
+            sets: 4,
+            resets: 4,
+            rows_written: 2,
+            mismatch_hist: vec![1, 2],
+            ..Default::default()
+        };
+        assert!(a.same_events(&b));
+        let c = ApStats { sets: 5, ..b.clone() };
+        assert!(!a.same_events(&c));
+    }
+
+    #[test]
+    fn sum_of_merges_all() {
+        let a = ApStats { sets: 1, mismatch_hist: vec![2], ..Default::default() };
+        let b = ApStats { sets: 2, mismatch_hist: vec![1, 3], ..Default::default() };
+        let t = ApStats::sum_of(&[a, b]);
+        assert_eq!(t.sets, 3);
+        assert_eq!(t.mismatch_hist, vec![3, 3]);
+        assert_eq!(ApStats::sum_of(&[]), ApStats::default());
     }
 
     #[test]

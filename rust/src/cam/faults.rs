@@ -9,13 +9,18 @@
 //!   *any* key (a silent, dangerous fault for compute: it satisfies every
 //!   compare) and ignores writes.
 //!
-//! [`FaultyArray`] wraps a [`CamArray`] with a fault map; write energy is
-//! still accounted for attempted transitions (the controller pulses the
-//! cell; the device simply fails to switch). [`march_detect`] is the
-//! march-style test the controller can run to locate faulty cells.
+//! [`FaultyArray`] wraps a [`CamStorage`] — either the scalar
+//! [`CamArray`] or the bit-sliced digit-plane backend — with a fault map;
+//! write energy is still accounted for attempted transitions (the
+//! controller pulses the cell; the device simply fails to switch).
+//! [`march_detect`] is the march-style test the controller can run to
+//! locate faulty cells. Fault behaviour is observably identical on both
+//! storage backends (differential tests in
+//! `rust/tests/bitsliced_differential.rs`).
 
 use super::array::CamArray;
 use super::cell::{write_ops, WriteOps};
+use super::storage::{CamStorage, StorageKind};
 use crate::mvl::{Radix, DONT_CARE};
 use std::collections::HashMap;
 
@@ -37,17 +42,27 @@ impl Fault {
     }
 }
 
-/// A CAM array with injected stuck faults.
+/// A CAM array (in either storage backend) with injected stuck faults.
 #[derive(Clone, Debug)]
 pub struct FaultyArray {
-    inner: CamArray,
+    inner: CamStorage,
     faults: HashMap<(usize, usize), Fault>,
 }
 
 impl FaultyArray {
-    /// Wrap a healthy array.
+    /// Wrap a healthy scalar array.
     pub fn new(inner: CamArray) -> Self {
+        Self::with_storage(CamStorage::Scalar(inner))
+    }
+
+    /// Wrap a healthy array housed in either storage backend.
+    pub fn with_storage(inner: CamStorage) -> Self {
         FaultyArray { inner, faults: HashMap::new() }
+    }
+
+    /// Fresh all-don't-care faulty array of the chosen storage kind.
+    pub fn new_kind(kind: StorageKind, radix: Radix, rows: usize, cols: usize) -> Self {
+        Self::with_storage(CamStorage::new(kind, radix, rows, cols))
     }
 
     /// Inject a fault (applies immediately to the visible state).
@@ -61,8 +76,8 @@ impl FaultyArray {
         &self.faults
     }
 
-    /// The wrapped array (fault-effective values).
-    pub fn array(&self) -> &CamArray {
+    /// The wrapped storage (fault-effective values).
+    pub fn array(&self) -> &CamStorage {
         &self.inner
     }
 
@@ -161,7 +176,7 @@ mod tests {
             let out = a.compare(&[0], &[key]);
             assert!(out.tags[0], "stuck-DC must match key {key}");
         }
-        assert!(a.compare(&[0], &[2]).tags[1] == false);
+        assert!(!a.compare(&[0], &[2]).tags[1]);
     }
 
     #[test]
@@ -192,6 +207,9 @@ mod tests {
     fn march_is_clean_on_healthy_array() {
         let mut a = FaultyArray::new(CamArray::new(T, 16, 8));
         assert!(march_detect(&mut a).is_empty());
+        // same over the bit-sliced backend (word-boundary row count)
+        let mut b = FaultyArray::new_kind(StorageKind::BitSliced, T, 70, 3);
+        assert!(march_detect(&mut b).is_empty());
     }
 
     /// A stuck cell corrupts AP addition in exactly the affected rows —

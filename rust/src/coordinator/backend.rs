@@ -62,6 +62,39 @@ pub trait Backend {
 
     /// Human-readable name.
     fn name(&self) -> &'static str;
+
+    /// Does this backend implement [`Backend::run_tile_segmented`]? The
+    /// coordinator only routes coalesced (multi-job) tiles to backends
+    /// that do; jobs headed elsewhere fall back to solo dispatch.
+    fn supports_coalescing(&self) -> bool {
+        false
+    }
+
+    /// Execute like [`Backend::run_tile`], additionally attributing the
+    /// data-dependent statistics (mismatch histogram, set/reset ops, rows
+    /// written) to contiguous row segments — the mechanism behind exact
+    /// per-job stats for coalesced tiles
+    /// ([`crate::coordinator::coalesce`]).
+    ///
+    /// `bounds` are cumulative end offsets over the tile's rows; the last
+    /// bound must equal `tile.tile_rows`. Each returned block equals what
+    /// a solo run of that segment's rows would record (rows evolve
+    /// independently in a CAM).
+    fn run_tile_segmented(
+        &mut self,
+        op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        tile: &Tile,
+        bounds: &[usize],
+    ) -> anyhow::Result<(Vec<u8>, Vec<ApStats>)> {
+        let _ = (op, radix, blocked, lut, tile, bounds);
+        anyhow::bail!(
+            "backend '{}' does not support segment-attributed execution",
+            self.name()
+        )
+    }
 }
 
 /// The native functional simulator backend, over either CAM storage
@@ -122,6 +155,79 @@ impl Backend for NativeBackend {
         match self.storage {
             StorageKind::Scalar => "native",
             StorageKind::BitSliced => "native-bitsliced",
+        }
+    }
+
+    fn supports_coalescing(&self) -> bool {
+        true
+    }
+
+    fn run_tile_segmented(
+        &mut self,
+        _op: OpKind,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        tile: &Tile,
+        bounds: &[usize],
+    ) -> anyhow::Result<(Vec<u8>, Vec<ApStats>)> {
+        let layout = tile.layout;
+        let mode = if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
+        match self.storage {
+            StorageKind::Scalar => {
+                // The state-bucketing fast path attributes per-segment
+                // stats in the same pass that executes the tile.
+                let storage = CamStorage::from_data(
+                    StorageKind::Scalar,
+                    radix,
+                    tile.tile_rows,
+                    layout.cols(),
+                    &tile.data,
+                );
+                let mut ap = Ap::with_storage(storage);
+                let segments =
+                    ap.apply_lut_multi_fast_segmented(lut, &layout.positions(), mode, bounds);
+                Ok((ap.storage().to_digits(), segments))
+            }
+            StorageKind::BitSliced => {
+                // Faithful word-parallel execution produces the tile
+                // contents (and measured aggregate stats)...
+                let storage = CamStorage::from_data(
+                    StorageKind::BitSliced,
+                    radix,
+                    tile.tile_rows,
+                    layout.cols(),
+                    &tile.data,
+                );
+                let mut ap = Ap::with_storage(storage);
+                ap.apply_lut_multi(lut, &layout.positions(), mode);
+                let data = ap.storage().to_digits();
+                let measured = ap.take_stats();
+                // ...while the (much cheaper) scalar fast path replays the
+                // same tile for exact per-segment attribution. Fast ≡
+                // faithful ≡ bit-sliced is proven by the controller and
+                // differential test suites; cross-checked here in debug.
+                let scalar = CamStorage::from_data(
+                    StorageKind::Scalar,
+                    radix,
+                    tile.tile_rows,
+                    layout.cols(),
+                    &tile.data,
+                );
+                let mut attr = Ap::with_storage(scalar);
+                let segments =
+                    attr.apply_lut_multi_fast_segmented(lut, &layout.positions(), mode, bounds);
+                debug_assert_eq!(
+                    attr.storage().to_digits(),
+                    data,
+                    "segment-attribution replay diverged from the bit-sliced run"
+                );
+                debug_assert!(
+                    ApStats::sum_of(&segments).same_events(&measured),
+                    "segment attribution diverged from measured stats"
+                );
+                Ok((data, segments))
+            }
         }
     }
 }
@@ -262,6 +368,74 @@ mod tests {
                 assert_eq!(s1, s2, "blocked={blocked}");
             }
         }
+    }
+
+    /// Segment-attributed execution returns the same tile data as
+    /// `run_tile` on both storage kinds, and the segment stats sum to the
+    /// tile's measured stats.
+    #[test]
+    fn run_tile_segmented_matches_run_tile() {
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(77);
+        let p = 4;
+        let rows = 10;
+        let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let tiles = make_tiles(&a, &b, 16); // one padded tile
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        for storage in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut be = NativeBackend::new(storage);
+            assert!(be.supports_coalescing());
+            let t = &tiles[0];
+            let (want_data, want_stats) =
+                be.run_tile(OpKind::Add, radix, true, &lut, t).unwrap();
+            let bounds = [4usize, 10, 16]; // two "jobs" + the padding tail
+            let (data, segs) = be
+                .run_tile_segmented(OpKind::Add, radix, true, &lut, t, &bounds)
+                .unwrap();
+            assert_eq!(data, want_data, "{storage}");
+            assert_eq!(segs.len(), 3, "{storage}");
+            assert!(
+                ApStats::sum_of(&segs).same_events(&want_stats),
+                "{storage}: segment sum != measured"
+            );
+        }
+    }
+
+    /// Backends without an override advertise no coalescing support and
+    /// reject segment-attributed execution.
+    #[test]
+    fn default_segmented_is_unsupported() {
+        struct Dummy;
+        impl Backend for Dummy {
+            fn run_tile(
+                &mut self,
+                _op: OpKind,
+                _radix: Radix,
+                _blocked: bool,
+                _lut: &Lut,
+                _tile: &Tile,
+            ) -> anyhow::Result<(Vec<u8>, ApStats)> {
+                anyhow::bail!("dummy")
+            }
+            fn preferred_rows(&self, _: OpKind, _: Radix, _: bool, _: usize) -> Option<usize> {
+                None
+            }
+            fn name(&self) -> &'static str {
+                "dummy"
+            }
+        }
+        let mut d = Dummy;
+        assert!(!d.supports_coalescing());
+        let radix = Radix::TERNARY;
+        let a = vec![Word::from_u128(1, 2, radix)];
+        let b = vec![Word::from_u128(2, 2, radix)];
+        let tiles = make_tiles(&a, &b, 2);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let err = d
+            .run_tile_segmented(OpKind::Add, radix, true, &lut, &tiles[0], &[2])
+            .unwrap_err();
+        assert!(format!("{err}").contains("dummy"));
     }
 
     #[test]

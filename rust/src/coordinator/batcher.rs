@@ -25,6 +25,11 @@ pub struct Tile {
 pub fn make_tiles(a: &[Word], b: &[Word], tile_rows: usize) -> Vec<Tile> {
     assert!(tile_rows > 0);
     assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        // No rows, no tiles: callers (e.g. an empty coalescing batch) get
+        // an empty list rather than an out-of-bounds panic on `a[0]`.
+        return Vec::new();
+    }
     let p = a[0].width();
     let layout = VectorLayout { p };
     let cols = layout.cols();
@@ -97,6 +102,13 @@ mod tests {
         vals.iter()
             .map(|&v| Word::from_u128(v as u128, p, Radix::TERNARY))
             .collect()
+    }
+
+    /// Regression: an empty row vector used to panic indexing `a[0]`.
+    #[test]
+    fn empty_input_yields_no_tiles() {
+        assert!(make_tiles(&[], &[], 8).is_empty());
+        assert!(make_tiles(&[], &[], 1).is_empty());
     }
 
     #[test]

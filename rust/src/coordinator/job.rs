@@ -60,6 +60,12 @@ impl Job {
     pub fn digits(&self) -> usize {
         self.a[0].width()
     }
+
+    /// The job's coalescing signature: jobs sharing it can execute in the
+    /// same tiles (see [`super::coalesce`]).
+    pub fn signature(&self) -> super::coalesce::JobSignature {
+        super::coalesce::JobSignature::of(self)
+    }
 }
 
 /// Result of a completed job.
@@ -94,6 +100,16 @@ mod tests {
         assert_eq!(j.rows(), 2);
         assert_eq!(j.digits(), 4);
         assert_eq!(j.op.tag(), "add");
+        let sig = j.signature();
+        assert_eq!(
+            sig,
+            crate::coordinator::JobSignature {
+                op: OpKind::Add,
+                radix: Radix::TERNARY,
+                blocked: true,
+                digits: 4
+            }
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Engine metrics: rows/ops processed, modeled energy, wall-clock.
+//! Engine metrics: rows/ops processed, modeled energy, wall-clock, tile
+//! occupancy (fill rate), and coalescing/work-stealing counters.
 
 use crate::energy::EnergyBreakdown;
 use std::time::Duration;
@@ -11,6 +12,21 @@ pub struct Metrics {
     pub digit_ops: u64,
     pub modeled_energy_j: f64,
     pub busy: Duration,
+    /// Tiles dispatched to a backend.
+    pub tiles: u64,
+    /// Total dispatched tile capacity (tiles × tile_rows).
+    pub tile_capacity_rows: u64,
+    /// Live (non-padding) rows dispatched in those tiles.
+    pub tile_live_rows: u64,
+    /// Jobs executed alone (their tiles shared with no other job).
+    pub solo_jobs: u64,
+    /// Jobs that shared tiles with other jobs (cross-job coalescing).
+    pub coalesced_jobs: u64,
+    /// Coalesced batches executed.
+    pub batches: u64,
+    /// Jobs executed by a shard other than their signature's home shard
+    /// (work stealing in [`super::shard::ShardedService`]).
+    pub stolen_jobs: u64,
 }
 
 impl Metrics {
@@ -23,6 +39,14 @@ impl Metrics {
         self.busy += elapsed;
     }
 
+    /// Record a tile dispatch: `tiles` arrays of `tile_rows` height
+    /// carrying `live_rows` real rows between them.
+    pub fn record_tiles(&mut self, tiles: usize, tile_rows: usize, live_rows: usize) {
+        self.tiles += tiles as u64;
+        self.tile_capacity_rows += (tiles * tile_rows) as u64;
+        self.tile_live_rows += live_rows as u64;
+    }
+
     /// Merge (for aggregating worker metrics).
     pub fn merge(&mut self, other: &Metrics) {
         self.jobs += other.jobs;
@@ -30,6 +54,13 @@ impl Metrics {
         self.digit_ops += other.digit_ops;
         self.modeled_energy_j += other.modeled_energy_j;
         self.busy += other.busy;
+        self.tiles += other.tiles;
+        self.tile_capacity_rows += other.tile_capacity_rows;
+        self.tile_live_rows += other.tile_live_rows;
+        self.solo_jobs += other.solo_jobs;
+        self.coalesced_jobs += other.coalesced_jobs;
+        self.batches += other.batches;
+        self.stolen_jobs += other.stolen_jobs;
     }
 
     /// Row-operations per second of busy time.
@@ -41,16 +72,34 @@ impl Metrics {
         }
     }
 
+    /// Fraction of dispatched tile rows that carried live data. 1.0 means
+    /// every array ran full; low values mean the row-parallel hardware
+    /// spent its compare cycles on noAction padding.
+    pub fn fill_rate(&self) -> f64 {
+        if self.tile_capacity_rows == 0 {
+            0.0
+        } else {
+            self.tile_live_rows as f64 / self.tile_capacity_rows as f64
+        }
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} rows={} digit_ops={} energy={:.3e} J busy={:.3}s ({:.0} rows/s)",
+            "jobs={} ({} coalesced in {} batches, {} solo, {} stolen) rows={} digit_ops={} \
+             energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}%",
             self.jobs,
+            self.coalesced_jobs,
+            self.batches,
+            self.solo_jobs,
+            self.stolen_jobs,
             self.rows,
             self.digit_ops,
             self.modeled_energy_j,
             self.busy.as_secs_f64(),
-            self.rows_per_sec()
+            self.rows_per_sec(),
+            self.tiles,
+            100.0 * self.fill_rate(),
         )
     }
 }
@@ -72,5 +121,27 @@ mod tests {
         assert_eq!(m.digit_ops, 3000);
         assert!(m.rows_per_sec() > 0.0);
         assert!(m.summary().contains("jobs=2"));
+    }
+
+    #[test]
+    fn tile_fill_rate() {
+        let mut m = Metrics::default();
+        assert_eq!(m.fill_rate(), 0.0); // no dispatches yet
+        m.record_tiles(2, 256, 300);
+        assert_eq!(m.tiles, 2);
+        assert_eq!(m.tile_capacity_rows, 512);
+        assert_eq!(m.tile_live_rows, 300);
+        assert!((m.fill_rate() - 300.0 / 512.0).abs() < 1e-12);
+        let mut n = Metrics::default();
+        n.record_tiles(1, 256, 256);
+        n.coalesced_jobs = 3;
+        n.batches = 1;
+        n.stolen_jobs = 1;
+        m.merge(&n);
+        assert_eq!(m.tiles, 3);
+        assert!((m.fill_rate() - 556.0 / 768.0).abs() < 1e-12);
+        assert_eq!(m.coalesced_jobs, 3);
+        assert_eq!(m.stolen_jobs, 1);
+        assert!(m.summary().contains("fill="));
     }
 }

@@ -9,22 +9,33 @@
 //! * [`batcher`] — tiles job rows onto fixed-size CAM arrays (the AOT
 //!   engines have static shapes), padding the tail tile with noAction
 //!   rows that provably cost nothing extra in writes.
+//! * [`coalesce`] — cross-job coalescing: packs rows of many
+//!   same-signature jobs into shared tiles and splits results/stats back
+//!   out exactly, so bursts of small jobs fill the row-parallel arrays.
 //! * [`backend`] — where a tile executes: the native Rust simulator or an
 //!   AOT-compiled XLA engine via PJRT ([`crate::runtime`]).
-//! * [`engine`] — per-thread engine: LUT cache, dispatch, metric pricing.
+//! * [`engine`] — per-thread engine: LUT cache, dispatch, metric pricing,
+//!   solo and coalesced execution paths.
 //! * [`service`] — a leader/worker thread pool (std::thread + mpsc; the
-//!   offline crate set has no tokio) with backpressure via bounded queues.
-//! * [`metrics`] — throughput/latency/energy accounting.
+//!   offline crate set has no tokio) with backpressure via bounded
+//!   queues, plus the `submit_batch` coalescing front door.
+//! * [`shard`] — sharded dispatch: N shards keyed by job signature with
+//!   bounded queues, a time/size flush policy, and work stealing.
+//! * [`metrics`] — throughput/latency/energy/occupancy accounting.
 
 pub mod job;
 pub mod batcher;
+pub mod coalesce;
 pub mod backend;
 pub mod engine;
 pub mod service;
+pub mod shard;
 pub mod metrics;
 
 pub use backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+pub use coalesce::{JobSignature, TileAssembler, TileSegment};
 pub use engine::VectorEngine;
 pub use job::{Job, JobResult, OpKind};
 pub use metrics::Metrics;
 pub use service::EngineService;
+pub use shard::{ShardConfig, ShardedService};

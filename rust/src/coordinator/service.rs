@@ -4,6 +4,7 @@
 //! natural backpressure.
 
 use super::backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+use super::coalesce::JobSignature;
 use super::engine::VectorEngine;
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
@@ -11,9 +12,46 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// Rows per coalesced chunk in [`EngineService::submit_batch`]: enough to
+/// fill several tiles (≫ the fill-rate knee), small enough that a large
+/// uniform batch still fans out across the worker pool.
+pub const BATCH_SPLIT_ROWS: usize = 4 * super::engine::DEFAULT_TILE_ROWS;
+
 enum Message {
     Run(Job, SyncSender<anyhow::Result<JobResult>>),
+    /// A coalescable group: same-signature jobs executed as one shared
+    /// workload (see [`VectorEngine::execute_coalesced`]), one reply
+    /// channel per job.
+    RunBatch(Vec<Job>, Vec<SyncSender<anyhow::Result<JobResult>>>),
     Shutdown,
+}
+
+/// Execute a batch and fan the per-job results out to the reply channels
+/// (in job order). Shared by the worker-pool and sharded dispatchers.
+/// `execute_coalesced` itself handles non-uniform batches (solo fallback),
+/// so callers need not pre-group. Send errors are ignored — the receiver
+/// may have given up.
+pub(crate) fn dispatch_batch(
+    engine: &mut VectorEngine,
+    jobs: &[Job],
+    replies: &[SyncSender<anyhow::Result<JobResult>>],
+) {
+    debug_assert_eq!(jobs.len(), replies.len());
+    match engine.execute_coalesced(jobs) {
+        Ok(results) => {
+            for (res, reply) in results.into_iter().zip(replies) {
+                let _ = reply.send(Ok(res));
+            }
+        }
+        Err(e) => {
+            // the vendored anyhow Error is not Clone; fan the rendered
+            // message out per job
+            let msg = format!("coalesced batch failed: {e:#}");
+            for reply in replies {
+                let _ = reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
 }
 
 /// A running engine service.
@@ -67,6 +105,9 @@ impl EngineService {
                             // receiver may have given up; ignore send errors
                             let _ = reply.send(result);
                         }
+                        Ok(Message::RunBatch(jobs, replies)) => {
+                            dispatch_batch(&mut engine, &jobs, &replies);
+                        }
                         Ok(Message::Shutdown) | Err(_) => break,
                     }
                 }
@@ -111,6 +152,70 @@ impl EngineService {
     /// Submit and wait.
     pub fn run(&self, job: Job) -> anyhow::Result<JobResult> {
         self.submit(job).recv().expect("worker dropped reply")
+    }
+
+    /// Submit a batch of jobs at once. Jobs sharing a signature (op,
+    /// radix, mode, digits) are grouped and executed as coalesced
+    /// workloads — their rows share tiles, so a burst of small jobs fills
+    /// the row-parallel arrays instead of padding one tile per job. Each
+    /// signature group is split into chunks of roughly
+    /// [`BATCH_SPLIT_ROWS`] rows so large uniform workloads still spread
+    /// across the worker pool (a chunk that size already runs its tiles
+    /// full — further coalescing buys nothing). Returns one receiver per
+    /// job, in submission order.
+    pub fn submit_batch(&self, jobs: Vec<Job>) -> Vec<Receiver<anyhow::Result<JobResult>>> {
+        // group job indices by signature, preserving submission order
+        let mut sigs: Vec<JobSignature> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let sig = JobSignature::of(job);
+            match sigs.iter().position(|s| *s == sig) {
+                Some(g) => groups[g].push(i),
+                None => {
+                    sigs.push(sig);
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        let mut rxs: Vec<Option<Receiver<anyhow::Result<JobResult>>>> =
+            jobs.iter().map(|_| None).collect();
+        let mut jobs: Vec<Option<Job>> = jobs.into_iter().map(Some).collect();
+        for idxs in groups {
+            // split the group so workers share large uniform workloads
+            let mut chunks: Vec<Vec<usize>> = vec![Vec::new()];
+            let mut rows_in_chunk = 0usize;
+            for &i in &idxs {
+                let r = jobs[i].as_ref().expect("job not yet taken").rows();
+                if rows_in_chunk > 0 && rows_in_chunk + r > BATCH_SPLIT_ROWS {
+                    chunks.push(Vec::new());
+                    rows_in_chunk = 0;
+                }
+                chunks.last_mut().expect("chunks is never empty").push(i);
+                rows_in_chunk += r;
+            }
+            for idxs in chunks {
+                let mut batch = Vec::with_capacity(idxs.len());
+                let mut replies = Vec::with_capacity(idxs.len());
+                for &i in &idxs {
+                    let (tx, rx) = sync_channel(1);
+                    batch.push(jobs[i].take().expect("job grouped twice"));
+                    replies.push(tx);
+                    rxs[i] = Some(rx);
+                }
+                self.tx
+                    .send(Message::RunBatch(batch, replies))
+                    .expect("service stopped");
+            }
+        }
+        rxs.into_iter().map(|r| r.expect("job not grouped")).collect()
+    }
+
+    /// Submit a batch and wait for every result (submission order).
+    pub fn run_batch(&self, jobs: Vec<Job>) -> anyhow::Result<Vec<JobResult>> {
+        self.submit_batch(jobs)
+            .into_iter()
+            .map(|rx| rx.recv().expect("worker dropped reply"))
+            .collect()
     }
 
     /// Stop all workers and return aggregated metrics.
@@ -160,6 +265,38 @@ mod tests {
         let metrics = svc.shutdown();
         assert_eq!(metrics.jobs, 16);
         assert_eq!(metrics.rows, 16 * 37);
+    }
+
+    /// `submit_batch` coalesces same-signature jobs, returns results in
+    /// submission order, and matches the solo oracle exactly.
+    #[test]
+    fn submit_batch_coalesces_and_preserves_order() {
+        let svc = EngineService::start(2, 8, || {
+            Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+        })
+        .unwrap();
+        let mut rng = Rng::new(77);
+        let mut jobs = Vec::new();
+        let mut expects = Vec::new();
+        for id in 0..12 {
+            // two signatures interleaved: p = 4 and p = 6
+            let p = if id % 2 == 0 { 4 } else { 6 };
+            let (job, expect) = add_job(id, &mut rng, 10 + id as usize, p);
+            jobs.push(job);
+            expects.push(expect);
+        }
+        let results = svc.run_batch(jobs).unwrap();
+        assert_eq!(results.len(), 12);
+        for (id, (res, expect)) in results.iter().zip(&expects).enumerate() {
+            assert_eq!(res.id, id as u64);
+            assert_eq!(&res.values, expect, "job {id}");
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.jobs, 12);
+        // both signature groups had >1 job, so everything coalesced
+        assert_eq!(metrics.coalesced_jobs, 12);
+        assert_eq!(metrics.batches, 2);
+        assert!(metrics.fill_rate() > 0.0);
     }
 
     #[test]

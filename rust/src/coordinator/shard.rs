@@ -1,0 +1,490 @@
+//! Sharded, coalescing dispatch: N worker shards keyed by job signature,
+//! with bounded per-shard queues, a time/size flush policy, and work
+//! stealing for idle shards.
+//!
+//! [`super::service::EngineService`] coalesces only the jobs handed to it
+//! in a single `submit_batch` call; the [`ShardedService`] coalesces
+//! *across* submissions. Every job is routed to its signature's home
+//! shard ([`JobSignature::shard`]), so a burst of small same-shape jobs —
+//! the million-user serving scenario — accumulates on one shard and is
+//! executed as shared, full tiles. Latency stays bounded under light
+//! load: a partial batch flushes once [`ShardConfig::flush_after`] passes
+//! without growth, or immediately at the [`ShardConfig::max_batch_jobs`]
+//! / [`ShardConfig::max_batch_rows`] thresholds. Idle shards steal queued
+//! jobs from busy shards ([`ShardConfig::steal`]), trading tile fill for
+//! latency exactly when there is spare capacity.
+
+use super::backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+use super::coalesce::JobSignature;
+use super::engine::VectorEngine;
+use super::job::{Job, JobResult};
+use super::metrics::Metrics;
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for [`ShardedService`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Worker shards; each owns one backend + engine.
+    pub shards: usize,
+    /// Bounded per-shard queue depth (submission backpressure).
+    pub queue_depth: usize,
+    /// Flush a pending batch at this many jobs.
+    pub max_batch_jobs: usize,
+    /// Flush a pending batch once its rows reach this (keeps tiles full
+    /// without hoarding arbitrarily large batches).
+    pub max_batch_rows: usize,
+    /// Flush a partial batch this long after it started collecting —
+    /// bounds queueing latency under light load.
+    pub flush_after: Duration,
+    /// Idle shards steal queued jobs from other shards.
+    pub steal: bool,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 4,
+            queue_depth: 64,
+            max_batch_jobs: 64,
+            max_batch_rows: 4 * super::engine::DEFAULT_TILE_ROWS,
+            flush_after: Duration::from_millis(2),
+            steal: true,
+        }
+    }
+}
+
+/// A queued job plus its home shard and reply channel.
+struct Submission {
+    job: Job,
+    home: usize,
+    reply: SyncSender<anyhow::Result<JobResult>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    items: VecDeque<Submission>,
+    closed: bool,
+}
+
+/// One shard's bounded MPSC queue (mutex + condvar; `std::sync::mpsc`
+/// receivers cannot be stolen from, and stealing is the point here).
+struct ShardQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+enum Pop {
+    Item(Submission),
+    TimedOut,
+    Closed,
+}
+
+impl ShardQueue {
+    fn new() -> Self {
+        ShardQueue { state: Mutex::new(QueueState::default()), cv: Condvar::new() }
+    }
+
+    /// Blocking bounded push (the submitter's backpressure).
+    fn push(&self, item: Submission, depth: usize) {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        while st.items.len() >= depth && !st.closed {
+            st = self.cv.wait(st).expect("shard queue poisoned");
+        }
+        assert!(!st.closed, "submit after shutdown");
+        st.items.push_back(item);
+        self.cv.notify_all();
+    }
+
+    /// Pop one item, waiting up to `timeout`. Items drain before `Closed`
+    /// is reported, so shutdown never drops queued work.
+    fn pop(&self, timeout: Duration) -> Pop {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.cv.notify_all();
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .expect("shard queue poisoned");
+            st = guard;
+        }
+    }
+
+    /// Non-blocking pop (work stealing).
+    fn try_pop(&self) -> Option<Submission> {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.cv.notify_all();
+        }
+        item
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        st.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Flush the pending batch: execute it coalesced and reply per job. The
+/// worker keeps `pending` signature-coherent (it flushes on a signature
+/// switch), and `execute_coalesced` falls back to solo execution if that
+/// ever stops holding — so no re-grouping is needed here.
+fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
+    if pending.is_empty() {
+        return;
+    }
+    let subs = std::mem::take(pending);
+    let mut jobs = Vec::with_capacity(subs.len());
+    let mut replies = Vec::with_capacity(subs.len());
+    let mut stolen = 0u64;
+    for sub in subs {
+        if sub.home != me {
+            stolen += 1;
+        }
+        jobs.push(sub.job);
+        replies.push(sub.reply);
+    }
+    engine.metrics_mut().stolen_jobs += stolen;
+    super::service::dispatch_batch(engine, &jobs, &replies);
+}
+
+/// One shard's worker loop: collect same-signature jobs into a pending
+/// batch, flush on the size/time policy, steal when idle.
+fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine: &mut VectorEngine) {
+    let mut pending: Vec<Submission> = Vec::new();
+    let mut pending_rows = 0usize;
+    // deadline of the batch currently collecting (set at its first job)
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let wait = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            // Idle (no batch collecting): own-queue arrivals interrupt the
+            // wait via the condvar immediately, so this tick only gates
+            // how often an idle shard scans for stealable work — keep it
+            // an order of magnitude lazier than the flush deadline.
+            None => cfg.flush_after * 10,
+        };
+        match queues[me].pop(wait) {
+            Pop::Item(sub) => {
+                if !pending.is_empty()
+                    && JobSignature::of(&sub.job) != JobSignature::of(&pending[0].job)
+                {
+                    // signature switch: commit the old batch first
+                    flush(engine, &mut pending, me);
+                    pending_rows = 0;
+                    deadline = None;
+                }
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + cfg.flush_after);
+                }
+                pending_rows += sub.job.rows();
+                pending.push(sub);
+                if pending.len() >= cfg.max_batch_jobs
+                    || pending_rows >= cfg.max_batch_rows
+                    || deadline.map_or(false, |d| Instant::now() >= d)
+                {
+                    flush(engine, &mut pending, me);
+                    pending_rows = 0;
+                    deadline = None;
+                }
+            }
+            Pop::TimedOut => {
+                if deadline.map_or(false, |d| Instant::now() >= d) {
+                    flush(engine, &mut pending, me);
+                    pending_rows = 0;
+                    deadline = None;
+                }
+                if pending.is_empty() && cfg.steal {
+                    for (i, q) in queues.iter().enumerate() {
+                        if i == me {
+                            continue;
+                        }
+                        if let Some(sub) = q.try_pop() {
+                            deadline = Some(Instant::now() + cfg.flush_after);
+                            pending_rows += sub.job.rows();
+                            pending.push(sub);
+                            break;
+                        }
+                    }
+                }
+            }
+            Pop::Closed => {
+                // own queue fully drained (pop prefers items over Closed)
+                flush(engine, &mut pending, me);
+                break;
+            }
+        }
+    }
+}
+
+/// A running sharded, coalescing engine service.
+pub struct ShardedService {
+    queues: Vec<Arc<ShardQueue>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    cfg: ShardConfig,
+}
+
+impl ShardedService {
+    /// Start `cfg.shards` worker shards, each constructing its own backend
+    /// inside its thread (backends are stateful and not `Send`). Fails
+    /// fast if any shard's backend cannot be built.
+    pub fn start<F>(cfg: ShardConfig, make_backend: F) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        assert!(cfg.shards >= 1, "at least one shard");
+        assert!(cfg.queue_depth >= 1, "queues must hold at least one job");
+        assert!(cfg.max_batch_jobs >= 1 && cfg.max_batch_rows >= 1);
+        let make_backend = Arc::new(make_backend);
+        let queues: Vec<Arc<ShardQueue>> =
+            (0..cfg.shards).map(|_| Arc::new(ShardQueue::new())).collect();
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for me in 0..cfg.shards {
+            let make_backend = Arc::clone(&make_backend);
+            let queues = queues.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return Metrics::default();
+                    }
+                };
+                let mut engine = VectorEngine::new(backend);
+                shard_worker(me, cfg, &queues, &mut engine);
+                engine.metrics().clone()
+            }));
+        }
+        drop(ready_tx);
+        let mut startup_err = None;
+        for _ in 0..cfg.shards {
+            if let Err(e) = ready_rx.recv().expect("shard startup channel closed") {
+                startup_err = Some(e);
+            }
+        }
+        if let Some(e) = startup_err {
+            // don't leak the shards that did start: close every queue so
+            // their workers exit, and reap them before failing
+            for q in &queues {
+                q.close();
+            }
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(ShardedService { queues, workers, cfg })
+    }
+
+    /// Convenience: start with a [`BackendKind`].
+    pub fn start_kind(
+        cfg: ShardConfig,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+    ) -> anyhow::Result<Self> {
+        Self::start(cfg, move || -> anyhow::Result<Box<dyn Backend>> {
+            Ok(match kind {
+                BackendKind::Native => Box::new(NativeBackend::default()),
+                BackendKind::NativeBitSliced => Box::new(NativeBackend::bit_sliced()),
+                BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
+            })
+        })
+    }
+
+    /// Shards in the service.
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Submit one job; it is routed to its signature's home shard and
+    /// coalesced with whatever same-signature jobs are in flight. Blocks
+    /// when the home shard's queue is full (backpressure). Returns a
+    /// receiver for the result.
+    pub fn submit(&self, job: Job) -> Receiver<anyhow::Result<JobResult>> {
+        let (tx, rx) = sync_channel(1);
+        let home = JobSignature::of(&job).shard(self.queues.len());
+        self.queues[home].push(Submission { job, home, reply: tx }, self.cfg.queue_depth);
+        rx
+    }
+
+    /// Submit many jobs (the batch front door of the tentpole API).
+    pub fn submit_many(&self, jobs: Vec<Job>) -> Vec<Receiver<anyhow::Result<JobResult>>> {
+        jobs.into_iter().map(|j| self.submit(j)).collect()
+    }
+
+    /// Submit many jobs and wait for every result (submission order).
+    pub fn run_many(&self, jobs: Vec<Job>) -> anyhow::Result<Vec<JobResult>> {
+        self.submit_many(jobs)
+            .into_iter()
+            .map(|rx| rx.recv().expect("shard dropped reply"))
+            .collect()
+    }
+
+    /// Stop all shards after draining their queues; returns the aggregate
+    /// and per-shard metrics (per-shard occupancy = each shard's `busy` /
+    /// `fill_rate`).
+    pub fn shutdown(self) -> (Metrics, Vec<Metrics>) {
+        for q in &self.queues {
+            q.close();
+        }
+        let mut per_shard = Vec::with_capacity(self.workers.len());
+        for h in self.workers {
+            per_shard.push(h.join().unwrap_or_default());
+        }
+        let mut aggregate = Metrics::default();
+        for m in &per_shard {
+            aggregate.merge(m);
+        }
+        (aggregate, per_shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::OpKind;
+    use crate::mvl::{Radix, Word};
+    use crate::util::Rng;
+
+    fn add_job(id: u64, rng: &mut Rng, rows: usize, p: usize) -> (Job, Vec<(Word, u8)>) {
+        let radix = Radix::TERNARY;
+        let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let expect = a.iter().zip(&b).map(|(x, y)| x.add_ref(y, 0)).collect();
+        (Job::new(id, OpKind::Add, radix, true, a, b), expect)
+    }
+
+    fn native() -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+    }
+
+    #[test]
+    fn sharded_service_is_exact() {
+        let cfg = ShardConfig {
+            shards: 3,
+            queue_depth: 8,
+            flush_after: Duration::from_millis(1),
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start(cfg, native).unwrap();
+        assert_eq!(svc.shards(), 3);
+        let mut rng = Rng::new(5);
+        let mut jobs = Vec::new();
+        let mut expects = Vec::new();
+        for id in 0..20 {
+            // two signatures so at least one shard coalesces a burst
+            let p = if id % 2 == 0 { 5 } else { 9 };
+            let (job, expect) = add_job(id, &mut rng, 1 + (id as usize * 7) % 40, p);
+            jobs.push(job);
+            expects.push(expect);
+        }
+        let results = svc.run_many(jobs).unwrap();
+        for (id, (res, expect)) in results.iter().zip(&expects).enumerate() {
+            assert_eq!(res.id, id as u64);
+            assert_eq!(&res.values, expect, "job {id}");
+        }
+        let (agg, per_shard) = svc.shutdown();
+        assert_eq!(agg.jobs, 20);
+        // every job ran exactly once, solo or coalesced
+        assert_eq!(agg.solo_jobs + agg.coalesced_jobs, 20);
+        assert_eq!(per_shard.len(), 3);
+        let sum: u64 = per_shard.iter().map(|m| m.jobs).sum();
+        assert_eq!(sum, 20);
+    }
+
+    /// A burst of identical-signature small jobs coalesces into far fewer
+    /// tiles than solo dispatch would use.
+    #[test]
+    fn burst_coalesces_into_full_tiles() {
+        let cfg = ShardConfig {
+            shards: 2,
+            queue_depth: 128,
+            max_batch_jobs: 128,
+            flush_after: Duration::from_millis(20),
+            steal: false, // keep the burst on its home shard
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start(cfg, native).unwrap();
+        let mut rng = Rng::new(9);
+        let mut jobs = Vec::new();
+        for id in 0..32 {
+            jobs.push(add_job(id, &mut rng, 8, 6).0); // 32 jobs × 8 rows
+        }
+        let results = svc.run_many(jobs).unwrap();
+        assert_eq!(results.len(), 32);
+        let (agg, _) = svc.shutdown();
+        assert_eq!(agg.jobs, 32);
+        assert!(agg.coalesced_jobs > 0, "burst should coalesce: {}", agg.summary());
+        // solo dispatch would use 32 tiles (one ≥256-row tile per job);
+        // coalescing needs at most a handful for 256 live rows
+        assert!(agg.tiles < 32, "tiles={} (solo would be 32)", agg.tiles);
+        assert!(agg.fill_rate() > 1.0 / 32.0, "fill={}", agg.fill_rate());
+    }
+
+    #[test]
+    fn shutdown_is_clean_without_jobs() {
+        let svc = ShardedService::start(ShardConfig::default(), native).unwrap();
+        let (agg, per_shard) = svc.shutdown();
+        assert_eq!(agg.jobs, 0);
+        assert_eq!(per_shard.len(), 4);
+    }
+
+    /// Work stealing: all jobs share one signature (one home shard), with
+    /// batch thresholds forcing immediate flushes so the home shard stays
+    /// busy while its queue backs up — idle shards must help. Correctness
+    /// is asserted unconditionally; stealing itself is timing-dependent,
+    /// so only the accounting invariant is checked.
+    #[test]
+    fn stealing_keeps_results_exact() {
+        let cfg = ShardConfig {
+            shards: 4,
+            queue_depth: 2, // tiny queue: forces backlog + backpressure
+            max_batch_jobs: 1, // every job flushes alone on the home shard
+            flush_after: Duration::from_micros(200),
+            steal: true,
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start(cfg, native).unwrap();
+        let mut rng = Rng::new(13);
+        let mut pending = Vec::new();
+        for id in 0..24 {
+            let (job, expect) = add_job(id, &mut rng, 300, 8);
+            pending.push((svc.submit(job), expect, id));
+        }
+        for (rx, expect, id) in pending {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.id, id);
+            assert_eq!(res.values, expect, "job {id}");
+        }
+        let (agg, per_shard) = svc.shutdown();
+        assert_eq!(agg.jobs, 24);
+        assert_eq!(agg.solo_jobs + agg.coalesced_jobs, 24);
+        // stolen jobs, if any, ran on a non-home shard
+        let busy_shards = per_shard.iter().filter(|m| m.jobs > 0).count();
+        assert!(busy_shards >= 1);
+        if agg.stolen_jobs > 0 {
+            assert!(busy_shards > 1);
+        }
+    }
+}

@@ -26,9 +26,10 @@
 //! * [`energy`] — energy / delay / area models (Table XI, Figs. 8–9).
 //! * [`baselines`] — the binary AP adder [6] and ternary CRA/CSA/CLA
 //!   models extrapolated from [15].
-//! * [`coordinator`] — the L3 vector engine: jobs, row batching, scheduling
-//!   across CAM arrays, backends (native simulator or AOT-compiled XLA
-//!   executables via PJRT).
+//! * [`coordinator`] — the L3 vector engine: jobs, row batching, cross-job
+//!   coalescing into shared tiles, a sharded work-stealing dispatch layer,
+//!   and backends (native simulator or AOT-compiled XLA executables via
+//!   PJRT).
 //! * [`runtime`] — PJRT client wrapper and artifact loading.
 //! * [`exp`] — experiment harness regenerating every paper table/figure.
 //!

@@ -7,7 +7,7 @@
 //!   artifacts         list the AOT artifact registry
 //!   sweep             circuit design-space exploration summary
 
-use mvap::coordinator::{BackendKind, EngineService, Job, OpKind};
+use mvap::coordinator::{BackendKind, EngineService, Job, OpKind, ShardConfig, ShardedService};
 use mvap::diagram::{dot, StateDiagram};
 use mvap::exp::run_experiment;
 use mvap::func::{full_add, full_sub, mac_digit};
@@ -28,6 +28,11 @@ USAGE:
   mvap run [--op add|sub|mac] [--rows N] [--digits P] [--radix N]
            [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
            [--blocked] [--artifacts DIR] [--seed S]
+           [--shards S] [--flush-us U] [--batch-rows R] [--batch-jobs B]
+           [--no-steal] [--no-coalesce]
+           (--shards > 0 runs the sharded, cross-job-coalescing dispatcher;
+            otherwise the worker pool coalesces each submitted batch unless
+            --no-coalesce)
   mvap artifacts [--artifacts DIR]
   mvap help
 ";
@@ -118,12 +123,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let blocked = args.flag("blocked") || !args.flag("non-blocked");
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let seed = args.get_parse_or("seed", 7u64);
+    let shards = args.get_parse_or("shards", 0usize);
+    let flush_us = args.get_parse_or("flush-us", 2000u64);
+    let batch_rows = args.get_parse_or("batch-rows", 1024usize);
+    let batch_jobs = args.get_parse_or("batch-jobs", 64usize);
+    let no_steal = args.flag("no-steal");
+    let no_coalesce = args.flag("no-coalesce");
     args.reject_unknown();
 
-    let svc = EngineService::start_kind(workers, jobs.max(2), backend, artifacts)?;
     let mut rng = Rng::new(seed);
-    let started = std::time::Instant::now();
-    let mut receivers = Vec::new();
+    let mut workload = Vec::with_capacity(jobs);
     for id in 0..jobs as u64 {
         let a: Vec<Word> = (0..rows)
             .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
@@ -131,10 +140,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let b: Vec<Word> = (0..rows)
             .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
             .collect();
-        receivers.push(svc.submit(Job::new(id, op, radix, blocked, a, b)));
+        workload.push(Job::new(id, op, radix, blocked, a, b));
     }
-    for rx in receivers {
-        let res = rx.recv().expect("worker died")?;
+
+    let print_result = |res: &mvap::coordinator::JobResult| {
         println!(
             "job {:>2}: {} rows × {} digits — energy {:.3e} J, delay {} cycles, {} tiles, {:?}",
             res.id,
@@ -145,10 +154,47 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             res.tiles,
             res.elapsed
         );
-    }
-    let wall = started.elapsed();
-    let metrics = svc.shutdown();
+    };
+
+    let started = std::time::Instant::now();
+    let (wall, metrics, per_shard) = if shards > 0 {
+        // sharded, cross-job-coalescing dispatch
+        let cfg = ShardConfig {
+            shards,
+            queue_depth: jobs.max(2),
+            max_batch_jobs: batch_jobs.max(1),
+            max_batch_rows: batch_rows.max(1),
+            flush_after: std::time::Duration::from_micros(flush_us),
+            steal: !no_steal,
+        };
+        let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
+        for rx in svc.submit_many(workload) {
+            let res = rx.recv().expect("shard died")?;
+            print_result(&res);
+        }
+        let wall = started.elapsed();
+        let (agg, per_shard) = svc.shutdown();
+        (wall, agg, Some(per_shard))
+    } else {
+        let svc = EngineService::start_kind(workers, jobs.max(2), backend, artifacts)?;
+        let receivers = if no_coalesce {
+            workload.into_iter().map(|j| svc.submit(j)).collect::<Vec<_>>()
+        } else {
+            svc.submit_batch(workload)
+        };
+        for rx in receivers {
+            let res = rx.recv().expect("worker died")?;
+            print_result(&res);
+        }
+        let wall = started.elapsed();
+        (wall, svc.shutdown(), None)
+    };
     println!("—— {}", metrics.summary());
+    if let Some(per_shard) = per_shard {
+        for (i, m) in per_shard.iter().enumerate() {
+            println!("   shard {i}: {}", m.summary());
+        }
+    }
     println!(
         "—— wall {:?} ({:.0} rows/s end-to-end)",
         wall,

@@ -6,7 +6,9 @@
 //! interleaved compare/write rounds.
 
 use mvap::ap::{add_vectors, adder_lut, load_operands_storage, Ap, ExecMode};
-use mvap::cam::{BitSlicedArray, CamArray, StorageKind};
+use mvap::cam::{
+    march_detect, BitSlicedArray, CamArray, CamStorage, Fault, FaultyArray, StorageKind,
+};
 use mvap::mvl::{Radix, Word, DONT_CARE};
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
@@ -123,6 +125,119 @@ fn degenerate_dont_care_cases() {
         assert_eq!(a.tags, b.tags);
         assert_eq!(a.mismatch_hist, b.mismatch_hist);
         assert_eq!(a.mismatch_hist[0], rows as u64);
+    }
+}
+
+/// Fault injection on the bit-sliced backend is observably identical to
+/// the scalar backend: the same planted stuck faults produce the same
+/// compare tags and mismatch histograms, the same priced write ops, the
+/// same visible contents — and the march test locates the same cells.
+#[test]
+fn faulty_arrays_agree_across_storages() {
+    forall(Config::cases(60), |rng: &mut Rng| {
+        let n = 2 + rng.digit(4); // radix 2..=5
+        let radix = Radix(n);
+        // bias row counts toward 64-row word-boundary straddles
+        let rows = match rng.index(3) {
+            0 => 1 + rng.index(40),
+            1 => 63 + rng.index(4),
+            _ => 1 + rng.index(200),
+        };
+        let cols = 1 + rng.index(4);
+        let mut data = vec![0u8; rows * cols];
+        for d in data.iter_mut() {
+            *d = random_digit(rng, n, 0.1);
+        }
+        let mut scalar = FaultyArray::with_storage(CamStorage::from_data(
+            StorageKind::Scalar,
+            radix,
+            rows,
+            cols,
+            &data,
+        ));
+        let mut sliced = FaultyArray::with_storage(CamStorage::from_data(
+            StorageKind::BitSliced,
+            radix,
+            rows,
+            cols,
+            &data,
+        ));
+        // plant identical faults on both
+        for _ in 0..1 + rng.index(4) {
+            let r = rng.index(rows);
+            let c = rng.index(cols);
+            let fault = if rng.chance(0.5) {
+                Fault::StuckAtValue(rng.digit(n))
+            } else {
+                Fault::StuckDontCare
+            };
+            scalar.inject(r, c, fault);
+            sliced.inject(r, c, fault);
+        }
+        assert_eq!(
+            scalar.array().to_digits(),
+            sliced.array().to_digits(),
+            "fault-effective contents (n={n} rows={rows})"
+        );
+        // interleaved compare/write rounds must agree observably
+        for round in 0..3 {
+            let width = 1 + rng.index(cols);
+            let mut all: Vec<usize> = (0..cols).collect();
+            rng.shuffle(&mut all);
+            let sel = &all[..width];
+            let keys: Vec<u8> = (0..width).map(|_| random_digit(rng, n, 0.1)).collect();
+            let a = scalar.compare(sel, &keys);
+            let b = sliced.compare(sel, &keys);
+            assert_eq!(a.tags, b.tags, "round {round}: tags (n={n} rows={rows})");
+            assert_eq!(
+                a.mismatch_hist, b.mismatch_hist,
+                "round {round}: histogram (n={n} rows={rows})"
+            );
+            let ww = 1 + rng.index(cols);
+            let wcols: Vec<usize> = (0..ww).map(|_| rng.index(cols)).collect();
+            let vals: Vec<u8> = (0..ww).map(|_| rng.digit(n)).collect();
+            let ops_a = scalar.write(&a.tags, &wcols, &vals);
+            let ops_b = sliced.write(&b.tags, &wcols, &vals);
+            assert_eq!(ops_a, ops_b, "round {round}: write ops (n={n} rows={rows})");
+            assert_eq!(
+                scalar.array().to_digits(),
+                sliced.array().to_digits(),
+                "round {round}: contents (n={n} rows={rows})"
+            );
+        }
+        // march detection locates the same suspect cells on both backends
+        assert_eq!(
+            march_detect(&mut scalar),
+            march_detect(&mut sliced),
+            "march suspects (n={n} rows={rows})"
+        );
+    });
+}
+
+/// The march test detects planted faults exactly, on the bit-sliced
+/// backend, across word-boundary row counts.
+#[test]
+fn bitsliced_march_detects_planted_faults() {
+    let radix = Radix::TERNARY;
+    for rows in [1usize, 63, 64, 65, 128] {
+        let mut rng = Rng::new(rows as u64 * 17 + 1);
+        let cols = 3;
+        let mut a = FaultyArray::new_kind(StorageKind::BitSliced, radix, rows, cols);
+        let mut planted = std::collections::BTreeSet::new();
+        for _ in 0..1 + rng.index(3) {
+            let r = rng.index(rows);
+            let c = rng.index(cols);
+            let fault = if rng.chance(0.5) {
+                Fault::StuckAtValue(rng.digit(3))
+            } else {
+                Fault::StuckDontCare
+            };
+            a.inject(r, c, fault);
+            planted.insert((r, c));
+        }
+        let found: std::collections::BTreeSet<(usize, usize)> =
+            march_detect(&mut a).into_iter().collect();
+        assert_eq!(found, planted, "rows={rows}");
     }
 }
 

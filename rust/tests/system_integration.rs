@@ -1,9 +1,13 @@
 //! Cross-module integration tests that need no AOT artifacts: LUT
-//! generation → AP simulation → coordinator service, plus property tests
-//! on coordinator invariants.
+//! generation → AP simulation → coordinator service, property tests on
+//! coordinator invariants, and the coalescing/sharding differential
+//! suite (coalesced execution must be value- and stats-exact vs solo).
 
-use mvap::coordinator::{EngineService, Job, NativeBackend, OpKind};
-use mvap::coordinator::Backend;
+use mvap::coordinator::batcher::{make_tiles, pad_classes, strip_padding};
+use mvap::coordinator::{
+    Backend, EngineService, Job, JobSignature, NativeBackend, OpKind, ShardConfig,
+    ShardedService, VectorEngine,
+};
 use mvap::mvl::{Radix, Word};
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
@@ -124,6 +128,221 @@ fn bitsliced_service_matches_native() {
         out
     };
     assert_eq!(run(BackendKind::Native), run(BackendKind::NativeBitSliced));
+}
+
+/// Batcher invariants: `make_tiles` → `extract` round-trips the inputs,
+/// padding is confined to the last tile and sums to
+/// `tiles × tile_rows − rows`, including exact-multiple-of-tile
+/// boundaries.
+#[test]
+fn batcher_tiling_roundtrip_property() {
+    forall(Config::cases(120), |rng| {
+        let radix = Radix::TERNARY;
+        let p = 1 + rng.index(10);
+        let tile_rows = 1 + rng.index(64);
+        // bias toward exact multiples of the tile height
+        let rows = if rng.chance(0.3) {
+            tile_rows * (1 + rng.index(4))
+        } else {
+            1 + rng.index(300)
+        };
+        let a = random_words(rng, rows, p, radix);
+        let b = random_words(rng, rows, p, radix);
+        let tiles = make_tiles(&a, &b, tile_rows);
+        assert_eq!(tiles.len(), (rows + tile_rows - 1) / tile_rows);
+
+        // round-trip: extracting from the tile's own data returns the B
+        // operands and zero carries, in global row order
+        let mut out = Vec::new();
+        for t in &tiles {
+            out.extend(t.extract(&t.data, radix));
+        }
+        assert_eq!(out.len(), rows);
+        for (r, (w, c)) in out.iter().enumerate() {
+            assert_eq!(w, &b[r], "row {r} (rows={rows} tile={tile_rows})");
+            assert_eq!(*c, 0);
+        }
+        // the A operands are preserved row-major too
+        for (t_idx, t) in tiles.iter().enumerate() {
+            let cols = t.layout.cols();
+            for r in 0..t.live_rows {
+                let g = t_idx * tile_rows + r;
+                assert_eq!(&t.data[r * cols..r * cols + p], a[g].digits());
+            }
+        }
+        // padding accounting
+        let pad: usize = tiles.iter().map(|t| t.pad_rows()).sum();
+        assert_eq!(pad, tiles.len() * tile_rows - rows);
+        for t in &tiles[..tiles.len() - 1] {
+            assert_eq!(t.pad_rows(), 0, "only the last tile may pad");
+        }
+        if rows % tile_rows == 0 {
+            assert_eq!(pad, 0, "exact multiples must not pad");
+        }
+    });
+}
+
+/// `strip_padding` never underflows a histogram class: every corrected
+/// count stays ≤ its original (saturating at zero), for any pad count and
+/// any class list — including out-of-range classes, which are ignored.
+#[test]
+fn strip_padding_never_underflows() {
+    forall(Config::cases(200), |rng| {
+        let len = 1 + rng.index(6);
+        let orig: Vec<u64> = (0..len).map(|_| rng.below(25)).collect();
+        let mut hist = orig.clone();
+        let pad = rng.below(40); // often larger than any class count
+        let classes: Vec<usize> = (0..rng.index(8)).map(|_| rng.index(len + 2)).collect();
+        strip_padding(&mut hist, pad, &classes);
+        for (k, (&now, &was)) in hist.iter().zip(&orig).enumerate() {
+            assert!(now <= was, "class {k} grew: {was} -> {now}");
+        }
+    });
+}
+
+/// `pad_classes` covers every pass, and for the arithmetic LUT family the
+/// all-zero padding row always mismatches ≥ 1 cell (000… is noAction).
+#[test]
+fn pad_classes_match_lut_shape() {
+    use mvap::ap::{adder_lut, mac_lut, sub_lut, ExecMode};
+    for lut in [
+        adder_lut(Radix::TERNARY, ExecMode::Blocked),
+        adder_lut(Radix::BINARY, ExecMode::NonBlocked),
+        sub_lut(Radix::TERNARY, ExecMode::Blocked),
+        mac_lut(Radix::TERNARY, ExecMode::NonBlocked),
+    ] {
+        let classes = pad_classes(&lut);
+        assert_eq!(classes.len(), lut.passes.len(), "{}", lut.name);
+        assert!(classes.iter().all(|&k| (1..=lut.arity).contains(&k)), "{}", lut.name);
+    }
+}
+
+/// THE coalescing acceptance property: for random mixed batches (several
+/// signatures, random rows/ops/radices/modes), per-job values, stats,
+/// energy, and delay from the coalesced path equal the solo path — on
+/// both storage backends.
+#[test]
+fn coalesced_batches_are_value_and_stats_exact() {
+    use mvap::cam::StorageKind;
+    forall(Config::cases(10), |rng| {
+        let kind = if rng.chance(0.5) { StorageKind::Scalar } else { StorageKind::BitSliced };
+        // a few signatures, many small jobs spread across them
+        let nsigs = 1 + rng.index(3);
+        let sigs: Vec<(OpKind, Radix, bool, usize)> = (0..nsigs)
+            .map(|_| {
+                let op = [OpKind::Add, OpKind::Sub, OpKind::Mac][rng.index(3)];
+                let radix = if rng.chance(0.3) { Radix::BINARY } else { Radix::TERNARY };
+                (op, radix, rng.chance(0.5), 1 + rng.index(6))
+            })
+            .collect();
+        let njobs = 3 + rng.index(9);
+        let jobs: Vec<Job> = (0..njobs)
+            .map(|id| {
+                let (op, radix, blocked, p) = sigs[rng.index(nsigs)];
+                let rows = 1 + rng.index(120);
+                let a = random_words(rng, rows, p, radix);
+                let b = random_words(rng, rows, p, radix);
+                Job::new(id as u64, op, radix, blocked, a, b)
+            })
+            .collect();
+
+        // solo reference
+        let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+        let want: Vec<_> = jobs.iter().map(|j| solo.execute(j).unwrap()).collect();
+
+        // coalesced: group by signature as the service front door does
+        let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+        let mut order: Vec<Vec<usize>> = Vec::new();
+        let mut seen: Vec<JobSignature> = Vec::new();
+        for (i, j) in jobs.iter().enumerate() {
+            let sig = JobSignature::of(j);
+            match seen.iter().position(|s| *s == sig) {
+                Some(g) => order[g].push(i),
+                None => {
+                    seen.push(sig);
+                    order.push(vec![i]);
+                }
+            }
+        }
+        for idxs in order {
+            let group: Vec<Job> = idxs.iter().map(|&i| jobs[i].clone()).collect();
+            let got = eng.execute_coalesced(&group).unwrap();
+            for (res, &i) in got.iter().zip(&idxs) {
+                let w = &want[i];
+                assert_eq!(res.id, w.id);
+                assert_eq!(res.values, w.values, "job {i} values ({kind:?})");
+                assert_eq!(res.stats, w.stats, "job {i} stats ({kind:?})");
+                assert_eq!(res.energy, w.energy, "job {i} energy");
+                assert_eq!(res.delay_cycles, w.delay_cycles, "job {i} delay");
+            }
+        }
+        assert_eq!(eng.metrics().jobs, njobs as u64);
+        // coalescing never dispatches more tile capacity than solo
+        assert!(eng.metrics().tile_capacity_rows <= solo.metrics().tile_capacity_rows);
+        assert!(eng.metrics().fill_rate() >= solo.metrics().fill_rate());
+    });
+}
+
+/// The sharded, cross-submission coalescing service returns exact results
+/// for a mixed workload and accounts for every job exactly once.
+#[test]
+fn sharded_service_end_to_end_mixed_workload() {
+    let cfg = ShardConfig {
+        shards: 3,
+        queue_depth: 32,
+        flush_after: std::time::Duration::from_millis(1),
+        ..ShardConfig::default()
+    };
+    let svc = ShardedService::start(cfg, || {
+        Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let mut rng = Rng::new(404);
+    let mut jobs = Vec::new();
+    let mut oracle = Vec::new();
+    for id in 0..24u64 {
+        let radix = if id % 3 == 0 { Radix::BINARY } else { Radix::TERNARY };
+        let op = match id % 3 {
+            0 => OpKind::Add,
+            1 => OpKind::Sub,
+            _ => OpKind::Mac,
+        };
+        let p = 1 + (id as usize % 5);
+        let rows = 1 + rng.index(200);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        jobs.push(Job::new(id, op, radix, id % 2 == 0, a.clone(), b.clone()));
+        oracle.push((op, radix, a, b));
+    }
+    let results = svc.run_many(jobs).unwrap();
+    for (id, res) in results.iter().enumerate() {
+        let (op, radix, a, b) = &oracle[id];
+        assert_eq!(res.id, id as u64);
+        let n = radix.n() as u16;
+        for r in 0..a.len() {
+            let expect: Vec<u8> = match op {
+                OpKind::Add => a[r].add_ref(&b[r], 0).0.digits().to_vec(),
+                OpKind::Sub => a[r].sub_ref(&b[r], 0).0.digits().to_vec(),
+                OpKind::Mac => {
+                    let mut carry = 0u16;
+                    a[r].digits()
+                        .iter()
+                        .zip(b[r].digits())
+                        .map(|(&x, &y)| {
+                            let v = x as u16 * y as u16 + carry;
+                            carry = v / n;
+                            (v % n) as u8
+                        })
+                        .collect()
+                }
+            };
+            assert_eq!(res.values[r].0.digits(), &expect[..], "job {id} row {r} {op:?}");
+        }
+    }
+    let (agg, per_shard) = svc.shutdown();
+    assert_eq!(agg.jobs, 24);
+    assert_eq!(agg.solo_jobs + agg.coalesced_jobs, 24);
+    assert_eq!(per_shard.iter().map(|m| m.jobs).sum::<u64>(), 24);
 }
 
 /// Energy model cross-check at the Table XI design point: the ternary AP
