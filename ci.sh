@@ -9,11 +9,15 @@
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
 #   3. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
-#   4. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#   4. cargo bench --no-run         (benches must keep compiling)
+#   5. cargo bench -- --quick       (hot-path benches, 3 iterations each,
+#                                    recorded to BENCH_3.json at the repo
+#                                    root — the perf trajectory artifact)
+#   6. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
-#   5. cargo doc --no-deps          (warnings as errors; the crate also denies
+#   7. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#   6. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#   8. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -29,6 +33,12 @@ cargo test -q
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"
     cargo test --release -q
+
+    echo "==> cargo bench --no-run (compile gate)"
+    cargo bench --no-run
+
+    echo "==> cargo bench -- --quick (recording BENCH_3.json)"
+    cargo bench --bench bench_main -- --quick --json ../BENCH_3.json hot/
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

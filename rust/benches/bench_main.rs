@@ -2,12 +2,16 @@
 //! cost of each experiment) plus the hot-path microbenches the §Perf pass
 //! optimises. Hand-rolled harness (criterion unavailable offline).
 //!
-//! Filter with `cargo bench -- <substring>`.
+//! Filter with `cargo bench -- <substring>`. Extra flags:
+//!
+//! * `--quick` — single warmup pass, 3 iterations per bench (the CI
+//!   trajectory mode; see `ci.sh`, which records `BENCH_3.json` with it).
+//! * `--json <path>` — additionally write the summaries as JSON.
 
 mod harness;
 
 use harness::{bench, black_box};
-use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode};
+use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode, KernelCache, LutKernel};
 use mvap::cam::{BitSlicedArray, CamArray, StorageKind};
 use mvap::circuit::{CellTech, MatchClass, MatchlineSim};
 use mvap::coordinator::{
@@ -30,9 +34,23 @@ fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word>
 }
 
 fn main() {
-    let filter: Option<String> = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-') && a != "--bench");
+    let mut filter: Option<String> = None;
+    let mut json_path: Option<String> = None;
+    let mut quick = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--quick" => {
+                quick = true;
+                harness::set_quick(true);
+            }
+            "--json" => {
+                json_path = Some(args.next().expect("--json requires a path argument"));
+            }
+            a if a.starts_with('-') => {} // cargo's --bench etc.
+            a => filter = Some(a.to_string()),
+        }
+    }
     let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
     let mut results = Vec::new();
     println!("mvap benchmarks (filter: {:?})\n", filter);
@@ -159,6 +177,71 @@ fn main() {
                 black_box(sliced.write(&tags, &[5, 17], &[2, 0]));
             },
         ));
+    }
+    if run("hot/fast_path") {
+        // The state-bucketing fast path (the coordinator's tile executor)
+        // across array heights, on both storages, plus the row-at-a-time
+        // reference on bit-sliced storage — `fast_path_bitsliced` vs
+        // `fast_path_rowwise_bitsliced` measures the plane-native win
+        // (the PR-3 tentpole claim: ≥ 5x at 256k rows).
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        let mode = ExecMode::Blocked;
+        let lut = adder_lut(radix, mode);
+        let kernel = LutKernel::compile(&lut, mode);
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(14);
+            let a = random_words(&mut rng, rows, p, radix);
+            let b = random_words(&mut rng, rows, p, radix);
+            // Each iteration re-applies the LUT to the evolving array
+            // in place (full_add is total, states stay in-radix), so the
+            // timed region contains only fast-path work — no per-iteration
+            // storage clone to dilute the plane-native vs row-wise ratio.
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let tag = match kind {
+                    StorageKind::Scalar => "scalar",
+                    StorageKind::BitSliced => "bitsliced",
+                };
+                let (storage, layout) =
+                    mvap::ap::load_operands_storage(kind, radix, &a, &b, None);
+                let positions = layout.positions();
+                let mut ap = Ap::with_storage(storage);
+                results.push(bench(
+                    &format!("hot/fast_path_{tag}_{rows}rows"),
+                    Some((rows * p) as u64),
+                    || {
+                        ap.apply_lut_multi_fast_kernel(&lut, &positions, mode, &kernel);
+                        black_box(ap.stats().rows_written);
+                    },
+                ));
+            }
+            // the pre-kernel row-scalar fast path on bit-sliced storage
+            let (storage, layout) =
+                mvap::ap::load_operands_storage(StorageKind::BitSliced, radix, &a, &b, None);
+            let positions = layout.positions();
+            let mut ap = Ap::with_storage(storage);
+            results.push(bench(
+                &format!("hot/fast_path_rowwise_bitsliced_{rows}rows"),
+                Some((rows * p) as u64),
+                || {
+                    ap.apply_lut_multi_fast_rowwise(&lut, &positions, mode);
+                    black_box(ap.stats().rows_written);
+                },
+            ));
+        }
+    }
+    if run("hot/kernel_cache") {
+        // kernel compilation (cold) vs signature-keyed lookup (warm)
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        results.push(bench("hot/kernel_cache_cold", None, || {
+            let cache = KernelCache::new();
+            black_box(cache.get_or_compile(&lut, ExecMode::Blocked).0.num_states());
+        }));
+        let cache = KernelCache::new();
+        cache.get_or_compile(&lut, ExecMode::Blocked);
+        results.push(bench("hot/kernel_cache_warm", None, || {
+            black_box(cache.get_or_compile(&lut, ExecMode::Blocked).0.num_states());
+        }));
     }
     if run("hot/pjrt_add") {
         let dir = PathBuf::from("artifacts");
@@ -353,5 +436,16 @@ fn main() {
     println!("\n==== summary ====");
     for r in &results {
         r.print();
+    }
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = results.iter().map(|r| format!("    {}", r.json())).collect();
+        let doc = format!(
+            "{{\n  \"suite\": \"mvap-bench\",\n  \"mode\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            if quick { "quick" } else { "full" },
+            body.join(",\n")
+        );
+        std::fs::write(&path, doc).expect("write bench json");
+        println!("\nwrote {path} ({} results)", results.len());
     }
 }

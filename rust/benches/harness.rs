@@ -1,8 +1,24 @@
 //! Minimal benchmark harness (criterion is not in the offline crate set):
 //! warmup + timed iterations, reporting mean / p50 / p95 and a derived
-//! throughput where the bench provides an item count.
+//! throughput where the bench provides an item count. Supports a quick
+//! mode (`--quick`: one warmup pass, few iterations — the CI trajectory
+//! recorder) and machine-readable JSON output per summary.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
+
+/// Quick mode: minimal warmup and iteration counts, for CI trend
+/// recording rather than low-noise measurement.
+static QUICK: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable quick mode (see [`bench`]).
+pub fn set_quick(on: bool) {
+    QUICK.store(on, Ordering::Relaxed);
+}
+
+fn quick() -> bool {
+    QUICK.load(Ordering::Relaxed)
+}
 
 /// One benchmark's timing summary.
 pub struct Summary {
@@ -26,25 +42,49 @@ impl Summary {
             self.name, self.iters, self.mean, self.p50, self.p95
         );
     }
+
+    /// One JSON object (no external serializer in the offline crate set).
+    pub fn json(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| format!("{t:.1}"))
+            .unwrap_or_else(|| "null".to_string());
+        format!(
+            "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+             \"p95_ns\": {}, \"throughput_items_per_s\": {}}}",
+            self.name,
+            self.iters,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+            tp,
+        )
+    }
 }
 
 /// Run a benchmark: `f` is called once per iteration; `items` (optional)
 /// is the per-iteration workload size for throughput reporting.
 pub fn bench<F: FnMut()>(name: &str, items: Option<u64>, mut f: F) -> Summary {
-    // Warmup: run until 0.3 s or 3 iterations, whichever is later.
+    // Warmup: run until 0.3 s or 3 iterations, whichever is later
+    // (quick mode: a single pass).
     let warm_start = Instant::now();
     let mut warm_iters = 0;
     while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(300) {
         f();
         warm_iters += 1;
-        if warm_iters >= 50 {
+        if quick() || warm_iters >= 50 {
             break;
         }
     }
-    // Measure: aim for ~1.5 s of samples, 5..=200 iterations.
+    // Measure: aim for ~1.5 s of samples, 5..=200 iterations (quick
+    // mode: exactly 3 — enough for a p50 trend line, cheap enough for CI).
     let per_iter = warm_start.elapsed() / warm_iters as u32;
     let target = Duration::from_millis(1500);
-    let iters = (target.as_nanos() / per_iter.as_nanos().max(1)).clamp(5, 200) as usize;
+    let iters = if quick() {
+        3
+    } else {
+        (target.as_nanos() / per_iter.as_nanos().max(1)).clamp(5, 200) as usize
+    };
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();

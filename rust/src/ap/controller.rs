@@ -8,9 +8,11 @@
 //! write cycle at the end of the block commits every flagged row. The
 //! flip-flops are reset after each block.
 
+use super::kernel::LutKernel;
 use super::stats::ApStats;
-use crate::cam::{CamArray, CamStorage, CompareOutcome};
+use crate::cam::{popcount_range, CamArray, CamStorage, CompareOutcome};
 use crate::lutgen::Lut;
+use crate::mvl::DONT_CARE;
 
 /// Execution mode for a LUT program.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,6 +34,84 @@ pub struct Ap {
     stats: ApStats,
     /// Write-enable flip-flops (blocked mode), one per row.
     write_enable: Vec<bool>,
+    /// Reusable fast-path buffers, hoisted out of the per-digit-position
+    /// loops so multi-digit programs allocate once per `Ap`, not once per
+    /// digit position.
+    scratch: Scratch,
+}
+
+/// Scratch buffers for the state-bucketing fast path.
+#[derive(Clone, Debug, Default)]
+struct Scratch {
+    /// Per-(segment,) state bucket populations.
+    counts: Vec<u64>,
+    /// Per-row state ids (row-at-a-time classification).
+    row_state: Vec<u32>,
+    /// Per-state 64-rows-per-word eq-masks (plane-native classification),
+    /// flattened `[state][word]`.
+    masks: Vec<u64>,
+    /// Plane-native classification working buffers.
+    classify: crate::cam::ClassifyScratch,
+}
+
+/// Row-at-a-time classification through the storage's `get` dispatch:
+/// buckets every row by state id into `counts` (segment-major when
+/// `bounds` is given) and records per-row ids in `row_state`. Returns
+/// `false` — buffers part-filled, nothing else touched — on the first
+/// don't-care digit in a compared column. Shared by the scalar fast
+/// path, the segmented scalar fast path, and the row-wise reference.
+fn classify_rowwise(
+    storage: &CamStorage,
+    cols: &[usize],
+    nstates: usize,
+    bounds: Option<&[usize]>,
+    counts: &mut Vec<u64>,
+    row_state: &mut Vec<u32>,
+) -> bool {
+    let rows = storage.rows();
+    let radix = storage.radix().n() as usize;
+    counts.clear();
+    counts.resize(bounds.map_or(1, |b| b.len()) * nstates, 0);
+    row_state.clear();
+    row_state.resize(rows, 0);
+    let mut seg = 0usize;
+    for r in 0..rows {
+        if let Some(b) = bounds {
+            while r >= b[seg] {
+                seg += 1; // skips empty segments
+            }
+        }
+        let mut sid = 0usize;
+        for &c in cols.iter() {
+            let d = storage.get(r, c);
+            if d == DONT_CARE {
+                return false;
+            }
+            sid = sid * radix + d as usize;
+        }
+        counts[seg * nstates + sid] += 1;
+        row_state[r] = sid as u32;
+    }
+    true
+}
+
+/// Row-at-a-time rewrite of the matched states recorded in `row_state`,
+/// through the storage's `set` dispatch. Counterpart of
+/// [`classify_rowwise`].
+fn rewrite_rowwise(
+    storage: &mut CamStorage,
+    cols: &[usize],
+    kernel: &LutKernel,
+    row_state: &[u32],
+) {
+    for (r, &sid) in row_state.iter().enumerate() {
+        let st = &kernel.tables.per_state[sid as usize];
+        if st.matched {
+            for (i, &c) in cols.iter().enumerate() {
+                storage.set(r, c, st.final_digits[i]);
+            }
+        }
+    }
 }
 
 impl Ap {
@@ -43,7 +123,12 @@ impl Ap {
     /// Wrap an array in an explicitly chosen storage backend.
     pub fn with_storage(storage: CamStorage) -> Self {
         let rows = storage.rows();
-        Ap { storage, stats: ApStats::default(), write_enable: vec![false; rows] }
+        Ap {
+            storage,
+            stats: ApStats::default(),
+            write_enable: vec![false; rows],
+            scratch: Scratch::default(),
+        }
     }
 
     /// The underlying storage.
@@ -97,21 +182,25 @@ impl Ap {
                 }
             }
             ExecMode::Blocked => {
+                // Take the flip-flop register instead of cloning it per
+                // block: `write` borrows all of `self`, so the register is
+                // moved out for the duration and restored at the end.
+                let mut enables = std::mem::take(&mut self.write_enable);
                 for block in lut.blocks() {
                     debug_assert!(!block.is_empty());
-                    self.write_enable.iter_mut().for_each(|w| *w = false);
+                    enables.iter_mut().for_each(|w| *w = false);
                     for p in &block {
                         let key = lut.decode(p.input);
                         let out = self.compare(cols, &key);
-                        for (w, t) in self.write_enable.iter_mut().zip(&out.tags) {
+                        for (w, t) in enables.iter_mut().zip(&out.tags) {
                             *w |= t; // Tag clocks the D-FF
                         }
                     }
                     // all passes of a block share the write action
                     let (start, vals) = lut.write_of(block[0]);
-                    let enables = self.write_enable.clone();
                     self.write(&enables, &cols[start..], &vals);
                 }
+                self.write_enable = enables;
             }
         }
     }
@@ -130,60 +219,165 @@ impl Ap {
     /// one** pass of the whole program (§IV-A — the validator enforces
     /// exactly this). So instead of `passes × rows` cell compares, bucket
     /// rows by their state id once, then combine per-state precomputed
-    /// contribution tables:
+    /// contribution tables (a [`LutKernel`]):
     ///
     /// * `hist[p][k]` gains `count(s)` at `k = dist(state-at-p, key_p)`,
     ///   where state-at-p is the initial state before (and at) the
     ///   matching pass and the written state after it (after the *block*
     ///   for blocked mode);
     /// * set/reset = changed digits in the (possibly widened) write;
-    /// * the array update is a single row rewrite.
+    /// * the array update is a single rewrite of the matched states.
+    ///
+    /// On the bit-sliced backend both halves are *plane-native*:
+    /// classification is word-parallel
+    /// ([`crate::cam::BitSlicedArray::classify_states_into`] — 64 rows per
+    /// AND/XOR op, bucket counts by popcount) and the rewrite is a masked
+    /// word merge
+    /// ([`crate::cam::BitSlicedArray::merge_write_states`]). The scalar
+    /// backend buckets and rewrites row by row.
     ///
     /// Rows holding don't-care digits fall back to the faithful path
     /// (don't-care matching is not representable as a single state id).
     pub fn apply_lut_fast(&mut self, lut: &Lut, cols: &[usize], mode: ExecMode) {
-        let tables = FastTables::build(lut, mode);
-        self.apply_lut_fast_with(lut, cols, mode, &tables);
+        let kernel = LutKernel::compile(lut, mode);
+        self.apply_lut_fast_with(lut, cols, mode, &kernel);
     }
 
-    /// [`Self::apply_lut_fast`] with caller-provided precomputed tables
-    /// (hoisted out of multi-digit loops — §Perf iteration 2).
+    /// Fast-path variant of [`Self::apply_lut_multi`]: the kernel is
+    /// compiled once and shared across digit positions.
+    pub fn apply_lut_multi_fast(&mut self, lut: &Lut, positions: &[Vec<usize>], mode: ExecMode) {
+        let kernel = LutKernel::compile(lut, mode);
+        self.apply_lut_multi_fast_kernel(lut, positions, mode, &kernel);
+    }
+
+    /// [`Self::apply_lut_multi_fast`] with a caller-provided (typically
+    /// cached — [`super::KernelCache`]) precompiled kernel, so the
+    /// coordinator stops recompiling contribution tables per tile.
+    pub fn apply_lut_multi_fast_kernel(
+        &mut self,
+        lut: &Lut,
+        positions: &[Vec<usize>],
+        mode: ExecMode,
+        kernel: &LutKernel,
+    ) {
+        for cols in positions {
+            self.apply_lut_fast_with(lut, cols, mode, kernel);
+        }
+    }
+
+    /// Row-at-a-time reference implementation of the fast path: always
+    /// classifies and rewrites with per-cell `get`/`set`, even on the
+    /// bit-sliced backend (where the plane-native path would be used).
+    /// Kept as the differential-test oracle and the benchmark baseline
+    /// that the plane-native path is measured against
+    /// (`hot/fast_path_rowwise_*`); not a production entry point.
+    pub fn apply_lut_multi_fast_rowwise(
+        &mut self,
+        lut: &Lut,
+        positions: &[Vec<usize>],
+        mode: ExecMode,
+    ) {
+        let kernel = LutKernel::compile(lut, mode);
+        for cols in positions {
+            let nstates = kernel.num_states();
+            let ok = classify_rowwise(
+                &self.storage,
+                cols,
+                nstates,
+                None,
+                &mut self.scratch.counts,
+                &mut self.scratch.row_state,
+            );
+            if !ok {
+                self.apply_lut(lut, cols, mode);
+                continue;
+            }
+            self.record_fast_stats(lut, cols.len(), mode, nstates, &kernel);
+            rewrite_rowwise(&mut self.storage, cols, &kernel, &self.scratch.row_state);
+        }
+    }
+
+    /// One digit position of the fast path with a precompiled kernel.
     fn apply_lut_fast_with(
         &mut self,
         lut: &Lut,
         cols: &[usize],
         mode: ExecMode,
-        tables: &FastTables,
+        kernel: &LutKernel,
     ) {
-        let rows = self.storage.rows();
         let radix = self.storage.radix().n() as usize;
+        let nstates = kernel.num_states();
+        debug_assert_eq!(nstates, radix.pow(cols.len() as u32), "kernel/LUT shape mismatch");
 
-        // bucket rows by state id; fall back if any don't-care appears
-        let mut counts = vec![0u64; tables.num_states];
-        let mut row_state = vec![0u32; rows];
-        for r in 0..rows {
-            let mut sid = 0usize;
-            for &c in cols {
-                let d = self.storage.get(r, c);
-                if d == crate::mvl::DONT_CARE {
-                    return self.apply_lut(lut, cols, mode);
+        // classification: bucket rows by state id into scratch buffers;
+        // fall back if any don't-care appears in a compared column
+        let ok = match &self.storage {
+            CamStorage::BitSliced(arr) => {
+                // plane-native: per-state eq-mask words, counts by popcount
+                let masks = &mut self.scratch.masks;
+                if arr.classify_states_into_with(cols, masks, &mut self.scratch.classify) {
+                    let words = arr.words();
+                    let counts = &mut self.scratch.counts;
+                    counts.clear();
+                    counts.resize(nstates, 0);
+                    for (sid, count) in counts.iter_mut().enumerate() {
+                        *count = masks[sid * words..(sid + 1) * words]
+                            .iter()
+                            .map(|w| u64::from(w.count_ones()))
+                            .sum();
+                    }
+                    true
+                } else {
+                    false
                 }
-                sid = sid * radix + d as usize;
             }
-            counts[sid] += 1;
-            row_state[r] = sid as u32;
+            scalar => classify_rowwise(
+                scalar,
+                cols,
+                nstates,
+                None,
+                &mut self.scratch.counts,
+                &mut self.scratch.row_state,
+            ),
+        };
+        if !ok {
+            return self.apply_lut(lut, cols, mode);
         }
 
         // stats from the per-state tables
-        let num_passes = lut.passes.len();
-        if self.stats.mismatch_hist.len() < cols.len() + 1 {
-            self.stats.mismatch_hist.resize(cols.len() + 1, 0);
+        self.record_fast_stats(lut, cols.len(), mode, nstates, kernel);
+
+        // array rewrite: one masked word merge per plane (bit-sliced) or
+        // one row scan (scalar)
+        match &mut self.storage {
+            CamStorage::BitSliced(arr) => {
+                arr.merge_write_states(cols, &self.scratch.masks, kernel.plan());
+            }
+            scalar => rewrite_rowwise(scalar, cols, kernel, &self.scratch.row_state),
         }
-        for (sid, &count) in counts.iter().enumerate() {
+    }
+
+    /// Fold one digit position's bucket populations
+    /// (`self.scratch.counts`, length `nstates`) into the aggregate
+    /// statistics using the kernel's per-state tables.
+    fn record_fast_stats(
+        &mut self,
+        lut: &Lut,
+        width: usize,
+        mode: ExecMode,
+        nstates: usize,
+        kernel: &LutKernel,
+    ) {
+        let num_passes = lut.passes.len();
+        if self.stats.mismatch_hist.len() < width + 1 {
+            self.stats.mismatch_hist.resize(width + 1, 0);
+        }
+        for sid in 0..nstates {
+            let count = self.scratch.counts[sid];
             if count == 0 {
                 continue;
             }
-            let st = &tables.per_state[sid];
+            let st = &kernel.tables.per_state[sid];
             for p in 0..num_passes {
                 self.stats.mismatch_hist[st.hist_class[p] as usize] += count;
             }
@@ -198,25 +392,6 @@ impl Ap {
             ExecMode::NonBlocked => num_passes as u64,
             ExecMode::Blocked => lut.num_groups as u64,
         };
-
-        // single-scan array rewrite
-        for r in 0..rows {
-            let st = &tables.per_state[row_state[r] as usize];
-            if st.matched {
-                for (i, &c) in cols.iter().enumerate() {
-                    self.storage.set(r, c, st.final_digits[i]);
-                }
-            }
-        }
-    }
-
-    /// Fast-path variant of [`Self::apply_lut_multi`]: the contribution
-    /// tables are built once and shared across digit positions.
-    pub fn apply_lut_multi_fast(&mut self, lut: &Lut, positions: &[Vec<usize>], mode: ExecMode) {
-        let tables = FastTables::build(lut, mode);
-        for cols in positions {
-            self.apply_lut_fast_with(lut, cols, mode, &tables);
-        }
     }
 
     /// [`Self::apply_lut_multi_fast`] with *segment-attributed* statistics:
@@ -246,6 +421,20 @@ impl Ap {
         mode: ExecMode,
         bounds: &[usize],
     ) -> Vec<ApStats> {
+        let kernel = LutKernel::compile(lut, mode);
+        self.apply_lut_multi_fast_segmented_kernel(lut, positions, mode, bounds, &kernel)
+    }
+
+    /// [`Self::apply_lut_multi_fast_segmented`] with a caller-provided
+    /// (typically cached — [`super::KernelCache`]) precompiled kernel.
+    pub fn apply_lut_multi_fast_segmented_kernel(
+        &mut self,
+        lut: &Lut,
+        positions: &[Vec<usize>],
+        mode: ExecMode,
+        bounds: &[usize],
+        kernel: &LutKernel,
+    ) -> Vec<ApStats> {
         let rows = self.storage.rows();
         assert!(!bounds.is_empty(), "at least one segment required");
         assert_eq!(*bounds.last().unwrap(), rows, "segments must cover all rows");
@@ -254,9 +443,8 @@ impl Ap {
             "segment bounds must be non-decreasing"
         );
         let mut segs = vec![ApStats::default(); bounds.len()];
-        let tables = FastTables::build(lut, mode);
         for (i, cols) in positions.iter().enumerate() {
-            if !self.apply_lut_fast_segmented_with(lut, cols, mode, &tables, bounds, &mut segs) {
+            if !self.apply_lut_fast_segmented_with(lut, cols, mode, kernel, bounds, &mut segs) {
                 // A don't-care digit appeared: finish the remaining digit
                 // positions on isolated per-segment replays.
                 self.apply_lut_segmented_isolated(lut, &positions[i..], mode, bounds, &mut segs);
@@ -274,32 +462,55 @@ impl Ap {
         lut: &Lut,
         cols: &[usize],
         mode: ExecMode,
-        tables: &FastTables,
+        kernel: &LutKernel,
         bounds: &[usize],
         segs: &mut [ApStats],
     ) -> bool {
-        let rows = self.storage.rows();
         let radix = self.storage.radix().n() as usize;
-        let nstates = tables.num_states;
+        let nstates = kernel.num_states();
+        debug_assert_eq!(nstates, radix.pow(cols.len() as u32), "kernel/LUT shape mismatch");
 
-        // bucket rows by (segment, state id)
-        let mut counts = vec![0u64; bounds.len() * nstates];
-        let mut row_state = vec![0u32; rows];
-        let mut seg = 0usize;
-        for r in 0..rows {
-            while r >= bounds[seg] {
-                seg += 1; // skips empty segments
-            }
-            let mut sid = 0usize;
-            for &c in cols {
-                let d = self.storage.get(r, c);
-                if d == crate::mvl::DONT_CARE {
-                    return false;
+        // bucket rows by (segment, state id) into scratch.counts
+        let ok = match &self.storage {
+            CamStorage::BitSliced(arr) => {
+                // plane-native: classify once, then per-segment bucket
+                // populations are masked popcounts at the segment bounds
+                // (which may land mid-word)
+                let masks = &mut self.scratch.masks;
+                if arr.classify_states_into_with(cols, masks, &mut self.scratch.classify) {
+                    let words = arr.words();
+                    let counts = &mut self.scratch.counts;
+                    counts.clear();
+                    counts.resize(bounds.len() * nstates, 0);
+                    let mut start = 0usize;
+                    for (s, &end) in bounds.iter().enumerate() {
+                        if end > start {
+                            for sid in 0..nstates {
+                                counts[s * nstates + sid] = popcount_range(
+                                    &masks[sid * words..(sid + 1) * words],
+                                    start,
+                                    end,
+                                );
+                            }
+                            start = end;
+                        }
+                    }
+                    true
+                } else {
+                    false
                 }
-                sid = sid * radix + d as usize;
             }
-            counts[seg * nstates + sid] += 1;
-            row_state[r] = sid as u32;
+            scalar => classify_rowwise(
+                scalar,
+                cols,
+                nstates,
+                Some(bounds),
+                &mut self.scratch.counts,
+                &mut self.scratch.row_state,
+            ),
+        };
+        if !ok {
+            return false;
         }
 
         // per-segment stats from the per-state tables
@@ -322,8 +533,8 @@ impl Ap {
             if seg_stats.mismatch_hist.len() < hist_len {
                 seg_stats.mismatch_hist.resize(hist_len, 0);
             }
-            for (sid, st) in tables.per_state.iter().enumerate() {
-                let count = counts[s * nstates + sid];
+            for (sid, st) in kernel.tables.per_state.iter().enumerate() {
+                let count = self.scratch.counts[s * nstates + sid];
                 if count == 0 {
                     continue;
                 }
@@ -348,14 +559,12 @@ impl Ap {
         self.stats.compare_cycles += num_passes as u64;
         self.stats.write_cycles += write_cycles;
 
-        // single-scan array rewrite
-        for r in 0..rows {
-            let st = &tables.per_state[row_state[r] as usize];
-            if st.matched {
-                for (i, &c) in cols.iter().enumerate() {
-                    self.storage.set(r, c, st.final_digits[i]);
-                }
+        // array rewrite: masked word merge (bit-sliced) or row scan
+        match &mut self.storage {
+            CamStorage::BitSliced(arr) => {
+                arr.merge_write_states(cols, &self.scratch.masks, kernel.plan());
             }
+            scalar => rewrite_rowwise(scalar, cols, kernel, &self.scratch.row_state),
         }
         true
     }
@@ -415,84 +624,6 @@ impl Ap {
         };
         self.stats.compare_cycles += (positions.len() * lut.passes.len()) as u64;
         self.stats.write_cycles += (positions.len() * write_cycles) as u64;
-    }
-}
-
-/// Precomputed per-state contribution tables for [`Ap::apply_lut_fast`].
-struct FastTables {
-    num_states: usize,
-    per_state: Vec<StateEntry>,
-}
-
-struct StateEntry {
-    /// Mismatch class this state contributes to at each pass.
-    hist_class: Vec<u8>,
-    /// Did any pass match (⇒ the row is rewritten)?
-    matched: bool,
-    /// Digits after the program (valid when `matched`).
-    final_digits: Vec<u8>,
-    sets: u32,
-    resets: u32,
-}
-
-impl FastTables {
-    fn build(lut: &Lut, mode: ExecMode) -> FastTables {
-        let num_states = (lut.radix.n() as usize).pow(lut.arity as u32);
-        let keys: Vec<Vec<u8>> = lut.passes.iter().map(|p| lut.decode(p.input)).collect();
-        // index of the pass matching each state (soundness ⇒ at most one)
-        let mut match_pass: Vec<Option<usize>> = vec![None; num_states];
-        for (i, p) in lut.passes.iter().enumerate() {
-            match_pass[p.input] = Some(i);
-        }
-        // last pass index of each block (the blocked-mode switch point)
-        let mut block_end = vec![0usize; lut.num_groups];
-        for (i, p) in lut.passes.iter().enumerate() {
-            block_end[p.group] = block_end[p.group].max(i);
-        }
-        let dist = |a: &[u8], b: &[u8]| -> u8 {
-            a.iter().zip(b).filter(|(x, y)| x != y).count() as u8
-        };
-        let per_state = (0..num_states)
-            .map(|sid| {
-                let s0 = lut.decode(sid);
-                match match_pass[sid] {
-                    None => StateEntry {
-                        hist_class: keys.iter().map(|k| dist(&s0, k)).collect(),
-                        matched: false,
-                        final_digits: s0,
-                        sets: 0,
-                        resets: 0,
-                    },
-                    Some(m) => {
-                        let pass = &lut.passes[m];
-                        let (start, written) = lut.write_of(pass);
-                        let mut s1 = s0.clone();
-                        s1[start..].copy_from_slice(&written);
-                        // switch point: immediately after the matching pass
-                        // (non-blocked) or after its block (blocked)
-                        let switch = match mode {
-                            ExecMode::NonBlocked => m,
-                            ExecMode::Blocked => block_end[pass.group],
-                        };
-                        let hist_class = keys
-                            .iter()
-                            .enumerate()
-                            .map(|(p, k)| if p <= switch { dist(&s0, k) } else { dist(&s1, k) })
-                            .collect();
-                        let changed =
-                            s0.iter().zip(&s1).filter(|(a, b)| a != b).count() as u32;
-                        StateEntry {
-                            hist_class,
-                            matched: true,
-                            final_digits: s1,
-                            sets: changed,
-                            resets: changed,
-                        }
-                    }
-                }
-            })
-            .collect();
-        FastTables { num_states, per_state }
     }
 }
 

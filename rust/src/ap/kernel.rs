@@ -1,0 +1,319 @@
+//! Precompiled LUT kernels and the signature-keyed kernel cache.
+//!
+//! The state-bucketing fast path ([`super::Ap::apply_lut_fast`]) never
+//! replays LUT passes row by row: it buckets rows by state id and combines
+//! precomputed per-state contribution tables. Building those tables costs
+//! `O(states × passes)` — trivial once, wasteful when the coordinator used
+//! to rebuild them for every tile of every job sharing the same LUT
+//! program. A [`LutKernel`] packages everything derivable from a
+//! `(Lut, ExecMode)` pair — the per-state contribution tables plus the
+//! [`StateWritePlan`] plane patterns the bit-sliced backend merges with —
+//! and the [`KernelCache`] shares compiled kernels behind `Arc`s, keyed by
+//! [`KernelSignature`], across tiles, jobs, and worker shards
+//! ([`crate::coordinator`] threads one cache through every shard's
+//! backend; hit/miss counts surface in
+//! [`crate::coordinator::Metrics`]).
+
+use super::controller::ExecMode;
+use crate::cam::StateWritePlan;
+use crate::lutgen::Lut;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Identity of a compiled kernel: the LUT program (name + a content hash
+/// over its passes) and the execution mode it was compiled for (the
+/// blocked/non-blocked switch point changes the contribution tables).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct KernelSignature {
+    /// Function name of the LUT.
+    pub name: String,
+    /// Radix of the digits.
+    pub radix: u8,
+    /// State width (compared columns).
+    pub arity: usize,
+    /// Compiled for blocked execution?
+    pub blocked: bool,
+    /// Hash over the full pass program (inputs, outputs, write dims,
+    /// groups) so distinct programs sharing a name never collide.
+    pub program_hash: u64,
+}
+
+impl KernelSignature {
+    /// The signature of `(lut, mode)`.
+    pub fn of(lut: &Lut, mode: ExecMode) -> KernelSignature {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        lut.radix.n().hash(&mut h);
+        lut.arity.hash(&mut h);
+        lut.write_start.hash(&mut h);
+        lut.num_groups.hash(&mut h);
+        for p in &lut.passes {
+            p.input.hash(&mut h);
+            p.output.hash(&mut h);
+            p.write_dim.hash(&mut h);
+            p.group.hash(&mut h);
+        }
+        KernelSignature {
+            name: lut.name.clone(),
+            radix: lut.radix.n(),
+            arity: lut.arity,
+            blocked: mode == ExecMode::Blocked,
+            program_hash: h.finish(),
+        }
+    }
+}
+
+/// A LUT compiled for the state-bucketing fast path: per-state
+/// contribution tables plus the plane-pattern write plan. Immutable once
+/// built — share freely (the coordinator passes `Arc<LutKernel>`s between
+/// shards).
+#[derive(Clone, Debug)]
+pub struct LutKernel {
+    signature: KernelSignature,
+    mode: ExecMode,
+    pub(crate) tables: FastTables,
+    plan: StateWritePlan,
+}
+
+impl LutKernel {
+    /// Compile `lut` for `mode`.
+    pub fn compile(lut: &Lut, mode: ExecMode) -> LutKernel {
+        let tables = FastTables::build(lut, mode);
+        let plan = StateWritePlan::new(
+            lut.radix,
+            lut.arity,
+            tables
+                .per_state
+                .iter()
+                .map(|st| if st.matched { Some(st.final_digits.as_slice()) } else { None }),
+        );
+        LutKernel { signature: KernelSignature::of(lut, mode), mode, tables, plan }
+    }
+
+    /// The kernel's identity.
+    pub fn signature(&self) -> &KernelSignature {
+        &self.signature
+    }
+
+    /// Execution mode the kernel was compiled for.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// States distinguished by the kernel (`radix^arity`).
+    pub fn num_states(&self) -> usize {
+        self.tables.num_states
+    }
+
+    /// The plane-pattern write plan (bit-sliced merge input).
+    pub fn plan(&self) -> &StateWritePlan {
+        &self.plan
+    }
+}
+
+/// A shareable signature-keyed cache of compiled kernels. Cheap to share
+/// (`Arc<KernelCache>`): lookups are one mutex-guarded hash probe + `Arc`
+/// clone; compilation happens at most once per signature (misses compile
+/// under the lock — kernels compile in microseconds, and serialising
+/// duplicate compiles is the point of the cache).
+#[derive(Default)]
+pub struct KernelCache {
+    map: Mutex<HashMap<KernelSignature, Arc<LutKernel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl KernelCache {
+    /// Empty cache.
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// The kernel for `(lut, mode)`, compiling on first use. The `bool`
+    /// reports whether this was a cache hit (callers feed per-backend
+    /// hit/miss counters from it; the cache also keeps global counters).
+    pub fn get_or_compile(&self, lut: &Lut, mode: ExecMode) -> (Arc<LutKernel>, bool) {
+        let sig = KernelSignature::of(lut, mode);
+        let mut map = self.map.lock().expect("kernel cache poisoned");
+        if let Some(kernel) = map.get(&sig) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (Arc::clone(kernel), true);
+        }
+        let kernel = Arc::new(LutKernel::compile(lut, mode));
+        map.insert(sig, Arc::clone(&kernel));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (kernel, false)
+    }
+
+    /// Compiled kernels currently held.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("kernel cache poisoned").len()
+    }
+
+    /// No kernels compiled yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global cache hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Global cache misses (== compilations) since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Precomputed per-state contribution tables for the fast path: for every
+/// possible state id, what the whole LUT program does to a row in that
+/// state — which mismatch class it lands in at each pass, whether it gets
+/// rewritten, its final digits, and its set/reset cost.
+#[derive(Clone, Debug)]
+pub(crate) struct FastTables {
+    pub(crate) num_states: usize,
+    pub(crate) per_state: Vec<StateEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) struct StateEntry {
+    /// Mismatch class this state contributes to at each pass.
+    pub(crate) hist_class: Vec<u8>,
+    /// Did any pass match (⇒ the row is rewritten)?
+    pub(crate) matched: bool,
+    /// Digits after the program (valid when `matched`).
+    pub(crate) final_digits: Vec<u8>,
+    pub(crate) sets: u32,
+    pub(crate) resets: u32,
+}
+
+impl FastTables {
+    pub(crate) fn build(lut: &Lut, mode: ExecMode) -> FastTables {
+        let num_states = (lut.radix.n() as usize).pow(lut.arity as u32);
+        let keys: Vec<Vec<u8>> = lut.passes.iter().map(|p| lut.decode(p.input)).collect();
+        // index of the pass matching each state (soundness ⇒ at most one)
+        let mut match_pass: Vec<Option<usize>> = vec![None; num_states];
+        for (i, p) in lut.passes.iter().enumerate() {
+            match_pass[p.input] = Some(i);
+        }
+        // last pass index of each block (the blocked-mode switch point)
+        let mut block_end = vec![0usize; lut.num_groups];
+        for (i, p) in lut.passes.iter().enumerate() {
+            block_end[p.group] = block_end[p.group].max(i);
+        }
+        let dist = |a: &[u8], b: &[u8]| -> u8 {
+            a.iter().zip(b).filter(|(x, y)| x != y).count() as u8
+        };
+        let per_state = (0..num_states)
+            .map(|sid| {
+                let s0 = lut.decode(sid);
+                match match_pass[sid] {
+                    None => StateEntry {
+                        hist_class: keys.iter().map(|k| dist(&s0, k)).collect(),
+                        matched: false,
+                        final_digits: s0,
+                        sets: 0,
+                        resets: 0,
+                    },
+                    Some(m) => {
+                        let pass = &lut.passes[m];
+                        let (start, written) = lut.write_of(pass);
+                        let mut s1 = s0.clone();
+                        s1[start..].copy_from_slice(&written);
+                        // switch point: immediately after the matching pass
+                        // (non-blocked) or after its block (blocked)
+                        let switch = match mode {
+                            ExecMode::NonBlocked => m,
+                            ExecMode::Blocked => block_end[pass.group],
+                        };
+                        let hist_class = keys
+                            .iter()
+                            .enumerate()
+                            .map(|(p, k)| if p <= switch { dist(&s0, k) } else { dist(&s1, k) })
+                            .collect();
+                        let changed =
+                            s0.iter().zip(&s1).filter(|(a, b)| a != b).count() as u32;
+                        StateEntry {
+                            hist_class,
+                            matched: true,
+                            final_digits: s1,
+                            sets: changed,
+                            resets: changed,
+                        }
+                    }
+                }
+            })
+            .collect();
+        FastTables { num_states, per_state }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::adder_lut;
+    use crate::mvl::Radix;
+
+    #[test]
+    fn signature_distinguishes_mode_and_program() {
+        let b = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        let nb = adder_lut(Radix::TERNARY, ExecMode::NonBlocked);
+        let s1 = KernelSignature::of(&b, ExecMode::Blocked);
+        let s2 = KernelSignature::of(&b, ExecMode::NonBlocked);
+        let s3 = KernelSignature::of(&nb, ExecMode::NonBlocked);
+        assert_ne!(s1, s2, "mode is part of the identity");
+        assert_ne!(s2, s3, "program content is part of the identity");
+        assert_eq!(s1, KernelSignature::of(&b, ExecMode::Blocked));
+    }
+
+    #[test]
+    fn compile_exposes_shape() {
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        let k = LutKernel::compile(&lut, ExecMode::Blocked);
+        assert_eq!(k.num_states(), 27);
+        assert_eq!(k.mode(), ExecMode::Blocked);
+        assert!(k.signature().blocked);
+        assert_eq!(k.plan().arity(), 3);
+        // the 21 action states are rewritten, 6 noAction states are not
+        assert_eq!(k.plan().matched().len(), 21);
+    }
+
+    #[test]
+    fn cache_hits_and_misses_are_counted() {
+        let cache = KernelCache::new();
+        assert!(cache.is_empty());
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        let (k1, hit1) = cache.get_or_compile(&lut, ExecMode::Blocked);
+        assert!(!hit1);
+        let (k2, hit2) = cache.get_or_compile(&lut, ExecMode::Blocked);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&k1, &k2), "hit returns the shared kernel");
+        // a different mode compiles a second kernel
+        let (_, hit3) = cache.get_or_compile(&lut, ExecMode::NonBlocked);
+        assert!(!hit3);
+        assert_eq!(cache.len(), 2);
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn cache_is_shareable_across_threads() {
+        let cache = Arc::new(KernelCache::new());
+        let lut = adder_lut(Radix::TERNARY, ExecMode::Blocked);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                let lut = lut.clone();
+                std::thread::spawn(move || {
+                    cache.get_or_compile(&lut, ExecMode::Blocked).0.num_states()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 27);
+        }
+        assert_eq!(cache.len(), 1, "all threads share one compilation");
+        assert_eq!(cache.hits() + cache.misses(), 4);
+    }
+}

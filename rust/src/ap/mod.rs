@@ -1,16 +1,20 @@
 //! The associative processor proper (§IV–§V): controller, registers, pass
 //! execution over a [`crate::cam::CamStorage`] (scalar
 //! [`crate::cam::CamArray`] or bit-sliced
-//! [`crate::cam::BitSlicedArray`]), multi-digit in-place arithmetic, and
-//! event statistics for the energy/delay models.
+//! [`crate::cam::BitSlicedArray`]), multi-digit in-place arithmetic,
+//! precompiled LUT kernels with a shareable signature-keyed cache
+//! ([`kernel`]), and event statistics for the energy/delay models.
 
 pub mod stats;
+pub mod kernel;
 pub mod controller;
 pub mod ops;
 
 pub use controller::{Ap, ExecMode};
+pub use kernel::{KernelCache, KernelSignature, LutKernel};
 pub use ops::{
-    add_vectors, adder_lut, extract_operand, load_operands, load_operands_storage, mac_lut,
-    mac_vectors, sub_lut, sub_vectors, VectorLayout,
+    add_vectors, adder_lut, extract_operand, load_mul_operands, load_operands,
+    load_operands_storage, mac_lut, mac_vectors, mul_vectors, sub_lut, sub_vectors, MulLayout,
+    VectorLayout,
 };
 pub use stats::ApStats;

@@ -26,10 +26,20 @@
 //! mismatch bit-vector per masked column, and per-count populations fall
 //! out as popcounts of plane-equality masks.
 //!
+//! Beyond compare/write, the backend exposes the *plane-native LUT
+//! primitives* the controller's state-bucketing fast path runs on
+//! ([`crate::ap::Ap::apply_lut_fast`]): [`BitSlicedArray::classify_states`]
+//! buckets all rows by their state id with plane AND/XOR ops (64 rows per
+//! word, yielding per-state [`StateMasks`] whose populations are the
+//! bucket counts), and [`BitSlicedArray::merge_write_states`] commits every
+//! bucket's final digits with masked word merges driven by a precompiled
+//! [`StateWritePlan`]. The scalar array offers the same contract through
+//! [`super::storage::CamStorage`] as a row-at-a-time fallback.
+//!
 //! Equivalence with the scalar array (tags, histogram, write-op counts,
 //! contents) is proven by differential property tests for radix 2–5,
 //! including row counts that are not multiples of 64 — see
-//! `rust/tests/bitsliced_differential.rs`.
+//! `rust/tests/bitsliced_differential.rs` and `rust/tests/plane_native.rs`.
 
 use super::array::{CamArray, CompareOutcome};
 use super::cell::WriteOps;
@@ -39,6 +49,163 @@ use crate::mvl::{Radix, DONT_CARE};
 #[inline]
 fn bits_needed(x: usize) -> usize {
     (usize::BITS - x.leading_zeros()) as usize
+}
+
+/// Population count of rows `start..end` within packed 64-row mask words —
+/// the masked-popcount primitive behind per-segment statistics at segment
+/// boundaries that land mid-word.
+pub fn popcount_range(words: &[u64], start: usize, end: usize) -> u64 {
+    if start >= end {
+        return 0;
+    }
+    let (fw, lw) = (start >> 6, (end - 1) >> 6);
+    let head = !0u64 << (start & 63);
+    let tail = if end & 63 == 0 { !0u64 } else { !0u64 >> (64 - (end & 63)) };
+    if fw == lw {
+        return u64::from((words[fw] & head & tail).count_ones());
+    }
+    let mut total = u64::from((words[fw] & head).count_ones());
+    for w in &words[fw + 1..lw] {
+        total += u64::from(w.count_ones());
+    }
+    total + u64::from((words[lw] & tail).count_ones())
+}
+
+/// Per-state row-membership masks from a state classification
+/// ([`BitSlicedArray::classify_states`] or the scalar fallback in
+/// [`super::storage::CamStorage::classify_states`]): for each state id,
+/// one 64-rows-per-`u64` bit-vector of the rows currently in that state.
+/// State ids encode the compared digits big-endian (`sid = Σ dᵢ·nᵏ⁻¹⁻ⁱ`),
+/// matching [`crate::lutgen::Lut::encode`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StateMasks {
+    /// Number of states (`radix^arity`).
+    pub num_states: usize,
+    /// `u64` words per state mask (`ceil(rows / 64)`).
+    pub words: usize,
+    /// Rows covered by the classification.
+    pub rows: usize,
+    /// Mask words, flattened `[state][word]`.
+    pub masks: Vec<u64>,
+}
+
+impl StateMasks {
+    /// The mask words of one state.
+    pub fn mask(&self, sid: usize) -> &[u64] {
+        &self.masks[sid * self.words..(sid + 1) * self.words]
+    }
+
+    /// Rows currently in state `sid`.
+    pub fn count(&self, sid: usize) -> u64 {
+        self.mask(sid).iter().map(|w| u64::from(w.count_ones())).sum()
+    }
+
+    /// Rows of `start..end` currently in state `sid` (masked popcount).
+    pub fn count_range(&self, sid: usize, start: usize, end: usize) -> u64 {
+        popcount_range(self.mask(sid), start, end)
+    }
+}
+
+/// Reusable working buffers for
+/// [`BitSlicedArray::classify_states_into_with`]: the per-state digit
+/// decode and the per-word (column, digit value) eq-masks. Hoist one of
+/// these next to the masks buffer and a multi-digit LUT program performs
+/// no classification allocations after its first digit position.
+#[derive(Clone, Debug, Default)]
+pub struct ClassifyScratch {
+    /// Big-endian digit decode of every state id, flattened `[sid][i]`.
+    state_digits: Vec<u8>,
+    /// Eq-mask per (column index, digit value), flattened `[i][v]`.
+    col_eq: Vec<u64>,
+}
+
+/// A precompiled per-state rewrite: which states get rewritten and, for
+/// the bit-sliced backend, the plane patterns of their final digits —
+/// so [`BitSlicedArray::merge_write_states`] can commit a whole LUT
+/// application with masked word merges (no per-cell digit encoding).
+/// Compiled once per (LUT, mode) by [`crate::ap::LutKernel`].
+#[derive(Clone, Debug)]
+pub struct StateWritePlan {
+    arity: usize,
+    planes: usize,
+    /// State ids that are rewritten when present (ascending).
+    matched: Vec<u32>,
+    /// For write column `i` and digit plane `p` (flattened `i*planes+p`):
+    /// the matched states whose final digit at `i` has bit `p` set.
+    plane_sets: Vec<Vec<u32>>,
+    /// Final digits, flattened `[state][arity]` (meaningful only for
+    /// matched states; used by the scalar row-at-a-time fallback).
+    finals: Vec<u8>,
+}
+
+impl StateWritePlan {
+    /// Build from per-state final digits: `finals[sid]` is `Some(digits)`
+    /// when state `sid` is rewritten (digits must be real, not
+    /// [`DONT_CARE`]), `None` when it is left untouched.
+    pub fn new<'a, I>(radix: Radix, arity: usize, finals: I) -> Self
+    where
+        I: IntoIterator<Item = Option<&'a [u8]>>,
+    {
+        let planes = bits_needed(radix.n() as usize - 1);
+        let mut matched = Vec::new();
+        let mut plane_sets = vec![Vec::new(); arity * planes];
+        let mut all_finals = Vec::new();
+        for (sid, f) in finals.into_iter().enumerate() {
+            match f {
+                None => all_finals.resize(all_finals.len() + arity, 0),
+                Some(digits) => {
+                    assert_eq!(digits.len(), arity, "final digits must cover the state");
+                    matched.push(sid as u32);
+                    all_finals.extend_from_slice(digits);
+                    for (i, &v) in digits.iter().enumerate() {
+                        assert!(
+                            v != DONT_CARE && radix.valid(v),
+                            "final digit {v} invalid for radix {}",
+                            radix.n()
+                        );
+                        for (p, set) in
+                            plane_sets[i * planes..(i + 1) * planes].iter_mut().enumerate()
+                        {
+                            if (v >> p) & 1 == 1 {
+                                set.push(sid as u32);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        StateWritePlan { arity, planes, matched, plane_sets, finals: all_finals }
+    }
+
+    /// Compared/written columns per state.
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Digit planes per column the plan was compiled for.
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// State ids that are rewritten.
+    pub fn matched(&self) -> &[u32] {
+        &self.matched
+    }
+
+    /// Does the plan rewrite any state at all?
+    pub fn writes_anything(&self) -> bool {
+        !self.matched.is_empty()
+    }
+
+    /// Matched states whose final digit at column `i` has plane bit `p`.
+    pub fn plane_states(&self, i: usize, p: usize) -> &[u32] {
+        &self.plane_sets[i * self.planes + p]
+    }
+
+    /// Final digits of state `sid` (all zeros for unmatched states).
+    pub fn final_digits(&self, sid: usize) -> &[u8] {
+        &self.finals[sid * self.arity..(sid + 1) * self.arity]
+    }
 }
 
 /// A rows × cols MvCAM array stored as per-column digit planes.
@@ -114,6 +281,11 @@ impl BitSlicedArray {
         self.planes
     }
 
+    /// `u64` words per plane (`ceil(rows / 64)`).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
     #[inline]
     fn plane_base(&self, col: usize, plane: usize) -> usize {
         (col * self.planes + plane) * self.words
@@ -186,17 +358,59 @@ impl BitSlicedArray {
         }
     }
 
-    /// One row, materialised.
+    /// One row, materialised. Decodes from the plane words directly (one
+    /// word read per plane per column) rather than through per-cell
+    /// [`Self::get`] calls.
     pub fn row_digits(&self, row: usize) -> Vec<u8> {
-        (0..self.cols).map(|c| self.get(row, c)).collect()
+        assert!(row < self.rows);
+        let word = row >> 6;
+        let bit = 1u64 << (row & 63);
+        (0..self.cols)
+            .map(|c| {
+                if self.present[self.present_base(c) + word] & bit == 0 {
+                    return DONT_CARE;
+                }
+                let mut value = 0u8;
+                for p in 0..self.planes {
+                    if self.digit_planes[self.plane_base(c, p) + word] & bit != 0 {
+                        value |= 1 << p;
+                    }
+                }
+                value
+            })
+            .collect()
     }
 
     /// Row-major digits, materialised (the scalar array's `data()` view).
+    /// Decodes a whole 64-row word per column at a time — each plane word
+    /// is loaded once per 64 rows instead of once per cell — which is what
+    /// snapshots, fault extraction, and the differential tests lean on for
+    /// large arrays.
     pub fn to_digits(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.rows * self.cols);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.push(self.get(r, c));
+        let mut out = vec![0u8; self.rows * self.cols];
+        // planes is at most 8 (radix ≤ 256)
+        let mut plane_words = [0u64; 8];
+        for c in 0..self.cols {
+            let pb = self.present_base(c);
+            for w in 0..self.words {
+                let pres = self.present[pb + w];
+                for (p, pw) in plane_words.iter_mut().enumerate().take(self.planes) {
+                    *pw = self.digit_planes[self.plane_base(c, p) + w];
+                }
+                let base_row = w << 6;
+                let live = (self.rows - base_row).min(64);
+                for r in 0..live {
+                    let bit = 1u64 << r;
+                    out[(base_row + r) * self.cols + c] = if pres & bit == 0 {
+                        DONT_CARE
+                    } else {
+                        let mut value = 0u8;
+                        for (p, pw) in plane_words.iter().enumerate().take(self.planes) {
+                            value |= (((pw >> r) & 1) as u8) << p;
+                        }
+                        value
+                    };
+                }
             }
         }
         out
@@ -338,6 +552,139 @@ impl BitSlicedArray {
         }
         ops
     }
+
+    /// Word-parallel state classification — the read half of the
+    /// plane-native LUT fast path. Buckets every row by the state id its
+    /// digits at `cols` spell (big-endian, [`crate::lutgen::Lut::encode`]
+    /// order), writing one 64-rows-per-word eq-mask per state into
+    /// `masks` (flattened `[state][word]`, resized/zeroed here so callers
+    /// can reuse a scratch buffer).
+    ///
+    /// Computed entirely with plane AND/XOR word ops, like
+    /// [`Self::compare`]: per word, one eq-mask per (column, digit value),
+    /// then one AND-product per state. Returns `false` — with `masks`
+    /// contents unspecified — if any live row stores a don't-care in a
+    /// compared column (such a row matches no single state id, so callers
+    /// must fall back to faithful pass-by-pass execution).
+    pub fn classify_states_into(&self, cols: &[usize], masks: &mut Vec<u64>) -> bool {
+        self.classify_states_into_with(cols, masks, &mut ClassifyScratch::default())
+    }
+
+    /// [`Self::classify_states_into`] with caller-provided working
+    /// buffers, so repeated classifications (one per digit position of a
+    /// multi-digit program) reuse their allocations.
+    pub fn classify_states_into_with(
+        &self,
+        cols: &[usize],
+        masks: &mut Vec<u64>,
+        scratch: &mut ClassifyScratch,
+    ) -> bool {
+        debug_assert!(cols.iter().all(|&c| c < self.cols));
+        let n = self.radix.n() as usize;
+        let k = cols.len();
+        let num_states = n.pow(k as u32);
+        masks.clear();
+        masks.resize(num_states * self.words, 0);
+        // big-endian digit decode of every state id, flattened [sid][i]
+        let state_digits = &mut scratch.state_digits;
+        state_digits.clear();
+        state_digits.resize(num_states * k, 0);
+        for sid in 0..num_states {
+            let mut x = sid;
+            for slot in state_digits[sid * k..(sid + 1) * k].iter_mut().rev() {
+                *slot = (x % n) as u8;
+                x /= n;
+            }
+        }
+        // per-word scratch: eq-mask per (column index, digit value)
+        let col_eq = &mut scratch.col_eq;
+        col_eq.clear();
+        col_eq.resize(k * n, 0);
+        for w in 0..self.words {
+            let valid = self.valid_mask(w);
+            for (i, &c) in cols.iter().enumerate() {
+                let pres = self.present[self.present_base(c) + w];
+                for (v, eq_slot) in col_eq[i * n..(i + 1) * n].iter_mut().enumerate() {
+                    let mut eq = pres;
+                    for p in 0..self.planes {
+                        let plane = self.digit_planes[self.plane_base(c, p) + w];
+                        eq &= if (v >> p) & 1 == 1 { plane } else { !plane };
+                    }
+                    *eq_slot = eq;
+                }
+            }
+            // every live row must land in exactly one state bucket
+            let mut covered = 0u64;
+            for sid in 0..num_states {
+                let digits = &state_digits[sid * k..(sid + 1) * k];
+                let mut eq = valid;
+                for (i, &d) in digits.iter().enumerate() {
+                    eq &= col_eq[i * n + d as usize];
+                    if eq == 0 {
+                        break;
+                    }
+                }
+                masks[sid * self.words + w] = eq;
+                covered |= eq;
+            }
+            if covered != valid {
+                return false; // a live row holds a don't-care in `cols`
+            }
+        }
+        true
+    }
+
+    /// [`Self::classify_states_into`] wrapped in an owned [`StateMasks`]
+    /// (`None` on the don't-care fallback).
+    pub fn classify_states(&self, cols: &[usize]) -> Option<StateMasks> {
+        let mut masks = Vec::new();
+        if !self.classify_states_into(cols, &mut masks) {
+            return None;
+        }
+        let n = self.radix.n() as usize;
+        Some(StateMasks {
+            num_states: n.pow(cols.len() as u32),
+            words: self.words,
+            rows: self.rows,
+            masks,
+        })
+    }
+
+    /// Word-parallel state rewrite — the write half of the plane-native
+    /// LUT fast path. For every state the `plan` marks as matched, the
+    /// rows in that state's mask get the state's final digits written into
+    /// `cols`, 64 rows per merge mask: per plane, `new = (old & !matched)
+    /// | pattern-bits`. Unmatched rows are untouched. `masks` is the
+    /// flattened `[state][word]` buffer a successful
+    /// [`Self::classify_states_into`] filled for the same `cols`.
+    pub fn merge_write_states(&mut self, cols: &[usize], masks: &[u64], plan: &StateWritePlan) {
+        assert_eq!(plan.arity(), cols.len(), "plan arity must match the columns");
+        assert_eq!(plan.planes(), self.planes, "plan compiled for a different radix");
+        debug_assert!(
+            masks.len() >= plan.matched().last().map_or(0, |&s| s as usize + 1) * self.words
+        );
+        for w in 0..self.words {
+            let mut any = 0u64;
+            for &sid in plan.matched() {
+                any |= masks[sid as usize * self.words + w];
+            }
+            if any == 0 {
+                continue;
+            }
+            for (i, &c) in cols.iter().enumerate() {
+                for p in 0..self.planes {
+                    let mut bits = 0u64;
+                    for &sid in plan.plane_states(i, p) {
+                        bits |= masks[sid as usize * self.words + w];
+                    }
+                    let idx = self.plane_base(c, p) + w;
+                    self.digit_planes[idx] = (self.digit_planes[idx] & !any) | bits;
+                }
+                // final digits are always real digits, never don't-care
+                self.present[self.present_base(c) + w] |= any;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -445,6 +792,143 @@ mod tests {
             assert_eq!(out.mismatch_hist.iter().sum::<u64>(), rows as u64);
             assert_eq!(out.mismatch_hist[0], out.match_count() as u64);
         });
+    }
+
+    /// Classification buckets every row exactly once; counts and masked
+    /// range counts agree with a per-row scalar model, across word
+    /// boundaries.
+    #[test]
+    fn classify_states_matches_row_model() {
+        forall(Config::cases(120), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4)); // 2..=5
+            let n = radix.n() as usize;
+            let rows = [1, 5, 63, 64, 65, 127, 128, 129, 1 + rng.index(200)][rng.index(9)];
+            let arity = 2 + rng.index(2);
+            let cols_total = arity + rng.index(3);
+            let mut data = vec![0u8; rows * cols_total];
+            rng.fill_digits(&mut data, radix.n());
+            let a = BitSlicedArray::from_data(radix, rows, cols_total, &data);
+            let mut all: Vec<usize> = (0..cols_total).collect();
+            rng.shuffle(&mut all);
+            let cols = &all[..arity];
+            let masks = a.classify_states(cols).expect("no don't-cares planted");
+            assert_eq!(masks.num_states, n.pow(arity as u32));
+            assert_eq!(masks.words, (rows + 63) / 64);
+            // per-row reference state ids
+            let sid_of = |r: usize| -> usize {
+                cols.iter().fold(0usize, |acc, &c| acc * n + data[r * cols_total + c] as usize)
+            };
+            let total: u64 = (0..masks.num_states).map(|s| masks.count(s)).sum();
+            assert_eq!(total, rows as u64, "every row in exactly one bucket");
+            for r in 0..rows {
+                let sid = sid_of(r);
+                assert_eq!(masks.mask(sid)[r >> 6] >> (r & 63) & 1, 1, "row {r}");
+            }
+            // masked range counts at a random mid-word cut
+            let cut = rng.index(rows + 1);
+            for sid in 0..masks.num_states {
+                let lo = (0..cut).filter(|&r| sid_of(r) == sid).count() as u64;
+                assert_eq!(masks.count_range(sid, 0, cut), lo, "sid {sid} cut {cut}");
+                assert_eq!(masks.count_range(sid, cut, rows), masks.count(sid) - lo);
+            }
+        });
+    }
+
+    /// A stored don't-care in a compared column forces the fallback; one
+    /// in an uncompared column does not.
+    #[test]
+    fn classify_states_dont_care_fallback() {
+        let mut a = BitSlicedArray::from_data(T, 70, 3, &vec![1u8; 70 * 3]);
+        a.set(69, 2, DONT_CARE);
+        assert!(a.classify_states(&[0, 1]).is_some());
+        assert!(a.classify_states(&[0, 2]).is_none());
+        assert!(a.classify_states(&[2]).is_none());
+    }
+
+    /// Merging final digits through a write plan equals a per-row scalar
+    /// rewrite of the matched states.
+    #[test]
+    fn merge_write_states_matches_row_model() {
+        forall(Config::cases(80), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let n = radix.n() as usize;
+            let rows = 1 + rng.index(180);
+            let arity = 2 + rng.index(2);
+            let cols_total = arity + 1;
+            let mut data = vec![0u8; rows * cols_total];
+            rng.fill_digits(&mut data, radix.n());
+            let mut a = BitSlicedArray::from_data(radix, rows, cols_total, &data);
+            let cols: Vec<usize> = (0..arity).collect();
+            let masks = a.classify_states(&cols).unwrap();
+            // random plan: each state matched with probability 1/2
+            let num_states = masks.num_states;
+            let finals: Vec<Option<Vec<u8>>> = (0..num_states)
+                .map(|_| {
+                    rng.chance(0.5)
+                        .then(|| (0..arity).map(|_| rng.digit(radix.n())).collect())
+                })
+                .collect();
+            let plan = StateWritePlan::new(
+                radix,
+                arity,
+                finals.iter().map(|f| f.as_deref()),
+            );
+            a.merge_write_states(&cols, &masks.masks, &plan);
+            for r in 0..rows {
+                let sid = cols
+                    .iter()
+                    .fold(0usize, |acc, &c| acc * n + data[r * cols_total + c] as usize);
+                let expect: Vec<u8> = match &finals[sid] {
+                    Some(f) => f.clone(),
+                    None => cols.iter().map(|&c| data[r * cols_total + c]).collect(),
+                };
+                let got: Vec<u8> = cols.iter().map(|&c| a.get(r, c)).collect();
+                assert_eq!(got, expect, "row {r} sid {sid}");
+                // the uncompared column is untouched
+                assert_eq!(a.get(r, arity), data[r * cols_total + arity]);
+            }
+        });
+    }
+
+    #[test]
+    fn popcount_range_edges() {
+        let words = [!0u64, 0b1011, !0u64];
+        assert_eq!(popcount_range(&words, 0, 0), 0);
+        assert_eq!(popcount_range(&words, 5, 5), 0);
+        assert_eq!(popcount_range(&words, 0, 64), 64);
+        assert_eq!(popcount_range(&words, 0, 1), 1);
+        assert_eq!(popcount_range(&words, 63, 64), 1);
+        assert_eq!(popcount_range(&words, 63, 65), 2);
+        assert_eq!(popcount_range(&words, 64, 128), 3);
+        assert_eq!(popcount_range(&words, 64, 66), 2);
+        assert_eq!(popcount_range(&words, 66, 68), 1);
+        assert_eq!(popcount_range(&words, 0, 192), 64 + 3 + 64);
+        assert_eq!(popcount_range(&words, 1, 192), 63 + 3 + 64);
+        assert_eq!(popcount_range(&words, 120, 130), 2);
+    }
+
+    #[test]
+    fn write_plan_shape() {
+        let plan = StateWritePlan::new(
+            T,
+            2,
+            [None, Some([2u8, 0].as_slice()), Some([1u8, 1].as_slice())],
+        );
+        assert_eq!(plan.arity(), 2);
+        assert_eq!(plan.planes(), 2);
+        assert!(plan.writes_anything());
+        assert_eq!(plan.matched(), &[1, 2]);
+        assert_eq!(plan.final_digits(1), &[2, 0]);
+        assert_eq!(plan.final_digits(2), &[1, 1]);
+        // col 0: digit 2 (= 0b10) of state 1 sets plane 1; digit 1 of
+        // state 2 sets plane 0
+        assert_eq!(plan.plane_states(0, 0), &[2]);
+        assert_eq!(plan.plane_states(0, 1), &[1]);
+        // col 1: digit 0 sets nothing; digit 1 of state 2 sets plane 0
+        assert_eq!(plan.plane_states(1, 0), &[2]);
+        assert!(plan.plane_states(1, 1).is_empty());
+        let empty = StateWritePlan::new(T, 2, [None, None]);
+        assert!(!empty.writes_anything());
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! * [`bitsliced::BitSlicedArray`] is the row-parallel digit-plane model:
 //!   columns stored as bit-planes packed 64 rows per `u64`, evaluating a
 //!   masked compare with pure AND/XOR/OR word ops — observably identical
-//!   to the scalar array (differential tests), much faster at scale.
+//!   to the scalar array (differential tests), much faster at scale. It
+//!   also hosts the plane-native LUT primitives
+//!   ([`bitsliced::BitSlicedArray::classify_states`] /
+//!   [`bitsliced::BitSlicedArray::merge_write_states`]) that let the AP
+//!   controller bucket and rewrite 64 rows per word op.
 //!
 //! [`storage::CamStorage`] selects between the scalar and bit-sliced
 //! backends at runtime.
@@ -23,7 +27,7 @@ pub mod storage;
 pub mod faults;
 
 pub use array::{CamArray, CompareOutcome, TagVector};
-pub use bitsliced::BitSlicedArray;
+pub use bitsliced::{popcount_range, BitSlicedArray, ClassifyScratch, StateMasks, StateWritePlan};
 pub use cell::{MemristorState, MvCamCell, WriteOps};
 pub use faults::{march_detect, Fault, FaultyArray};
 pub use storage::{CamStorage, StorageKind};

@@ -3,16 +3,17 @@
 //! Two interchangeable implementations of the compare/write contract:
 //!
 //! * [`CamArray`] — scalar row-major digits. Fastest per-cell random
-//!   access (`get`/`set`), which the controller's state-bucketing fast
-//!   path leans on; the natural choice for small arrays and for LUT
-//!   programs that touch few rows per pass.
+//!   access (`get`/`set`); the natural choice for small arrays.
 //! * [`BitSlicedArray`] — digit planes packed 64 rows per word. The
 //!   compare/write *kernels* process 64 rows per word op (tag
 //!   materialisation at the `Vec<bool>` API boundary is still O(rows),
 //!   so the end-to-end win is a large constant factor rather than a full
-//!   64x), which makes it the right choice for faithful pass-by-pass
-//!   simulation of large arrays (≥ a few thousand rows) — see
-//!   `rust/benches/bench_main.rs` (`hot/compare_storage_*`).
+//!   64x), and the plane-native LUT primitives
+//!   ([`CamStorage::classify_states`] / [`CamStorage::merge_write_states`])
+//!   run the controller's state-bucketing fast path 64
+//!   rows per word op too — the right choice for large arrays (≥ a few
+//!   thousand rows), see `rust/benches/bench_main.rs`
+//!   (`hot/compare_storage_*`, `hot/fast_path_*`).
 //!
 //! [`CamStorage`] is the runtime-selectable sum of the two; the
 //! coordinator's native backend, the AP controller, and the binary-AP
@@ -181,6 +182,70 @@ impl CamStorage {
             CamStorage::BitSliced(a) => a.write(tags, cols, values),
         }
     }
+
+    /// Bucket every row by the state id its digits at `cols` spell,
+    /// returning per-state 64-rows-per-word membership masks — see
+    /// [`BitSlicedArray::classify_states`]. The bit-sliced backend
+    /// computes this with plane word ops; the scalar backend falls back
+    /// to a row-at-a-time scan producing the identical masks. `None` when
+    /// any live row stores a don't-care in a compared column (callers
+    /// must fall back to faithful pass-by-pass execution).
+    pub fn classify_states(&self, cols: &[usize]) -> Option<super::StateMasks> {
+        match self {
+            CamStorage::BitSliced(a) => a.classify_states(cols),
+            CamStorage::Scalar(a) => {
+                let n = a.radix().n() as usize;
+                let rows = a.rows();
+                let words = (rows + 63) / 64;
+                let num_states = n.pow(cols.len() as u32);
+                let mut masks = vec![0u64; num_states * words];
+                for r in 0..rows {
+                    let mut sid = 0usize;
+                    for &c in cols {
+                        let d = a.get(r, c);
+                        if d == crate::mvl::DONT_CARE {
+                            return None;
+                        }
+                        sid = sid * n + d as usize;
+                    }
+                    masks[sid * words + (r >> 6)] |= 1u64 << (r & 63);
+                }
+                Some(super::StateMasks { num_states, words, rows, masks })
+            }
+        }
+    }
+
+    /// Rewrite every state the `plan` marks as matched with its final
+    /// digits, 64 rows per merge mask on the bit-sliced backend — see
+    /// [`BitSlicedArray::merge_write_states`]. The scalar backend falls
+    /// back to per-row `set` calls over the mask bits (identical result).
+    /// Not a counted write cycle: set/reset statistics are derived by the
+    /// controller from the kernel's per-state tables.
+    pub fn merge_write_states(
+        &mut self,
+        cols: &[usize],
+        masks: &super::StateMasks,
+        plan: &super::StateWritePlan,
+    ) {
+        match self {
+            CamStorage::BitSliced(a) => a.merge_write_states(cols, &masks.masks, plan),
+            CamStorage::Scalar(a) => {
+                for &sid in plan.matched() {
+                    let digits = plan.final_digits(sid as usize);
+                    for (w, &word) in masks.mask(sid as usize).iter().enumerate() {
+                        let mut m = word;
+                        while m != 0 {
+                            let r = (w << 6) + m.trailing_zeros() as usize;
+                            for (i, &c) in cols.iter().enumerate() {
+                                a.set(r, c, digits[i]);
+                            }
+                            m &= m - 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -215,6 +280,47 @@ mod tests {
             assert_eq!(s.get(0, 0), 2);
             assert_eq!(s.get(1, 0), 2);
         }
+    }
+
+    /// The scalar fallback of the plane-native primitives is observably
+    /// identical to the bit-sliced word path: same masks, same rewrites.
+    #[test]
+    fn classify_and_merge_agree_across_kinds() {
+        use crate::cam::StateWritePlan;
+        use crate::util::prop::{forall, Config};
+        use crate::util::Rng;
+        forall(Config::cases(60), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let rows = 1 + rng.index(150);
+            let cols_total = 3;
+            let mut data = vec![0u8; rows * cols_total];
+            rng.fill_digits(&mut data, radix.n());
+            if rng.chance(0.2) {
+                data[rng.index(rows * cols_total)] = DONT_CARE;
+            }
+            let cols = [0usize, 2];
+            let scalar = CamStorage::from_data(StorageKind::Scalar, radix, rows, cols_total, &data);
+            let sliced =
+                CamStorage::from_data(StorageKind::BitSliced, radix, rows, cols_total, &data);
+            let m1 = scalar.classify_states(&cols);
+            let m2 = sliced.classify_states(&cols);
+            assert_eq!(m1, m2, "classification diverged");
+            let masks = match m1 {
+                Some(m) => m,
+                None => return, // don't-care in a compared column: both fell back
+            };
+            // rewrite every even state to all-zeros
+            let finals: Vec<Option<Vec<u8>>> = (0..masks.num_states)
+                .map(|sid| (sid % 2 == 0).then(|| vec![0u8; cols.len()]))
+                .collect();
+            let plan =
+                StateWritePlan::new(radix, cols.len(), finals.iter().map(|f| f.as_deref()));
+            let mut s1 = scalar;
+            let mut s2 = sliced;
+            s1.merge_write_states(&cols, &masks, &plan);
+            s2.merge_write_states(&cols, &masks, &plan);
+            assert_eq!(s1.to_digits(), s2.to_digits(), "merge diverged");
+        });
     }
 
     #[test]

@@ -8,20 +8,23 @@
 
 use super::batcher::Tile;
 use super::job::OpKind;
-use crate::ap::{Ap, ApStats, ExecMode};
+use crate::ap::{Ap, ApStats, ExecMode, KernelCache};
 use crate::cam::{CamStorage, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::Radix;
 use crate::runtime::artifact::ArtifactMode;
 use crate::runtime::{PjrtRuntime, Registry};
+use std::sync::Arc;
 
 /// Identifies a backend for CLI/config selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Native simulator, scalar storage, state-bucketing fast path.
+    /// Native simulator, scalar storage, state-bucketing fast path
+    /// (row-at-a-time classification/rewrite).
     Native,
-    /// Native simulator over the bit-sliced digit-plane storage, faithful
-    /// pass-by-pass execution (word-parallel compares/writes).
+    /// Native simulator over the bit-sliced digit-plane storage,
+    /// plane-native state-bucketing fast path (classification and rewrite
+    /// run 64 rows per word op).
     NativeBitSliced,
     Pjrt,
 }
@@ -63,6 +66,14 @@ pub trait Backend {
     /// Human-readable name.
     fn name(&self) -> &'static str;
 
+    /// Drain the kernel-cache events (hits, misses) this backend recorded
+    /// since the last call. Backends without a kernel cache report `(0,
+    /// 0)`. The engine folds these into [`super::metrics::Metrics`] after
+    /// each job/batch.
+    fn take_kernel_events(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Does this backend implement [`Backend::run_tile_segmented`]? The
     /// coordinator only routes coalesced (multi-job) tiles to backends
     /// that do; jobs headed elsewhere fall back to solo dispatch.
@@ -98,16 +109,32 @@ pub trait Backend {
 }
 
 /// The native functional simulator backend, over either CAM storage
-/// backend ([`StorageKind`]).
-#[derive(Default)]
+/// backend ([`StorageKind`]). Tiles execute through the state-bucketing
+/// fast path with kernels drawn from a shareable signature-keyed
+/// [`KernelCache`] — pass the same `Arc` to every backend
+/// ([`Self::with_cache`]) and a LUT program compiles once per process
+/// instead of once per tile.
 pub struct NativeBackend {
     storage: StorageKind,
+    kernels: Arc<KernelCache>,
+    /// Cache events recorded by *this* backend since the last
+    /// [`Backend::take_kernel_events`] drain (the cache's own counters
+    /// are global across sharers).
+    kernel_hits: u64,
+    kernel_misses: u64,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new(StorageKind::Scalar)
+    }
 }
 
 impl NativeBackend {
-    /// Native backend over the chosen storage.
+    /// Native backend over the chosen storage, with a private kernel
+    /// cache.
     pub fn new(storage: StorageKind) -> Self {
-        NativeBackend { storage }
+        Self::with_cache(storage, Arc::new(KernelCache::new()))
     }
 
     /// Native backend over bit-sliced digit-plane storage.
@@ -115,9 +142,40 @@ impl NativeBackend {
         Self::new(StorageKind::BitSliced)
     }
 
+    /// Native backend sharing an existing kernel cache (how
+    /// [`super::shard::ShardedService`] and
+    /// [`super::service::EngineService`] give all their workers one cache).
+    pub fn with_cache(storage: StorageKind, kernels: Arc<KernelCache>) -> Self {
+        NativeBackend { storage, kernels, kernel_hits: 0, kernel_misses: 0 }
+    }
+
     /// The configured storage kind.
     pub fn storage(&self) -> StorageKind {
         self.storage
+    }
+
+    /// The kernel cache (shared or private).
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        &self.kernels
+    }
+
+    fn mode_of(blocked: bool) -> ExecMode {
+        if blocked {
+            ExecMode::Blocked
+        } else {
+            ExecMode::NonBlocked
+        }
+    }
+
+    /// Cache lookup with per-backend hit/miss accounting.
+    fn kernel(&mut self, lut: &Lut, mode: ExecMode) -> Arc<crate::ap::LutKernel> {
+        let (kernel, hit) = self.kernels.get_or_compile(lut, mode);
+        if hit {
+            self.kernel_hits += 1;
+        } else {
+            self.kernel_misses += 1;
+        }
+        kernel
     }
 }
 
@@ -131,18 +189,16 @@ impl Backend for NativeBackend {
         tile: &Tile,
     ) -> anyhow::Result<(Vec<u8>, ApStats)> {
         let layout = tile.layout;
+        let mode = Self::mode_of(blocked);
+        let kernel = self.kernel(lut, mode);
         let storage =
             CamStorage::from_data(self.storage, radix, tile.tile_rows, layout.cols(), &tile.data);
         let mut ap = Ap::with_storage(storage);
-        let mode = if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
-        match self.storage {
-            // §Perf: state-bucketing fast path — proven identical (values
-            // and stats) to the faithful per-pass path in controller tests.
-            StorageKind::Scalar => ap.apply_lut_multi_fast(lut, &layout.positions(), mode),
-            // Faithful pass-by-pass execution; the digit planes make each
-            // compare/write word-parallel across rows.
-            StorageKind::BitSliced => ap.apply_lut_multi(lut, &layout.positions(), mode),
-        }
+        // §Perf: state-bucketing fast path — proven identical (values and
+        // stats) to the faithful per-pass path by the controller and
+        // plane-native test suites. On bit-sliced storage classification
+        // and rewrite are word-parallel (64 rows per plane op).
+        ap.apply_lut_multi_fast_kernel(lut, &layout.positions(), mode, &kernel);
         let stats = ap.take_stats();
         Ok((ap.storage().to_digits(), stats))
     }
@@ -156,6 +212,13 @@ impl Backend for NativeBackend {
             StorageKind::Scalar => "native",
             StorageKind::BitSliced => "native-bitsliced",
         }
+    }
+
+    fn take_kernel_events(&mut self) -> (u64, u64) {
+        let events = (self.kernel_hits, self.kernel_misses);
+        self.kernel_hits = 0;
+        self.kernel_misses = 0;
+        events
     }
 
     fn supports_coalescing(&self) -> bool {
@@ -172,63 +235,23 @@ impl Backend for NativeBackend {
         bounds: &[usize],
     ) -> anyhow::Result<(Vec<u8>, Vec<ApStats>)> {
         let layout = tile.layout;
-        let mode = if blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
-        match self.storage {
-            StorageKind::Scalar => {
-                // The state-bucketing fast path attributes per-segment
-                // stats in the same pass that executes the tile.
-                let storage = CamStorage::from_data(
-                    StorageKind::Scalar,
-                    radix,
-                    tile.tile_rows,
-                    layout.cols(),
-                    &tile.data,
-                );
-                let mut ap = Ap::with_storage(storage);
-                let segments =
-                    ap.apply_lut_multi_fast_segmented(lut, &layout.positions(), mode, bounds);
-                Ok((ap.storage().to_digits(), segments))
-            }
-            StorageKind::BitSliced => {
-                // Faithful word-parallel execution produces the tile
-                // contents (and measured aggregate stats)...
-                let storage = CamStorage::from_data(
-                    StorageKind::BitSliced,
-                    radix,
-                    tile.tile_rows,
-                    layout.cols(),
-                    &tile.data,
-                );
-                let mut ap = Ap::with_storage(storage);
-                ap.apply_lut_multi(lut, &layout.positions(), mode);
-                let data = ap.storage().to_digits();
-                let measured = ap.take_stats();
-                // ...while the (much cheaper) scalar fast path replays the
-                // same tile for exact per-segment attribution. Fast ≡
-                // faithful ≡ bit-sliced is proven by the controller and
-                // differential test suites; cross-checked here in debug.
-                let scalar = CamStorage::from_data(
-                    StorageKind::Scalar,
-                    radix,
-                    tile.tile_rows,
-                    layout.cols(),
-                    &tile.data,
-                );
-                let mut attr = Ap::with_storage(scalar);
-                let segments =
-                    attr.apply_lut_multi_fast_segmented(lut, &layout.positions(), mode, bounds);
-                debug_assert_eq!(
-                    attr.storage().to_digits(),
-                    data,
-                    "segment-attribution replay diverged from the bit-sliced run"
-                );
-                debug_assert!(
-                    ApStats::sum_of(&segments).same_events(&measured),
-                    "segment attribution diverged from measured stats"
-                );
-                Ok((data, segments))
-            }
-        }
+        let mode = Self::mode_of(blocked);
+        let kernel = self.kernel(lut, mode);
+        // The state-bucketing fast path attributes per-segment stats in
+        // the same pass that executes the tile, on either storage: the
+        // bit-sliced backend derives them from masked popcounts of its
+        // state eq-masks at the segment bounds (no scalar replay needed).
+        let storage =
+            CamStorage::from_data(self.storage, radix, tile.tile_rows, layout.cols(), &tile.data);
+        let mut ap = Ap::with_storage(storage);
+        let segments = ap.apply_lut_multi_fast_segmented_kernel(
+            lut,
+            &layout.positions(),
+            mode,
+            bounds,
+            &kernel,
+        );
+        Ok((ap.storage().to_digits(), segments))
     }
 }
 
@@ -436,6 +459,51 @@ mod tests {
             .run_tile_segmented(OpKind::Add, radix, true, &lut, &tiles[0], &[2])
             .unwrap_err();
         assert!(format!("{err}").contains("dummy"));
+    }
+
+    /// Tiles sharing a LUT program compile its kernel once: the first
+    /// tile misses, every later tile hits, and `take_kernel_events`
+    /// drains the per-backend counters.
+    #[test]
+    fn kernel_cache_hits_across_tiles() {
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(5);
+        let p = 4;
+        let a: Vec<Word> = (0..30).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..30).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let tiles = make_tiles(&a, &b, 8); // 4 tiles
+        assert_eq!(tiles.len(), 4);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        for storage in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut be = NativeBackend::new(storage);
+            for t in &tiles {
+                be.run_tile(OpKind::Add, radix, true, &lut, t).unwrap();
+            }
+            assert_eq!(be.take_kernel_events(), (3, 1), "{storage}");
+            assert_eq!(be.take_kernel_events(), (0, 0), "drained");
+            assert_eq!(be.kernel_cache().len(), 1);
+        }
+    }
+
+    /// Two backends handed the same `Arc<KernelCache>` share compiled
+    /// kernels: the second backend's first tile is already a hit.
+    #[test]
+    fn kernel_cache_is_shared_between_backends() {
+        use crate::ap::KernelCache;
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let a = vec![Word::from_u128(5, 3, radix); 4];
+        let b = vec![Word::from_u128(9, 3, radix); 4];
+        let tiles = make_tiles(&a, &b, 4);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let cache = Arc::new(KernelCache::new());
+        let mut be1 = NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&cache));
+        let mut be2 = NativeBackend::with_cache(StorageKind::BitSliced, Arc::clone(&cache));
+        be1.run_tile(OpKind::Add, radix, true, &lut, &tiles[0]).unwrap();
+        be2.run_tile(OpKind::Add, radix, true, &lut, &tiles[0]).unwrap();
+        assert_eq!(be1.take_kernel_events(), (0, 1));
+        assert_eq!(be2.take_kernel_events(), (1, 0), "second backend reuses the kernel");
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -117,6 +117,7 @@ impl VectorEngine {
         let elapsed = started.elapsed();
         self.metrics.record(job.rows(), digits, &energy, elapsed);
         self.metrics.record_tiles(tiles.len(), tile_rows, job.rows());
+        self.metrics.record_kernel_events(self.backend.take_kernel_events());
         self.metrics.solo_jobs += 1;
         Ok(JobResult {
             id: job.id,
@@ -187,6 +188,7 @@ impl VectorEngine {
         let elapsed = started.elapsed();
         let total_rows: usize = jobs.iter().map(|j| j.rows()).sum();
         self.metrics.record_tiles(n_tiles, tile_rows, total_rows);
+        self.metrics.record_kernel_events(self.backend.take_kernel_events());
         self.metrics.batches += 1;
         let mut out = Vec::with_capacity(jobs.len());
         for (i, job) in jobs.iter().enumerate() {
@@ -392,6 +394,23 @@ mod tests {
         assert_eq!(res.len(), 1);
         assert_eq!(eng.metrics().solo_jobs, 3);
         assert!(eng.execute_coalesced(&[]).unwrap().is_empty());
+    }
+
+    /// Kernel-cache traffic surfaces in the engine metrics: the first job
+    /// compiles the LUT's kernel (miss), later tiles and jobs reuse it.
+    #[test]
+    fn kernel_metrics_are_recorded() {
+        let radix = Radix::TERNARY;
+        let a = vec![Word::from_u128(4, 4, radix); 10];
+        let b = vec![Word::from_u128(2, 4, radix); 10];
+        let mut eng = engine();
+        eng.execute(&Job::new(1, OpKind::Add, radix, true, a.clone(), b.clone())).unwrap();
+        assert_eq!(eng.metrics().kernel_misses, 1);
+        assert_eq!(eng.metrics().kernel_hits, 0);
+        eng.execute(&Job::new(2, OpKind::Add, radix, true, a, b)).unwrap();
+        assert_eq!(eng.metrics().kernel_misses, 1, "kernel compiled once");
+        assert_eq!(eng.metrics().kernel_hits, 1);
+        assert!(eng.metrics().summary().contains("kernels=1h/1m"));
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub struct Metrics {
     /// Jobs executed by a shard other than their signature's home shard
     /// (work stealing in [`super::shard::ShardedService`]).
     pub stolen_jobs: u64,
+    /// Kernel-cache hits: tiles that reused an already-compiled
+    /// [`crate::ap::LutKernel`] instead of rebuilding contribution tables.
+    pub kernel_hits: u64,
+    /// Kernel-cache misses (kernel compilations).
+    pub kernel_misses: u64,
 }
 
 impl Metrics {
@@ -47,6 +52,13 @@ impl Metrics {
         self.tile_live_rows += live_rows as u64;
     }
 
+    /// Record drained kernel-cache events
+    /// ([`super::backend::Backend::take_kernel_events`]).
+    pub fn record_kernel_events(&mut self, (hits, misses): (u64, u64)) {
+        self.kernel_hits += hits;
+        self.kernel_misses += misses;
+    }
+
     /// Merge (for aggregating worker metrics).
     pub fn merge(&mut self, other: &Metrics) {
         self.jobs += other.jobs;
@@ -61,6 +73,8 @@ impl Metrics {
         self.coalesced_jobs += other.coalesced_jobs;
         self.batches += other.batches;
         self.stolen_jobs += other.stolen_jobs;
+        self.kernel_hits += other.kernel_hits;
+        self.kernel_misses += other.kernel_misses;
     }
 
     /// Row-operations per second of busy time.
@@ -87,7 +101,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "jobs={} ({} coalesced in {} batches, {} solo, {} stolen) rows={} digit_ops={} \
-             energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}%",
+             energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}% \
+             kernels={}h/{}m",
             self.jobs,
             self.coalesced_jobs,
             self.batches,
@@ -100,6 +115,8 @@ impl Metrics {
             self.rows_per_sec(),
             self.tiles,
             100.0 * self.fill_rate(),
+            self.kernel_hits,
+            self.kernel_misses,
         )
     }
 }
@@ -137,11 +154,14 @@ mod tests {
         n.coalesced_jobs = 3;
         n.batches = 1;
         n.stolen_jobs = 1;
+        n.record_kernel_events((5, 2));
         m.merge(&n);
         assert_eq!(m.tiles, 3);
         assert!((m.fill_rate() - 556.0 / 768.0).abs() < 1e-12);
         assert_eq!(m.coalesced_jobs, 3);
         assert_eq!(m.stolen_jobs, 1);
+        assert_eq!((m.kernel_hits, m.kernel_misses), (5, 2));
         assert!(m.summary().contains("fill="));
+        assert!(m.summary().contains("kernels=5h/2m"));
     }
 }

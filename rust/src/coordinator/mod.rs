@@ -12,8 +12,10 @@
 //! * [`coalesce`] — cross-job coalescing: packs rows of many
 //!   same-signature jobs into shared tiles and splits results/stats back
 //!   out exactly, so bursts of small jobs fill the row-parallel arrays.
-//! * [`backend`] — where a tile executes: the native Rust simulator or an
-//!   AOT-compiled XLA engine via PJRT ([`crate::runtime`]).
+//! * [`backend`] — where a tile executes: the native Rust simulator
+//!   (running precompiled [`crate::ap::LutKernel`]s drawn from a
+//!   signature-keyed cache shared across workers) or an AOT-compiled XLA
+//!   engine via PJRT ([`crate::runtime`]).
 //! * [`engine`] — per-thread engine: LUT cache, dispatch, metric pricing,
 //!   solo and coalesced execution paths.
 //! * [`service`] — a leader/worker thread pool (std::thread + mpsc; the

@@ -123,17 +123,26 @@ impl EngineService {
         Ok(EngineService { tx, workers: handles, aggregated })
     }
 
-    /// Convenience: start with a [`BackendKind`].
+    /// Convenience: start with a [`BackendKind`]. Native workers share one
+    /// kernel cache, so a LUT program compiles once for the whole pool.
     pub fn start_kind(
         workers: usize,
         queue_depth: usize,
         kind: BackendKind,
         artifacts_dir: std::path::PathBuf,
     ) -> anyhow::Result<Self> {
+        use crate::ap::KernelCache;
+        use crate::cam::StorageKind;
+        let kernels = Arc::new(KernelCache::new());
         Self::start(workers, queue_depth, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
-                BackendKind::Native => Box::new(NativeBackend::default()),
-                BackendKind::NativeBitSliced => Box::new(NativeBackend::bit_sliced()),
+                BackendKind::Native => {
+                    Box::new(NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels)))
+                }
+                BackendKind::NativeBitSliced => Box::new(NativeBackend::with_cache(
+                    StorageKind::BitSliced,
+                    Arc::clone(&kernels),
+                )),
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })

@@ -297,16 +297,27 @@ impl ShardedService {
         Ok(ShardedService { queues, workers, cfg })
     }
 
-    /// Convenience: start with a [`BackendKind`].
+    /// Convenience: start with a [`BackendKind`]. Native shards share one
+    /// kernel cache ([`crate::ap::KernelCache`]), so a LUT program
+    /// compiles once for the whole service instead of once per shard —
+    /// and stolen jobs find their kernel already warm on the thief.
     pub fn start_kind(
         cfg: ShardConfig,
         kind: BackendKind,
         artifacts_dir: std::path::PathBuf,
     ) -> anyhow::Result<Self> {
+        use crate::ap::KernelCache;
+        use crate::cam::StorageKind;
+        let kernels = Arc::new(KernelCache::new());
         Self::start(cfg, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
-                BackendKind::Native => Box::new(NativeBackend::default()),
-                BackendKind::NativeBitSliced => Box::new(NativeBackend::bit_sliced()),
+                BackendKind::Native => {
+                    Box::new(NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels)))
+                }
+                BackendKind::NativeBitSliced => Box::new(NativeBackend::with_cache(
+                    StorageKind::BitSliced,
+                    Arc::clone(&kernels),
+                )),
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })

@@ -1,0 +1,251 @@
+//! Differential property tests for the plane-native LUT fast path (PR-3
+//! tentpole): on *both* storage backends, for radices 2–5, row counts
+//! straddling 64-row word boundaries, segment bounds landing mid-word,
+//! and planted don't-cares (the fallback), the kernel-driven fast path —
+//! plain and segment-attributed — must be **value- and stats-exact**
+//! against the faithful pass-by-pass `apply_lut` execution, and against
+//! the row-at-a-time reference implementation it replaced.
+
+use mvap::ap::{Ap, ExecMode, KernelCache, LutKernel};
+use mvap::cam::{CamStorage, StorageKind};
+use mvap::diagram::StateDiagram;
+use mvap::func::{full_add, full_sub, mac_digit};
+use mvap::lutgen::{generate_blocked, generate_non_blocked, Lut};
+use mvap::mvl::{Radix, DONT_CARE};
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+
+const KINDS: [StorageKind; 2] = [StorageKind::Scalar, StorageKind::BitSliced];
+
+/// Random (LUT, mode) from the function zoo at a random radix 2–5.
+fn random_program(rng: &mut Rng) -> (Lut, ExecMode, usize, Radix) {
+    let radix = Radix(2 + rng.digit(4));
+    let tables = [full_add(radix), full_sub(radix), mac_digit(radix)];
+    let table = tables[rng.index(3)].clone();
+    let arity = table.arity();
+    let d = StateDiagram::build(table).expect("diagram");
+    let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+    let lut = match mode {
+        ExecMode::Blocked => generate_blocked(&d),
+        ExecMode::NonBlocked => generate_non_blocked(&d),
+    };
+    (lut, mode, arity, radix)
+}
+
+/// Row counts biased onto 64-row word boundaries.
+fn random_rows(rng: &mut Rng) -> usize {
+    match rng.index(4) {
+        0 => 1 + rng.index(62),
+        1 => 63 + rng.index(4),
+        2 => 127 + rng.index(4),
+        _ => 1 + rng.index(300),
+    }
+}
+
+/// The fast path (cached kernel) equals the faithful path — contents AND
+/// statistics — on both backends, and the two backends agree with each
+/// other and with the row-at-a-time reference.
+#[test]
+fn fast_path_is_exact_on_both_backends() {
+    forall(Config::cases(80), |rng: &mut Rng| {
+        let (lut, mode, arity, radix) = random_program(rng);
+        let rows = random_rows(rng);
+        let mut data = vec![0u8; rows * arity];
+        rng.fill_digits(&mut data, radix.n());
+        if rng.chance(0.25) {
+            // don't-care fallback must stay exact too
+            data[rng.index(rows * arity)] = DONT_CARE;
+        }
+        let cols: Vec<usize> = (0..arity).collect();
+        let positions = vec![cols.clone()];
+        let cache = KernelCache::new();
+        let (kernel, _) = cache.get_or_compile(&lut, mode);
+        let mut snapshots = Vec::new();
+        for kind in KINDS {
+            let mk = || CamStorage::from_data(kind, radix, rows, arity, &data);
+            let mut slow = Ap::with_storage(mk());
+            slow.apply_lut(&lut, &cols, mode);
+            let mut fast = Ap::with_storage(mk());
+            fast.apply_lut_multi_fast_kernel(&lut, &positions, mode, &kernel);
+            let mut rowwise = Ap::with_storage(mk());
+            rowwise.apply_lut_multi_fast_rowwise(&lut, &positions, mode);
+            let ctx = format!("{} {mode:?} {kind} rows={rows}", lut.name);
+            assert_eq!(fast.storage().to_digits(), slow.storage().to_digits(), "{ctx}");
+            assert_eq!(fast.stats(), slow.stats(), "{ctx}");
+            assert_eq!(rowwise.storage().to_digits(), slow.storage().to_digits(), "{ctx}");
+            assert_eq!(rowwise.stats(), slow.stats(), "{ctx}");
+            snapshots.push((fast.storage().to_digits(), fast.stats().clone()));
+        }
+        assert_eq!(snapshots[0], snapshots[1], "backends diverged: {}", lut.name);
+    });
+}
+
+/// Segment-attributed fast path: per-segment stats equal solo runs of the
+/// segment's rows on both backends, with bounds biased to land mid-word,
+/// including empty segments and planted don't-cares (isolated fallback).
+#[test]
+fn segmented_fast_path_is_exact_on_both_backends() {
+    forall(Config::cases(50), |rng: &mut Rng| {
+        let (lut, mode, arity, radix) = random_program(rng);
+        let rows = random_rows(rng);
+        // multi-digit layout: p positions of [a_d, b_d, carry]
+        let p = 1 + rng.index(3);
+        let cols_total = 2 * p + 1;
+        let mut data = vec![0u8; rows * cols_total];
+        rng.fill_digits(&mut data, radix.n());
+        if rng.chance(0.25) {
+            data[rng.index(rows * cols_total)] = DONT_CARE;
+        }
+        // adder-style positions (the whole zoo is arity 3)
+        assert_eq!(arity, 3);
+        let positions: Vec<Vec<usize>> = (0..p).map(|d| vec![d, p + d, 2 * p]).collect();
+        // random cuts biased onto word boundaries and mid-word offsets
+        let mut bounds: Vec<usize> = (0..rng.index(4))
+            .map(|_| match rng.index(3) {
+                0 if rows > 64 => 64,
+                1 => rng.index(rows + 1),
+                _ => rng.index(rows.min(100) + 1),
+            })
+            .collect();
+        bounds.push(rows);
+        bounds.sort_unstable();
+
+        for kind in KINDS {
+            let mk = || CamStorage::from_data(kind, radix, rows, cols_total, &data);
+            let mut seg_ap = Ap::with_storage(mk());
+            let segs = seg_ap.apply_lut_multi_fast_segmented(&lut, &positions, mode, &bounds);
+            assert_eq!(segs.len(), bounds.len());
+
+            // whole-array faithful reference
+            let mut solo_ap = Ap::with_storage(mk());
+            solo_ap.apply_lut_multi(&lut, &positions, mode);
+            let ctx = format!("{} {mode:?} {kind} rows={rows} bounds={bounds:?}", lut.name);
+            assert_eq!(
+                seg_ap.storage().to_digits(),
+                solo_ap.storage().to_digits(),
+                "segmentation changed contents: {ctx}"
+            );
+            let total = mvap::ap::ApStats::sum_of(&segs);
+            assert!(total.same_events(solo_ap.stats()), "segment sum != aggregate: {ctx}");
+            assert!(seg_ap.stats().same_events(solo_ap.stats()), "{ctx}");
+            assert_eq!(seg_ap.stats().compare_cycles, solo_ap.stats().compare_cycles, "{ctx}");
+            assert_eq!(seg_ap.stats().write_cycles, solo_ap.stats().write_cycles, "{ctx}");
+
+            // each segment equals a solo run of exactly its rows
+            let mut start = 0usize;
+            for (s, &end) in bounds.iter().enumerate() {
+                if end == start {
+                    assert_eq!(segs[s], mvap::ap::ApStats::default(), "{ctx}");
+                    continue;
+                }
+                let sub = &data[start * cols_total..end * cols_total];
+                let mut ap = Ap::with_storage(CamStorage::from_data(
+                    kind,
+                    radix,
+                    end - start,
+                    cols_total,
+                    sub,
+                ));
+                ap.apply_lut_multi(&lut, &positions, mode);
+                assert_eq!(&segs[s], ap.stats(), "segment {s} ({start}..{end}): {ctx}");
+                start = end;
+            }
+        }
+    });
+}
+
+/// Multi-position programs with *different* LUT arities on one `Ap`
+/// (mul-style composition) exercise scratch-buffer reuse across shape
+/// changes, on both backends.
+#[test]
+fn scratch_buffers_survive_shape_changes() {
+    use mvap::ap::{load_mul_operands, mul_vectors};
+    use mvap::mvl::Word;
+    let mut rng = Rng::new(11);
+    let radix = Radix::TERNARY;
+    let p = 3;
+    let rows = 70; // straddles one word boundary
+    let a: Vec<Word> =
+        (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+    let b: Vec<Word> =
+        (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+    for mode in [ExecMode::NonBlocked, ExecMode::Blocked] {
+        let (array, layout) = load_mul_operands(radix, &a, &b);
+        for kind in KINDS {
+            let storage = CamStorage::from_cam(kind, array.clone());
+            let mut ap = Ap::with_storage(storage);
+            let products = mul_vectors(&mut ap, &layout, radix, mode);
+            for r in 0..rows {
+                assert_eq!(
+                    products[r].to_u128(),
+                    a[r].to_u128() * b[r].to_u128(),
+                    "row {r} {kind} {mode:?}"
+                );
+            }
+        }
+    }
+}
+
+/// A kernel compiled once drives many different arrays (the coordinator's
+/// sharing pattern): results must not depend on which `Ap` ran first, and
+/// the cache must serve every lookup after the first from memory.
+#[test]
+fn shared_kernel_is_reusable_across_arrays() {
+    let radix = Radix::TERNARY;
+    let d = StateDiagram::build(full_add(radix)).unwrap();
+    let lut = generate_blocked(&d);
+    let cache = KernelCache::new();
+    let mut rng = Rng::new(23);
+    for round in 0..6 {
+        let (kernel, hit) = cache.get_or_compile(&lut, ExecMode::Blocked);
+        assert_eq!(hit, round > 0, "round {round}");
+        let rows = 1 + rng.index(200);
+        let mut data = vec![0u8; rows * 3];
+        rng.fill_digits(&mut data, 3);
+        for kind in KINDS {
+            let mut fast = Ap::with_storage(CamStorage::from_data(kind, radix, rows, 3, &data));
+            fast.apply_lut_multi_fast_kernel(&lut, &[vec![0, 1, 2]], ExecMode::Blocked, &kernel);
+            let mut slow = Ap::with_storage(CamStorage::from_data(kind, radix, rows, 3, &data));
+            slow.apply_lut(&lut, &[0, 1, 2], ExecMode::Blocked);
+            assert_eq!(fast.storage().to_digits(), slow.storage().to_digits());
+            assert_eq!(fast.stats(), slow.stats());
+        }
+    }
+    assert_eq!((cache.hits(), cache.misses()), (5, 1));
+}
+
+/// An inline-compiled kernel equals a cache-served kernel observably.
+#[test]
+fn inline_and_cached_kernels_agree() {
+    let radix = Radix(4);
+    let d = StateDiagram::build(full_sub(radix)).unwrap();
+    let lut = generate_non_blocked(&d);
+    let inline = LutKernel::compile(&lut, ExecMode::NonBlocked);
+    let cache = KernelCache::new();
+    let (cached, _) = cache.get_or_compile(&lut, ExecMode::NonBlocked);
+    assert_eq!(inline.signature(), cached.signature());
+    assert_eq!(inline.num_states(), cached.num_states());
+    let mut rng = Rng::new(31);
+    let rows = 129;
+    let mut data = vec![0u8; rows * 3];
+    rng.fill_digits(&mut data, radix.n());
+    let positions = vec![vec![0usize, 1, 2]];
+    let mut x = Ap::with_storage(CamStorage::from_data(
+        StorageKind::BitSliced,
+        radix,
+        rows,
+        3,
+        &data,
+    ));
+    x.apply_lut_multi_fast_kernel(&lut, &positions, ExecMode::NonBlocked, &inline);
+    let mut y = Ap::with_storage(CamStorage::from_data(
+        StorageKind::BitSliced,
+        radix,
+        rows,
+        3,
+        &data,
+    ));
+    y.apply_lut_multi_fast_kernel(&lut, &positions, ExecMode::NonBlocked, &cached);
+    assert_eq!(x.storage().to_digits(), y.storage().to_digits());
+    assert_eq!(x.stats(), y.stats());
+}
