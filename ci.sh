@@ -7,17 +7,24 @@
 # Stages:
 #   1. cargo build --release        (tier-1, part 1)
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
-#   3. cargo test --release -q      (the coalescing/bit-sliced fast paths,
+#   3. fixed-seed reproduction      (MVAP_PROP_SEED pins every property
+#                                    sweep of the reduce differential suite
+#                                    to one replayable case — proves the
+#                                    replay knob stays wired; any failing
+#                                    sweep prints the same knob + seed)
+#   4. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
-#   4. cargo bench --no-run         (benches must keep compiling)
-#   5. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_3.json at the repo
-#                                    root — the perf trajectory artifact)
-#   6. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#   5. cargo bench --no-run         (benches must keep compiling)
+#   6. cargo bench -- --quick       (hot-path benches, 3 iterations each,
+#                                    recorded to BENCH_4.json at the repo
+#                                    root — the perf trajectory artifact;
+#                                    FAILS LOUDLY if zero results were
+#                                    recorded, as happened to BENCH_3.json)
+#   7. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
-#   7. cargo doc --no-deps          (warnings as errors; the crate also denies
+#   8. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#   8. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#   9. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -30,6 +37,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce differential suite)"
+MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential
+
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"
     cargo test --release -q
@@ -37,8 +47,12 @@ if [[ "$fast" == "0" ]]; then
     echo "==> cargo bench --no-run (compile gate)"
     cargo bench --no-run
 
-    echo "==> cargo bench -- --quick (recording BENCH_3.json)"
-    cargo bench --bench bench_main -- --quick --json ../BENCH_3.json hot/
+    echo "==> cargo bench -- --quick (recording BENCH_4.json)"
+    cargo bench --bench bench_main -- --quick --json ../BENCH_4.json hot/
+    if ! grep -q '"name":' ../BENCH_4.json; then
+        echo "ERROR: quick-bench stage recorded zero results in BENCH_4.json" >&2
+        exit 1
+    fi
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

@@ -1,26 +1,31 @@
 //! End-to-end driver: a ternary neural-network layer computed **entirely
-//! with AP operations** through the full three-layer stack (Rust
-//! coordinator → AOT-compiled XLA engines via PJRT → Pallas-authored
-//! compute), on a real small workload.
+//! with AP operations**, on a real small workload.
 //!
 //! Workload: `y = W · x` for a 16×1024 ternary weight matrix and ternary
 //! activations (the §I motivation: machine-learning kernels as massively
-//! parallel digit-wise ops). Per output neuron:
+//! parallel digit-wise ops). Per output neuron, exactly **two jobs**:
 //!
 //!   1. **MAC job** — one AP row per input i holding `(W_ji, x_i, 0)`;
 //!      the in-place `mac` LUT computes all 1024 products in one
 //!      row-parallel op (products ≤ 4 = two trits: B + carry).
-//!   2. **Reduction jobs** — log₂(N) rounds of row-parallel 8-trit AP
-//!      additions, pairing partial sums until one value remains.
+//!   2. **Reduce job** — one in-engine segmented tree reduction
+//!      ([`mvap::coordinator::OpKind::Reduce`]): the engine folds all
+//!      1024 partial products down to the dot product in ⌈log₂ 1024⌉ = 10
+//!      pairwise rounds, moving rows between rounds with the plane-native
+//!      row-movement primitive. No partial sum ever returns to the host —
+//!      the pre-Reduce version of this example paid a full job round-trip
+//!      per pairing round (10 Add jobs per neuron, with host reshaping
+//!      between each).
 //!
-//! Every arithmetic digit flows through the AP engines; the host only
-//! reshapes rows between jobs. The run verifies against an integer
-//! reference and reports the paper's headline metrics (energy vs the
-//! binary AP, delay vs the ternary CLA). Results are recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! The run verifies against an integer reference, asserts the engine
+//! executed exactly ⌈log₂ N⌉ reduction rounds per neuron, and reports the
+//! paper's headline metrics (energy vs the binary AP, delay vs the
+//! ternary CLA).
 //!
-//! Run: `make artifacts && cargo run --release --example ternary_nn`
-//!      (`-- --backend native` to skip the PJRT path)
+//! Run: `cargo run --release --example ternary_nn`
+//!      (`-- --backend native-bitsliced` for the digit-plane storage;
+//!       Reduce jobs run on the native backends — PJRT artifacts cover
+//!       element-wise ops only)
 
 use mvap::baselines::cla_model;
 use mvap::coordinator::{BackendKind, EngineService, Job, OpKind};
@@ -37,13 +42,15 @@ const ACC_TRITS: usize = 8;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let backend: BackendKind = args
-        .get_or("backend", "pjrt")
+        .get_or("backend", "native")
         .parse()
         .map_err(anyhow::Error::msg)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     args.reject_unknown();
-    if backend == BackendKind::Pjrt && !artifacts.join("manifest.txt").exists() {
-        anyhow::bail!("no artifacts found — run `make artifacts` (or use --backend native)");
+    if backend == BackendKind::Pjrt {
+        anyhow::bail!(
+            "the in-engine Reduce path is native-only — use --backend native or native-bitsliced"
+        );
     }
 
     let radix = Radix::TERNARY;
@@ -52,12 +59,12 @@ fn main() -> anyhow::Result<()> {
     let weights: Vec<Vec<u8>> = (0..OUTPUTS).map(|_| rng.number(INPUTS, 3)).collect();
     let x: Vec<u8> = rng.number(INPUTS, 3);
 
-    let workers = if backend == BackendKind::Pjrt { 2 } else { 4 };
+    let workers = 4;
     let svc = EngineService::start_kind(workers, 16, backend, artifacts)?;
     println!(
         "ternary NN layer: {OUTPUTS} neurons × {INPUTS} inputs on the {} backend ({workers} workers)\n",
         match backend {
-            BackendKind::Pjrt => "PJRT (AOT XLA engines)",
+            BackendKind::Pjrt => unreachable!(),
             BackendKind::Native => "native simulator",
             BackendKind::NativeBitSliced => "native simulator (bit-sliced digit planes)",
         }
@@ -86,23 +93,15 @@ fn main() -> anyhow::Result<()> {
         // The digit-wise MAC ripples the product's high trit into B's next
         // digit (digit 1 sees A₁·B₁ + carry = carry), so B already holds
         // the complete 2-trit product, zero-extended to ACC_TRITS.
-        let mut partials: Vec<Word> = res.values.into_iter().map(|(w, _)| w).collect();
+        let partials: Vec<Word> = res.values.into_iter().map(|(w, _)| w).collect();
 
-        // --- stage 2: log₂(N) rounds of row-parallel AP additions -------
-        while partials.len() > 1 {
-            if partials.len() % 2 == 1 {
-                partials.push(Word::zero(ACC_TRITS, radix));
-            }
-            let half = partials.len() / 2;
-            let a = partials[..half].to_vec();
-            let b = partials[half..].to_vec();
-            job_id += 1;
-            let res = svc.run(Job::new(job_id, OpKind::Add, radix, true, a, b))?;
-            total_energy += res.energy.total();
-            total_cycles += res.delay_cycles;
-            partials = res.values.into_iter().map(|(w, _)| w).collect();
-        }
-        let y_j = partials[0].to_u128() as u64;
+        // --- stage 2: ONE in-engine tree reduction ----------------------
+        job_id += 1;
+        let res = svc.run(Job::reduce(job_id, radix, true, partials, vec![]))?;
+        total_energy += res.energy.total();
+        total_cycles += res.delay_cycles;
+        assert_eq!(res.values.len(), 1, "one segment, one sum");
+        let y_j = res.values[0].0.to_u128() as u64;
 
         // verify against the integer reference
         let expect: u64 = w_row.iter().zip(&x).map(|(&w, &xi)| w as u64 * xi as u64).sum();
@@ -112,11 +111,25 @@ fn main() -> anyhow::Result<()> {
     let wall = started.elapsed();
     let metrics = svc.shutdown();
 
+    // exactly one MAC + one Reduce job per neuron, ⌈log₂ N⌉ rounds each
+    assert_eq!(metrics.jobs, 2 * OUTPUTS as u64);
+    let rounds_per_neuron = mvap::ap::fold_rounds(INPUTS) as u64; // 10
+    assert_eq!(metrics.reduce_rounds, OUTPUTS as u64 * rounds_per_neuron);
+    assert_eq!(
+        metrics.reduce_rows_moved,
+        (OUTPUTS * (INPUTS - 1)) as u64,
+        "every partial product folds in exactly once"
+    );
+
     println!("outputs (all verified against the integer reference ✓):");
     println!("  y = {outputs:?}\n");
     println!("AP execution summary:");
-    println!("  jobs          : {} ({} MACs + reductions)", metrics.jobs, OUTPUTS);
+    println!(
+        "  jobs          : {} ({} MACs + {} Reduces, {} fold rounds each)",
+        metrics.jobs, OUTPUTS, OUTPUTS, rounds_per_neuron
+    );
     println!("  row-ops       : {}", metrics.rows);
+    println!("  rows moved    : {} (in-engine, between fold rounds)", metrics.reduce_rows_moved);
     println!("  modeled energy: {:.3e} J", total_energy);
     println!("  modeled delay : {} AP clock cycles", total_cycles);
     println!("  wall clock    : {:?} ({:.0} row-ops/s)", wall, metrics.rows as f64 / wall.as_secs_f64());

@@ -343,6 +343,35 @@ fn main() {
             }
         }
     }
+    if run("hot/reduce") {
+        // In-engine segmented tree reduction (OpKind::Reduce): one job
+        // folds `rows` 8-trit operands down to one value in ⌈log₂ rows⌉
+        // rounds, with plane-native row movement between rounds on the
+        // bit-sliced backend. The bench of record for the PR-4 tentpole:
+        // compare scalar vs bit-sliced at 1k/16k/256k rows (the old
+        // host-paired path paid a job round-trip per round on top).
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(15);
+            let values = random_words(&mut rng, rows, p, radix);
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let tag = match kind {
+                    StorageKind::Scalar => "scalar",
+                    StorageKind::BitSliced => "bitsliced",
+                };
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let job = Job::reduce(1, radix, true, values.clone(), vec![]);
+                results.push(bench(
+                    &format!("hot/reduce_{tag}_{rows}rows"),
+                    Some(rows as u64),
+                    || {
+                        black_box(eng.execute(&job).unwrap());
+                    },
+                ));
+            }
+        }
+    }
     if run("hot/sharded_service") {
         // end-to-end sharded dispatch with cross-submission coalescing
         let radix = Radix::TERNARY;

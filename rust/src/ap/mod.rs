@@ -13,8 +13,8 @@ pub mod ops;
 pub use controller::{Ap, ExecMode};
 pub use kernel::{KernelCache, KernelSignature, LutKernel};
 pub use ops::{
-    add_vectors, adder_lut, extract_operand, load_mul_operands, load_operands,
-    load_operands_storage, mac_lut, mac_vectors, mul_vectors, sub_lut, sub_vectors, MulLayout,
-    VectorLayout,
+    add_vectors, adder_lut, extract_operand, extract_reduced, fold_rounds, load_mul_operands,
+    load_operands, load_operands_storage, load_reduce_operands, mac_lut, mac_vectors, mul_vectors,
+    reduce_vectors, sub_lut, sub_vectors, MulLayout, ReduceSummary, VectorLayout,
 };
 pub use stats::ApStats;

@@ -3,6 +3,8 @@
 //! (`A[0..p] | B[0..p] | carry`), least-significant digit first.
 
 use super::controller::{Ap, ExecMode};
+use super::kernel::LutKernel;
+use super::stats::ApStats;
 use crate::cam::{CamArray, CamStorage, StorageKind};
 use crate::diagram::StateDiagram;
 use crate::func::{full_add, full_sub, mac_digit};
@@ -144,6 +146,157 @@ pub fn sub_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode
 pub fn mac_vectors(ap: &mut Ap, layout: &VectorLayout, lut: &Lut, mode: ExecMode) -> Vec<(Word, u8)> {
     ap.apply_lut_multi(lut, &layout.positions(), mode);
     extract_operand(ap.storage(), layout)
+}
+
+/// Pairwise-fold rounds needed to reduce `k` operands to one:
+/// `⌈log₂ k⌉` (0 for a single operand).
+pub fn fold_rounds(k: usize) -> u32 {
+    assert!(k >= 1, "fold_rounds of an empty segment");
+    usize::BITS - (k - 1).leading_zeros()
+}
+
+/// What an in-engine reduction did: the engine meters these as
+/// [`crate::coordinator::Metrics::reduce_rounds`] /
+/// [`crate::coordinator::Metrics::reduce_rows_moved`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReduceSummary {
+    /// Lockstep pairwise-fold rounds executed
+    /// (`max over segments of ⌈log₂ rows⌉`).
+    pub rounds: u64,
+    /// Rows whose operand digits were moved by the plane-native
+    /// row-movement primitive, summed over rounds and segments.
+    pub rows_moved: u64,
+}
+
+/// Load reduction operands into a fresh array: operand `r` lands in row
+/// r's **B** columns (where fold results accumulate); A and carry are
+/// cleared so unpaired rows start as noAction states.
+pub fn load_reduce_operands(
+    kind: StorageKind,
+    radix: Radix,
+    values: &[Word],
+) -> (CamStorage, VectorLayout) {
+    assert!(!values.is_empty());
+    let p = values[0].width();
+    let layout = VectorLayout { p };
+    let mut array = CamArray::new(radix, values.len(), layout.cols());
+    for (r, w) in values.iter().enumerate() {
+        assert_eq!(w.width(), p, "ragged operand widths");
+        assert_eq!(w.radix(), radix, "operand radix mismatch");
+        for d in 0..p {
+            array.set(r, layout.a(d), 0);
+            array.set(r, layout.b(d), w.digits()[d]);
+        }
+        array.set(r, layout.carry(), 0);
+    }
+    (CamStorage::from_cam(kind, array), layout)
+}
+
+/// Per-segment results of a completed reduction: each segment's head row's
+/// (B word, carry digit). The word is the segment sum mod `radix^p`; the
+/// carry digit is the final fold's carry-out (always 0 when the true sum
+/// fits in p digits — then no intermediate pairwise sum overflows either,
+/// partial sums being subset sums of non-negative operands).
+pub fn extract_reduced(
+    storage: &CamStorage,
+    layout: &VectorLayout,
+    seg_bounds: &[usize],
+) -> Vec<(Word, u8)> {
+    let mut out = Vec::with_capacity(seg_bounds.len());
+    let mut start = 0usize;
+    for &end in seg_bounds {
+        let digits: Vec<u8> = (0..layout.p).map(|d| storage.get(start, layout.b(d))).collect();
+        out.push((Word::from_digits(digits, storage.radix()), storage.get(start, layout.carry())));
+        start = end;
+    }
+    out
+}
+
+/// In-engine segmented tree reduction: sums every segment's B operands
+/// down to its head row, entirely inside this `Ap` — no operand ever
+/// leaves the array between rounds, and the adder `kernel` is compiled
+/// once and reused across all `⌈log₂ N⌉` rounds.
+///
+/// Round structure (validated against an integer reference by
+/// `rust/tests/reduce_differential.rs`): per segment with `k` live rows,
+/// the B operands of rows `[half, k)` move into the A columns of rows
+/// `[0, k - half)` (`half = ⌈k/2⌉`) via [`CamStorage::copy_rows`] —
+/// word-level plane shifts on the bit-sliced backend — then one
+/// row-parallel adder application folds all pairs of all segments at
+/// once. Unpaired and already-finished rows have A and carry zeroed each
+/// round, making them noAction states that preserve their partial sum;
+/// per-round carry clearing makes each fold a `mod radix^p` addition, so
+/// the final value is exactly the segment sum mod `radix^p`.
+///
+/// `seg_bounds` are cumulative segment end offsets (strictly increasing,
+/// last == rows) — the reduction granularity. `stat_bounds` are the
+/// statistics-attribution bounds (each must also be a segment boundary;
+/// the coordinator passes job boundaries so coalesced reduce jobs get
+/// exact per-job stats). Returns one accumulated [`ApStats`] block per
+/// stat segment plus the round/movement summary.
+pub fn reduce_vectors(
+    ap: &mut Ap,
+    layout: &VectorLayout,
+    lut: &Lut,
+    mode: ExecMode,
+    kernel: &LutKernel,
+    seg_bounds: &[usize],
+    stat_bounds: &[usize],
+) -> (Vec<ApStats>, ReduceSummary) {
+    let rows = ap.storage().rows();
+    assert!(!seg_bounds.is_empty(), "at least one segment required");
+    assert_eq!(*seg_bounds.last().unwrap(), rows, "segments must cover all rows");
+    assert!(
+        seg_bounds.windows(2).all(|w| w[0] < w[1]) && seg_bounds[0] > 0,
+        "segment bounds must be strictly increasing (no empty segments)"
+    );
+    assert!(
+        stat_bounds.iter().all(|b| seg_bounds.binary_search(b).is_ok()),
+        "every stat bound must be a segment boundary"
+    );
+    let mut starts = Vec::with_capacity(seg_bounds.len());
+    let mut live = Vec::with_capacity(seg_bounds.len());
+    let mut prev = 0usize;
+    for &end in seg_bounds {
+        starts.push(prev);
+        live.push(end - prev);
+        prev = end;
+    }
+    let rounds = live.iter().map(|&k| fold_rounds(k)).max().unwrap() as u64;
+    let positions = layout.positions();
+    let mut accum = vec![ApStats::default(); stat_bounds.len()];
+    let mut moved = 0u64;
+    for _ in 0..rounds {
+        for (s, k) in live.iter_mut().enumerate() {
+            let base = starts[s];
+            let half = (*k + 1) / 2;
+            let pairs = *k - half;
+            // `pairs == 0` (finished or single-row segment): no movement,
+            // but A and carry still zero so the row stays noAction for the
+            // remaining lockstep rounds.
+            for d in 0..layout.p {
+                if pairs > 0 {
+                    ap.storage_mut().copy_rows(
+                        layout.b(d),
+                        base + half,
+                        layout.a(d),
+                        base,
+                        pairs,
+                    );
+                }
+                ap.storage_mut().fill_rows(layout.a(d), base + pairs, *k - pairs, 0);
+            }
+            ap.storage_mut().fill_rows(layout.carry(), base, *k, 0);
+            moved += pairs as u64;
+            *k = half;
+        }
+        let round_stats =
+            ap.apply_lut_multi_fast_segmented_kernel(lut, &positions, mode, stat_bounds, kernel);
+        for (acc, seg) in accum.iter_mut().zip(&round_stats) {
+            acc.merge(seg);
+        }
+    }
+    (accum, ReduceSummary { rounds, rows_moved: moved })
 }
 
 /// Column layout for full word multiplication:
@@ -385,6 +538,107 @@ mod tests {
                 );
             }
         });
+    }
+
+    /// In-engine tree reduction equals the integer reference (sum mod
+    /// radix^p) on both storage backends, for random radices, widths,
+    /// row counts, and segment cuts — and rounds == ⌈log₂ max-segment⌉.
+    #[test]
+    fn reduce_matches_integer_reference() {
+        use crate::ap::LutKernel;
+        forall(Config::cases(40), |rng| {
+            let radix = Radix(2 + rng.digit(4)); // 2..=5
+            let p = 2 + rng.index(6);
+            let rows = 1 + rng.index(100);
+            let values = random_words(rng, rows, p, radix);
+            // random strictly-increasing segment bounds ending at rows
+            let mut seg_bounds: Vec<usize> = Vec::new();
+            let mut at = 0usize;
+            while at < rows {
+                at += 1 + rng.index(rows - at);
+                seg_bounds.push(at);
+            }
+            let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+            let lut = adder_lut(radix, mode);
+            let kernel = LutKernel::compile(&lut, mode);
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let (storage, layout) = load_reduce_operands(kind, radix, &values);
+                let mut ap = Ap::with_storage(storage);
+                let (stats, summary) =
+                    reduce_vectors(&mut ap, &layout, &lut, mode, &kernel, &seg_bounds, &seg_bounds);
+                assert_eq!(stats.len(), seg_bounds.len());
+                let results = extract_reduced(ap.storage(), &layout, &seg_bounds);
+                let modulus = (radix.n() as u128).pow(p as u32);
+                let mut start = 0usize;
+                let mut max_rounds = 0u32;
+                for (s, &end) in seg_bounds.iter().enumerate() {
+                    let expect: u128 =
+                        values[start..end].iter().map(|w| w.to_u128()).sum::<u128>() % modulus;
+                    assert_eq!(results[s].0.to_u128(), expect, "segment {s} ({kind:?})");
+                    max_rounds = max_rounds.max(fold_rounds(end - start));
+                    start = end;
+                }
+                assert_eq!(summary.rounds, max_rounds as u64);
+            }
+        });
+    }
+
+    #[test]
+    fn fold_rounds_values() {
+        assert_eq!(fold_rounds(1), 0);
+        assert_eq!(fold_rounds(2), 1);
+        assert_eq!(fold_rounds(3), 2);
+        assert_eq!(fold_rounds(4), 2);
+        assert_eq!(fold_rounds(5), 3);
+        assert_eq!(fold_rounds(1024), 10);
+        assert_eq!(fold_rounds(1025), 11);
+    }
+
+    /// A single-operand reduction is a no-op: zero rounds, no movement,
+    /// untouched stats, the operand itself as the result.
+    #[test]
+    fn reduce_single_row_is_noop() {
+        use crate::ap::LutKernel;
+        let radix = Radix::TERNARY;
+        let values = vec![Word::from_u128(17, 4, radix)];
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let kernel = LutKernel::compile(&lut, ExecMode::Blocked);
+        let (storage, layout) = load_reduce_operands(StorageKind::Scalar, radix, &values);
+        let mut ap = Ap::with_storage(storage);
+        let (stats, summary) =
+            reduce_vectors(&mut ap, &layout, &lut, ExecMode::Blocked, &kernel, &[1], &[1]);
+        assert_eq!(summary, ReduceSummary { rounds: 0, rows_moved: 0 });
+        assert_eq!(stats[0], crate::ap::ApStats::default());
+        let out = extract_reduced(ap.storage(), &layout, &[1]);
+        assert_eq!(out[0].0.to_u128(), 17);
+        assert_eq!(out[0].1, 0);
+    }
+
+    /// ⌈log₂ N⌉ rounds move exactly N−1 rows in total for a single
+    /// segment (every operand folds in exactly once).
+    #[test]
+    fn reduce_moves_each_operand_once() {
+        use crate::ap::LutKernel;
+        let radix = Radix::TERNARY;
+        for rows in [2usize, 3, 64, 65, 100] {
+            let mut rng = Rng::new(rows as u64);
+            let values = random_words(&mut rng, rows, 6, radix);
+            let lut = adder_lut(radix, ExecMode::Blocked);
+            let kernel = LutKernel::compile(&lut, ExecMode::Blocked);
+            let (storage, layout) = load_reduce_operands(StorageKind::BitSliced, radix, &values);
+            let mut ap = Ap::with_storage(storage);
+            let (_, summary) = reduce_vectors(
+                &mut ap,
+                &layout,
+                &lut,
+                ExecMode::Blocked,
+                &kernel,
+                &[rows],
+                &[rows],
+            );
+            assert_eq!(summary.rounds, fold_rounds(rows) as u64, "rows={rows}");
+            assert_eq!(summary.rows_moved, (rows - 1) as u64, "rows={rows}");
+        }
     }
 
     /// mac4 LUT shape sanity: 81 ternary states, 24 noAction.

@@ -96,6 +96,45 @@ impl CamArray {
         self.data[row * self.cols..(row + 1) * self.cols].copy_from_slice(digits);
     }
 
+    /// Row-block copy: the digits of rows `src_row..src_row + count` of
+    /// column `src_col` are copied onto rows `dst_row..` of column
+    /// `dst_col` — the scalar fallback of the plane-native
+    /// [`super::BitSlicedArray::copy_rows`] (memmove semantics for
+    /// overlapping same-column ranges). Initialisation-path mutation, not
+    /// a counted write cycle.
+    pub fn copy_rows(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+    ) {
+        assert!(src_col < self.cols && dst_col < self.cols);
+        assert!(src_row + count <= self.rows && dst_row + count <= self.rows);
+        let step = |i: usize| {
+            let v = self.data[(src_row + i) * self.cols + src_col];
+            self.data[(dst_row + i) * self.cols + dst_col] = v;
+        };
+        // iterate away from the overlap so original source digits are read
+        if dst_row <= src_row {
+            (0..count).for_each(step);
+        } else {
+            (0..count).rev().for_each(step);
+        }
+    }
+
+    /// Constant fill of rows `start..start + count` of `col` — scalar
+    /// fallback of [`super::BitSlicedArray::fill_rows`].
+    pub fn fill_rows(&mut self, col: usize, start: usize, count: usize, digit: u8) {
+        assert!(col < self.cols);
+        assert!(start + count <= self.rows);
+        assert!(self.radix.valid(digit));
+        for r in start..start + count {
+            self.data[r * self.cols + col] = digit;
+        }
+    }
+
     /// Parallel masked compare (§II-C.1): key digit `keys[i]` is compared
     /// in column `cols[i]` for every row. Don't-care stored values match
     /// any key; a `DONT_CARE` key matches anything (decoder emits all-low

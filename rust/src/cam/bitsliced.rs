@@ -51,6 +51,80 @@ fn bits_needed(x: usize) -> usize {
     (usize::BITS - x.leading_zeros()) as usize
 }
 
+/// Extract `count` bits of `words` starting at bit `start` into `out`,
+/// packed from bit 0 (`out` is resized/zeroed here so callers can reuse a
+/// scratch buffer). One of the two word-shift halves of the plane-native
+/// row-movement primitive [`BitSlicedArray::copy_rows`].
+fn extract_bit_range(words: &[u64], start: usize, count: usize, out: &mut Vec<u64>) {
+    let nwords = (count + 63) / 64;
+    out.clear();
+    out.resize(nwords, 0);
+    let off = start & 63;
+    let base = start >> 6;
+    for (w, slot) in out.iter_mut().enumerate() {
+        let lo = words.get(base + w).copied().unwrap_or(0) >> off;
+        let hi = if off != 0 {
+            words.get(base + w + 1).copied().unwrap_or(0) << (64 - off)
+        } else {
+            0
+        };
+        *slot = lo | hi;
+    }
+    let tail = count & 63;
+    if tail != 0 {
+        out[nwords - 1] &= (1u64 << tail) - 1;
+    }
+}
+
+/// Merge `count` bits of `src` (packed from bit 0) into `words` starting
+/// at bit `start`, preserving every bit outside the range — the write half
+/// of [`BitSlicedArray::copy_rows`].
+fn merge_bit_range(words: &mut [u64], start: usize, count: usize, src: &[u64]) {
+    if count == 0 {
+        return;
+    }
+    let off = start & 63;
+    let base = start >> 6;
+    let total = off + count; // window size in bits, from word `base`'s bit 0
+    let nwords = (total + 63) / 64;
+    for w in 0..nwords {
+        // window word w of `src` shifted left by `off`
+        let cur = src.get(w).copied().unwrap_or(0);
+        let exp = if off == 0 {
+            cur
+        } else {
+            let prev = if w == 0 { 0 } else { src[w - 1] };
+            (cur << off) | (prev >> (64 - off))
+        };
+        let lo_bit = w * 64;
+        let hi = (total - lo_bit).min(64);
+        let lo = off.saturating_sub(lo_bit);
+        let mask = if hi - lo == 64 { !0u64 } else { ((1u64 << (hi - lo)) - 1) << lo };
+        let slot = &mut words[base + w];
+        *slot = (*slot & !mask) | (exp & mask);
+    }
+}
+
+/// Set (`value == true`) or clear `count` bits of `words` starting at bit
+/// `start` — the constant-fill counterpart of the row-movement copy.
+fn set_bit_range(words: &mut [u64], start: usize, count: usize, value: bool) {
+    if count == 0 {
+        return;
+    }
+    let end = start + count;
+    let (fw, lw) = (start >> 6, (end - 1) >> 6);
+    for w in fw..=lw {
+        let lo = if w == fw { start & 63 } else { 0 };
+        let hi = if w == lw { ((end - 1) & 63) + 1 } else { 64 };
+        let mask = if hi - lo == 64 { !0u64 } else { ((1u64 << (hi - lo)) - 1) << lo };
+        if value {
+            words[w] |= mask;
+        } else {
+            words[w] &= !mask;
+        }
+    }
+}
+
 /// Population count of rows `start..end` within packed 64-row mask words —
 /// the masked-popcount primitive behind per-segment statistics at segment
 /// boundaries that land mid-word.
@@ -685,6 +759,62 @@ impl BitSlicedArray {
             }
         }
     }
+
+    /// Plane-native row-block copy — the row-movement primitive behind
+    /// in-engine tree reduction ([`crate::ap::reduce_vectors`]): the
+    /// digits of rows `src_row..src_row + count` of column `src_col` are
+    /// copied onto rows `dst_row..dst_row + count` of column `dst_col`
+    /// with **word-level shifts** — per plane, one extract pass aligns the
+    /// source bit range to bit 0 and one merge pass commits it under the
+    /// destination range mask (64 rows per word op, arbitrary mid-word
+    /// offsets). Don't-care rows copy as don't-care (the present plane
+    /// moves with the digit planes).
+    ///
+    /// Memmove semantics: overlapping same-column ranges copy the original
+    /// source bits. Like `set`/`load_row` this is an initialisation-path
+    /// mutation, not a counted write cycle — callers meter movement
+    /// separately (e.g. [`crate::coordinator::Metrics::reduce_rows_moved`]).
+    pub fn copy_rows(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+    ) {
+        assert!(src_col < self.cols && dst_col < self.cols);
+        assert!(src_row + count <= self.rows && dst_row + count <= self.rows);
+        if count == 0 || (src_col == dst_col && src_row == dst_row) {
+            return;
+        }
+        let mut scratch = Vec::new();
+        for p in 0..self.planes {
+            let sb = self.plane_base(src_col, p);
+            extract_bit_range(&self.digit_planes[sb..sb + self.words], src_row, count, &mut scratch);
+            let db = self.plane_base(dst_col, p);
+            merge_bit_range(&mut self.digit_planes[db..db + self.words], dst_row, count, &scratch);
+        }
+        let sb = self.present_base(src_col);
+        extract_bit_range(&self.present[sb..sb + self.words], src_row, count, &mut scratch);
+        let db = self.present_base(dst_col);
+        merge_bit_range(&mut self.present[db..db + self.words], dst_row, count, &scratch);
+    }
+
+    /// Plane-native constant fill: rows `start..start + count` of `col`
+    /// all get `digit` (or don't-care), one range-masked word op per
+    /// plane. Initialisation-path mutation like [`Self::copy_rows`].
+    pub fn fill_rows(&mut self, col: usize, start: usize, count: usize, digit: u8) {
+        assert!(col < self.cols);
+        assert!(start + count <= self.rows);
+        assert!(self.radix.valid(digit));
+        let pb = self.present_base(col);
+        set_bit_range(&mut self.present[pb..pb + self.words], start, count, digit != DONT_CARE);
+        for p in 0..self.planes {
+            let b = self.plane_base(col, p);
+            let bit = digit != DONT_CARE && (digit >> p) & 1 == 1;
+            set_bit_range(&mut self.digit_planes[b..b + self.words], start, count, bit);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -929,6 +1059,102 @@ mod tests {
         assert!(plan.plane_states(1, 1).is_empty());
         let empty = StateWritePlan::new(T, 2, [None, None]);
         assert!(!empty.writes_anything());
+    }
+
+    /// Word-shift row movement equals a per-cell scalar copy/fill, for
+    /// random (possibly overlapping, possibly same-column) ranges, radices
+    /// 2–5, and row counts straddling 64-row word boundaries.
+    #[test]
+    fn copy_and_fill_rows_match_scalar_model() {
+        forall(Config::cases(150), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4)); // 2..=5
+            let rows = [1, 3, 63, 64, 65, 127, 128, 129, 200, 1 + rng.index(300)][rng.index(10)];
+            let cols = 2 + rng.index(3);
+            let mut data = vec![0u8; rows * cols];
+            for d in data.iter_mut() {
+                *d = if rng.chance(0.1) { DONT_CARE } else { rng.digit(radix.n()) };
+            }
+            let mut a = BitSlicedArray::from_data(radix, rows, cols, &data);
+            let mut model = data.clone();
+            for _ in 0..4 {
+                if rng.chance(0.5) {
+                    // copy: random columns (may coincide) + ranges (may overlap)
+                    let count = rng.index(rows + 1);
+                    let src_col = rng.index(cols);
+                    let dst_col = rng.index(cols);
+                    let src = rng.index(rows - count + 1);
+                    let dst = rng.index(rows - count + 1);
+                    a.copy_rows(src_col, src, dst_col, dst, count);
+                    let vals: Vec<u8> =
+                        (0..count).map(|i| model[(src + i) * cols + src_col]).collect();
+                    for (i, v) in vals.into_iter().enumerate() {
+                        model[(dst + i) * cols + dst_col] = v;
+                    }
+                } else {
+                    let count = rng.index(rows + 1);
+                    let col = rng.index(cols);
+                    let start = rng.index(rows - count + 1);
+                    let digit =
+                        if rng.chance(0.2) { DONT_CARE } else { rng.digit(radix.n()) };
+                    a.fill_rows(col, start, count, digit);
+                    for r in start..start + count {
+                        model[r * cols + col] = digit;
+                    }
+                }
+                assert_eq!(a.to_digits(), model);
+            }
+        });
+    }
+
+    /// Bit-range helper edges: full-word spans, mid-word offsets, and the
+    /// 64-bit mask boundary.
+    #[test]
+    fn bit_range_helpers_edges() {
+        let mut out = Vec::new();
+        extract_bit_range(&[!0u64, 0, !0u64], 60, 10, &mut out);
+        assert_eq!(out, vec![0b1111]); // bits 60..64 set, 64..70 clear
+        extract_bit_range(&[!0u64, 0b1, 0], 64, 64, &mut out);
+        assert_eq!(out, vec![0b1]);
+        extract_bit_range(&[0, !0u64], 63, 65, &mut out);
+        assert_eq!(out, vec![!0u64 << 1, 1]);
+
+        let mut words = [0u64; 2];
+        merge_bit_range(&mut words, 62, 4, &[0b1111]);
+        assert_eq!(words, [0b11 << 62, 0b11]);
+        let mut words = [!0u64; 2];
+        merge_bit_range(&mut words, 1, 64, &[0u64]);
+        assert_eq!(words, [1, !0u64 << 1]);
+
+        let mut words = [0u64; 2];
+        set_bit_range(&mut words, 63, 2, true);
+        assert_eq!(words, [1 << 63, 1]);
+        set_bit_range(&mut words, 0, 128, true);
+        assert_eq!(words, [!0u64, !0u64]);
+        set_bit_range(&mut words, 64, 64, false);
+        assert_eq!(words, [!0u64, 0]);
+    }
+
+    #[test]
+    fn copy_rows_moves_dont_care_and_is_memmove() {
+        let mut a = BitSlicedArray::from_data(
+            T,
+            4,
+            2,
+            &[
+                0, 1, //
+                DONT_CARE, 2, //
+                1, 0, //
+                2, 1,
+            ],
+        );
+        // cross-column copy carries the don't-care state
+        a.copy_rows(0, 0, 1, 0, 3);
+        assert_eq!(a.row_digits(1), vec![DONT_CARE, DONT_CARE]);
+        assert_eq!(a.row_digits(2), vec![1, 1]);
+        // overlapping same-column copy reads the original source rows
+        let mut b = BitSlicedArray::from_data(T, 4, 1, &[0, 1, 2, 0]);
+        b.copy_rows(0, 0, 0, 1, 3);
+        assert_eq!(b.to_digits(), vec![0, 0, 1, 2]);
     }
 
     #[test]

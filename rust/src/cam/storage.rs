@@ -167,6 +167,38 @@ impl CamStorage {
         }
     }
 
+    /// Row-block copy (the row-movement primitive behind in-engine tree
+    /// reduction): rows `src_row..src_row + count` of `src_col` are copied
+    /// onto rows `dst_row..` of `dst_col`, with memmove semantics for
+    /// overlapping same-column ranges. The bit-sliced backend moves whole
+    /// 64-row plane words with shifts
+    /// ([`BitSlicedArray::copy_rows`]); the scalar backend copies cell by
+    /// cell. Initialisation-path mutation, not a counted write cycle —
+    /// the coordinator meters movement separately
+    /// ([`crate::coordinator::Metrics::reduce_rows_moved`]).
+    pub fn copy_rows(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+    ) {
+        match self {
+            CamStorage::Scalar(a) => a.copy_rows(src_col, src_row, dst_col, dst_row, count),
+            CamStorage::BitSliced(a) => a.copy_rows(src_col, src_row, dst_col, dst_row, count),
+        }
+    }
+
+    /// Constant fill of rows `start..start + count` of `col` — see
+    /// [`BitSlicedArray::fill_rows`].
+    pub fn fill_rows(&mut self, col: usize, start: usize, count: usize, digit: u8) {
+        match self {
+            CamStorage::Scalar(a) => a.fill_rows(col, start, count, digit),
+            CamStorage::BitSliced(a) => a.fill_rows(col, start, count, digit),
+        }
+    }
+
     /// Parallel masked compare — see [`CamArray::compare`].
     pub fn compare(&self, cols: &[usize], keys: &[u8]) -> CompareOutcome {
         match self {
@@ -320,6 +352,39 @@ mod tests {
             s1.merge_write_states(&cols, &masks, &plan);
             s2.merge_write_states(&cols, &masks, &plan);
             assert_eq!(s1.to_digits(), s2.to_digits(), "merge diverged");
+        });
+    }
+
+    /// Row movement is observably identical across the two backends:
+    /// same copies, same fills, same resulting digits — for random ranges
+    /// straddling 64-row word boundaries.
+    #[test]
+    fn row_movement_agrees_across_kinds() {
+        use crate::util::prop::{forall, Config};
+        use crate::util::Rng;
+        forall(Config::cases(80), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let rows = [1, 63, 64, 65, 129, 1 + rng.index(200)][rng.index(6)];
+            let cols = 3;
+            let mut data = vec![0u8; rows * cols];
+            rng.fill_digits(&mut data, radix.n());
+            let mut s1 = CamStorage::from_data(StorageKind::Scalar, radix, rows, cols, &data);
+            let mut s2 = CamStorage::from_data(StorageKind::BitSliced, radix, rows, cols, &data);
+            for _ in 0..3 {
+                let count = rng.index(rows + 1);
+                let (sc, dc) = (rng.index(cols), rng.index(cols));
+                let (sr, dr) =
+                    (rng.index(rows - count + 1), rng.index(rows - count + 1));
+                s1.copy_rows(sc, sr, dc, dr, count);
+                s2.copy_rows(sc, sr, dc, dr, count);
+                let fill = rng.index(rows + 1);
+                let at = rng.index(rows - fill + 1);
+                let digit = rng.digit(radix.n());
+                let col = rng.index(cols);
+                s1.fill_rows(col, at, fill, digit);
+                s2.fill_rows(col, at, fill, digit);
+            }
+            assert_eq!(s1.to_digits(), s2.to_digits());
         });
     }
 

@@ -8,10 +8,10 @@
 
 use super::batcher::Tile;
 use super::job::OpKind;
-use crate::ap::{Ap, ApStats, ExecMode, KernelCache};
+use crate::ap::{Ap, ApStats, ExecMode, KernelCache, ReduceSummary};
 use crate::cam::{CamStorage, StorageKind};
 use crate::lutgen::Lut;
-use crate::mvl::Radix;
+use crate::mvl::{Radix, Word};
 use crate::runtime::artifact::ArtifactMode;
 use crate::runtime::{PjrtRuntime, Registry};
 use std::sync::Arc;
@@ -42,6 +42,11 @@ impl std::str::FromStr for BackendKind {
         }
     }
 }
+
+/// What [`Backend::run_reduce`] returns: per-segment `(sum, final
+/// carry)` values, per-stat-segment statistics, and the round/movement
+/// summary.
+pub type ReduceOutput = (Vec<(Word, u8)>, Vec<ApStats>, ReduceSummary);
 
 /// A tile executor.
 ///
@@ -103,6 +108,38 @@ pub trait Backend {
         let _ = (op, radix, blocked, lut, tile, bounds);
         anyhow::bail!(
             "backend '{}' does not support segment-attributed execution",
+            self.name()
+        )
+    }
+
+    /// Does this backend implement [`Backend::run_reduce`]? The engine
+    /// only routes [`OpKind::Reduce`] jobs to backends that do.
+    fn supports_reduce(&self) -> bool {
+        false
+    }
+
+    /// Execute an in-engine segmented tree reduction
+    /// ([`crate::ap::reduce_vectors`]): `values` (one operand per row)
+    /// fold down to one sum per segment of `seg_bounds`, entirely inside
+    /// one array — no host round-trips between the ⌈log₂ N⌉ rounds.
+    ///
+    /// `stat_bounds` attribute statistics (they must be a subset of the
+    /// segment boundaries; the engine passes job boundaries so coalesced
+    /// reduce jobs split stats back out exactly). Returns per-segment
+    /// (sum, final carry) pairs, per-stat-segment statistics, and the
+    /// round/row-movement summary.
+    fn run_reduce(
+        &mut self,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        values: &[Word],
+        seg_bounds: &[usize],
+        stat_bounds: &[usize],
+    ) -> anyhow::Result<ReduceOutput> {
+        let _ = (radix, blocked, lut, values, seg_bounds, stat_bounds);
+        anyhow::bail!(
+            "backend '{}' does not support in-engine reduction (native backends only)",
             self.name()
         )
     }
@@ -252,6 +289,33 @@ impl Backend for NativeBackend {
             &kernel,
         );
         Ok((ap.storage().to_digits(), segments))
+    }
+
+    fn supports_reduce(&self) -> bool {
+        true
+    }
+
+    fn run_reduce(
+        &mut self,
+        radix: Radix,
+        blocked: bool,
+        lut: &Lut,
+        values: &[Word],
+        seg_bounds: &[usize],
+        stat_bounds: &[usize],
+    ) -> anyhow::Result<ReduceOutput> {
+        use crate::ap::{extract_reduced, load_reduce_operands, reduce_vectors};
+        let mode = Self::mode_of(blocked);
+        let kernel = self.kernel(lut, mode);
+        // One array sized to the workload — reduction couples rows, so it
+        // is not tiled; the fold happens in place across all rounds with
+        // the cached adder kernel.
+        let (storage, layout) = load_reduce_operands(self.storage, radix, values);
+        let mut ap = Ap::with_storage(storage);
+        let (stats, summary) =
+            reduce_vectors(&mut ap, &layout, lut, mode, &kernel, seg_bounds, stat_bounds);
+        let results = extract_reduced(ap.storage(), &layout, seg_bounds);
+        Ok((results, stats, summary))
     }
 }
 
@@ -450,6 +514,7 @@ mod tests {
         }
         let mut d = Dummy;
         assert!(!d.supports_coalescing());
+        assert!(!d.supports_reduce());
         let radix = Radix::TERNARY;
         let a = vec![Word::from_u128(1, 2, radix)];
         let b = vec![Word::from_u128(2, 2, radix)];
@@ -459,6 +524,48 @@ mod tests {
             .run_tile_segmented(OpKind::Add, radix, true, &lut, &tiles[0], &[2])
             .unwrap_err();
         assert!(format!("{err}").contains("dummy"));
+        let err = d
+            .run_reduce(radix, true, &lut, &a, &[1], &[1])
+            .unwrap_err();
+        assert!(format!("{err}").contains("in-engine reduction"));
+    }
+
+    /// In-engine reduction: both native storages agree on values, stats,
+    /// and summary; values equal the integer reference; the kernel cache
+    /// serves every round from one compilation.
+    #[test]
+    fn run_reduce_native_backends_agree() {
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(91);
+        let p = 8;
+        let rows = 130; // straddles two 64-row word boundaries
+        let values: Vec<Word> =
+            (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let seg_bounds = [40usize, 41, 130];
+        let mut outs = Vec::new();
+        for storage in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut be = NativeBackend::new(storage);
+            assert!(be.supports_reduce());
+            let out = be
+                .run_reduce(radix, true, &lut, &values, &seg_bounds, &seg_bounds)
+                .unwrap();
+            assert_eq!(be.take_kernel_events(), (0, 1), "one kernel compile total");
+            outs.push(out);
+        }
+        let (v1, s1, sum1) = &outs[0];
+        let (v2, s2, sum2) = &outs[1];
+        assert_eq!(v1, v2);
+        assert_eq!(s1, s2);
+        assert_eq!(sum1, sum2);
+        assert_eq!(sum1.rounds, 7); // ⌈log₂ 89⌉
+        let modulus = 3u128.pow(p as u32);
+        let mut start = 0usize;
+        for (s, &end) in seg_bounds.iter().enumerate() {
+            let expect = values[start..end].iter().map(|w| w.to_u128()).sum::<u128>() % modulus;
+            assert_eq!(v1[s].0.to_u128(), expect, "segment {s}");
+            start = end;
+        }
     }
 
     /// Tiles sharing a LUT program compile its kernel once: the first

@@ -29,6 +29,12 @@ pub struct JobSignature {
     pub blocked: bool,
     /// Digits per operand (tile column geometry).
     pub digits: usize,
+    /// Lockstep pairwise-fold rounds ([`OpKind::Reduce`] jobs; 0 for
+    /// element-wise ops). Reduce jobs execute their rounds in lockstep
+    /// when coalesced, so only jobs with identical round structure may
+    /// share an array — that is what keeps coalesced per-job statistics
+    /// exactly equal to solo runs.
+    pub fold_rounds: u32,
 }
 
 impl JobSignature {
@@ -39,6 +45,7 @@ impl JobSignature {
             radix: job.radix,
             blocked: job.blocked,
             digits: job.digits(),
+            fold_rounds: job.fold_rounds(),
         }
     }
 

@@ -57,9 +57,12 @@ impl VectorEngine {
 
     /// Get or build the LUT for (op, radix, blocked).
     pub fn lut(&mut self, op: OpKind, radix: Radix, blocked: bool) -> &Lut {
+        // a reduction's fold kernel is the full adder — share its entry
+        // so Add and Reduce workloads compile the LUT once
+        let op = if op == OpKind::Reduce { OpKind::Add } else { op };
         self.luts.entry((op, radix.n(), blocked)).or_insert_with(|| {
             let table = match op {
-                OpKind::Add => full_add(radix),
+                OpKind::Add | OpKind::Reduce => full_add(radix),
                 OpKind::Sub => full_sub(radix),
                 OpKind::Mac => mac_digit(radix),
             };
@@ -73,7 +76,13 @@ impl VectorEngine {
     }
 
     /// Execute a job: tile, dispatch, reassemble, price.
+    /// [`OpKind::Reduce`] jobs route to the in-engine reduction path
+    /// ([`Self::execute_reduce`]) — one array, no tiling.
     pub fn execute(&mut self, job: &Job) -> anyhow::Result<JobResult> {
+        if job.op == OpKind::Reduce {
+            let mut results = self.execute_reduce(std::slice::from_ref(job))?;
+            return Ok(results.pop().expect("one result per job"));
+        }
         let started = std::time::Instant::now();
         let digits = job.digits();
         let tile_rows = self
@@ -152,6 +161,18 @@ impl VectorEngine {
         }
         let sig = JobSignature::of(&jobs[0]);
         let uniform = jobs.iter().all(|j| JobSignature::of(j) == sig);
+        if uniform && sig.op == OpKind::Reduce {
+            if self.backend.supports_reduce() {
+                // same signature ⇒ same fold-round structure ⇒ the jobs
+                // fold in lockstep inside one shared array, with per-job
+                // stats attributed at the job boundaries
+                return self.execute_reduce(jobs);
+            }
+            // backends without run_reduce must not reach the tile
+            // assembler (reduce jobs have no B operands): dispatch solo
+            // so each job gets run_reduce's clean unsupported error
+            return jobs.iter().map(|j| self.execute(j)).collect();
+        }
         if jobs.len() == 1 || !uniform || !self.backend.supports_coalescing() {
             return jobs.iter().map(|j| self.execute(j)).collect();
         }
@@ -213,6 +234,83 @@ impl VectorEngine {
                 delay_cycles: delay,
                 elapsed: share,
                 tiles: per_tiles[i],
+            });
+        }
+        Ok(out)
+    }
+
+    /// Execute one or more same-signature [`OpKind::Reduce`] jobs as one
+    /// in-engine segmented tree reduction: every job's operands share a
+    /// single array (no tiling — reduction couples rows), all segments
+    /// fold in lockstep over `⌈log₂ N⌉` rounds with the cached adder
+    /// kernel, and row movement between rounds happens inside the backend
+    /// ([`Backend::run_reduce`]) — the host never sees a partial sum.
+    ///
+    /// Per-job `values` hold one `(sum mod radix^p, final carry)` pair per
+    /// segment. Statistics are attributed at job boundaries and equal a
+    /// solo run exactly (jobs only share a signature when their fold-round
+    /// structure matches, so lockstep adds no extra rounds to anyone).
+    /// Modeled delay is `rounds ×` the adder program's delay; row movement
+    /// is metered as [`Metrics::reduce_rows_moved`] but priced at zero
+    /// (the energy model covers compare/write cycles only).
+    fn execute_reduce(&mut self, jobs: &[Job]) -> anyhow::Result<Vec<JobResult>> {
+        let started = std::time::Instant::now();
+        let sig = JobSignature::of(&jobs[0]);
+        debug_assert!(jobs.iter().all(|j| JobSignature::of(j) == sig));
+        let digits = sig.digits;
+        let lut = self.lut(OpKind::Reduce, sig.radix, sig.blocked).clone();
+        // concatenate operands; collect segment bounds (fold granularity)
+        // and job bounds (stats attribution)
+        let mut values = Vec::with_capacity(jobs.iter().map(|j| j.rows()).sum());
+        let mut seg_bounds = Vec::new();
+        let mut job_bounds = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let base = values.len();
+            values.extend_from_slice(&job.a);
+            seg_bounds.extend(job.segments().iter().map(|&end| base + end));
+            job_bounds.push(values.len());
+        }
+        let (seg_values, job_stats, summary) = self.backend.run_reduce(
+            sig.radix,
+            sig.blocked,
+            &lut,
+            &values,
+            &seg_bounds,
+            &job_bounds,
+        )?;
+        let elapsed = started.elapsed();
+        let total_rows = values.len();
+        // the reduce array is sized to the workload: one "tile", 100% fill
+        self.metrics.record_tiles(1, total_rows, total_rows);
+        self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.reduce_rounds += summary.rounds;
+        self.metrics.reduce_rows_moved += summary.rows_moved;
+        if jobs.len() == 1 {
+            self.metrics.solo_jobs += 1;
+        } else {
+            self.metrics.coalesced_jobs += jobs.len() as u64;
+            self.metrics.batches += 1;
+        }
+        let model = if sig.radix.n() == 2 { &self.energy_binary } else { &self.energy_ternary };
+        let delay = summary.rounds * delay_cycles(OpShape::of(&lut, digits), DelayScheme::Traditional);
+        let mut out = Vec::with_capacity(jobs.len());
+        let mut seg_at = 0usize;
+        for (i, job) in jobs.iter().enumerate() {
+            let nsegs = job.segments().len();
+            let job_values = seg_values[seg_at..seg_at + nsegs].to_vec();
+            seg_at += nsegs;
+            let stats = job_stats[i].clone();
+            let energy = model.price(&stats);
+            let share = elapsed.mul_f64(job.rows() as f64 / total_rows as f64);
+            self.metrics.record(job.rows(), digits, &energy, share);
+            out.push(JobResult {
+                id: job.id,
+                values: job_values,
+                stats,
+                energy,
+                delay_cycles: delay,
+                elapsed: share,
+                tiles: 1,
             });
         }
         Ok(out)
@@ -373,6 +471,114 @@ mod tests {
             co.metrics().fill_rate(),
             solo.metrics().fill_rate()
         );
+    }
+
+    /// A Reduce job through the engine: per-segment sums match the
+    /// integer reference on both storage backends; rounds and movement
+    /// land in the metrics; delay scales with the round count.
+    #[test]
+    fn reduce_job_end_to_end() {
+        use crate::cam::StorageKind;
+        use crate::util::Rng;
+        let radix = Radix::TERNARY;
+        let p = 8;
+        let rows = 300;
+        let mut rng = Rng::new(7);
+        let values: Vec<Word> =
+            (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let segments = vec![100usize, 300];
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let job = Job::reduce(3, radix, true, values.clone(), segments.clone());
+            let res = eng.execute(&job).unwrap();
+            assert_eq!(res.values.len(), 2, "one value per segment");
+            let modulus = 3u128.pow(p as u32);
+            let s0: u128 = values[..100].iter().map(|w| w.to_u128()).sum::<u128>() % modulus;
+            let s1: u128 = values[100..].iter().map(|w| w.to_u128()).sum::<u128>() % modulus;
+            assert_eq!(res.values[0].0.to_u128(), s0);
+            assert_eq!(res.values[1].0.to_u128(), s1);
+            assert_eq!(res.tiles, 1);
+            // ⌈log₂ 200⌉ = 8 lockstep rounds; modeled delay is
+            // rounds × one 8-digit adder application
+            assert_eq!(eng.metrics().reduce_rounds, 8);
+            assert_eq!(eng.metrics().reduce_rows_moved, (99 + 199) as u64);
+            assert_eq!(res.delay_cycles % 8, 0);
+            assert!(res.energy.total() > 0.0);
+            assert_eq!(eng.metrics().solo_jobs, 1);
+            // the reduce array runs exactly full
+            assert!((eng.metrics().fill_rate() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    /// Coalesced reduce jobs (same fold-round structure) are value- and
+    /// stats-exact against solo execution, on both storage backends.
+    #[test]
+    fn coalesced_reduce_equals_solo() {
+        use crate::cam::StorageKind;
+        forall(Config::cases(8), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(6);
+            let blocked = rng.chance(0.5);
+            // all jobs share rows_per_job ⇒ same ⌈log₂⌉ ⇒ same signature
+            let rows_per_job = 2 + rng.index(60);
+            let njobs = 2 + rng.index(4);
+            let jobs: Vec<Job> = (0..njobs)
+                .map(|id| {
+                    let vals: Vec<Word> = (0..rows_per_job)
+                        .map(|_| Word::from_digits(rng.number(p, 3), radix))
+                        .collect();
+                    Job::reduce(id as u64, radix, blocked, vals, vec![])
+                })
+                .collect();
+            assert!(jobs.windows(2).all(|w| w[0].signature() == w[1].signature()));
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let want: Vec<_> = jobs.iter().map(|j| solo.execute(j).unwrap()).collect();
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let got = eng.execute_coalesced(&jobs).unwrap();
+                assert_eq!(got.len(), jobs.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.id, w.id);
+                    assert_eq!(g.values, w.values, "job {} ({kind:?})", g.id);
+                    assert_eq!(g.stats, w.stats, "job {} ({kind:?})", g.id);
+                    assert_eq!(g.energy, w.energy);
+                    assert_eq!(g.delay_cycles, w.delay_cycles);
+                }
+                assert_eq!(eng.metrics().coalesced_jobs, njobs as u64);
+                assert_eq!(eng.metrics().batches, 1);
+                // lockstep: the batch executes the rounds once
+                assert_eq!(
+                    eng.metrics().reduce_rounds,
+                    crate::ap::fold_rounds(rows_per_job) as u64
+                );
+                // solo executed them once per job
+                assert_eq!(
+                    solo.metrics().reduce_rounds,
+                    njobs as u64 * crate::ap::fold_rounds(rows_per_job) as u64
+                );
+            }
+        });
+    }
+
+    /// Reduce jobs with different round structures get different
+    /// signatures, so a mixed batch falls back to (exact) solo dispatch.
+    #[test]
+    fn mixed_round_reduce_batch_runs_solo() {
+        let radix = Radix::TERNARY;
+        let mk = |id: u64, rows: usize| {
+            let vals = vec![Word::from_u128(2, 4, radix); rows];
+            Job::reduce(id, radix, true, vals, vec![])
+        };
+        let jobs = [mk(1, 8), mk(2, 20)]; // 3 vs 5 rounds
+        assert_ne!(jobs[0].signature(), jobs[1].signature());
+        let mut eng = engine();
+        let res = eng.execute_coalesced(&jobs).unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].values[0].0.to_u128(), 16);
+        assert_eq!(res[1].values[0].0.to_u128(), 40);
+        assert_eq!(eng.metrics().solo_jobs, 2);
+        assert_eq!(eng.metrics().coalesced_jobs, 0);
+        assert_eq!(eng.metrics().reduce_rounds, 3 + 5);
     }
 
     /// Mixed-signature and single-job batches fall back to solo execution

@@ -13,6 +13,12 @@ pub enum OpKind {
     Sub,
     /// B_d ← (A_d·B_d + carry) per digit (carry ripple).
     Mac,
+    /// In-engine segmented tree reduction: the job's operands (one per
+    /// row) are summed down to one value per segment inside a single
+    /// engine invocation — ⌈log₂ N⌉ pairwise-fold rounds of the adder
+    /// LUT with plane-native row movement between rounds
+    /// ([`crate::ap::reduce_vectors`]). Native backends only.
+    Reduce,
 }
 
 impl OpKind {
@@ -22,11 +28,14 @@ impl OpKind {
             OpKind::Add => "add",
             OpKind::Sub => "sub",
             OpKind::Mac => "mac",
+            OpKind::Reduce => "reduce",
         }
     }
 }
 
-/// A unit of work: one vector op over `rows()` row pairs.
+/// A unit of work: one vector op over `rows()` row pairs (element-wise
+/// ops), or one segmented reduction over `rows()` operands
+/// ([`OpKind::Reduce`], built via [`Job::reduce`]).
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: u64,
@@ -35,12 +44,19 @@ pub struct Job {
     /// Blocked (true) or non-blocked LUT program.
     pub blocked: bool,
     pub a: Vec<Word>,
+    /// Second operand vector (empty for [`OpKind::Reduce`] jobs — a
+    /// reduction's only operands are `a`).
     pub b: Vec<Word>,
+    /// Cumulative segment end offsets for [`OpKind::Reduce`] (strictly
+    /// increasing, last == rows; each segment folds to one value).
+    /// Empty for element-wise ops. Kept private so the invariants hold.
+    segments: Vec<usize>,
 }
 
 impl Job {
-    /// Build a job, validating operand geometry.
+    /// Build an element-wise job, validating operand geometry.
     pub fn new(id: u64, op: OpKind, radix: Radix, blocked: bool, a: Vec<Word>, b: Vec<Word>) -> Self {
+        assert!(op != OpKind::Reduce, "use Job::reduce for reduction jobs");
         assert_eq!(a.len(), b.len(), "operand vectors must have equal length");
         assert!(!a.is_empty(), "empty job");
         let p = a[0].width();
@@ -48,7 +64,37 @@ impl Job {
             assert_eq!(w.width(), p, "ragged operand widths");
             assert_eq!(w.radix(), radix, "operand radix mismatch");
         }
-        Job { id, op, radix, blocked, a, b }
+        Job { id, op, radix, blocked, a, b, segments: Vec::new() }
+    }
+
+    /// Build a segmented reduction job: `values` are summed down to one
+    /// result per segment. `segments` are cumulative end offsets
+    /// (strictly increasing, last must equal `values.len()`); pass an
+    /// empty vec for a single segment covering every operand.
+    pub fn reduce(
+        id: u64,
+        radix: Radix,
+        blocked: bool,
+        values: Vec<Word>,
+        segments: Vec<usize>,
+    ) -> Self {
+        assert!(!values.is_empty(), "empty job");
+        let p = values[0].width();
+        for w in &values {
+            assert_eq!(w.width(), p, "ragged operand widths");
+            assert_eq!(w.radix(), radix, "operand radix mismatch");
+        }
+        let segments = if segments.is_empty() { vec![values.len()] } else { segments };
+        assert_eq!(
+            *segments.last().unwrap(),
+            values.len(),
+            "segments must cover all rows"
+        );
+        assert!(
+            segments[0] > 0 && segments.windows(2).all(|w| w[0] < w[1]),
+            "segments must be strictly increasing (no empty segments)"
+        );
+        Job { id, op: OpKind::Reduce, radix, blocked, a: values, b: Vec::new(), segments }
     }
 
     /// Rows in the job.
@@ -59,6 +105,27 @@ impl Job {
     /// Digits per operand.
     pub fn digits(&self) -> usize {
         self.a[0].width()
+    }
+
+    /// Cumulative segment end offsets ([`OpKind::Reduce`] only; empty for
+    /// element-wise ops).
+    pub fn segments(&self) -> &[usize] {
+        &self.segments
+    }
+
+    /// Lockstep pairwise-fold rounds this job needs:
+    /// `max over segments of ⌈log₂ segment-rows⌉` for reductions, 0 for
+    /// element-wise ops. Part of the coalescing signature — reduce jobs
+    /// only share an array when their round structure matches, which is
+    /// what keeps coalesced per-job statistics exactly equal to solo runs.
+    pub fn fold_rounds(&self) -> u32 {
+        let mut start = 0usize;
+        let mut rounds = 0u32;
+        for &end in &self.segments {
+            rounds = rounds.max(crate::ap::fold_rounds(end - start));
+            start = end;
+        }
+        rounds
     }
 
     /// The job's coalescing signature: jobs sharing it can execute in the
@@ -100,6 +167,8 @@ mod tests {
         assert_eq!(j.rows(), 2);
         assert_eq!(j.digits(), 4);
         assert_eq!(j.op.tag(), "add");
+        assert!(j.segments().is_empty());
+        assert_eq!(j.fold_rounds(), 0);
         let sig = j.signature();
         assert_eq!(
             sig,
@@ -107,9 +176,45 @@ mod tests {
                 op: OpKind::Add,
                 radix: Radix::TERNARY,
                 blocked: true,
-                digits: 4
+                digits: 4,
+                fold_rounds: 0,
             }
         );
+    }
+
+    #[test]
+    fn reduce_job_geometry() {
+        let vals: Vec<Word> = (0..10).map(|v| w(v)).collect();
+        let j = Job::reduce(7, Radix::TERNARY, true, vals.clone(), vec![]);
+        assert_eq!(j.op, OpKind::Reduce);
+        assert_eq!(j.op.tag(), "reduce");
+        assert_eq!(j.rows(), 10);
+        assert_eq!(j.segments(), &[10]);
+        assert_eq!(j.fold_rounds(), 4); // ⌈log₂ 10⌉
+        // segmented: rounds follow the largest segment
+        let j = Job::reduce(8, Radix::TERNARY, true, vals, vec![3, 4, 10]);
+        assert_eq!(j.segments(), &[3, 4, 10]);
+        assert_eq!(j.fold_rounds(), 3); // ⌈log₂ 6⌉
+        assert_eq!(j.signature().fold_rounds, 3);
+        assert_eq!(j.signature().op, OpKind::Reduce);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover all rows")]
+    fn reduce_rejects_short_segments() {
+        Job::reduce(1, Radix::TERNARY, true, vec![w(1), w(2)], vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn reduce_rejects_empty_segments() {
+        Job::reduce(1, Radix::TERNARY, true, vec![w(1), w(2)], vec![1, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "use Job::reduce")]
+    fn new_rejects_reduce_op() {
+        Job::new(1, OpKind::Reduce, Radix::TERNARY, true, vec![w(5)], vec![w(1)]);
     }
 
     #[test]

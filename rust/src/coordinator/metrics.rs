@@ -32,6 +32,12 @@ pub struct Metrics {
     pub kernel_hits: u64,
     /// Kernel-cache misses (kernel compilations).
     pub kernel_misses: u64,
+    /// Lockstep pairwise-fold rounds executed by in-engine reductions
+    /// ([`super::job::OpKind::Reduce`]): `⌈log₂ N⌉` per reduce batch.
+    pub reduce_rounds: u64,
+    /// Rows moved by the plane-native row-movement primitive between
+    /// reduction rounds (each operand is moved exactly once per fold).
+    pub reduce_rows_moved: u64,
 }
 
 impl Metrics {
@@ -75,6 +81,8 @@ impl Metrics {
         self.stolen_jobs += other.stolen_jobs;
         self.kernel_hits += other.kernel_hits;
         self.kernel_misses += other.kernel_misses;
+        self.reduce_rounds += other.reduce_rounds;
+        self.reduce_rows_moved += other.reduce_rows_moved;
     }
 
     /// Row-operations per second of busy time.
@@ -102,7 +110,7 @@ impl Metrics {
         format!(
             "jobs={} ({} coalesced in {} batches, {} solo, {} stolen) rows={} digit_ops={} \
              energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}% \
-             kernels={}h/{}m",
+             kernels={}h/{}m reduce={}r/{}mv",
             self.jobs,
             self.coalesced_jobs,
             self.batches,
@@ -117,6 +125,8 @@ impl Metrics {
             100.0 * self.fill_rate(),
             self.kernel_hits,
             self.kernel_misses,
+            self.reduce_rounds,
+            self.reduce_rows_moved,
         )
     }
 }
@@ -155,13 +165,17 @@ mod tests {
         n.batches = 1;
         n.stolen_jobs = 1;
         n.record_kernel_events((5, 2));
+        n.reduce_rounds = 10;
+        n.reduce_rows_moved = 1023;
         m.merge(&n);
         assert_eq!(m.tiles, 3);
         assert!((m.fill_rate() - 556.0 / 768.0).abs() < 1e-12);
         assert_eq!(m.coalesced_jobs, 3);
         assert_eq!(m.stolen_jobs, 1);
         assert_eq!((m.kernel_hits, m.kernel_misses), (5, 2));
+        assert_eq!((m.reduce_rounds, m.reduce_rows_moved), (10, 1023));
         assert!(m.summary().contains("fill="));
         assert!(m.summary().contains("kernels=5h/2m"));
+        assert!(m.summary().contains("reduce=10r/1023mv"));
     }
 }

@@ -4,8 +4,9 @@
 //! digit-wise operation in lockstep. The coordinator turns that into a
 //! service a host application can use:
 //!
-//! * [`job`] — vector-arithmetic jobs (add/sub/mac over word vectors) and
-//!   their results (values + energy/delay/stats).
+//! * [`job`] — vector-arithmetic jobs (add/sub/mac over word vectors,
+//!   plus in-engine segmented tree reduction — [`job::OpKind::Reduce`])
+//!   and their results (values + energy/delay/stats).
 //! * [`batcher`] — tiles job rows onto fixed-size CAM arrays (the AOT
 //!   engines have static shapes), padding the tail tile with noAction
 //!   rows that provably cost nothing extra in writes.
@@ -34,10 +35,10 @@ pub mod service;
 pub mod shard;
 pub mod metrics;
 
-pub use backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+pub use backend::{Backend, BackendKind, NativeBackend, PjrtBackend, ReduceOutput};
 pub use coalesce::{JobSignature, TileAssembler, TileSegment};
 pub use engine::VectorEngine;
 pub use job::{Job, JobResult, OpKind};
 pub use metrics::Metrics;
 pub use service::EngineService;
-pub use shard::{ShardConfig, ShardedService};
+pub use shard::{BatchPolicy, ShardConfig, ShardedService};

@@ -141,6 +141,111 @@ impl ShardQueue {
     }
 }
 
+/// The pure decision core of a shard worker's batching loop: when to
+/// flush the pending batch (signature switch, size/row thresholds, the
+/// flush deadline), when stealing is permitted, and how long to wait for
+/// the next event. Extracted from the worker so the flush/steal policy is
+/// a deterministic, single-threaded state machine — property-tested
+/// against a reference model in `rust/tests/shard_policy.rs` (no Condvar
+/// races needed to cover the policy logic). The worker loop holds the
+/// actual [`Submission`]s; the policy tracks only counts, the batch
+/// signature, and the deadline clock.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    max_jobs: usize,
+    max_rows: usize,
+    flush_after: Duration,
+    jobs: usize,
+    rows: usize,
+    sig: Option<JobSignature>,
+    /// Deadline of the batch currently collecting (set at its first job).
+    deadline: Option<Instant>,
+}
+
+impl BatchPolicy {
+    /// Policy for a shard's flush thresholds.
+    pub fn new(cfg: &ShardConfig) -> Self {
+        BatchPolicy {
+            max_jobs: cfg.max_batch_jobs,
+            max_rows: cfg.max_batch_rows,
+            flush_after: cfg.flush_after,
+            jobs: 0,
+            rows: 0,
+            sig: None,
+            deadline: None,
+        }
+    }
+
+    /// Jobs in the pending batch.
+    pub fn pending_jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Rows in the pending batch.
+    pub fn pending_rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Signature of the pending batch (`None` when empty).
+    pub fn signature(&self) -> Option<JobSignature> {
+        self.sig
+    }
+
+    /// Must the pending batch flush *before* admitting a `sig` job?
+    /// True exactly on a signature switch of a non-empty batch.
+    pub fn must_flush_before(&self, sig: JobSignature) -> bool {
+        self.sig.map_or(false, |s| s != sig)
+    }
+
+    /// Admit one job into the pending batch (after any
+    /// [`Self::must_flush_before`] flush). Returns true when the batch
+    /// must flush immediately: job/row thresholds reached, or the batch
+    /// deadline (set when its first job arrived) has already passed.
+    pub fn admit(&mut self, sig: JobSignature, rows: usize, now: Instant) -> bool {
+        debug_assert!(!self.must_flush_before(sig), "flush before admitting");
+        if self.jobs == 0 {
+            self.sig = Some(sig);
+            self.deadline = Some(now + self.flush_after);
+        }
+        self.jobs += 1;
+        self.rows += rows;
+        self.jobs >= self.max_jobs
+            || self.rows >= self.max_rows
+            || self.deadline.map_or(false, |d| now >= d)
+    }
+
+    /// Should a pending partial batch flush now (deadline expired)?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        self.jobs > 0 && self.deadline.map_or(false, |d| now >= d)
+    }
+
+    /// May the worker steal from other shards? Only while nothing is
+    /// pending — stealing mid-batch would mix signatures and delay the
+    /// batch already collecting.
+    pub fn may_steal(&self) -> bool {
+        self.jobs == 0
+    }
+
+    /// How long to wait for the next queue event: until the batch
+    /// deadline while collecting, else `idle_tick` (how often an idle
+    /// shard scans for stealable work — own-queue arrivals interrupt the
+    /// wait immediately via the condvar).
+    pub fn wait(&self, now: Instant, idle_tick: Duration) -> Duration {
+        match self.deadline {
+            Some(d) if self.jobs > 0 => d.saturating_duration_since(now),
+            _ => idle_tick,
+        }
+    }
+
+    /// The pending batch was flushed; reset for the next one.
+    pub fn flushed(&mut self) {
+        self.jobs = 0;
+        self.rows = 0;
+        self.sig = None;
+        self.deadline = None;
+    }
+}
+
 /// Flush the pending batch: execute it coalesced and reply per job. The
 /// worker keeps `pending` signature-coherent (it flushes on a signature
 /// switch), and `execute_coalesced` falls back to solo execution if that
@@ -165,60 +270,48 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
 }
 
 /// One shard's worker loop: collect same-signature jobs into a pending
-/// batch, flush on the size/time policy, steal when idle.
+/// batch, flush on the [`BatchPolicy`] decisions, steal when idle.
 fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine: &mut VectorEngine) {
     let mut pending: Vec<Submission> = Vec::new();
-    let mut pending_rows = 0usize;
-    // deadline of the batch currently collecting (set at its first job)
-    let mut deadline: Option<Instant> = None;
+    let mut policy = BatchPolicy::new(&cfg);
+    // admit one submission and flush if the policy demands it
+    macro_rules! admit {
+        ($sub:expr) => {{
+            let sub = $sub;
+            let sig = JobSignature::of(&sub.job);
+            let rows = sub.job.rows();
+            pending.push(sub);
+            if policy.admit(sig, rows, Instant::now()) {
+                flush(engine, &mut pending, me);
+                policy.flushed();
+            }
+        }};
+    }
     loop {
-        let wait = match deadline {
-            Some(d) => d.saturating_duration_since(Instant::now()),
-            // Idle (no batch collecting): own-queue arrivals interrupt the
-            // wait via the condvar immediately, so this tick only gates
-            // how often an idle shard scans for stealable work — keep it
-            // an order of magnitude lazier than the flush deadline.
-            None => cfg.flush_after * 10,
-        };
+        // Idle tick: an order of magnitude lazier than the flush deadline
+        // (it only gates how often an idle shard scans for steals).
+        let wait = policy.wait(Instant::now(), cfg.flush_after * 10);
         match queues[me].pop(wait) {
             Pop::Item(sub) => {
-                if !pending.is_empty()
-                    && JobSignature::of(&sub.job) != JobSignature::of(&pending[0].job)
-                {
+                if policy.must_flush_before(JobSignature::of(&sub.job)) {
                     // signature switch: commit the old batch first
                     flush(engine, &mut pending, me);
-                    pending_rows = 0;
-                    deadline = None;
+                    policy.flushed();
                 }
-                if pending.is_empty() {
-                    deadline = Some(Instant::now() + cfg.flush_after);
-                }
-                pending_rows += sub.job.rows();
-                pending.push(sub);
-                if pending.len() >= cfg.max_batch_jobs
-                    || pending_rows >= cfg.max_batch_rows
-                    || deadline.map_or(false, |d| Instant::now() >= d)
-                {
-                    flush(engine, &mut pending, me);
-                    pending_rows = 0;
-                    deadline = None;
-                }
+                admit!(sub);
             }
             Pop::TimedOut => {
-                if deadline.map_or(false, |d| Instant::now() >= d) {
+                if policy.should_flush(Instant::now()) {
                     flush(engine, &mut pending, me);
-                    pending_rows = 0;
-                    deadline = None;
+                    policy.flushed();
                 }
-                if pending.is_empty() && cfg.steal {
+                if policy.may_steal() && cfg.steal {
                     for (i, q) in queues.iter().enumerate() {
                         if i == me {
                             continue;
                         }
                         if let Some(sub) = q.try_pop() {
-                            deadline = Some(Instant::now() + cfg.flush_after);
-                            pending_rows += sub.job.rows();
-                            pending.push(sub);
+                            admit!(sub);
                             break;
                         }
                     }
@@ -459,6 +552,106 @@ mod tests {
         let (agg, per_shard) = svc.shutdown();
         assert_eq!(agg.jobs, 0);
         assert_eq!(per_shard.len(), 4);
+    }
+
+    fn submission(rng: &mut Rng, id: u64) -> Submission {
+        let (job, _) = add_job(id, rng, 2, 3);
+        let (tx, _rx) = sync_channel(1);
+        Submission { job, home: 0, reply: tx }
+    }
+
+    /// Single-threaded ShardQueue transitions: TimedOut on empty, FIFO
+    /// item order, try_pop steal order, and the drain-before-Closed
+    /// shutdown guarantee (queued work is never dropped).
+    #[test]
+    fn shard_queue_single_threaded_transitions() {
+        let q = ShardQueue::new();
+        let tiny = Duration::from_micros(50);
+        assert!(matches!(q.pop(tiny), Pop::TimedOut));
+        assert!(q.try_pop().is_none());
+        let mut rng = Rng::new(1);
+        q.push(submission(&mut rng, 1), 4);
+        q.push(submission(&mut rng, 2), 4);
+        q.push(submission(&mut rng, 3), 4);
+        // steal (try_pop) and pop drain in FIFO order
+        assert_eq!(q.try_pop().unwrap().job.id, 1);
+        match q.pop(tiny) {
+            Pop::Item(sub) => assert_eq!(sub.job.id, 2),
+            _ => panic!("expected an item"),
+        }
+        // shutdown: the remaining item drains before Closed is reported
+        q.close();
+        match q.pop(tiny) {
+            Pop::Item(sub) => assert_eq!(sub.job.id, 3),
+            _ => panic!("items must drain before Closed"),
+        }
+        assert!(matches!(q.pop(tiny), Pop::Closed));
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "submit after shutdown")]
+    fn shard_queue_rejects_push_after_close() {
+        let q = ShardQueue::new();
+        q.close();
+        let mut rng = Rng::new(2);
+        q.push(submission(&mut rng, 1), 4);
+    }
+
+    /// BatchPolicy transitions on a synthetic clock: thresholds, deadline
+    /// expiry, signature switches, steal gating, and wait durations —
+    /// fully deterministic (the model-checking property sweep lives in
+    /// rust/tests/shard_policy.rs).
+    #[test]
+    fn batch_policy_transitions() {
+        let cfg = ShardConfig {
+            max_batch_jobs: 3,
+            max_batch_rows: 100,
+            flush_after: Duration::from_millis(10),
+            ..ShardConfig::default()
+        };
+        let mut p = BatchPolicy::new(&cfg);
+        let t0 = Instant::now();
+        let sig_a = JobSignature {
+            op: OpKind::Add,
+            radix: Radix::TERNARY,
+            blocked: true,
+            digits: 3,
+            fold_rounds: 0,
+        };
+        let sig_b = JobSignature { digits: 5, ..sig_a };
+
+        assert!(p.may_steal());
+        assert_eq!(p.wait(t0, Duration::from_millis(77)), Duration::from_millis(77));
+        assert!(!p.must_flush_before(sig_a));
+        assert!(!p.admit(sig_a, 10, t0), "1/3 jobs, 10/100 rows: keep collecting");
+        assert_eq!((p.pending_jobs(), p.pending_rows()), (1, 10));
+        assert_eq!(p.signature(), Some(sig_a));
+        assert!(!p.may_steal());
+        // wait shrinks toward the deadline set at the first admit
+        assert_eq!(
+            p.wait(t0 + Duration::from_millis(4), Duration::from_secs(1)),
+            Duration::from_millis(6)
+        );
+        assert!(!p.should_flush(t0 + Duration::from_millis(9)));
+        assert!(p.should_flush(t0 + Duration::from_millis(10)));
+        // signature switch forces a flush-before
+        assert!(p.must_flush_before(sig_b));
+        assert!(!p.must_flush_before(sig_a));
+        // row threshold flushes immediately
+        assert!(p.admit(sig_a, 95, t0), "105/100 rows");
+        p.flushed();
+        assert!(p.may_steal());
+        assert_eq!(p.signature(), None);
+        // job-count threshold
+        assert!(!p.admit(sig_b, 1, t0));
+        assert!(!p.admit(sig_b, 1, t0));
+        assert!(p.admit(sig_b, 1, t0), "3/3 jobs");
+        p.flushed();
+        // deadline already passed at admit time flushes immediately
+        assert!(!p.admit(sig_a, 1, t0));
+        assert!(p.admit(sig_a, 1, t0 + Duration::from_millis(10)));
+        p.flushed();
     }
 
     /// Work stealing: all jobs share one signature (one home shard), with

@@ -25,14 +25,15 @@ USAGE:
   mvap exp <table6|table7|table9|table10|table11|fig6|fig7|fig8|fig9|all>
            [--rows N] [--seed S] [--scheme traditional|optimized] [--results DIR]
   mvap lut <add|sub|mac> [--radix N] [--blocked] [--dot]
-  mvap run [--op add|sub|mac] [--rows N] [--digits P] [--radix N]
+  mvap run [--op add|sub|mac|reduce] [--rows N] [--digits P] [--radix N]
            [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
            [--blocked] [--artifacts DIR] [--seed S]
            [--shards S] [--flush-us U] [--batch-rows R] [--batch-jobs B]
            [--no-steal] [--no-coalesce]
            (--shards > 0 runs the sharded, cross-job-coalescing dispatcher;
             otherwise the worker pool coalesces each submitted batch unless
-            --no-coalesce)
+            --no-coalesce. --op reduce sums each job's rows down to one
+            value with the in-engine tree reduction — native backends only)
   mvap artifacts [--artifacts DIR]
   mvap help
 ";
@@ -112,6 +113,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "add" => OpKind::Add,
         "sub" => OpKind::Sub,
         "mac" => OpKind::Mac,
+        "reduce" => OpKind::Reduce,
         other => anyhow::bail!("unknown op '{other}'"),
     };
     let rows = args.get_parse_or("rows", 1024usize);
@@ -137,17 +139,27 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let a: Vec<Word> = (0..rows)
             .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
             .collect();
-        let b: Vec<Word> = (0..rows)
-            .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
-            .collect();
-        workload.push(Job::new(id, op, radix, blocked, a, b));
+        if op == OpKind::Reduce {
+            // one segment per job: each job folds to a single value
+            workload.push(Job::reduce(id, radix, blocked, a, vec![]));
+        } else {
+            let b: Vec<Word> = (0..rows)
+                .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+                .collect();
+            workload.push(Job::new(id, op, radix, blocked, a, b));
+        }
     }
 
     let print_result = |res: &mvap::coordinator::JobResult| {
+        // a Reduce result holds one value per segment, not per row
+        let shape = if op == OpKind::Reduce {
+            format!("{rows} rows -> {} sums", res.values.len())
+        } else {
+            format!("{} rows", res.values.len())
+        };
         println!(
-            "job {:>2}: {} rows × {} digits — energy {:.3e} J, delay {} cycles, {} tiles, {:?}",
+            "job {:>2}: {shape} × {} digits — energy {:.3e} J, delay {} cycles, {} tiles, {:?}",
             res.id,
-            res.values.len(),
             digits,
             res.energy.total(),
             res.delay_cycles,

@@ -12,9 +12,38 @@
 //!
 //! Each case gets a fresh deterministic [`Rng`] derived from the base seed
 //! and the case index; on failure the panic message includes the seed and
-//! case index so the exact case can be re-run in isolation.
+//! case index so the exact case can be re-run in isolation — set the
+//! [`SEED_ENV`] environment variable (`MVAP_PROP_SEED=0x...`, decimal also
+//! accepted) to replay exactly that case: every `forall` in the process
+//! then runs a single case with that per-case seed. `ci.sh` uses this as
+//! its fixed-seed reproduction stage.
 
 use super::rng::Rng;
+
+/// Environment variable that pins every [`forall`] to one per-case seed
+/// (the value printed as `replay: Rng::new(0x…)` in failure messages).
+pub const SEED_ENV: &str = "MVAP_PROP_SEED";
+
+/// Parse a seed string: `0x`-prefixed hex or decimal.
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// The pinned replay seed, if [`SEED_ENV`] is set. Panics (rather than
+/// silently running the full sweep) when the value does not parse —
+/// a typo'd replay must not masquerade as a clean run.
+fn env_seed() -> Option<u64> {
+    let value = std::env::var(SEED_ENV).ok()?;
+    match parse_seed(&value) {
+        Some(seed) => Some(seed),
+        None => panic!("{SEED_ENV}={value:?} is not a valid u64 seed (decimal or 0x hex)"),
+    }
+}
 
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
@@ -48,8 +77,15 @@ pub fn case_seed(base: u64, case: usize) -> u64 {
 }
 
 /// Run `f` for `cfg.cases` independent random cases. Panics (with replay
-/// info) on the first failing case.
+/// info, including the [`SEED_ENV`] incantation) on the first failing
+/// case. With [`SEED_ENV`] set, runs exactly one case with that seed.
 pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cfg: Config, f: F) {
+    if let Some(seed) = env_seed() {
+        // replay mode: one pinned case, panics propagate unwrapped
+        let mut rng = Rng::new(seed);
+        f(&mut rng);
+        return;
+    }
     for case in 0..cfg.cases {
         let seed = case_seed(cfg.seed, case);
         let result = std::panic::catch_unwind(|| {
@@ -63,7 +99,8 @@ pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cfg: Config, f: F) {
                 .or_else(|| err.downcast_ref::<&str>().copied())
                 .unwrap_or("<non-string panic>");
             panic!(
-                "property failed at case {case}/{} (replay: Rng::new({seed:#x})): {msg}",
+                "property failed at case {case}/{} (replay: Rng::new({seed:#x}), or rerun \
+                 with {SEED_ENV}={seed:#x}): {msg}",
                 cfg.cases
             );
         }
@@ -98,6 +135,9 @@ mod tests {
 
     #[test]
     fn reports_failing_case_with_seed() {
+        if std::env::var(SEED_ENV).is_ok() {
+            return; // replay mode changes the failure shape by design
+        }
         let r = std::panic::catch_unwind(|| {
             forall(Config::cases(50), |rng| {
                 let x = rng.below(10);
@@ -115,6 +155,29 @@ mod tests {
             forall_ok(Config::cases(10), |_| Err("boom".to_string()));
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn parse_seed_accepts_hex_and_decimal() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("0x2a"), Some(0x2a));
+        assert_eq!(parse_seed("0X2A"), Some(0x2a));
+        assert_eq!(parse_seed(" 0xdeadbeef "), Some(0xdeadbeef));
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed(""), None);
+    }
+
+    #[test]
+    fn failure_message_names_the_env_knob() {
+        if std::env::var(SEED_ENV).is_ok() {
+            return; // replay mode changes the failure shape by design
+        }
+        let r = std::panic::catch_unwind(|| {
+            forall(Config::cases(5), |_| panic!("boom"));
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains(SEED_ENV), "msg={msg}");
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //! with a tolerance anchored on the paper's published value.
 
 use mvap::ap::{adder_lut, ExecMode};
+use mvap::diagram::StateDiagram;
 use mvap::energy::{
     area_normalized, delay_cycles, CompareEnergy, DelayScheme, EnergyModel, OpShape,
 };
 use mvap::exp::table11;
+use mvap::func::{addc, copy_digit, mac4, TruthTable};
+use mvap::lutgen::{generate_blocked, generate_non_blocked};
 use mvap::mvl::Radix;
 
 /// Tables VII/X: the ternary full adder compiles to 21 passes, grouped
@@ -57,6 +60,42 @@ fn golden_energy_model_constants() {
     assert_eq!(b.by_class, vec![1.85e-15, 17.65e-15, 25.26e-15, 28.86e-15]);
     assert_eq!(EnergyModel::ternary_default().write_op_energy, 1e-9);
     assert_eq!(EnergyModel::binary_default().write_op_energy, 1e-9);
+}
+
+/// The multiplication LUT family (§IV-B: mac4 partial-product kernel,
+/// addc carry absorber, copy refresh — the programs behind
+/// [`mvap::ap::mul_vectors`]): state/noAction/pass counts, blocked write
+/// blocks, and cycle-breaking rewrite counts, pinned so lutgen or diagram
+/// refactors cannot silently change the compiled programs. (The adder
+/// family above was pinned in PR 2; this extends the pins to the mul
+/// family.) Pass counts are mode-invariant — blocking regroups passes,
+/// it never adds or removes them.
+#[test]
+fn golden_mul_family_lut_shapes() {
+    // (states, noAction roots, passes, blocked write blocks, rewrites)
+    let shape = |t: TruthTable| {
+        let d = StateDiagram::build(t).unwrap();
+        let nb = generate_non_blocked(&d);
+        let b = generate_blocked(&d);
+        assert_eq!(nb.passes.len(), b.passes.len(), "{}: pass count is mode-invariant", b.name);
+        assert_eq!(nb.num_groups, nb.passes.len(), "{}: non-blocked = one block per pass", nb.name);
+        (
+            d.nodes().len(),
+            d.roots().len(),
+            b.passes.len(),
+            b.num_groups,
+            d.rewrites().len(),
+        )
+    };
+    // ternary mac4: 24 of 81 states are fixed points; one (S,C) accumulator
+    // cycle is broken with a widened write; 57 passes pack into 22 blocks
+    assert_eq!(shape(mac4(Radix::TERNARY)), (81, 24, 57, 22, 1));
+    // carry absorber and column copy are cycle-free forests
+    assert_eq!(shape(addc(Radix::TERNARY)), (9, 3, 6, 4, 0));
+    assert_eq!(shape(copy_digit(Radix::TERNARY)), (9, 3, 6, 3, 0));
+    // binary and quaternary mac4 (the mul differential test radices)
+    assert_eq!(shape(mac4(Radix::BINARY)), (16, 8, 8, 5, 0));
+    assert_eq!(shape(mac4(Radix(4))), (256, 48, 208, 55, 4));
 }
 
 /// Table XI normalized areas for every width pairing, and the 6.25%

@@ -1,0 +1,248 @@
+//! Differential property tests for the in-engine segmented tree
+//! reduction (`OpKind::Reduce`): the bit-sliced plane-native path must be
+//! observably identical to the scalar path — values, per-segment
+//! statistics, and summaries — and both must match an integer reference,
+//! for radices 2–5, row counts straddling 64-row word boundaries, and
+//! segment cuts landing mid-word.
+//!
+//! Replay a failing case with `MVAP_PROP_SEED=0x… cargo test -q --test
+//! reduce_differential` (the seed is printed in the failure message);
+//! ci.sh runs a fixed-seed pass of exactly this suite as its
+//! reproduction stage.
+
+use mvap::ap::{
+    adder_lut, extract_reduced, fold_rounds, load_reduce_operands, reduce_vectors, Ap, ApStats,
+    ExecMode, LutKernel,
+};
+use mvap::cam::StorageKind;
+use mvap::coordinator::{Job, NativeBackend, VectorEngine};
+use mvap::mvl::{Radix, Word};
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+
+fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
+    (0..rows)
+        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
+        .collect()
+}
+
+/// Row counts biased toward 64-row word boundaries.
+fn boundary_rows(rng: &mut Rng) -> usize {
+    [1, 2, 63, 64, 65, 127, 128, 129, 1 + rng.index(300)][rng.index(9)]
+}
+
+/// Random strictly-increasing segment bounds over `rows` rows; cuts are
+/// uniform, so they routinely land mid-word.
+fn random_segments(rng: &mut Rng, rows: usize) -> Vec<usize> {
+    let mut bounds = Vec::new();
+    let mut at = 0usize;
+    while at < rows {
+        at += 1 + rng.index(rows - at);
+        bounds.push(at);
+    }
+    bounds
+}
+
+/// Integer reference: per-segment sums mod radix^p.
+fn reference_sums(values: &[Word], bounds: &[usize], radix: Radix, p: usize) -> Vec<u128> {
+    let modulus = (radix.n() as u128).pow(p as u32);
+    let mut out = Vec::with_capacity(bounds.len());
+    let mut start = 0usize;
+    for &end in bounds {
+        out.push(values[start..end].iter().map(|w| w.to_u128()).sum::<u128>() % modulus);
+        start = end;
+    }
+    out
+}
+
+/// The core differential: scalar vs bit-sliced `reduce_vectors` agree on
+/// values, per-segment stats, aggregate stats, and summary; values match
+/// the integer reference; rounds == ⌈log₂ max-segment⌉.
+#[test]
+fn reduce_scalar_vs_bitsliced_differential() {
+    forall(Config::cases(60), |rng| {
+        let radix = Radix(2 + rng.digit(4)); // 2..=5
+        let p = 2 + rng.index(7);
+        let rows = boundary_rows(rng);
+        let values = random_words(rng, rows, p, radix);
+        let seg_bounds = random_segments(rng, rows);
+        let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+        let lut = adder_lut(radix, mode);
+        let kernel = LutKernel::compile(&lut, mode);
+        let expect = reference_sums(&values, &seg_bounds, radix, p);
+        let want_rounds = {
+            let mut start = 0usize;
+            let mut r = 0u32;
+            for &end in &seg_bounds {
+                r = r.max(fold_rounds(end - start));
+                start = end;
+            }
+            r as u64
+        };
+
+        let mut runs = Vec::new();
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let (storage, layout) = load_reduce_operands(kind, radix, &values);
+            let mut ap = Ap::with_storage(storage);
+            let (stats, summary) =
+                reduce_vectors(&mut ap, &layout, &lut, mode, &kernel, &seg_bounds, &seg_bounds);
+            let results = extract_reduced(ap.storage(), &layout, &seg_bounds);
+            for (s, r) in results.iter().enumerate() {
+                assert_eq!(r.0.to_u128(), expect[s], "segment {s} value ({kind:?})");
+            }
+            assert_eq!(summary.rounds, want_rounds, "{kind:?}");
+            runs.push((results, stats, ap.take_stats(), summary, ap.storage().to_digits()));
+        }
+        let (v1, s1, agg1, sum1, d1) = &runs[0];
+        let (v2, s2, agg2, sum2, d2) = &runs[1];
+        assert_eq!(v1, v2, "values diverged");
+        assert_eq!(s1, s2, "per-segment stats diverged");
+        assert_eq!(agg1, agg2, "aggregate stats diverged");
+        assert_eq!(sum1, sum2, "summaries diverged");
+        assert_eq!(d1, d2, "final array contents diverged");
+        // per-segment stats sum to the aggregate's data-dependent events
+        assert!(
+            ApStats::sum_of(s1).same_events(agg1),
+            "segment stats must sum to the aggregate"
+        );
+    });
+}
+
+/// Per-segment stats equal a solo reduction of exactly that segment's
+/// operands — the attribution exactness the coalescing path relies on.
+#[test]
+fn reduce_segment_stats_match_isolated_runs() {
+    forall(Config::cases(30), |rng| {
+        let radix = Radix(2 + rng.digit(4));
+        let p = 2 + rng.index(5);
+        let rows = 2 + rng.index(150);
+        let values = random_words(rng, rows, p, radix);
+        let seg_bounds = random_segments(rng, rows);
+        let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+        let lut = adder_lut(radix, mode);
+        let kernel = LutKernel::compile(&lut, mode);
+        let kind =
+            if rng.chance(0.5) { StorageKind::Scalar } else { StorageKind::BitSliced };
+        // Rounds are lockstep across segments, so a segment equals its
+        // solo run exactly when its own round count is the batch maximum
+        // (smaller segments sit as noAction rows for the extra rounds and
+        // legitimately record more compare events than solo) — compare
+        // those segments only. This is the same invariant the coalescing
+        // signature enforces across jobs via `fold_rounds`.
+        let (storage, layout) = load_reduce_operands(kind, radix, &values);
+        let mut ap = Ap::with_storage(storage);
+        let (stats, summary) =
+            reduce_vectors(&mut ap, &layout, &lut, mode, &kernel, &seg_bounds, &seg_bounds);
+        let mut start = 0usize;
+        for (s, &end) in seg_bounds.iter().enumerate() {
+            if fold_rounds(end - start) as u64 == summary.rounds {
+                let sub = values[start..end].to_vec();
+                let (storage, layout) = load_reduce_operands(kind, radix, &sub);
+                let mut solo = Ap::with_storage(storage);
+                let (solo_stats, solo_summary) = reduce_vectors(
+                    &mut solo,
+                    &layout,
+                    &lut,
+                    mode,
+                    &kernel,
+                    &[sub.len()],
+                    &[sub.len()],
+                );
+                assert_eq!(solo_summary.rounds, summary.rounds);
+                assert_eq!(
+                    &stats[s], &solo_stats[0],
+                    "segment {s} ({start}..{end}) of {rows} rows ({kind:?})"
+                );
+            }
+            start = end;
+        }
+    });
+}
+
+/// Engine-level differential: `Job::reduce` through `VectorEngine` on
+/// both backends — identical values, stats, energy; coalesced batches of
+/// same-signature reduce jobs are exact against solo execution.
+#[test]
+fn reduce_jobs_differential_through_engine() {
+    forall(Config::cases(15), |rng| {
+        let radix = Radix(2 + rng.digit(3)); // 2..=4
+        let p = 2 + rng.index(5);
+        let blocked = rng.chance(0.5);
+        let rows = 1 + rng.index(120);
+        let njobs = 1 + rng.index(4);
+        let jobs: Vec<Job> = (0..njobs)
+            .map(|id| {
+                let values = random_words(rng, rows, p, radix);
+                let segments = random_segments(rng, rows);
+                Job::reduce(id as u64, radix, blocked, values, segments)
+            })
+            .collect();
+        // identical row counts do NOT imply identical signatures — the
+        // segment structure sets the rounds — so restrict the coalesced
+        // comparison to jobs sharing the first job's signature
+        let sig = jobs[0].signature();
+        let batch: Vec<Job> =
+            jobs.iter().filter(|j| j.signature() == sig).cloned().collect();
+
+        let mut per_backend = Vec::new();
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let want: Vec<_> = batch.iter().map(|j| solo.execute(j).unwrap()).collect();
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let got = eng.execute_coalesced(&batch).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.values, w.values, "job {} ({kind:?})", g.id);
+                assert_eq!(g.stats, w.stats, "job {} ({kind:?})", g.id);
+                assert_eq!(g.energy, w.energy);
+                assert_eq!(g.delay_cycles, w.delay_cycles);
+            }
+            // reference values
+            for (job, res) in batch.iter().zip(&got) {
+                let expect = reference_sums(&job.a, job.segments(), radix, p);
+                assert_eq!(res.values.len(), job.segments().len());
+                for (s, &e) in expect.iter().enumerate() {
+                    assert_eq!(res.values[s].0.to_u128(), e, "job {} seg {s}", job.id);
+                }
+            }
+            per_backend.push(got);
+        }
+        // cross-backend parity of the coalesced results
+        for (g1, g2) in per_backend[0].iter().zip(&per_backend[1]) {
+            assert_eq!(g1.values, g2.values);
+            assert_eq!(g1.stats, g2.stats);
+            assert_eq!(g1.energy, g2.energy);
+        }
+    });
+}
+
+/// Radix-2 ⇄ the binary AP: reduction works on the binary adder LUT too,
+/// across word-boundary row counts.
+#[test]
+fn reduce_binary_word_boundaries() {
+    for rows in [63usize, 64, 65, 128, 129] {
+        let radix = Radix::BINARY;
+        let p = 12; // the reference reduces mod 2^12, like the fold
+        let mut rng = Rng::new(rows as u64);
+        let values = random_words(&mut rng, rows, p, radix);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let kernel = LutKernel::compile(&lut, ExecMode::Blocked);
+        let expect = reference_sums(&values, &[rows], radix, p);
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let (storage, layout) = load_reduce_operands(kind, radix, &values);
+            let mut ap = Ap::with_storage(storage);
+            let (_, summary) = reduce_vectors(
+                &mut ap,
+                &layout,
+                &lut,
+                ExecMode::Blocked,
+                &kernel,
+                &[rows],
+                &[rows],
+            );
+            let out = extract_reduced(ap.storage(), &layout, &[rows]);
+            assert_eq!(out[0].0.to_u128(), expect[0], "rows={rows} {kind:?}");
+            assert_eq!(summary.rounds, fold_rounds(rows) as u64);
+            assert_eq!(summary.rows_moved, (rows - 1) as u64);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Deterministic state-machine property test of the shard batching
+//! policy ([`mvap::coordinator::BatchPolicy`]) — the flush/steal/shutdown
+//! decision core extracted from the shard worker loop so its policy logic
+//! is checkable single-threaded, in the spirit of polestar-style model
+//! checking: a random event sequence (job arrivals across signatures,
+//! clock advances, timeout ticks, close) drives both the policy and an
+//! independent reference model on a **synthetic clock**; after every
+//! event the two must agree, and the global invariants must hold:
+//!
+//! * every admitted job is flushed exactly once, in admission order;
+//! * every flushed batch is signature-coherent;
+//! * a batch never exceeds `max_batch_jobs`, and only reaches
+//!   `max_batch_rows` on its final (flushing) job;
+//! * a partial batch never outlives its deadline across a timeout tick;
+//! * stealing is permitted exactly while nothing is pending;
+//! * close flushes the remainder.
+//!
+//! No Condvars, threads, or real time involved — failures replay exactly
+//! via the printed seed (`MVAP_PROP_SEED`).
+
+use mvap::coordinator::{BatchPolicy, JobSignature, OpKind, ShardConfig};
+use mvap::mvl::Radix;
+use mvap::util::prop::{forall, Config};
+use std::time::{Duration, Instant};
+
+fn sig(digits: usize) -> JobSignature {
+    JobSignature {
+        op: OpKind::Add,
+        radix: Radix::TERNARY,
+        blocked: true,
+        digits,
+        fold_rounds: 0,
+    }
+}
+
+/// Reference model: the batching rules, restated independently.
+struct Model {
+    max_jobs: usize,
+    max_rows: usize,
+    flush_after: Duration,
+    /// (job id, rows) of the pending batch, admission order.
+    pending: Vec<(u64, usize)>,
+    pending_sig: Option<JobSignature>,
+    deadline: Option<Instant>,
+    /// Flushed batches, each a list of job ids.
+    flushed: Vec<Vec<u64>>,
+}
+
+impl Model {
+    fn flush(&mut self) {
+        if !self.pending.is_empty() {
+            self.flushed.push(self.pending.iter().map(|&(id, _)| id).collect());
+            self.pending.clear();
+            self.pending_sig = None;
+            self.deadline = None;
+        }
+    }
+}
+
+#[test]
+fn batch_policy_matches_reference_model() {
+    forall(Config::cases(300), |rng| {
+        let cfg = ShardConfig {
+            max_batch_jobs: 1 + rng.index(5),
+            max_batch_rows: 1 + rng.index(200),
+            flush_after: Duration::from_millis(1 + rng.index(20) as u64),
+            ..ShardConfig::default()
+        };
+        let mut policy = BatchPolicy::new(&cfg);
+        let mut model = Model {
+            max_jobs: cfg.max_batch_jobs,
+            max_rows: cfg.max_batch_rows,
+            flush_after: cfg.flush_after,
+            pending: Vec::new(),
+            pending_sig: None,
+            deadline: None,
+            flushed: Vec::new(),
+        };
+        // synthetic clock: a fixed origin advanced by random steps
+        let origin = Instant::now();
+        let mut clock = Duration::ZERO;
+        let mut next_id = 0u64;
+        let mut policy_flushes = 0usize;
+
+        let steps = 1 + rng.index(60);
+        for _ in 0..steps {
+            // advance the clock by 0..3·flush_after
+            clock += cfg.flush_after.mul_f64(3.0 * rng.f64());
+            let now = origin + clock;
+            match rng.index(4) {
+                // --- a job arrives -----------------------------------
+                0 | 1 => {
+                    let s = sig(3 + rng.index(3)); // 3 signatures in play
+                    let rows = 1 + rng.index(80);
+                    let id = next_id;
+                    next_id += 1;
+
+                    // model: signature switch flushes first
+                    let switch =
+                        model.pending_sig.map_or(false, |ps| ps != s);
+                    assert_eq!(
+                        policy.must_flush_before(s),
+                        switch,
+                        "flush-before divergence"
+                    );
+                    if switch {
+                        model.flush();
+                        policy_flushes += 1;
+                        policy.flushed();
+                    }
+                    if model.pending.is_empty() {
+                        model.deadline = Some(now + model.flush_after);
+                        model.pending_sig = Some(s);
+                    }
+                    model.pending.push((id, rows));
+                    let model_rows: usize =
+                        model.pending.iter().map(|&(_, r)| r).sum();
+                    let model_flush_now = model.pending.len() >= model.max_jobs
+                        || model_rows >= model.max_rows
+                        || model.deadline.map_or(false, |d| now >= d);
+
+                    let policy_flush_now = policy.admit(s, rows, now);
+                    assert_eq!(policy_flush_now, model_flush_now, "admit divergence");
+                    // a batch never exceeds the job cap
+                    assert!(model.pending.len() <= model.max_jobs);
+                    if model.pending.len() == model.max_jobs {
+                        assert!(model_flush_now, "full batches must flush");
+                    }
+                    if model_flush_now {
+                        model.flush();
+                        policy_flushes += 1;
+                        policy.flushed();
+                    }
+                }
+                // --- a timeout tick ----------------------------------
+                2 => {
+                    let model_should = !model.pending.is_empty()
+                        && model.deadline.map_or(false, |d| now >= d);
+                    assert_eq!(policy.should_flush(now), model_should, "tick divergence");
+                    if model_should {
+                        model.flush();
+                        policy_flushes += 1;
+                        policy.flushed();
+                    }
+                    // after the tick no expired partial batch survives
+                    assert!(!policy.should_flush(now));
+                }
+                // --- an idle wait computation ------------------------
+                _ => {
+                    let idle = Duration::from_millis(500);
+                    let want = match model.deadline {
+                        Some(d) if !model.pending.is_empty() => {
+                            d.saturating_duration_since(now)
+                        }
+                        _ => idle,
+                    };
+                    assert_eq!(policy.wait(now, idle), want, "wait divergence");
+                }
+            }
+            // --- continuous invariants ------------------------------
+            assert_eq!(policy.pending_jobs(), model.pending.len());
+            assert_eq!(
+                policy.pending_rows(),
+                model.pending.iter().map(|&(_, r)| r).sum::<usize>()
+            );
+            assert_eq!(policy.signature(), model.pending_sig);
+            assert_eq!(policy.may_steal(), model.pending.is_empty(), "steal gating");
+        }
+        // --- close: the remainder flushes ---------------------------
+        let had_pending = !model.pending.is_empty();
+        model.flush();
+        if had_pending {
+            policy_flushes += 1;
+            policy.flushed();
+        }
+        assert_eq!(policy.pending_jobs(), 0);
+        assert_eq!(policy_flushes, model.flushed.len());
+
+        // every admitted job flushed exactly once, in admission order
+        let flushed_ids: Vec<u64> =
+            model.flushed.iter().flatten().copied().collect();
+        assert_eq!(flushed_ids, (0..next_id).collect::<Vec<u64>>());
+        // every flushed batch respects the caps (rows may only be
+        // reached by its final job — earlier jobs would have flushed)
+        for batch in &model.flushed {
+            assert!(!batch.is_empty());
+            assert!(batch.len() <= cfg.max_batch_jobs);
+        }
+    });
+}
+
+/// The policy's deadline is sticky: it is set by the batch's *first* job
+/// and later admissions do not extend it (no starvation by a trickle of
+/// arrivals).
+#[test]
+fn deadline_is_anchored_to_the_first_job() {
+    let cfg = ShardConfig {
+        max_batch_jobs: 100,
+        max_batch_rows: 1_000_000,
+        flush_after: Duration::from_millis(10),
+        ..ShardConfig::default()
+    };
+    let mut p = BatchPolicy::new(&cfg);
+    let t0 = Instant::now();
+    assert!(!p.admit(sig(3), 1, t0));
+    for ms in [2u64, 4, 6, 8] {
+        assert!(!p.admit(sig(3), 1, t0 + Duration::from_millis(ms)));
+    }
+    // the sixth trickle arrival lands past the original deadline
+    assert!(p.admit(sig(3), 1, t0 + Duration::from_millis(10)));
+}

@@ -62,6 +62,7 @@ fn service_end_to_end_mixed_workload() {
                         })
                         .collect()
                 }
+                OpKind::Reduce => unreachable!("this sweep submits element-wise ops only"),
             };
             assert_eq!(res.values[r].0.digits(), &expect[..], "job {id} row {r} {op:?}");
         }
@@ -335,6 +336,7 @@ fn sharded_service_end_to_end_mixed_workload() {
                         })
                         .collect()
                 }
+                OpKind::Reduce => unreachable!("this sweep submits element-wise ops only"),
             };
             assert_eq!(res.values[r].0.digits(), &expect[..], "job {id} row {r} {op:?}");
         }
