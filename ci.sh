@@ -8,15 +8,16 @@
 #   1. cargo build --release        (tier-1, part 1)
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
 #   3. fixed-seed reproduction      (MVAP_PROP_SEED pins every property
-#                                    sweep of the reduce differential suite
-#                                    to one replayable case — proves the
-#                                    replay knob stays wired; any failing
-#                                    sweep prints the same knob + seed)
+#                                    sweep of the reduce and program
+#                                    differential suites to one replayable
+#                                    case — proves the replay knob stays
+#                                    wired; any failing sweep prints the
+#                                    same knob + seed)
 #   4. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
 #   5. cargo bench --no-run         (benches must keep compiling)
 #   6. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_4.json at the repo
+#                                    recorded to BENCH_5.json at the repo
 #                                    root — the perf trajectory artifact;
 #                                    FAILS LOUDLY if zero results were
 #                                    recorded, as happened to BENCH_3.json)
@@ -37,8 +38,8 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce differential suite)"
-MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential
+echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program differential suites)"
+MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test program_differential
 
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"
@@ -47,10 +48,10 @@ if [[ "$fast" == "0" ]]; then
     echo "==> cargo bench --no-run (compile gate)"
     cargo bench --no-run
 
-    echo "==> cargo bench -- --quick (recording BENCH_4.json)"
-    cargo bench --bench bench_main -- --quick --json ../BENCH_4.json hot/
-    if ! grep -q '"name":' ../BENCH_4.json; then
-        echo "ERROR: quick-bench stage recorded zero results in BENCH_4.json" >&2
+    echo "==> cargo bench -- --quick (recording BENCH_5.json)"
+    cargo bench --bench bench_main -- --quick --json ../BENCH_5.json hot/
+    if ! grep -q '"name":' ../BENCH_5.json; then
+        echo "ERROR: quick-bench stage recorded zero results in BENCH_5.json" >&2
         exit 1
     fi
 

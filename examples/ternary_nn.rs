@@ -3,36 +3,41 @@
 //!
 //! Workload: `y = W · x` for a 16×1024 ternary weight matrix and ternary
 //! activations (the §I motivation: machine-learning kernels as massively
-//! parallel digit-wise ops). Per output neuron, exactly **two jobs**:
+//! parallel digit-wise ops). The whole layer is **one compiled program**
+//! ([`mvap::program::builtin::affine_layer`]) executed as a single engine
+//! invocation:
 //!
-//!   1. **MAC job** — one AP row per input i holding `(W_ji, x_i, 0)`;
-//!      the in-place `mac` LUT computes all 1024 products in one
-//!      row-parallel op (products ≤ 4 = two trits: B + carry).
-//!   2. **Reduce job** — one in-engine segmented tree reduction
-//!      ([`mvap::coordinator::OpKind::Reduce`]): the engine folds all
-//!      1024 partial products down to the dot product in ⌈log₂ 1024⌉ = 10
-//!      pairwise rounds, moving rows between rounds with the plane-native
-//!      row-movement primitive. No partial sum ever returns to the host —
-//!      the pre-Reduce version of this example paid a full job round-trip
-//!      per pairing round (10 Add jobs per neuron, with host reshaping
-//!      between each).
+//!   1. one row-parallel MAC over all 16×1024 = 16384 `(W_ji, x_i)` rows,
+//!      **fused** with
+//!   2. one segmented tree reduction (a 1024-row segment per neuron): all
+//!      16 dot products fold in lockstep over ⌈log₂ 1024⌉ = 10 pairwise
+//!      rounds, with plane-native row movement between rounds, then
+//!   3. the (zero) bias adds onto the 16 compacted sums in place.
 //!
-//! The run verifies against an integer reference, asserts the engine
-//! executed exactly ⌈log₂ N⌉ reduction rounds per neuron, and reports the
-//! paper's headline metrics (energy vs the binary AP, delay vs the
-//! ternary CLA).
+//! No partial product or partial sum EVER returns to the host — the
+//! planner keeps every intermediate CAM-resident (asserted below via the
+//! `resident_reuses` counter). The pre-program version of this example
+//! paid a host round-trip between the MAC job and the Reduce job per
+//! neuron (32 jobs; and the pre-Reduce version before it paid one per
+//! pairing round — 10 Add jobs per neuron with host reshaping between
+//! each). This one submits exactly ONE unit of work.
+//!
+//! The run verifies against an integer reference and reports the paper's
+//! headline metrics (energy vs the binary AP, delay vs the ternary CLA).
 //!
 //! Run: `cargo run --release --example ternary_nn`
 //!      (`-- --backend native-bitsliced` for the digit-plane storage;
-//!       Reduce jobs run on the native backends — PJRT artifacts cover
+//!       programs run on the native backends — PJRT artifacts cover
 //!       element-wise ops only)
 
 use mvap::baselines::cla_model;
-use mvap::coordinator::{BackendKind, EngineService, Job, OpKind};
+use mvap::coordinator::{BackendKind, EngineService};
 use mvap::mvl::{Radix, Word};
+use mvap::program::{builtin, BoundProgram};
 use mvap::util::cli::Args;
 use mvap::util::Rng;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const INPUTS: usize = 1024;
 const OUTPUTS: usize = 16;
@@ -49,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     args.reject_unknown();
     if backend == BackendKind::Pjrt {
         anyhow::bail!(
-            "the in-engine Reduce path is native-only — use --backend native or native-bitsliced"
+            "program execution is native-only — use --backend native or native-bitsliced"
         );
     }
 
@@ -59,10 +64,9 @@ fn main() -> anyhow::Result<()> {
     let weights: Vec<Vec<u8>> = (0..OUTPUTS).map(|_| rng.number(INPUTS, 3)).collect();
     let x: Vec<u8> = rng.number(INPUTS, 3);
 
-    let workers = 4;
-    let svc = EngineService::start_kind(workers, 16, backend, artifacts)?;
+    let svc = EngineService::start_kind(2, 4, backend, artifacts)?;
     println!(
-        "ternary NN layer: {OUTPUTS} neurons × {INPUTS} inputs on the {} backend ({workers} workers)\n",
+        "ternary NN layer: {OUTPUTS} neurons × {INPUTS} inputs as ONE program on the {} backend\n",
         match backend {
             BackendKind::Pjrt => unreachable!(),
             BackendKind::Native => "native simulator",
@@ -70,74 +74,75 @@ fn main() -> anyhow::Result<()> {
         }
     );
 
+    // ---- compile the layer: mac ⊕ segmented-reduce ⊕ bias-add ----------
+    let program = builtin::affine_layer(radix, ACC_TRITS, INPUTS);
+    let plan = Arc::new(program.plan());
+    print!("{}", plan.render());
+    println!();
+
+    // ---- bind the operands: W flattened, x tiled per neuron, zero bias -
+    let as_word = |v: u8| Word::from_u128(v as u128, ACC_TRITS, radix);
+    let w_rows: Vec<Word> = weights.iter().flatten().map(|&w| as_word(w)).collect();
+    let x_rows: Vec<Word> = (0..OUTPUTS).flat_map(|_| x.iter().map(|&v| as_word(v))).collect();
+    let bias: Vec<Word> = (0..OUTPUTS).map(|_| as_word(0)).collect();
+    let bound = BoundProgram::bind(
+        &plan,
+        vec![("w", w_rows), ("x", x_rows), ("bias", bias)],
+        true,
+    )?;
+
+    // ---- ONE engine invocation for the whole layer ---------------------
     let started = std::time::Instant::now();
-    let mut total_energy = 0.0f64;
-    let mut total_cycles = 0u64;
-    let mut outputs = Vec::new();
-    let mut job_id = 0u64;
-
-    for (j, w_row) in weights.iter().enumerate() {
-        // --- stage 1: row-parallel products via the in-place MAC LUT ----
-        let wa: Vec<Word> = w_row
-            .iter()
-            .map(|&w| Word::from_u128(w as u128, ACC_TRITS, radix))
-            .collect();
-        let xb: Vec<Word> = x
-            .iter()
-            .map(|&xi| Word::from_u128(xi as u128, ACC_TRITS, radix))
-            .collect();
-        job_id += 1;
-        let res = svc.run(Job::new(job_id, OpKind::Mac, radix, true, wa, xb))?;
-        total_energy += res.energy.total();
-        total_cycles += res.delay_cycles;
-        // The digit-wise MAC ripples the product's high trit into B's next
-        // digit (digit 1 sees A₁·B₁ + carry = carry), so B already holds
-        // the complete 2-trit product, zero-extended to ACC_TRITS.
-        let partials: Vec<Word> = res.values.into_iter().map(|(w, _)| w).collect();
-
-        // --- stage 2: ONE in-engine tree reduction ----------------------
-        job_id += 1;
-        let res = svc.run(Job::reduce(job_id, radix, true, partials, vec![]))?;
-        total_energy += res.energy.total();
-        total_cycles += res.delay_cycles;
-        assert_eq!(res.values.len(), 1, "one segment, one sum");
-        let y_j = res.values[0].0.to_u128() as u64;
-
-        // verify against the integer reference
-        let expect: u64 = w_row.iter().zip(&x).map(|(&w, &xi)| w as u64 * xi as u64).sum();
-        assert_eq!(y_j, expect, "neuron {j}");
-        outputs.push(y_j);
-    }
+    let report = svc.run_program(bound)?;
     let wall = started.elapsed();
     let metrics = svc.shutdown();
 
-    // exactly one MAC + one Reduce job per neuron, ⌈log₂ N⌉ rounds each
-    assert_eq!(metrics.jobs, 2 * OUTPUTS as u64);
-    let rounds_per_neuron = mvap::ap::fold_rounds(INPUTS) as u64; // 10
-    assert_eq!(metrics.reduce_rounds, OUTPUTS as u64 * rounds_per_neuron);
+    // verify against the integer reference
+    let outputs: Vec<u64> = report.outputs[0].iter().map(|w| w.to_u128() as u64).collect();
+    for (j, w_row) in weights.iter().enumerate() {
+        let expect: u64 = w_row.iter().zip(&x).map(|(&w, &xi)| w as u64 * xi as u64).sum();
+        assert_eq!(outputs[j], expect, "neuron {j}");
+    }
+
+    // exactly one program; the MAC fused into the reduction; both
+    // intermediates (products, sums) consumed CAM-resident — zero host
+    // round-trips between the MAC and the Reduce
+    assert_eq!(metrics.programs, 1);
+    assert_eq!(metrics.jobs, 1, "the whole layer is one unit of work");
+    assert_eq!(metrics.fused_steps, 1);
+    assert_eq!(
+        metrics.resident_reuses, 2,
+        "reduce consumes the products in place, the bias add consumes the sums"
+    );
+    let rounds_per_layer = mvap::ap::fold_rounds(INPUTS) as u64; // 10, lockstep
+    assert_eq!(metrics.reduce_rounds, rounds_per_layer);
     assert_eq!(
         metrics.reduce_rows_moved,
-        (OUTPUTS * (INPUTS - 1)) as u64,
-        "every partial product folds in exactly once"
+        (OUTPUTS * (INPUTS - 1) + (OUTPUTS - 1)) as u64,
+        "every partial product folds in exactly once; 15 segment heads compact"
     );
 
     println!("outputs (all verified against the integer reference ✓):");
     println!("  y = {outputs:?}\n");
     println!("AP execution summary:");
+    print!("{}", report.render());
     println!(
-        "  jobs          : {} ({} MACs + {} Reduces, {} fold rounds each)",
-        metrics.jobs, OUTPUTS, OUTPUTS, rounds_per_neuron
+        "  fold rounds   : {} (all {OUTPUTS} neurons in lockstep)",
+        metrics.reduce_rounds
     );
-    println!("  row-ops       : {}", metrics.rows);
     println!("  rows moved    : {} (in-engine, between fold rounds)", metrics.reduce_rows_moved);
-    println!("  modeled energy: {:.3e} J", total_energy);
-    println!("  modeled delay : {} AP clock cycles", total_cycles);
-    println!("  wall clock    : {:?} ({:.0} row-ops/s)", wall, metrics.rows as f64 / wall.as_secs_f64());
+    println!("  row-ops       : {}", metrics.rows);
+    println!(
+        "  wall clock    : {:?} ({:.0} row-ops/s)",
+        wall,
+        metrics.rows as f64 / wall.as_secs_f64()
+    );
 
     // ---- the paper's headline comparisons, scaled to this workload ------
     // Each MAC/add row-op writes ~the same cost structure as the adder;
-    // compare with (a) the equivalent binary AP doing the same digit work
-    // and (b) a serial ternary CLA doing the additions.
+    // compare with a serial ternary CLA doing the additions.
+    let total_energy = report.energy.total();
+    let total_cycles = report.delay_cycles;
     let cla = cla_model();
     let add_ops: u64 = metrics.rows;
     let cla_energy = cla.energy(add_ops as usize, ACC_TRITS);
@@ -153,7 +158,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  (paper anchors at 20t/512 rows: −52.64% energy, 9.5× delay vs CLA; \
          this workload uses 8-trit ops at {} parallel rows)",
-        INPUTS
+        OUTPUTS * INPUTS
     );
     Ok(())
 }

@@ -372,6 +372,56 @@ fn main() {
             }
         }
     }
+    if run("hot/program") {
+        // Compiled dataflow programs (the PR-5 tentpole): the whole op
+        // DAG executes as ONE engine invocation with CAM-resident
+        // intermediates. `program_dot` = fused mac+reduce over N rows;
+        // `program_fir` = 4 taps of mac + a 2-wave add tree (7 steps, 6
+        // resident reuses — the workload that previously paid 7 job
+        // round-trips). Scalar vs bit-sliced at 1k/16k/256k rows.
+        use mvap::program::{builtin, BoundProgram};
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(16);
+            let dot_plan = Arc::new(builtin::dot(radix, p).plan());
+            let fir_plan = Arc::new(builtin::fir(radix, p, 4).plan());
+            let dot_inputs: Vec<(&str, Vec<Word>)> = vec![
+                ("a", random_words(&mut rng, rows, p, radix)),
+                ("b", random_words(&mut rng, rows, p, radix)),
+            ];
+            let fir_names = ["x0", "x1", "x2", "x3", "h0", "h1", "h2", "h3"];
+            let fir_inputs: Vec<(&str, Vec<Word>)> = fir_names
+                .iter()
+                .map(|n| (*n, random_words(&mut rng, rows, p, radix)))
+                .collect();
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let tag = match kind {
+                    StorageKind::Scalar => "scalar",
+                    StorageKind::BitSliced => "bitsliced",
+                };
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let bound = BoundProgram::bind(&dot_plan, dot_inputs.clone(), true).unwrap();
+                results.push(bench(
+                    &format!("hot/program_dot_{tag}_{rows}rows"),
+                    Some(rows as u64),
+                    || {
+                        black_box(eng.execute_program(&bound).unwrap());
+                    },
+                ));
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let bound = BoundProgram::bind(&fir_plan, fir_inputs.clone(), true).unwrap();
+                results.push(bench(
+                    &format!("hot/program_fir_{tag}_{rows}rows"),
+                    Some(rows as u64),
+                    || {
+                        black_box(eng.execute_program(&bound).unwrap());
+                    },
+                ));
+            }
+        }
+    }
     if run("hot/sharded_service") {
         // end-to-end sharded dispatch with cross-submission coalescing
         let radix = Radix::TERNARY;

@@ -15,6 +15,7 @@ pub use kernel::{KernelCache, KernelSignature, LutKernel};
 pub use ops::{
     add_vectors, adder_lut, extract_operand, extract_reduced, fold_rounds, load_mul_operands,
     load_operands, load_operands_storage, load_reduce_operands, mac_lut, mac_vectors, mul_vectors,
-    reduce_vectors, sub_lut, sub_vectors, MulLayout, ReduceSummary, VectorLayout,
+    reduce_fields, reduce_vectors, sub_lut, sub_vectors, FieldSpan, MulLayout, ReduceSummary,
+    VectorLayout,
 };
 pub use stats::ApStats;

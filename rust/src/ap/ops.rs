@@ -212,6 +212,41 @@ pub fn extract_reduced(
     out
 }
 
+/// Column span of one in-place op's fields at arbitrary positions: an
+/// A-side field (read-only operand / fold scratch), a B-side field
+/// (in-place result), and the carry column — the generalisation of
+/// [`VectorLayout`] that the program compiler
+/// ([`crate::program`]) uses to run ops over allocated column fields of a
+/// shared array, keeping intermediates CAM-resident between steps.
+#[derive(Clone, Copy, Debug)]
+pub struct FieldSpan {
+    /// Digits per field.
+    pub p: usize,
+    /// First column of the A-side field (columns `a_base..a_base + p`).
+    pub a_base: usize,
+    /// First column of the B-side field (columns `b_base..b_base + p`).
+    pub b_base: usize,
+    /// Carry/borrow column.
+    pub carry: usize,
+}
+
+impl FieldSpan {
+    /// The span covering a [`VectorLayout`] (A at 0, B at p, carry last).
+    pub fn of_layout(layout: &VectorLayout) -> FieldSpan {
+        FieldSpan { p: layout.p, a_base: layout.a(0), b_base: layout.b(0), carry: layout.carry() }
+    }
+
+    /// State columns `[a_d, b_d, carry]` for digit position d.
+    pub fn digit_cols(&self, d: usize) -> Vec<usize> {
+        vec![self.a_base + d, self.b_base + d, self.carry]
+    }
+
+    /// All digit positions in ripple order.
+    pub fn positions(&self) -> Vec<Vec<usize>> {
+        (0..self.p).map(|d| self.digit_cols(d)).collect()
+    }
+}
+
 /// In-engine segmented tree reduction: sums every segment's B operands
 /// down to its head row, entirely inside this `Ap` — no operand ever
 /// leaves the array between rounds, and the adder `kernel` is compiled
@@ -246,13 +281,41 @@ pub fn reduce_vectors(
     let rows = ap.storage().rows();
     assert!(!seg_bounds.is_empty(), "at least one segment required");
     assert_eq!(*seg_bounds.last().unwrap(), rows, "segments must cover all rows");
+    reduce_fields(ap, &FieldSpan::of_layout(layout), lut, mode, kernel, seg_bounds, stat_bounds)
+}
+
+/// [`reduce_vectors`] generalised to an arbitrary [`FieldSpan`] and to
+/// arrays taller than the reduction: segments may end before the array
+/// does (`seg_bounds` last == the *live* row count ≤ rows). Rows past the
+/// live range are never moved or zeroed — the program executor
+/// ([`crate::program`]) leaves dead intermediate data there — but the
+/// row-parallel adder still sweeps them (a CAM op hits every row), so
+/// `stat_bounds` must cover the whole array; bounds at or below the live
+/// row count must be segment boundaries (exact attribution), and the
+/// caller discards any trailing garbage block. With `seg_bounds` covering
+/// all rows this is exactly [`reduce_vectors`].
+pub fn reduce_fields(
+    ap: &mut Ap,
+    span: &FieldSpan,
+    lut: &Lut,
+    mode: ExecMode,
+    kernel: &LutKernel,
+    seg_bounds: &[usize],
+    stat_bounds: &[usize],
+) -> (Vec<ApStats>, ReduceSummary) {
+    let rows = ap.storage().rows();
+    assert!(!seg_bounds.is_empty(), "at least one segment required");
+    let live_rows = *seg_bounds.last().unwrap();
+    assert!(live_rows <= rows, "segments exceed the array");
     assert!(
         seg_bounds.windows(2).all(|w| w[0] < w[1]) && seg_bounds[0] > 0,
         "segment bounds must be strictly increasing (no empty segments)"
     );
     assert!(
-        stat_bounds.iter().all(|b| seg_bounds.binary_search(b).is_ok()),
-        "every stat bound must be a segment boundary"
+        stat_bounds
+            .iter()
+            .all(|&b| b > live_rows || seg_bounds.binary_search(&b).is_ok()),
+        "every stat bound within the live rows must be a segment boundary"
     );
     let mut starts = Vec::with_capacity(seg_bounds.len());
     let mut live = Vec::with_capacity(seg_bounds.len());
@@ -263,7 +326,7 @@ pub fn reduce_vectors(
         prev = end;
     }
     let rounds = live.iter().map(|&k| fold_rounds(k)).max().unwrap() as u64;
-    let positions = layout.positions();
+    let positions = span.positions();
     let mut accum = vec![ApStats::default(); stat_bounds.len()];
     let mut moved = 0u64;
     for _ in 0..rounds {
@@ -274,19 +337,19 @@ pub fn reduce_vectors(
             // `pairs == 0` (finished or single-row segment): no movement,
             // but A and carry still zero so the row stays noAction for the
             // remaining lockstep rounds.
-            for d in 0..layout.p {
+            for d in 0..span.p {
                 if pairs > 0 {
                     ap.storage_mut().copy_rows(
-                        layout.b(d),
+                        span.b_base + d,
                         base + half,
-                        layout.a(d),
+                        span.a_base + d,
                         base,
                         pairs,
                     );
                 }
-                ap.storage_mut().fill_rows(layout.a(d), base + pairs, *k - pairs, 0);
+                ap.storage_mut().fill_rows(span.a_base + d, base + pairs, *k - pairs, 0);
             }
-            ap.storage_mut().fill_rows(layout.carry(), base, *k, 0);
+            ap.storage_mut().fill_rows(span.carry, base, *k, 0);
             moved += pairs as u64;
             *k = half;
         }

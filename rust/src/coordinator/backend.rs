@@ -12,6 +12,7 @@ use crate::ap::{Ap, ApStats, ExecMode, KernelCache, ReduceSummary};
 use crate::cam::{CamStorage, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::{Radix, Word};
+use crate::program::{exec as program_exec, BoundProgram, ProgramLuts, ProgramRun};
 use crate::runtime::artifact::ArtifactMode;
 use crate::runtime::{PjrtRuntime, Registry};
 use std::sync::Arc;
@@ -140,6 +141,30 @@ pub trait Backend {
         let _ = (radix, blocked, lut, values, seg_bounds, stat_bounds);
         anyhow::bail!(
             "backend '{}' does not support in-engine reduction (native backends only)",
+            self.name()
+        )
+    }
+
+    /// Does this backend implement [`Backend::run_program`]? The engine
+    /// only routes compiled programs to backends that do.
+    fn supports_programs(&self) -> bool {
+        false
+    }
+
+    /// Execute a bound dataflow program ([`crate::program`]): load the
+    /// inputs once into a field-allocated array, run every planned step
+    /// with intermediates CAM-resident, extract only the outputs. `luts`
+    /// carries the LUT programs the plan's steps need (built by the
+    /// engine's LUT cache); kernels come from this backend's
+    /// [`KernelCache`].
+    fn run_program(
+        &mut self,
+        bound: &BoundProgram,
+        luts: &ProgramLuts,
+    ) -> anyhow::Result<ProgramRun> {
+        let _ = (bound, luts);
+        anyhow::bail!(
+            "backend '{}' does not support compiled program execution (native backends only)",
             self.name()
         )
     }
@@ -316,6 +341,27 @@ impl Backend for NativeBackend {
             reduce_vectors(&mut ap, &layout, lut, mode, &kernel, seg_bounds, stat_bounds);
         let results = extract_reduced(ap.storage(), &layout, seg_bounds);
         Ok((results, stats, summary))
+    }
+
+    fn supports_programs(&self) -> bool {
+        true
+    }
+
+    fn run_program(
+        &mut self,
+        bound: &BoundProgram,
+        luts: &ProgramLuts,
+    ) -> anyhow::Result<ProgramRun> {
+        let mode = Self::mode_of(bound.blocked);
+        // attach cached kernels to the LUTs the plan needs — a program's
+        // kernels compile once per process, shared with job execution
+        let kernels = program_exec::ProgramKernels {
+            add: luts.add.as_ref().map(|l| (l, self.kernel(l, mode))),
+            sub: luts.sub.as_ref().map(|l| (l, self.kernel(l, mode))),
+            mac: luts.mac.as_ref().map(|l| (l, self.kernel(l, mode))),
+            copy: luts.copy.as_ref().map(|l| (l, self.kernel(l, mode))),
+        };
+        program_exec::run_storage(self.storage, bound, &kernels)
     }
 }
 
@@ -515,6 +561,7 @@ mod tests {
         let mut d = Dummy;
         assert!(!d.supports_coalescing());
         assert!(!d.supports_reduce());
+        assert!(!d.supports_programs());
         let radix = Radix::TERNARY;
         let a = vec![Word::from_u128(1, 2, radix)];
         let b = vec![Word::from_u128(2, 2, radix)];
@@ -528,6 +575,51 @@ mod tests {
             .run_reduce(radix, true, &lut, &a, &[1], &[1])
             .unwrap_err();
         assert!(format!("{err}").contains("in-engine reduction"));
+        let plan = std::sync::Arc::new(crate::program::builtin::dot(radix, 2).plan());
+        let bound = crate::program::BoundProgram::bind(
+            &plan,
+            vec![("a", a.clone()), ("b", b.clone())],
+            true,
+        )
+        .unwrap();
+        let err = d.run_program(&bound, &crate::program::ProgramLuts::default()).unwrap_err();
+        assert!(format!("{err}").contains("program execution"));
+    }
+
+    /// A program through the raw backend on both storages: identical
+    /// outputs, per-step stats, and summaries; values match the host
+    /// reference; kernels compile once per family.
+    #[test]
+    fn run_program_native_backends_agree() {
+        use crate::program::{builtin, reference, BoundProgram, ProgramLuts};
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let p = 6;
+        let mut rng = Rng::new(44);
+        let rows = 70; // straddles a 64-row plane-word boundary
+        let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let program = builtin::dot(radix, p);
+        let want = reference::evaluate(&program, &[("a", a.clone()), ("b", b.clone())]);
+        let plan = Arc::new(program.plan());
+        let bound =
+            BoundProgram::bind(&plan, vec![("a", a.clone()), ("b", b.clone())], true).unwrap();
+        let luts = ProgramLuts {
+            add: Some(adder_lut(radix, ExecMode::Blocked)),
+            mac: Some(crate::ap::mac_lut(radix, ExecMode::Blocked)),
+            ..Default::default()
+        };
+        let mut runs = Vec::new();
+        for storage in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut be = NativeBackend::new(storage);
+            assert!(be.supports_programs());
+            let run = be.run_program(&bound, &luts).unwrap();
+            assert_eq!(be.take_kernel_events(), (0, 2), "one compile per LUT family");
+            assert_eq!(run.outputs, want, "{storage}");
+            runs.push(run);
+        }
+        assert_eq!(runs[0].step_stats, runs[1].step_stats);
+        assert_eq!(runs[0].step_summaries, runs[1].step_summaries);
     }
 
     /// In-engine reduction: both native storages agree on values, stats,

@@ -10,9 +10,10 @@ use super::metrics::Metrics;
 use crate::ap::ApStats;
 use crate::diagram::StateDiagram;
 use crate::energy::{delay_cycles, DelayScheme, EnergyModel, OpShape};
-use crate::func::{full_add, full_sub, mac_digit};
+use crate::func::{copy_digit, full_add, full_sub, mac_digit};
 use crate::lutgen::{generate_blocked, generate_non_blocked, Lut};
 use crate::mvl::{Radix, Word};
+use crate::program::{BoundProgram, ProgramLuts, ProgramReport, StepKind, StepReport};
 use std::collections::HashMap;
 
 /// Default tile height when the backend has no static shape requirement.
@@ -22,6 +23,9 @@ pub const DEFAULT_TILE_ROWS: usize = 256;
 pub struct VectorEngine {
     backend: Box<dyn Backend>,
     luts: HashMap<(OpKind, u8, bool), Lut>,
+    /// Column-copy LUTs for program Copy steps (keyed like [`Self::lut`];
+    /// copy is not a job [`OpKind`], so it gets its own small cache).
+    copy_luts: HashMap<(u8, bool), Lut>,
     energy_ternary: EnergyModel,
     energy_binary: EnergyModel,
     metrics: Metrics,
@@ -33,6 +37,7 @@ impl VectorEngine {
         VectorEngine {
             backend,
             luts: HashMap::new(),
+            copy_luts: HashMap::new(),
             energy_ternary: EnergyModel::ternary_default(),
             energy_binary: EnergyModel::binary_default(),
             metrics: Metrics::default(),
@@ -72,6 +77,124 @@ impl VectorEngine {
             } else {
                 generate_non_blocked(&d)
             }
+        })
+    }
+
+    /// Get or build the column-copy LUT (program Copy steps).
+    fn copy_lut(&mut self, radix: Radix, blocked: bool) -> &Lut {
+        self.copy_luts.entry((radix.n(), blocked)).or_insert_with(|| {
+            let d = StateDiagram::build(copy_digit(radix)).expect("copy diagram");
+            if blocked {
+                generate_blocked(&d)
+            } else {
+                generate_non_blocked(&d)
+            }
+        })
+    }
+
+    /// Execute a bound dataflow program ([`crate::program`]): one backend
+    /// invocation for the whole op DAG — inputs load once, every
+    /// intermediate stays CAM-resident between steps, and per-step
+    /// statistics/energy/delay are attributed into the returned
+    /// [`ProgramReport`]. Native backends only (like [`OpKind::Reduce`]).
+    ///
+    /// Modeled delay is the serial sum of the steps (one array executes
+    /// them in dependency order); fold steps cost `rounds ×` the adder
+    /// program. Row movement between fold rounds and head compaction are
+    /// metered ([`Metrics::reduce_rows_moved`]) but priced at zero, and
+    /// the per-step carry-column clears are initialisation-path writes,
+    /// consistent with the reduce path's accounting.
+    pub fn execute_program(&mut self, bound: &BoundProgram) -> anyhow::Result<ProgramReport> {
+        anyhow::ensure!(
+            self.backend.supports_programs(),
+            "backend '{}' does not support compiled program execution (native backends only)",
+            self.backend.name()
+        );
+        let started = std::time::Instant::now();
+        let plan = std::sync::Arc::clone(&bound.plan);
+        let prog = plan.program();
+        let (radix, digits, blocked) = (prog.radix(), prog.digits(), bound.blocked);
+        let needs = plan.lut_needs();
+        let mut luts = ProgramLuts::default();
+        if needs.add {
+            luts.add = Some(self.lut(OpKind::Add, radix, blocked).clone());
+        }
+        if needs.sub {
+            luts.sub = Some(self.lut(OpKind::Sub, radix, blocked).clone());
+        }
+        if needs.mac {
+            luts.mac = Some(self.lut(OpKind::Mac, radix, blocked).clone());
+        }
+        if needs.copy {
+            luts.copy = Some(self.copy_lut(radix, blocked).clone());
+        }
+        let run = self.backend.run_program(bound, &luts)?;
+        let elapsed = started.elapsed();
+
+        let model = if radix.n() == 2 { &self.energy_binary } else { &self.energy_ternary };
+        let shape = |lut: &Option<Lut>| {
+            OpShape::of(lut.as_ref().expect("plan-required LUT was built"), digits)
+        };
+        let mut steps = Vec::with_capacity(plan.steps().len());
+        let mut total_stats = ApStats::default();
+        let mut total_delay = 0u64;
+        for (i, step) in plan.steps().iter().enumerate() {
+            let stats = run.step_stats[i].clone();
+            let rounds = run.step_summaries[i].map(|s| s.rounds).unwrap_or(0);
+            let delay = match &step.kind {
+                StepKind::Copy { .. } => {
+                    delay_cycles(shape(&luts.copy), DelayScheme::Traditional)
+                }
+                StepKind::Ew { op, .. } => {
+                    let lut = match op {
+                        crate::program::EwOp::Add => &luts.add,
+                        crate::program::EwOp::Sub => &luts.sub,
+                        crate::program::EwOp::Mac => &luts.mac,
+                    };
+                    delay_cycles(shape(lut), DelayScheme::Traditional)
+                }
+                StepKind::Reduce { .. } => {
+                    rounds * delay_cycles(shape(&luts.add), DelayScheme::Traditional)
+                }
+                StepKind::MacReduce { .. } => {
+                    delay_cycles(shape(&luts.mac), DelayScheme::Traditional)
+                        + rounds * delay_cycles(shape(&luts.add), DelayScheme::Traditional)
+                }
+            };
+            if let Some(summary) = &run.step_summaries[i] {
+                self.metrics.reduce_rounds += summary.rounds;
+                self.metrics.reduce_rows_moved += summary.rows_moved;
+            }
+            total_stats.merge(&stats);
+            total_delay += delay;
+            steps.push(StepReport {
+                label: step.label(),
+                wave: step.wave,
+                rows: bound.step_live[i],
+                energy: model.price(&stats),
+                stats,
+                delay_cycles: delay,
+            });
+        }
+        let energy = model.price(&total_stats);
+        self.metrics.record(bound.rows, digits, &energy, elapsed);
+        // the program array is sized to the workload: one "tile", 100% fill
+        self.metrics.record_tiles(1, bound.rows, bound.rows);
+        self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.programs += 1;
+        self.metrics.program_steps += steps.len() as u64;
+        self.metrics.fused_steps += plan.fused_steps;
+        self.metrics.resident_reuses += plan.resident_reuses;
+        Ok(ProgramReport {
+            name: prog.name().to_string(),
+            outputs: run.outputs,
+            steps,
+            stats: total_stats,
+            energy,
+            delay_cycles: total_delay,
+            elapsed,
+            resident_reuses: plan.resident_reuses,
+            fused_steps: plan.fused_steps,
         })
     }
 
@@ -617,6 +740,71 @@ mod tests {
         assert_eq!(eng.metrics().kernel_misses, 1, "kernel compiled once");
         assert_eq!(eng.metrics().kernel_hits, 1);
         assert!(eng.metrics().summary().contains("kernels=1h/1m"));
+    }
+
+    /// A compiled program through the engine: outputs match the host
+    /// reference, per-step attribution sums to the totals, and the
+    /// program/fusion/reuse counters land in the metrics.
+    #[test]
+    fn program_end_to_end() {
+        use crate::cam::StorageKind;
+        use crate::program::{builtin, reference, BoundProgram};
+        use crate::util::Rng;
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let p = 8;
+        let per_neuron = 32;
+        let neurons = 4;
+        let rows = per_neuron * neurons;
+        let mut rng = Rng::new(11);
+        let single = |rng: &mut Rng, n: usize| -> Vec<Word> {
+            (0..n).map(|_| Word::from_u128(rng.digit(3) as u128, p, radix)).collect()
+        };
+        let w = single(&mut rng, rows);
+        let x = single(&mut rng, rows);
+        let bias = single(&mut rng, neurons);
+        let program = builtin::affine_layer(radix, p, per_neuron);
+        let inputs = vec![("w", w.clone()), ("x", x.clone()), ("bias", bias.clone())];
+        let want = reference::evaluate(&program, &inputs);
+        let plan = Arc::new(program.plan());
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let bound = BoundProgram::bind(&plan, inputs.clone(), true).unwrap();
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let report = eng.execute_program(&bound).unwrap();
+            assert_eq!(report.outputs, want, "{kind:?}");
+            // single-digit operands: the affine layer is integer-exact
+            for j in 0..neurons {
+                let expect: u128 = (0..per_neuron)
+                    .map(|i| w[j * per_neuron + i].to_u128() * x[j * per_neuron + i].to_u128())
+                    .sum::<u128>()
+                    + bias[j].to_u128();
+                assert_eq!(report.outputs[0][j].to_u128(), expect, "neuron {j}");
+            }
+            // per-step attribution sums to the report totals
+            let step_sum = ApStats::sum_of(
+                &report.steps.iter().map(|s| s.stats.clone()).collect::<Vec<_>>(),
+            );
+            assert_eq!(step_sum, report.stats);
+            let energy_sum: f64 = report.steps.iter().map(|s| s.energy.total()).sum();
+            assert!((energy_sum - report.energy.total()).abs() <= 1e-12 * energy_sum.abs());
+            let delay_sum: u64 = report.steps.iter().map(|s| s.delay_cycles).sum();
+            assert_eq!(delay_sum, report.delay_cycles);
+            // metrics: one program, fused mac+reduce, two resident reuses
+            assert_eq!(eng.metrics().programs, 1);
+            assert_eq!(eng.metrics().fused_steps, 1);
+            assert_eq!(eng.metrics().resident_reuses, 2);
+            assert_eq!(eng.metrics().program_steps, report.steps.len() as u64);
+            assert_eq!(
+                eng.metrics().reduce_rounds,
+                crate::ap::fold_rounds(per_neuron) as u64
+            );
+            // fold movement + compacting the 3 displaced segment heads
+            assert_eq!(
+                eng.metrics().reduce_rows_moved,
+                (neurons * (per_neuron - 1) + (neurons - 1)) as u64
+            );
+            assert!(report.render().contains("mac+reduce"));
+        }
     }
 
     #[test]

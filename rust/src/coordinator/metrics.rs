@@ -35,9 +35,22 @@ pub struct Metrics {
     /// Lockstep pairwise-fold rounds executed by in-engine reductions
     /// ([`super::job::OpKind::Reduce`]): `⌈log₂ N⌉` per reduce batch.
     pub reduce_rounds: u64,
-    /// Rows moved by the plane-native row-movement primitive between
-    /// reduction rounds (each operand is moved exactly once per fold).
+    /// Rows moved by the plane-native row-movement primitive: operand
+    /// movement between reduction rounds (each operand folds in exactly
+    /// once) plus segment-head compaction after program reduce steps
+    /// whose result is consumed again ([`crate::program`]).
     pub reduce_rows_moved: u64,
+    /// Compiled dataflow programs executed
+    /// ([`crate::program::BoundProgram`]).
+    pub programs: u64,
+    /// Plan steps executed by programs (copies, element-wise ops, reduces,
+    /// fused steps — loads and output extraction are host work).
+    pub program_steps: u64,
+    /// `Mac → Reduce` chains executed as single fused steps.
+    pub fused_steps: u64,
+    /// Operand edges served from a CAM-resident intermediate instead of a
+    /// host extract/reload round-trip.
+    pub resident_reuses: u64,
 }
 
 impl Metrics {
@@ -83,6 +96,10 @@ impl Metrics {
         self.kernel_misses += other.kernel_misses;
         self.reduce_rounds += other.reduce_rounds;
         self.reduce_rows_moved += other.reduce_rows_moved;
+        self.programs += other.programs;
+        self.program_steps += other.program_steps;
+        self.fused_steps += other.fused_steps;
+        self.resident_reuses += other.resident_reuses;
     }
 
     /// Row-operations per second of busy time.
@@ -110,7 +127,7 @@ impl Metrics {
         format!(
             "jobs={} ({} coalesced in {} batches, {} solo, {} stolen) rows={} digit_ops={} \
              energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}% \
-             kernels={}h/{}m reduce={}r/{}mv",
+             kernels={}h/{}m reduce={}r/{}mv programs={} ({} steps, {} fused, {} reuses)",
             self.jobs,
             self.coalesced_jobs,
             self.batches,
@@ -127,6 +144,10 @@ impl Metrics {
             self.kernel_misses,
             self.reduce_rounds,
             self.reduce_rows_moved,
+            self.programs,
+            self.program_steps,
+            self.fused_steps,
+            self.resident_reuses,
         )
     }
 }
@@ -167,6 +188,10 @@ mod tests {
         n.record_kernel_events((5, 2));
         n.reduce_rounds = 10;
         n.reduce_rows_moved = 1023;
+        n.programs = 2;
+        n.program_steps = 7;
+        n.fused_steps = 2;
+        n.resident_reuses = 4;
         m.merge(&n);
         assert_eq!(m.tiles, 3);
         assert!((m.fill_rate() - 556.0 / 768.0).abs() < 1e-12);
@@ -174,8 +199,11 @@ mod tests {
         assert_eq!(m.stolen_jobs, 1);
         assert_eq!((m.kernel_hits, m.kernel_misses), (5, 2));
         assert_eq!((m.reduce_rounds, m.reduce_rows_moved), (10, 1023));
+        assert_eq!((m.programs, m.program_steps), (2, 7));
+        assert_eq!((m.fused_steps, m.resident_reuses), (2, 4));
         assert!(m.summary().contains("fill="));
         assert!(m.summary().contains("kernels=5h/2m"));
         assert!(m.summary().contains("reduce=10r/1023mv"));
+        assert!(m.summary().contains("programs=2 (7 steps, 2 fused, 4 reuses)"));
     }
 }

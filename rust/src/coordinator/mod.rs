@@ -25,6 +25,13 @@
 //! * [`shard`] — sharded dispatch: N shards keyed by job signature with
 //!   bounded queues, a time/size flush policy, and work stealing.
 //! * [`metrics`] — throughput/latency/energy/occupancy accounting.
+//!
+//! Above the single-op job path sits the program compiler
+//! ([`crate::program`]): multi-op DAGs planned onto CAM column fields and
+//! executed as ONE backend invocation per program (submit via
+//! [`EngineService::submit_program`] /
+//! [`ShardedService::submit_program`]), so intermediates never round-trip
+//! through the host between ops.
 
 pub mod job;
 pub mod batcher;

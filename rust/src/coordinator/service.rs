@@ -8,6 +8,7 @@ use super::coalesce::JobSignature;
 use super::engine::VectorEngine;
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
+use crate::program::{BoundProgram, ProgramReport};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -23,6 +24,9 @@ enum Message {
     /// workload (see [`VectorEngine::execute_coalesced`]), one reply
     /// channel per job.
     RunBatch(Vec<Job>, Vec<SyncSender<anyhow::Result<JobResult>>>),
+    /// A bound dataflow program — one engine invocation for the whole op
+    /// DAG (see [`VectorEngine::execute_program`]).
+    RunProgram(Box<BoundProgram>, SyncSender<anyhow::Result<ProgramReport>>),
     Shutdown,
 }
 
@@ -108,6 +112,9 @@ impl EngineService {
                         Ok(Message::RunBatch(jobs, replies)) => {
                             dispatch_batch(&mut engine, &jobs, &replies);
                         }
+                        Ok(Message::RunProgram(bound, reply)) => {
+                            let _ = reply.send(engine.execute_program(&bound));
+                        }
                         Ok(Message::Shutdown) | Err(_) => break,
                     }
                 }
@@ -161,6 +168,25 @@ impl EngineService {
     /// Submit and wait.
     pub fn run(&self, job: Job) -> anyhow::Result<JobResult> {
         self.submit(job).recv().expect("worker dropped reply")
+    }
+
+    /// Submit a bound dataflow program; blocks if the queue is full.
+    /// The whole op DAG executes as one engine invocation on whichever
+    /// worker picks it up — intermediates never return to the host.
+    pub fn submit_program(
+        &self,
+        bound: BoundProgram,
+    ) -> Receiver<anyhow::Result<ProgramReport>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Message::RunProgram(Box::new(bound), reply_tx))
+            .expect("service stopped");
+        reply_rx
+    }
+
+    /// Submit a program and wait for its report.
+    pub fn run_program(&self, bound: BoundProgram) -> anyhow::Result<ProgramReport> {
+        self.submit_program(bound).recv().expect("worker dropped reply")
     }
 
     /// Submit a batch of jobs at once. Jobs sharing a signature (op,
@@ -314,6 +340,43 @@ mod tests {
             .unwrap();
         let m = svc.shutdown();
         assert_eq!(m.jobs, 0);
+    }
+
+    /// Programs fan out across the pool like jobs: every dot product
+    /// matches the host reference and the program counters aggregate.
+    #[test]
+    fn service_runs_programs() {
+        use crate::program::{builtin, reference, BoundProgram};
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let p = 6;
+        let svc = EngineService::start(2, 4, || {
+            Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+        })
+        .unwrap();
+        let plan = Arc::new(builtin::dot(radix, p).plan());
+        let mut rng = Rng::new(3);
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            let rows = 1 + rng.index(80);
+            let a: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let b: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            let want =
+                reference::evaluate(plan.program(), &[("a", a.clone()), ("b", b.clone())]);
+            let bound = BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true).unwrap();
+            pending.push((svc.submit_program(bound), want));
+        }
+        for (rx, want) in pending {
+            let report = rx.recv().unwrap().unwrap();
+            assert_eq!(report.outputs, want);
+            assert_eq!(report.fused_steps, 1);
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.programs, 6);
+        assert_eq!(m.fused_steps, 6);
+        assert_eq!(m.resident_reuses, 6);
     }
 
     #[test]

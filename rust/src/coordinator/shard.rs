@@ -19,6 +19,7 @@ use super::coalesce::JobSignature;
 use super::engine::VectorEngine;
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
+use crate::program::{BoundProgram, ProgramReport};
 use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -57,11 +58,18 @@ impl Default for ShardConfig {
     }
 }
 
-/// A queued job plus its home shard and reply channel.
+/// A queued unit of work with its reply channel: a coalescable job, or a
+/// bound dataflow program (executed standalone — one engine invocation,
+/// never batched with jobs).
+enum Payload {
+    Job(Job, SyncSender<anyhow::Result<JobResult>>),
+    Program(Box<BoundProgram>, SyncSender<anyhow::Result<ProgramReport>>),
+}
+
+/// A queued work item plus its home shard.
 struct Submission {
-    job: Job,
+    payload: Payload,
     home: usize,
-    reply: SyncSender<anyhow::Result<JobResult>>,
 }
 
 #[derive(Default)]
@@ -249,7 +257,9 @@ impl BatchPolicy {
 /// Flush the pending batch: execute it coalesced and reply per job. The
 /// worker keeps `pending` signature-coherent (it flushes on a signature
 /// switch), and `execute_coalesced` falls back to solo execution if that
-/// ever stops holding — so no re-grouping is needed here.
+/// ever stops holding — so no re-grouping is needed here. Only job
+/// submissions batch; programs execute on arrival and never enter
+/// `pending`.
 fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
     if pending.is_empty() {
         return;
@@ -262,8 +272,13 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
         if sub.home != me {
             stolen += 1;
         }
-        jobs.push(sub.job);
-        replies.push(sub.reply);
+        match sub.payload {
+            Payload::Job(job, reply) => {
+                jobs.push(job);
+                replies.push(reply);
+            }
+            Payload::Program(..) => unreachable!("programs never enter the pending batch"),
+        }
     }
     engine.metrics_mut().stolen_jobs += stolen;
     super::service::dispatch_batch(engine, &jobs, &replies);
@@ -271,19 +286,42 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
 
 /// One shard's worker loop: collect same-signature jobs into a pending
 /// batch, flush on the [`BatchPolicy`] decisions, steal when idle.
+/// Program submissions are standalone units: they flush whatever batch is
+/// collecting (they would otherwise delay it unboundedly — a program can
+/// be large) and execute immediately.
 fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine: &mut VectorEngine) {
     let mut pending: Vec<Submission> = Vec::new();
     let mut policy = BatchPolicy::new(&cfg);
-    // admit one submission and flush if the policy demands it
+    // admit one job submission and flush if the policy demands it; run a
+    // program submission on the spot
     macro_rules! admit {
         ($sub:expr) => {{
-            let sub = $sub;
-            let sig = JobSignature::of(&sub.job);
-            let rows = sub.job.rows();
-            pending.push(sub);
-            if policy.admit(sig, rows, Instant::now()) {
-                flush(engine, &mut pending, me);
-                policy.flushed();
+            let Submission { payload, home } = $sub;
+            match payload {
+                Payload::Job(job, reply) => {
+                    let sig = JobSignature::of(&job);
+                    if policy.must_flush_before(sig) {
+                        // signature switch: commit the old batch first
+                        flush(engine, &mut pending, me);
+                        policy.flushed();
+                    }
+                    let rows = job.rows();
+                    pending.push(Submission { payload: Payload::Job(job, reply), home });
+                    if policy.admit(sig, rows, Instant::now()) {
+                        flush(engine, &mut pending, me);
+                        policy.flushed();
+                    }
+                }
+                Payload::Program(bound, reply) => {
+                    // a program is its own workload: commit the batch it
+                    // would otherwise delay, then run it
+                    flush(engine, &mut pending, me);
+                    policy.flushed();
+                    if home != me {
+                        engine.metrics_mut().stolen_jobs += 1;
+                    }
+                    let _ = reply.send(engine.execute_program(&bound));
+                }
             }
         }};
     }
@@ -293,11 +331,6 @@ fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine:
         let wait = policy.wait(Instant::now(), cfg.flush_after * 10);
         match queues[me].pop(wait) {
             Pop::Item(sub) => {
-                if policy.must_flush_before(JobSignature::of(&sub.job)) {
-                    // signature switch: commit the old batch first
-                    flush(engine, &mut pending, me);
-                    policy.flushed();
-                }
                 admit!(sub);
             }
             Pop::TimedOut => {
@@ -331,6 +364,9 @@ pub struct ShardedService {
     queues: Vec<Arc<ShardQueue>>,
     workers: Vec<JoinHandle<Metrics>>,
     cfg: ShardConfig,
+    /// Round-robin cursor for program routing (programs never coalesce,
+    /// so unlike jobs they gain nothing from signature co-location).
+    next_program: std::sync::atomic::AtomicUsize,
 }
 
 impl ShardedService {
@@ -387,7 +423,12 @@ impl ShardedService {
             }
             return Err(e);
         }
-        Ok(ShardedService { queues, workers, cfg })
+        Ok(ShardedService {
+            queues,
+            workers,
+            cfg,
+            next_program: std::sync::atomic::AtomicUsize::new(0),
+        })
     }
 
     /// Convenience: start with a [`BackendKind`]. Native shards share one
@@ -428,8 +469,34 @@ impl ShardedService {
     pub fn submit(&self, job: Job) -> Receiver<anyhow::Result<JobResult>> {
         let (tx, rx) = sync_channel(1);
         let home = JobSignature::of(&job).shard(self.queues.len());
-        self.queues[home].push(Submission { job, home, reply: tx }, self.cfg.queue_depth);
+        self.queues[home]
+            .push(Submission { payload: Payload::Job(job, tx), home }, self.cfg.queue_depth);
         rx
+    }
+
+    /// Submit a bound dataflow program. Programs route round-robin —
+    /// they execute standalone (one engine invocation each, never
+    /// batched), so unlike jobs there is no coalescing benefit to
+    /// concentrating them; they stay stealable like any queued work.
+    pub fn submit_program(
+        &self,
+        bound: BoundProgram,
+    ) -> Receiver<anyhow::Result<ProgramReport>> {
+        let (tx, rx) = sync_channel(1);
+        let home = self
+            .next_program
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            % self.queues.len();
+        self.queues[home].push(
+            Submission { payload: Payload::Program(Box::new(bound), tx), home },
+            self.cfg.queue_depth,
+        );
+        rx
+    }
+
+    /// Submit a program and wait for its report.
+    pub fn run_program(&self, bound: BoundProgram) -> anyhow::Result<ProgramReport> {
+        self.submit_program(bound).recv().expect("shard dropped reply")
     }
 
     /// Submit many jobs (the batch front door of the tentpole API).
@@ -554,10 +621,59 @@ mod tests {
         assert_eq!(per_shard.len(), 4);
     }
 
+    /// Programs interleave with job traffic on the sharded dispatcher:
+    /// both match their oracles, and a program never loses a pending
+    /// batch's jobs (it flushes them first).
+    #[test]
+    fn programs_interleave_with_jobs() {
+        use crate::program::{builtin, reference, BoundProgram};
+        let cfg = ShardConfig {
+            shards: 2,
+            queue_depth: 32,
+            flush_after: Duration::from_millis(5),
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start(cfg, native).unwrap();
+        let mut rng = Rng::new(23);
+        let plan = Arc::new(builtin::dot(Radix::TERNARY, 5).plan());
+        let mut job_rx = Vec::new();
+        let mut prog_rx = Vec::new();
+        for id in 0..10 {
+            let (job, expect) = add_job(id, &mut rng, 20, 5);
+            job_rx.push((svc.submit(job), expect));
+            let rows = 1 + rng.index(40);
+            let a: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(5, 3), Radix::TERNARY)).collect();
+            let b: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(5, 3), Radix::TERNARY)).collect();
+            let want =
+                reference::evaluate(plan.program(), &[("a", a.clone()), ("b", b.clone())]);
+            let bound = BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true).unwrap();
+            prog_rx.push((svc.submit_program(bound), want));
+        }
+        for (rx, expect) in job_rx {
+            assert_eq!(rx.recv().unwrap().unwrap().values, expect);
+        }
+        for (rx, want) in prog_rx {
+            assert_eq!(rx.recv().unwrap().unwrap().outputs, want);
+        }
+        let (agg, _) = svc.shutdown();
+        assert_eq!(agg.jobs, 20, "10 jobs + 10 programs");
+        assert_eq!(agg.programs, 10);
+        assert_eq!(agg.fused_steps, 10);
+    }
+
     fn submission(rng: &mut Rng, id: u64) -> Submission {
         let (job, _) = add_job(id, rng, 2, 3);
         let (tx, _rx) = sync_channel(1);
-        Submission { job, home: 0, reply: tx }
+        Submission { payload: Payload::Job(job, tx), home: 0 }
+    }
+
+    fn submission_id(sub: &Submission) -> u64 {
+        match &sub.payload {
+            Payload::Job(job, _) => job.id,
+            Payload::Program(..) => unreachable!("test submissions are jobs"),
+        }
     }
 
     /// Single-threaded ShardQueue transitions: TimedOut on empty, FIFO
@@ -574,15 +690,15 @@ mod tests {
         q.push(submission(&mut rng, 2), 4);
         q.push(submission(&mut rng, 3), 4);
         // steal (try_pop) and pop drain in FIFO order
-        assert_eq!(q.try_pop().unwrap().job.id, 1);
+        assert_eq!(submission_id(&q.try_pop().unwrap()), 1);
         match q.pop(tiny) {
-            Pop::Item(sub) => assert_eq!(sub.job.id, 2),
+            Pop::Item(sub) => assert_eq!(submission_id(&sub), 2),
             _ => panic!("expected an item"),
         }
         // shutdown: the remaining item drains before Closed is reported
         q.close();
         match q.pop(tiny) {
-            Pop::Item(sub) => assert_eq!(sub.job.id, 3),
+            Pop::Item(sub) => assert_eq!(submission_id(&sub), 3),
             _ => panic!("items must drain before Closed"),
         }
         assert!(matches!(q.pop(tiny), Pop::Closed));

@@ -30,6 +30,10 @@
 //!   coalescing into shared tiles, a sharded work-stealing dispatch layer,
 //!   and backends (native simulator or AOT-compiled XLA executables via
 //!   PJRT).
+//! * [`program`] — the dataflow compiler above the coordinator: multi-op
+//!   AP programs (element-wise ops + segmented reductions) planned onto
+//!   CAM column fields so intermediates stay resident between ops, with
+//!   `Mac → Reduce` fusion and per-step attribution.
 //! * [`runtime`] — PJRT client wrapper and artifact loading.
 //! * [`exp`] — experiment harness regenerating every paper table/figure.
 //!
@@ -54,6 +58,7 @@ pub mod circuit;
 pub mod energy;
 pub mod baselines;
 pub mod coordinator;
+pub mod program;
 pub mod runtime;
 pub mod exp;
 

@@ -4,6 +4,7 @@
 //!   exp <id|all>      regenerate a paper table/figure (results/ CSVs)
 //!   lut <fn>          generate + print a LUT (add|sub|mac, any radix)
 //!   run               run a vector workload through the engine service
+//!   program           compile + run a multi-op dataflow program
 //!   artifacts         list the AOT artifact registry
 //!   sweep             circuit design-space exploration summary
 
@@ -13,10 +14,12 @@ use mvap::exp::run_experiment;
 use mvap::func::{full_add, full_sub, mac_digit};
 use mvap::lutgen::{generate_blocked, generate_non_blocked, validate_lut};
 use mvap::mvl::{Radix, Word};
+use mvap::program::{builtin, reference, BoundProgram};
 use mvap::runtime::Registry;
 use mvap::util::cli::Args;
 use mvap::util::Rng;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 mvap — in-memory multi-valued associative processor
@@ -27,13 +30,20 @@ USAGE:
   mvap lut <add|sub|mac> [--radix N] [--blocked] [--dot]
   mvap run [--op add|sub|mac|reduce] [--rows N] [--digits P] [--radix N]
            [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
-           [--blocked] [--artifacts DIR] [--seed S]
+           [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
            [--shards S] [--flush-us U] [--batch-rows R] [--batch-jobs B]
            [--no-steal] [--no-coalesce]
            (--shards > 0 runs the sharded, cross-job-coalescing dispatcher;
             otherwise the worker pool coalesces each submitted batch unless
             --no-coalesce. --op reduce sums each job's rows down to one
             value with the in-engine tree reduction — native backends only)
+  mvap program --name dot|fir|poly_eval|affine_layer
+           [--rows N] [--digits P] [--radix N] [--taps T] [--degree D]
+           [--neurons M] [--backend native|native-bitsliced] [--workers W]
+           [--shards S] [--blocked|--non-blocked] [--seed S] [--dump-plan]
+           (compiles the builtin to a field-allocated plan and runs the
+            whole op DAG as ONE engine invocation — intermediates stay
+            CAM-resident; --dump-plan prints the schedule and exits)
   mvap artifacts [--artifacts DIR]
   mvap help
 ";
@@ -44,6 +54,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("lut") => cmd_lut(&args),
         Some("run") => cmd_run(&args),
+        Some("program") => cmd_program(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -57,6 +68,19 @@ fn main() {
         1
     });
     std::process::exit(code);
+}
+
+/// Resolve the LUT execution mode from `--blocked` / `--non-blocked`
+/// (default: blocked). Passing both used to silently resolve to blocked —
+/// now an explicit error.
+fn resolve_blocked(args: &Args) -> anyhow::Result<bool> {
+    let blocked = args.flag("blocked");
+    let non_blocked = args.flag("non-blocked");
+    anyhow::ensure!(
+        !(blocked && non_blocked),
+        "--blocked and --non-blocked are mutually exclusive"
+    );
+    Ok(!non_blocked)
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
@@ -122,7 +146,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let backend: BackendKind = args.get_or("backend", "native").parse().map_err(anyhow::Error::msg)?;
     let workers = args.get_parse_or("workers", 2usize);
     let jobs = args.get_parse_or("jobs", 4usize);
-    let blocked = args.flag("blocked") || !args.flag("non-blocked");
+    let blocked = resolve_blocked(args)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let seed = args.get_parse_or("seed", 7u64);
     let shards = args.get_parse_or("shards", 0usize);
@@ -215,6 +239,90 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_program(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("name", "dot");
+    let rows = args.get_parse_or("rows", 1024usize);
+    let digits = args.get_parse_or("digits", 8usize);
+    let radix = Radix(args.get_parse_or("radix", 3u8));
+    let backend: BackendKind =
+        args.get_or("backend", "native").parse().map_err(anyhow::Error::msg)?;
+    let workers = args.get_parse_or("workers", 2usize);
+    let shards = args.get_parse_or("shards", 0usize);
+    let blocked = resolve_blocked(args)?;
+    let seed = args.get_parse_or("seed", 7u64);
+    let taps = args.get_parse_or("taps", 4usize);
+    let degree = args.get_parse_or("degree", 3usize);
+    let neurons = args.get_parse_or("neurons", 16usize);
+    let dump_plan = args.flag("dump-plan");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown();
+    anyhow::ensure!(
+        backend != BackendKind::Pjrt,
+        "program execution is native-only — use --backend native or native-bitsliced"
+    );
+
+    let program = match name.as_str() {
+        "dot" => builtin::dot(radix, digits),
+        "fir" => builtin::fir(radix, digits, taps),
+        "poly_eval" => builtin::poly_eval(radix, digits, degree),
+        "affine_layer" => {
+            anyhow::ensure!(
+                neurons >= 1 && rows % neurons == 0,
+                "--neurons {neurons} must divide --rows {rows}"
+            );
+            builtin::affine_layer(radix, digits, rows / neurons)
+        }
+        other => anyhow::bail!("unknown program '{other}' (dot|fir|poly_eval|affine_layer)"),
+    };
+    let plan = Arc::new(program.plan());
+    if dump_plan {
+        print!("{}", plan.render());
+        return Ok(());
+    }
+
+    let mut rng = Rng::new(seed);
+    let inputs: Vec<(String, Vec<Word>)> = plan
+        .program()
+        .input_names()
+        .iter()
+        .map(|n| {
+            // the affine bias is the builtins' only per-segment input
+            let r = if *n == "bias" { neurons } else { rows };
+            let vec: Vec<Word> = (0..r)
+                .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+                .collect();
+            (n.to_string(), vec)
+        })
+        .collect();
+    let borrowed: Vec<(&str, Vec<Word>)> =
+        inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+    let expect = reference::evaluate(plan.program(), &borrowed);
+    let bound = BoundProgram::bind(&plan, borrowed, blocked)?;
+
+    let started = std::time::Instant::now();
+    let (report, metrics) = if shards > 0 {
+        let cfg = ShardConfig { shards, ..ShardConfig::default() };
+        let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
+        let report = svc.run_program(bound)?;
+        let (agg, _) = svc.shutdown();
+        (report, agg)
+    } else {
+        let svc = EngineService::start_kind(workers, 2, backend, artifacts)?;
+        let report = svc.run_program(bound)?;
+        (report, svc.shutdown())
+    };
+    let wall = started.elapsed();
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.outputs == expect,
+        "program outputs diverge from the host reference"
+    );
+    println!("outputs verified against the host reference ✓");
+    println!("—— {}", metrics.summary());
+    println!("—— wall {wall:?}");
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     args.reject_unknown();
@@ -227,4 +335,30 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &[&str]) -> Args {
+        Args::parse(raw.iter().map(|s| s.to_string()))
+    }
+
+    /// CLI mode resolution: blocked by default, `--non-blocked` switches,
+    /// and the once-silent `--blocked --non-blocked` conflict now errors.
+    #[test]
+    fn mode_flags_resolve() {
+        assert!(resolve_blocked(&parse(&["run"])).unwrap());
+        assert!(resolve_blocked(&parse(&["run", "--blocked"])).unwrap());
+        assert!(!resolve_blocked(&parse(&["run", "--non-blocked"])).unwrap());
+    }
+
+    #[test]
+    fn conflicting_mode_flags_error() {
+        let err = resolve_blocked(&parse(&["run", "--blocked", "--non-blocked"])).unwrap_err();
+        assert!(format!("{err}").contains("mutually exclusive"), "{err}");
+        let err = resolve_blocked(&parse(&["run", "--non-blocked", "--blocked"])).unwrap_err();
+        assert!(format!("{err}").contains("mutually exclusive"), "{err}");
+    }
 }

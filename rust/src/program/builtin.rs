@@ -1,0 +1,115 @@
+//! Built-in programs: the compound AP workloads of the paper's §I
+//! motivation (dot products, filters, NN layers, polynomial evaluation),
+//! expressed on the program IR. Each builder returns a plain [`Program`]
+//! — callers plan, bind, and execute it like any hand-built one (the CLI
+//! exposes them via `mvap program --name …`).
+
+use super::ir::{Program, SegmentSpec};
+use crate::mvl::Radix;
+
+/// Dot product: `out = Σ_i a[i]·b[i]` — one digit-wise MAC fused with one
+/// full-vector reduction (the planner's two-field, zero-round-trip plan).
+/// Inputs: `a`, `b` (N rows). Integer-exact for single-digit operands.
+pub fn dot(radix: Radix, digits: usize) -> Program {
+    let mut p = Program::new("dot", radix, digits);
+    let a = p.input("a");
+    let b = p.input("b");
+    let prod = p.mac(a, b);
+    let sum = p.reduce(prod, SegmentSpec::All);
+    p.output(sum);
+    p
+}
+
+/// FIR filter with `taps` taps: `y[n] = Σ_k h_k·x_k[n]` where `x_k` is
+/// the input delayed by `k` samples (the host provides the delayed views
+/// — windowing is data layout, not arithmetic). Inputs: `x0..x{taps-1}`
+/// and `h0..h{taps-1}` (broadcast coefficient vectors), all N rows. The
+/// per-tap MACs form one wave; the pairwise add tree folds them in
+/// `⌈log₂ taps⌉` further waves.
+pub fn fir(radix: Radix, digits: usize, taps: usize) -> Program {
+    assert!(taps >= 1, "fir needs at least one tap");
+    let mut p = Program::new("fir", radix, digits);
+    let xs: Vec<_> = (0..taps).map(|k| p.input(&format!("x{k}"))).collect();
+    let hs: Vec<_> = (0..taps).map(|k| p.input(&format!("h{k}"))).collect();
+    let mut terms: Vec<_> = (0..taps).map(|k| p.mac(hs[k], xs[k])).collect();
+    while terms.len() > 1 {
+        let mut next = Vec::with_capacity((terms.len() + 1) / 2);
+        for pair in terms.chunks(2) {
+            next.push(if pair.len() == 2 { p.add(pair[0], pair[1]) } else { pair[0] });
+        }
+        terms = next;
+    }
+    p.output(terms[0]);
+    p
+}
+
+/// Horner polynomial evaluation of degree `degree`:
+/// `y = (((c_d ⊗ x) + c_{d-1}) ⊗ x + …) + c_0` per row, where `⊗` is the
+/// digit-wise MAC. Inputs: `x` and `c0..c{degree}`, all N rows.
+pub fn poly_eval(radix: Radix, digits: usize, degree: usize) -> Program {
+    assert!(degree >= 1, "poly_eval needs degree ≥ 1");
+    let mut p = Program::new("poly_eval", radix, digits);
+    let x = p.input("x");
+    let cs: Vec<_> = (0..=degree).map(|k| p.input(&format!("c{k}"))).collect();
+    let mut acc = cs[degree];
+    for k in (0..degree).rev() {
+        acc = p.mac(x, acc);
+        acc = p.add(cs[k], acc);
+    }
+    p.output(acc);
+    p
+}
+
+/// Affine layer `y = W·x + bias` for M neurons of `per_neuron` inputs
+/// each, as ONE program over `M·per_neuron` rows: `w` holds the flattened
+/// weight matrix, `x` the activations tiled per neuron; a fused MAC +
+/// segmented reduction (`Every(per_neuron)`) folds each neuron's products
+/// to its dot product, the heads compact to rows `[0, M)`, and the bias
+/// (an `M`-row per-segment input) adds in place. The whole layer is a
+/// single engine invocation — no intermediate ever returns to the host.
+pub fn affine_layer(radix: Radix, digits: usize, per_neuron: usize) -> Program {
+    assert!(per_neuron >= 1, "affine_layer needs at least one input per neuron");
+    let mut p = Program::new("affine_layer", radix, digits);
+    let w = p.input("w");
+    let x = p.input("x");
+    let prod = p.mac(w, x);
+    let sums = p.reduce(prod, SegmentSpec::Every(per_neuron));
+    let bias = p.input_like("bias", sums);
+    let y = p.add(bias, sums);
+    p.output(y);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_shapes() {
+        let d = dot(Radix::TERNARY, 8).plan();
+        assert_eq!((d.num_fields, d.fused_steps, d.resident_reuses), (2, 1, 1));
+
+        let f = fir(Radix::TERNARY, 8, 4).plan();
+        // 4 macs + 3 adds, no copies (every term consumed exactly once)
+        assert_eq!(f.steps().len(), 7);
+        assert_eq!(f.resident_reuses, 6);
+        assert_eq!(f.fused_steps, 0);
+        let max_wave = f.steps().iter().map(|s| s.wave).max().unwrap();
+        assert_eq!(max_wave, 3, "mac wave + ⌈log₂ 4⌉ add waves");
+
+        let h = poly_eval(Radix::TERNARY, 8, 3).plan();
+        // 3 × (mac + add), acc threads through in place
+        assert_eq!(h.steps().len(), 6);
+
+        let a = affine_layer(Radix::TERNARY, 8, 16).plan();
+        assert_eq!(a.fused_steps, 1);
+        assert_eq!(a.resident_reuses, 2, "reduce eats the products, add eats the sums");
+        assert_eq!(a.num_fields, 3, "w, x, bias — the dead w field hosts the fold");
+    }
+
+    #[test]
+    fn single_tap_fir_is_one_mac() {
+        let f = fir(Radix::TERNARY, 4, 1).plan();
+        assert_eq!(f.steps().len(), 1);
+    }
+}

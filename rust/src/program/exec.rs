@@ -1,0 +1,194 @@
+//! The program executor core: runs a [`BoundProgram`]'s steps on one CAM
+//! array, entirely inside the chosen storage backend — intermediates never
+//! leave the array, kernels come precompiled from the coordinator's
+//! signature-keyed cache, and every step's statistics are attributed
+//! exactly (garbage rows past a step's live range land in a discarded
+//! tail block, the same mechanism as tile padding).
+//!
+//! This module is storage-level plumbing; the coordinator wraps it:
+//! [`crate::coordinator::Backend::run_program`] supplies storage + cached
+//! kernels, [`crate::coordinator::VectorEngine::execute_program`] prices
+//! the result into a [`super::ProgramReport`].
+
+use super::ir::EwOp;
+use super::plan::{BoundProgram, FieldId, StepKind};
+use crate::ap::{reduce_fields, Ap, ApStats, ExecMode, FieldSpan, LutKernel, ReduceSummary};
+use crate::cam::{CamStorage, StorageKind};
+use crate::lutgen::Lut;
+use crate::mvl::Word;
+use std::sync::Arc;
+
+/// The LUT programs a plan needs, built by the engine's LUT cache (only
+/// the families the plan's steps actually use are `Some`).
+#[derive(Clone, Debug, Default)]
+pub struct ProgramLuts {
+    pub add: Option<Lut>,
+    pub sub: Option<Lut>,
+    pub mac: Option<Lut>,
+    pub copy: Option<Lut>,
+}
+
+/// [`ProgramLuts`] with compiled kernels attached (drawn from the
+/// backend's [`crate::ap::KernelCache`], so a program's LUTs compile once
+/// per process, not once per program run).
+pub struct ProgramKernels<'a> {
+    pub add: Option<(&'a Lut, Arc<LutKernel>)>,
+    pub sub: Option<(&'a Lut, Arc<LutKernel>)>,
+    pub mac: Option<(&'a Lut, Arc<LutKernel>)>,
+    pub copy: Option<(&'a Lut, Arc<LutKernel>)>,
+}
+
+impl<'a> ProgramKernels<'a> {
+    /// Typed slot access — keyed by op, not by display string, so a new
+    /// family is a compile error here rather than a runtime surprise.
+    fn ew(&self, op: EwOp) -> anyhow::Result<(&'a Lut, &Arc<LutKernel>)> {
+        match op {
+            EwOp::Add => Self::require(&self.add, "add"),
+            EwOp::Sub => Self::require(&self.sub, "sub"),
+            EwOp::Mac => Self::require(&self.mac, "mac"),
+        }
+    }
+
+    fn copy(&self) -> anyhow::Result<(&'a Lut, &Arc<LutKernel>)> {
+        Self::require(&self.copy, "copy")
+    }
+
+    fn require(
+        slot: &Option<(&'a Lut, Arc<LutKernel>)>,
+        which: &'static str,
+    ) -> anyhow::Result<(&'a Lut, &Arc<LutKernel>)> {
+        slot.as_ref()
+            .map(|(lut, kernel)| (*lut, kernel))
+            .ok_or_else(|| anyhow::anyhow!("plan requires the '{which}' LUT but none was built"))
+    }
+}
+
+/// What one program execution produced, before pricing: raw outputs,
+/// per-step statistics, and the reduce summaries (rounds / rows moved,
+/// compaction movement included) for the steps that folded.
+#[derive(Clone, Debug)]
+pub struct ProgramRun {
+    /// One vector per program output (values are mod `radix^digits`; the
+    /// carry column is internal plumbing, cleared between steps).
+    pub outputs: Vec<Vec<Word>>,
+    /// Statistics per plan step, exactly what a solo run of that step
+    /// over its live rows would record.
+    pub step_stats: Vec<ApStats>,
+    /// Fold summaries for reduce / fused steps (`None` elsewhere).
+    pub step_summaries: Vec<Option<ReduceSummary>>,
+}
+
+/// Execute `bound` on a fresh array in `kind` storage. The array is
+/// `rows × (num_fields·digits + 1)`: inputs load once, every step runs on
+/// CAM-resident data, and only the outputs are extracted at the end.
+pub fn run_storage(
+    kind: StorageKind,
+    bound: &BoundProgram,
+    kernels: &ProgramKernels,
+) -> anyhow::Result<ProgramRun> {
+    let plan = &bound.plan;
+    let prog = plan.program();
+    let radix = prog.radix();
+    let p = prog.digits();
+    let rows = bound.rows;
+    let cols = plan.num_fields * p + 1;
+    let carry = plan.num_fields * p;
+    let mode = if bound.blocked { ExecMode::Blocked } else { ExecMode::NonBlocked };
+    let col = |f: FieldId, d: usize| f.0 * p + d;
+
+    // load: zero array (no don't-cares — keeps the plane-native fast
+    // path), inputs into their fields over their own row ranges
+    let mut data = vec![0u8; rows * cols];
+    for ((_, field), input) in plan.loads.iter().zip(&bound.inputs) {
+        for (r, w) in input.iter().enumerate() {
+            for d in 0..p {
+                data[r * cols + col(*field, d)] = w.digits()[d];
+            }
+        }
+    }
+    let storage = CamStorage::from_data(kind, radix, rows, cols, &data);
+    drop(data);
+    let mut ap = Ap::with_storage(storage);
+
+    let mut step_stats = Vec::with_capacity(plan.steps().len());
+    let mut step_summaries = Vec::with_capacity(plan.steps().len());
+    for (s, step) in plan.steps().iter().enumerate() {
+        let live = bound.step_live[s];
+        // stats attribution: the live block is the step's; rows past it
+        // hold dead data and their block is discarded (tile-padding rule)
+        let stat_bounds: Vec<usize> = if live == rows { vec![rows] } else { vec![live, rows] };
+        match &step.kind {
+            StepKind::Copy { src, dst } => {
+                let (lut, kernel) = kernels.copy()?;
+                let positions: Vec<Vec<usize>> =
+                    (0..p).map(|d| vec![col(*src, d), col(*dst, d)]).collect();
+                let blocks = ap.apply_lut_multi_fast_segmented_kernel(
+                    lut, &positions, mode, &stat_bounds, kernel,
+                );
+                step_stats.push(blocks.into_iter().next().expect("live block"));
+                step_summaries.push(None);
+            }
+            StepKind::Ew { op, a, b } => {
+                let (lut, kernel) = kernels.ew(*op)?;
+                let span =
+                    FieldSpan { p, a_base: col(*a, 0), b_base: col(*b, 0), carry };
+                // element-wise steps assume carry-in 0 on every row
+                ap.storage_mut().fill_rows(carry, 0, rows, 0);
+                let blocks = ap.apply_lut_multi_fast_segmented_kernel(
+                    lut, &span.positions(), mode, &stat_bounds, kernel,
+                );
+                step_stats.push(blocks.into_iter().next().expect("live block"));
+                step_summaries.push(None);
+            }
+            StepKind::Reduce { b, scratch, compact }
+            | StepKind::MacReduce { b, scratch, compact, .. } => {
+                let seg_bounds = bound.step_bounds[s].as_ref().expect("reduce bounds");
+                let mut stats = ApStats::default();
+                if let StepKind::MacReduce { a, .. } = &step.kind {
+                    let (lut, kernel) = kernels.ew(EwOp::Mac)?;
+                    let span =
+                        FieldSpan { p, a_base: col(*a, 0), b_base: col(*b, 0), carry };
+                    ap.storage_mut().fill_rows(carry, 0, rows, 0);
+                    let blocks = ap.apply_lut_multi_fast_segmented_kernel(
+                        lut, &span.positions(), mode, &stat_bounds, kernel,
+                    );
+                    stats.merge(&blocks[0]);
+                }
+                let (lut, kernel) = kernels.ew(EwOp::Add)?;
+                let span =
+                    FieldSpan { p, a_base: col(*scratch, 0), b_base: col(*b, 0), carry };
+                let (blocks, mut summary) =
+                    reduce_fields(&mut ap, &span, lut, mode, kernel, seg_bounds, &stat_bounds);
+                stats.merge(&blocks[0]);
+                if *compact {
+                    // segment heads move to rows [0, k) so later steps see
+                    // a dense k-row value; head i sits at start_i ≥ i and
+                    // moves only downward, so in-order movement is safe
+                    let mut start = 0usize;
+                    for (i, &end) in seg_bounds.iter().enumerate() {
+                        if start != i {
+                            for d in 0..p {
+                                ap.storage_mut().copy_rows(col(*b, d), start, col(*b, d), i, 1);
+                            }
+                            summary.rows_moved += 1;
+                        }
+                        start = end;
+                    }
+                }
+                step_stats.push(stats);
+                step_summaries.push(Some(summary));
+            }
+        }
+    }
+
+    let mut outputs = Vec::with_capacity(plan.outputs.len());
+    for ((_, field), rows_of) in plan.outputs.iter().zip(&bound.output_rows) {
+        let mut vec = Vec::with_capacity(rows_of.len());
+        for r in rows_of.iter() {
+            let digits: Vec<u8> = (0..p).map(|d| ap.storage().get(r, col(*field, d))).collect();
+            vec.push(Word::from_digits(digits, radix));
+        }
+        outputs.push(vec);
+    }
+    Ok(ProgramRun { outputs, step_stats, step_summaries })
+}

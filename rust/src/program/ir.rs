@@ -1,0 +1,313 @@
+//! The program IR: a DAG of element-wise AP ops and segmented reductions
+//! over named input vectors, built with a typed builder.
+//!
+//! A [`Program`] is pure structure — no operand data, no row counts, no
+//! execution mode. Values are identified by [`ValueId`]s handed out by the
+//! builder, which makes the op list a DAG by construction (an op can only
+//! reference values that already exist). Row counts attach at *bind* time
+//! ([`super::plan::BoundProgram`]); the only static row information is the
+//! [`RowClass`] — whether a value spans the program's driving row count or
+//! the segment count of a particular reduce — which is what lets the
+//! builder reject element-wise ops over mismatched shapes before any data
+//! exists.
+
+use crate::mvl::Radix;
+
+/// Identifies a value (an op result) inside one [`Program`]. Only valid
+/// for the program that issued it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ValueId(pub(crate) usize);
+
+/// Element-wise op kinds. Each maps to one LUT family applied digit-wise
+/// with the shared carry column rippling ([`crate::func`]): the result
+/// overwrites operand `b` in place (`b ← a ⊕ b`), `a` is read-only.
+///
+/// `Mac` is the *digit-wise* multiply-accumulate `b_d ← a_d·b_d + carry`
+/// — integer multiplication only when the operands are single-digit
+/// values (the ternary-NN workload), otherwise a digit-local product with
+/// carry rippling. The host reference ([`super::reference`]) models
+/// exactly these semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EwOp {
+    /// `b ← a + b` (carry ripple).
+    Add,
+    /// `b ← a − b` (borrow ripple).
+    Sub,
+    /// `b_d ← a_d·b_d + carry` per digit (carry ripple).
+    Mac,
+}
+
+impl EwOp {
+    /// Short tag used in plan dumps and step labels.
+    pub fn tag(self) -> &'static str {
+        match self {
+            EwOp::Add => "add",
+            EwOp::Sub => "sub",
+            EwOp::Mac => "mac",
+        }
+    }
+}
+
+/// How a reduce splits its operand rows into independently-summed
+/// segments. Resolved against the operand's concrete row count at bind
+/// time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SegmentSpec {
+    /// One segment over all rows → a single sum.
+    All,
+    /// Uniform segments of `n` rows each (the operand's row count must be
+    /// divisible by `n` at bind time).
+    Every(usize),
+    /// Explicit cumulative end offsets (strictly increasing; the last must
+    /// equal the operand's row count at bind time).
+    Bounds(Vec<usize>),
+}
+
+/// Static row shape of a value: either the program's driving row count, or
+/// the segment count of the reduce op at the given op index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowClass {
+    /// Spans the full driving row count `N` (all plain inputs).
+    Rows,
+    /// Spans the segment count of reduce op `op_index` (that reduce's
+    /// output, and any input declared with [`Program::input_like`]).
+    SegsOf(usize),
+}
+
+/// One node of the program DAG.
+#[derive(Clone, Debug)]
+pub enum ProgramOp {
+    /// A named input vector, loaded by the host once at program start.
+    Input { name: String },
+    /// In-place element-wise op `b ← a ⊕ b`.
+    Ew { op: EwOp, a: ValueId, b: ValueId },
+    /// Segmented tree reduction of `v` (one sum per segment).
+    Reduce { v: ValueId, spec: SegmentSpec },
+}
+
+/// A compiled-LUT dataflow program: element-wise ops and segmented
+/// reductions over named input vectors, with every intermediate staying
+/// CAM-resident between steps once planned ([`super::plan::Plan`]).
+///
+/// # Examples
+///
+/// A dot product (the [`super::builtin::dot`] builtin):
+///
+/// ```
+/// use mvap::program::{Program, SegmentSpec};
+/// use mvap::mvl::Radix;
+///
+/// let mut prog = Program::new("dot", Radix::TERNARY, 8);
+/// let a = prog.input("a");
+/// let b = prog.input("b");
+/// let prod = prog.mac(a, b);
+/// let sum = prog.reduce(prod, SegmentSpec::All);
+/// prog.output(sum);
+/// assert_eq!(prog.input_names(), vec!["a", "b"]);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Program {
+    name: String,
+    radix: Radix,
+    digits: usize,
+    ops: Vec<ProgramOp>,
+    klass: Vec<RowClass>,
+    outputs: Vec<ValueId>,
+}
+
+impl Program {
+    /// Empty program over `digits`-wide radix-`radix` words.
+    pub fn new(name: &str, radix: Radix, digits: usize) -> Program {
+        assert!(digits >= 1, "programs need at least one digit");
+        Program {
+            name: name.to_string(),
+            radix,
+            digits,
+            ops: Vec::new(),
+            klass: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, op: ProgramOp, class: RowClass) -> ValueId {
+        self.ops.push(op);
+        self.klass.push(class);
+        ValueId(self.ops.len() - 1)
+    }
+
+    fn check(&self, v: ValueId) {
+        assert!(v.0 < self.ops.len(), "foreign or future ValueId");
+    }
+
+    /// Declare a named input spanning the driving row count.
+    pub fn input(&mut self, name: &str) -> ValueId {
+        assert!(!name.is_empty(), "input names must be non-empty");
+        assert!(
+            self.input_names().iter().all(|n| *n != name),
+            "duplicate input name '{name}'"
+        );
+        self.push(ProgramOp::Input { name: name.to_string() }, RowClass::Rows)
+    }
+
+    /// Declare a named input with the same row class as `like` — how a
+    /// per-segment operand (e.g. a bias vector added after a segmented
+    /// reduce) enters the program.
+    pub fn input_like(&mut self, name: &str, like: ValueId) -> ValueId {
+        self.check(like);
+        assert!(!name.is_empty(), "input names must be non-empty");
+        assert!(
+            self.input_names().iter().all(|n| *n != name),
+            "duplicate input name '{name}'"
+        );
+        let class = self.klass[like.0];
+        self.push(ProgramOp::Input { name: name.to_string() }, class)
+    }
+
+    /// Element-wise op `b ← a ⊕ b`; operands must share a row class.
+    pub fn ew(&mut self, op: EwOp, a: ValueId, b: ValueId) -> ValueId {
+        self.check(a);
+        self.check(b);
+        assert_eq!(
+            self.klass[a.0], self.klass[b.0],
+            "element-wise operands must share a row class"
+        );
+        let class = self.klass[b.0];
+        self.push(ProgramOp::Ew { op, a, b }, class)
+    }
+
+    /// `a + b` element-wise.
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.ew(EwOp::Add, a, b)
+    }
+
+    /// `a − b` element-wise.
+    pub fn sub(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.ew(EwOp::Sub, a, b)
+    }
+
+    /// Digit-wise multiply-accumulate.
+    pub fn mac(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.ew(EwOp::Mac, a, b)
+    }
+
+    /// Segmented tree reduction of `v`: one `sum mod radix^digits` per
+    /// segment.
+    pub fn reduce(&mut self, v: ValueId, spec: SegmentSpec) -> ValueId {
+        self.check(v);
+        match &spec {
+            SegmentSpec::All => {}
+            SegmentSpec::Every(n) => assert!(*n >= 1, "Every(0) segments"),
+            SegmentSpec::Bounds(b) => {
+                assert!(!b.is_empty(), "empty segment bounds");
+                assert!(
+                    b[0] > 0 && b.windows(2).all(|w| w[0] < w[1]),
+                    "segment bounds must be strictly increasing (no empty segments)"
+                );
+            }
+        }
+        let idx = self.ops.len();
+        self.push(ProgramOp::Reduce { v, spec }, RowClass::SegsOf(idx))
+    }
+
+    /// Mark a value as a program output (extracted by the executor).
+    pub fn output(&mut self, v: ValueId) {
+        self.check(v);
+        self.outputs.push(v);
+    }
+
+    /// Program name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Digit radix.
+    pub fn radix(&self) -> Radix {
+        self.radix
+    }
+
+    /// Digits per value word.
+    pub fn digits(&self) -> usize {
+        self.digits
+    }
+
+    /// The op DAG in construction (= topological) order.
+    pub fn ops(&self) -> &[ProgramOp] {
+        &self.ops
+    }
+
+    /// Row class of a value.
+    pub fn row_class(&self, v: ValueId) -> RowClass {
+        self.klass[v.0]
+    }
+
+    /// Output values in declaration order.
+    pub fn outputs(&self) -> &[ValueId] {
+        &self.outputs
+    }
+
+    /// Input names in declaration (= load) order.
+    pub fn input_names(&self) -> Vec<&str> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                ProgramOp::Input { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_tracks_row_classes() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let prod = p.mac(a, b);
+        assert_eq!(p.row_class(prod), RowClass::Rows);
+        let s = p.reduce(prod, SegmentSpec::Every(8));
+        assert_eq!(p.row_class(s), RowClass::SegsOf(3));
+        let bias = p.input_like("bias", s);
+        assert_eq!(p.row_class(bias), RowClass::SegsOf(3));
+        let y = p.add(bias, s);
+        p.output(y);
+        assert_eq!(p.outputs(), &[y]);
+        assert_eq!(p.input_names(), vec!["a", "b", "bias"]);
+        assert_eq!(p.ops().len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "share a row class")]
+    fn mixed_row_classes_rejected() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let s = p.reduce(a, SegmentSpec::All);
+        p.add(a, s);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate input name")]
+    fn duplicate_inputs_rejected() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        p.input("a");
+        p.input("a");
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn bad_bounds_rejected() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        p.reduce(a, SegmentSpec::Bounds(vec![3, 3]));
+    }
+
+    #[test]
+    fn ew_op_tags() {
+        assert_eq!(EwOp::Add.tag(), "add");
+        assert_eq!(EwOp::Sub.tag(), "sub");
+        assert_eq!(EwOp::Mac.tag(), "mac");
+    }
+}

@@ -1,0 +1,124 @@
+//! The program compiler: multi-op AP *programs* with CAM-resident
+//! intermediates.
+//!
+//! The LUT methodology makes the AP a general vector-arithmetic engine,
+//! but its payoff comes from *compound* workloads — dot products,
+//! filters, NN layers — not single adds. A [`Job`] runs one op and
+//! round-trips every intermediate through the host; this subsystem
+//! compiles a DAG of ops into a plan whose intermediates never leave the
+//! CAM:
+//!
+//! * [`ir`] — [`Program`]/[`ValueId`]/[`ProgramOp`]: element-wise
+//!   `Add`/`Sub`/`Mac` and segmented `Reduce` over named input vectors,
+//!   built with a typed builder.
+//! * [`plan`] — the planner: topological schedule, value liveness, CAM
+//!   column *field* allocation (intermediates stay resident between ops;
+//!   dead fields recycle), `Mac → Reduce` fusion into single lockstep-fold
+//!   steps, and `Copy` insertion where in-place execution would destroy a
+//!   still-live operand. [`BoundProgram`] attaches concrete operand
+//!   vectors and resolves all row counts.
+//! * [`exec`] — the storage-level executor: one array, one input load,
+//!   dependency-ordered steps with exact per-step statistics, outputs
+//!   extracted at the end.
+//! * [`builtin`] — ready-made programs (`dot`, `fir`, `poly_eval`,
+//!   `affine_layer`).
+//! * [`reference`] — the host digit-level oracle the differential suite
+//!   checks every backend against.
+//!
+//! Execution plugs into the coordinator: backends advertise
+//! [`crate::coordinator::Backend::supports_programs`],
+//! [`crate::coordinator::VectorEngine::execute_program`] prices each step
+//! into a [`ProgramReport`], and both
+//! [`crate::coordinator::EngineService`] and
+//! [`crate::coordinator::ShardedService`] accept bound programs alongside
+//! ordinary jobs.
+//!
+//! [`Job`]: crate::coordinator::Job
+
+pub mod ir;
+pub mod plan;
+pub mod exec;
+pub mod builtin;
+pub mod reference;
+
+pub use exec::{ProgramLuts, ProgramRun};
+pub use ir::{EwOp, Program, ProgramOp, RowClass, SegmentSpec, ValueId};
+pub use plan::{BoundProgram, FieldId, Plan, Step, StepKind};
+
+use crate::ap::ApStats;
+use crate::energy::EnergyBreakdown;
+use crate::mvl::Word;
+use std::time::Duration;
+
+/// One plan step's priced execution record.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Human-readable step label ([`Step::label`]).
+    pub label: String,
+    /// Dependency wave the step belongs to.
+    pub wave: usize,
+    /// Live rows the step operated on.
+    pub rows: usize,
+    /// Event statistics (exactly a solo run of this step's live rows).
+    pub stats: ApStats,
+    /// Priced energy for this step.
+    pub energy: EnergyBreakdown,
+    /// Modeled AP delay of this step (fold steps: rounds × adder delay).
+    pub delay_cycles: u64,
+}
+
+/// Result of executing a bound program: per-output values plus per-step
+/// and total attribution (stats, energy, modeled delay).
+#[derive(Clone, Debug)]
+pub struct ProgramReport {
+    /// Program name.
+    pub name: String,
+    /// One vector per declared output, mod `radix^digits`.
+    pub outputs: Vec<Vec<Word>>,
+    /// Per-step attribution, in execution order.
+    pub steps: Vec<StepReport>,
+    /// Whole-program statistics (the sum of the step blocks).
+    pub stats: ApStats,
+    /// Whole-program priced energy.
+    pub energy: EnergyBreakdown,
+    /// Whole-program modeled delay (steps execute serially on one array).
+    pub delay_cycles: u64,
+    /// Wall-clock execution time.
+    pub elapsed: Duration,
+    /// Operand edges served from CAM-resident intermediates (static plan
+    /// property, restated here for reporting).
+    pub resident_reuses: u64,
+    /// `Mac → Reduce` chains executed as single fused steps.
+    pub fused_steps: u64,
+}
+
+impl ProgramReport {
+    /// Multi-line human-readable rendering (the CLI's output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "program '{}': {} steps ({} fused, {} resident reuses) — \
+             energy {:.3e} J, delay {} cycles, {:?}\n",
+            self.name,
+            self.steps.len(),
+            self.fused_steps,
+            self.resident_reuses,
+            self.energy.total(),
+            self.delay_cycles,
+            self.elapsed,
+        );
+        for (i, s) in self.steps.iter().enumerate() {
+            out += &format!(
+                "  step {i:>2} (wave {}): {:<28} {:>8} rows — {:.3e} J, {} cycles\n",
+                s.wave,
+                s.label,
+                s.rows,
+                s.energy.total(),
+                s.delay_cycles,
+            );
+        }
+        for (i, o) in self.outputs.iter().enumerate() {
+            out += &format!("  output {i}: {} values\n", o.len());
+        }
+        out
+    }
+}

@@ -1,0 +1,894 @@
+//! The planner: schedules a [`Program`]'s DAG, computes value liveness,
+//! allocates CAM column *fields* so every intermediate stays resident in
+//! the array between ops, and fuses `Mac → Reduce` chains into single
+//! steps reusing the lockstep-fold machinery ([`crate::ap::reduce_fields`]).
+//!
+//! ## Field allocation
+//!
+//! The array has `num_fields` fields of `digits` columns each plus one
+//! shared carry column. Element-wise ops execute *in place* (`b ← a ⊕ b`),
+//! so an op's result inherits its `b` operand's field and **destroys the
+//! `b` value**; when `b` is still live afterwards (another consumer, or a
+//! program output), the planner inserts a [`StepKind::Copy`] (the
+//! `copy_digit` LUT) and runs the op on the copy. Fields free as their
+//! values die (linear-scan liveness with a free list), so deep programs
+//! reuse a small number of columns. A reduce folds its operand's field in
+//! place using a second *scratch* field for pairwise row movement — for a
+//! fused `Mac → Reduce`, the mac's `a` field doubles as the scratch when
+//! `a` dies at the step (the dot-product case: two fields total, exactly
+//! the `2p + 1` layout of a standalone reduce job).
+//!
+//! ## Fusion
+//!
+//! A `Reduce` fuses with the `Mac` producing its operand only when the
+//! reduce *immediately follows* the mac in the DAG and is the product's
+//! sole consumer. Adjacency is load-bearing, not cosmetic: fusing moves
+//! the mac's execution to the reduce's position, so any op in between
+//! could consume (and, being in-place, destroy) the mac's operands before
+//! they are read. (Found by the randomized planner sweep; see
+//! `rust/tests/program_differential.rs`.)
+//!
+//! ## Live rows and garbage
+//!
+//! After a segmented reduce a value spans one row per segment; the planner
+//! *compacts* segment heads to rows `[0, k)` only when the value is
+//! consumed again (pure outputs extract straight from the head rows). A
+//! CAM op always sweeps every array row, so rows past a step's live range
+//! execute over dead data — harmless for values (in-place ops only write
+//! their own field; garbage rows never feed a live row) and invisible in
+//! reports (per-step statistics are segment-attributed at the live bound
+//! and the garbage block is discarded, like tile padding).
+
+use super::ir::{EwOp, Program, ProgramOp, RowClass, SegmentSpec, ValueId};
+use crate::mvl::Word;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A column field of the planned array: columns
+/// `[id·digits, (id+1)·digits)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FieldId(pub usize);
+
+/// What one planned step executes on the array.
+#[derive(Clone, Debug)]
+pub enum StepKind {
+    /// Field copy via the `copy_digit` LUT (operand preservation).
+    Copy { src: FieldId, dst: FieldId },
+    /// In-place element-wise op `b ← a ⊕ b` with the shared carry column.
+    Ew { op: EwOp, a: FieldId, b: FieldId },
+    /// Segmented tree reduction folding field `b` in place, moving pair
+    /// rows through `scratch`.
+    Reduce { b: FieldId, scratch: FieldId, compact: bool },
+    /// Fused mac + reduction: one engine step, no intermediate boundary.
+    MacReduce { a: FieldId, b: FieldId, scratch: FieldId, compact: bool },
+}
+
+/// One scheduled step of a [`Plan`].
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub kind: StepKind,
+    /// Dependency level (loads are level 0; a step is one past its
+    /// deepest producer). Steps of one wave are mutually independent.
+    pub wave: usize,
+    /// Value (internal id) this step produces.
+    pub(crate) value: usize,
+    /// Value whose row count is the step's live row range.
+    pub(crate) rows_of: usize,
+    /// Segment spec for reduce steps.
+    pub(crate) spec: Option<SegmentSpec>,
+}
+
+impl Step {
+    /// Compact human-readable label for reports and plan dumps.
+    pub fn label(&self) -> String {
+        match &self.kind {
+            StepKind::Copy { src, dst } => format!("copy f{}→f{}", src.0, dst.0),
+            StepKind::Ew { op, a, b } => format!("{} a=f{} b=f{}", op.tag(), a.0, b.0),
+            StepKind::Reduce { b, scratch, compact } => format!(
+                "reduce b=f{} scratch=f{}{}",
+                b.0,
+                scratch.0,
+                if *compact { " compact" } else { "" }
+            ),
+            StepKind::MacReduce { a, b, scratch, compact } => format!(
+                "mac+reduce a=f{} b=f{} scratch=f{}{}",
+                a.0,
+                b.0,
+                scratch.0,
+                if *compact { " compact" } else { "" }
+            ),
+        }
+    }
+}
+
+/// A compiled program: schedule, field allocation, fusion — everything
+/// derivable without operand data. Bind inputs with
+/// [`BoundProgram::bind`] to execute.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    program: Program,
+    /// `(input value, field)` in declaration (= load) order.
+    pub(crate) loads: Vec<(ValueId, FieldId)>,
+    pub(crate) steps: Vec<Step>,
+    /// Fields allocated (array width = `num_fields · digits + 1`).
+    pub num_fields: usize,
+    pub(crate) outputs: Vec<(ValueId, FieldId)>,
+    /// `Mac → Reduce` chains fused into single steps.
+    pub fused_steps: u64,
+    /// Operand edges fed directly from a CAM-resident intermediate (no
+    /// host extract/reload between producer and consumer).
+    pub resident_reuses: u64,
+    /// Source (original) value of each synthetic copy value, in creation
+    /// order; synthetic value `k` has internal id `ops.len() + k`.
+    copy_src: Vec<usize>,
+}
+
+impl Program {
+    /// Compile this program: schedule, liveness, field allocation, fusion.
+    pub fn plan(self) -> Plan {
+        Plan::of(self)
+    }
+}
+
+/// Tiny field allocator: free-list reuse before growing the array.
+struct FieldPool {
+    free: Vec<usize>,
+    n: usize,
+}
+
+impl FieldPool {
+    fn take(&mut self) -> usize {
+        self.free.pop().unwrap_or_else(|| {
+            self.n += 1;
+            self.n - 1
+        })
+    }
+
+    fn release(&mut self, f: usize) {
+        if !self.free.contains(&f) {
+            self.free.push(f);
+        }
+    }
+}
+
+/// Step drafts before field assignment (operands still value ids).
+enum Draft {
+    Copy { src: usize, dst: usize },
+    Ew { op: EwOp, a: usize, b: usize, dst: usize },
+    Reduce { v: usize, dst: usize, spec: SegmentSpec, compact: bool },
+    MacReduce { a: usize, b: usize, dst: usize, spec: SegmentSpec, compact: bool },
+}
+
+impl Draft {
+    fn operands(&self) -> Vec<usize> {
+        match self {
+            Draft::Copy { src, .. } => vec![*src],
+            Draft::Ew { a, b, .. } => vec![*a, *b],
+            Draft::Reduce { v, .. } => vec![*v],
+            Draft::MacReduce { a, b, .. } => vec![*a, *b],
+        }
+    }
+
+    fn dst(&self) -> usize {
+        match self {
+            Draft::Copy { dst, .. }
+            | Draft::Ew { dst, .. }
+            | Draft::Reduce { dst, .. }
+            | Draft::MacReduce { dst, .. } => *dst,
+        }
+    }
+}
+
+impl Plan {
+    /// Compile `program` (see the module docs for the algorithm).
+    pub fn of(program: Program) -> Plan {
+        let ops = program.ops();
+        let nops = ops.len();
+        assert!(!program.outputs().is_empty(), "programs must declare at least one output");
+        assert!(!program.input_names().is_empty(), "programs must declare at least one input");
+
+        let is_input = |v: usize| matches!(ops[v], ProgramOp::Input { .. });
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); nops];
+        let mut reuses = 0u64;
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                ProgramOp::Input { .. } => {}
+                ProgramOp::Ew { a, b, .. } => {
+                    consumers[a.0].push(i);
+                    consumers[b.0].push(i);
+                    reuses += (!is_input(a.0)) as u64 + (!is_input(b.0)) as u64;
+                }
+                ProgramOp::Reduce { v, .. } => {
+                    consumers[v.0].push(i);
+                    reuses += (!is_input(v.0)) as u64;
+                }
+            }
+        }
+        let mut is_out = vec![false; nops];
+        for o in program.outputs() {
+            is_out[o.0] = true;
+        }
+
+        // fusion: Reduce directly after the Mac producing its sole-use
+        // operand (adjacency required — see module docs)
+        let mut fused_away = vec![false; nops];
+        let mut fuse_mac: HashMap<usize, usize> = HashMap::new();
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Reduce { v, .. } = op {
+                if let ProgramOp::Ew { op: EwOp::Mac, .. } = ops[v.0] {
+                    if i == v.0 + 1 && consumers[v.0] == [i] && !is_out[v.0] {
+                        fused_away[v.0] = true;
+                        fuse_mac.insert(i, v.0);
+                    }
+                }
+            }
+        }
+
+        // emit drafts in op order with copy insertion for operand
+        // preservation (in-place ops destroy their b operand)
+        let mut copy_src: Vec<usize> = Vec::new();
+        let mut drafts: Vec<Draft> = Vec::new();
+        let live_after = |v: usize, op_i: usize| -> bool {
+            is_out[v] || consumers[v].iter().any(|&c| c > op_i)
+        };
+        let emit_copy = |src: usize, drafts: &mut Vec<Draft>, copy_src: &mut Vec<usize>| {
+            let dst = nops + copy_src.len();
+            copy_src.push(src);
+            drafts.push(Draft::Copy { src, dst });
+            dst
+        };
+        for (i, op) in ops.iter().enumerate() {
+            if fused_away[i] {
+                continue;
+            }
+            match op {
+                ProgramOp::Input { .. } => {}
+                ProgramOp::Ew { op, a, b } => {
+                    let (mut a, mut b) = (a.0, b.0);
+                    if a == b {
+                        a = emit_copy(a, &mut drafts, &mut copy_src);
+                    }
+                    if live_after(b, i) {
+                        b = emit_copy(b, &mut drafts, &mut copy_src);
+                    }
+                    drafts.push(Draft::Ew { op: *op, a, b, dst: i });
+                }
+                ProgramOp::Reduce { v, spec } => {
+                    let compact = !consumers[i].is_empty();
+                    if let Some(&m) = fuse_mac.get(&i) {
+                        let (ma, mb) = match &ops[m] {
+                            ProgramOp::Ew { a, b, .. } => (a.0, b.0),
+                            _ => unreachable!("fused op is a mac"),
+                        };
+                        let (mut ma, mut mb) = (ma, mb);
+                        if ma == mb {
+                            ma = emit_copy(ma, &mut drafts, &mut copy_src);
+                        }
+                        if live_after(mb, i) {
+                            mb = emit_copy(mb, &mut drafts, &mut copy_src);
+                        }
+                        drafts.push(Draft::MacReduce {
+                            a: ma,
+                            b: mb,
+                            dst: i,
+                            spec: spec.clone(),
+                            compact,
+                        });
+                    } else {
+                        let mut v = v.0;
+                        if live_after(v, i) {
+                            v = emit_copy(v, &mut drafts, &mut copy_src);
+                        }
+                        drafts.push(Draft::Reduce { v, dst: i, spec: spec.clone(), compact });
+                    }
+                }
+            }
+        }
+
+        // liveness over the draft list (synthetic copy values included)
+        let mut last_use: HashMap<usize, usize> = HashMap::new();
+        for (s, d) in drafts.iter().enumerate() {
+            for v in d.operands() {
+                last_use.insert(v, s);
+            }
+        }
+        let pinned = |v: usize| v < nops && is_out[v];
+
+        // field allocation: loads first, then a linear scan with rebinding
+        // (in-place results inherit their b field) and free-list reuse
+        let mut pool = FieldPool { free: Vec::new(), n: 0 };
+        let mut field_of: HashMap<usize, usize> = HashMap::new();
+        let mut owner: HashMap<usize, usize> = HashMap::new();
+        let mut loads = Vec::new();
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Input { .. } = op {
+                let f = pool.take();
+                field_of.insert(i, f);
+                owner.insert(f, i);
+                loads.push((ValueId(i), FieldId(f)));
+            }
+        }
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Input { .. } = op {
+                if !last_use.contains_key(&i) && !pinned(i) {
+                    let f = field_of[&i];
+                    if owner.get(&f) == Some(&i) {
+                        owner.remove(&f);
+                        pool.release(f);
+                    }
+                }
+            }
+        }
+        let mut steps: Vec<Step> = Vec::new();
+        let mut producer: HashMap<usize, usize> = HashMap::new(); // value -> step
+        for (s, d) in drafts.iter().enumerate() {
+            let wave = d
+                .operands()
+                .iter()
+                .map(|v| producer.get(v).map(|&ps| steps[ps].wave).unwrap_or(0))
+                .max()
+                .unwrap_or(0)
+                + 1;
+            let (kind, rows_of, spec) = match d {
+                Draft::Copy { src, dst } => {
+                    let f = pool.take();
+                    field_of.insert(*dst, f);
+                    owner.insert(f, *dst);
+                    (
+                        StepKind::Copy { src: FieldId(field_of[src]), dst: FieldId(f) },
+                        *src,
+                        None,
+                    )
+                }
+                Draft::Ew { op, a, b, dst } => {
+                    let (fa, fb) = (field_of[a], field_of[b]);
+                    field_of.insert(*dst, fb);
+                    owner.insert(fb, *dst);
+                    (StepKind::Ew { op: *op, a: FieldId(fa), b: FieldId(fb) }, *b, None)
+                }
+                Draft::Reduce { v, dst, spec, compact } => {
+                    let fb = field_of[v];
+                    let scratch = pool.take();
+                    field_of.insert(*dst, fb);
+                    owner.insert(fb, *dst);
+                    (
+                        StepKind::Reduce {
+                            b: FieldId(fb),
+                            scratch: FieldId(scratch),
+                            compact: *compact,
+                        },
+                        *v,
+                        Some(spec.clone()),
+                    )
+                }
+                Draft::MacReduce { a, b, dst, spec, compact } => {
+                    let (fa, fb) = (field_of[a], field_of[b]);
+                    // the mac reads `a` before the fold touches the
+                    // scratch, so a dying `a` field can host the fold
+                    let a_dies_here =
+                        last_use.get(a) == Some(&s) && !pinned(*a) && owner.get(&fa) == Some(a);
+                    let scratch = if a_dies_here {
+                        owner.remove(&fa);
+                        fa
+                    } else {
+                        pool.take()
+                    };
+                    field_of.insert(*dst, fb);
+                    owner.insert(fb, *dst);
+                    (
+                        StepKind::MacReduce {
+                            a: FieldId(fa),
+                            b: FieldId(fb),
+                            scratch: FieldId(scratch),
+                            compact: *compact,
+                        },
+                        *a,
+                        Some(spec.clone()),
+                    )
+                }
+            };
+            // dying operands release their field — unless the field was
+            // just rebound to this step's result
+            for v in d.operands() {
+                if last_use.get(&v) == Some(&s) && !pinned(v) {
+                    let f = field_of[&v];
+                    if owner.get(&f) == Some(&v) {
+                        owner.remove(&f);
+                        pool.release(f);
+                    }
+                }
+            }
+            // the fold scratch is free again after the step
+            let scratch_field = match &kind {
+                StepKind::Reduce { scratch, .. } | StepKind::MacReduce { scratch, .. } => {
+                    Some(scratch.0)
+                }
+                _ => None,
+            };
+            if let Some(f) = scratch_field {
+                if !owner.contains_key(&f) {
+                    pool.release(f);
+                }
+            }
+            producer.insert(d.dst(), s);
+            steps.push(Step { kind, wave, value: d.dst(), rows_of, spec });
+        }
+
+        let outputs = program
+            .outputs()
+            .iter()
+            .map(|&o| (o, FieldId(field_of[&o.0])))
+            .collect();
+        Plan {
+            loads,
+            steps,
+            num_fields: pool.n,
+            outputs,
+            fused_steps: fuse_mac.len() as u64,
+            resident_reuses: reuses,
+            copy_src,
+            program,
+        }
+    }
+
+    /// The source program.
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Scheduled steps in execution order.
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    /// Which LUT families the plan's steps require.
+    pub(crate) fn lut_needs(&self) -> LutNeeds {
+        let mut n = LutNeeds::default();
+        for s in &self.steps {
+            match &s.kind {
+                StepKind::Copy { .. } => n.copy = true,
+                StepKind::Ew { op, .. } => match op {
+                    EwOp::Add => n.add = true,
+                    EwOp::Sub => n.sub = true,
+                    EwOp::Mac => n.mac = true,
+                },
+                StepKind::Reduce { .. } => n.add = true,
+                StepKind::MacReduce { .. } => {
+                    n.mac = true;
+                    n.add = true;
+                }
+            }
+        }
+        n
+    }
+
+    /// Row class of an internal value id (synthetic copies inherit their
+    /// source's class).
+    fn class_of(&self, mut v: usize) -> RowClass {
+        let nops = self.program.ops().len();
+        while v >= nops {
+            v = self.copy_src[v - nops];
+        }
+        self.program.row_class(ValueId(v))
+    }
+
+    /// Human-readable plan dump (the CLI's `--dump-plan`).
+    pub fn render(&self) -> String {
+        let prog = &self.program;
+        let waves = self.steps.iter().map(|s| s.wave).max().unwrap_or(0);
+        let mut out = format!(
+            "program '{}' (radix {}, {} digits): {} inputs, {} fields + carry ({} columns), \
+             {} steps in {} waves, {} fused, {} resident reuses\n",
+            prog.name(),
+            prog.radix().n(),
+            prog.digits(),
+            self.loads.len(),
+            self.num_fields,
+            self.num_fields * prog.digits() + 1,
+            self.steps.len(),
+            waves,
+            self.fused_steps,
+            self.resident_reuses,
+        );
+        let names = prog.input_names();
+        for (i, (_, f)) in self.loads.iter().enumerate() {
+            out += &format!("  load  {:<12} → field {}\n", names[i], f.0);
+        }
+        for (s, step) in self.steps.iter().enumerate() {
+            let rows = match self.class_of(step.rows_of) {
+                RowClass::Rows => "rows=N".to_string(),
+                RowClass::SegsOf(i) => format!("rows=segs(op{i})"),
+            };
+            out += &format!("  step {s:>2} (wave {}): {:<28} [{rows}]\n", step.wave, step.label());
+        }
+        for (v, f) in &self.outputs {
+            out += &format!("  out   v{:<11} ← field {}\n", v.0, f.0);
+        }
+        out
+    }
+}
+
+/// LUT families a plan requires (the engine builds only these).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct LutNeeds {
+    pub add: bool,
+    pub sub: bool,
+    pub mac: bool,
+    pub copy: bool,
+}
+
+/// Row indices an output is extracted from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum OutputRows {
+    /// Rows `[0, k)`.
+    Range(usize),
+    /// Explicit segment-head rows (uncompacted reduce outputs).
+    Heads(Vec<usize>),
+}
+
+impl OutputRows {
+    pub(crate) fn iter(&self) -> Box<dyn Iterator<Item = usize> + '_> {
+        match self {
+            OutputRows::Range(k) => Box::new(0..*k),
+            OutputRows::Heads(h) => Box::new(h.iter().copied()),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            OutputRows::Range(k) => *k,
+            OutputRows::Heads(h) => h.len(),
+        }
+    }
+}
+
+/// A plan bound to concrete operand vectors: row counts resolved, segment
+/// specs concretised, inputs validated — ready to execute on a backend
+/// ([`crate::coordinator::Backend::run_program`]).
+#[derive(Clone, Debug)]
+pub struct BoundProgram {
+    pub plan: Arc<Plan>,
+    /// Blocked (true) or non-blocked LUT programs.
+    pub blocked: bool,
+    /// Array height: the driving row count `N`.
+    pub rows: usize,
+    /// Input vectors in load order.
+    pub(crate) inputs: Vec<Vec<Word>>,
+    /// Live row count per step.
+    pub(crate) step_live: Vec<usize>,
+    /// Resolved cumulative segment bounds per reduce step.
+    pub(crate) step_bounds: Vec<Option<Vec<usize>>>,
+    /// Extraction rows per output.
+    pub(crate) output_rows: Vec<OutputRows>,
+}
+
+impl BoundProgram {
+    /// Bind `inputs` (name → vector, any order) to `plan` and resolve all
+    /// row counts. Fails on missing/unknown/duplicate names, ragged or
+    /// mis-shaped vectors, and segment specs that don't divide the bound
+    /// row counts.
+    pub fn bind(
+        plan: &Arc<Plan>,
+        inputs: Vec<(&str, Vec<Word>)>,
+        blocked: bool,
+    ) -> anyhow::Result<BoundProgram> {
+        let prog = plan.program();
+        let ops = prog.ops();
+        let nops = ops.len();
+        let names = prog.input_names();
+        let mut by_name: HashMap<&str, Vec<Word>> = HashMap::new();
+        for (name, vec) in inputs {
+            anyhow::ensure!(
+                by_name.insert(name, vec).is_none(),
+                "input '{name}' provided twice"
+            );
+        }
+        for extra in by_name.keys() {
+            anyhow::ensure!(
+                names.contains(extra),
+                "unknown input '{extra}' (program takes: {})",
+                names.join(", ")
+            );
+        }
+        let mut in_order = Vec::with_capacity(names.len());
+        for name in &names {
+            let vec = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("missing input '{name}'"))?;
+            anyhow::ensure!(!vec.is_empty(), "input '{name}' is empty");
+            for w in &vec {
+                anyhow::ensure!(
+                    w.width() == prog.digits() && w.radix() == prog.radix(),
+                    "input '{name}': words must be {} digits of radix {}",
+                    prog.digits(),
+                    prog.radix().n()
+                );
+            }
+            in_order.push(vec);
+        }
+
+        // resolve rows per value: N from the full-row inputs, then the
+        // reduces in op order (each defines its segment-count class)
+        let total_values = nops + plan.copy_src.len();
+        let mut rows: Vec<Option<usize>> = vec![None; total_values];
+        let mut n: Option<usize> = None;
+        let mut load_i = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Input { name } = op {
+                if prog.row_class(ValueId(i)) == RowClass::Rows {
+                    let r = in_order[load_i].len();
+                    anyhow::ensure!(
+                        n.is_none() || n == Some(r),
+                        "input '{name}' has {r} rows; other inputs have {}",
+                        n.unwrap()
+                    );
+                    n = Some(r);
+                }
+                load_i += 1;
+            }
+        }
+        let n = n.ok_or_else(|| anyhow::anyhow!("no full-row input pins the row count"))?;
+        for i in 0..nops {
+            if prog.row_class(ValueId(i)) == RowClass::Rows {
+                rows[i] = Some(n);
+            }
+        }
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Reduce { v, spec } = op {
+                let rv = rows[v.0].expect("operand resolved (topological order)");
+                let bounds = resolve_spec(spec, rv)?;
+                let k = bounds.len();
+                for (j, r) in rows.iter_mut().enumerate().take(nops) {
+                    if prog.row_class(ValueId(j)) == RowClass::SegsOf(i) {
+                        *r = Some(k);
+                    }
+                }
+            }
+        }
+        for (k, &src) in plan.copy_src.iter().enumerate() {
+            rows[nops + k] = rows[src];
+        }
+        // per-segment inputs must now match their resolved counts
+        let mut load_i = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            if let ProgramOp::Input { name } = op {
+                let want = rows[i].expect("all input rows resolved");
+                anyhow::ensure!(
+                    in_order[load_i].len() == want,
+                    "input '{name}' has {} rows; its row class needs {want}",
+                    in_order[load_i].len()
+                );
+                load_i += 1;
+            }
+        }
+
+        // per-step live rows and resolved bounds
+        let mut step_live = Vec::with_capacity(plan.steps.len());
+        let mut step_bounds = Vec::with_capacity(plan.steps.len());
+        for step in &plan.steps {
+            let live = rows[step.rows_of].expect("step operand rows resolved");
+            step_live.push(live);
+            step_bounds.push(match &step.spec {
+                Some(spec) => Some(resolve_spec(spec, live)?),
+                None => None,
+            });
+        }
+
+        // extraction rows: uncompacted reduce outputs read segment heads
+        let mut output_rows = Vec::with_capacity(plan.outputs.len());
+        for (v, _) in &plan.outputs {
+            let produced_by = plan.steps.iter().position(|s| s.value == v.0);
+            let heads = produced_by.and_then(|s| match &plan.steps[s].kind {
+                StepKind::Reduce { compact: false, .. }
+                | StepKind::MacReduce { compact: false, .. } => {
+                    let bounds = step_bounds[s].as_ref().expect("reduce step has bounds");
+                    let mut starts = vec![0usize];
+                    starts.extend_from_slice(&bounds[..bounds.len() - 1]);
+                    Some(starts)
+                }
+                _ => None,
+            });
+            output_rows.push(match heads {
+                Some(h) => OutputRows::Heads(h),
+                None => OutputRows::Range(rows[v.0].expect("output rows resolved")),
+            });
+        }
+
+        Ok(BoundProgram {
+            plan: Arc::clone(plan),
+            blocked,
+            rows: n,
+            inputs: in_order,
+            step_live,
+            step_bounds,
+            output_rows,
+        })
+    }
+}
+
+/// Concretise a [`SegmentSpec`] against an operand row count.
+fn resolve_spec(spec: &SegmentSpec, rows: usize) -> anyhow::Result<Vec<usize>> {
+    match spec {
+        SegmentSpec::All => Ok(vec![rows]),
+        SegmentSpec::Every(n) => {
+            anyhow::ensure!(
+                *n >= 1 && rows % n == 0,
+                "Every({n}) does not divide {rows} rows"
+            );
+            Ok((1..=rows / n).map(|k| k * n).collect())
+        }
+        SegmentSpec::Bounds(b) => {
+            anyhow::ensure!(
+                *b.last().unwrap() == rows,
+                "segment bounds end at {} but the operand has {rows} rows",
+                b.last().unwrap()
+            );
+            Ok(b.clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvl::Radix;
+
+    fn w(v: u128) -> Word {
+        Word::from_u128(v, 4, Radix::TERNARY)
+    }
+
+    /// The dot-product plan: the mac fuses with the reduce, the dead `a`
+    /// field hosts the fold scratch, and the whole program fits in two
+    /// fields — exactly the standalone reduce job's 2p+1 layout.
+    #[test]
+    fn dot_plan_fuses_and_reuses_fields() {
+        let mut p = Program::new("dot", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let prod = p.mac(a, b);
+        let s = p.reduce(prod, SegmentSpec::All);
+        p.output(s);
+        let plan = p.plan();
+        assert_eq!(plan.num_fields, 2);
+        assert_eq!(plan.fused_steps, 1);
+        assert_eq!(plan.resident_reuses, 1);
+        assert_eq!(plan.steps.len(), 1);
+        match &plan.steps[0].kind {
+            StepKind::MacReduce { a, b, scratch, compact } => {
+                assert_eq!((a.0, b.0), (0, 1));
+                assert_eq!(scratch.0, 0, "dead mac operand hosts the fold");
+                assert!(!*compact, "pure outputs extract from head rows");
+            }
+            other => panic!("expected fused step, got {other:?}"),
+        }
+        let dump = plan.render();
+        assert!(dump.contains("mac+reduce"), "{dump}");
+        assert!(dump.contains("1 fused"), "{dump}");
+    }
+
+    /// A value consumed in place while still live forces a Copy step: the
+    /// first add would destroy `b`, which the later mac still reads — so
+    /// the add runs on a copy. The mac is `b`'s last consumer and may
+    /// destroy the original in place (no second copy).
+    #[test]
+    fn copy_inserted_for_live_b_operand() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let y = p.add(a, b);
+        let z = p.mac(a, b);
+        p.output(y);
+        p.output(z);
+        let plan = p.plan();
+        let copies = plan
+            .steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::Copy { .. }))
+            .count();
+        assert_eq!(copies, 1);
+        assert_eq!(plan.steps.len(), 3);
+        assert_eq!(plan.num_fields, 3, "a, b, and the copy");
+    }
+
+    /// Squaring (a ⊗ a) needs distinct compare columns, so the planner
+    /// copies the operand.
+    #[test]
+    fn square_inserts_copy() {
+        let mut p = Program::new("sq", Radix::TERNARY, 3);
+        let a = p.input("a");
+        let s = p.mac(a, a);
+        p.output(s);
+        let plan = p.plan();
+        assert!(matches!(plan.steps[0].kind, StepKind::Copy { .. }));
+        assert_eq!(plan.steps.len(), 2);
+    }
+
+    /// Non-adjacent Mac → Reduce must NOT fuse (an op in between could
+    /// consume the mac's operands after the fused execution point).
+    #[test]
+    fn non_adjacent_mac_reduce_does_not_fuse() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let prod = p.mac(a, b);
+        let _other = p.add(a, a);
+        let s = p.reduce(prod, SegmentSpec::All);
+        p.output(s);
+        let plan = p.plan();
+        assert_eq!(plan.fused_steps, 0);
+    }
+
+    #[test]
+    fn bind_resolves_rows_and_segments() {
+        let mut p = Program::new("affine", Radix::TERNARY, 4);
+        let wv = p.input("w");
+        let xv = p.input("x");
+        let prod = p.mac(wv, xv);
+        let s = p.reduce(prod, SegmentSpec::Every(3));
+        let bias = p.input_like("bias", s);
+        let y = p.add(bias, s);
+        p.output(y);
+        let plan = Arc::new(p.plan());
+        let wvec: Vec<Word> = (0..6).map(|v| w(v)).collect();
+        let xvec: Vec<Word> = (0..6).map(|v| w(v + 1)).collect();
+        let bvec: Vec<Word> = (0..2).map(|v| w(v)).collect();
+        let bound = BoundProgram::bind(
+            &plan,
+            vec![("x", xvec.clone()), ("w", wvec.clone()), ("bias", bvec.clone())],
+            true,
+        )
+        .unwrap();
+        assert_eq!(bound.rows, 6);
+        assert_eq!(bound.output_rows, vec![OutputRows::Range(2)]);
+        // wrong bias rows
+        let err = BoundProgram::bind(
+            &plan,
+            vec![("x", xvec.clone()), ("w", wvec.clone()), ("bias", wvec.clone())],
+            true,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("bias"), "{err}");
+        // missing input
+        let err =
+            BoundProgram::bind(&plan, vec![("x", xvec.clone()), ("w", wvec.clone())], true)
+                .unwrap_err();
+        assert!(format!("{err}").contains("missing input 'bias'"), "{err}");
+        // non-divisible Every
+        let err = BoundProgram::bind(
+            &plan,
+            vec![
+                ("x", xvec[..5].to_vec()),
+                ("w", wvec[..5].to_vec()),
+                ("bias", bvec),
+            ],
+            true,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("does not divide"), "{err}");
+    }
+
+    #[test]
+    fn uncompacted_reduce_outputs_extract_heads() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let s = p.reduce(a, SegmentSpec::Bounds(vec![2, 3, 7]));
+        p.output(s);
+        let plan = Arc::new(p.plan());
+        let avec: Vec<Word> = (0..7).map(|v| w(v)).collect();
+        let bound = BoundProgram::bind(&plan, vec![("a", avec)], true).unwrap();
+        assert_eq!(bound.output_rows, vec![OutputRows::Heads(vec![0, 2, 3])]);
+        assert_eq!(bound.output_rows[0].len(), 3);
+    }
+
+    #[test]
+    fn resolve_spec_shapes() {
+        assert_eq!(resolve_spec(&SegmentSpec::All, 10).unwrap(), vec![10]);
+        assert_eq!(resolve_spec(&SegmentSpec::Every(5), 10).unwrap(), vec![5, 10]);
+        assert_eq!(
+            resolve_spec(&SegmentSpec::Bounds(vec![1, 10]), 10).unwrap(),
+            vec![1, 10]
+        );
+        assert!(resolve_spec(&SegmentSpec::Every(3), 10).is_err());
+        assert!(resolve_spec(&SegmentSpec::Bounds(vec![1, 9]), 10).is_err());
+    }
+}

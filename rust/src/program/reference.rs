@@ -1,0 +1,150 @@
+//! Host reference evaluator: executes a [`Program`] on plain host words
+//! with the exact digit-level semantics of the AP LUT families — the
+//! oracle `rust/tests/program_differential.rs` checks every backend
+//! against.
+//!
+//! Semantics per op (all values mod `radix^digits`):
+//! * `Add`/`Sub` — digit ripple with the shared carry/borrow column
+//!   ([`Word::add_ref`] / [`Word::sub_ref`]).
+//! * `Mac` — *digit-wise* `b_d ← a_d·b_d + carry` (integer multiplication
+//!   only for single-digit operands).
+//! * `Reduce` — per segment, the lockstep pairwise fold of
+//!   [`crate::ap::reduce_fields`]: each round clears the carry and adds
+//!   rows `[⌈k/2⌉, k)` onto rows `[0, k − ⌈k/2⌉)`, so every fold is a
+//!   `mod radix^p` addition and the result is the segment sum mod
+//!   `radix^p`.
+
+use super::ir::{EwOp, Program, ProgramOp, SegmentSpec};
+use crate::mvl::{Radix, Word};
+use std::collections::HashMap;
+
+fn ew_ref(op: EwOp, radix: Radix, a: &Word, b: &Word) -> Word {
+    match op {
+        EwOp::Add => a.add_ref(b, 0).0,
+        EwOp::Sub => a.sub_ref(b, 0).0,
+        EwOp::Mac => {
+            let n = radix.n() as u16;
+            let mut carry = 0u16;
+            let digits = a
+                .digits()
+                .iter()
+                .zip(b.digits())
+                .map(|(&ad, &bd)| {
+                    let v = ad as u16 * bd as u16 + carry;
+                    carry = v / n;
+                    (v % n) as u8
+                })
+                .collect();
+            Word::from_digits(digits, radix)
+        }
+    }
+}
+
+/// One segment's pairwise fold (sum mod `radix^p`, the exact round
+/// structure of the in-engine reduction).
+fn fold_ref(vals: &[Word]) -> Word {
+    let mut v: Vec<Word> = vals.to_vec();
+    while v.len() > 1 {
+        let half = (v.len() + 1) / 2;
+        let pairs = v.len() - half;
+        for i in 0..pairs {
+            v[i] = v[half + i].add_ref(&v[i], 0).0;
+        }
+        v.truncate(half);
+    }
+    v.pop().expect("non-empty segment")
+}
+
+fn bounds_of(spec: &SegmentSpec, rows: usize) -> Vec<usize> {
+    match spec {
+        SegmentSpec::All => vec![rows],
+        SegmentSpec::Every(n) => {
+            assert!(rows % n == 0, "Every({n}) does not divide {rows} rows");
+            (1..=rows / n).map(|k| k * n).collect()
+        }
+        SegmentSpec::Bounds(b) => {
+            assert_eq!(*b.last().unwrap(), rows, "segment bounds must cover all rows");
+            b.clone()
+        }
+    }
+}
+
+/// Evaluate `program` over named inputs, returning one vector per output.
+/// Panics on malformed inputs — the executable path reports those through
+/// [`super::plan::BoundProgram::bind`]; the reference is test plumbing.
+pub fn evaluate(program: &Program, inputs: &[(&str, Vec<Word>)]) -> Vec<Vec<Word>> {
+    let by_name: HashMap<&str, &Vec<Word>> = inputs.iter().map(|(n, v)| (*n, v)).collect();
+    let mut vals: Vec<Vec<Word>> = Vec::with_capacity(program.ops().len());
+    for op in program.ops() {
+        let next = match op {
+            ProgramOp::Input { name } => by_name
+                .get(name.as_str())
+                .unwrap_or_else(|| panic!("missing input '{name}'"))
+                .to_vec(),
+            ProgramOp::Ew { op, a, b } => {
+                let (av, bv) = (&vals[a.0], &vals[b.0]);
+                assert_eq!(av.len(), bv.len(), "element-wise row mismatch");
+                av.iter()
+                    .zip(bv)
+                    .map(|(aw, bw)| ew_ref(*op, program.radix(), aw, bw))
+                    .collect()
+            }
+            ProgramOp::Reduce { v, spec } => {
+                let vv = &vals[v.0];
+                let mut out = Vec::new();
+                let mut start = 0usize;
+                for end in bounds_of(spec, vv.len()) {
+                    out.push(fold_ref(&vv[start..end]));
+                    start = end;
+                }
+                out
+            }
+        };
+        vals.push(next);
+    }
+    program.outputs().iter().map(|o| vals[o.0].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: u128, p: usize) -> Word {
+        Word::from_u128(v, p, Radix::TERNARY)
+    }
+
+    /// The reference fold equals the integer sum mod radix^p.
+    #[test]
+    fn fold_is_sum_mod_radix_pow() {
+        let vals: Vec<Word> = (0..37).map(|v| w(v * 13 + 5, 4)).collect();
+        let want: u128 = vals.iter().map(|v| v.to_u128()).sum::<u128>() % 3u128.pow(4);
+        assert_eq!(fold_ref(&vals).to_u128(), want);
+    }
+
+    /// dot on single-digit operands equals the integer dot product.
+    #[test]
+    fn dot_reference_is_integer_dot() {
+        use super::super::ir::SegmentSpec;
+        let mut prog = Program::new("dot", Radix::TERNARY, 6);
+        let a = prog.input("a");
+        let b = prog.input("b");
+        let prod = prog.mac(a, b);
+        let s = prog.reduce(prod, SegmentSpec::All);
+        prog.output(s);
+        let av: Vec<Word> = [1u128, 2, 0, 2, 1].iter().map(|&v| w(v, 6)).collect();
+        let bv: Vec<Word> = [2u128, 2, 1, 0, 1].iter().map(|&v| w(v, 6)).collect();
+        let out = evaluate(&prog, &[("a", av.clone()), ("b", bv.clone())]);
+        let want: u128 = av.iter().zip(&bv).map(|(x, y)| x.to_u128() * y.to_u128()).sum();
+        assert_eq!(out, vec![vec![w(want, 6)]]);
+    }
+
+    /// Mac is digit-wise, not integer multiplication.
+    #[test]
+    fn mac_is_digitwise() {
+        let a = Word::from_digits(vec![2, 1], Radix::TERNARY);
+        let b = Word::from_digits(vec![2, 2], Radix::TERNARY);
+        // digit 0: 2·2 = 4 = 1 + carry 1; digit 1: 1·2 + 1 = 0 + carry 1
+        let got = ew_ref(EwOp::Mac, Radix::TERNARY, &a, &b);
+        assert_eq!(got.digits(), &[1, 0]);
+    }
+}

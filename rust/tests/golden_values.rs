@@ -12,7 +12,7 @@ use mvap::energy::{
     area_normalized, delay_cycles, CompareEnergy, DelayScheme, EnergyModel, OpShape,
 };
 use mvap::exp::table11;
-use mvap::func::{addc, copy_digit, mac4, TruthTable};
+use mvap::func::{addc, copy_digit, full_sub, mac4, TruthTable};
 use mvap::lutgen::{generate_blocked, generate_non_blocked};
 use mvap::mvl::Radix;
 
@@ -96,6 +96,42 @@ fn golden_mul_family_lut_shapes() {
     // binary and quaternary mac4 (the mul differential test radices)
     assert_eq!(shape(mac4(Radix::BINARY)), (16, 8, 8, 5, 0));
     assert_eq!(shape(mac4(Radix(4))), (256, 48, 208, 55, 4));
+}
+
+/// The subtraction LUT family (§I lists subtraction among the supported
+/// functions; [`mvap::coordinator::OpKind::Sub`] and the program
+/// subsystem's `Sub` element-wise op compile these): state/noAction/pass
+/// counts, blocked write blocks, and cycle-breaking rewrite counts for
+/// radix 2–5, pinned like the adder (PR 2) and mul (PR 4) families so
+/// lutgen/diagram refactors cannot silently change the compiled programs.
+/// Derived with the same calibrated Python re-implementation of
+/// diagram+lutgen as the PR 4 pins (`python/compile/luts.py`, which
+/// reproduces the adder's (27, 6, 21, 9, 1) and the binary adder's 4
+/// passes exactly). The subtractor has markedly fewer fixed points than
+/// the adder (only `(a, 0, 0)` states and borrow-stable corners), so
+/// nearly every state needs a pass, and its borrow dynamics contain more
+/// cycles (4 rewrites at radix 3 vs the adder's 1).
+#[test]
+fn golden_sub_family_lut_shapes() {
+    // (states, noAction roots, passes, blocked write blocks, rewrites)
+    let shape = |t: TruthTable| {
+        let d = StateDiagram::build(t).unwrap();
+        let nb = generate_non_blocked(&d);
+        let b = generate_blocked(&d);
+        assert_eq!(nb.passes.len(), b.passes.len(), "{}: pass count is mode-invariant", b.name);
+        assert_eq!(nb.num_groups, nb.passes.len(), "{}: non-blocked = one block per pass", nb.name);
+        (
+            d.nodes().len(),
+            d.roots().len(),
+            b.passes.len(),
+            b.num_groups,
+            d.rewrites().len(),
+        )
+    };
+    assert_eq!(shape(full_sub(Radix::BINARY)), (8, 2, 6, 6, 2));
+    assert_eq!(shape(full_sub(Radix::TERNARY)), (27, 5, 22, 9, 4));
+    assert_eq!(shape(full_sub(Radix(4))), (64, 5, 59, 14, 8));
+    assert_eq!(shape(full_sub(Radix(5))), (125, 7, 118, 18, 12));
 }
 
 /// Table XI normalized areas for every width pairing, and the 6.25%
