@@ -13,19 +13,28 @@
 #                                    case — proves the replay knob stays
 #                                    wired; any failing sweep prints the
 #                                    same knob + seed)
-#   4. cargo test --release -q      (the coalescing/bit-sliced fast paths,
+#   4. mvap modelcheck              (exhaustive model check of the shard
+#                                    coordinator machine: every interleaving
+#                                    of the bounded scenarios, no-loss /
+#                                    no-duplication / conservation /
+#                                    eventual-flush; FAILS LOUDLY on any
+#                                    violation or zero explored states, and
+#                                    regenerates docs/shard_machine.dot)
+#   5. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
-#   5. cargo bench --no-run         (benches must keep compiling)
-#   6. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_5.json at the repo
-#                                    root — the perf trajectory artifact;
-#                                    FAILS LOUDLY if zero results were
-#                                    recorded, as happened to BENCH_3.json)
-#   7. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#   6. cargo bench --no-run         (benches must keep compiling)
+#   7. cargo bench -- --quick       (hot-path benches, 3 iterations each,
+#                                    recorded to BENCH_3/4/5.json at the
+#                                    repo root — the perf trajectory
+#                                    artifacts, each filtered to its PR's
+#                                    benches of record; FAILS LOUDLY if any
+#                                    BENCH_*.json holds zero results, as
+#                                    happened to BENCH_3.json)
+#   8. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
-#   8. cargo doc --no-deps          (warnings as errors; the crate also denies
+#   9. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#   9. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#  10. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -41,6 +50,9 @@ cargo test -q
 echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program differential suites)"
 MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test program_differential
 
+echo "==> mvap modelcheck (exhaustive shard-coordinator verification)"
+cargo run --release --quiet -- modelcheck --dot ../docs/shard_machine.dot
+
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"
     cargo test --release -q
@@ -48,12 +60,17 @@ if [[ "$fast" == "0" ]]; then
     echo "==> cargo bench --no-run (compile gate)"
     cargo bench --no-run
 
-    echo "==> cargo bench -- --quick (recording BENCH_5.json)"
+    echo "==> cargo bench -- --quick (recording BENCH_3/4/5.json)"
+    cargo bench --bench bench_main -- --quick --json ../BENCH_3.json \
+        hot/fast_path hot/kernel_cache
+    cargo bench --bench bench_main -- --quick --json ../BENCH_4.json hot/reduce
     cargo bench --bench bench_main -- --quick --json ../BENCH_5.json hot/
-    if ! grep -q '"name":' ../BENCH_5.json; then
-        echo "ERROR: quick-bench stage recorded zero results in BENCH_5.json" >&2
-        exit 1
-    fi
+    for trajectory in ../BENCH_*.json; do
+        if ! grep -q '"name":' "$trajectory"; then
+            echo "ERROR: quick-bench stage recorded zero results in ${trajectory#../}" >&2
+            exit 1
+        fi
+    done
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

@@ -1,0 +1,521 @@
+"""Python port of rust/src/modelcheck + coordinator/shard_machine.
+
+This container authors the Rust side toolchain-less, so the machine
+semantics are validated here: an exact, line-for-line port of
+
+* ``BatchPolicy`` (logical-nanos flush policy, with ``rebase``),
+* ``ShardCore.on_event`` (the pure worker transition → steps),
+* ``ShardSystemMachine`` (bounded scenario model: queues, producers,
+  deadline nondeterminism, stealing, shutdown),
+* the exhaustive BFS explorer (safety invariants, deadlock detection,
+  liveness via backward reachability, shortest traces).
+
+The one deliberate divergence: the Rust model routes jobs through the
+production ``JobSignature::shard`` SipHash, which is deterministic but
+opaque. Here the routing is a parameter, and the validation sweeps
+EVERY possible assignment of signatures to shards — the Rust behavior
+is one point of that sweep, so properties proved for all routings hold
+for it. Run ``python3 modelcheck_port.py`` for the full validation
+sweep used to size the scenarios wired into ci.sh.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from itertools import product
+
+FLUSH, ADMIT, RUN_PROGRAM, STEAL, EXIT = "Flush", "Admit", "RunProgram", "Steal", "Exit"
+
+FLUSH_AFTER = 1_000  # model flush_after in nanos (scale is unobservable)
+
+
+class BatchPolicy:
+    """Mirror of coordinator::shard_machine::BatchPolicy."""
+
+    __slots__ = ("max_jobs", "max_rows", "flush_after", "jobs", "rows", "sig", "deadline")
+
+    def __init__(self, max_jobs, max_rows, flush_after=FLUSH_AFTER):
+        self.max_jobs = max_jobs
+        self.max_rows = max_rows
+        self.flush_after = flush_after
+        self.jobs = 0
+        self.rows = 0
+        self.sig = None
+        self.deadline = None
+
+    def key(self):
+        return (self.jobs, self.rows, self.sig, self.deadline)
+
+    def load(self, key):
+        self.jobs, self.rows, self.sig, self.deadline = key
+        return self
+
+    def must_flush_before(self, sig):
+        return self.sig is not None and self.sig != sig
+
+    def admit(self, sig, rows, now):
+        assert not self.must_flush_before(sig), "flush before admitting"
+        if self.jobs == 0:
+            self.sig = sig
+            self.deadline = now + self.flush_after
+        self.jobs += 1
+        self.rows += rows
+        return (
+            self.jobs >= self.max_jobs
+            or self.rows >= self.max_rows
+            or (self.deadline is not None and now >= self.deadline)
+        )
+
+    def should_flush(self, now):
+        return self.jobs > 0 and self.deadline is not None and now >= self.deadline
+
+    def may_steal(self):
+        return self.jobs == 0
+
+    def flushed(self):
+        self.jobs = 0
+        self.rows = 0
+        self.sig = None
+        self.deadline = None
+
+    def rebase(self):
+        self.deadline = self.flush_after if self.jobs > 0 else None
+
+
+class ShardCore:
+    """Mirror of coordinator::shard_machine::ShardCore.on_event."""
+
+    __slots__ = ("policy", "steal")
+
+    def __init__(self, max_jobs, max_rows, steal):
+        self.policy = BatchPolicy(max_jobs, max_rows)
+        self.steal = steal
+
+    def key(self):
+        return self.policy.key()
+
+    def on_event(self, event, now):
+        kind = event[0]
+        if kind == "job":
+            _, sig, rows = event
+            steps = []
+            if self.policy.must_flush_before(sig):
+                self.policy.flushed()
+                steps.append(FLUSH)
+            steps.append(ADMIT)
+            if self.policy.admit(sig, rows, now):
+                self.policy.flushed()
+                steps.append(FLUSH)
+            return steps
+        if kind == "prog":
+            self.policy.flushed()
+            return [FLUSH, RUN_PROGRAM]
+        if kind == "timeout":
+            steps = []
+            if self.policy.should_flush(now):
+                self.policy.flushed()
+                steps.append(FLUSH)
+            if self.steal and self.policy.may_steal():
+                steps.append(STEAL)
+            return steps
+        if kind == "closed":
+            self.policy.flushed()
+            return [FLUSH, EXIT]
+        raise AssertionError(f"unknown event {event!r}")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    shards: int
+    queue_depth: int
+    max_batch_jobs: int
+    max_batch_rows: int
+    steal: bool
+    # producers: tuple of tuples of items; item = ("job", sig, rows) | ("prog",)
+    producers: tuple
+
+    def items(self):
+        out = []
+        for plist in self.producers:
+            out.extend(plist)
+        return out
+
+    def offsets(self):
+        offs, at = [], 0
+        for plist in self.producers:
+            offs.append(at)
+            at += len(plist)
+        return offs
+
+
+def mixed(shards, queue_depth, max_batch_jobs, steal, producers, jobs, programs, sigs,
+          max_batch_rows=4):
+    """Mirror of ShardScenario::mixed."""
+    lists = [[] for _ in range(producers)]
+    for j in range(jobs):
+        lists[j % producers].append(("job", j % sigs, 1 + j % 3))
+    for p in range(programs):
+        lists[(jobs + p) % producers].append(("prog",))
+    return Scenario(shards, queue_depth, max_batch_jobs, max_batch_rows, steal,
+                    tuple(tuple(l) for l in lists))
+
+
+class Violation(Exception):
+    pass
+
+
+class SystemMachine:
+    """Mirror of ShardSystemMachine, with routing as a parameter.
+
+    ``route`` maps a signature id to its home shard (the Rust model uses
+    the production SipHash; sweeping every route covers it).
+    State tuple layout:
+      (produced, next_program, queues, pending, cores, expired, done,
+       closed, exited)
+    with queues/pending tuples of tuples of item ids, cores a tuple of
+    policy keys.
+    """
+
+    def __init__(self, scenario, route):
+        self.sc = scenario
+        self.route = route
+        self.items = scenario.items()
+        self.offsets = scenario.offsets()
+        assert len(self.items) <= 32
+
+    def all_done(self):
+        return (1 << len(self.items)) - 1
+
+    def core(self, key):
+        c = ShardCore(self.sc.max_batch_jobs, self.sc.max_batch_rows, self.sc.steal)
+        c.policy.load(key)
+        return c
+
+    def home(self, item, next_program):
+        if item[0] == "job":
+            return self.route(item[1])
+        return next_program % self.sc.shards
+
+    def initial(self):
+        n = self.sc.shards
+        empty = tuple(() for _ in range(n))
+        fresh = ShardCore(self.sc.max_batch_jobs, self.sc.max_batch_rows, self.sc.steal)
+        return (
+            tuple(0 for _ in self.sc.producers),  # produced
+            0,                                    # next_program
+            empty,                                # queues
+            empty,                                # pending
+            tuple(fresh.key() for _ in range(n)), # cores
+            tuple(False for _ in range(n)),       # expired
+            0,                                    # done
+            False,                                # closed
+            tuple(False for _ in range(n)),       # exited
+        )
+
+    def now(self, cores, expired, s):
+        jobs = cores[s][0]
+        return FLUSH_AFTER if (jobs > 0 and expired[s]) else 0
+
+    def producers_done(self, st):
+        return all(c == len(p) for c, p in zip(st[0], self.sc.producers))
+
+    def timeout_effectful(self, st, s):
+        produced, _np, queues, _pending, cores, expired, _done, _closed, _ex = st
+        pending_jobs = cores[s][0]
+        would_flush = pending_jobs > 0 and expired[s]
+        would_steal = (
+            self.sc.steal
+            and pending_jobs == 0
+            and any(i != s and len(queues[i]) > 0 for i in range(self.sc.shards))
+        )
+        return would_flush or would_steal
+
+    def actions(self, st):
+        produced, next_program, queues, pending, cores, expired, done, closed, exited = st
+        out = []
+        for p, plist in enumerate(self.sc.producers):
+            cursor = produced[p]
+            if closed or cursor >= len(plist):
+                continue
+            home = self.home(plist[cursor], next_program)
+            if len(queues[home]) < self.sc.queue_depth:
+                out.append(("submit", p))
+        if not closed and self.producers_done(st):
+            out.append(("close",))
+        for s in range(self.sc.shards):
+            if exited[s]:
+                continue
+            if len(queues[s]) > 0:
+                out.append(("pop", s))
+            if len(queues[s]) == 0 and self.timeout_effectful(st, s):
+                out.append(("timeout", s))
+            if cores[s][0] > 0 and not expired[s]:
+                out.append(("deadline", s))
+            if closed and len(queues[s]) == 0:
+                out.append(("drain", s))
+        return out
+
+    # -- transition helpers (mutable mirror of run_steps) ---------------
+
+    def _mark_done(self, mstate, item_id):
+        if mstate["done"] & (1 << item_id):
+            raise Violation(f"no-duplication violated: item {item_id} executed twice")
+        mstate["done"] |= 1 << item_id
+
+    def _do_flush(self, mstate, s):
+        mstate["expired"][s] = False
+        batch, mstate["pending"][s] = mstate["pending"][s], []
+        for item_id in batch:
+            self._mark_done(mstate, item_id)
+
+    def _run_steps(self, mstate, s, steps, item_id):
+        for step in steps:
+            if step == FLUSH:
+                self._do_flush(mstate, s)
+            elif step == ADMIT:
+                assert item_id is not None
+                mstate["pending"][s].append(item_id)
+                item_id = None
+            elif step == RUN_PROGRAM:
+                assert item_id is not None
+                self._mark_done(mstate, item_id)
+                item_id = None
+            elif step == STEAL:
+                for other in range(self.sc.shards):
+                    if other == s or not mstate["queues"][other]:
+                        continue
+                    stolen = mstate["queues"][other].pop(0)
+                    ev = self._event_of(stolen)
+                    now = FLUSH_AFTER if (mstate["cores"][s].policy.jobs > 0
+                                          and mstate["expired"][s]) else 0
+                    nested = mstate["cores"][s].on_event(ev, now)
+                    self._run_steps(mstate, s, nested, stolen)
+                    break
+            elif step == EXIT:
+                mstate["exited"][s] = True
+            else:
+                raise AssertionError(step)
+
+    def _event_of(self, item_id):
+        item = self.items[item_id]
+        if item[0] == "job":
+            return ("job", item[1], item[2])
+        return ("prog",)
+
+    def _worker_event(self, mstate, s, event, item_id):
+        now = FLUSH_AFTER if (mstate["cores"][s].policy.jobs > 0
+                              and mstate["expired"][s]) else 0
+        steps = mstate["cores"][s].on_event(event, now)
+        self._run_steps(mstate, s, steps, item_id)
+        mstate["cores"][s].policy.rebase()
+
+    def transition(self, st, action):
+        produced, next_program, queues, pending, cores, expired, done, closed, exited = st
+        mstate = {
+            "produced": list(produced),
+            "next_program": next_program,
+            "queues": [list(q) for q in queues],
+            "pending": [list(p) for p in pending],
+            "cores": [self.core(k) for k in cores],
+            "expired": list(expired),
+            "done": done,
+            "closed": closed,
+            "exited": list(exited),
+        }
+        kind = action[0]
+        if kind == "submit":
+            p = action[1]
+            cursor = mstate["produced"][p]
+            item = self.sc.producers[p][cursor]
+            item_id = self.offsets[p] + cursor
+            home = self.home(item, mstate["next_program"])
+            mstate["queues"][home].append(item_id)
+            mstate["produced"][p] += 1
+            if item[0] == "prog":
+                mstate["next_program"] += 1
+        elif kind == "close":
+            mstate["closed"] = True
+        elif kind == "pop":
+            s = action[1]
+            item_id = mstate["queues"][s].pop(0)
+            self._worker_event(mstate, s, self._event_of(item_id), item_id)
+        elif kind == "timeout":
+            self._worker_event(mstate, action[1], ("timeout",), None)
+        elif kind == "deadline":
+            mstate["expired"][action[1]] = True
+        elif kind == "drain":
+            self._worker_event(mstate, action[1], ("closed",), None)
+        else:
+            raise AssertionError(action)
+        return (
+            tuple(mstate["produced"]),
+            mstate["next_program"],
+            tuple(tuple(q) for q in mstate["queues"]),
+            tuple(tuple(p) for p in mstate["pending"]),
+            tuple(c.key() for c in mstate["cores"]),
+            tuple(mstate["expired"]),
+            mstate["done"],
+            mstate["closed"],
+            tuple(mstate["exited"]),
+        )
+
+    def invariant(self, st):
+        produced, _np, queues, pending, cores, expired, done, closed, exited = st
+        seen = [0] * len(self.items)
+        for s, q in enumerate(queues):
+            if len(q) > self.sc.queue_depth:
+                raise Violation(f"queue {s} over depth")
+            for item_id in q:
+                seen[item_id] += 1
+        for batch in pending:
+            for item_id in batch:
+                seen[item_id] += 1
+        for p, plist in enumerate(self.sc.producers):
+            for j in range(len(plist)):
+                item_id = self.offsets[p] + j
+                submitted = j < produced[p]
+                places = seen[item_id] + (1 if done & (1 << item_id) else 0)
+                if not submitted and places != 0:
+                    raise Violation(f"item {item_id} present before submission")
+                if submitted and places == 0:
+                    raise Violation(f"item {item_id} lost (no-loss violated)")
+                if submitted and places > 1:
+                    raise Violation(f"item {item_id} in {places} places (no-duplication)")
+        for s in range(self.sc.shards):
+            jobs, rows_counted, sig, _deadline = cores[s]
+            if jobs != len(pending[s]):
+                raise Violation(f"shard {s}: policy jobs {jobs} != batch {len(pending[s])}")
+            rows = 0
+            for item_id in pending[s]:
+                item = self.items[item_id]
+                if item[0] != "job":
+                    raise Violation(f"shard {s}: program {item_id} entered the batch")
+                rows += item[2]
+                if sig != item[1]:
+                    raise Violation(f"shard {s}: batch mixes signatures")
+            if rows_counted != rows:
+                raise Violation(f"shard {s}: policy rows {rows_counted} != batch {rows}")
+            if pending[s] and (
+                len(pending[s]) >= self.sc.max_batch_jobs or rows >= self.sc.max_batch_rows
+            ):
+                raise Violation(f"shard {s}: batch at thresholds survived an event")
+            if expired[s] and not pending[s]:
+                raise Violation(f"shard {s}: expired without pending")
+            if exited[s] and (queues[s] or pending[s]):
+                raise Violation(f"shard {s}: exited with work left")
+        if closed and not self.producers_done(st):
+            raise Violation("closed before every producer finished")
+
+    def is_goal(self, st):
+        _p, _np, _q, _pend, _c, _e, done, closed, exited = st
+        return closed and all(exited) and done == self.all_done()
+
+
+@dataclass
+class Report:
+    states: int = 0
+    transitions: int = 0
+    depth: int = 0
+    terminal: int = 0
+    goals: int = 0
+
+
+def explore(machine, max_states=5_000_000, check_deadlock=True, check_liveness=True):
+    """Mirror of modelcheck::explore (BFS, dedup, invariants, liveness)."""
+    init = machine.initial()
+    machine.invariant(init)
+    states = [init]
+    index = {init: 0}
+    depth = [0]
+    edges = []
+    rep = Report()
+    rep.goals += 1 if machine.is_goal(init) else 0
+    i = 0
+    while i < len(states):
+        st = states[i]
+        acts = machine.actions(st)
+        if not acts:
+            rep.terminal += 1
+            if check_deadlock and not machine.is_goal(st):
+                raise Violation(f"deadlock at state {i} (depth {depth[i]})")
+        for a in acts:
+            nxt = machine.transition(st, a)
+            rep.transitions += 1
+            if nxt not in index:
+                if len(states) >= max_states:
+                    raise Violation(f"state limit {max_states}")
+                index[nxt] = len(states)
+                states.append(nxt)
+                depth.append(depth[i] + 1)
+                machine.invariant(nxt)
+                if machine.is_goal(nxt):
+                    rep.goals += 1
+            edges.append((i, index[nxt]))
+        i += 1
+    if check_liveness:
+        n = len(states)
+        rev = [[] for _ in range(n)]
+        for f, t in edges:
+            rev[t].append(f)
+        reach = [False] * n
+        queue = deque(j for j in range(n) if machine.is_goal(states[j]))
+        for j in queue:
+            reach[j] = True
+        while queue:
+            j = queue.popleft()
+            for p in rev[j]:
+                if not reach[p]:
+                    reach[p] = True
+                    queue.append(p)
+        bad = [j for j in range(n) if not reach[j]]
+        if bad:
+            raise Violation(f"liveness: {len(bad)} states cannot reach a goal (first {bad[0]})")
+    rep.states = len(states)
+    rep.depth = max(depth) if depth else 0
+    return rep
+
+
+def all_routes(sigs, shards):
+    """Every assignment of signature ids 0..sigs-1 to shards."""
+    for combo in product(range(shards), repeat=sigs):
+        yield lambda s, c=combo: c[s]
+
+
+def sweep(scenario, sigs, **kw):
+    """Explore a scenario under every routing; returns per-route reports."""
+    reports = []
+    for route in all_routes(sigs, scenario.shards):
+        reports.append(explore(SystemMachine(scenario, route), **kw))
+    return reports
+
+
+if __name__ == "__main__":
+    import sys
+    import time
+
+    cases = [
+        # (label, scenario, sig count)
+        ("A 2sh d2 b2 steal 2prod 3j+1p 2sig", mixed(2, 2, 2, True, 2, 3, 1, 2), 2),
+        ("B 3sh d2 b2 steal 2prod 3j+2p 3sig", mixed(3, 2, 2, True, 2, 3, 2, 3), 3),
+        ("C 2sh d3 b3 nosteal 1prod 4j+1p 2sig", mixed(2, 3, 3, False, 1, 4, 1, 2), 2),
+        ("D 2sh d2 b2 steal 1prod 1j+1p 1sig (DOT)", mixed(2, 2, 2, True, 1, 1, 1, 1), 1),
+        ("E 2sh d2 b2 steal 2prod 4j+2p 2sig", mixed(2, 2, 2, True, 2, 4, 2, 2), 2),
+    ]
+    ok = True
+    for label, sc, sigs in cases:
+        t0 = time.time()
+        try:
+            reports = sweep(sc, sigs)
+            lo = min(r.states for r in reports)
+            hi = max(r.states for r in reports)
+            tr = max(r.transitions for r in reports)
+            dp = max(r.depth for r in reports)
+            g = min(r.goals for r in reports)
+            print(f"  {label}: states {lo}..{hi} over {len(reports)} routes, "
+                  f"max transitions {tr}, max depth {dp}, min goals {g}, "
+                  f"{time.time() - t0:.1f}s")
+        except Violation as v:
+            ok = False
+            print(f"  {label}: VIOLATION {v}")
+    sys.exit(0 if ok else 1)

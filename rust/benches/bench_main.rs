@@ -2,7 +2,8 @@
 //! cost of each experiment) plus the hot-path microbenches the §Perf pass
 //! optimises. Hand-rolled harness (criterion unavailable offline).
 //!
-//! Filter with `cargo bench -- <substring>`. Extra flags:
+//! Filter with `cargo bench -- <substring>...` (several substrings run
+//! every bench matching any of them). Extra flags:
 //!
 //! * `--quick` — single warmup pass, 3 iterations per bench (the CI
 //!   trajectory mode; see `ci.sh`, which records `BENCH_3.json` with it).
@@ -34,7 +35,7 @@ fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word>
 }
 
 fn main() {
-    let mut filter: Option<String> = None;
+    let mut filters: Vec<String> = Vec::new();
     let mut json_path: Option<String> = None;
     let mut quick = false;
     let mut args = std::env::args().skip(1);
@@ -48,12 +49,13 @@ fn main() {
                 json_path = Some(args.next().expect("--json requires a path argument"));
             }
             a if a.starts_with('-') => {} // cargo's --bench etc.
-            a => filter = Some(a.to_string()),
+            a => filters.push(a.to_string()),
         }
     }
-    let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+    let run =
+        |name: &str| filters.is_empty() || filters.iter().any(|f| name.contains(f));
     let mut results = Vec::new();
-    println!("mvap benchmarks (filter: {:?})\n", filter);
+    println!("mvap benchmarks (filters: {:?})\n", filters);
 
     // ---- hot paths -------------------------------------------------------
     if run("hot/lutgen_non_blocked") {

@@ -24,6 +24,11 @@
 //!   queues, plus the `submit_batch` coalescing front door.
 //! * [`shard`] — sharded dispatch: N shards keyed by job signature with
 //!   bounded queues, a time/size flush policy, and work stealing.
+//! * [`shard_machine`] — the shard worker's decision logic as pure state
+//!   machines ([`BatchPolicy`], [`shard_machine::ShardCore`]) plus the
+//!   bounded system model the exhaustive checker
+//!   ([`crate::modelcheck`]) explores; the threaded worker interprets
+//!   exactly these transitions.
 //! * [`metrics`] — throughput/latency/energy/occupancy accounting.
 //!
 //! Above the single-op job path sits the program compiler
@@ -40,6 +45,7 @@ pub mod backend;
 pub mod engine;
 pub mod service;
 pub mod shard;
+pub mod shard_machine;
 pub mod metrics;
 
 pub use backend::{Backend, BackendKind, NativeBackend, PjrtBackend, ReduceOutput};
@@ -48,4 +54,5 @@ pub use engine::VectorEngine;
 pub use job::{Job, JobResult, OpKind};
 pub use metrics::Metrics;
 pub use service::EngineService;
-pub use shard::{BatchPolicy, ShardConfig, ShardedService};
+pub use shard::{ShardConfig, ShardedService};
+pub use shard_machine::{BatchPolicy, ShardCore, ShardScenario, ShardSystemMachine};

@@ -19,6 +19,7 @@ use super::coalesce::JobSignature;
 use super::engine::VectorEngine;
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
+use super::shard_machine::{Nanos, ShardCore, WorkItem, WorkerEvent, WorkerStep};
 use crate::program::{BoundProgram, ProgramReport};
 use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -149,108 +150,29 @@ impl ShardQueue {
     }
 }
 
-/// The pure decision core of a shard worker's batching loop: when to
-/// flush the pending batch (signature switch, size/row thresholds, the
-/// flush deadline), when stealing is permitted, and how long to wait for
-/// the next event. Extracted from the worker so the flush/steal policy is
-/// a deterministic, single-threaded state machine — property-tested
-/// against a reference model in `rust/tests/shard_policy.rs` (no Condvar
-/// races needed to cover the policy logic). The worker loop holds the
-/// actual [`Submission`]s; the policy tracks only counts, the batch
-/// signature, and the deadline clock.
-#[derive(Clone, Debug)]
-pub struct BatchPolicy {
-    max_jobs: usize,
-    max_rows: usize,
-    flush_after: Duration,
-    jobs: usize,
-    rows: usize,
-    sig: Option<JobSignature>,
-    /// Deadline of the batch currently collecting (set at its first job).
-    deadline: Option<Instant>,
+/// The shard worker's monotonic clock, converting `Instant`s to the
+/// [`Nanos`] timeline the pure [`ShardCore`] reasons over (the core is
+/// `Eq + Hash` for the model checker, so it never sees an `Instant`).
+struct WorkerClock {
+    origin: Instant,
 }
 
-impl BatchPolicy {
-    /// Policy for a shard's flush thresholds.
-    pub fn new(cfg: &ShardConfig) -> Self {
-        BatchPolicy {
-            max_jobs: cfg.max_batch_jobs,
-            max_rows: cfg.max_batch_rows,
-            flush_after: cfg.flush_after,
-            jobs: 0,
-            rows: 0,
-            sig: None,
-            deadline: None,
-        }
+impl WorkerClock {
+    fn start() -> Self {
+        WorkerClock { origin: Instant::now() }
     }
 
-    /// Jobs in the pending batch.
-    pub fn pending_jobs(&self) -> usize {
-        self.jobs
+    fn now(&self) -> Nanos {
+        u64::try_from(self.origin.elapsed().as_nanos()).unwrap_or(u64::MAX)
     }
+}
 
-    /// Rows in the pending batch.
-    pub fn pending_rows(&self) -> usize {
-        self.rows
-    }
-
-    /// Signature of the pending batch (`None` when empty).
-    pub fn signature(&self) -> Option<JobSignature> {
-        self.sig
-    }
-
-    /// Must the pending batch flush *before* admitting a `sig` job?
-    /// True exactly on a signature switch of a non-empty batch.
-    pub fn must_flush_before(&self, sig: JobSignature) -> bool {
-        self.sig.map_or(false, |s| s != sig)
-    }
-
-    /// Admit one job into the pending batch (after any
-    /// [`Self::must_flush_before`] flush). Returns true when the batch
-    /// must flush immediately: job/row thresholds reached, or the batch
-    /// deadline (set when its first job arrived) has already passed.
-    pub fn admit(&mut self, sig: JobSignature, rows: usize, now: Instant) -> bool {
-        debug_assert!(!self.must_flush_before(sig), "flush before admitting");
-        if self.jobs == 0 {
-            self.sig = Some(sig);
-            self.deadline = Some(now + self.flush_after);
-        }
-        self.jobs += 1;
-        self.rows += rows;
-        self.jobs >= self.max_jobs
-            || self.rows >= self.max_rows
-            || self.deadline.map_or(false, |d| now >= d)
-    }
-
-    /// Should a pending partial batch flush now (deadline expired)?
-    pub fn should_flush(&self, now: Instant) -> bool {
-        self.jobs > 0 && self.deadline.map_or(false, |d| now >= d)
-    }
-
-    /// May the worker steal from other shards? Only while nothing is
-    /// pending — stealing mid-batch would mix signatures and delay the
-    /// batch already collecting.
-    pub fn may_steal(&self) -> bool {
-        self.jobs == 0
-    }
-
-    /// How long to wait for the next queue event: until the batch
-    /// deadline while collecting, else `idle_tick` (how often an idle
-    /// shard scans for stealable work — own-queue arrivals interrupt the
-    /// wait immediately via the condvar).
-    pub fn wait(&self, now: Instant, idle_tick: Duration) -> Duration {
-        match self.deadline {
-            Some(d) if self.jobs > 0 => d.saturating_duration_since(now),
-            _ => idle_tick,
-        }
-    }
-
-    /// The pending batch was flushed; reset for the next one.
-    pub fn flushed(&mut self) {
-        self.jobs = 0;
-        self.rows = 0;
-        self.sig = None;
-        self.deadline = None;
+/// The [`WorkItem`] view of a queued submission — what the decision core
+/// sees (signature + rows, or "a program"); the worker keeps the payload.
+fn work_item(sub: &Submission) -> WorkItem {
+    match &sub.payload {
+        Payload::Job(job, _) => WorkItem::Job { sig: JobSignature::of(job), rows: job.rows() },
+        Payload::Program(..) => WorkItem::Program,
     }
 }
 
@@ -284,77 +206,98 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
     super::service::dispatch_batch(engine, &jobs, &replies);
 }
 
-/// One shard's worker loop: collect same-signature jobs into a pending
-/// batch, flush on the [`BatchPolicy`] decisions, steal when idle.
-/// Program submissions are standalone units: they flush whatever batch is
-/// collecting (they would otherwise delay it unboundedly — a program can
-/// be large) and execute immediately.
-fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine: &mut VectorEngine) {
-    let mut pending: Vec<Submission> = Vec::new();
-    let mut policy = BatchPolicy::new(&cfg);
-    // admit one job submission and flush if the policy demands it; run a
-    // program submission on the spot
-    macro_rules! admit {
-        ($sub:expr) => {{
-            let Submission { payload, home } = $sub;
-            match payload {
-                Payload::Job(job, reply) => {
-                    let sig = JobSignature::of(&job);
-                    if policy.must_flush_before(sig) {
-                        // signature switch: commit the old batch first
-                        flush(engine, &mut pending, me);
-                        policy.flushed();
-                    }
-                    let rows = job.rows();
-                    pending.push(Submission { payload: Payload::Job(job, reply), home });
-                    if policy.admit(sig, rows, Instant::now()) {
-                        flush(engine, &mut pending, me);
-                        policy.flushed();
-                    }
-                }
-                Payload::Program(bound, reply) => {
-                    // a program is its own workload: commit the batch it
-                    // would otherwise delay, then run it
-                    flush(engine, &mut pending, me);
-                    policy.flushed();
-                    if home != me {
-                        engine.metrics_mut().stolen_jobs += 1;
-                    }
-                    let _ = reply.send(engine.execute_program(&bound));
-                }
-            }
-        }};
+/// One shard worker: the effectful half of the machine. Every decision —
+/// when to flush, admit, run a program, steal, or exit — comes from
+/// [`ShardCore::on_event`] (the pure, exhaustively model-checked
+/// transition); this struct merely executes the returned [`WorkerStep`]s
+/// against the real queues, engine, and reply channels. Keeping the
+/// interpreter decision-free is what makes the model checker's proof
+/// about *this* worker rather than a lookalike.
+struct Worker<'a> {
+    me: usize,
+    queues: &'a [Arc<ShardQueue>],
+    engine: &'a mut VectorEngine,
+    core: ShardCore,
+    /// Submissions of the pending batch, in admission order (the
+    /// payload-carrying twin of the core's policy counters).
+    pending: Vec<Submission>,
+    clock: WorkerClock,
+}
+
+impl Worker<'_> {
+    /// Feed one event through the decision core and execute the steps.
+    /// Returns true when the worker must exit.
+    fn handle(&mut self, event: WorkerEvent, item: Option<Submission>) -> bool {
+        let steps = self.core.on_event(event, self.clock.now());
+        self.run_steps(&steps, item)
     }
-    loop {
-        // Idle tick: an order of magnitude lazier than the flush deadline
-        // (it only gates how often an idle shard scans for steals).
-        let wait = policy.wait(Instant::now(), cfg.flush_after * 10);
-        match queues[me].pop(wait) {
-            Pop::Item(sub) => {
-                admit!(sub);
-            }
-            Pop::TimedOut => {
-                if policy.should_flush(Instant::now()) {
-                    flush(engine, &mut pending, me);
-                    policy.flushed();
+
+    fn run_steps(&mut self, steps: &[WorkerStep], mut item: Option<Submission>) -> bool {
+        for &step in steps {
+            match step {
+                WorkerStep::Flush => flush(self.engine, &mut self.pending, self.me),
+                WorkerStep::Admit => {
+                    let sub = item.take().expect("Admit without a popped submission");
+                    self.pending.push(sub);
                 }
-                if policy.may_steal() && cfg.steal {
-                    for (i, q) in queues.iter().enumerate() {
-                        if i == me {
+                WorkerStep::RunProgram => {
+                    let sub = item.take().expect("RunProgram without a popped submission");
+                    match sub.payload {
+                        Payload::Program(bound, reply) => {
+                            if sub.home != self.me {
+                                self.engine.metrics_mut().stolen_jobs += 1;
+                            }
+                            let _ = reply.send(self.engine.execute_program(&bound));
+                        }
+                        Payload::Job(..) => unreachable!("RunProgram for a job submission"),
+                    }
+                }
+                WorkerStep::Steal => {
+                    for i in 0..self.queues.len() {
+                        if i == self.me {
                             continue;
                         }
-                        if let Some(sub) = q.try_pop() {
-                            admit!(sub);
+                        let grabbed = self.queues[i].try_pop();
+                        if let Some(sub) = grabbed {
+                            let event = WorkerEvent::Item(work_item(&sub));
+                            let exited = self.handle(event, Some(sub));
+                            debug_assert!(!exited, "Item events never exit");
                             break;
                         }
                     }
                 }
+                WorkerStep::Exit => return true,
             }
-            Pop::Closed => {
-                // own queue fully drained (pop prefers items over Closed)
-                flush(engine, &mut pending, me);
-                break;
-            }
+        }
+        false
+    }
+}
+
+/// One shard's worker loop: collect same-signature jobs into a pending
+/// batch, flush on the [`ShardCore`] decisions, steal when idle.
+/// Program submissions are standalone units: they flush whatever batch is
+/// collecting (they would otherwise delay it unboundedly — a program can
+/// be large) and execute immediately.
+fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine: &mut VectorEngine) {
+    let mut worker = Worker {
+        me,
+        queues,
+        engine,
+        core: ShardCore::new(&cfg),
+        pending: Vec::new(),
+        clock: WorkerClock::start(),
+    };
+    loop {
+        // Idle tick: an order of magnitude lazier than the flush deadline
+        // (it only gates how often an idle shard scans for steals).
+        let wait = worker.core.wait(worker.clock.now(), cfg.flush_after * 10);
+        let (event, item) = match worker.queues[me].pop(wait) {
+            Pop::Item(sub) => (WorkerEvent::Item(work_item(&sub)), Some(sub)),
+            Pop::TimedOut => (WorkerEvent::TimedOut, None),
+            Pop::Closed => (WorkerEvent::Closed, None),
+        };
+        if worker.handle(event, item) {
+            break;
         }
     }
 }
@@ -712,62 +655,6 @@ mod tests {
         q.close();
         let mut rng = Rng::new(2);
         q.push(submission(&mut rng, 1), 4);
-    }
-
-    /// BatchPolicy transitions on a synthetic clock: thresholds, deadline
-    /// expiry, signature switches, steal gating, and wait durations —
-    /// fully deterministic (the model-checking property sweep lives in
-    /// rust/tests/shard_policy.rs).
-    #[test]
-    fn batch_policy_transitions() {
-        let cfg = ShardConfig {
-            max_batch_jobs: 3,
-            max_batch_rows: 100,
-            flush_after: Duration::from_millis(10),
-            ..ShardConfig::default()
-        };
-        let mut p = BatchPolicy::new(&cfg);
-        let t0 = Instant::now();
-        let sig_a = JobSignature {
-            op: OpKind::Add,
-            radix: Radix::TERNARY,
-            blocked: true,
-            digits: 3,
-            fold_rounds: 0,
-        };
-        let sig_b = JobSignature { digits: 5, ..sig_a };
-
-        assert!(p.may_steal());
-        assert_eq!(p.wait(t0, Duration::from_millis(77)), Duration::from_millis(77));
-        assert!(!p.must_flush_before(sig_a));
-        assert!(!p.admit(sig_a, 10, t0), "1/3 jobs, 10/100 rows: keep collecting");
-        assert_eq!((p.pending_jobs(), p.pending_rows()), (1, 10));
-        assert_eq!(p.signature(), Some(sig_a));
-        assert!(!p.may_steal());
-        // wait shrinks toward the deadline set at the first admit
-        assert_eq!(
-            p.wait(t0 + Duration::from_millis(4), Duration::from_secs(1)),
-            Duration::from_millis(6)
-        );
-        assert!(!p.should_flush(t0 + Duration::from_millis(9)));
-        assert!(p.should_flush(t0 + Duration::from_millis(10)));
-        // signature switch forces a flush-before
-        assert!(p.must_flush_before(sig_b));
-        assert!(!p.must_flush_before(sig_a));
-        // row threshold flushes immediately
-        assert!(p.admit(sig_a, 95, t0), "105/100 rows");
-        p.flushed();
-        assert!(p.may_steal());
-        assert_eq!(p.signature(), None);
-        // job-count threshold
-        assert!(!p.admit(sig_b, 1, t0));
-        assert!(!p.admit(sig_b, 1, t0));
-        assert!(p.admit(sig_b, 1, t0), "3/3 jobs");
-        p.flushed();
-        // deadline already passed at admit time flushes immediately
-        assert!(!p.admit(sig_a, 1, t0));
-        assert!(p.admit(sig_a, 1, t0 + Duration::from_millis(10)));
-        p.flushed();
     }
 
     /// Work stealing: all jobs share one signature (one home shard), with

@@ -1,21 +1,107 @@
-//! Graphviz DOT export of a state diagram — the programmatic equivalent of
-//! the paper's Figs. 4 and 5, handy for inspecting new functions.
+//! Graphviz DOT export — the programmatic equivalent of the paper's
+//! Figs. 4 and 5 for truth-table state diagrams, and a generic
+//! [`Digraph`] builder the model checker uses for explored state graphs.
 
 use super::graph::StateDiagram;
+use std::fmt::Write as _;
+
+/// Incremental builder for a DOT digraph: named nodes with optional
+/// attribute lists, directed edges likewise. Values are quoted exactly
+/// when they need to be, so simple attrs render as `shape=circle` and
+/// free text as `label="cycle-break (was 101)"`.
+#[derive(Clone, Debug)]
+pub struct Digraph {
+    body: String,
+}
+
+/// A bare identifier needs no quotes: `[A-Za-z0-9_]+` (DOT's rules are
+/// wider, but this conservative subset renders identically).
+fn bare(s: &str) -> bool {
+    !s.is_empty() && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+}
+
+/// Render a string as a DOT quoted literal (escaping `"` and `\`).
+fn quoted(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        if c == '"' || c == '\\' {
+            out.push('\\');
+        }
+        out.push(c);
+    }
+    out.push('"');
+    out
+}
+
+fn attr_list(attrs: &[(&str, &str)]) -> String {
+    let rendered: Vec<String> = attrs
+        .iter()
+        .map(|&(k, v)| {
+            if bare(v) {
+                format!("{k}={v}")
+            } else {
+                format!("{k}={}", quoted(v))
+            }
+        })
+        .collect();
+    format!(" [{}]", rendered.join(", "))
+}
+
+impl Digraph {
+    /// Start a digraph named `name`.
+    pub fn new(name: &str) -> Self {
+        Digraph { body: format!("digraph {name} {{\n") }
+    }
+
+    /// A graph-level attribute line (`rankdir=RL;`).
+    pub fn graph_attr(&mut self, key: &str, value: &str) -> &mut Self {
+        if bare(value) {
+            let _ = writeln!(self.body, "  {key}={value};");
+        } else {
+            let _ = writeln!(self.body, "  {key}={};", quoted(value));
+        }
+        self
+    }
+
+    /// A node with an attribute list (pass `&[]` for a bare node).
+    pub fn node(&mut self, label: &str, attrs: &[(&str, &str)]) -> &mut Self {
+        let tail = if attrs.is_empty() { String::new() } else { attr_list(attrs) };
+        let _ = writeln!(self.body, "  {}{tail};", quoted(label));
+        self
+    }
+
+    /// A directed edge with an attribute list (pass `&[]` for a bare
+    /// edge).
+    pub fn edge(&mut self, from: &str, to: &str, attrs: &[(&str, &str)]) -> &mut Self {
+        let tail = if attrs.is_empty() { String::new() } else { attr_list(attrs) };
+        let _ = writeln!(self.body, "  {} -> {}{tail};", quoted(from), quoted(to));
+        self
+    }
+
+    /// Finish: the complete DOT source.
+    pub fn finish(&self) -> String {
+        let mut out = self.body.clone();
+        out.push_str("}\n");
+        out
+    }
+}
 
 /// Render the diagram in DOT format. noAction roots are drawn as double
 /// circles; cycle-break rewrites are annotated on the edge.
 pub fn to_dot(d: &StateDiagram) -> String {
     let t = d.table();
-    let mut out = String::from("digraph state_diagram {\n  rankdir=RL;\n");
+    let mut g = Digraph::new("state_diagram");
+    g.graph_attr("rankdir", "RL");
     for node in d.nodes() {
         let label = t.fmt_state(node.id);
         if node.no_action {
-            out.push_str(&format!(
-                "  \"{label}\" [shape=doublecircle, style=filled, fillcolor=lightgray];\n"
-            ));
+            g.node(
+                &label,
+                &[("shape", "doublecircle"), ("style", "filled"), ("fillcolor", "lightgray")],
+            );
         } else {
-            out.push_str(&format!("  \"{label}\" [shape=circle];\n"));
+            g.node(&label, &[("shape", "circle")]);
         }
     }
     let rewrites: std::collections::HashMap<usize, (usize, usize)> = d
@@ -27,22 +113,19 @@ pub fn to_dot(d: &StateDiagram) -> String {
         if node.no_action {
             // self-loop for clarity, as in Fig. 4/5
             let l = t.fmt_state(node.id);
-            out.push_str(&format!("  \"{l}\" -> \"{l}\" [style=dotted];\n"));
+            g.edge(&l, &l, &[("style", "dotted")]);
             continue;
         }
         let from = t.fmt_state(node.id);
         let to = t.fmt_state(node.next);
         if let Some(&(orig, _)) = rewrites.get(&node.id) {
-            out.push_str(&format!(
-                "  \"{from}\" -> \"{to}\" [color=green, label=\"cycle-break (was {})\"];\n",
-                t.fmt_state(orig)
-            ));
+            let label = format!("cycle-break (was {})", t.fmt_state(orig));
+            g.edge(&from, &to, &[("color", "green"), ("label", &label)]);
         } else {
-            out.push_str(&format!("  \"{from}\" -> \"{to}\";\n"));
+            g.edge(&from, &to, &[]);
         }
     }
-    out.push_str("}\n");
-    out
+    g.finish()
 }
 
 #[cfg(test)]
@@ -69,5 +152,37 @@ mod tests {
         let dot = to_dot(&d);
         assert!(dot.starts_with("digraph"));
         assert!(dot.trim_end().ends_with('}'));
+    }
+
+    /// The builder pins the exact byte format `to_dot` has always
+    /// emitted: quoted labels, bare simple attr values, quoted free text.
+    #[test]
+    fn digraph_builder_format() {
+        let mut g = Digraph::new("g");
+        g.graph_attr("rankdir", "RL");
+        g.node("000", &[("shape", "doublecircle"), ("style", "filled"), ("fillcolor", "lightgray")]);
+        g.node("a b", &[]);
+        g.edge("000", "000", &[("style", "dotted")]);
+        g.edge("101", "020", &[("color", "green"), ("label", "cycle-break (was 101)")]);
+        g.edge("x", "y", &[]);
+        assert_eq!(
+            g.finish(),
+            "digraph g {\n\
+             \x20 rankdir=RL;\n\
+             \x20 \"000\" [shape=doublecircle, style=filled, fillcolor=lightgray];\n\
+             \x20 \"a b\";\n\
+             \x20 \"000\" -> \"000\" [style=dotted];\n\
+             \x20 \"101\" -> \"020\" [color=green, label=\"cycle-break (was 101)\"];\n\
+             \x20 \"x\" -> \"y\";\n\
+             }\n"
+        );
+    }
+
+    #[test]
+    fn digraph_escapes_quotes_and_backslashes() {
+        let mut g = Digraph::new("g");
+        g.node("say \"hi\"", &[("label", "a\\b")]);
+        let dot = g.finish();
+        assert!(dot.contains("\"say \\\"hi\\\"\" [label=\"a\\\\b\"];"), "dot={dot}");
     }
 }

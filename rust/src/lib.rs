@@ -30,6 +30,9 @@
 //!   coalescing into shared tiles, a sharded work-stealing dispatch layer,
 //!   and backends (native simulator or AOT-compiled XLA executables via
 //!   PJRT).
+//! * [`modelcheck`] — exhaustive BFS model checker (polestar-style) for
+//!   pure state machines; proves the coordinator's shard logic loses and
+//!   duplicates nothing across every bounded interleaving.
 //! * [`program`] — the dataflow compiler above the coordinator: multi-op
 //!   AP programs (element-wise ops + segmented reductions) planned onto
 //!   CAM column fields so intermediates stay resident between ops, with
@@ -58,6 +61,7 @@ pub mod circuit;
 pub mod energy;
 pub mod baselines;
 pub mod coordinator;
+pub mod modelcheck;
 pub mod program;
 pub mod runtime;
 pub mod exp;

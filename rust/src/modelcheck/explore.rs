@@ -1,0 +1,512 @@
+//! Exhaustive breadth-first exploration of a [`Machine`]'s reachable
+//! state space, with safety/liveness checking and shortest-trace
+//! counterexamples.
+
+use super::machine::{Machine, Violation};
+use crate::diagram::dot::Digraph;
+use std::collections::HashMap;
+
+/// Bounds and toggles for one exploration run.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreConfig {
+    /// Abort (as [`CheckFailure::StateLimit`]) past this many distinct
+    /// states — the guard against accidentally unbounded scenarios.
+    pub max_states: usize,
+    /// Treat a terminal non-goal state as a deadlock violation.
+    pub check_deadlock: bool,
+    /// Require every reachable state to be able to reach a goal state
+    /// (eventual-flush liveness under fair scheduling: fairness means no
+    /// enabled path is avoided forever, so "a goal stays reachable from
+    /// everywhere" is exactly "a fair run eventually gets there").
+    pub check_liveness: bool,
+    /// Keep the full explored graph in the report for DOT export
+    /// (memory-proportional to transitions; meant for small scenarios).
+    pub record_graph: bool,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            max_states: 1_000_000,
+            check_deadlock: true,
+            check_liveness: true,
+            record_graph: false,
+        }
+    }
+}
+
+/// A finite action path from the initial state, used to replay a
+/// counterexample.
+#[derive(Clone, Debug)]
+pub struct Trace<M: Machine> {
+    /// The machine's initial state.
+    pub initial: M::State,
+    /// Each step: the action taken and the state it produced.
+    pub steps: Vec<(M::Action, M::State)>,
+}
+
+impl<M: Machine> Trace<M> {
+    /// The final state of the trace.
+    pub fn last(&self) -> &M::State {
+        self.steps.last().map_or(&self.initial, |(_, s)| s)
+    }
+
+    /// Number of actions in the trace.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// True when the trace is just the initial state.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Human-readable replay: one numbered line per step.
+    pub fn render(&self, m: &M) -> String {
+        let mut out = format!("    0. (init) {}\n", m.state_label(&self.initial));
+        for (i, (action, state)) in self.steps.iter().enumerate() {
+            out.push_str(&format!(
+                "    {}. {} -> {}\n",
+                i + 1,
+                m.action_label(action),
+                m.state_label(state)
+            ));
+        }
+        out
+    }
+}
+
+/// Why a check failed. Each variant carries a shortest trace to the
+/// offending state (BFS discovery order guarantees minimality).
+#[derive(Clone, Debug)]
+pub enum CheckFailure<M: Machine> {
+    /// A state violated the safety invariant.
+    Invariant { violation: Violation, trace: Trace<M> },
+    /// A transition itself reported a violation; `action` is the step
+    /// that failed from the trace's final state.
+    Transition { violation: Violation, action: M::Action, trace: Trace<M> },
+    /// A terminal state that is not a goal.
+    Deadlock { trace: Trace<M> },
+    /// A reachable state from which no goal state is reachable.
+    Liveness { trace: Trace<M> },
+    /// Exploration exceeded [`ExploreConfig::max_states`].
+    StateLimit { explored: usize },
+}
+
+impl<M: Machine> CheckFailure<M> {
+    /// One-line description of the failure kind.
+    pub fn headline(&self) -> String {
+        match self {
+            CheckFailure::Invariant { violation, trace } => {
+                format!("invariant violated after {} steps: {violation}", trace.len())
+            }
+            CheckFailure::Transition { violation, action, trace } => format!(
+                "transition {action:?} failed after {} steps: {violation}",
+                trace.len()
+            ),
+            CheckFailure::Deadlock { trace } => {
+                format!("deadlock (terminal non-goal state) after {} steps", trace.len())
+            }
+            CheckFailure::Liveness { trace } => format!(
+                "liveness violated: no goal reachable from the state after {} steps",
+                trace.len()
+            ),
+            CheckFailure::StateLimit { explored } => {
+                format!("state limit hit after exploring {explored} states")
+            }
+        }
+    }
+
+    /// Full report: headline plus the replayable counterexample trace.
+    pub fn render(&self, m: &M) -> String {
+        let mut out = self.headline();
+        out.push('\n');
+        match self {
+            CheckFailure::Invariant { trace, .. }
+            | CheckFailure::Deadlock { trace }
+            | CheckFailure::Liveness { trace } => {
+                out.push_str("  shortest counterexample trace:\n");
+                out.push_str(&trace.render(m));
+            }
+            CheckFailure::Transition { action, trace, .. } => {
+                out.push_str("  shortest counterexample trace:\n");
+                out.push_str(&trace.render(m));
+                out.push_str(&format!("    !. {} -> (violation)\n", m.action_label(action)));
+            }
+            CheckFailure::StateLimit { .. } => {}
+        }
+        out
+    }
+}
+
+/// The recorded explored graph (present when
+/// [`ExploreConfig::record_graph`] is set).
+#[derive(Clone, Debug)]
+pub struct Graph<M: Machine> {
+    /// Every distinct state, in BFS discovery order.
+    pub states: Vec<M::State>,
+    /// Every transition as (from, action, to) state indices.
+    pub edges: Vec<(u32, M::Action, u32)>,
+}
+
+/// Summary of a clean exhaustive exploration.
+#[derive(Clone, Debug)]
+pub struct Report<M: Machine> {
+    /// Distinct states explored.
+    pub states: usize,
+    /// Transitions taken (including re-entries into known states).
+    pub transitions: usize,
+    /// Maximum BFS depth (longest shortest-path from the initial state).
+    pub depth: usize,
+    /// Terminal states (no enabled actions).
+    pub terminal: usize,
+    /// Goal states.
+    pub goals: usize,
+    /// The explored graph, when recording was requested.
+    pub graph: Option<Graph<M>>,
+}
+
+impl<M: Machine> Report<M> {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "explored {} states, {} transitions, depth {}, {} terminal, {} goal",
+            self.states, self.transitions, self.depth, self.terminal, self.goals
+        )
+    }
+
+    /// DOT rendering of the explored graph (needs
+    /// [`ExploreConfig::record_graph`]). Goal states are double circles,
+    /// the initial state is filled; edges carry action labels.
+    pub fn dot(&self, m: &M) -> Option<String> {
+        let graph = self.graph.as_ref()?;
+        let mut g = Digraph::new("explored");
+        g.graph_attr("rankdir", "LR");
+        for (i, state) in graph.states.iter().enumerate() {
+            let name = format!("s{i}");
+            let label = m.state_label(state);
+            let mut attrs: Vec<(&str, &str)> = vec![("label", &label)];
+            if m.is_goal(state) {
+                attrs.push(("shape", "doublecircle"));
+            }
+            if i == 0 {
+                attrs.push(("style", "filled"));
+                attrs.push(("fillcolor", "lightgray"));
+            }
+            g.node(&name, &attrs);
+        }
+        for &(from, ref action, to) in &graph.edges {
+            let label = m.action_label(action);
+            g.edge(&format!("s{from}"), &format!("s{to}"), &[("label", &label)]);
+        }
+        Some(g.finish())
+    }
+}
+
+/// Exhaustively explore `m` breadth-first from its initial state.
+///
+/// Checks the safety invariant on every distinct state as it is
+/// discovered, propagates transition-reported violations, classifies
+/// terminal states (deadlock check), and — after the full graph is known
+/// — runs the liveness check by backward reachability from the goal
+/// states. Any failure carries a shortest counterexample trace.
+#[allow(clippy::type_complexity)]
+pub fn explore<M: Machine>(
+    m: &M,
+    cfg: &ExploreConfig,
+) -> Result<Report<M>, Box<CheckFailure<M>>> {
+    let initial = m.initial();
+    // predecessor links for shortest-trace reconstruction
+    let mut preds: Vec<Option<(u32, M::Action)>> = vec![None];
+    let mut states: Vec<M::State> = vec![initial.clone()];
+    let mut depth: Vec<u32> = vec![0];
+    let mut index: HashMap<M::State, u32> = HashMap::new();
+    index.insert(initial.clone(), 0);
+
+    let trace_to = |idx: u32, states: &[M::State], preds: &[Option<(u32, M::Action)>]| {
+        let mut rev = Vec::new();
+        let mut at = idx;
+        while let Some((prev, action)) = preds[at as usize].clone() {
+            rev.push((action, states[at as usize].clone()));
+            at = prev;
+        }
+        rev.reverse();
+        Trace::<M> { initial: states[0].clone(), steps: rev }
+    };
+
+    if let Err(violation) = m.invariant(&initial) {
+        let trace = Trace::<M> { initial, steps: Vec::new() };
+        return Err(Box::new(CheckFailure::Invariant { violation, trace }));
+    }
+
+    let mut edges: Vec<(u32, M::Action, u32)> = Vec::new();
+    let mut transitions = 0usize;
+    let mut terminal = 0usize;
+    let mut goals = 0usize;
+    if m.is_goal(&initial) {
+        goals += 1;
+    }
+    let mut actions: Vec<M::Action> = Vec::new();
+
+    // `states` doubles as the BFS queue: pushing discoveries to the back
+    // while scanning front-to-back is exactly breadth-first order.
+    let mut i = 0usize;
+    while i < states.len() {
+        let state = states[i].clone();
+        actions.clear();
+        m.actions(&state, &mut actions);
+        if actions.is_empty() {
+            terminal += 1;
+            if cfg.check_deadlock && !m.is_goal(&state) {
+                let trace = trace_to(i as u32, &states, &preds);
+                return Err(Box::new(CheckFailure::Deadlock { trace }));
+            }
+        }
+        for action in &actions {
+            let next = match m.transition(&state, action) {
+                Ok(next) => next,
+                Err(violation) => {
+                    let trace = trace_to(i as u32, &states, &preds);
+                    return Err(Box::new(CheckFailure::Transition {
+                        violation,
+                        action: action.clone(),
+                        trace,
+                    }));
+                }
+            };
+            transitions += 1;
+            let to = match index.get(&next) {
+                Some(&id) => id,
+                None => {
+                    if states.len() >= cfg.max_states {
+                        return Err(Box::new(CheckFailure::StateLimit {
+                            explored: states.len(),
+                        }));
+                    }
+                    let id = states.len() as u32;
+                    index.insert(next.clone(), id);
+                    preds.push(Some((i as u32, action.clone())));
+                    depth.push(depth[i] + 1);
+                    states.push(next.clone());
+                    if let Err(violation) = m.invariant(&next) {
+                        let trace = trace_to(id, &states, &preds);
+                        return Err(Box::new(CheckFailure::Invariant { violation, trace }));
+                    }
+                    if m.is_goal(&next) {
+                        goals += 1;
+                    }
+                    id
+                }
+            };
+            if cfg.record_graph || cfg.check_liveness {
+                edges.push((i as u32, action.clone(), to));
+            }
+        }
+        i += 1;
+    }
+
+    if cfg.check_liveness {
+        // backward BFS from every goal state over the reversed graph;
+        // any state left unmarked can never flush out to a goal
+        let n = states.len();
+        let mut rev: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(from, _, to) in &edges {
+            rev[to as usize].push(from);
+        }
+        let mut reaches_goal = vec![false; n];
+        let mut queue: Vec<u32> = (0..n as u32)
+            .filter(|&id| m.is_goal(&states[id as usize]))
+            .collect();
+        for &id in &queue {
+            reaches_goal[id as usize] = true;
+        }
+        let mut qi = 0;
+        while qi < queue.len() {
+            let id = queue[qi];
+            qi += 1;
+            for &p in &rev[id as usize] {
+                if !reaches_goal[p as usize] {
+                    reaches_goal[p as usize] = true;
+                    queue.push(p);
+                }
+            }
+        }
+        // `states` is in BFS order, so the first unmarked index is a
+        // minimal-depth counterexample
+        if let Some(bad) = (0..n).find(|&id| !reaches_goal[id]) {
+            let trace = trace_to(bad as u32, &states, &preds);
+            return Err(Box::new(CheckFailure::Liveness { trace }));
+        }
+    }
+
+    let max_depth = depth.iter().copied().max().unwrap_or(0) as usize;
+    let graph = cfg.record_graph.then_some(Graph { states, edges });
+    Ok(Report {
+        states: index.len(),
+        transitions,
+        depth: max_depth,
+        terminal,
+        goals,
+        graph,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A counter that walks 0..=max by +1/+2 steps; goal = max. With an
+    /// optional "trap" value that silently swallows further actions.
+    struct Counter {
+        max: u32,
+        trap: Option<u32>,
+        bad_invariant_at: Option<u32>,
+    }
+
+    impl Machine for Counter {
+        type State = u32;
+        type Action = u32; // increment size
+
+        fn initial(&self) -> u32 {
+            0
+        }
+
+        fn actions(&self, s: &u32, out: &mut Vec<u32>) {
+            if Some(*s) == self.trap {
+                return; // terminal non-goal unless trap == max
+            }
+            for step in [1u32, 2] {
+                if s + step <= self.max {
+                    out.push(step);
+                }
+            }
+        }
+
+        fn transition(&self, s: &u32, a: &u32) -> Result<u32, Violation> {
+            Ok(s + a)
+        }
+
+        fn invariant(&self, s: &u32) -> Result<(), Violation> {
+            if Some(*s) == self.bad_invariant_at {
+                return Err(Violation::new(format!("hit forbidden value {s}")));
+            }
+            Ok(())
+        }
+
+        fn is_goal(&self, s: &u32) -> bool {
+            *s == self.max
+        }
+    }
+
+    fn counter(max: u32) -> Counter {
+        Counter { max, trap: None, bad_invariant_at: None }
+    }
+
+    #[test]
+    fn explores_every_state_exactly_once() {
+        let m = counter(6);
+        let r = explore(&m, &ExploreConfig::default()).unwrap();
+        assert_eq!(r.states, 7); // 0..=6
+        assert_eq!(r.goals, 1);
+        assert_eq!(r.terminal, 1);
+        assert_eq!(r.depth, 3); // 0 -2-> 2 -2-> 4 -2-> 6
+        // transitions: from each s<max, +1 always; +2 when s+2<=max
+        assert_eq!(r.transitions, 6 + 5);
+        assert!(r.summary().contains("7 states"));
+    }
+
+    #[test]
+    fn invariant_failure_has_shortest_trace() {
+        let m = Counter { max: 8, trap: None, bad_invariant_at: Some(5) };
+        let err = *explore(&m, &ExploreConfig::default()).unwrap_err();
+        match err {
+            CheckFailure::Invariant { violation, trace } => {
+                assert!(violation.message().contains("forbidden value 5"));
+                // shortest path to 5 is three steps: 2, 2, 1 (any order)
+                assert_eq!(trace.len(), 3);
+                assert_eq!(*trace.last(), 5);
+                let rendered = trace.render(&m);
+                assert!(rendered.contains("0. (init) 0"), "rendered={rendered}");
+            }
+            other => panic!("expected invariant failure, got {}", other.headline()),
+        }
+    }
+
+    #[test]
+    fn deadlock_detected_at_terminal_non_goal() {
+        let m = Counter { max: 8, trap: Some(3), bad_invariant_at: None };
+        let err = *explore(&m, &ExploreConfig::default()).unwrap_err();
+        match err {
+            CheckFailure::Deadlock { trace } => {
+                assert_eq!(*trace.last(), 3);
+                assert_eq!(trace.len(), 2); // 0 -2-> 2 -1-> 3
+            }
+            other => panic!("expected deadlock, got {}", other.headline()),
+        }
+    }
+
+    #[test]
+    fn trap_without_deadlock_check_is_liveness_violation() {
+        let m = Counter { max: 8, trap: Some(3), bad_invariant_at: None };
+        let cfg = ExploreConfig { check_deadlock: false, ..ExploreConfig::default() };
+        let err = *explore(&m, &cfg).unwrap_err();
+        match err {
+            CheckFailure::Liveness { trace } => assert_eq!(*trace.last(), 3),
+            other => panic!("expected liveness failure, got {}", other.headline()),
+        }
+    }
+
+    #[test]
+    fn state_limit_bails_out() {
+        let m = counter(1_000);
+        let cfg = ExploreConfig { max_states: 10, ..ExploreConfig::default() };
+        let err = *explore(&m, &cfg).unwrap_err();
+        assert!(matches!(err, CheckFailure::StateLimit { explored: 10 }));
+    }
+
+    #[test]
+    fn transition_violation_reported_with_action() {
+        struct Bad;
+        impl Machine for Bad {
+            type State = u32;
+            type Action = ();
+            fn initial(&self) -> u32 {
+                0
+            }
+            fn actions(&self, s: &u32, out: &mut Vec<()>) {
+                if *s == 0 {
+                    out.push(());
+                }
+            }
+            fn transition(&self, _: &u32, _: &()) -> Result<u32, Violation> {
+                Err(Violation::new("bang"))
+            }
+        }
+        let cfg = ExploreConfig { check_deadlock: false, check_liveness: false, ..Default::default() };
+        let err = *explore(&Bad, &cfg).unwrap_err();
+        match err {
+            CheckFailure::Transition { violation, trace, .. } => {
+                assert_eq!(violation.message(), "bang");
+                assert!(trace.is_empty());
+            }
+            other => panic!("expected transition failure, got {}", other.headline()),
+        }
+    }
+
+    #[test]
+    fn dot_export_names_every_state() {
+        let m = counter(3);
+        let cfg = ExploreConfig { record_graph: true, ..ExploreConfig::default() };
+        let r = explore(&m, &cfg).unwrap();
+        let dot = r.dot(&m).expect("graph recorded");
+        assert!(dot.starts_with("digraph explored {"));
+        for i in 0..r.states {
+            assert!(dot.contains(&format!("\"s{i}\"")), "missing node s{i} in {dot}");
+        }
+        assert!(dot.contains("doublecircle"), "goal state styled: {dot}");
+        assert!(dot.contains("[label=1]") || dot.contains("[label=\"1\"]"), "dot={dot}");
+        // without recording, no graph
+        let r2 = explore(&m, &ExploreConfig::default()).unwrap();
+        assert!(r2.dot(&m).is_none());
+    }
+}

@@ -1,0 +1,80 @@
+//! The [`Machine`] trait: a system as explicit states, enumerable
+//! actions, and a pure transition function.
+
+use std::fmt;
+use std::hash::Hash;
+
+/// A checked property did not hold. Carries a human-readable message;
+/// the explorer attaches the state/trace context.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    message: String,
+}
+
+impl Violation {
+    /// A violation with the given description.
+    pub fn new(message: impl Into<String>) -> Self {
+        Violation { message: message.into() }
+    }
+
+    /// The description.
+    pub fn message(&self) -> &str {
+        &self.message
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+/// A system the explorer can exhaustively check: explicit state,
+/// enumerable actions per state, and a **pure** transition function.
+/// Implementations must be deterministic — nondeterminism (scheduling,
+/// timers) is modeled as distinct actions, never hidden inside
+/// `transition`.
+pub trait Machine {
+    /// Full system state. `Eq + Hash` give the explorer state dedup;
+    /// `Clone` lets transitions copy-and-mutate.
+    type State: Clone + Eq + Hash + fmt::Debug;
+    /// One atomic step the system can take from a state.
+    type Action: Clone + fmt::Debug;
+
+    /// The initial state.
+    fn initial(&self) -> Self::State;
+
+    /// Enumerate the actions enabled in `state` into `out` (cleared by
+    /// the caller). An empty set marks a terminal state.
+    fn actions(&self, state: &Self::State, out: &mut Vec<Self::Action>);
+
+    /// Apply `action` to `state`. `Err` marks a safety violation
+    /// *during* the step (e.g. an effect observed to double-execute);
+    /// conditions checkable on the resulting state belong in
+    /// [`Self::invariant`].
+    fn transition(&self, state: &Self::State, action: &Self::Action)
+        -> Result<Self::State, Violation>;
+
+    /// Safety invariant, checked on the initial state and every state
+    /// the explorer discovers.
+    fn invariant(&self, _state: &Self::State) -> Result<(), Violation> {
+        Ok(())
+    }
+
+    /// Is this a goal state? Goals feed the liveness check (every
+    /// reachable state must be able to reach one) and terminal-state
+    /// classification (a terminal non-goal is a deadlock).
+    fn is_goal(&self, _state: &Self::State) -> bool {
+        false
+    }
+
+    /// Short human-readable label for a state (traces, DOT nodes).
+    fn state_label(&self, state: &Self::State) -> String {
+        format!("{state:?}")
+    }
+
+    /// Short human-readable label for an action (traces, DOT edges).
+    fn action_label(&self, action: &Self::Action) -> String {
+        format!("{action:?}")
+    }
+}

@@ -1,0 +1,23 @@
+//! Exhaustive model checking for pure state machines, polestar-style.
+//!
+//! The coordinator's concurrency story is only as strong as its decision
+//! logic, and threads can't be exhaustively tested. This module checks
+//! the logic the threads *interpret*: implement [`Machine`] for a system
+//! with explicit state, enumerable actions, and a pure transition
+//! function, and [`explore`](explore::explore) walks **every** reachable
+//! state breadth-first — checking safety invariants in each one, liveness
+//! (every reachable state can still reach a goal) over the whole graph,
+//! and reporting the shortest counterexample trace on any violation.
+//!
+//! BFS order means the first violation found is at minimal depth, so
+//! counterexample traces are already minimized. The explored graph can be
+//! exported as DOT through [`crate::diagram`] for the architecture docs.
+//!
+//! See [`crate::coordinator::shard_machine`] for the machine this was
+//! built to check, and `mvap modelcheck` / `ci.sh` for the gate.
+
+pub mod explore;
+pub mod machine;
+
+pub use explore::{explore, CheckFailure, ExploreConfig, Report, Trace};
+pub use machine::{Machine, Violation};

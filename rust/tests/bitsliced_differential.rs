@@ -5,21 +5,16 @@
 //! non-multiples of 64), mask widths, don't-care densities, and
 //! interleaved compare/write rounds.
 
+mod common;
+
+use common::{random_digit, random_words};
 use mvap::ap::{add_vectors, adder_lut, load_operands_storage, Ap, ExecMode};
 use mvap::cam::{
     march_detect, BitSlicedArray, CamArray, CamStorage, Fault, FaultyArray, StorageKind,
 };
-use mvap::mvl::{Radix, Word, DONT_CARE};
+use mvap::mvl::{Radix, DONT_CARE};
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
-
-fn random_digit(rng: &mut Rng, n: u8, dont_care_p: f64) -> u8 {
-    if rng.chance(dont_care_p) {
-        DONT_CARE
-    } else {
-        rng.digit(n)
-    }
-}
 
 /// Random interleaved compare/write rounds on both backends; every
 /// observable output must agree at every step.
@@ -250,12 +245,8 @@ fn lut_programs_agree_across_storages() {
         let radix = Radix(2 + rng.digit(3));
         let p = 1 + rng.index(8);
         let rows = 1 + rng.index(200);
-        let a: Vec<Word> = (0..rows)
-            .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
-            .collect();
-        let b: Vec<Word> = (0..rows)
-            .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
-            .collect();
+        let a = random_words(rng, rows, p, radix);
+        let b = random_words(rng, rows, p, radix);
         let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
         let lut = adder_lut(radix, mode);
 

@@ -1,0 +1,93 @@
+//! Shared property-test helpers for the integration suites.
+//!
+//! Every suite drives randomness through [`mvap::util::prop::forall`], so
+//! a failing case always prints its replay seed (`MVAP_PROP_SEED=0x…`);
+//! these helpers keep the *samplers* identical across suites too — the
+//! same radix ranges, the same word-boundary-biased row counts, the same
+//! don't-care densities — so a distribution fix lands everywhere at once.
+
+// Each test binary compiles its own copy of this module and uses only a
+// subset of the helpers.
+#![allow(dead_code)]
+
+use mvap::cam::{CamStorage, StorageKind};
+use mvap::coordinator::{JobSignature, OpKind};
+use mvap::mvl::{Radix, Word, DONT_CARE};
+use mvap::util::Rng;
+
+/// Both storage backends, for `for kind in KINDS` sweeps.
+pub const KINDS: [StorageKind; 2] = [StorageKind::Scalar, StorageKind::BitSliced];
+
+/// A random radix in 2..=5 (every radix the paper's LUT zoo covers).
+pub fn random_radix(rng: &mut Rng) -> Radix {
+    Radix(2 + rng.digit(4))
+}
+
+/// A random radix in 2..=`hi` (some sweeps cap at 4 to bound LUT sizes).
+pub fn random_radix_upto(rng: &mut Rng, hi: u8) -> Radix {
+    assert!((2..=9).contains(&hi));
+    Radix(2 + rng.digit(hi - 1))
+}
+
+/// A random digit in `0..n`, replaced by [`DONT_CARE`] with probability
+/// `dont_care_p`.
+pub fn random_digit(rng: &mut Rng, n: u8, dont_care_p: f64) -> u8 {
+    if rng.chance(dont_care_p) {
+        DONT_CARE
+    } else {
+        rng.digit(n)
+    }
+}
+
+/// `rows` random `p`-digit words at `radix`.
+pub fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
+    (0..rows)
+        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
+        .collect()
+}
+
+/// Row counts biased onto 64-row plane-word boundaries (1, 63–66,
+/// 127–130) with a uniform tail up to 300 — the straddle cases where
+/// bit-sliced masking bugs live.
+pub fn boundary_rows(rng: &mut Rng) -> usize {
+    match rng.index(4) {
+        0 => 1 + rng.index(62),
+        1 => 63 + rng.index(4),
+        2 => 127 + rng.index(4),
+        _ => 1 + rng.index(300),
+    }
+}
+
+/// A `rows × cols` digit buffer at `radix` with the given don't-care
+/// density.
+pub fn random_data(
+    rng: &mut Rng,
+    rows: usize,
+    cols: usize,
+    radix: Radix,
+    dont_care_p: f64,
+) -> Vec<u8> {
+    (0..rows * cols).map(|_| random_digit(rng, radix.n(), dont_care_p)).collect()
+}
+
+/// The differential-test harness: the same digit buffer loaded into both
+/// storage backends, returned `(scalar, bit_sliced)`.
+pub fn storage_pair(radix: Radix, rows: usize, cols: usize, data: &[u8]) -> (CamStorage, CamStorage) {
+    (
+        CamStorage::from_data(StorageKind::Scalar, radix, rows, cols, data),
+        CamStorage::from_data(StorageKind::BitSliced, radix, rows, cols, data),
+    )
+}
+
+/// A ternary blocked Add [`JobSignature`] with the given digit width —
+/// distinct widths give distinct signatures (and thus distinct home
+/// shards), which is all the coordinator tests need.
+pub fn sig_with_digits(digits: usize) -> JobSignature {
+    JobSignature {
+        op: OpKind::Add,
+        radix: Radix::TERNARY,
+        blocked: true,
+        digits,
+        fold_rounds: 0,
+    }
+}

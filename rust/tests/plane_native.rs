@@ -6,6 +6,9 @@
 //! against the faithful pass-by-pass `apply_lut` execution, and against
 //! the row-at-a-time reference implementation it replaced.
 
+mod common;
+
+use common::{boundary_rows as random_rows, random_radix, KINDS};
 use mvap::ap::{Ap, ExecMode, KernelCache, LutKernel};
 use mvap::cam::{CamStorage, StorageKind};
 use mvap::diagram::StateDiagram;
@@ -15,11 +18,9 @@ use mvap::mvl::{Radix, DONT_CARE};
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
 
-const KINDS: [StorageKind; 2] = [StorageKind::Scalar, StorageKind::BitSliced];
-
 /// Random (LUT, mode) from the function zoo at a random radix 2–5.
 fn random_program(rng: &mut Rng) -> (Lut, ExecMode, usize, Radix) {
-    let radix = Radix(2 + rng.digit(4));
+    let radix = random_radix(rng);
     let tables = [full_add(radix), full_sub(radix), mac_digit(radix)];
     let table = tables[rng.index(3)].clone();
     let arity = table.arity();
@@ -32,15 +33,6 @@ fn random_program(rng: &mut Rng) -> (Lut, ExecMode, usize, Radix) {
     (lut, mode, arity, radix)
 }
 
-/// Row counts biased onto 64-row word boundaries.
-fn random_rows(rng: &mut Rng) -> usize {
-    match rng.index(4) {
-        0 => 1 + rng.index(62),
-        1 => 63 + rng.index(4),
-        2 => 127 + rng.index(4),
-        _ => 1 + rng.index(300),
-    }
-}
 
 /// The fast path (cached kernel) equals the faithful path — contents AND
 /// statistics — on both backends, and the two backends agree with each

@@ -22,9 +22,9 @@ use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
 use std::sync::Arc;
 
-fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
-    (0..rows).map(|_| Word::from_digits(rng.number(p, radix.n()), radix)).collect()
-}
+mod common;
+
+use common::random_words;
 
 fn random_rows(rng: &mut Rng) -> usize {
     // include 64-row plane-word boundaries and odd straddles

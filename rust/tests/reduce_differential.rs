@@ -20,16 +20,9 @@ use mvap::mvl::{Radix, Word};
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
 
-fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
-    (0..rows)
-        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
-        .collect()
-}
+mod common;
 
-/// Row counts biased toward 64-row word boundaries.
-fn boundary_rows(rng: &mut Rng) -> usize {
-    [1, 2, 63, 64, 65, 127, 128, 129, 1 + rng.index(300)][rng.index(9)]
-}
+use common::{boundary_rows, random_words};
 
 /// Random strictly-increasing segment bounds over `rows` rows; cuts are
 /// uniform, so they routinely land mid-word.

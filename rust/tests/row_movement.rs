@@ -1,0 +1,209 @@
+//! Property tests for the row-movement primitives (`copy_rows` /
+//! `fill_rows`) that the in-engine tree reduction and the program
+//! compiler's segment compaction lean on. The bit-sliced backend moves
+//! whole 64-row plane words with shifts, so the risky edges are exactly
+//! the word-shift ones: zero-length ranges, full-word-aligned offsets vs
+//! mid-word offsets, ranges straddling word boundaries, and overlapping
+//! same-column copies (memmove semantics).
+//!
+//! Every case is checked three ways: scalar backend ≡ bit-sliced backend
+//! ≡ a naive snapshot reference (copying from a pre-copy snapshot is
+//! memmove semantics by construction).
+//!
+//! Replay a failing case with `MVAP_PROP_SEED=0x… cargo test -q --test
+//! row_movement` (the seed is printed in the failure message).
+
+use mvap::mvl::{Radix, DONT_CARE};
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+
+mod common;
+
+use common::{random_data, random_radix, storage_pair};
+
+/// Naive reference: copy through a full snapshot of the digit grid.
+fn reference_copy(
+    digits: &mut Vec<u8>,
+    cols: usize,
+    src_col: usize,
+    src_row: usize,
+    dst_col: usize,
+    dst_row: usize,
+    count: usize,
+) {
+    let snapshot = digits.clone();
+    for i in 0..count {
+        digits[(dst_row + i) * cols + dst_col] = snapshot[(src_row + i) * cols + src_col];
+    }
+}
+
+/// Offsets that exercise word-aligned, mid-word, and boundary-straddling
+/// shifts in a 3-word (192-row) column.
+const EDGES: [usize; 8] = [0, 1, 31, 63, 64, 65, 127, 128];
+
+/// Exhaustive word-shift edges: every (src_row, dst_row, count) over the
+/// edge offsets, including zero-length and overlapping same-column
+/// ranges in both directions, on both backends.
+#[test]
+fn copy_rows_word_shift_edges() {
+    let rows = 192;
+    let mut rng = Rng::new(0x10f5);
+    for radix in [Radix::BINARY, Radix::TERNARY, Radix(5)] {
+        let data = random_data(&mut rng, rows, 2, radix, 0.15);
+        for &src_row in &EDGES {
+            for &dst_row in &EDGES {
+                for count in [0, 1, 63, 64, 65, rows - 128] {
+                    if src_row + count > rows || dst_row + count > rows {
+                        continue;
+                    }
+                    for (src_col, dst_col) in [(0, 1), (0, 0)] {
+                        let (mut scalar, mut sliced) = storage_pair(radix, rows, 2, &data);
+                        let mut expect = data.clone();
+                        reference_copy(
+                            &mut expect, 2, src_col, src_row, dst_col, dst_row, count,
+                        );
+                        scalar.copy_rows(src_col, src_row, dst_col, dst_row, count);
+                        sliced.copy_rows(src_col, src_row, dst_col, dst_row, count);
+                        let ctx = format!(
+                            "radix {} copy c{src_col}r{src_row} -> c{dst_col}r{dst_row} ×{count}",
+                            radix.n()
+                        );
+                        assert_eq!(scalar.to_digits(), expect, "scalar vs reference: {ctx}");
+                        assert_eq!(sliced.to_digits(), expect, "bit-sliced vs reference: {ctx}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Randomized copies over random shapes: the three-way agreement holds
+/// for arbitrary (not just edge-aligned) offsets, with don't-care rows
+/// travelling along (the present plane moves with the digit planes).
+#[test]
+fn copy_rows_scalar_matches_bitsliced_randomized() {
+    forall(Config::cases(120), |rng| {
+        let radix = random_radix(rng);
+        let rows = 1 + rng.index(300);
+        let cols = 1 + rng.index(3);
+        let data = random_data(rng, rows, cols, radix, 0.2);
+        let (mut scalar, mut sliced) = storage_pair(radix, rows, cols, &data);
+        let src_col = rng.index(cols);
+        let dst_col = rng.index(cols);
+        let count = rng.index(rows + 1);
+        let src_row = rng.index(rows - count + 1);
+        let dst_row = rng.index(rows - count + 1);
+        let mut expect = data.clone();
+        reference_copy(&mut expect, cols, src_col, src_row, dst_col, dst_row, count);
+        scalar.copy_rows(src_col, src_row, dst_col, dst_row, count);
+        sliced.copy_rows(src_col, src_row, dst_col, dst_row, count);
+        assert_eq!(scalar.to_digits(), expect, "scalar vs reference");
+        assert_eq!(sliced.to_digits(), expect, "bit-sliced vs reference");
+    });
+}
+
+/// A copy fully onto itself (same column, same offset) is the identity,
+/// whatever the count — the bit-sliced fast path must not clobber.
+#[test]
+fn copy_rows_self_copy_is_identity() {
+    forall(Config::cases(40), |rng| {
+        let radix = random_radix(rng);
+        let rows = 1 + rng.index(200);
+        let data = random_data(rng, rows, 1, radix, 0.2);
+        let (mut scalar, mut sliced) = storage_pair(radix, rows, 1, &data);
+        let count = rng.index(rows + 1);
+        let row = rng.index(rows - count + 1);
+        scalar.copy_rows(0, row, 0, row, count);
+        sliced.copy_rows(0, row, 0, row, count);
+        assert_eq!(scalar.to_digits(), data, "scalar self-copy must be a no-op");
+        assert_eq!(sliced.to_digits(), data, "bit-sliced self-copy must be a no-op");
+    });
+}
+
+/// `fill_rows` on both backends against the obvious reference, over the
+/// word-shift edges and random ranges, including zero-length fills and
+/// don't-care fills (which clear the present plane).
+#[test]
+fn fill_rows_matches_reference() {
+    let rows = 192;
+    let mut rng = Rng::new(0xf111);
+    for radix in [Radix::BINARY, Radix::TERNARY, Radix(5)] {
+        let data = random_data(&mut rng, rows, 2, radix, 0.15);
+        for &start in &EDGES {
+            for count in [0, 1, 63, 64, 65, rows - 128] {
+                if start + count > rows {
+                    continue;
+                }
+                for digit in [0, radix.n() - 1, DONT_CARE] {
+                    let (mut scalar, mut sliced) = storage_pair(radix, rows, 2, &data);
+                    let mut expect = data.clone();
+                    for r in start..start + count {
+                        expect[r * 2 + 1] = digit;
+                    }
+                    scalar.fill_rows(1, start, count, digit);
+                    sliced.fill_rows(1, start, count, digit);
+                    let ctx = format!("radix {} fill r{start} ×{count} = {digit}", radix.n());
+                    assert_eq!(scalar.to_digits(), expect, "scalar: {ctx}");
+                    assert_eq!(sliced.to_digits(), expect, "bit-sliced: {ctx}");
+                }
+            }
+        }
+    }
+    forall(Config::cases(60), |rng| {
+        let radix = random_radix(rng);
+        let rows = 1 + rng.index(300);
+        let data = random_data(rng, rows, 1, radix, 0.2);
+        let (mut scalar, mut sliced) = storage_pair(radix, rows, 1, &data);
+        let count = rng.index(rows + 1);
+        let start = rng.index(rows - count + 1);
+        let digit = if rng.chance(0.2) { DONT_CARE } else { rng.digit(radix.n()) };
+        let mut expect = data.clone();
+        for e in expect.iter_mut().skip(start).take(count) {
+            *e = digit;
+        }
+        scalar.fill_rows(0, start, count, digit);
+        sliced.fill_rows(0, start, count, digit);
+        assert_eq!(scalar.to_digits(), expect, "scalar");
+        assert_eq!(sliced.to_digits(), expect, "bit-sliced");
+    });
+}
+
+/// Copies round-trip through both storages identically even when the
+/// destination column then participates in a compare — the moved
+/// don't-care rows must match any key on both backends.
+#[test]
+fn moved_dont_cares_still_match_everything() {
+    forall(Config::cases(30), |rng| {
+        let radix = random_radix(rng);
+        let rows = 1 + rng.index(150);
+        let data = random_data(rng, rows, 2, radix, 0.5);
+        let (mut scalar, mut sliced) = storage_pair(radix, rows, 2, &data);
+        let count = rng.index(rows + 1);
+        let src_row = rng.index(rows - count + 1);
+        let dst_row = rng.index(rows - count + 1);
+        for s in [&mut scalar, &mut sliced] {
+            s.copy_rows(0, src_row, 1, dst_row, count);
+        }
+        let key = rng.digit(radix.n());
+        let a = scalar.compare(&[1], &[key]);
+        let b = sliced.compare(&[1], &[key]);
+        assert_eq!(a.tags, b.tags, "compare tags diverged after copy");
+        assert_eq!(a.mismatch_hist, b.mismatch_hist);
+    });
+}
+
+/// CamStorage constructors used by `storage_pair` agree from the start —
+/// a guard for the helper itself on degenerate shapes.
+#[test]
+fn storage_pair_agrees_on_degenerate_shapes() {
+    for (rows, cols) in [(1, 1), (64, 1), (65, 2), (128, 3)] {
+        let mut rng = Rng::new((rows * 31 + cols) as u64);
+        let radix = Radix::TERNARY;
+        let data = random_data(&mut rng, rows, cols, radix, 0.3);
+        let (scalar, sliced) = storage_pair(radix, rows, cols, &data);
+        assert_eq!(scalar.to_digits(), data);
+        assert_eq!(sliced.to_digits(), data);
+        assert_eq!(scalar.rows(), rows);
+        assert_eq!(sliced.rows(), rows);
+    }
+}

@@ -1,0 +1,307 @@
+//! Exhaustive model checking of the sharded coordinator (the PR-6
+//! tentpole): every interleaving of bounded scenarios — producers
+//! submitting jobs/programs, workers popping, batch deadlines expiring,
+//! idle shards stealing, shutdown draining — is explored breadth-first
+//! through [`mvap::modelcheck`], with the no-loss / no-duplication /
+//! stats-conservation invariants checked in every reachable state and
+//! eventual-flush liveness checked over the whole graph.
+//!
+//! The machine under test ([`ShardSystemMachine`]) drives the *same*
+//! [`mvap::coordinator::ShardCore::on_event`] transition the threaded
+//! `ShardedService` worker interprets, so these proofs are about the
+//! production decision logic, not a parallel model (the threaded side is
+//! exercised under real contention in `shard_stress.rs`).
+//!
+//! The expected state/transition/depth figures are pinned against an
+//! independent Python port (`python/modelcheck_port.py`) that explored
+//! the same scenarios under **every possible** signature→shard routing;
+//! the ranges below are the exact min/max over that sweep, so a Rust
+//! count outside them means the two implementations diverged.
+//!
+//! Fault-injection wrappers then verify the checker *catches* seeded
+//! bugs — duplicated submissions, lost submissions, a shutdown that
+//! never closes — each with a shortest (depth-minimal) counterexample
+//! trace.
+
+use mvap::coordinator::shard_machine::{ShardScenario, SysAction, SysState};
+use mvap::coordinator::ShardSystemMachine;
+use mvap::modelcheck::{explore, CheckFailure, ExploreConfig, Machine, Report, Violation};
+use std::ops::RangeInclusive;
+
+/// The bounded scenarios CI proves exhaustively, with the exact
+/// state-count ranges from the all-routings Python sweep.
+struct Bounded {
+    label: &'static str,
+    scenario: ShardScenario,
+    states: RangeInclusive<usize>,
+    transitions: RangeInclusive<usize>,
+    depth: RangeInclusive<usize>,
+}
+
+fn bounded_scenarios() -> Vec<Bounded> {
+    vec![
+        Bounded {
+            label: "2 shards, depth 2, batch 2, steal, 2 producers, 3 jobs (2 sigs) + 1 program",
+            scenario: ShardScenario::mixed(2, 2, 2, true, 2, 3, 1, 2),
+            states: 508..=605,
+            transitions: 1540..=1822,
+            depth: 11..=11,
+        },
+        Bounded {
+            label: "3 shards, depth 2, batch 2, steal, 2 producers, 3 jobs (3 sigs) + 2 programs",
+            scenario: ShardScenario::mixed(3, 2, 2, true, 2, 3, 2, 3),
+            states: 4226..=5858,
+            transitions: 17624..=24525,
+            depth: 14..=14,
+        },
+        Bounded {
+            label: "2 shards, depth 3, batch 3, no steal, 1 producer, 4 jobs (2 sigs) + 1 program",
+            scenario: ShardScenario::mixed(2, 3, 3, false, 1, 4, 1, 2),
+            states: 66..=274,
+            transitions: 124..=765,
+            depth: 13..=16,
+        },
+        Bounded {
+            label: "2 shards, depth 2, batch 2, steal, 2 producers, 4 jobs (2 sigs) + 2 programs",
+            scenario: ShardScenario::mixed(2, 2, 2, true, 2, 4, 2, 2),
+            states: 2752..=2971,
+            transitions: 8961..=9788,
+            depth: 15..=15,
+        },
+    ]
+}
+
+/// Exhaustive exploration of every bounded scenario: all invariants hold
+/// in every reachable state, the goal (everything flushed, workers
+/// exited) is the unique terminal state, liveness holds, and the counts
+/// land inside the Python-pinned ranges.
+#[test]
+fn bounded_scenarios_explore_clean() {
+    for b in bounded_scenarios() {
+        let m = ShardSystemMachine::new(b.scenario);
+        let report: Report<ShardSystemMachine> = match explore(&m, &ExploreConfig::default()) {
+            Ok(r) => r,
+            Err(f) => panic!("{}: {}", b.label, f.render(&m)),
+        };
+        println!("{}: {}", b.label, report.summary());
+        assert!(
+            b.states.contains(&report.states),
+            "{}: {} states outside pinned range {:?}",
+            b.label,
+            report.states,
+            b.states
+        );
+        assert!(
+            b.transitions.contains(&report.transitions),
+            "{}: {} transitions outside pinned range {:?}",
+            b.label,
+            report.transitions,
+            b.transitions
+        );
+        assert!(
+            b.depth.contains(&report.depth),
+            "{}: depth {} outside pinned range {:?}",
+            b.label,
+            report.depth,
+            b.depth
+        );
+        assert_eq!(report.goals, 1, "{}: exactly one all-flushed goal state", b.label);
+        assert_eq!(report.terminal, 1, "{}: the goal is the only terminal state", b.label);
+    }
+}
+
+/// The tiny DOT scenario renders an inspectable state diagram of the
+/// shard machine (this is the graph embedded in docs/ARCHITECTURE.md).
+#[test]
+fn dot_export_renders_the_shard_machine() {
+    let m = ShardSystemMachine::new(ShardScenario::mixed(2, 2, 2, true, 1, 1, 1, 1));
+    let cfg = ExploreConfig { record_graph: true, ..ExploreConfig::default() };
+    let report = explore(&m, &cfg).expect("tiny scenario is clean");
+    assert!((40..=42).contains(&report.states), "states={}", report.states);
+    assert_eq!(report.depth, 7);
+    let dot = report.dot(&m).expect("graph recorded");
+    assert!(dot.starts_with("digraph explored {"));
+    for i in 0..report.states {
+        assert!(dot.contains(&format!("\"s{i}\"")), "node s{i} missing");
+    }
+    assert!(dot.contains("doublecircle"), "goal state must be styled");
+    assert!(dot.contains("label=\"submit p0\""), "edges carry action labels");
+    assert!(dot.contains("label=\"drain s"), "shutdown edges present");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: the checker must CATCH seeded coordinator bugs, with
+// minimal traces. Each wrapper delegates to the real machine and breaks
+// exactly one thing.
+// ---------------------------------------------------------------------------
+
+fn faultable() -> ShardSystemMachine {
+    ShardSystemMachine::new(ShardScenario::mixed(2, 2, 2, true, 2, 3, 1, 2))
+}
+
+/// Finds item 0 in some queue of `st` (None if absent).
+fn locate(st: &SysState, id: u8) -> Option<(usize, usize)> {
+    st.queues
+        .iter()
+        .enumerate()
+        .find_map(|(q, items)| items.iter().position(|&x| x == id).map(|i| (q, i)))
+}
+
+/// A submit path that enqueues the first submission twice (a retry bug).
+struct DuplicatedSubmit(ShardSystemMachine);
+
+impl Machine for DuplicatedSubmit {
+    type State = SysState;
+    type Action = SysAction;
+
+    fn initial(&self) -> SysState {
+        self.0.initial()
+    }
+
+    fn actions(&self, st: &SysState, out: &mut Vec<SysAction>) {
+        self.0.actions(st, out);
+    }
+
+    fn transition(&self, st: &SysState, a: &SysAction) -> Result<SysState, Violation> {
+        let mut next = self.0.transition(st, a)?;
+        if matches!(a, SysAction::Submit { producer: 0 }) && st.produced[0] == 0 {
+            let (q, _) = locate(&next, 0).expect("first submission is queued");
+            next.queues[q].push(0); // the bug: enqueued twice
+        }
+        Ok(next)
+    }
+
+    fn invariant(&self, st: &SysState) -> Result<(), Violation> {
+        self.0.invariant(st)
+    }
+
+    fn is_goal(&self, st: &SysState) -> bool {
+        self.0.is_goal(st)
+    }
+}
+
+#[test]
+fn checker_catches_duplicated_submission() {
+    let m = DuplicatedSubmit(faultable());
+    let failure = *explore(&m, &ExploreConfig::default()).expect_err("must be caught");
+    match failure {
+        CheckFailure::Invariant { violation, trace } => {
+            assert!(
+                violation.message().contains("no-duplication"),
+                "got: {violation}"
+            );
+            // minimal trace: the very first tampered submission
+            assert_eq!(trace.len(), 1, "counterexample must be depth-minimal");
+            let rendered = trace.render(&m);
+            assert!(rendered.contains("submit p0"), "rendered: {rendered}");
+        }
+        other => panic!("expected invariant violation, got {}", other.headline()),
+    }
+}
+
+/// A submit path that loses the first submission (enqueue dropped).
+struct LostSubmit(ShardSystemMachine);
+
+impl Machine for LostSubmit {
+    type State = SysState;
+    type Action = SysAction;
+
+    fn initial(&self) -> SysState {
+        self.0.initial()
+    }
+
+    fn actions(&self, st: &SysState, out: &mut Vec<SysAction>) {
+        self.0.actions(st, out);
+    }
+
+    fn transition(&self, st: &SysState, a: &SysAction) -> Result<SysState, Violation> {
+        let mut next = self.0.transition(st, a)?;
+        if matches!(a, SysAction::Submit { producer: 0 }) && st.produced[0] == 0 {
+            let (q, i) = locate(&next, 0).expect("first submission is queued");
+            next.queues[q].remove(i); // the bug: item dropped on the floor
+        }
+        Ok(next)
+    }
+
+    fn invariant(&self, st: &SysState) -> Result<(), Violation> {
+        self.0.invariant(st)
+    }
+
+    fn is_goal(&self, st: &SysState) -> bool {
+        self.0.is_goal(st)
+    }
+}
+
+#[test]
+fn checker_catches_lost_submission() {
+    let m = LostSubmit(faultable());
+    let failure = *explore(&m, &ExploreConfig::default()).expect_err("must be caught");
+    match failure {
+        CheckFailure::Invariant { violation, trace } => {
+            assert!(violation.message().contains("no-loss"), "got: {violation}");
+            assert_eq!(trace.len(), 1, "counterexample must be depth-minimal");
+        }
+        other => panic!("expected invariant violation, got {}", other.headline()),
+    }
+}
+
+/// A shutdown path that never closes the queues (Close action missing).
+struct NeverCloses(ShardSystemMachine);
+
+impl Machine for NeverCloses {
+    type State = SysState;
+    type Action = SysAction;
+
+    fn initial(&self) -> SysState {
+        self.0.initial()
+    }
+
+    fn actions(&self, st: &SysState, out: &mut Vec<SysAction>) {
+        self.0.actions(st, out);
+        out.retain(|a| !matches!(a, SysAction::Close));
+    }
+
+    fn transition(&self, st: &SysState, a: &SysAction) -> Result<SysState, Violation> {
+        self.0.transition(st, a)
+    }
+
+    fn invariant(&self, st: &SysState) -> Result<(), Violation> {
+        self.0.invariant(st)
+    }
+
+    fn is_goal(&self, st: &SysState) -> bool {
+        self.0.is_goal(st)
+    }
+}
+
+/// With the deadlock check on, the missing Close surfaces as a terminal
+/// non-goal state (everything executed, nobody can exit).
+#[test]
+fn checker_catches_missing_close_as_deadlock() {
+    let m = NeverCloses(faultable());
+    let failure = *explore(&m, &ExploreConfig::default()).expect_err("must be caught");
+    match failure {
+        CheckFailure::Deadlock { trace } => {
+            assert!(!trace.is_empty());
+            assert!(!trace.last().closed, "the stuck state never closed");
+        }
+        other => panic!("expected deadlock, got {}", other.headline()),
+    }
+}
+
+/// With the deadlock check off, the same bug is a liveness violation:
+/// no reachable state can reach the all-flushed goal.
+#[test]
+fn checker_catches_missing_close_as_liveness_violation() {
+    let m = NeverCloses(faultable());
+    let cfg = ExploreConfig { check_deadlock: false, ..ExploreConfig::default() };
+    let failure = *explore(&m, &cfg).expect_err("must be caught");
+    match failure {
+        CheckFailure::Liveness { trace } => {
+            // the goal is unreachable from everywhere, so the minimal
+            // counterexample is the initial state itself
+            assert!(trace.is_empty(), "minimal liveness witness is the initial state");
+        }
+        other => panic!("expected liveness violation, got {}", other.headline()),
+    }
+}

@@ -1,11 +1,12 @@
 //! Deterministic state-machine property test of the shard batching
 //! policy ([`mvap::coordinator::BatchPolicy`]) — the flush/steal/shutdown
 //! decision core extracted from the shard worker loop so its policy logic
-//! is checkable single-threaded, in the spirit of polestar-style model
-//! checking: a random event sequence (job arrivals across signatures,
-//! clock advances, timeout ticks, close) drives both the policy and an
-//! independent reference model on a **synthetic clock**; after every
-//! event the two must agree, and the global invariants must hold:
+//! is checkable single-threaded: a random event sequence (job arrivals
+//! across signatures, clock advances, timeout ticks, close) drives both
+//! the policy and an independent reference model on a **synthetic
+//! logical clock** (the policy's `Nanos` timeline — no `Instant`s);
+//! after every event the two must agree, and the global invariants must
+//! hold:
 //!
 //! * every admitted job is flushed exactly once, in admission order;
 //! * every flushed batch is signature-coherent;
@@ -15,33 +16,29 @@
 //! * stealing is permitted exactly while nothing is pending;
 //! * close flushes the remainder.
 //!
-//! No Condvars, threads, or real time involved — failures replay exactly
-//! via the printed seed (`MVAP_PROP_SEED`).
+//! This random sweep complements the *exhaustive* bounded-interleaving
+//! check in `rust/tests/shard_modelcheck.rs`: the sweep covers wide
+//! numeric ranges (row counts, thresholds, clock skews), the checker
+//! covers every scheduling order of small scenarios. Failures replay
+//! exactly via the printed seed (`MVAP_PROP_SEED`).
 
-use mvap::coordinator::{BatchPolicy, JobSignature, OpKind, ShardConfig};
-use mvap::mvl::Radix;
+mod common;
+
+use common::sig_with_digits as sig;
+use mvap::coordinator::shard_machine::duration_nanos;
+use mvap::coordinator::{BatchPolicy, JobSignature, ShardConfig};
 use mvap::util::prop::{forall, Config};
-use std::time::{Duration, Instant};
-
-fn sig(digits: usize) -> JobSignature {
-    JobSignature {
-        op: OpKind::Add,
-        radix: Radix::TERNARY,
-        blocked: true,
-        digits,
-        fold_rounds: 0,
-    }
-}
+use std::time::Duration;
 
 /// Reference model: the batching rules, restated independently.
 struct Model {
     max_jobs: usize,
     max_rows: usize,
-    flush_after: Duration,
+    flush_after: u64,
     /// (job id, rows) of the pending batch, admission order.
     pending: Vec<(u64, usize)>,
     pending_sig: Option<JobSignature>,
-    deadline: Option<Instant>,
+    deadline: Option<u64>,
     /// Flushed batches, each a list of job ids.
     flushed: Vec<Vec<u64>>,
 }
@@ -66,27 +63,26 @@ fn batch_policy_matches_reference_model() {
             flush_after: Duration::from_millis(1 + rng.index(20) as u64),
             ..ShardConfig::default()
         };
+        let flush_after = duration_nanos(cfg.flush_after);
         let mut policy = BatchPolicy::new(&cfg);
         let mut model = Model {
             max_jobs: cfg.max_batch_jobs,
             max_rows: cfg.max_batch_rows,
-            flush_after: cfg.flush_after,
+            flush_after,
             pending: Vec::new(),
             pending_sig: None,
             deadline: None,
             flushed: Vec::new(),
         };
-        // synthetic clock: a fixed origin advanced by random steps
-        let origin = Instant::now();
-        let mut clock = Duration::ZERO;
+        // synthetic logical clock, advanced by random steps
+        let mut now: u64 = 0;
         let mut next_id = 0u64;
         let mut policy_flushes = 0usize;
 
         let steps = 1 + rng.index(60);
         for _ in 0..steps {
             // advance the clock by 0..3·flush_after
-            clock += cfg.flush_after.mul_f64(3.0 * rng.f64());
-            let now = origin + clock;
+            now += (flush_after as f64 * 3.0 * rng.f64()) as u64;
             match rng.index(4) {
                 // --- a job arrives -----------------------------------
                 0 | 1 => {
@@ -150,7 +146,7 @@ fn batch_policy_matches_reference_model() {
                     let idle = Duration::from_millis(500);
                     let want = match model.deadline {
                         Some(d) if !model.pending.is_empty() => {
-                            d.saturating_duration_since(now)
+                            Duration::from_nanos(d.saturating_sub(now))
                         }
                         _ => idle,
                     };
@@ -189,23 +185,45 @@ fn batch_policy_matches_reference_model() {
     });
 }
 
-/// The policy's deadline is sticky: it is set by the batch's *first* job
-/// and later admissions do not extend it (no starvation by a trickle of
-/// arrivals).
+/// `rebase` is sound against the reference model: rebasing the policy
+/// and restarting the model clock at the batch anchor leaves every
+/// observable decision unchanged (the time-shift quotient the model
+/// checker relies on).
 #[test]
-fn deadline_is_anchored_to_the_first_job() {
-    let cfg = ShardConfig {
-        max_batch_jobs: 100,
-        max_batch_rows: 1_000_000,
-        flush_after: Duration::from_millis(10),
-        ..ShardConfig::default()
-    };
-    let mut p = BatchPolicy::new(&cfg);
-    let t0 = Instant::now();
-    assert!(!p.admit(sig(3), 1, t0));
-    for ms in [2u64, 4, 6, 8] {
-        assert!(!p.admit(sig(3), 1, t0 + Duration::from_millis(ms)));
-    }
-    // the sixth trickle arrival lands past the original deadline
-    assert!(p.admit(sig(3), 1, t0 + Duration::from_millis(10)));
+fn rebase_preserves_decisions() {
+    forall(Config::cases(200), |rng| {
+        let cfg = ShardConfig {
+            max_batch_jobs: 2 + rng.index(4),
+            max_batch_rows: 50 + rng.index(200),
+            flush_after: Duration::from_millis(1 + rng.index(10) as u64),
+            ..ShardConfig::default()
+        };
+        let flush_after = duration_nanos(cfg.flush_after);
+        let mut a = BatchPolicy::new(&cfg);
+        let mut b = BatchPolicy::new(&cfg);
+        let s = sig(3);
+        // a starts its batch at a random offset, b at time zero
+        let start = (flush_after as f64 * 2.0 * rng.f64()) as u64;
+        assert_eq!(a.admit(s, 1, start), b.admit(s, 1, 0));
+        a.rebase();
+        assert_eq!(a, b, "rebase quotients out the batch start time");
+        // identical event streams keep the rebased policies equal
+        for _ in 0..5 {
+            let dt = (flush_after as f64 * 1.5 * rng.f64()) as u64;
+            assert_eq!(a.should_flush(dt), b.should_flush(dt));
+            assert_eq!(a.wait(dt, Duration::from_secs(1)), b.wait(dt, Duration::from_secs(1)));
+            let flushes = a.admit(s, 1, dt);
+            assert_eq!(flushes, b.admit(s, 1, dt));
+            assert_eq!(a, b);
+            if flushes {
+                a.flushed();
+                b.flushed();
+            }
+        }
+        // rebasing an empty policy is the identity
+        a.flushed();
+        b.flushed();
+        a.rebase();
+        assert_eq!(a, b);
+    });
 }

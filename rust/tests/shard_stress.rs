@@ -1,0 +1,190 @@
+//! Threaded stress test for the sharded coordinator: N producer threads
+//! hammer one `ShardedService` with a mixed stream of coalescable jobs
+//! and standalone dataflow programs under real contention — tiny queues
+//! for backpressure, microsecond flush deadlines so timeout flushes race
+//! submissions, stealing on and off — then every oracle and the
+//! no-loss / no-duplication / stats-conservation invariants are checked.
+//!
+//! This is the effectful complement of `shard_modelcheck.rs`: the model
+//! checker proves the decision core correct over every interleaving of
+//! bounded scenarios; this test drives the *real* threaded worker (which
+//! interprets that same core) through OS-scheduled interleavings with
+//! real payloads, channels, and engines.
+//!
+//! Replay a failing case with `MVAP_PROP_SEED=0x… cargo test -q --test
+//! shard_stress` (the seed is printed in the failure message).
+
+use mvap::coordinator::{Job, NativeBackend, OpKind, ShardConfig, ShardedService};
+use mvap::mvl::{Radix, Word};
+use mvap::program::{builtin, reference, BoundProgram};
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A wait long enough that only a genuinely lost reply can trip it; a
+/// timeout here means a submission was dropped (no-loss violated).
+const LOST: Duration = Duration::from_secs(30);
+
+fn add_job(id: u64, rng: &mut Rng, rows: usize, p: usize) -> (Job, Vec<(Word, u8)>) {
+    let radix = Radix::TERNARY;
+    let a: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+    let b: Vec<Word> = (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+    let expect = a.iter().zip(&b).map(|(x, y)| x.add_ref(y, 0)).collect();
+    (Job::new(id, OpKind::Add, radix, true, a, b), expect)
+}
+
+/// Mixed producers × random shard configs: every job and program result
+/// matches its oracle (no loss, no corruption), and the aggregate metrics
+/// conserve the workload exactly (no duplication: each submission is
+/// executed exactly once, solo or coalesced, home or stolen).
+#[test]
+fn producers_race_submissions_against_flushes_and_steals() {
+    forall(Config::cases(4), |rng| {
+        let cfg = ShardConfig {
+            shards: 2 + rng.index(3),
+            queue_depth: 2 + rng.index(7),
+            max_batch_jobs: 1 + rng.index(8),
+            max_batch_rows: 64 + rng.index(512),
+            // microsecond-scale deadlines: timeout flushes race the
+            // producers instead of waiting them out
+            flush_after: Duration::from_micros(50 + rng.next_u64() % 450),
+            steal: rng.chance(0.5),
+        };
+        let producers = 2 + rng.index(3);
+        let per_producer = 6 + rng.index(5);
+        let svc = ShardedService::start(cfg, || {
+            Ok(Box::new(NativeBackend::default()) as _)
+        })
+        .unwrap();
+        let plan = Arc::new(builtin::dot(Radix::TERNARY, 4).plan());
+
+        let seeds: Vec<u64> = (0..producers).map(|_| rng.next_u64()).collect();
+        let totals: (u64, u64) = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (p, seed) in seeds.into_iter().enumerate() {
+                let svc = &svc;
+                let plan = Arc::clone(&plan);
+                handles.push(scope.spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    let mut jobs = 0u64;
+                    let mut programs = 0u64;
+                    let mut job_rx = Vec::new();
+                    let mut prog_rx = Vec::new();
+                    for i in 0..per_producer {
+                        let id = (p * 1000 + i) as u64;
+                        if rng.chance(0.3) {
+                            // a standalone dot program (barrier-flushes
+                            // whatever batch its shard is collecting)
+                            let rows = 1 + rng.index(30);
+                            let mk = |rng: &mut Rng| -> Vec<Word> {
+                                (0..rows)
+                                    .map(|_| {
+                                        Word::from_digits(rng.number(4, 3), Radix::TERNARY)
+                                    })
+                                    .collect()
+                            };
+                            let (a, b) = (mk(&mut rng), mk(&mut rng));
+                            let want = reference::evaluate(
+                                plan.program(),
+                                &[("a", a.clone()), ("b", b.clone())],
+                            );
+                            let bound =
+                                BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true)
+                                    .unwrap();
+                            prog_rx.push((svc.submit_program(bound), want));
+                            programs += 1;
+                        } else {
+                            // few distinct digit widths → few signatures →
+                            // cross-producer coalescing on shared shards
+                            let digits = 3 + 2 * rng.index(2);
+                            let rows = 1 + rng.index(60);
+                            let (job, expect) = add_job(id, &mut rng, rows, digits);
+                            job_rx.push((svc.submit(job), id, expect));
+                            jobs += 1;
+                        }
+                    }
+                    for (rx, id, expect) in job_rx {
+                        let res = rx
+                            .recv_timeout(LOST)
+                            .unwrap_or_else(|_| panic!("job {id} reply lost"))
+                            .unwrap();
+                        assert_eq!(res.id, id);
+                        assert_eq!(res.values, expect, "job {id} corrupted");
+                    }
+                    for (i, (rx, want)) in prog_rx.into_iter().enumerate() {
+                        let report = rx
+                            .recv_timeout(LOST)
+                            .unwrap_or_else(|_| panic!("producer {p} program {i} reply lost"))
+                            .unwrap();
+                        assert_eq!(report.outputs, want, "producer {p} program {i} corrupted");
+                    }
+                    (jobs, programs)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("producer panicked")).fold(
+                (0, 0),
+                |(j, pr), (dj, dpr)| (j + dj, pr + dpr),
+            )
+        });
+        let (jobs, programs) = totals;
+        assert_eq!(jobs + programs, (producers * per_producer) as u64);
+
+        // stats conservation across the whole service: each submission
+        // executed exactly once, nothing double-counted, per-shard
+        // metrics partition the totals
+        let (agg, per_shard) = svc.shutdown();
+        assert_eq!(agg.jobs, jobs + programs, "every submission executed exactly once");
+        assert_eq!(agg.programs, programs);
+        assert_eq!(agg.solo_jobs + agg.coalesced_jobs, jobs, "jobs ran solo xor coalesced");
+        assert_eq!(per_shard.len(), cfg.shards);
+        assert_eq!(per_shard.iter().map(|m| m.jobs).sum::<u64>(), agg.jobs);
+        assert_eq!(per_shard.iter().map(|m| m.programs).sum::<u64>(), agg.programs);
+        assert_eq!(per_shard.iter().map(|m| m.rows).sum::<u64>(), agg.rows);
+        assert!(agg.stolen_jobs <= agg.jobs);
+        if !cfg.steal {
+            assert_eq!(agg.stolen_jobs, 0, "stealing disabled");
+        }
+    });
+}
+
+/// Shutdown during a drain race: close the service the moment the last
+/// submission is accepted. The drain-before-Closed queue guarantee means
+/// every reply must still arrive.
+#[test]
+fn shutdown_races_inflight_work_without_loss() {
+    forall(Config::cases(3), |rng| {
+        let cfg = ShardConfig {
+            shards: 2 + rng.index(2),
+            queue_depth: 2,
+            max_batch_jobs: 4,
+            max_batch_rows: 256,
+            // long deadline: pending batches at shutdown only flush
+            // because Closed flushes them, not because time ran out
+            flush_after: Duration::from_millis(200),
+            steal: rng.chance(0.5),
+        };
+        let svc = ShardedService::start(cfg, || {
+            Ok(Box::new(NativeBackend::default()) as _)
+        })
+        .unwrap();
+        let n = 6 + rng.index(8);
+        let mut pending = Vec::new();
+        for id in 0..n as u64 {
+            let rows = 1 + rng.index(20);
+            let (job, expect) = add_job(id, rng, rows, 4);
+            pending.push((svc.submit(job), id, expect));
+        }
+        // immediate shutdown: queued + batched work must drain, not drop
+        let (agg, _) = svc.shutdown();
+        for (rx, id, expect) in pending {
+            let res = rx
+                .recv_timeout(LOST)
+                .unwrap_or_else(|_| panic!("job {id} lost in shutdown drain"))
+                .unwrap();
+            assert_eq!(res.values, expect, "job {id}");
+        }
+        assert_eq!(agg.jobs, n as u64);
+        assert_eq!(agg.solo_jobs + agg.coalesced_jobs, n as u64);
+    });
+}

@@ -8,15 +8,13 @@ use mvap::coordinator::{
     Backend, EngineService, Job, JobSignature, NativeBackend, OpKind, ShardConfig,
     ShardedService, VectorEngine,
 };
-use mvap::mvl::{Radix, Word};
+use mvap::mvl::Radix;
 use mvap::util::prop::{forall, Config};
 use mvap::util::Rng;
 
-fn random_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix) -> Vec<Word> {
-    (0..rows)
-        .map(|_| Word::from_digits(rng.number(p, radix.n()), radix))
-        .collect()
-}
+mod common;
+
+use common::random_words;
 
 /// End-to-end through the threaded service: many concurrent jobs, several
 /// ops and radices, all results exact.
