@@ -20,21 +20,28 @@
 #                                    eventual-flush; FAILS LOUDLY on any
 #                                    violation or zero explored states, and
 #                                    regenerates docs/shard_machine.dot)
-#   5. cargo test --release -q      (the coalescing/bit-sliced fast paths,
+#   5. mvap serve (smoke)           (closed + open loop through the serving
+#                                    front door: bounded admission, latency
+#                                    histograms, zero panics across the
+#                                    shutdown drain; records the latency
+#                                    curves to BENCH_7.json at the repo root
+#                                    and FAILS LOUDLY if it holds zero
+#                                    results)
+#   6. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
-#   6. cargo bench --no-run         (benches must keep compiling)
-#   7. cargo bench -- --quick       (hot-path benches, 3 iterations each,
+#   7. cargo bench --no-run         (benches must keep compiling)
+#   8. cargo bench -- --quick       (hot-path benches, 3 iterations each,
 #                                    recorded to BENCH_3/4/5.json at the
 #                                    repo root — the perf trajectory
 #                                    artifacts, each filtered to its PR's
 #                                    benches of record; FAILS LOUDLY if any
 #                                    BENCH_*.json holds zero results, as
 #                                    happened to BENCH_3.json)
-#   8. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#   9. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
-#   9. cargo doc --no-deps          (warnings as errors; the crate also denies
+#  10. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#  10. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#  11. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -52,6 +59,15 @@ MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test progra
 
 echo "==> mvap modelcheck (exhaustive shard-coordinator verification)"
 cargo run --release --quiet -- modelcheck --dot ../docs/shard_machine.dot
+
+echo "==> mvap serve smoke (closed + open loop, recording BENCH_7.json)"
+cargo run --release --quiet -- serve --clients 8 --rps 2000 --duration 0.5 \
+    --shards 2,4 --flush-us 500,2000 --req-rows 8 --digits 6 \
+    --json ../BENCH_7.json
+if ! grep -q '"name":' ../BENCH_7.json; then
+    echo "ERROR: serve smoke recorded zero latency curves in BENCH_7.json" >&2
+    exit 1
+fi
 
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"

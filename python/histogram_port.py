@@ -1,0 +1,109 @@
+"""Exact Python port of ``rust/src/serving/histogram.rs``.
+
+The Rust crate's streaming latency histogram (``LatencyHistogram``) is an
+HDR-style log-linear histogram: values below ``SUBS`` get exact width-1
+buckets, and every power-of-two era above that is split into ``SUBS``
+equal-width sub-buckets, bounding relative bucket width at 1/SUBS (~3%).
+Quantiles interpolate inside the selected bucket and clamp to the exact
+observed [min, max].
+
+This port mirrors the Rust arithmetic operation-for-operation so the test
+suite can (a) property-check the quantile estimate against a sorted-array
+reference without a Rust toolchain and (b) pin the exact constants asserted
+by the Rust unit tests.
+"""
+
+SUB_BITS = 5
+SUBS = 1 << SUB_BITS  # 32 sub-buckets per power-of-two era
+U64_MAX = (1 << 64) - 1
+
+
+def bucket_of(ns: int) -> int:
+    """Bucket index for a latency of ``ns`` nanoseconds.
+
+    Values 0..SUBS-1 land in exact width-1 buckets; above that, era
+    ``shift`` (values with top bit ``SUB_BITS + shift``) is split into
+    SUBS sub-buckets of width ``2**shift``.
+    """
+    assert 0 <= ns <= U64_MAX
+    if ns < SUBS:
+        return ns
+    top = ns.bit_length() - 1          # 63 - leading_zeros
+    shift = top - SUB_BITS
+    return (shift + 1) * SUBS + ((ns >> shift) - SUBS)
+
+
+def bucket_bounds(i: int):
+    """Half-open value range ``[lo, hi)`` covered by bucket ``i``."""
+    if i < SUBS:
+        return (i, i + 1)
+    era = i // SUBS - 1
+    off = i % SUBS
+    lo = (SUBS + off) << era
+    return (lo, lo + (1 << era))
+
+
+class LatencyHistogram:
+    def __init__(self):
+        self.buckets = []
+        self.count = 0
+        self.total_ns = 0
+        self.min_ns = U64_MAX
+        self.max_ns = 0
+
+    def record(self, ns: int):
+        ns = min(max(ns, 0), U64_MAX)
+        b = bucket_of(ns)
+        if b >= len(self.buckets):
+            self.buckets.extend([0] * (b + 1 - len(self.buckets)))
+        self.buckets[b] += 1
+        self.count += 1
+        self.total_ns += ns
+        self.min_ns = min(self.min_ns, ns)
+        self.max_ns = max(self.max_ns, ns)
+
+    def merge(self, other: "LatencyHistogram"):
+        if other.count == 0:
+            return
+        if len(other.buckets) > len(self.buckets):
+            self.buckets.extend([0] * (len(other.buckets) - len(self.buckets)))
+        for i, c in enumerate(other.buckets):
+            self.buckets[i] += c
+        self.count += other.count
+        self.total_ns += other.total_ns
+        self.min_ns = min(self.min_ns, other.min_ns)
+        self.max_ns = max(self.max_ns, other.max_ns)
+
+    def mean_ns(self):
+        if self.count == 0:
+            return None
+        return self.total_ns / self.count
+
+    def quantile_ns(self, q: float):
+        """Estimated value at quantile ``q`` in [0, 1], or None when empty.
+
+        Rank semantics match ``rank = q * (n - 1)`` over the sorted sample
+        order; the estimate interpolates at the midpoint offset inside the
+        owning bucket and clamps to the exact observed extremes so empty /
+        single-sample / all-equal cases are exact.
+        """
+        if self.count == 0:
+            return None
+        q = min(max(q, 0.0), 1.0)
+        if q == 0.0:
+            return float(self.min_ns)
+        if q == 1.0:
+            return float(self.max_ns)
+        rank = q * (self.count - 1)
+        cum = 0
+        for i, c in enumerate(self.buckets):
+            if c == 0:
+                continue
+            if rank < cum + c:
+                lo, hi = bucket_bounds(i)
+                frac = ((rank - cum) + 0.5) / c
+                est = lo + frac * (hi - lo)
+                return min(max(est, float(self.min_ns)), float(self.max_ns))
+            cum += c
+        # Unreachable when counts are consistent; mirror the Rust fallback.
+        return float(self.max_ns)

@@ -1,0 +1,176 @@
+"""Validation suite for the LatencyHistogram port (histogram_port.py).
+
+Run directly: ``python3 python/tests/test_histogram_port.py``.
+
+Three layers:
+  1. structural properties of the bucket layout (continuity, round-trips,
+     bounded relative width) over exhaustive small values and random u64s;
+  2. quantile accuracy vs a sorted-array reference on random workloads;
+  3. the exact pinned cases asserted by the Rust unit tests in
+     ``rust/src/serving/histogram.rs`` — if these move, the Rust pins
+     must move with them.
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from histogram_port import (  # noqa: E402
+    SUBS,
+    U64_MAX,
+    LatencyHistogram,
+    bucket_bounds,
+    bucket_of,
+)
+
+
+def test_bucket_layout():
+    # Exhaustive continuity for small values: consecutive values map to the
+    # same or the next bucket, and each value lies inside its bucket bounds.
+    prev = None
+    for v in range(0, 1 << 14):
+        b = bucket_of(v)
+        lo, hi = bucket_bounds(b)
+        assert lo <= v < hi, (v, b, lo, hi)
+        if prev is not None:
+            assert b in (prev, prev + 1), (v, prev, b)
+        prev = b
+
+    # Random u64 round-trips, including the extremes.
+    rng = random.Random(0x5EED)
+    samples = [0, 1, SUBS - 1, SUBS, U64_MAX] + [
+        rng.randrange(U64_MAX + 1) for _ in range(20000)
+    ]
+    for v in samples:
+        b = bucket_of(v)
+        lo, hi = bucket_bounds(b)
+        assert lo <= v < hi or (v == U64_MAX and lo <= v), (v, b, lo, hi)
+        # Relative bucket width is bounded by 1/SUBS above the exact range.
+        if v >= SUBS:
+            assert (hi - lo) * SUBS <= lo + (hi - lo), (v, lo, hi)
+
+    # The top bucket index bounds the backing array size.
+    assert bucket_of(U64_MAX) == (58 + 1) * SUBS + 31 == 1919
+    print("bucket layout ok")
+
+
+def reference_quantile(sorted_vals, q):
+    """Nearest-rank-with-interpolation reference (numpy 'linear' method)."""
+    n = len(sorted_vals)
+    rank = q * (n - 1)
+    lo = int(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+def test_quantile_accuracy():
+    rng = random.Random(0xC0DE)
+    for case in range(200):
+        n = rng.randrange(1, 400)
+        dist = rng.choice(["uniform", "lognorm", "spike"])
+        if dist == "uniform":
+            vals = [rng.randrange(1, 10_000_000) for _ in range(n)]
+        elif dist == "lognorm":
+            vals = [int(rng.lognormvariate(10, 2)) + 1 for _ in range(n)]
+        else:
+            base = rng.randrange(1, 1_000_000)
+            vals = [base] * (n - n // 10) + [
+                base * rng.randrange(2, 50) for _ in range(n // 10)
+            ]
+        h = LatencyHistogram()
+        for v in vals:
+            h.record(v)
+        s = sorted(vals)
+        for q in (0.0, 0.5, 0.9, 0.95, 0.99, 1.0):
+            est = h.quantile_ns(q)
+            ref = reference_quantile(s, q)
+            # The estimate must land within one bucket width (1/SUBS
+            # relative) of the true value's neighbourhood.
+            lo_ok = s[0] * (1 - 2 / SUBS) - 1
+            hi_ok = s[-1] * (1 + 2 / SUBS) + 1
+            assert lo_ok <= est <= hi_ok, (case, q, est, s[0], s[-1])
+            tol = max(2.0, ref * (2 / SUBS))
+            # Compare against the reference's bracketing order statistics to
+            # absorb rank-rounding differences.
+            rank = q * (n - 1)
+            lo_stat = s[int(rank)]
+            hi_stat = s[min(int(rank) + 1, n - 1)]
+            lo_bound = lo_stat - max(2.0, lo_stat * (2 / SUBS))
+            hi_bound = hi_stat + max(2.0, hi_stat * (2 / SUBS))
+            assert lo_bound <= est <= hi_bound, (
+                case, dist, q, est, ref, lo_stat, hi_stat,
+            )
+    print("quantile accuracy ok")
+
+
+def test_merge_equals_record_all():
+    rng = random.Random(7)
+    a, b, all_ = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+    for _ in range(500):
+        v = rng.randrange(1, 1_000_000)
+        (a if rng.random() < 0.5 else b).record(v)
+        all_.record(v)
+    a.merge(b)
+    assert a.buckets == all_.buckets[: len(a.buckets)]
+    assert a.count == all_.count and a.total_ns == all_.total_ns
+    assert a.min_ns == all_.min_ns and a.max_ns == all_.max_ns
+    for q in (0.5, 0.95, 0.99):
+        assert a.quantile_ns(q) == all_.quantile_ns(q)
+    print("merge ok")
+
+
+def test_pinned_cases():
+    """The exact constants pinned by the Rust unit tests."""
+    # Empty -> None.
+    assert LatencyHistogram().quantile_ns(0.5) is None
+
+    # Single sample: exact (interpolation clamps to [min, max]).
+    h = LatencyHistogram()
+    h.record(1000)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.quantile_ns(q) == 1000.0, h.quantile_ns(q)
+
+    # All-equal: exact at every quantile.
+    h = LatencyHistogram()
+    for _ in range(100):
+        h.record(7)
+    for q in (0.0, 0.5, 0.95, 1.0):
+        assert h.quantile_ns(q) == 7.0
+
+    # Mid-bucket interpolation: 0..=99 ns. Values 64..99 share width-2
+    # buckets, so p95/p99 interpolate inside a bucket.
+    h = LatencyHistogram()
+    for v in range(100):
+        h.record(v)
+    p50 = h.quantile_ns(0.50)
+    p95 = h.quantile_ns(0.95)
+    p99 = h.quantile_ns(0.99)
+    assert abs(p50 - 50.0) < 1e-9, p50
+    assert abs(p95 - 94.55) < 1e-9, p95
+    assert abs(p99 - 98.51) < 1e-9, p99
+
+    # Two samples in one width-16 bucket ([992, 1008)): midpoint
+    # interpolation, still clamped to the observed extremes.
+    h = LatencyHistogram()
+    h.record(992)
+    h.record(1007)
+    assert bucket_of(992) == bucket_of(1007) == 190
+    assert h.quantile_ns(0.5) == 1000.0
+    assert abs(h.quantile_ns(0.99) - 1003.92) < 1e-9, h.quantile_ns(0.99)
+    assert h.quantile_ns(0.0) == 992.0   # clamped to min
+    assert h.quantile_ns(1.0) == 1007.0  # clamped to max
+
+    # Mean / extremes.
+    assert h.mean_ns() == (992 + 1007) / 2
+    print("pinned cases ok")
+
+
+if __name__ == "__main__":
+    test_bucket_layout()
+    test_quantile_accuracy()
+    test_merge_equals_record_all()
+    test_pinned_cases()
+    print("ALL HISTOGRAM PORT TESTS PASSED")

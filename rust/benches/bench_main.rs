@@ -450,7 +450,10 @@ fn main() {
             "hot/sharded_4x_64jobs_32rows",
             Some((jobs_n * job_rows) as u64),
             || {
-                let rxs: Vec<_> = jobs.iter().map(|j| svc.submit(j.clone())).collect();
+                let rxs: Vec<_> = jobs
+                    .iter()
+                    .map(|j| svc.submit(j.clone()).expect("service closed"))
+                    .collect();
                 for rx in rxs {
                     black_box(rx.recv().unwrap().unwrap());
                 }
@@ -458,6 +461,82 @@ fn main() {
         ));
         let (agg, _) = svc.shutdown();
         println!("    sharded metrics: {}", agg.summary());
+    }
+    if run("hot/serving_frontdoor") {
+        // one closed burst through the serving front door: admission
+        // accounting + completion callbacks + per-class histograms on top
+        // of the sharded dispatch path (the PR-7 tentpole overhead check
+        // against hot/sharded_4x_64jobs_32rows).
+        use mvap::serving::{FrontConfig, FrontDoor};
+        let radix = Radix::TERNARY;
+        let (p, job_rows, jobs_n) = (8usize, 32usize, 64usize);
+        let mut rng = Rng::new(43);
+        let jobs: Vec<Job> = (0..jobs_n as u64)
+            .map(|id| {
+                let a = random_words(&mut rng, job_rows, p, radix);
+                let b = random_words(&mut rng, job_rows, p, radix);
+                Job::new(id, OpKind::Add, radix, true, a, b)
+            })
+            .collect();
+        let front_cfg = FrontConfig {
+            max_in_flight: 256,
+            shard: ShardConfig {
+                shards: 4,
+                queue_depth: 128,
+                flush_after: std::time::Duration::from_micros(500),
+                ..ShardConfig::default()
+            },
+        };
+        let front = FrontDoor::start(front_cfg, || {
+            Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+        })
+        .unwrap();
+        results.push(bench(
+            "hot/serving_frontdoor_4x_64jobs_32rows",
+            Some((jobs_n * job_rows) as u64),
+            || {
+                let rxs: Vec<_> = jobs
+                    .iter()
+                    .map(|j| front.submit(j.clone()).expect("front door closed"))
+                    .collect();
+                for rx in rxs {
+                    black_box(rx.recv().unwrap().unwrap());
+                }
+            },
+        ));
+        let (stats, engine, _) = front.shutdown();
+        println!(
+            "    front door: admitted={} completed={} shed={} | {}",
+            stats.admitted,
+            stats.completed,
+            stats.shed,
+            engine.summary()
+        );
+    }
+    if run("hot/serving_histogram") {
+        // the latency histogram itself: record throughput (the per-request
+        // cost every shard worker pays) and p50/p95/p99 extraction.
+        use mvap::serving::LatencyHistogram;
+        let mut rng = Rng::new(44);
+        let samples: Vec<u64> = (0..65_536).map(|_| 500 + rng.below(5_000_000)).collect();
+        results.push(bench(
+            "hot/serving_histogram_record_65536",
+            Some(samples.len() as u64),
+            || {
+                let mut h = LatencyHistogram::default();
+                for &ns in &samples {
+                    h.record_ns(ns);
+                }
+                black_box(h.count());
+            },
+        ));
+        let mut h = LatencyHistogram::default();
+        for &ns in &samples {
+            h.record_ns(ns);
+        }
+        results.push(bench("hot/serving_histogram_quantiles", None, || {
+            black_box((h.quantile_ns(0.50), h.quantile_ns(0.95), h.quantile_ns(0.99)));
+        }));
     }
     if run("hot/matchline_transient") {
         let sim = MatchlineSim { tech: CellTech::ternary_default(), masked_cells: 3 };

@@ -60,36 +60,43 @@ impl VectorEngine {
         &mut self.metrics
     }
 
-    /// Get or build the LUT for (op, radix, blocked).
-    pub fn lut(&mut self, op: OpKind, radix: Radix, blocked: bool) -> &Lut {
+    /// Get or build the LUT for (op, radix, blocked). A table whose state
+    /// diagram cannot be built surfaces as a job-level `Err` — never a
+    /// panic: under serving load an abort here would take down a whole
+    /// shard worker for one malformed request.
+    pub fn lut(&mut self, op: OpKind, radix: Radix, blocked: bool) -> anyhow::Result<&Lut> {
+        use std::collections::hash_map::Entry;
         // a reduction's fold kernel is the full adder — share its entry
         // so Add and Reduce workloads compile the LUT once
         let op = if op == OpKind::Reduce { OpKind::Add } else { op };
-        self.luts.entry((op, radix.n(), blocked)).or_insert_with(|| {
-            let table = match op {
-                OpKind::Add | OpKind::Reduce => full_add(radix),
-                OpKind::Sub => full_sub(radix),
-                OpKind::Mac => mac_digit(radix),
-            };
-            let d = StateDiagram::build(table).expect("diagram build");
-            if blocked {
-                generate_blocked(&d)
-            } else {
-                generate_non_blocked(&d)
+        match self.luts.entry((op, radix.n(), blocked)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(e) => {
+                let table = match op {
+                    OpKind::Add | OpKind::Reduce => full_add(radix),
+                    OpKind::Sub => full_sub(radix),
+                    OpKind::Mac => mac_digit(radix),
+                };
+                let d = StateDiagram::build(table).map_err(|err| {
+                    anyhow::anyhow!("building {op:?} LUT (radix {}): {err}", radix.n())
+                })?;
+                Ok(e.insert(if blocked { generate_blocked(&d) } else { generate_non_blocked(&d) }))
             }
-        })
+        }
     }
 
     /// Get or build the column-copy LUT (program Copy steps).
-    fn copy_lut(&mut self, radix: Radix, blocked: bool) -> &Lut {
-        self.copy_luts.entry((radix.n(), blocked)).or_insert_with(|| {
-            let d = StateDiagram::build(copy_digit(radix)).expect("copy diagram");
-            if blocked {
-                generate_blocked(&d)
-            } else {
-                generate_non_blocked(&d)
+    fn copy_lut(&mut self, radix: Radix, blocked: bool) -> anyhow::Result<&Lut> {
+        use std::collections::hash_map::Entry;
+        match self.copy_luts.entry((radix.n(), blocked)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(e) => {
+                let d = StateDiagram::build(copy_digit(radix)).map_err(|err| {
+                    anyhow::anyhow!("building copy LUT (radix {}): {err}", radix.n())
+                })?;
+                Ok(e.insert(if blocked { generate_blocked(&d) } else { generate_non_blocked(&d) }))
             }
-        })
+        }
     }
 
     /// Execute a bound dataflow program ([`crate::program`]): one backend
@@ -117,16 +124,16 @@ impl VectorEngine {
         let needs = plan.lut_needs();
         let mut luts = ProgramLuts::default();
         if needs.add {
-            luts.add = Some(self.lut(OpKind::Add, radix, blocked).clone());
+            luts.add = Some(self.lut(OpKind::Add, radix, blocked)?.clone());
         }
         if needs.sub {
-            luts.sub = Some(self.lut(OpKind::Sub, radix, blocked).clone());
+            luts.sub = Some(self.lut(OpKind::Sub, radix, blocked)?.clone());
         }
         if needs.mac {
-            luts.mac = Some(self.lut(OpKind::Mac, radix, blocked).clone());
+            luts.mac = Some(self.lut(OpKind::Mac, radix, blocked)?.clone());
         }
         if needs.copy {
-            luts.copy = Some(self.copy_lut(radix, blocked).clone());
+            luts.copy = Some(self.copy_lut(radix, blocked)?.clone());
         }
         let run = self.backend.run_program(bound, &luts)?;
         let elapsed = started.elapsed();
@@ -212,7 +219,7 @@ impl VectorEngine {
             .backend
             .preferred_rows(job.op, job.radix, job.blocked, digits)
             .unwrap_or(DEFAULT_TILE_ROWS);
-        let lut = self.lut(job.op, job.radix, job.blocked).clone();
+        let lut = self.lut(job.op, job.radix, job.blocked)?.clone();
         let tiles = make_tiles(&job.a, &job.b, tile_rows);
         let pad_cls = pad_classes(&lut);
 
@@ -305,7 +312,7 @@ impl VectorEngine {
             .backend
             .preferred_rows(sig.op, sig.radix, sig.blocked, digits)
             .unwrap_or(DEFAULT_TILE_ROWS);
-        let lut = self.lut(sig.op, sig.radix, sig.blocked).clone();
+        let lut = self.lut(sig.op, sig.radix, sig.blocked)?.clone();
         let mut asm = TileAssembler::new(sig, tile_rows);
         for job in jobs {
             asm.push(job);
@@ -381,7 +388,7 @@ impl VectorEngine {
         let sig = JobSignature::of(&jobs[0]);
         debug_assert!(jobs.iter().all(|j| JobSignature::of(j) == sig));
         let digits = sig.digits;
-        let lut = self.lut(OpKind::Reduce, sig.radix, sig.blocked).clone();
+        let lut = self.lut(OpKind::Reduce, sig.radix, sig.blocked)?.clone();
         // concatenate operands; collect segment bounds (fold granularity)
         // and job bounds (stats attribution)
         let mut values = Vec::with_capacity(jobs.iter().map(|j| j.rows()).sum());
@@ -810,8 +817,8 @@ mod tests {
     #[test]
     fn lut_cache_reuses() {
         let mut eng = engine();
-        let l1 = eng.lut(OpKind::Add, Radix::TERNARY, true) as *const Lut;
-        let l2 = eng.lut(OpKind::Add, Radix::TERNARY, true) as *const Lut;
+        let l1 = eng.lut(OpKind::Add, Radix::TERNARY, true).unwrap() as *const Lut;
+        let l2 = eng.lut(OpKind::Add, Radix::TERNARY, true).unwrap() as *const Lut;
         assert_eq!(l1, l2);
     }
 

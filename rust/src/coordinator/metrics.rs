@@ -51,6 +51,12 @@ pub struct Metrics {
     /// Operand edges served from a CAM-resident intermediate instead of a
     /// host extract/reload round-trip.
     pub resident_reuses: u64,
+    /// Per-request enqueue→completion latency observed by the sharded
+    /// dispatcher ([`super::shard::ShardedService`]): every job and
+    /// program submission records exactly one sample when its reply is
+    /// sent. Streaming p50/p95/p99 via
+    /// [`LatencyHistogram::quantile`](crate::serving::LatencyHistogram::quantile).
+    pub latency: crate::serving::LatencyHistogram,
 }
 
 impl Metrics {
@@ -100,6 +106,7 @@ impl Metrics {
         self.program_steps += other.program_steps;
         self.fused_steps += other.fused_steps;
         self.resident_reuses += other.resident_reuses;
+        self.latency.merge(&other.latency);
     }
 
     /// Row-operations per second of busy time.
@@ -124,7 +131,7 @@ impl Metrics {
 
     /// One-line summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "jobs={} ({} coalesced in {} batches, {} solo, {} stolen) rows={} digit_ops={} \
              energy={:.3e} J busy={:.3}s ({:.0} rows/s) tiles={} fill={:.1}% \
              kernels={}h/{}m reduce={}r/{}mv programs={} ({} steps, {} fused, {} reuses)",
@@ -148,7 +155,11 @@ impl Metrics {
             self.program_steps,
             self.fused_steps,
             self.resident_reuses,
-        )
+        );
+        if let Some(slo) = self.latency.slo() {
+            s.push_str(&format!(" latency[{slo}]"));
+        }
+        s
     }
 }
 
@@ -205,5 +216,18 @@ mod tests {
         assert!(m.summary().contains("kernels=5h/2m"));
         assert!(m.summary().contains("reduce=10r/1023mv"));
         assert!(m.summary().contains("programs=2 (7 steps, 2 fused, 4 reuses)"));
+    }
+
+    #[test]
+    fn latency_merges_and_summarizes() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("latency["), "no latency suffix when empty");
+        m.latency.record(Duration::from_micros(100));
+        let mut n = Metrics::default();
+        n.latency.record(Duration::from_micros(300));
+        m.merge(&n);
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.latency.max(), Some(Duration::from_micros(300)));
+        assert!(m.summary().contains("latency["), "summary: {}", m.summary());
     }
 }

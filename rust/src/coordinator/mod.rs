@@ -29,7 +29,9 @@
 //!   bounded system model the exhaustive checker
 //!   ([`crate::modelcheck`]) explores; the threaded worker interprets
 //!   exactly these transitions.
-//! * [`metrics`] — throughput/latency/energy/occupancy accounting.
+//! * [`metrics`] — throughput/latency/energy/occupancy accounting,
+//!   including the per-request latency histogram
+//!   ([`crate::serving::LatencyHistogram`]) every shard worker feeds.
 //!
 //! Above the single-op job path sits the program compiler
 //! ([`crate::program`]): multi-op DAGs planned onto CAM column fields and
@@ -54,5 +56,5 @@ pub use engine::VectorEngine;
 pub use job::{Job, JobResult, OpKind};
 pub use metrics::Metrics;
 pub use service::EngineService;
-pub use shard::{ShardConfig, ShardedService};
+pub use shard::{OnComplete, ShardConfig, ShardedService, SubmitError};
 pub use shard_machine::{BatchPolicy, ShardCore, ShardScenario, ShardSystemMachine};

@@ -59,6 +59,36 @@ impl Default for ShardConfig {
     }
 }
 
+/// Why a submission was refused. Submission paths never panic: the
+/// serving front door must degrade (shed load, drain, stop) when the
+/// engine is saturated or shutting down, not abort the submitter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The service is shutting down; the request was not accepted.
+    /// Callers should drain any receivers they already hold and stop.
+    Closed,
+    /// A non-blocking submit ([`ShardedService::try_submit_with`]) found
+    /// the home shard's queue full; the caller should shed or retry.
+    Full,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "submit after shutdown: service is closed"),
+            SubmitError::Full => write!(f, "shard queue full: request shed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Completion callback attached to a submission: invoked by the executing
+/// shard right after the reply is sent, with the request's
+/// enqueue→completion latency. The serving front door uses it for
+/// admission accounting and per-class latency histograms.
+pub type OnComplete = Box<dyn FnOnce(Duration) + Send>;
+
 /// A queued unit of work with its reply channel: a coalescable job, or a
 /// bound dataflow program (executed standalone — one engine invocation,
 /// never batched with jobs).
@@ -67,10 +97,14 @@ enum Payload {
     Program(Box<BoundProgram>, SyncSender<anyhow::Result<ProgramReport>>),
 }
 
-/// A queued work item plus its home shard.
+/// A queued work item plus its home shard and request-latency bookkeeping.
 struct Submission {
     payload: Payload,
     home: usize,
+    /// When the submitter handed this to the queue — the start of the
+    /// latency measured into [`Metrics::latency`].
+    enqueued: Instant,
+    on_complete: Option<OnComplete>,
 }
 
 #[derive(Default)]
@@ -97,21 +131,45 @@ impl ShardQueue {
         ShardQueue { state: Mutex::new(QueueState::default()), cv: Condvar::new() }
     }
 
-    /// Blocking bounded push (the submitter's backpressure).
-    fn push(&self, item: Submission, depth: usize) {
+    /// Blocking bounded push (the submitter's backpressure). Returns
+    /// [`SubmitError::Closed`] instead of admitting — or panicking —
+    /// once the queue is shut down, including when the close lands while
+    /// the push is parked waiting for space.
+    fn push(&self, item: Submission, depth: usize) -> Result<(), SubmitError> {
         let mut st = self.state.lock().expect("shard queue poisoned");
         while st.items.len() >= depth && !st.closed {
             st = self.cv.wait(st).expect("shard queue poisoned");
         }
-        assert!(!st.closed, "submit after shutdown");
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
         st.items.push_back(item);
         self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking push: [`SubmitError::Full`] when the queue is at
+    /// depth (open-loop callers shed instead of queueing unboundedly).
+    fn try_push(&self, item: Submission, depth: usize) -> Result<(), SubmitError> {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.items.len() >= depth {
+            return Err(SubmitError::Full);
+        }
+        st.items.push_back(item);
+        self.cv.notify_all();
+        Ok(())
     }
 
     /// Pop one item, waiting up to `timeout`. Items drain before `Closed`
     /// is reported, so shutdown never drops queued work.
     fn pop(&self, timeout: Duration) -> Pop {
-        let deadline = Instant::now() + timeout;
+        // `Instant + Duration` panics on overflow; `Duration::MAX`-ish
+        // timeouts mean "no deadline", so a non-representable deadline
+        // degrades to waiting on close/items alone.
+        let deadline = Instant::now().checked_add(timeout);
         let mut st = self.state.lock().expect("shard queue poisoned");
         loop {
             if let Some(item) = st.items.pop_front() {
@@ -121,15 +179,22 @@ impl ShardQueue {
             if st.closed {
                 return Pop::Closed;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return Pop::TimedOut;
+            match deadline {
+                None => {
+                    st = self.cv.wait(st).expect("shard queue poisoned");
+                }
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Pop::TimedOut;
+                    }
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(st, deadline - now)
+                        .expect("shard queue poisoned");
+                    st = guard;
+                }
             }
-            let (guard, _) = self
-                .cv
-                .wait_timeout(st, deadline - now)
-                .expect("shard queue poisoned");
-            st = guard;
         }
     }
 
@@ -189,6 +254,7 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
     let subs = std::mem::take(pending);
     let mut jobs = Vec::with_capacity(subs.len());
     let mut replies = Vec::with_capacity(subs.len());
+    let mut completions = Vec::with_capacity(subs.len());
     let mut stolen = 0u64;
     for sub in subs {
         if sub.home != me {
@@ -198,12 +264,29 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
             Payload::Job(job, reply) => {
                 jobs.push(job);
                 replies.push(reply);
+                completions.push((sub.enqueued, sub.on_complete));
             }
             Payload::Program(..) => unreachable!("programs never enter the pending batch"),
         }
     }
     engine.metrics_mut().stolen_jobs += stolen;
     super::service::dispatch_batch(engine, &jobs, &replies);
+    complete(engine, completions);
+}
+
+/// After replies are sent: record each request's enqueue→completion
+/// latency into the shard's [`Metrics::latency`] histogram and fire its
+/// completion callback (the serving front door's admission accounting).
+/// Runs on every path — success, engine error, dropped receiver — so
+/// accepted work is always accounted exactly once.
+fn complete(engine: &mut VectorEngine, completions: Vec<(Instant, Option<OnComplete>)>) {
+    for (enqueued, on_complete) in completions {
+        let latency = enqueued.elapsed();
+        engine.metrics_mut().latency.record(latency);
+        if let Some(cb) = on_complete {
+            cb(latency);
+        }
+    }
 }
 
 /// One shard worker: the effectful half of the machine. Every decision —
@@ -248,6 +331,7 @@ impl Worker<'_> {
                                 self.engine.metrics_mut().stolen_jobs += 1;
                             }
                             let _ = reply.send(self.engine.execute_program(&bound));
+                            complete(self.engine, vec![(sub.enqueued, sub.on_complete)]);
                         }
                         Payload::Job(..) => unreachable!("RunProgram for a job submission"),
                     }
@@ -290,7 +374,10 @@ fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine:
     loop {
         // Idle tick: an order of magnitude lazier than the flush deadline
         // (it only gates how often an idle shard scans for steals).
-        let wait = worker.core.wait(worker.clock.now(), cfg.flush_after * 10);
+        // `Duration * 10` panics on overflow, and huge `flush_after`
+        // values ("never auto-flush") are legitimate configs — saturate.
+        let idle_tick = cfg.flush_after.checked_mul(10).unwrap_or(Duration::MAX);
+        let wait = worker.core.wait(worker.clock.now(), idle_tick);
         let (event, item) = match worker.queues[me].pop(wait) {
             Pop::Item(sub) => (WorkerEvent::Item(work_item(&sub)), Some(sub)),
             Pop::TimedOut => (WorkerEvent::TimedOut, None),
@@ -408,13 +495,54 @@ impl ShardedService {
     /// Submit one job; it is routed to its signature's home shard and
     /// coalesced with whatever same-signature jobs are in flight. Blocks
     /// when the home shard's queue is full (backpressure). Returns a
-    /// receiver for the result.
-    pub fn submit(&self, job: Job) -> Receiver<anyhow::Result<JobResult>> {
+    /// receiver for the result, or [`SubmitError::Closed`] after
+    /// shutdown — never panics.
+    pub fn submit(&self, job: Job) -> Result<Receiver<anyhow::Result<JobResult>>, SubmitError> {
+        self.submit_with(job, None)
+    }
+
+    /// [`Self::submit`] with an optional completion callback, invoked by
+    /// the executing shard right after the reply is sent with the
+    /// request's enqueue→completion latency.
+    pub fn submit_with(
+        &self,
+        job: Job,
+        on_complete: Option<OnComplete>,
+    ) -> Result<Receiver<anyhow::Result<JobResult>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let home = JobSignature::of(&job).shard(self.queues.len());
-        self.queues[home]
-            .push(Submission { payload: Payload::Job(job, tx), home }, self.cfg.queue_depth);
-        rx
+        self.queues[home].push(
+            Submission {
+                payload: Payload::Job(job, tx),
+                home,
+                enqueued: Instant::now(),
+                on_complete,
+            },
+            self.cfg.queue_depth,
+        )?;
+        Ok(rx)
+    }
+
+    /// Non-blocking [`Self::submit_with`]: [`SubmitError::Full`] instead
+    /// of blocking when the home shard's queue is at depth. The open-loop
+    /// load path: offered work beyond capacity is shed, not queued.
+    pub fn try_submit_with(
+        &self,
+        job: Job,
+        on_complete: Option<OnComplete>,
+    ) -> Result<Receiver<anyhow::Result<JobResult>>, SubmitError> {
+        let (tx, rx) = sync_channel(1);
+        let home = JobSignature::of(&job).shard(self.queues.len());
+        self.queues[home].try_push(
+            Submission {
+                payload: Payload::Job(job, tx),
+                home,
+                enqueued: Instant::now(),
+                on_complete,
+            },
+            self.cfg.queue_depth,
+        )?;
+        Ok(rx)
     }
 
     /// Submit a bound dataflow program. Programs route round-robin —
@@ -424,44 +552,94 @@ impl ShardedService {
     pub fn submit_program(
         &self,
         bound: BoundProgram,
-    ) -> Receiver<anyhow::Result<ProgramReport>> {
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
+        self.submit_program_with(bound, None)
+    }
+
+    /// [`Self::submit_program`] with an optional completion callback.
+    pub fn submit_program_with(
+        &self,
+        bound: BoundProgram,
+        on_complete: Option<OnComplete>,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
-        let home = self
-            .next_program
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-            % self.queues.len();
+        let home = self.route_program();
         self.queues[home].push(
-            Submission { payload: Payload::Program(Box::new(bound), tx), home },
+            Submission {
+                payload: Payload::Program(Box::new(bound), tx),
+                home,
+                enqueued: Instant::now(),
+                on_complete,
+            },
             self.cfg.queue_depth,
-        );
-        rx
+        )?;
+        Ok(rx)
+    }
+
+    /// Non-blocking [`Self::submit_program_with`].
+    pub fn try_submit_program_with(
+        &self,
+        bound: BoundProgram,
+        on_complete: Option<OnComplete>,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
+        let (tx, rx) = sync_channel(1);
+        let home = self.route_program();
+        self.queues[home].try_push(
+            Submission {
+                payload: Payload::Program(Box::new(bound), tx),
+                home,
+                enqueued: Instant::now(),
+                on_complete,
+            },
+            self.cfg.queue_depth,
+        )?;
+        Ok(rx)
+    }
+
+    fn route_program(&self) -> usize {
+        self.next_program.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.queues.len()
     }
 
     /// Submit a program and wait for its report.
     pub fn run_program(&self, bound: BoundProgram) -> anyhow::Result<ProgramReport> {
-        self.submit_program(bound).recv().expect("shard dropped reply")
+        Ok(self.submit_program(bound)?.recv().expect("shard dropped reply")?)
     }
 
     /// Submit many jobs (the batch front door of the tentpole API).
-    pub fn submit_many(&self, jobs: Vec<Job>) -> Vec<Receiver<anyhow::Result<JobResult>>> {
+    /// All-or-nothing only in the absence of shutdown: an `Err(Closed)`
+    /// mid-way drops the receivers already obtained (their jobs still
+    /// drain inside the service).
+    pub fn submit_many(
+        &self,
+        jobs: Vec<Job>,
+    ) -> Result<Vec<Receiver<anyhow::Result<JobResult>>>, SubmitError> {
         jobs.into_iter().map(|j| self.submit(j)).collect()
     }
 
     /// Submit many jobs and wait for every result (submission order).
     pub fn run_many(&self, jobs: Vec<Job>) -> anyhow::Result<Vec<JobResult>> {
-        self.submit_many(jobs)
+        self.submit_many(jobs)?
             .into_iter()
             .map(|rx| rx.recv().expect("shard dropped reply"))
             .collect()
+    }
+
+    /// Close every shard queue without waiting for the workers: new
+    /// submissions fail with [`SubmitError::Closed`], already-queued work
+    /// still drains. Idempotent; [`Self::shutdown`] joins the workers.
+    /// This is the half of shutdown that can run while other threads
+    /// still hold `&self` (the shutdown-while-submitting race).
+    pub fn close(&self) {
+        for q in &self.queues {
+            q.close();
+        }
     }
 
     /// Stop all shards after draining their queues; returns the aggregate
     /// and per-shard metrics (per-shard occupancy = each shard's `busy` /
     /// `fill_rate`).
     pub fn shutdown(self) -> (Metrics, Vec<Metrics>) {
-        for q in &self.queues {
-            q.close();
-        }
+        self.close();
         let mut per_shard = Vec::with_capacity(self.workers.len());
         for h in self.workers {
             per_shard.push(h.join().unwrap_or_default());
@@ -522,6 +700,9 @@ mod tests {
         assert_eq!(agg.jobs, 20);
         // every job ran exactly once, solo or coalesced
         assert_eq!(agg.solo_jobs + agg.coalesced_jobs, 20);
+        // every request recorded exactly one latency sample
+        assert_eq!(agg.latency.count(), 20);
+        assert!(agg.latency.quantile(0.99).is_some());
         assert_eq!(per_shard.len(), 3);
         let sum: u64 = per_shard.iter().map(|m| m.jobs).sum();
         assert_eq!(sum, 20);
@@ -583,7 +764,7 @@ mod tests {
         let mut prog_rx = Vec::new();
         for id in 0..10 {
             let (job, expect) = add_job(id, &mut rng, 20, 5);
-            job_rx.push((svc.submit(job), expect));
+            job_rx.push((svc.submit(job).unwrap(), expect));
             let rows = 1 + rng.index(40);
             let a: Vec<Word> =
                 (0..rows).map(|_| Word::from_digits(rng.number(5, 3), Radix::TERNARY)).collect();
@@ -592,7 +773,7 @@ mod tests {
             let want =
                 reference::evaluate(plan.program(), &[("a", a.clone()), ("b", b.clone())]);
             let bound = BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true).unwrap();
-            prog_rx.push((svc.submit_program(bound), want));
+            prog_rx.push((svc.submit_program(bound).unwrap(), want));
         }
         for (rx, expect) in job_rx {
             assert_eq!(rx.recv().unwrap().unwrap().values, expect);
@@ -609,7 +790,12 @@ mod tests {
     fn submission(rng: &mut Rng, id: u64) -> Submission {
         let (job, _) = add_job(id, rng, 2, 3);
         let (tx, _rx) = sync_channel(1);
-        Submission { payload: Payload::Job(job, tx), home: 0 }
+        Submission {
+            payload: Payload::Job(job, tx),
+            home: 0,
+            enqueued: Instant::now(),
+            on_complete: None,
+        }
     }
 
     fn submission_id(sub: &Submission) -> u64 {
@@ -629,9 +815,9 @@ mod tests {
         assert!(matches!(q.pop(tiny), Pop::TimedOut));
         assert!(q.try_pop().is_none());
         let mut rng = Rng::new(1);
-        q.push(submission(&mut rng, 1), 4);
-        q.push(submission(&mut rng, 2), 4);
-        q.push(submission(&mut rng, 3), 4);
+        q.push(submission(&mut rng, 1), 4).unwrap();
+        q.push(submission(&mut rng, 2), 4).unwrap();
+        q.push(submission(&mut rng, 3), 4).unwrap();
         // steal (try_pop) and pop drain in FIFO order
         assert_eq!(submission_id(&q.try_pop().unwrap()), 1);
         match q.pop(tiny) {
@@ -648,13 +834,53 @@ mod tests {
         assert!(q.try_pop().is_none());
     }
 
+    /// Regression (serving PR): submit-after-shutdown used to `assert!`,
+    /// panicking the *submitter's* thread. It must degrade to
+    /// `SubmitError::Closed` on both the blocking and non-blocking paths.
     #[test]
-    #[should_panic(expected = "submit after shutdown")]
     fn shard_queue_rejects_push_after_close() {
         let q = ShardQueue::new();
         q.close();
         let mut rng = Rng::new(2);
-        q.push(submission(&mut rng, 1), 4);
+        assert_eq!(q.push(submission(&mut rng, 1), 4), Err(SubmitError::Closed));
+        assert_eq!(q.try_push(submission(&mut rng, 2), 4), Err(SubmitError::Closed));
+    }
+
+    /// try_push sheds instead of blocking when the queue is at depth.
+    #[test]
+    fn try_push_sheds_when_full() {
+        let q = ShardQueue::new();
+        let mut rng = Rng::new(3);
+        q.try_push(submission(&mut rng, 1), 2).unwrap();
+        q.try_push(submission(&mut rng, 2), 2).unwrap();
+        assert_eq!(q.try_push(submission(&mut rng, 3), 2), Err(SubmitError::Full));
+        // draining one slot re-opens admission
+        assert!(matches!(q.pop(Duration::from_micros(50)), Pop::Item(_)));
+        q.try_push(submission(&mut rng, 4), 2).unwrap();
+    }
+
+    /// Regression (serving PR): `pop` computed `Instant::now() + timeout`,
+    /// which panics on overflow for "no deadline" timeouts like
+    /// `Duration::MAX`. Items must still pop, and close must still wake
+    /// the waiter, under a non-representable deadline.
+    #[test]
+    fn pop_survives_unrepresentable_deadline() {
+        let q = Arc::new(ShardQueue::new());
+        let mut rng = Rng::new(4);
+        q.push(submission(&mut rng, 1), 4).unwrap();
+        match q.pop(Duration::MAX) {
+            Pop::Item(sub) => assert_eq!(submission_id(&sub), 1),
+            _ => panic!("expected the queued item"),
+        }
+        // Empty queue + infinite timeout: the waiter parks on the condvar
+        // (no deadline to overflow) until close wakes it with `Closed`.
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || matches!(q.pop(Duration::MAX), Pop::Closed))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(waiter.join().unwrap(), "close must wake an infinite-timeout pop");
     }
 
     /// Work stealing: all jobs share one signature (one home shard), with
@@ -677,7 +903,7 @@ mod tests {
         let mut pending = Vec::new();
         for id in 0..24 {
             let (job, expect) = add_job(id, &mut rng, 300, 8);
-            pending.push((svc.submit(job), expect, id));
+            pending.push((svc.submit(job).unwrap(), expect, id));
         }
         for (rx, expect, id) in pending {
             let res = rx.recv().unwrap().unwrap();

@@ -37,6 +37,10 @@
 //!   AP programs (element-wise ops + segmented reductions) planned onto
 //!   CAM column fields so intermediates stay resident between ops, with
 //!   `Mac → Reduce` fusion and per-step attribution.
+//! * [`serving`] — the production front door: bounded admission control
+//!   and backpressure over the sharded dispatcher, per-request latency
+//!   capture into streaming p50/p95/p99 histograms, and closed/open-loop
+//!   load generation (`mvap serve`).
 //! * [`runtime`] — PJRT client wrapper and artifact loading.
 //! * [`exp`] — experiment harness regenerating every paper table/figure.
 //!
@@ -63,6 +67,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod modelcheck;
 pub mod program;
+pub mod serving;
 pub mod runtime;
 pub mod exp;
 

@@ -5,6 +5,7 @@
 //!   lut <fn>          generate + print a LUT (add|sub|mac, any radix)
 //!   run               run a vector workload through the engine service
 //!   program           compile + run a multi-op dataflow program
+//!   serve             drive the serving front door with a load generator
 //!   modelcheck        exhaustively verify the shard coordinator machine
 //!   artifacts         list the AOT artifact registry
 //!   sweep             circuit design-space exploration summary
@@ -21,8 +22,9 @@ use mvap::lutgen::{generate_blocked, generate_non_blocked, validate_lut};
 use mvap::mvl::{Radix, Word};
 use mvap::program::{builtin, reference, BoundProgram};
 use mvap::runtime::Registry;
+use mvap::serving::{loadgen, FrontConfig, LoadConfig, LoopMode, Mix};
 use mvap::util::cli::Args;
-use mvap::util::Rng;
+use mvap::util::{Rng, Table};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -49,6 +51,19 @@ USAGE:
            (compiles the builtin to a field-allocated plan and runs the
             whole op DAG as ONE engine invocation — intermediates stay
             CAM-resident; --dump-plan prints the schedule and exits)
+  mvap serve [--clients N] [--rps R] [--duration SECS]
+           [--mix A:S:M:R:P] [--shards S1,S2,..] [--flush-us U1,U2,..]
+           [--req-rows N] [--digits P] [--radix N] [--inflight CAP]
+           [--queue-depth D] [--backend native|native-bitsliced|pjrt]
+           [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
+           [--json FILE]
+           (drives the bounded-admission serving front door with mixed
+            add:sub:mac:reduce:program traffic and prints p50/p95/p99
+            latency + throughput per shard-count × flush-policy setting.
+            --clients N runs a closed loop [N submit→wait→repeat threads,
+            measures capacity]; --rps R adds an open loop [fixed-rate
+            pacer that sheds instead of queueing, measures tail latency
+            under offered load]. reduce/program classes are native-only)
   mvap modelcheck [--max-states N] [--dot FILE] [--no-liveness]
            (exhaustively explores every interleaving of the bounded shard
             coordinator scenarios — submit/pop/flush/steal/barrier/drain —
@@ -66,6 +81,7 @@ fn main() {
         Some("lut") => cmd_lut(&args),
         Some("run") => cmd_run(&args),
         Some("program") => cmd_program(&args),
+        Some("serve") => cmd_serve(&args),
         Some("modelcheck") => cmd_modelcheck(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
@@ -216,7 +232,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             steal: !no_steal,
         };
         let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
-        for rx in svc.submit_many(workload) {
+        for rx in svc.submit_many(workload)? {
             let res = rx.recv().expect("shard died")?;
             print_result(&res);
         }
@@ -335,6 +351,125 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated sweep list option (`--shards 2,4,8`), falling
+/// back to a single default value when the option is absent.
+fn parse_sweep<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> anyhow::Result<Vec<T>> {
+    match args.get_list(key) {
+        None => Ok(vec![default]),
+        Some(items) => items
+            .iter()
+            .map(|s| {
+                s.parse::<T>()
+                    .map_err(|_| anyhow::anyhow!("--{key}: '{s}' is not a valid value"))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let clients = args.get_parse_or("clients", 32usize);
+    let rps = args.get_parse_or("rps", 0u64);
+    let duration_s = args.get_parse_or("duration", 2.0f64);
+    let mix = Mix::parse(&args.get_or("mix", "4:2:2:1:1"))?;
+    let rows = args.get_parse_or("req-rows", 8usize);
+    let digits = args.get_parse_or("digits", 6usize);
+    let radix = Radix(args.get_parse_or("radix", 3u8));
+    let backend: BackendKind =
+        args.get_or("backend", "native").parse().map_err(anyhow::Error::msg)?;
+    let blocked = resolve_blocked(args)?;
+    let seed = args.get_parse_or("seed", 0x5eedu64);
+    let queue_depth = args.get_parse_or("queue-depth", 64usize);
+    let inflight = args.get_parse_or("inflight", 0usize);
+    let shard_counts: Vec<usize> = parse_sweep(args, "shards", 4)?;
+    let flush_list: Vec<u64> = parse_sweep(args, "flush-us", 2000)?;
+    let json = args.get("json").map(PathBuf::from);
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown();
+
+    anyhow::ensure!(
+        duration_s.is_finite() && duration_s > 0.0,
+        "--duration must be a positive number of seconds"
+    );
+    anyhow::ensure!(
+        clients > 0 || rps > 0,
+        "nothing to drive: --clients N (closed loop) and/or --rps R (open loop)"
+    );
+    anyhow::ensure!(shard_counts.iter().all(|&s| s > 0), "--shards entries must be positive");
+
+    // Which loop disciplines to run at each sweep point: closed measures
+    // capacity, open measures behaviour under a fixed offered rate.
+    let mut modes = Vec::new();
+    if clients > 0 {
+        modes.push(LoopMode::Closed);
+    }
+    if rps > 0 {
+        modes.push(LoopMode::Open);
+    }
+
+    let max_in_flight = if inflight > 0 { inflight } else { (clients * 2).max(256) };
+    let cfg = LoadConfig {
+        duration: std::time::Duration::from_secs_f64(duration_s),
+        clients,
+        rps,
+        mix,
+        rows,
+        digits,
+        radix,
+        blocked,
+        seed,
+    };
+
+    let mut table = Table::new("serving latency / throughput")
+        .header(&["mode", "shards", "flush", "class", "count", "p50", "p95", "p99", "max", "rps"]);
+    let mut reports = Vec::new();
+    for &shards in &shard_counts {
+        for &flush_us in &flush_list {
+            for &mode in &modes {
+                let front_cfg = FrontConfig {
+                    max_in_flight,
+                    shard: ShardConfig {
+                        shards,
+                        queue_depth: queue_depth.max(2),
+                        flush_after: std::time::Duration::from_micros(flush_us),
+                        ..ShardConfig::default()
+                    },
+                };
+                let report = loadgen::run_kind(mode, front_cfg, backend, artifacts.clone(), &cfg)?;
+                println!(
+                    "{:>6} loop, {} shard(s), flush {}us: offered={} completed={} shed={} \
+                     failed={} ({:.0} req/s)",
+                    mode.name(),
+                    shards,
+                    flush_us,
+                    report.offered,
+                    report.completed,
+                    report.shed,
+                    report.failed,
+                    report.achieved_rps(),
+                );
+                report.table_rows(&mut table);
+                reports.push(report);
+            }
+        }
+    }
+    println!();
+    table.print();
+    anyhow::ensure!(
+        reports.iter().any(|r| r.completed > 0),
+        "no requests completed in any configuration"
+    );
+    if let Some(path) = json {
+        let entries: Vec<String> = reports.iter().flat_map(|r| r.json_entries()).collect();
+        let body = format!(
+            "{{\n  \"suite\": \"mvap-serve\",\n  \"results\": [\n    {}\n  ]\n}}\n",
+            entries.join(",\n    ")
+        );
+        std::fs::write(&path, body)?;
+        println!("latency curves -> {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_modelcheck(args: &Args) -> anyhow::Result<()> {
     let max_states = args.get_parse_or("max-states", 1_000_000usize);
     let dot_path = args.get("dot").map(PathBuf::from);
@@ -429,6 +564,19 @@ mod tests {
         assert!(resolve_blocked(&parse(&["run"])).unwrap());
         assert!(resolve_blocked(&parse(&["run", "--blocked"])).unwrap());
         assert!(!resolve_blocked(&parse(&["run", "--non-blocked"])).unwrap());
+    }
+
+    /// `--shards 2,4,8`-style sweep lists parse, default when absent, and
+    /// reject garbage elements with the offending value in the message.
+    #[test]
+    fn sweep_lists_parse() {
+        let a = parse(&["serve", "--shards", "2,4,8", "--flush-us", "500"]);
+        assert_eq!(parse_sweep(&a, "shards", 4usize).unwrap(), vec![2, 4, 8]);
+        assert_eq!(parse_sweep(&a, "flush-us", 2000u64).unwrap(), vec![500]);
+        assert_eq!(parse_sweep(&a, "queue-depth", 64usize).unwrap(), vec![64]);
+        let bad = parse(&["serve", "--shards", "2,x"]);
+        let err = parse_sweep::<usize>(&bad, "shards", 4).unwrap_err();
+        assert!(format!("{err}").contains("'x'"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! The serving front door: bounded admission control over
+//! [`ShardedService`].
+//!
+//! [`FrontDoor`] is the MPMC edge of the engine — many client threads
+//! submit concurrently, many shard workers complete concurrently. It adds
+//! the two properties a production front end needs on top of the raw
+//! sharded dispatcher:
+//!
+//! 1. **Bounded admission.** At most [`FrontConfig::max_in_flight`]
+//!    requests are inside the system (queued or executing). Beyond that,
+//!    blocking submits park on the shard queue's backpressure and
+//!    non-blocking submits are *shed* with [`AdmitError::Saturated`] —
+//!    the queue never grows without bound and nothing panics.
+//! 2. **Per-request latency SLOs.** Every admitted request carries its
+//!    enqueue timestamp; the executing shard invokes a completion
+//!    callback with the enqueue→reply latency, which the front door
+//!    folds into per-[`WorkClass`] streaming histograms
+//!    ([`LatencyHistogram`]) for p50/p95/p99 extraction while the
+//!    service is live.
+//!
+//! Requests are never dropped after admission: the shard drain guarantee
+//! (model-checked in PR 6) means every accepted submission completes —
+//! and therefore releases its admission slot — even through shutdown.
+
+use super::histogram::LatencyHistogram;
+use crate::coordinator::{
+    Backend, BackendKind, Job, JobResult, Metrics, OpKind, ShardConfig, ShardedService,
+    SubmitError,
+};
+use crate::program::{BoundProgram, ProgramReport};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Workload class of a request — the granularity latency SLOs are
+/// tracked at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkClass {
+    Add,
+    Sub,
+    Mac,
+    Reduce,
+    Program,
+}
+
+impl WorkClass {
+    /// Canonical order (matches the `--mix add:sub:mac:reduce:program`
+    /// weight order).
+    pub const ALL: [WorkClass; 5] =
+        [WorkClass::Add, WorkClass::Sub, WorkClass::Mac, WorkClass::Reduce, WorkClass::Program];
+
+    /// The class a plain job belongs to.
+    pub fn of_op(op: OpKind) -> WorkClass {
+        match op {
+            OpKind::Add => WorkClass::Add,
+            OpKind::Sub => WorkClass::Sub,
+            OpKind::Mac => WorkClass::Mac,
+            OpKind::Reduce => WorkClass::Reduce,
+        }
+    }
+
+    /// Display name (also the `--mix` weight key).
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkClass::Add => "add",
+            WorkClass::Sub => "sub",
+            WorkClass::Mac => "mac",
+            WorkClass::Reduce => "reduce",
+            WorkClass::Program => "program",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|c| *c == self).expect("class in ALL")
+    }
+}
+
+/// Why the front door refused a request. Like [`SubmitError`], refusal is
+/// an error value, never a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The in-flight cap (or, for non-blocking submits, the home shard's
+    /// queue) is full: the request was shed. Retry later or slow down.
+    Saturated,
+    /// The service is shutting down; no new work is accepted.
+    Closed,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Saturated => write!(f, "front door saturated: request shed"),
+            AdmitError::Closed => write!(f, "front door closed: service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+impl From<SubmitError> for AdmitError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Closed => AdmitError::Closed,
+            SubmitError::Full => AdmitError::Saturated,
+        }
+    }
+}
+
+/// Front-door tuning: the shard layer's knobs plus the admission cap.
+#[derive(Clone, Debug)]
+pub struct FrontConfig {
+    pub shard: ShardConfig,
+    /// Hard cap on requests inside the system (queued + executing).
+    pub max_in_flight: usize,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig { shard: ShardConfig::default(), max_in_flight: 1024 }
+    }
+}
+
+/// Shared between submitters and the shards' completion callbacks.
+struct FrontState {
+    in_flight: AtomicUsize,
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    closed_rejects: AtomicU64,
+    /// One histogram per [`WorkClass::ALL`] entry.
+    latency: Mutex<Vec<LatencyHistogram>>,
+}
+
+impl FrontState {
+    fn new() -> Self {
+        FrontState {
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            closed_rejects: AtomicU64::new(0),
+            latency: Mutex::new(vec![LatencyHistogram::default(); WorkClass::ALL.len()]),
+        }
+    }
+
+    /// Completion callback body: release the admission slot and record
+    /// the request's latency under its class.
+    fn complete(&self, class: WorkClass, latency: Duration) {
+        self.latency.lock().expect("latency histograms poisoned")[class.index()].record(latency);
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Counter + latency snapshot of a running (or finished) front door.
+#[derive(Clone, Debug)]
+pub struct FrontStats {
+    pub admitted: u64,
+    pub completed: u64,
+    /// Requests shed by admission control or non-blocking backpressure.
+    pub shed: u64,
+    /// Requests refused because the service was shutting down.
+    pub closed_rejects: u64,
+    pub in_flight: usize,
+    /// Per-class latency histograms, in [`WorkClass::ALL`] order.
+    pub per_class: Vec<(WorkClass, LatencyHistogram)>,
+}
+
+impl FrontStats {
+    /// All classes merged into one histogram.
+    pub fn total_latency(&self) -> LatencyHistogram {
+        let mut total = LatencyHistogram::default();
+        for (_, h) in &self.per_class {
+            total.merge(h);
+        }
+        total
+    }
+}
+
+/// The MPMC serving front door. See the module docs.
+pub struct FrontDoor {
+    svc: ShardedService,
+    state: Arc<FrontState>,
+    max_in_flight: usize,
+}
+
+impl FrontDoor {
+    /// Start a front door over `cfg.shard.shards` fresh worker shards
+    /// (test/benchmark path: any backend constructor).
+    pub fn start<F>(cfg: FrontConfig, make_backend: F) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        assert!(cfg.max_in_flight >= 1, "admit at least one request");
+        let svc = ShardedService::start(cfg.shard, make_backend)?;
+        Ok(FrontDoor { svc, state: Arc::new(FrontState::new()), max_in_flight: cfg.max_in_flight })
+    }
+
+    /// Start with a [`BackendKind`] (the CLI path; native shards share
+    /// one kernel cache).
+    pub fn start_kind(
+        cfg: FrontConfig,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+    ) -> anyhow::Result<Self> {
+        assert!(cfg.max_in_flight >= 1, "admit at least one request");
+        let svc = ShardedService::start_kind(cfg.shard, kind, artifacts_dir)?;
+        Ok(FrontDoor { svc, state: Arc::new(FrontState::new()), max_in_flight: cfg.max_in_flight })
+    }
+
+    /// Shards behind this front door.
+    pub fn shards(&self) -> usize {
+        self.svc.shards()
+    }
+
+    /// Requests currently inside the system (queued + executing).
+    pub fn in_flight(&self) -> usize {
+        self.state.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Reserve an admission slot, or shed.
+    fn admit(&self) -> Result<(), AdmitError> {
+        let cap = self.max_in_flight;
+        self.state
+            .in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| (n < cap).then_some(n + 1))
+            .map_err(|_| {
+                self.state.shed.fetch_add(1, Ordering::SeqCst);
+                AdmitError::Saturated
+            })?;
+        self.state.admitted.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Roll back a reservation whose submit failed (the completion
+    /// callback will never run for it).
+    fn unadmit(&self, err: SubmitError) -> AdmitError {
+        self.state.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.state.admitted.fetch_sub(1, Ordering::SeqCst);
+        match err {
+            SubmitError::Closed => {
+                self.state.closed_rejects.fetch_add(1, Ordering::SeqCst);
+                AdmitError::Closed
+            }
+            SubmitError::Full => {
+                self.state.shed.fetch_add(1, Ordering::SeqCst);
+                AdmitError::Saturated
+            }
+        }
+    }
+
+    fn completion(&self, class: WorkClass) -> crate::coordinator::OnComplete {
+        let state = Arc::clone(&self.state);
+        Box::new(move |latency| state.complete(class, latency))
+    }
+
+    /// Submit one job (closed-loop path): blocks on shard backpressure
+    /// once admitted, sheds only at the in-flight cap.
+    pub fn submit(&self, job: Job) -> Result<Receiver<anyhow::Result<JobResult>>, AdmitError> {
+        self.admit()?;
+        let class = WorkClass::of_op(job.op);
+        self.svc.submit_with(job, Some(self.completion(class))).map_err(|e| self.unadmit(e))
+    }
+
+    /// Submit one job without blocking (open-loop path): sheds at the
+    /// in-flight cap *or* when the home shard's queue is full.
+    pub fn try_submit(&self, job: Job) -> Result<Receiver<anyhow::Result<JobResult>>, AdmitError> {
+        self.admit()?;
+        let class = WorkClass::of_op(job.op);
+        self.svc.try_submit_with(job, Some(self.completion(class))).map_err(|e| self.unadmit(e))
+    }
+
+    /// Submit a bound program (closed-loop path).
+    pub fn submit_program(
+        &self,
+        bound: BoundProgram,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, AdmitError> {
+        self.admit()?;
+        self.svc
+            .submit_program_with(bound, Some(self.completion(WorkClass::Program)))
+            .map_err(|e| self.unadmit(e))
+    }
+
+    /// Submit a bound program without blocking (open-loop path).
+    pub fn try_submit_program(
+        &self,
+        bound: BoundProgram,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, AdmitError> {
+        self.admit()?;
+        self.svc
+            .try_submit_program_with(bound, Some(self.completion(WorkClass::Program)))
+            .map_err(|e| self.unadmit(e))
+    }
+
+    /// Counter + latency snapshot (cheap; live).
+    pub fn stats(&self) -> FrontStats {
+        let latency = self.state.latency.lock().expect("latency histograms poisoned");
+        FrontStats {
+            admitted: self.state.admitted.load(Ordering::SeqCst),
+            completed: self.state.completed.load(Ordering::SeqCst),
+            shed: self.state.shed.load(Ordering::SeqCst),
+            closed_rejects: self.state.closed_rejects.load(Ordering::SeqCst),
+            in_flight: self.state.in_flight.load(Ordering::SeqCst),
+            per_class: WorkClass::ALL
+                .iter()
+                .map(|&c| (c, latency[c.index()].clone()))
+                .collect(),
+        }
+    }
+
+    /// Wait (bounded) for every admitted request to complete. Returns
+    /// true when the system drained within `timeout`.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now().checked_add(timeout);
+        loop {
+            if self.in_flight() == 0 {
+                return true;
+            }
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d {
+                    return false;
+                }
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Stop accepting new work while leaving queued work to drain (the
+    /// shutdown-while-submitting path: submitters see
+    /// [`AdmitError::Closed`], never a panic).
+    pub fn close(&self) {
+        self.svc.close();
+    }
+
+    /// Drain, stop the shards, and return the front stats plus the
+    /// aggregate / per-shard engine metrics.
+    pub fn shutdown(self) -> (FrontStats, Metrics, Vec<Metrics>) {
+        // Bounded patience: accepted work always completes under the
+        // drain guarantee, but a wedged backend shouldn't hang shutdown
+        // forever.
+        self.drain(Duration::from_secs(30));
+        let stats = self.stats();
+        let (agg, per_shard) = self.svc.shutdown();
+        (stats, agg, per_shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeBackend;
+    use crate::mvl::{Radix, Word};
+    use crate::util::Rng;
+
+    fn native() -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+    }
+
+    fn add_job(id: u64, rng: &mut Rng) -> Job {
+        let radix = Radix::TERNARY;
+        let a: Vec<Word> = (0..4).map(|_| Word::from_digits(rng.number(5, 3), radix)).collect();
+        let b: Vec<Word> = (0..4).map(|_| Word::from_digits(rng.number(5, 3), radix)).collect();
+        Job::new(id, OpKind::Add, radix, true, a, b)
+    }
+
+    /// End-to-end: requests complete, slots release, per-class latency
+    /// samples land under the right class.
+    #[test]
+    fn front_door_completes_and_accounts() {
+        let cfg = FrontConfig { max_in_flight: 64, ..FrontConfig::default() };
+        let front = FrontDoor::start(cfg, native).unwrap();
+        let mut rng = Rng::new(11);
+        let mut rxs = Vec::new();
+        for id in 0..20 {
+            rxs.push(front.submit(add_job(id, &mut rng)).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert!(front.drain(Duration::from_secs(10)), "in-flight must hit zero");
+        let (stats, agg, _) = front.shutdown();
+        assert_eq!(stats.admitted, 20);
+        assert_eq!(stats.completed, 20);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.in_flight, 0);
+        let add = &stats.per_class[WorkClass::Add.index()];
+        assert_eq!(add.1.count(), 20, "all samples under the add class");
+        assert_eq!(stats.total_latency().count(), 20);
+        assert_eq!(agg.latency.count(), 20, "engine histogram sees every request too");
+    }
+
+    /// Admission control: with the cap reached and the shards parked on a
+    /// long flush deadline, further non-blocking submits shed.
+    #[test]
+    fn saturation_sheds_instead_of_queueing() {
+        let cfg = FrontConfig {
+            max_in_flight: 2,
+            shard: ShardConfig {
+                shards: 1,
+                queue_depth: 64,
+                max_batch_jobs: 64,
+                // park admitted jobs in the pending batch
+                flush_after: Duration::from_secs(1),
+                ..ShardConfig::default()
+            },
+        };
+        let front = FrontDoor::start(cfg, native).unwrap();
+        let mut rng = Rng::new(12);
+        let _rx1 = front.submit(add_job(1, &mut rng)).unwrap();
+        let _rx2 = front.submit(add_job(2, &mut rng)).unwrap();
+        assert_eq!(front.try_submit(add_job(3, &mut rng)).unwrap_err(), AdmitError::Saturated);
+        let stats = front.stats();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.admitted, 2);
+        // shutdown drains the parked batch; both requests complete
+        let (stats, _, _) = front.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.in_flight, 0);
+    }
+
+    /// Closing the front door turns new submissions into `Closed` errors
+    /// — never a panic — while already-admitted work still completes.
+    #[test]
+    fn close_rejects_new_work_gracefully() {
+        let front = FrontDoor::start(FrontConfig::default(), native).unwrap();
+        let mut rng = Rng::new(13);
+        let rx = front.submit(add_job(1, &mut rng)).unwrap();
+        front.close();
+        assert_eq!(front.submit(add_job(2, &mut rng)).unwrap_err(), AdmitError::Closed);
+        assert_eq!(front.try_submit(add_job(3, &mut rng)).unwrap_err(), AdmitError::Closed);
+        rx.recv().unwrap().unwrap();
+        let (stats, _, _) = front.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.closed_rejects, 2);
+        assert_eq!(stats.in_flight, 0, "failed submits must roll back their slots");
+    }
+}

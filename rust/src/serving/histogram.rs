@@ -1,0 +1,348 @@
+//! Streaming latency histogram with quantile extraction.
+//!
+//! [`LatencyHistogram`] is an HDR-style log-linear histogram over
+//! nanosecond values: latencies below [`SUBS`] get exact width-1 buckets,
+//! and each power-of-two era above that is split into [`SUBS`]
+//! equal-width sub-buckets, so relative bucket width — and therefore
+//! quantile error — is bounded by `1/SUBS` (~3%). Recording is O(1) with
+//! no allocation beyond a lazily-grown bucket vector (≤ 1920 entries for
+//! the full `u64` range, ~15 KiB), merging is element-wise, and
+//! quantiles are one pass over the buckets with midpoint interpolation
+//! inside the selected bucket, clamped to the exact observed extremes.
+//!
+//! The algorithm is mirrored operation-for-operation by
+//! `python/histogram_port.py`; the pinned constants in the tests below
+//! are cross-checked by `python/tests/test_histogram_port.py`.
+
+use std::time::Duration;
+
+/// log2 of the sub-bucket count per power-of-two era.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per era; also the top of the exact width-1 range.
+const SUBS: u64 = 1 << SUB_BITS;
+
+/// Bucket index for a value of `ns` nanoseconds.
+fn bucket_of(ns: u64) -> usize {
+    if ns < SUBS {
+        return ns as usize;
+    }
+    let top = 63 - u64::from(ns.leading_zeros()); // index of the top set bit
+    let shift = top - u64::from(SUB_BITS);
+    ((shift + 1) * SUBS + ((ns >> shift) - SUBS)) as usize
+}
+
+/// Half-open value range `[lo, hi)` covered by bucket `i`.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    let i = i as u64;
+    if i < SUBS {
+        return (i, i + 1);
+    }
+    let era = i / SUBS - 1;
+    let off = i % SUBS;
+    let lo = (SUBS + off) << era;
+    (lo, lo + (1u64 << era))
+}
+
+/// A mergeable streaming histogram of request latencies, accurate to
+/// ~3% relative error at any quantile.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    total_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample.
+    pub fn record(&mut self, latency: Duration) {
+        self.record_ns(u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one latency sample in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = bucket_of(ns);
+        if b >= self.buckets.len() {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        if self.count == 0 {
+            self.min_ns = ns;
+            self.max_ns = ns;
+        } else {
+            self.min_ns = self.min_ns.min(ns);
+            self.max_ns = self.max_ns.max(ns);
+        }
+        self.count += 1;
+        self.total_ns += u128::from(ns);
+    }
+
+    /// Fold another histogram into this one (shard → aggregate merge).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+            *mine += theirs;
+        }
+        if self.count == 0 {
+            self.min_ns = other.min_ns;
+            self.max_ns = other.max_ns;
+        } else {
+            self.min_ns = self.min_ns.min(other.min_ns);
+            self.max_ns = self.max_ns.max(other.max_ns);
+        }
+        self.count += other.count;
+        self.total_ns += other.total_ns;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency, `None` when empty.
+    pub fn mean(&self) -> Option<Duration> {
+        if self.count == 0 {
+            return None;
+        }
+        let mean_ns = self.total_ns / u128::from(self.count);
+        Some(Duration::from_nanos(u64::try_from(mean_ns).unwrap_or(u64::MAX)))
+    }
+
+    /// Smallest recorded sample, `None` when empty.
+    pub fn min(&self) -> Option<Duration> {
+        (self.count > 0).then(|| Duration::from_nanos(self.min_ns))
+    }
+
+    /// Largest recorded sample, `None` when empty.
+    pub fn max(&self) -> Option<Duration> {
+        (self.count > 0).then(|| Duration::from_nanos(self.max_ns))
+    }
+
+    /// Estimated value at quantile `q ∈ [0, 1]` in nanoseconds, `None`
+    /// when empty. Rank semantics are `rank = q · (n − 1)` over the
+    /// sorted sample order; the estimate interpolates at the midpoint
+    /// offset inside the owning bucket and clamps to the exact observed
+    /// `[min, max]`, so empty / single-sample / all-equal cases are
+    /// exact and `q = 0 / 1` return the true extremes.
+    pub fn quantile_ns(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q == 0.0 {
+            return Some(self.min_ns as f64);
+        }
+        if q == 1.0 {
+            return Some(self.max_ns as f64);
+        }
+        let rank = q * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < (cum + c) as f64 {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = ((rank - cum as f64) + 0.5) / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return Some(est.clamp(self.min_ns as f64, self.max_ns as f64));
+            }
+            cum += c;
+        }
+        // Unreachable when bucket counts sum to `count`; degrade to max.
+        Some(self.max_ns as f64)
+    }
+
+    /// [`Self::quantile_ns`] as a rounded [`Duration`].
+    pub fn quantile(&self, q: f64) -> Option<Duration> {
+        self.quantile_ns(q).map(|ns| Duration::from_nanos(ns.round() as u64))
+    }
+
+    /// `p50 / p95 / p99 / max` in one call — the SLO line.
+    pub fn slo(&self) -> Option<SloSnapshot> {
+        Some(SloSnapshot {
+            count: self.count,
+            p50: self.quantile(0.50)?,
+            p95: self.quantile(0.95)?,
+            p99: self.quantile(0.99)?,
+            max: self.max()?,
+        })
+    }
+}
+
+/// One histogram's headline quantiles ([`LatencyHistogram::slo`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SloSnapshot {
+    pub count: u64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl std::fmt::Display for SloSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} p50={:.1?} p95={:.1?} p99={:.1?} max={:.1?}",
+            self.count, self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every value lies inside its bucket's bounds, consecutive values
+    /// land in the same or the next bucket, and relative width above the
+    /// exact range is bounded by 1/SUBS.
+    #[test]
+    fn bucket_layout_is_continuous_and_bounded() {
+        let mut prev = None;
+        for v in 0u64..(1 << 14) {
+            let b = bucket_of(v);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v < hi, "v={v} b={b} [{lo},{hi})");
+            if let Some(p) = prev {
+                assert!(b == p || b == p + 1, "v={v}: {p} -> {b}");
+            }
+            prev = Some(b);
+        }
+        let mut rng = crate::util::Rng::new(0x5eed);
+        for _ in 0..20_000 {
+            let v = rng.next_u64();
+            let b = bucket_of(v);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v < hi, "v={v} b={b} [{lo},{hi})");
+            if v >= SUBS {
+                assert!((hi - lo) <= lo / SUBS + 1, "width {} at lo {lo}", hi - lo);
+            }
+        }
+        // the top bucket index bounds the backing array size
+        assert_eq!(bucket_of(u64::MAX), 1919);
+        let (lo, _) = bucket_bounds(1919);
+        assert!(lo <= u64::MAX);
+    }
+
+    /// Quantile edge case: empty histogram yields no quantiles.
+    #[test]
+    fn quantile_of_empty_is_none() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_none());
+        assert!(h.mean().is_none());
+        assert!(h.min().is_none() && h.max().is_none());
+        assert!(h.slo().is_none());
+    }
+
+    /// Quantile edge case: a single sample is returned exactly at every
+    /// quantile (interpolation clamps to the observed [min, max]).
+    #[test]
+    fn quantile_of_single_sample_is_exact() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(1000));
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), Some(1000.0), "q={q}");
+        }
+        assert_eq!(h.mean(), Some(Duration::from_nanos(1000)));
+    }
+
+    /// Quantile edge case: all-equal samples are exact at every quantile.
+    #[test]
+    fn quantile_of_all_equal_is_exact() {
+        let mut h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record(Duration::from_nanos(7));
+        }
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile_ns(q), Some(7.0), "q={q}");
+        }
+    }
+
+    /// Quantile edge case: mid-bucket interpolation. Values 0..=99 ns —
+    /// 64..99 share width-2 buckets, so p95/p99 interpolate inside a
+    /// bucket. Pinned constants cross-checked by the Python port
+    /// (python/tests/test_histogram_port.py).
+    #[test]
+    fn quantile_interpolates_mid_bucket() {
+        let mut h = LatencyHistogram::default();
+        for v in 0..100 {
+            h.record(Duration::from_nanos(v));
+        }
+        assert_eq!(h.quantile_ns(0.50), Some(50.0));
+        assert_eq!(h.quantile_ns(0.95), Some(94.55));
+        assert_eq!(h.quantile_ns(0.99), Some(98.51));
+
+        // two samples sharing one width-16 bucket [992, 1008)
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(992));
+        h.record(Duration::from_nanos(1007));
+        assert_eq!(bucket_of(992), bucket_of(1007));
+        assert_eq!(h.quantile_ns(0.5), Some(1000.0));
+        assert_eq!(h.quantile_ns(0.99), Some(1003.92));
+        assert_eq!(h.quantile_ns(0.0), Some(992.0)); // exact min
+        assert_eq!(h.quantile_ns(1.0), Some(1007.0)); // exact max
+    }
+
+    /// Merging shard histograms is equivalent to recording every sample
+    /// into one histogram.
+    #[test]
+    fn merge_equals_record_all() {
+        let mut rng = crate::util::Rng::new(7);
+        let (mut a, mut b, mut all) =
+            (LatencyHistogram::default(), LatencyHistogram::default(), LatencyHistogram::default());
+        for _ in 0..500 {
+            let v = 1 + rng.next_u64() % 1_000_000;
+            if rng.chance(0.5) { a.record_ns(v) } else { b.record_ns(v) }
+            all.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert_eq!(a.mean(), all.mean());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile_ns(q), all.quantile_ns(q), "q={q}");
+        }
+        // merging an empty histogram is a no-op
+        let before = a.quantile_ns(0.5);
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a.quantile_ns(0.5), before);
+    }
+
+    /// Quantile estimates stay within one bucket width (~3% relative) of
+    /// the true order statistics on random workloads.
+    #[test]
+    fn quantile_accuracy_vs_sorted_reference() {
+        let mut rng = crate::util::Rng::new(0xc0de);
+        for case in 0..50 {
+            let n = 1 + rng.index(400);
+            let mut vals: Vec<u64> =
+                (0..n).map(|_| 1 + rng.next_u64() % 10_000_000).collect();
+            let mut h = LatencyHistogram::default();
+            for &v in &vals {
+                h.record_ns(v);
+            }
+            vals.sort_unstable();
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                let est = h.quantile_ns(q).unwrap();
+                let rank = q * (n - 1) as f64;
+                let lo_stat = vals[rank as usize];
+                let hi_stat = vals[(rank as usize + 1).min(n - 1)];
+                let lo_bound = lo_stat as f64 - (lo_stat as f64 * 2.0 / SUBS as f64).max(2.0);
+                let hi_bound = hi_stat as f64 + (hi_stat as f64 * 2.0 / SUBS as f64).max(2.0);
+                assert!(
+                    (lo_bound..=hi_bound).contains(&est),
+                    "case {case} q={q}: est {est} outside [{lo_bound}, {hi_bound}]"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,575 @@
+//! Closed- and open-loop load generation against the serving front door.
+//!
+//! Two loop disciplines, because they measure different things:
+//!
+//! * **Closed loop** (`--clients N`): N client threads each submit one
+//!   request, wait for its reply, and repeat. Offered load adapts to the
+//!   system — this measures *capacity* (throughput at full pipelines)
+//!   and the latency clients actually experience at that concurrency.
+//! * **Open loop** (`--rps R`): a pacer fires requests at a fixed rate
+//!   regardless of completions, shedding (never queueing unboundedly)
+//!   when admission control pushes back. This measures *behaviour under
+//!   offered load* — tail latency and shed rate as the arrival rate
+//!   approaches and passes capacity, which closed loops structurally
+//!   cannot see (coordinated omission).
+//!
+//! Both drive the same mixed workload ([`Mix`]) of element-wise jobs,
+//! in-engine reductions, and compiled dot-product programs, and both
+//! report per-[`WorkClass`] latency quantiles from the front door's
+//! streaming histograms.
+
+use super::front::{AdmitError, FrontConfig, FrontDoor, WorkClass};
+use super::histogram::LatencyHistogram;
+use crate::coordinator::{Backend, BackendKind, Job, Metrics, OpKind};
+use crate::mvl::{Radix, Word};
+use crate::program::{builtin, BoundProgram, Plan};
+use crate::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Workload mix: integer weights per class, in [`WorkClass::ALL`] order
+/// (`add:sub:mac:reduce:program`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mix {
+    pub weights: [u32; 5],
+}
+
+impl Default for Mix {
+    /// `4:2:2:1:1` — add-heavy element-wise traffic with a reduction and
+    /// program tail, roughly the profile of the paper's vector workloads.
+    fn default() -> Self {
+        Mix { weights: [4, 2, 2, 1, 1] }
+    }
+}
+
+impl Mix {
+    /// Parse `add:sub:mac:reduce:program` integer weights.
+    pub fn parse(s: &str) -> anyhow::Result<Mix> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 5,
+            "--mix wants 5 ':'-separated integer weights (add:sub:mac:reduce:program), got '{s}'"
+        );
+        let mut weights = [0u32; 5];
+        for (w, part) in weights.iter_mut().zip(&parts) {
+            *w = part
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--mix weight '{part}' is not a non-negative integer"))?;
+        }
+        anyhow::ensure!(
+            weights.iter().any(|&w| w > 0),
+            "--mix must have at least one positive weight"
+        );
+        Ok(Mix { weights })
+    }
+
+    /// Sample a class proportionally to its weight.
+    pub fn pick(&self, rng: &mut Rng) -> WorkClass {
+        let total: u32 = self.weights.iter().sum();
+        let mut r = rng.below(u64::from(total)) as u32;
+        for (i, &w) in self.weights.iter().enumerate() {
+            if r < w {
+                return WorkClass::ALL[i];
+            }
+            r -= w;
+        }
+        unreachable!("weights sum covers every draw")
+    }
+}
+
+/// Loop discipline (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopMode {
+    Closed,
+    Open,
+}
+
+impl LoopMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoopMode::Closed => "closed",
+            LoopMode::Open => "open",
+        }
+    }
+}
+
+/// Workload knobs shared by both loop modes.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Wall-clock length of the run.
+    pub duration: Duration,
+    /// Closed-loop client threads.
+    pub clients: usize,
+    /// Open-loop offered rate (requests/second).
+    pub rps: u64,
+    pub mix: Mix,
+    /// Rows per request (element-wise ops: rows of each operand vector;
+    /// reduce: operands folded; program: rows of each input).
+    pub rows: usize,
+    /// Digits per word.
+    pub digits: usize,
+    pub radix: Radix,
+    pub blocked: bool,
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            duration: Duration::from_secs(2),
+            clients: 32,
+            rps: 10_000,
+            mix: Mix::default(),
+            rows: 8,
+            digits: 6,
+            radix: Radix::TERNARY,
+            blocked: true,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// One generated request.
+enum Request {
+    Job(Job),
+    Program(Box<BoundProgram>),
+}
+
+/// Builds requests of each [`WorkClass`]; the program plan is compiled
+/// once per run and shared (the realistic serving shape — clients bind
+/// fresh inputs against a cached plan).
+struct RequestFactory {
+    radix: Radix,
+    digits: usize,
+    rows: usize,
+    blocked: bool,
+    plan: Arc<Plan>,
+}
+
+impl RequestFactory {
+    fn new(cfg: &LoadConfig) -> Self {
+        RequestFactory {
+            radix: cfg.radix,
+            digits: cfg.digits,
+            rows: cfg.rows.max(1),
+            blocked: cfg.blocked,
+            plan: Arc::new(builtin::dot(cfg.radix, cfg.digits).plan()),
+        }
+    }
+
+    fn words(&self, rng: &mut Rng) -> Vec<Word> {
+        (0..self.rows)
+            .map(|_| Word::from_digits(rng.number(self.digits, self.radix.n()), self.radix))
+            .collect()
+    }
+
+    fn make(&self, class: WorkClass, id: u64, rng: &mut Rng) -> Request {
+        match class {
+            WorkClass::Add | WorkClass::Sub | WorkClass::Mac => {
+                let op = match class {
+                    WorkClass::Add => OpKind::Add,
+                    WorkClass::Sub => OpKind::Sub,
+                    _ => OpKind::Mac,
+                };
+                Request::Job(Job::new(
+                    id,
+                    op,
+                    self.radix,
+                    self.blocked,
+                    self.words(rng),
+                    self.words(rng),
+                ))
+            }
+            WorkClass::Reduce => Request::Job(Job::reduce(
+                id,
+                self.radix,
+                self.blocked,
+                self.words(rng),
+                Vec::new(),
+            )),
+            WorkClass::Program => {
+                let bound = BoundProgram::bind(
+                    &self.plan,
+                    vec![("a", self.words(rng)), ("b", self.words(rng))],
+                    self.blocked,
+                )
+                .expect("builtin dot binds well-formed inputs");
+                Request::Program(Box::new(bound))
+            }
+        }
+    }
+}
+
+/// Per-driver-side tallies (the front door tracks admission-side counts).
+#[derive(Clone, Copy, Debug, Default)]
+struct Tally {
+    offered: u64,
+    /// Replies received with an engine-level error (closed loop only —
+    /// the open loop drops receivers and lets completions run async).
+    failed: u64,
+}
+
+impl Tally {
+    fn add(&mut self, other: Tally) {
+        self.offered += other.offered;
+        self.failed += other.failed;
+    }
+}
+
+/// The outcome of one load run: counters plus per-class latency curves.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub mode: LoopMode,
+    pub shards: usize,
+    pub flush_after: Duration,
+    /// Requests the generator attempted to submit.
+    pub offered: u64,
+    /// Requests past admission control.
+    pub admitted: u64,
+    /// Requests whose reply was sent (admitted work always completes).
+    pub completed: u64,
+    /// Requests shed by admission control / non-blocking backpressure.
+    pub shed: u64,
+    /// Replies carrying engine-level errors (closed loop only).
+    pub failed: u64,
+    pub wall: Duration,
+    /// All classes merged.
+    pub total: LatencyHistogram,
+    /// Per-class latency, in [`WorkClass::ALL`] order.
+    pub per_class: Vec<(WorkClass, LatencyHistogram)>,
+    /// Aggregate engine metrics across the shards (tiles, coalescing,
+    /// fill rate, the engine-side latency histogram, ...).
+    pub engine: Metrics,
+}
+
+impl LoadReport {
+    /// Completed requests per second of wall clock.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.completed as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// A short settings label, e.g. `closed/4s/2000us`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}s/{}us",
+            self.mode.name(),
+            self.shards,
+            self.flush_after.as_micros()
+        )
+    }
+
+    /// Append this run's rows (total first, then each populated class)
+    /// to a latency table with columns
+    /// `[mode, shards, flush, class, count, p50, p95, p99, max, rps]`.
+    pub fn table_rows(&self, table: &mut crate::util::Table) {
+        let mut push = |class: &str, h: &LatencyHistogram| {
+            let Some(slo) = h.slo() else { return };
+            table.row_strings(vec![
+                self.mode.name().to_string(),
+                self.shards.to_string(),
+                format!("{}us", self.flush_after.as_micros()),
+                class.to_string(),
+                slo.count.to_string(),
+                format!("{:.1?}", slo.p50),
+                format!("{:.1?}", slo.p95),
+                format!("{:.1?}", slo.p99),
+                format!("{:.1?}", slo.max),
+                format!("{:.0}", self.achieved_rps()),
+            ]);
+        };
+        push("TOTAL", &self.total);
+        for (class, h) in &self.per_class {
+            push(class.name(), h);
+        }
+    }
+
+    /// JSON objects (one per populated class plus the total), shaped
+    /// like the bench harness records so BENCH_7.json passes the same
+    /// fail-loud `"name":` guard.
+    pub fn json_entries(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut push = |class: &str, h: &LatencyHistogram| {
+            if h.count() == 0 {
+                return;
+            }
+            let q = |p: f64| h.quantile_ns(p).unwrap_or(0.0);
+            out.push(format!(
+                concat!(
+                    "{{\"name\": \"serving_{}/{}\", \"mode\": \"{}\", \"shards\": {}, ",
+                    "\"flush_us\": {}, \"class\": \"{}\", \"count\": {}, \"offered\": {}, ",
+                    "\"completed\": {}, \"shed\": {}, \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, ",
+                    "\"p99_ns\": {:.0}, \"mean_ns\": {:.0}, \"achieved_rps\": {:.1}}}"
+                ),
+                self.label().replace('/', "_"),
+                class,
+                self.mode.name(),
+                self.shards,
+                self.flush_after.as_micros(),
+                class,
+                h.count(),
+                self.offered,
+                self.completed,
+                self.shed,
+                q(0.50),
+                q(0.95),
+                q(0.99),
+                h.mean().map_or(0.0, |d| d.as_nanos() as f64),
+                self.achieved_rps(),
+            ));
+        };
+        push("total", &self.total);
+        for (class, h) in &self.per_class {
+            push(class.name(), h);
+        }
+        out
+    }
+}
+
+fn deadline_after(d: Duration) -> Instant {
+    // saturate rather than panic on absurd durations
+    Instant::now().checked_add(d).unwrap_or_else(|| {
+        Instant::now() + Duration::from_secs(3600)
+    })
+}
+
+/// Closed loop: `cfg.clients` threads in submit→wait→repeat cycles.
+fn run_closed(front: &FrontDoor, cfg: &LoadConfig, factory: &RequestFactory) -> Tally {
+    let deadline = deadline_after(cfg.duration);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients.max(1))
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut rng =
+                        Rng::new(cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(c as u64 + 1));
+                    let mut tally = Tally::default();
+                    let mut id = (c as u64) << 32;
+                    while Instant::now() < deadline {
+                        id += 1;
+                        tally.offered += 1;
+                        let class = cfg.mix.pick(&mut rng);
+                        let outcome = match factory.make(class, id, &mut rng) {
+                            Request::Job(job) => front
+                                .submit(job)
+                                .map(|rx| matches!(rx.recv(), Ok(Ok(_)))),
+                            Request::Program(bound) => front
+                                .submit_program(*bound)
+                                .map(|rx| matches!(rx.recv(), Ok(Ok(_)))),
+                        };
+                        match outcome {
+                            Ok(true) => {}
+                            Ok(false) => tally.failed += 1,
+                            Err(AdmitError::Saturated) => {
+                                // counted by the front door; back off a beat
+                                std::thread::yield_now();
+                            }
+                            Err(AdmitError::Closed) => break,
+                        }
+                    }
+                    tally
+                })
+            })
+            .collect();
+        let mut total = Tally::default();
+        for h in handles {
+            total.add(h.join().expect("load client panicked"));
+        }
+        total
+    })
+}
+
+/// Open loop: one pacer fires at `cfg.rps` regardless of completions,
+/// catching up after lag; receivers are dropped (completions are
+/// accounted by the front door's callbacks).
+fn run_open(front: &FrontDoor, cfg: &LoadConfig, factory: &RequestFactory) -> Tally {
+    let interval = Duration::from_nanos((1_000_000_000 / cfg.rps.max(1)).max(1));
+    let start = Instant::now();
+    let deadline = deadline_after(cfg.duration);
+    let mut next = start;
+    let mut rng = Rng::new(cfg.seed ^ 0xa5a5_a5a5_a5a5_a5a5);
+    let mut tally = Tally::default();
+    let mut id = 1u64 << 48;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        if now < next {
+            std::thread::sleep((next - now).min(deadline - now));
+            continue;
+        }
+        id += 1;
+        tally.offered += 1;
+        let class = cfg.mix.pick(&mut rng);
+        let outcome = match factory.make(class, id, &mut rng) {
+            Request::Job(job) => front.try_submit(job).map(drop),
+            Request::Program(bound) => front.try_submit_program(*bound).map(drop),
+        };
+        if outcome == Err(AdmitError::Closed) {
+            break;
+        }
+        next += interval;
+    }
+    tally
+}
+
+/// Run one load experiment: start a fresh front door, drive it in
+/// `mode` for `cfg.duration`, drain, shut down, and report.
+pub fn run<F>(
+    mode: LoopMode,
+    front_cfg: FrontConfig,
+    make_backend: F,
+    cfg: &LoadConfig,
+) -> anyhow::Result<LoadReport>
+where
+    F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+{
+    let front = FrontDoor::start(front_cfg.clone(), make_backend)?;
+    drive(mode, front, front_cfg, cfg)
+}
+
+/// [`run`] with a [`BackendKind`] (the `mvap serve` path).
+pub fn run_kind(
+    mode: LoopMode,
+    front_cfg: FrontConfig,
+    kind: BackendKind,
+    artifacts_dir: std::path::PathBuf,
+    cfg: &LoadConfig,
+) -> anyhow::Result<LoadReport> {
+    let front = FrontDoor::start_kind(front_cfg.clone(), kind, artifacts_dir)?;
+    drive(mode, front, front_cfg, cfg)
+}
+
+fn drive(
+    mode: LoopMode,
+    front: FrontDoor,
+    front_cfg: FrontConfig,
+    cfg: &LoadConfig,
+) -> anyhow::Result<LoadReport> {
+    let factory = RequestFactory::new(cfg);
+    let started = Instant::now();
+    let tally = match mode {
+        LoopMode::Closed => run_closed(&front, cfg, &factory),
+        LoopMode::Open => run_open(&front, cfg, &factory),
+    };
+    // The run is over: wait for in-flight work, then include the drain in
+    // the wall clock (shed-heavy open-loop runs drain almost instantly).
+    let drained = front.drain(Duration::from_secs(30));
+    let wall = started.elapsed();
+    let (stats, engine, _per_shard) = front.shutdown();
+    anyhow::ensure!(
+        drained && stats.in_flight == 0,
+        "load run failed to drain: {} requests still in flight",
+        stats.in_flight
+    );
+    Ok(LoadReport {
+        mode,
+        shards: front_cfg.shard.shards,
+        flush_after: front_cfg.shard.flush_after,
+        offered: tally.offered,
+        admitted: stats.admitted,
+        completed: stats.completed,
+        shed: stats.shed,
+        failed: tally.failed,
+        wall,
+        total: stats.total_latency(),
+        per_class: stats.per_class,
+        engine,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeBackend;
+    use crate::coordinator::ShardConfig;
+
+    fn native() -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+    }
+
+    #[test]
+    fn mix_parses_and_rejects() {
+        assert_eq!(Mix::parse("4:2:2:1:1").unwrap(), Mix::default());
+        assert_eq!(Mix::parse("1:0:0:0:0").unwrap().weights, [1, 0, 0, 0, 0]);
+        assert!(Mix::parse("1:2:3").is_err(), "wrong arity");
+        assert!(Mix::parse("1:2:3:4:x").is_err(), "non-integer");
+        assert!(Mix::parse("0:0:0:0:0").is_err(), "all-zero");
+    }
+
+    #[test]
+    fn mix_pick_respects_zero_weights() {
+        let mix = Mix::parse("0:0:5:0:0").unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            assert_eq!(mix.pick(&mut rng), WorkClass::Mac);
+        }
+        // every positive-weight class appears eventually
+        let mix = Mix::default();
+        let mut seen = [false; 5];
+        for _ in 0..2000 {
+            seen[mix.pick(&mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "seen={seen:?}");
+    }
+
+    /// Short closed-loop smoke: everything offered completes, latency
+    /// samples land, and the report is self-consistent.
+    #[test]
+    fn closed_loop_smoke() {
+        let cfg = LoadConfig {
+            duration: Duration::from_millis(150),
+            clients: 4,
+            rows: 4,
+            digits: 4,
+            ..LoadConfig::default()
+        };
+        let front_cfg = FrontConfig {
+            max_in_flight: 64,
+            shard: ShardConfig {
+                shards: 2,
+                flush_after: Duration::from_micros(500),
+                ..ShardConfig::default()
+            },
+        };
+        let report = run(LoopMode::Closed, front_cfg, native, &cfg).unwrap();
+        assert_eq!(report.mode, LoopMode::Closed);
+        assert!(report.completed > 0, "report: {report:?}");
+        assert_eq!(report.completed, report.admitted);
+        assert_eq!(report.total.count(), report.completed);
+        assert_eq!(report.failed, 0);
+        assert!(report.achieved_rps() > 0.0);
+        // engine-side histogram saw the same requests
+        assert_eq!(report.engine.latency.count(), report.completed);
+        assert!(!report.json_entries().is_empty());
+        let mut table = crate::util::Table::new("t");
+        report.table_rows(&mut table);
+        assert!(!table.is_empty());
+    }
+
+    /// Short open-loop smoke: offered ≈ rps × duration, and
+    /// accepted + shed accounts for every offer.
+    #[test]
+    fn open_loop_smoke() {
+        let cfg = LoadConfig {
+            duration: Duration::from_millis(200),
+            rps: 500,
+            rows: 4,
+            digits: 4,
+            ..LoadConfig::default()
+        };
+        let front_cfg = FrontConfig { max_in_flight: 256, ..FrontConfig::default() };
+        let report = run(LoopMode::Open, front_cfg, native, &cfg).unwrap();
+        assert_eq!(report.mode, LoopMode::Open);
+        assert!(report.offered > 0);
+        // pacing: can't offer more than rps × duration (plus one tick)
+        assert!(report.offered <= 500 / 5 + 2, "offered={}", report.offered);
+        assert_eq!(report.admitted + report.shed, report.offered);
+        assert_eq!(report.completed, report.admitted, "admitted work always completes");
+        assert_eq!(report.total.count(), report.completed);
+    }
+}

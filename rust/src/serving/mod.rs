@@ -1,0 +1,26 @@
+//! The production serving layer: front door, latency SLOs, load
+//! generation.
+//!
+//! The paper's AP is a throughput engine; this module measures and
+//! protects it *as a service*:
+//!
+//! * [`histogram`] — [`LatencyHistogram`], a streaming HDR-style
+//!   log-linear histogram with p50/p95/p99 extraction (~3% relative
+//!   error), mergeable across shards. Lives inside every shard's
+//!   [`crate::coordinator::Metrics`].
+//! * [`front`] — [`FrontDoor`], the MPMC admission edge over
+//!   [`crate::coordinator::ShardedService`]: a hard in-flight cap,
+//!   shed-with-error backpressure (never a panic, never an unbounded
+//!   queue), and per-[`WorkClass`] latency capture via the shard
+//!   workers' completion callbacks.
+//! * [`loadgen`] — closed- and open-loop load generation over mixed
+//!   job/program workloads ([`Mix`]), reporting latency/throughput
+//!   curves per shard-count and flush-policy setting (`mvap serve`).
+
+pub mod histogram;
+pub mod front;
+pub mod loadgen;
+
+pub use front::{AdmitError, FrontConfig, FrontDoor, FrontStats, WorkClass};
+pub use histogram::{LatencyHistogram, SloSnapshot};
+pub use loadgen::{LoadConfig, LoadReport, LoopMode, Mix};

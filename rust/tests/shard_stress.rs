@@ -14,7 +14,7 @@
 //! Replay a failing case with `MVAP_PROP_SEED=0x… cargo test -q --test
 //! shard_stress` (the seed is printed in the failure message).
 
-use mvap::coordinator::{Job, NativeBackend, OpKind, ShardConfig, ShardedService};
+use mvap::coordinator::{Job, NativeBackend, OpKind, ShardConfig, ShardedService, SubmitError};
 use mvap::mvl::{Radix, Word};
 use mvap::program::{builtin, reference, BoundProgram};
 use mvap::util::prop::{forall, Config};
@@ -92,7 +92,10 @@ fn producers_race_submissions_against_flushes_and_steals() {
                             let bound =
                                 BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true)
                                     .unwrap();
-                            prog_rx.push((svc.submit_program(bound), want));
+                            prog_rx.push((
+                                svc.submit_program(bound).expect("service open"),
+                                want,
+                            ));
                             programs += 1;
                         } else {
                             // few distinct digit widths → few signatures →
@@ -100,7 +103,7 @@ fn producers_race_submissions_against_flushes_and_steals() {
                             let digits = 3 + 2 * rng.index(2);
                             let rows = 1 + rng.index(60);
                             let (job, expect) = add_job(id, &mut rng, rows, digits);
-                            job_rx.push((svc.submit(job), id, expect));
+                            job_rx.push((svc.submit(job).expect("service open"), id, expect));
                             jobs += 1;
                         }
                     }
@@ -148,6 +151,72 @@ fn producers_race_submissions_against_flushes_and_steals() {
     });
 }
 
+/// The submit-after-shutdown race this PR de-panics: producers hammer
+/// `submit` while the main thread closes the service mid-stream. Before
+/// the fix this was an `assert!` panic inside the queue; now racing
+/// producers get `Err(SubmitError::Closed)`, and the drain-before-Closed
+/// guarantee still delivers a correct reply for everything accepted.
+#[test]
+fn close_races_active_producers_without_panicking() {
+    forall(Config::cases(3), |rng| {
+        let cfg = ShardConfig {
+            shards: 2,
+            queue_depth: 2 + rng.index(3),
+            max_batch_jobs: 4,
+            max_batch_rows: 256,
+            flush_after: Duration::from_micros(200),
+            steal: rng.chance(0.5),
+        };
+        let svc = ShardedService::start(cfg, || {
+            Ok(Box::new(NativeBackend::default()) as _)
+        })
+        .unwrap();
+        let producers = 2 + rng.index(3);
+        let seeds: Vec<u64> = (0..producers).map(|_| rng.next_u64()).collect();
+        let close_after = Duration::from_micros(500 + rng.next_u64() % 2000);
+        let accepted: u64 = std::thread::scope(|scope| {
+            let handles: Vec<_> = seeds
+                .into_iter()
+                .enumerate()
+                .map(|(p, seed)| {
+                    let svc = &svc;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(seed);
+                        let mut accepted = Vec::new();
+                        for i in 0..200u64 {
+                            let id = ((p as u64) << 32) | i;
+                            let rows = 1 + rng.index(8);
+                            let (job, expect) = add_job(id, &mut rng, rows, 4);
+                            match svc.submit(job) {
+                                Ok(rx) => accepted.push((rx, id, expect)),
+                                Err(SubmitError::Closed) => break,
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            }
+                        }
+                        let n = accepted.len() as u64;
+                        for (rx, id, expect) in accepted {
+                            let res = rx
+                                .recv_timeout(LOST)
+                                .unwrap_or_else(|_| panic!("job {id} lost across close"))
+                                .unwrap();
+                            assert_eq!(res.values, expect, "job {id}");
+                        }
+                        n
+                    })
+                })
+                .collect();
+            // let the producers build up steam, then slam the door
+            std::thread::sleep(close_after);
+            svc.close();
+            handles.into_iter().map(|h| h.join().expect("producer panicked")).sum()
+        });
+        // conservation across the race: exactly the accepted submissions
+        // executed — none lost in the close, none executed twice
+        let (agg, _) = svc.shutdown();
+        assert_eq!(agg.jobs, accepted, "accepted-before-close equals executed");
+    });
+}
+
 /// Shutdown during a drain race: close the service the moment the last
 /// submission is accepted. The drain-before-Closed queue guarantee means
 /// every reply must still arrive.
@@ -173,7 +242,7 @@ fn shutdown_races_inflight_work_without_loss() {
         for id in 0..n as u64 {
             let rows = 1 + rng.index(20);
             let (job, expect) = add_job(id, rng, rows, 4);
-            pending.push((svc.submit(job), id, expect));
+            pending.push((svc.submit(job).expect("service open"), id, expect));
         }
         // immediate shutdown: queued + batched work must drain, not drop
         let (agg, _) = svc.shutdown();
