@@ -8,11 +8,15 @@
 #   1. cargo build --release        (tier-1, part 1)
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
 #   3. fixed-seed reproduction      (MVAP_PROP_SEED pins every property
-#                                    sweep of the reduce and program
-#                                    differential suites to one replayable
-#                                    case — proves the replay knob stays
-#                                    wired; any failing sweep prints the
-#                                    same knob + seed)
+#                                    sweep of the reduce, program and
+#                                    parallel differential suites to one
+#                                    replayable case — proves the replay
+#                                    knob stays wired; any failing sweep
+#                                    prints the same knob + seed. The
+#                                    parallel suite includes the
+#                                    thread-count-invariance property:
+#                                    values/stats/energy/delay identical
+#                                    across threads 1..8)
 #   4. mvap modelcheck              (exhaustive model check of the shard
 #                                    coordinator machine: every interleaving
 #                                    of the bounded scenarios, no-loss /
@@ -31,12 +35,18 @@
 #                                    exercised with optimizations on)
 #   7. cargo bench --no-run         (benches must keep compiling)
 #   8. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_3/4/5.json at the
+#                                    recorded to BENCH_3/4/5/8.json at the
 #                                    repo root — the perf trajectory
 #                                    artifacts, each filtered to its PR's
 #                                    benches of record; FAILS LOUDLY if any
 #                                    BENCH_*.json holds zero results, as
-#                                    happened to BENCH_3.json)
+#                                    happened to BENCH_3.json. BENCH_8.json
+#                                    then goes through tools/perf_gate.py:
+#                                    4-thread kernel application at 256k
+#                                    rows must be >= 2x the 1-thread p50
+#                                    (skipped loudly on < 4-CPU machines),
+#                                    and 1-thread must stay within 10% of
+#                                    the sequential path)
 #   9. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
 #  10. cargo doc --no-deps          (warnings as errors; the crate also denies
@@ -54,15 +64,16 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program differential suites)"
-MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test program_differential
+echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program + parallel differential suites)"
+MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test program_differential \
+    --test parallel_differential
 
 echo "==> mvap modelcheck (exhaustive shard-coordinator verification)"
 cargo run --release --quiet -- modelcheck --dot ../docs/shard_machine.dot
 
-echo "==> mvap serve smoke (closed + open loop, recording BENCH_7.json)"
+echo "==> mvap serve smoke (closed + open loop, 1- and 4-thread tiles, recording BENCH_7.json)"
 cargo run --release --quiet -- serve --clients 8 --rps 2000 --duration 0.5 \
-    --shards 2,4 --flush-us 500,2000 --req-rows 8 --digits 6 \
+    --shards 2,4 --flush-us 500,2000 --threads 1,4 --req-rows 8 --digits 6 \
     --json ../BENCH_7.json
 if ! grep -q '"name":' ../BENCH_7.json; then
     echo "ERROR: serve smoke recorded zero latency curves in BENCH_7.json" >&2
@@ -76,17 +87,23 @@ if [[ "$fast" == "0" ]]; then
     echo "==> cargo bench --no-run (compile gate)"
     cargo bench --no-run
 
-    echo "==> cargo bench -- --quick (recording BENCH_3/4/5.json)"
+    echo "==> cargo bench -- --quick (recording BENCH_3/4/5/8.json)"
     cargo bench --bench bench_main -- --quick --json ../BENCH_3.json \
         hot/fast_path hot/kernel_cache
     cargo bench --bench bench_main -- --quick --json ../BENCH_4.json hot/reduce
     cargo bench --bench bench_main -- --quick --json ../BENCH_5.json hot/
+    cargo bench --bench bench_main -- --quick --json ../BENCH_8.json \
+        hot/parallel_apply hot/arena hot/fast_path hot/kernel_cache hot/reduce
     for trajectory in ../BENCH_*.json; do
         if ! grep -q '"name":' "$trajectory"; then
             echo "ERROR: quick-bench stage recorded zero results in ${trajectory#../}" >&2
             exit 1
         fi
     done
+
+    echo "==> perf-regression gate (tools/perf_gate.py over BENCH_8.json)"
+    python3 ../tools/perf_gate.py ../BENCH_8.json ../BENCH_3.json ../BENCH_4.json \
+        ../BENCH_5.json ../BENCH_7.json
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

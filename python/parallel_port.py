@@ -1,0 +1,181 @@
+"""Exact Python port of the data-parallel word-block execution layer.
+
+Mirrors ``rust/src/cam/parallel.rs`` (the ``word_cuts`` partitioning
+rule) and the block-level semantics of
+``BitSlicedArray::apply_states_parallel`` in
+``rust/src/cam/bitsliced.rs``: per-block classification over contiguous
+64-row word ranges, an all-blocks don't-care rendezvous (any block
+aborts the whole application with nothing written), per-block partial
+bucket counts, and the deterministic ascending-block-order reduction
+whose integer sums equal the sequential whole-range popcounts exactly.
+
+The model operates on a plain ``rows x cols`` digit matrix (``None`` =
+don't-care) rather than packed ``u64`` planes: the packing is a layout
+detail; what the port validates is the *partitioning and reduction
+algebra* — that splitting rows into word blocks and summing per-block
+partials is observably identical to the sequential pass, for any cut
+vector ``word_cuts`` can produce.
+"""
+
+WORD_ROWS = 64  # rows per plane word, fixed by the u64 packing
+DEFAULT_MIN_BLOCK_WORDS = 64
+
+
+def word_cuts(threads, words, min_block_words=DEFAULT_MIN_BLOCK_WORDS):
+    """Port of ``Parallelism::word_cuts``: cumulative block end offsets
+    (last == ``words``), or ``None`` when the application must run
+    sequentially. Blocks are as even as possible; the first
+    ``words % blocks`` blocks get one extra word. Depends only on
+    ``(threads, min_block_words, words)`` — never on the data."""
+    min_words = max(min_block_words, 1)
+    blocks = min(threads, words // min_words)
+    if blocks < 2:
+        return None
+    base, extra = divmod(words, blocks)
+    cuts, end = [], 0
+    for b in range(blocks):
+        end += base + (1 if b < extra else 0)
+        cuts.append(end)
+    assert cuts[-1] == words
+    return cuts
+
+
+def state_of(row_digits, radix):
+    """State id of one row over the compared columns (most-significant
+    column first, like the Rust state decode), or ``None`` if any digit
+    is a don't-care."""
+    sid = 0
+    for d in row_digits:
+        if d is None:
+            return None
+        sid = sid * radix + d
+    return sid
+
+
+def classify_rows(matrix, cols, radix, row_range):
+    """Classify ``row_range`` of the matrix: returns ``(ok, states)``
+    where ``states[i]`` is the state id of row ``row_range[i]``. ``ok``
+    is False (states unspecified) if any row held a don't-care — the
+    block-level abort signal."""
+    states = []
+    for r in row_range:
+        sid = state_of([matrix[r][c] for c in cols], radix)
+        if sid is None:
+            return False, states
+        states.append(sid)
+    return True, states
+
+
+def segment_of(row, bounds):
+    """Index of the first segment whose end bound exceeds ``row``."""
+    for i, b in enumerate(bounds):
+        if row < b:
+            return i
+    raise ValueError(f"row {row} beyond the last bound {bounds[-1]}")
+
+
+def apply_states_sequential(matrix, cols, radix, plan, bounds):
+    """The sequential oracle: classify every row, abort on any
+    don't-care (matrix unchanged), else count per-(segment, state) and
+    rewrite the compared columns from ``plan[state]``. Returns
+    ``(ok, counts)`` with ``counts`` flattened ``[segment][state]``."""
+    rows = len(matrix)
+    num_states = radix ** len(cols)
+    ok, states = classify_rows(matrix, cols, radix, range(rows))
+    if not ok:
+        return False, None
+    counts = [0] * (len(bounds) * num_states)
+    for r, sid in enumerate(states):
+        counts[segment_of(r, bounds) * num_states + sid] += 1
+        for c, d in zip(cols, plan[sid]):
+            matrix[r][c] = d
+    return True, counts
+
+
+def apply_states_parallel(matrix, cols, radix, plan, bounds, cuts):
+    """The word-block execution model. Phase 1: every block classifies
+    its own word range into private state lists and an abort flag.
+    Barrier. Phase 2: if any block aborted, the whole application
+    returns ``(False, None)`` with the matrix untouched; otherwise each
+    block counts its partial ``[segment][state]`` populations and
+    commits its merge, and the partials reduce in ascending block order.
+    Every observable must equal ``apply_states_sequential``."""
+    rows = len(matrix)
+    num_states = radix ** len(cols)
+    nsegs = len(bounds)
+
+    block_rows, block_states, all_ok = [], [], True
+    for b, end in enumerate(cuts):
+        start = 0 if b == 0 else cuts[b - 1]
+        rng = range(start * WORD_ROWS, min(end * WORD_ROWS, rows))
+        ok, states = classify_rows(matrix, cols, radix, rng)
+        block_rows.append(rng)
+        block_states.append(states)
+        all_ok = all_ok and ok
+
+    # barrier: the don't-care rendezvous
+    if not all_ok:
+        return False, None
+
+    partials = []
+    for rng, states in zip(block_rows, block_states):
+        counts = [0] * (nsegs * num_states)
+        for r, sid in zip(rng, states):
+            counts[segment_of(r, bounds) * num_states + sid] += 1
+            for c, d in zip(cols, plan[sid]):
+                matrix[r][c] = d
+        partials.append(counts)
+
+    # deterministic reduction, ascending block order
+    counts = [0] * (nsegs * num_states)
+    for partial in partials:
+        for i, c in enumerate(partial):
+            counts[i] += c
+    return True, counts
+
+
+def copy_rows_sequential(matrix, src_col, src_row, dst_col, dst_row, count):
+    """Row-range column copy with memmove semantics (extract the source
+    digits first, then write — overlap-safe), the sequential oracle for
+    the plane-split decomposition."""
+    moved = [matrix[src_row + i][src_col] for i in range(count)]
+    for i, d in enumerate(moved):
+        matrix[dst_row + i][dst_col] = d
+
+
+def copy_rows_plane_split(matrix, radix, src_col, src_row, dst_col, dst_row, count):
+    """Port of ``BitSlicedArray::copy_rows_parallel``: decompose the two
+    columns into ``planes`` digit bit-planes plus the present plane,
+    run the extract/merge move on every plane *independently* (each
+    plane task sees only its own bits, as the scoped tasks do), then
+    recompose digits. Must equal ``copy_rows_sequential`` bit for bit —
+    including don't-care rows, which travel as present=0."""
+    planes = max(1, (radix - 1).bit_length())
+    rows = len(matrix)
+
+    def plane_bits(col, p):
+        out = []
+        for r in range(rows):
+            d = matrix[r][col]
+            out.append(0 if d is None else (d >> p) & 1)
+        return out
+
+    def present_bits(col):
+        return [0 if matrix[r][col] is None else 1 for r in range(rows)]
+
+    # each task: extract the source bit range, then merge into the dest
+    new_planes = []
+    for p in range(planes):
+        bits = plane_bits(dst_col, p)
+        moved = plane_bits(src_col, p)[src_row : src_row + count]
+        bits[dst_row : dst_row + count] = moved
+        new_planes.append(bits)
+    present = present_bits(dst_col)
+    moved = present_bits(src_col)[src_row : src_row + count]
+    present[dst_row : dst_row + count] = moved
+
+    for r in range(dst_row, dst_row + count):
+        if present[r] == 0:
+            matrix[r][dst_col] = None
+        else:
+            matrix[r][dst_col] = sum(new_planes[p][r] << p for p in range(planes))

@@ -1,0 +1,183 @@
+"""Validation suite for the data-parallel execution port (parallel_port.py).
+
+Run directly: ``python3 python/tests/test_parallel_port.py`` or via
+pytest. Four layers:
+
+  1. structural properties of ``word_cuts`` — exact coverage, block
+     evenness (sizes differ by at most one word), the sequential
+     ``None`` conditions, and the ``min_block_words`` floor — over
+     exhaustive small sweeps mirroring the Rust unit tests in
+     ``rust/src/cam/parallel.rs``;
+  2. the partial-stats reduction: block-partitioned classify + count +
+     merge is observably identical to the sequential pass (counts,
+     written matrix) for randomized radices 2-5, word-boundary and
+     mid-word row counts, random segment bounds, and every cut vector;
+  3. don't-care abort agreement: whenever any block sees a don't-care,
+     both executions abort with the matrix untouched;
+  4. the plane-split ``copy_rows`` decomposition equals the sequential
+     memmove copy, don't-care rows included.
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from parallel_port import (  # noqa: E402
+    WORD_ROWS,
+    apply_states_parallel,
+    apply_states_sequential,
+    copy_rows_plane_split,
+    copy_rows_sequential,
+    word_cuts,
+)
+
+SEED = int(os.environ.get("MVAP_PROP_SEED", "0xd1ff"), 0)
+
+
+def test_word_cuts_structure():
+    # mirrors `cuts_are_even_exhaustive` in rust/src/cam/parallel.rs
+    for threads in range(1, 10):
+        for words in range(1, 41):
+            cuts = word_cuts(threads, words, min_block_words=1)
+            if cuts is None:
+                assert min(threads, words) < 2, (threads, words)
+                continue
+            assert 2 <= len(cuts) <= min(threads, words)
+            assert cuts[-1] == words
+            sizes = [b - a for a, b in zip([0] + cuts, cuts)]
+            assert max(sizes) - min(sizes) <= 1, (threads, words, cuts)
+            assert min(sizes) >= 1
+
+
+def test_word_cuts_sequential_conditions():
+    # one thread never cuts, regardless of array size
+    assert word_cuts(1, 1 << 20) is None
+    # min_block_words floors the block count (Rust `min_block_words_floors_block_count`)
+    assert word_cuts(8, 7, min_block_words=4) is None
+    assert word_cuts(8, 11, min_block_words=4) == [6, 11]
+    assert len(word_cuts(8, 64, min_block_words=4)) == 8
+    # below 2 * default min_block_words the default config stays sequential
+    assert word_cuts(8, 127) is None
+    assert word_cuts(8, 128) is not None
+
+
+def random_case(rng, dont_care_p):
+    """One randomized kernel application: a digit matrix, compared
+    columns, a random state->digits rewrite plan, and segment bounds."""
+    radix = rng.randint(2, 5)
+    k = rng.randint(1, 2)
+    cols_total = k + rng.randint(0, 2)
+    # bias rows onto word boundaries, like the Rust `boundary_rows`
+    rows = rng.choice(
+        [
+            rng.randint(1, WORD_ROWS - 1),
+            WORD_ROWS * rng.randint(1, 6),
+            WORD_ROWS * rng.randint(1, 6) + rng.randint(1, 5),
+        ]
+    )
+    matrix = [
+        [
+            None if rng.random() < dont_care_p else rng.randrange(radix)
+            for _ in range(cols_total)
+        ]
+        for _ in range(rows)
+    ]
+    cols = rng.sample(range(cols_total), k)
+    plan = [
+        tuple(rng.randrange(radix) for _ in range(k)) for _ in range(radix**k)
+    ]
+    nsegs = rng.randint(1, 4)
+    bounds = sorted(rng.randint(0, rows) for _ in range(nsegs - 1)) + [rows]
+    return radix, rows, matrix, cols, plan, bounds
+
+
+def every_cut_vector(rng, rows):
+    """All distinct cut vectors the partitioning rule can produce for
+    this row count, across thread counts 2/3/8 and block floors."""
+    words = (rows + WORD_ROWS - 1) // WORD_ROWS
+    seen, out = set(), []
+    for threads in (2, 3, 8):
+        for min_words in (1, 2):
+            cuts = word_cuts(threads, words, min_block_words=min_words)
+            if cuts and tuple(cuts) not in seen:
+                seen.add(tuple(cuts))
+                out.append(cuts)
+    return out
+
+
+def test_partial_stats_reduction_matches_sequential():
+    rng = random.Random(SEED)
+    checked = 0
+    for _ in range(300):
+        radix, rows, matrix, cols, plan, bounds = random_case(rng, dont_care_p=0.0)
+        seq = [row[:] for row in matrix]
+        ok_seq, counts_seq = apply_states_sequential(seq, cols, radix, plan, bounds)
+        assert ok_seq  # no don't-cares in this sweep
+        assert sum(counts_seq) == rows
+        for cuts in every_cut_vector(rng, rows):
+            par = [row[:] for row in matrix]
+            ok_par, counts_par = apply_states_parallel(
+                par, cols, radix, plan, bounds, cuts
+            )
+            assert ok_par
+            assert counts_par == counts_seq, (radix, rows, cols, bounds, cuts)
+            assert par == seq, (radix, rows, cols, cuts)
+            checked += 1
+    assert checked > 100  # the sweep must actually exercise multi-block cuts
+
+
+def test_dont_care_abort_agreement():
+    rng = random.Random(SEED ^ 0xABBA)
+    aborted = 0
+    for _ in range(300):
+        radix, rows, matrix, cols, plan, bounds = random_case(rng, dont_care_p=0.05)
+        seq = [row[:] for row in matrix]
+        ok_seq, counts_seq = apply_states_sequential(seq, cols, radix, plan, bounds)
+        for cuts in every_cut_vector(rng, rows):
+            par = [row[:] for row in matrix]
+            ok_par, counts_par = apply_states_parallel(
+                par, cols, radix, plan, bounds, cuts
+            )
+            assert ok_par == ok_seq, (radix, rows, cols, cuts)
+            if not ok_par:
+                # abort leaves both matrices untouched
+                assert par == matrix and seq == matrix
+                aborted += 1
+            else:
+                assert counts_par == counts_seq
+                assert par == seq
+    assert aborted > 0  # the don't-care density must trigger some aborts
+
+
+def test_copy_rows_plane_split_matches_sequential():
+    rng = random.Random(SEED ^ 0xC0B4)
+    for _ in range(300):
+        radix = rng.randint(2, 5)
+        rows = rng.choice([WORD_ROWS, WORD_ROWS + 1, 3 * WORD_ROWS, 200])
+        cols = rng.randint(2, 4)
+        matrix = [
+            [
+                None if rng.random() < 0.1 else rng.randrange(radix)
+                for _ in range(cols)
+            ]
+            for _ in range(rows)
+        ]
+        count = rng.randint(0, rows)
+        src_col, dst_col = rng.randrange(cols), rng.randrange(cols)
+        src_row = rng.randint(0, rows - count)
+        dst_row = rng.randint(0, rows - count)
+        seq = [row[:] for row in matrix]
+        copy_rows_sequential(seq, src_col, src_row, dst_col, dst_row, count)
+        par = [row[:] for row in matrix]
+        copy_rows_plane_split(par, radix, src_col, src_row, dst_col, dst_row, count)
+        assert par == seq, (radix, rows, src_col, src_row, dst_col, dst_row, count)
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"{name}: ok")
+    print("parallel_port validation passed.")

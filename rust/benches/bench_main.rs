@@ -12,8 +12,10 @@
 mod harness;
 
 use harness::{bench, black_box};
-use mvap::ap::{add_vectors, adder_lut, load_operands, Ap, ExecMode, KernelCache, LutKernel};
-use mvap::cam::{BitSlicedArray, CamArray, StorageKind};
+use mvap::ap::{
+    add_vectors, adder_lut, load_operands, Ap, ApArena, ExecMode, KernelCache, LutKernel,
+};
+use mvap::cam::{BitSlicedArray, CamArray, Parallelism, StorageKind};
 use mvap::circuit::{CellTech, MatchClass, MatchlineSim};
 use mvap::coordinator::{
     Backend, EngineService, Job, NativeBackend, OpKind, PjrtBackend, ShardConfig,
@@ -231,6 +233,93 @@ fn main() {
                 },
             ));
         }
+    }
+    if run("hot/parallel_apply") {
+        // Data-parallel word-block execution of the bit-sliced fast path
+        // (the PR-8 tentpole): the same evolving-array kernel application
+        // as hot/fast_path_bitsliced, at 1/2/4/8 scoped threads plus the
+        // plain sequential constructor as the baseline of record. `seq`
+        // and `1t` run the identical code path (a 1-thread Parallelism
+        // never partitions), so their delta bounds the knob's overhead;
+        // `ci.sh` gates 4t >= 2x seq at 256k rows via tools/perf_gate.py.
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        let mode = ExecMode::Blocked;
+        let lut = adder_lut(radix, mode);
+        let kernel = LutKernel::compile(&lut, mode);
+        for &rows in &[16 * 1024usize, 256 * 1024, 1024 * 1024] {
+            let mut rng = Rng::new(18);
+            let a = random_words(&mut rng, rows, p, radix);
+            let b = random_words(&mut rng, rows, p, radix);
+            let variants: [(&str, Option<usize>); 5] = [
+                ("seq", None),
+                ("1t", Some(1)),
+                ("2t", Some(2)),
+                ("4t", Some(4)),
+                ("8t", Some(8)),
+            ];
+            for (tag, threads) in variants {
+                let (storage, layout) = mvap::ap::load_operands_storage(
+                    StorageKind::BitSliced,
+                    radix,
+                    &a,
+                    &b,
+                    None,
+                );
+                let positions = layout.positions();
+                let mut ap = Ap::with_storage(storage);
+                if let Some(t) = threads {
+                    ap = ap.with_parallelism(Parallelism::new(t));
+                }
+                results.push(bench(
+                    &format!("hot/parallel_apply_{tag}_{rows}rows"),
+                    Some((rows * p) as u64),
+                    || {
+                        ap.apply_lut_multi_fast_kernel(&lut, &positions, mode, &kernel);
+                        black_box(ap.stats().rows_written);
+                    },
+                ));
+            }
+        }
+    }
+    if run("hot/arena") {
+        // Per-call scratch hoisting: both variants clone the storage and
+        // build a fresh Ap each iteration (identical fixed cost), but
+        // `reuse` recycles the ApArena across iterations the way
+        // NativeBackend does, so the delta is exactly the per-call
+        // allocation of write-enable + classification scratch.
+        let radix = Radix::TERNARY;
+        let (rows, p) = (16 * 1024usize, 8usize);
+        let mode = ExecMode::Blocked;
+        let lut = adder_lut(radix, mode);
+        let kernel = LutKernel::compile(&lut, mode);
+        let mut rng = Rng::new(19);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let (storage, layout) =
+            mvap::ap::load_operands_storage(StorageKind::BitSliced, radix, &a, &b, None);
+        let positions = layout.positions();
+        results.push(bench(
+            &format!("hot/arena_fresh_{rows}rows"),
+            Some((rows * p) as u64),
+            || {
+                let mut ap = Ap::with_storage(storage.clone());
+                ap.apply_lut_multi_fast_kernel(&lut, &positions, mode, &kernel);
+                black_box(ap.stats().rows_written);
+            },
+        ));
+        let mut arena = ApArena::default();
+        results.push(bench(
+            &format!("hot/arena_reuse_{rows}rows"),
+            Some((rows * p) as u64),
+            || {
+                let mut ap =
+                    Ap::with_storage_arena(storage.clone(), std::mem::take(&mut arena));
+                ap.apply_lut_multi_fast_kernel(&lut, &positions, mode, &kernel);
+                black_box(ap.stats().rows_written);
+                arena = ap.into_arena();
+            },
+        ));
     }
     if run("hot/kernel_cache") {
         // kernel compilation (cold) vs signature-keyed lookup (warm)

@@ -10,7 +10,7 @@
 
 use super::kernel::LutKernel;
 use super::stats::ApStats;
-use crate::cam::{popcount_range, CamArray, CamStorage, CompareOutcome};
+use crate::cam::{popcount_range, BlockScratch, CamArray, CamStorage, CompareOutcome, Parallelism};
 use crate::lutgen::Lut;
 use crate::mvl::DONT_CARE;
 
@@ -38,6 +38,12 @@ pub struct Ap {
     /// loops so multi-digit programs allocate once per `Ap`, not once per
     /// digit position.
     scratch: Scratch,
+    /// Data-parallel execution knob for the bit-sliced hot path.
+    /// `Parallelism::sequential()` (the constructor default) reproduces
+    /// the single-threaded path bit for bit.
+    par: Parallelism,
+    /// Host-parallelism counters, drained by [`Self::take_parallel_events`].
+    par_events: ParallelEvents,
 }
 
 /// Scratch buffers for the state-bucketing fast path.
@@ -52,6 +58,59 @@ struct Scratch {
     masks: Vec<u64>,
     /// Plane-native classification working buffers.
     classify: crate::cam::ClassifyScratch,
+    /// Per-block working buffers of the data-parallel path, one per word
+    /// block ([`crate::cam::BitSlicedArray::apply_states_parallel`]).
+    par_blocks: Vec<BlockScratch>,
+}
+
+/// Host-execution parallelism counters, drained by the coordinator into
+/// [`crate::coordinator::Metrics`]. Deliberately **not** part of
+/// [`ApStats`]: these describe how the *simulator* ran (thread scopes
+/// entered, word blocks dispatched, thread capacity offered), never what
+/// the modeled hardware did — so every differential suite keeps comparing
+/// `ApStats` bit-for-bit across thread counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ParallelEvents {
+    /// Scoped-thread scopes entered (one per parallel kernel application).
+    pub scopes: u64,
+    /// Word blocks dispatched across all scopes.
+    pub blocks: u64,
+    /// Thread capacity offered (`threads` summed over scopes); `blocks /
+    /// capacity` is the pool-utilization ratio.
+    pub capacity: u64,
+}
+
+impl ParallelEvents {
+    /// Accumulate another drain.
+    pub fn merge(&mut self, other: ParallelEvents) {
+        self.scopes += other.scopes;
+        self.blocks += other.blocks;
+        self.capacity += other.capacity;
+    }
+}
+
+/// Reusable controller allocations — the write-enable register and the
+/// fast-path scratch — detached from a finished [`Ap`] with
+/// [`Ap::into_arena`] and threaded into the next one with
+/// [`Ap::with_storage_arena`], so per-tile execution stops paying
+/// per-call buffer growth (the native backend keeps one arena alive
+/// across every tile it runs).
+#[derive(Clone, Debug, Default)]
+pub struct ApArena {
+    write_enable: Vec<bool>,
+    scratch: Scratch,
+}
+
+/// Row-count threshold for parallel plane-task row movement
+/// ([`Ap::copy_rows`]): below this the per-plane thread spawns cost more
+/// than the word-shift loops they replace.
+pub const COPY_PAR_MIN_ROWS: usize = 65_536;
+
+/// Distinct-columns guard for the data-parallel path: duplicated compare
+/// columns (legal in hand-built pass programs) would alias the per-block
+/// plane windows, so those applications stay sequential.
+fn cols_distinct(cols: &[usize]) -> bool {
+    cols.iter().enumerate().all(|(i, &c)| !cols[..i].contains(&c))
 }
 
 /// Row-at-a-time classification through the storage's `get` dispatch:
@@ -120,15 +179,49 @@ impl Ap {
         Self::with_storage(CamStorage::Scalar(array))
     }
 
-    /// Wrap an array in an explicitly chosen storage backend.
+    /// Wrap an array in an explicitly chosen storage backend. Execution
+    /// is sequential until [`Self::with_parallelism`] says otherwise.
     pub fn with_storage(storage: CamStorage) -> Self {
+        Self::with_storage_arena(storage, ApArena::default())
+    }
+
+    /// [`Self::with_storage`] reusing a detached [`ApArena`]'s buffers —
+    /// the allocation-free per-tile construction path.
+    pub fn with_storage_arena(storage: CamStorage, arena: ApArena) -> Self {
         let rows = storage.rows();
+        let ApArena { mut write_enable, scratch } = arena;
+        write_enable.clear();
+        write_enable.resize(rows, false);
         Ap {
             storage,
             stats: ApStats::default(),
-            write_enable: vec![false; rows],
-            scratch: Scratch::default(),
+            write_enable,
+            scratch,
+            par: Parallelism::sequential(),
+            par_events: ParallelEvents::default(),
         }
+    }
+
+    /// Detach the reusable buffers for the next
+    /// [`Self::with_storage_arena`].
+    pub fn into_arena(self) -> ApArena {
+        ApArena { write_enable: self.write_enable, scratch: self.scratch }
+    }
+
+    /// Set the data-parallel execution knob (builder form).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// The configured data-parallel execution knob.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+
+    /// Take and reset the host-parallelism counters.
+    pub fn take_parallel_events(&mut self) -> ParallelEvents {
+        std::mem::take(&mut self.par_events)
     }
 
     /// The underlying storage.
@@ -139,6 +232,31 @@ impl Ap {
     /// Mutable storage access (initialisation/loading).
     pub fn storage_mut(&mut self) -> &mut CamStorage {
         &mut self.storage
+    }
+
+    /// Plane-native row movement through the storage dispatch, routed to
+    /// scoped-thread per-plane tasks
+    /// ([`crate::cam::CamStorage::copy_rows_par`]) when the configured
+    /// parallelism and the move size warrant it — bit-identical to the
+    /// sequential primitive either way.
+    pub fn copy_rows(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+    ) {
+        if count >= COPY_PAR_MIN_ROWS && self.par.is_parallel() {
+            if let CamStorage::BitSliced(arr) = &self.storage {
+                self.par_events.scopes += 1;
+                self.par_events.blocks += (arr.digit_plane_count() + 1) as u64;
+                self.par_events.capacity += self.par.threads as u64;
+            }
+            self.storage.copy_rows_par(src_col, src_row, dst_col, dst_row, count, &self.par);
+        } else {
+            self.storage.copy_rows(src_col, src_row, dst_col, dst_row, count);
+        }
     }
 
     /// Statistics accumulated so far.
@@ -309,6 +427,35 @@ impl Ap {
         let nstates = kernel.num_states();
         debug_assert_eq!(nstates, radix.pow(cols.len() as u32), "kernel/LUT shape mismatch");
 
+        // data-parallel plane-native path: classification, bucket counts
+        // and the merge commit in one scoped-thread pass over word blocks
+        if let CamStorage::BitSliced(arr) = &mut self.storage {
+            if cols_distinct(cols) {
+                if let Some(cuts) = self.par.word_cuts(arr.words()) {
+                    self.par_events.scopes += 1;
+                    self.par_events.blocks += cuts.len() as u64;
+                    self.par_events.capacity += self.par.threads as u64;
+                    let ok = arr.apply_states_parallel(
+                        cols,
+                        &mut self.scratch.masks,
+                        &mut self.scratch.classify,
+                        kernel.plan(),
+                        &cuts,
+                        &mut self.scratch.par_blocks,
+                        &mut self.scratch.counts,
+                        None,
+                    );
+                    if ok {
+                        self.record_fast_stats(lut, cols.len(), mode, nstates, kernel);
+                    } else {
+                        // don't-care fallback, same as the sequential path
+                        self.apply_lut(lut, cols, mode);
+                    }
+                    return;
+                }
+            }
+        }
+
         // classification: bucket rows by state id into scratch buffers;
         // fall back if any don't-care appears in a compared column
         let ok = match &self.storage {
@@ -470,6 +617,35 @@ impl Ap {
         let nstates = kernel.num_states();
         debug_assert_eq!(nstates, radix.pow(cols.len() as u32), "kernel/LUT shape mismatch");
 
+        // data-parallel plane-native path: per-block segment-resolved
+        // partial counts reduce to the exact sequential popcounts, so the
+        // per-segment attribution below is unchanged
+        if let CamStorage::BitSliced(arr) = &mut self.storage {
+            if cols_distinct(cols) {
+                if let Some(cuts) = self.par.word_cuts(arr.words()) {
+                    self.par_events.scopes += 1;
+                    self.par_events.blocks += cuts.len() as u64;
+                    self.par_events.capacity += self.par.threads as u64;
+                    let ok = arr.apply_states_parallel(
+                        cols,
+                        &mut self.scratch.masks,
+                        &mut self.scratch.classify,
+                        kernel.plan(),
+                        &cuts,
+                        &mut self.scratch.par_blocks,
+                        &mut self.scratch.counts,
+                        Some(bounds),
+                    );
+                    if ok {
+                        self.record_fast_stats_segmented(lut, cols.len(), mode, kernel, bounds, segs);
+                    }
+                    // on false: nothing recorded or mutated — the caller
+                    // runs the isolated per-segment replays
+                    return ok;
+                }
+            }
+        }
+
         // bucket rows by (segment, state id) into scratch.counts
         let ok = match &self.storage {
             CamStorage::BitSliced(arr) => {
@@ -513,13 +689,39 @@ impl Ap {
             return false;
         }
 
-        // per-segment stats from the per-state tables
+        self.record_fast_stats_segmented(lut, cols.len(), mode, kernel, bounds, segs);
+
+        // array rewrite: masked word merge (bit-sliced) or row scan
+        match &mut self.storage {
+            CamStorage::BitSliced(arr) => {
+                arr.merge_write_states(cols, &self.scratch.masks, kernel.plan());
+            }
+            scalar => rewrite_rowwise(scalar, cols, kernel, &self.scratch.row_state),
+        }
+        true
+    }
+
+    /// Fold one digit position's segment-resolved bucket populations
+    /// (`self.scratch.counts`, flattened `[segment][state]`) into the
+    /// aggregate *and* per-segment statistics — the segmented counterpart
+    /// of [`Self::record_fast_stats`], shared by the sequential and the
+    /// data-parallel path (which produce bit-identical count buffers).
+    fn record_fast_stats_segmented(
+        &mut self,
+        lut: &Lut,
+        width: usize,
+        mode: ExecMode,
+        kernel: &LutKernel,
+        bounds: &[usize],
+        segs: &mut [ApStats],
+    ) {
+        let nstates = kernel.num_states();
         let num_passes = lut.passes.len();
         let write_cycles = match mode {
             ExecMode::NonBlocked => num_passes as u64,
             ExecMode::Blocked => lut.num_groups as u64,
         };
-        let hist_len = cols.len() + 1;
+        let hist_len = width + 1;
         if self.stats.mismatch_hist.len() < hist_len {
             self.stats.mismatch_hist.resize(hist_len, 0);
         }
@@ -558,15 +760,6 @@ impl Ap {
         }
         self.stats.compare_cycles += num_passes as u64;
         self.stats.write_cycles += write_cycles;
-
-        // array rewrite: masked word merge (bit-sliced) or row scan
-        match &mut self.storage {
-            CamStorage::BitSliced(arr) => {
-                arr.merge_write_states(cols, &self.scratch.masks, kernel.plan());
-            }
-            scalar => rewrite_rowwise(scalar, cols, kernel, &self.scratch.row_state),
-        }
-        true
     }
 
     /// Don't-care fallback for segmented execution: replay each segment on
@@ -865,6 +1058,102 @@ mod tests {
         assert_eq!(a.storage().to_digits(), b.storage().to_digits());
         assert_eq!(a.stats(), b.stats());
         assert_eq!(&segs[0], b.stats());
+    }
+
+    /// The data-parallel path is indistinguishable from the sequential
+    /// fast path: contents, aggregate stats, and per-segment stats, across
+    /// thread counts with forced tiny blocks, including planted
+    /// don't-cares (fallback agreement) and mid-word segment bounds.
+    #[test]
+    fn parallel_path_equals_sequential_path() {
+        use crate::cam::{Parallelism, StorageKind};
+        use crate::util::prop::{forall, Config};
+        forall(Config::cases(30), |rng| {
+            let radix = Radix(2 + rng.digit(3));
+            let d = StateDiagram::build(full_add(radix)).unwrap();
+            let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+            let lut = match mode {
+                ExecMode::Blocked => generate_blocked(&d),
+                ExecMode::NonBlocked => generate_non_blocked(&d),
+            };
+            let rows = 65 + rng.index(400);
+            let p = 1 + rng.index(3);
+            let cols = 2 * p + 1;
+            let mut data = vec![0u8; rows * cols];
+            rng.fill_digits(&mut data, radix.n());
+            if rng.chance(0.25) {
+                // exercise the parallel abort + faithful fallback
+                data[rng.index(rows * cols)] = crate::mvl::DONT_CARE;
+            }
+            let positions: Vec<Vec<usize>> = (0..p).map(|d| vec![d, p + d, 2 * p]).collect();
+            let mut bounds: Vec<usize> =
+                (0..rng.index(3)).map(|_| rng.index(rows + 1)).collect();
+            bounds.push(rows);
+            bounds.sort_unstable();
+            let storage = |d: &[u8]| {
+                crate::cam::CamStorage::from_data(StorageKind::BitSliced, radix, rows, cols, d)
+            };
+
+            let mut seq = Ap::with_storage(storage(&data));
+            seq.apply_lut_multi_fast(&lut, &positions, mode);
+            let mut seq_seg = Ap::with_storage(storage(&data));
+            let seq_segs =
+                seq_seg.apply_lut_multi_fast_segmented(&lut, &positions, mode, &bounds);
+
+            for threads in [2, 3, 8] {
+                let par = Parallelism { threads, min_block_words: 1 };
+                let mut ap = Ap::with_storage(storage(&data)).with_parallelism(par);
+                ap.apply_lut_multi_fast(&lut, &positions, mode);
+                assert_eq!(ap.storage().to_digits(), seq.storage().to_digits(), "{threads}t");
+                assert_eq!(ap.stats(), seq.stats(), "{threads}t");
+
+                let mut ap = Ap::with_storage(storage(&data)).with_parallelism(par);
+                let segs = ap.apply_lut_multi_fast_segmented(&lut, &positions, mode, &bounds);
+                assert_eq!(
+                    ap.storage().to_digits(),
+                    seq_seg.storage().to_digits(),
+                    "{threads}t segmented"
+                );
+                assert_eq!(ap.stats(), seq_seg.stats(), "{threads}t segmented");
+                assert_eq!(segs, seq_segs, "{threads}t per-segment stats");
+            }
+        });
+    }
+
+    /// The arena constructor reuses buffers without changing behavior, and
+    /// `--threads 1` (sequential `Parallelism`) never enters a scope.
+    #[test]
+    fn arena_reuse_and_sequential_knob_are_invisible() {
+        use crate::cam::{Parallelism, StorageKind};
+        let d = StateDiagram::build(full_add(Radix::TERNARY)).unwrap();
+        let lut = generate_non_blocked(&d);
+        let mut data = vec![0u8; 100 * 3];
+        crate::util::Rng::new(11).fill_digits(&mut data, 3);
+        let storage = || {
+            crate::cam::CamStorage::from_data(StorageKind::BitSliced, Radix::TERNARY, 100, 3, &data)
+        };
+        let mut fresh = Ap::with_storage(storage());
+        fresh.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+
+        // run one Ap, recycle its arena into a second, identical run
+        let mut warm = Ap::with_storage(storage()).with_parallelism(Parallelism::new(1));
+        warm.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        assert_eq!(warm.take_parallel_events(), ParallelEvents::default(), "1 thread: no scopes");
+        let arena = warm.into_arena();
+        let mut reused = Ap::with_storage_arena(storage(), arena);
+        reused.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        assert_eq!(reused.storage().to_digits(), fresh.storage().to_digits());
+        assert_eq!(reused.stats(), fresh.stats());
+
+        // a genuinely parallel run reports its scopes
+        let mut par = Ap::with_storage(storage())
+            .with_parallelism(Parallelism { threads: 2, min_block_words: 1 });
+        par.apply_lut_fast(&lut, &[0, 1, 2], ExecMode::NonBlocked);
+        let ev = par.take_parallel_events();
+        assert_eq!((ev.scopes, ev.blocks, ev.capacity), (1, 2, 2));
+        assert_eq!(par.take_parallel_events(), ParallelEvents::default(), "drained");
+        assert_eq!(par.storage().to_digits(), fresh.storage().to_digits());
+        assert_eq!(par.stats(), fresh.stats());
     }
 
     /// Every row matches exactly one pass or is a noAction state, so

@@ -10,7 +10,7 @@ pub mod kernel;
 pub mod controller;
 pub mod ops;
 
-pub use controller::{Ap, ExecMode};
+pub use controller::{Ap, ApArena, ExecMode, ParallelEvents, COPY_PAR_MIN_ROWS};
 pub use kernel::{KernelCache, KernelSignature, LutKernel};
 pub use ops::{
     add_vectors, adder_lut, extract_operand, extract_reduced, fold_rounds, load_mul_operands,

@@ -339,7 +339,9 @@ pub fn reduce_fields(
             // remaining lockstep rounds.
             for d in 0..span.p {
                 if pairs > 0 {
-                    ap.storage_mut().copy_rows(
+                    // routed through the parallelism-aware dispatch: large
+                    // folds split the per-plane extract/merge into tasks
+                    ap.copy_rows(
                         span.b_base + d,
                         base + half,
                         span.a_base + d,

@@ -43,7 +43,10 @@
 
 use super::array::{CamArray, CompareOutcome};
 use super::cell::WriteOps;
+use super::parallel::BlockScratch;
 use crate::mvl::{Radix, DONT_CARE};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
 
 /// Bits needed to represent every value in `0..=x` (0 for `x == 0`).
 #[inline]
@@ -815,6 +818,405 @@ impl BitSlicedArray {
             set_bit_range(&mut self.digit_planes[b..b + self.words], start, count, bit);
         }
     }
+
+    /// Data-parallel kernel application over contiguous word blocks — the
+    /// scoped-thread form of [`Self::classify_states_into_with`] followed
+    /// by bucket counting and [`Self::merge_write_states`], with
+    /// bit-identical array contents and bucket counts.
+    ///
+    /// `cuts` are cumulative block end offsets from
+    /// [`super::Parallelism::word_cuts`] (at least two blocks, last equal
+    /// to [`Self::words`]). Each block's thread classifies its word range
+    /// into its window of `masks`, then all blocks rendezvous at one
+    /// barrier: if **any** block saw a don't-care in a compared column the
+    /// whole application aborts with nothing written (returns `false`,
+    /// `masks` contents unspecified — exactly the sequential classify
+    /// contract); otherwise every block commits its merge and popcounts
+    /// its partial bucket populations into its [`BlockScratch`]. The
+    /// calling thread participates as block 0's worker, then reduces the
+    /// per-block partials in ascending block order into `counts`
+    /// (flattened `[segment][state]`; one segment when `bounds` is
+    /// `None`). The partials are disjoint-row integer sums, so the
+    /// reduced totals equal the sequential whole-range popcounts
+    /// *exactly* — downstream stats stay bit-identical.
+    ///
+    /// `cols` must be distinct (duplicates would alias the per-block
+    /// plane windows; callers route those through the sequential path)
+    /// and `plan` must be compiled for these columns.
+    #[allow(clippy::too_many_arguments)] // scratch-buffer plumbing: every extra arg is a reused allocation
+    pub fn apply_states_parallel(
+        &mut self,
+        cols: &[usize],
+        masks: &mut Vec<u64>,
+        scratch: &mut ClassifyScratch,
+        plan: &StateWritePlan,
+        cuts: &[usize],
+        pool: &mut Vec<BlockScratch>,
+        counts: &mut Vec<u64>,
+        bounds: Option<&[usize]>,
+    ) -> bool {
+        let n = self.radix.n() as usize;
+        let k = cols.len();
+        let num_states = n.pow(k as u32);
+        let words = self.words;
+        let nblocks = cuts.len();
+        assert!(nblocks >= 2, "parallel application needs at least two blocks");
+        assert_eq!(*cuts.last().unwrap(), words, "cuts must cover every word");
+        assert_eq!(plan.arity(), k, "plan arity must match the columns");
+        assert_eq!(plan.planes(), self.planes, "plan compiled for a different radix");
+        debug_assert!(cols.iter().all(|&c| c < self.cols));
+        debug_assert!(
+            (0..k).all(|i| (i + 1..k).all(|j| cols[i] != cols[j])),
+            "duplicate columns alias the per-block plane windows"
+        );
+
+        masks.clear();
+        masks.resize(num_states * words, 0);
+
+        // shared read-only state decode, computed once before the scope
+        {
+            let sd = &mut scratch.state_digits;
+            sd.clear();
+            sd.resize(num_states * k, 0);
+            for sid in 0..num_states {
+                let mut x = sid;
+                for slot in sd[sid * k..(sid + 1) * k].iter_mut().rev() {
+                    *slot = (x % n) as u8;
+                    x /= n;
+                }
+            }
+        }
+        let state_digits: &[u8] = &scratch.state_digits;
+
+        let nsegs = bounds.map_or(1, |b| b.len());
+        if pool.len() < nblocks {
+            pool.resize_with(nblocks, BlockScratch::default);
+        }
+        for bs in pool[..nblocks].iter_mut() {
+            bs.col_eq.clear();
+            bs.col_eq.resize(k * n, 0);
+            bs.counts.clear();
+            bs.counts.resize(nsegs * num_states, 0);
+        }
+
+        // carve disjoint per-block windows of every backing buffer
+        let planes = self.planes;
+        let mut views: Vec<BlockView> = cuts
+            .iter()
+            .enumerate()
+            .map(|(b, _)| BlockView {
+                w0: if b == 0 { 0 } else { cuts[b - 1] },
+                digit: (0..k * planes).map(|_| None).collect(),
+                present: (0..k).map(|_| None).collect(),
+                masks: Vec::with_capacity(num_states),
+            })
+            .collect();
+        for (ri, row) in self.digit_planes.chunks_exact_mut(words).enumerate() {
+            let (col, p) = (ri / planes, ri % planes);
+            if let Some(i) = cols.iter().position(|&c| c == col) {
+                for (b, piece) in split_at_cuts(row, cuts).into_iter().enumerate() {
+                    views[b].digit[i * planes + p] = Some(piece);
+                }
+            }
+        }
+        for (col, row) in self.present.chunks_exact_mut(words).enumerate() {
+            if let Some(i) = cols.iter().position(|&c| c == col) {
+                for (b, piece) in split_at_cuts(row, cuts).into_iter().enumerate() {
+                    views[b].present[i] = Some(piece);
+                }
+            }
+        }
+        for row in masks.chunks_exact_mut(words) {
+            // visited in ascending sid order, so `push` keeps sid indexing
+            for (b, piece) in split_at_cuts(row, cuts).into_iter().enumerate() {
+                views[b].masks.push(piece);
+            }
+        }
+
+        let ctx = ParCtx {
+            n,
+            k,
+            num_states,
+            planes,
+            rows: self.rows,
+            words,
+            state_digits,
+            plan,
+            bounds,
+        };
+        let ok = AtomicBool::new(true);
+        let barrier = Barrier::new(nblocks);
+        let (pool_head, pool_rest) = pool[..nblocks].split_at_mut(1);
+        let mut views = views.into_iter();
+        let view0 = views.next().expect("at least two blocks");
+        std::thread::scope(|s| {
+            let (ctx, ok, barrier) = (&ctx, &ok, &barrier);
+            for (view, bs) in views.zip(pool_rest.iter_mut()) {
+                s.spawn(move || run_block(view, bs, ctx, ok, barrier));
+            }
+            // the calling thread is block 0's worker
+            run_block(view0, &mut pool_head[0], ctx, ok, barrier);
+        });
+        if !ok.load(Ordering::Relaxed) {
+            return false; // a block saw a don't-care: nothing was written
+        }
+
+        // deterministic reduction: ascending block order; disjoint-row
+        // integer sums equal the whole-range popcounts exactly
+        counts.clear();
+        counts.resize(nsegs * num_states, 0);
+        for bs in pool[..nblocks].iter() {
+            for (acc, &c) in counts.iter_mut().zip(bs.counts.iter()) {
+                *acc += c;
+            }
+        }
+        true
+    }
+
+    /// Scoped-thread [`Self::copy_rows`]: the per-plane extract/merge
+    /// passes touch disjoint plane rows, so each of the `planes + 1`
+    /// planes (digits plus present) runs as its own task with a private
+    /// shift scratch. Per plane the word operations are *identical* to
+    /// the sequential primitive, so the moved contents match bit for bit
+    /// (memmove semantics included — each task extracts before merging).
+    pub fn copy_rows_parallel(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+    ) {
+        assert!(src_col < self.cols && dst_col < self.cols);
+        assert!(src_row + count <= self.rows && dst_row + count <= self.rows);
+        if count == 0 || (src_col == dst_col && src_row == dst_row) {
+            return;
+        }
+        let words = self.words;
+        let planes = self.planes;
+        enum Task<'a> {
+            /// Same column: extract and merge within one plane row.
+            Within(&'a mut [u64]),
+            /// Distinct columns: read `src`, write `dst`.
+            Across(&'a [u64], &'a mut [u64]),
+        }
+        impl Task<'_> {
+            fn run(self, src_row: usize, dst_row: usize, count: usize) {
+                let mut scratch = Vec::new();
+                match self {
+                    Task::Within(row) => {
+                        extract_bit_range(row, src_row, count, &mut scratch);
+                        merge_bit_range(row, dst_row, count, &scratch);
+                    }
+                    Task::Across(src, dst) => {
+                        extract_bit_range(src, src_row, count, &mut scratch);
+                        merge_bit_range(dst, dst_row, count, &scratch);
+                    }
+                }
+            }
+        }
+        let mut tasks: Vec<Option<Task>> = (0..=planes).map(|_| None).collect();
+        if src_col == dst_col {
+            for (ri, row) in self.digit_planes.chunks_exact_mut(words).enumerate() {
+                if ri / planes == src_col {
+                    tasks[ri % planes] = Some(Task::Within(row));
+                }
+            }
+            let pb = src_col * words;
+            tasks[planes] = Some(Task::Within(&mut self.present[pb..pb + words]));
+        } else {
+            let mut srcs: Vec<Option<&[u64]>> = (0..planes).map(|_| None).collect();
+            let mut dsts: Vec<Option<&mut [u64]>> = (0..planes).map(|_| None).collect();
+            for (ri, row) in self.digit_planes.chunks_exact_mut(words).enumerate() {
+                let (col, p) = (ri / planes, ri % planes);
+                if col == src_col {
+                    srcs[p] = Some(row);
+                } else if col == dst_col {
+                    dsts[p] = Some(row);
+                }
+            }
+            for ((t, s), d) in tasks.iter_mut().zip(srcs).zip(dsts) {
+                *t = Some(Task::Across(s.unwrap(), d.unwrap()));
+            }
+            let (mut ps, mut pd) = (None, None);
+            for (col, row) in self.present.chunks_exact_mut(words).enumerate() {
+                if col == src_col {
+                    ps = Some(&*row);
+                } else if col == dst_col {
+                    pd = Some(row);
+                }
+            }
+            tasks[planes] = Some(Task::Across(ps.unwrap(), pd.unwrap()));
+        }
+        let mut tasks = tasks.into_iter().map(|t| t.expect("every plane has a task"));
+        let first = tasks.next().expect("at least the present plane");
+        std::thread::scope(|s| {
+            for t in tasks {
+                s.spawn(move || t.run(src_row, dst_row, count));
+            }
+            first.run(src_row, dst_row, count);
+        });
+    }
+}
+
+/// One block's disjoint mutable window into the plane and mask buffers of
+/// a [`BitSlicedArray::apply_states_parallel`] application.
+struct BlockView<'a> {
+    /// First global word of the block.
+    w0: usize,
+    /// Digit-plane words of the compared columns, `[i * planes + p]`
+    /// (`i` indexes `cols`). Filled by slot during the buffer walk.
+    digit: Vec<Option<&'a mut [u64]>>,
+    /// Present-plane words of the compared columns, `[i]`.
+    present: Vec<Option<&'a mut [u64]>>,
+    /// Per-state mask words, `[sid]`.
+    masks: Vec<&'a mut [u64]>,
+}
+
+/// Read-only inputs shared by every block of one parallel application.
+struct ParCtx<'a> {
+    /// Radix.
+    n: usize,
+    /// Arity (compared columns).
+    k: usize,
+    num_states: usize,
+    planes: usize,
+    rows: usize,
+    /// Total words per plane (for the tail-word valid mask).
+    words: usize,
+    /// Big-endian digit decode of every state id, flattened `[sid][i]`.
+    state_digits: &'a [u8],
+    plan: &'a StateWritePlan,
+    /// Segment bounds for segment-resolved partial counts.
+    bounds: Option<&'a [usize]>,
+}
+
+/// Split one `words`-long plane row at the cumulative block `cuts`.
+fn split_at_cuts<'a>(mut row: &'a mut [u64], cuts: &[usize]) -> Vec<&'a mut [u64]> {
+    let mut out = Vec::with_capacity(cuts.len());
+    let mut prev = 0;
+    for &c in cuts {
+        let (head, tail) = row.split_at_mut(c - prev);
+        out.push(head);
+        row = tail;
+        prev = c;
+    }
+    out
+}
+
+/// One block of [`BitSlicedArray::apply_states_parallel`]: classify the
+/// block's words (the exact word recurrence of
+/// [`BitSlicedArray::classify_states_into_with`]), rendezvous at the
+/// barrier, then — if every block classified cleanly — popcount the
+/// block's partial bucket populations and commit the merge (the exact
+/// word recurrence of [`BitSlicedArray::merge_write_states`]). The
+/// pre-barrier half is straight-line arithmetic (no panics, no early
+/// returns past the barrier), which is what makes the one-barrier
+/// rendezvous deadlock-free.
+fn run_block(
+    mut view: BlockView<'_>,
+    bs: &mut BlockScratch,
+    ctx: &ParCtx<'_>,
+    ok: &AtomicBool,
+    barrier: &Barrier,
+) {
+    let local_words = view.masks.first().map_or(0, |m| m.len());
+    // -- classify this block's words
+    let mut covered_all = true;
+    'words: for lw in 0..local_words {
+        let w = view.w0 + lw;
+        let valid = if w + 1 == ctx.words && ctx.rows % 64 != 0 {
+            (1u64 << (ctx.rows % 64)) - 1
+        } else {
+            !0
+        };
+        for i in 0..ctx.k {
+            let pres = view.present[i].as_deref().unwrap()[lw];
+            for v in 0..ctx.n {
+                let mut eq = pres;
+                for p in 0..ctx.planes {
+                    let plane = view.digit[i * ctx.planes + p].as_deref().unwrap()[lw];
+                    eq &= if (v >> p) & 1 == 1 { plane } else { !plane };
+                }
+                bs.col_eq[i * ctx.n + v] = eq;
+            }
+        }
+        let mut covered = 0u64;
+        for (sid, mask) in view.masks.iter_mut().enumerate() {
+            let digits = &ctx.state_digits[sid * ctx.k..(sid + 1) * ctx.k];
+            let mut eq = valid;
+            for (i, &d) in digits.iter().enumerate() {
+                eq &= bs.col_eq[i * ctx.n + d as usize];
+                if eq == 0 {
+                    break;
+                }
+            }
+            mask[lw] = eq;
+            covered |= eq;
+        }
+        if covered != valid {
+            covered_all = false; // a live row holds a don't-care in `cols`
+            break 'words;
+        }
+    }
+    if !covered_all {
+        ok.store(false, Ordering::Relaxed);
+    }
+    // every block must finish classifying before anyone merges: a
+    // don't-care seen by any block aborts all writes. The barrier orders
+    // the flag stores before the loads, so Relaxed suffices.
+    barrier.wait();
+    if !ok.load(Ordering::Relaxed) {
+        return;
+    }
+    // -- partial bucket counts of this block's rows (mask snapshots, so
+    // counting before or after the merge is equivalent)
+    let row0 = view.w0 * 64;
+    let row1 = ctx.rows.min((view.w0 + local_words) * 64);
+    match ctx.bounds {
+        None => {
+            for (sid, mask) in view.masks.iter().enumerate() {
+                bs.counts[sid] = mask.iter().map(|w| u64::from(w.count_ones())).sum();
+            }
+        }
+        Some(b) => {
+            let mut start = 0usize;
+            for (s, &end) in b.iter().enumerate() {
+                let (lo, hi) = (start.max(row0), end.min(row1));
+                start = end;
+                if lo >= hi {
+                    continue; // segment does not intersect this block
+                }
+                for (sid, mask) in view.masks.iter().enumerate() {
+                    bs.counts[s * ctx.num_states + sid] =
+                        popcount_range(mask, lo - row0, hi - row0);
+                }
+            }
+        }
+    }
+    // -- merge this block's words
+    for lw in 0..local_words {
+        let mut any = 0u64;
+        for &sid in ctx.plan.matched() {
+            any |= view.masks[sid as usize][lw];
+        }
+        if any == 0 {
+            continue;
+        }
+        for i in 0..ctx.k {
+            for p in 0..ctx.planes {
+                let mut bits = 0u64;
+                for &sid in ctx.plan.plane_states(i, p) {
+                    bits |= view.masks[sid as usize][lw];
+                }
+                let plane = view.digit[i * ctx.planes + p].as_deref_mut().unwrap();
+                plane[lw] = (plane[lw] & !any) | bits;
+            }
+            // final digits are always real digits, never don't-care
+            let pres = view.present[i].as_deref_mut().unwrap();
+            pres[lw] |= any;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1168,5 +1570,159 @@ mod tests {
         let sliced = BitSlicedArray::from_cam(&cam);
         assert_eq!(sliced.digit_plane_count(), 3);
         assert_eq!(sliced.to_cam().data(), cam.data());
+    }
+
+    /// The block-parallel application equals sequential
+    /// classify+count+merge exactly: contents, masks, and bucket counts
+    /// (whole-range and segment-resolved), for random radices, word
+    /// counts, cut shapes, and plans.
+    #[test]
+    fn parallel_apply_matches_sequential_primitives() {
+        use super::super::Parallelism;
+        forall(Config::cases(60), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4)); // 2..=5
+            let rows = [63, 64, 65, 127, 128, 129, 200, 1 + rng.index(700)][rng.index(8)];
+            let arity = 2 + rng.index(2);
+            let cols_total = arity + rng.index(2);
+            let mut data = vec![0u8; rows * cols_total];
+            rng.fill_digits(&mut data, radix.n());
+            let mut all: Vec<usize> = (0..cols_total).collect();
+            rng.shuffle(&mut all);
+            let cols: Vec<usize> = all[..arity].to_vec();
+            let num_states = (radix.n() as usize).pow(arity as u32);
+            let finals: Vec<Option<Vec<u8>>> = (0..num_states)
+                .map(|_| {
+                    rng.chance(0.6)
+                        .then(|| (0..arity).map(|_| rng.digit(radix.n())).collect())
+                })
+                .collect();
+            let plan =
+                StateWritePlan::new(radix, arity, finals.iter().map(|f| f.as_deref()));
+            // random segmentation (sometimes none)
+            let bounds: Option<Vec<usize>> = rng.chance(0.5).then(|| {
+                let mut b: Vec<usize> =
+                    (0..rng.index(4)).map(|_| rng.index(rows + 1)).collect();
+                b.push(rows);
+                b.sort_unstable();
+                b
+            });
+
+            // sequential reference
+            let mut seq = BitSlicedArray::from_data(radix, rows, cols_total, &data);
+            let mut seq_masks = Vec::new();
+            assert!(seq.classify_states_into(&cols, &mut seq_masks));
+            let words = seq.words();
+            let nsegs = bounds.as_ref().map_or(1, |b| b.len());
+            let mut seq_counts = vec![0u64; nsegs * num_states];
+            match &bounds {
+                None => {
+                    for sid in 0..num_states {
+                        seq_counts[sid] =
+                            popcount_range(&seq_masks[sid * words..(sid + 1) * words], 0, rows);
+                    }
+                }
+                Some(b) => {
+                    let mut start = 0usize;
+                    for (s, &end) in b.iter().enumerate() {
+                        for sid in 0..num_states {
+                            seq_counts[s * num_states + sid] = popcount_range(
+                                &seq_masks[sid * words..(sid + 1) * words],
+                                start,
+                                end,
+                            );
+                        }
+                        start = end;
+                    }
+                }
+            }
+            seq.merge_write_states(&cols, &seq_masks, &plan);
+
+            // parallel application, several thread counts
+            for threads in [2, 3, 8] {
+                let par = Parallelism { threads, min_block_words: 1 };
+                let Some(cuts) = par.word_cuts(words) else {
+                    continue; // single-word arrays can't split
+                };
+                let mut arr = BitSlicedArray::from_data(radix, rows, cols_total, &data);
+                let (mut masks, mut scratch) = (Vec::new(), ClassifyScratch::default());
+                let (mut pool, mut counts) = (Vec::new(), Vec::new());
+                assert!(arr.apply_states_parallel(
+                    &cols,
+                    &mut masks,
+                    &mut scratch,
+                    &plan,
+                    &cuts,
+                    &mut pool,
+                    &mut counts,
+                    bounds.as_deref(),
+                ));
+                assert_eq!(masks, seq_masks, "{threads} threads: masks differ");
+                assert_eq!(counts, seq_counts, "{threads} threads: counts differ");
+                assert_eq!(
+                    arr.to_digits(),
+                    seq.to_digits(),
+                    "{threads} threads: contents differ"
+                );
+            }
+        });
+    }
+
+    /// A don't-care in a compared column aborts the parallel application
+    /// with nothing written, wherever the don't-care lands — including a
+    /// block other than the one the calling thread works.
+    #[test]
+    fn parallel_apply_dont_care_aborts_without_writes() {
+        use super::super::Parallelism;
+        let rows = 256; // 4 words
+        let mut data = vec![1u8; rows * 2];
+        data[0] = 0;
+        for planted_row in [0, 70, 150, 255] {
+            let mut arr = BitSlicedArray::from_data(T, rows, 2, &data);
+            arr.set(planted_row, 1, DONT_CARE);
+            let before = arr.to_digits();
+            let zeros = [0u8, 0];
+            let plan = StateWritePlan::new(T, 2, (0..9).map(|_| Some(zeros.as_slice())));
+            let cuts = Parallelism { threads: 4, min_block_words: 1 }
+                .word_cuts(arr.words())
+                .unwrap();
+            let (mut masks, mut scratch) = (Vec::new(), ClassifyScratch::default());
+            let (mut pool, mut counts) = (Vec::new(), Vec::new());
+            assert!(!arr.apply_states_parallel(
+                &[0, 1],
+                &mut masks,
+                &mut scratch,
+                &plan,
+                &cuts,
+                &mut pool,
+                &mut counts,
+                None,
+            ));
+            assert_eq!(arr.to_digits(), before, "abort must leave contents untouched");
+        }
+    }
+
+    /// Per-plane-parallel row movement equals the sequential primitive for
+    /// random (possibly overlapping, possibly same-column) ranges.
+    #[test]
+    fn copy_rows_parallel_matches_sequential() {
+        forall(Config::cases(80), |rng: &mut Rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let rows = [64, 65, 129, 200, 1 + rng.index(400)][rng.index(5)];
+            let cols = 2 + rng.index(3);
+            let mut data = vec![0u8; rows * cols];
+            for d in data.iter_mut() {
+                *d = if rng.chance(0.1) { DONT_CARE } else { rng.digit(radix.n()) };
+            }
+            let count = rng.index(rows + 1);
+            let src_col = rng.index(cols);
+            let dst_col = rng.index(cols);
+            let src = rng.index(rows - count + 1);
+            let dst = rng.index(rows - count + 1);
+            let mut a = BitSlicedArray::from_data(radix, rows, cols, &data);
+            let mut b = BitSlicedArray::from_data(radix, rows, cols, &data);
+            a.copy_rows(src_col, src, dst_col, dst, count);
+            b.copy_rows_parallel(src_col, src, dst_col, dst, count);
+            assert_eq!(a.to_digits(), b.to_digits());
+        });
     }
 }

@@ -23,6 +23,7 @@
 pub mod cell;
 pub mod array;
 pub mod bitsliced;
+pub mod parallel;
 pub mod storage;
 pub mod faults;
 
@@ -30,4 +31,5 @@ pub use array::{CamArray, CompareOutcome, TagVector};
 pub use bitsliced::{popcount_range, BitSlicedArray, ClassifyScratch, StateMasks, StateWritePlan};
 pub use cell::{MemristorState, MvCamCell, WriteOps};
 pub use faults::{march_detect, Fault, FaultyArray};
+pub use parallel::{BlockScratch, Parallelism, THREADS_ENV};
 pub use storage::{CamStorage, StorageKind};

@@ -1,0 +1,183 @@
+//! Data-parallel execution knob for the bit-sliced hot path.
+//!
+//! The plane-native kernels operate on 64-row `u64` words, and every word
+//! of a kernel application is independent of every other word: classify
+//! reads plane words and writes eq-mask words, merge rewrites plane words
+//! under per-word masks, and the bucket counts are popcount sums. So a
+//! kernel application partitions into contiguous *word blocks* that run on
+//! scoped threads with zero coordination beyond one barrier (see
+//! [`crate::cam::BitSlicedArray::apply_states_parallel`]).
+//!
+//! [`Parallelism`] carries the knob end to end: CAM storage → `Ap` →
+//! `NativeBackend` → `EngineService`/`ShardedService` → CLI `--threads`
+//! (env `MVAP_THREADS`). `threads == 1` — the default — never enters a
+//! thread scope and reproduces the sequential path bit for bit.
+
+/// Environment variable consulted by [`Parallelism::from_env`] (and thus
+/// by [`Parallelism::default`]): the worker-thread count for bit-sliced
+/// kernel applications. Unset, unparsable, or `0` all mean sequential.
+pub const THREADS_ENV: &str = "MVAP_THREADS";
+
+/// Default minimum words per block (64 words = 4096 rows): below this the
+/// per-position thread-spawn cost outweighs the word loop itself, so
+/// small arrays stay sequential even with `threads > 1`.
+pub const DEFAULT_MIN_BLOCK_WORDS: usize = 64;
+
+/// Intra-tile data-parallelism configuration.
+///
+/// `word_cuts` is the single partitioning rule every parallel kernel
+/// uses, so the differential suites and the Python port validate one
+/// function. The fields are public so tests can force tiny blocks
+/// (`min_block_words: 1`) and exercise multi-block execution on
+/// word-sized arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker threads per kernel application (1 = sequential).
+    pub threads: usize,
+    /// Minimum words per block; applications with fewer than
+    /// `2 * min_block_words` words run sequentially.
+    pub min_block_words: usize,
+}
+
+impl Parallelism {
+    /// Strictly sequential execution — today's behavior, bit for bit.
+    pub fn sequential() -> Self {
+        Parallelism { threads: 1, min_block_words: DEFAULT_MIN_BLOCK_WORDS }
+    }
+
+    /// `threads` workers with the default block-size floor.
+    pub fn new(threads: usize) -> Self {
+        Parallelism { threads: threads.max(1), min_block_words: DEFAULT_MIN_BLOCK_WORDS }
+    }
+
+    /// Read the thread count from [`THREADS_ENV`] (sequential when unset
+    /// or unparsable) — the CI-deterministic configuration path.
+    pub fn from_env() -> Self {
+        let threads = std::env::var(THREADS_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(1);
+        Self::new(threads)
+    }
+
+    /// Could this configuration ever dispatch more than one block?
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Partition `words` mask/plane words into contiguous blocks: the
+    /// cumulative end offsets (last = `words`), one per block, or `None`
+    /// when the application should run sequentially (one thread, or too
+    /// few words to split under [`Self::min_block_words`]).
+    ///
+    /// Blocks are as even as possible: the first `words % blocks` blocks
+    /// get one extra word. The partition depends only on `(threads,
+    /// min_block_words, words)` — never on the data — which is what makes
+    /// per-block stats partials reduce deterministically.
+    pub fn word_cuts(&self, words: usize) -> Option<Vec<usize>> {
+        let min = self.min_block_words.max(1);
+        let blocks = self.threads.min(words / min);
+        if blocks < 2 {
+            return None;
+        }
+        let base = words / blocks;
+        let extra = words % blocks;
+        let mut cuts = Vec::with_capacity(blocks);
+        let mut end = 0usize;
+        for b in 0..blocks {
+            end += base + usize::from(b < extra);
+            cuts.push(end);
+        }
+        debug_assert_eq!(*cuts.last().unwrap(), words);
+        Some(cuts)
+    }
+}
+
+impl Default for Parallelism {
+    /// [`Self::from_env`]: service-level `Default` configurations pick up
+    /// `MVAP_THREADS` without plumbing at every construction site.
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+/// Per-block working buffers for
+/// [`crate::cam::BitSlicedArray::apply_states_parallel`]: each block's
+/// thread owns one, so the hot path performs no allocations once the pool
+/// has warmed up (they live in the `Ap` scratch arena).
+#[derive(Clone, Debug, Default)]
+pub struct BlockScratch {
+    /// Eq-mask per (column index, digit value), flattened `[i][v]` — the
+    /// per-word classification working set, same layout as the
+    /// sequential `ClassifyScratch`.
+    pub(crate) col_eq: Vec<u64>,
+    /// Partial bucket populations of this block's rows, flattened
+    /// `[segment][state]` (one segment when unsegmented).
+    pub(crate) counts: Vec<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_never_cuts() {
+        let p = Parallelism::sequential();
+        assert!(!p.is_parallel());
+        assert_eq!(p.word_cuts(1 << 20), None);
+        assert_eq!(Parallelism::new(1).word_cuts(1 << 20), None);
+        assert_eq!(Parallelism::new(0).threads, 1);
+    }
+
+    #[test]
+    fn small_arrays_stay_sequential() {
+        let p = Parallelism::new(8);
+        // fewer than 2 * min_block_words words: not worth a scope
+        assert_eq!(p.word_cuts(2 * DEFAULT_MIN_BLOCK_WORDS - 1), None);
+        assert!(p.word_cuts(2 * DEFAULT_MIN_BLOCK_WORDS).is_some());
+    }
+
+    #[test]
+    fn cuts_are_even_exhaustive() {
+        // every (threads, words) combo: cuts cover exactly, blocks differ
+        // by at most one word, and block count respects both bounds
+        for threads in 1..=9 {
+            let p = Parallelism { threads, min_block_words: 1 };
+            for words in 1..=40 {
+                match p.word_cuts(words) {
+                    None => assert!(threads.min(words) < 2),
+                    Some(cuts) => {
+                        assert!(cuts.len() >= 2 && cuts.len() <= threads);
+                        assert!(cuts.len() <= words);
+                        assert_eq!(*cuts.last().unwrap(), words);
+                        let mut prev = 0;
+                        let sizes: Vec<usize> = cuts
+                            .iter()
+                            .map(|&c| {
+                                let s = c - prev;
+                                prev = c;
+                                s
+                            })
+                            .collect();
+                        let (lo, hi) = (
+                            sizes.iter().min().unwrap(),
+                            sizes.iter().max().unwrap(),
+                        );
+                        assert!(hi - lo <= 1, "uneven cuts {cuts:?} for {words} words");
+                        assert!(*lo >= 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_block_words_floors_block_count() {
+        let p = Parallelism { threads: 8, min_block_words: 4 };
+        assert_eq!(p.word_cuts(7), None); // 7/4 = 1 block
+        let cuts = p.word_cuts(11).unwrap(); // 11/4 = 2 blocks
+        assert_eq!(cuts, vec![6, 11]);
+        let cuts = p.word_cuts(64).unwrap(); // capped by threads at 8
+        assert_eq!(cuts.len(), 8);
+    }
+}

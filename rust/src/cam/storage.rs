@@ -190,6 +190,31 @@ impl CamStorage {
         }
     }
 
+    /// [`Self::copy_rows`] with a data-parallelism knob: on the bit-sliced
+    /// backend with `par.threads > 1` the per-plane extract/merge passes
+    /// run as scoped-thread tasks
+    /// ([`BitSlicedArray::copy_rows_parallel`] — bit-identical results);
+    /// everything else falls through to the sequential primitive. Callers
+    /// gate on a row-count threshold (see
+    /// [`crate::ap::Ap::copy_rows`]) — a plane task is only worth
+    /// spawning for large moves.
+    pub fn copy_rows_par(
+        &mut self,
+        src_col: usize,
+        src_row: usize,
+        dst_col: usize,
+        dst_row: usize,
+        count: usize,
+        par: &super::Parallelism,
+    ) {
+        match self {
+            CamStorage::BitSliced(a) if par.is_parallel() => {
+                a.copy_rows_parallel(src_col, src_row, dst_col, dst_row, count)
+            }
+            other => other.copy_rows(src_col, src_row, dst_col, dst_row, count),
+        }
+    }
+
     /// Constant fill of rows `start..start + count` of `col` — see
     /// [`BitSlicedArray::fill_rows`].
     pub fn fill_rows(&mut self, col: usize, start: usize, count: usize, digit: u8) {

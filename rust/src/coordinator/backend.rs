@@ -8,8 +8,8 @@
 
 use super::batcher::Tile;
 use super::job::OpKind;
-use crate::ap::{Ap, ApStats, ExecMode, KernelCache, ReduceSummary};
-use crate::cam::{CamStorage, StorageKind};
+use crate::ap::{Ap, ApArena, ApStats, ExecMode, KernelCache, ParallelEvents, ReduceSummary};
+use crate::cam::{CamStorage, Parallelism, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::{Radix, Word};
 use crate::program::{exec as program_exec, BoundProgram, ProgramLuts, ProgramRun};
@@ -78,6 +78,15 @@ pub trait Backend {
     /// each job/batch.
     fn take_kernel_events(&mut self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Drain the data-parallel execution events (scoped-thread dispatches
+    /// and their block/capacity tallies) this backend recorded since the
+    /// last call. Backends without a parallel plane-kernel path report
+    /// zeros. The engine folds these into [`super::metrics::Metrics`]
+    /// alongside the kernel-cache events.
+    fn take_parallel_events(&mut self) -> ParallelEvents {
+        ParallelEvents::default()
     }
 
     /// Does this backend implement [`Backend::run_tile_segmented`]? The
@@ -184,6 +193,15 @@ pub struct NativeBackend {
     /// are global across sharers).
     kernel_hits: u64,
     kernel_misses: u64,
+    /// Data-parallel knob applied to every [`Ap`] this backend builds.
+    par: Parallelism,
+    /// Scratch arena recycled across tiles: each run moves it into the
+    /// [`Ap`], and reclaims it (with its grown buffers) afterwards, so
+    /// steady-state tile execution allocates nothing per call.
+    arena: ApArena,
+    /// Parallel-dispatch events since the last
+    /// [`Backend::take_parallel_events`] drain.
+    par_events: ParallelEvents,
 }
 
 impl Default for NativeBackend {
@@ -208,7 +226,28 @@ impl NativeBackend {
     /// [`super::shard::ShardedService`] and
     /// [`super::service::EngineService`] give all their workers one cache).
     pub fn with_cache(storage: StorageKind, kernels: Arc<KernelCache>) -> Self {
-        NativeBackend { storage, kernels, kernel_hits: 0, kernel_misses: 0 }
+        NativeBackend {
+            storage,
+            kernels,
+            kernel_hits: 0,
+            kernel_misses: 0,
+            par: Parallelism::default(),
+            arena: ApArena::default(),
+            par_events: ParallelEvents::default(),
+        }
+    }
+
+    /// Set the data-parallel execution knob (builder style). The default
+    /// comes from the `MVAP_THREADS` environment variable (sequential when
+    /// unset); services thread their CLI `--threads` value through here.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// The configured data-parallel knob.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
     }
 
     /// The configured storage kind.
@@ -227,6 +266,19 @@ impl NativeBackend {
         } else {
             ExecMode::NonBlocked
         }
+    }
+
+    /// Build an [`Ap`] over `storage` carrying this backend's recycled
+    /// scratch arena and parallelism knob. Pair with [`Self::reclaim`].
+    fn make_ap(&mut self, storage: CamStorage) -> Ap {
+        Ap::with_storage_arena(storage, std::mem::take(&mut self.arena)).with_parallelism(self.par)
+    }
+
+    /// Reclaim the scratch arena (with its grown buffers) and fold the
+    /// run's parallel-dispatch events into this backend's tally.
+    fn reclaim(&mut self, mut ap: Ap) {
+        self.par_events.merge(ap.take_parallel_events());
+        self.arena = ap.into_arena();
     }
 
     /// Cache lookup with per-backend hit/miss accounting.
@@ -255,14 +307,17 @@ impl Backend for NativeBackend {
         let kernel = self.kernel(lut, mode);
         let storage =
             CamStorage::from_data(self.storage, radix, tile.tile_rows, layout.cols(), &tile.data);
-        let mut ap = Ap::with_storage(storage);
+        let mut ap = self.make_ap(storage);
         // §Perf: state-bucketing fast path — proven identical (values and
         // stats) to the faithful per-pass path by the controller and
         // plane-native test suites. On bit-sliced storage classification
-        // and rewrite are word-parallel (64 rows per plane op).
+        // and rewrite are word-parallel (64 rows per plane op), and tall
+        // tiles split into word blocks across the scoped-thread pool.
         ap.apply_lut_multi_fast_kernel(lut, &layout.positions(), mode, &kernel);
         let stats = ap.take_stats();
-        Ok((ap.storage().to_digits(), stats))
+        let data = ap.storage().to_digits();
+        self.reclaim(ap);
+        Ok((data, stats))
     }
 
     fn preferred_rows(&self, _: OpKind, _: Radix, _: bool, _: usize) -> Option<usize> {
@@ -281,6 +336,10 @@ impl Backend for NativeBackend {
         self.kernel_hits = 0;
         self.kernel_misses = 0;
         events
+    }
+
+    fn take_parallel_events(&mut self) -> ParallelEvents {
+        std::mem::take(&mut self.par_events)
     }
 
     fn supports_coalescing(&self) -> bool {
@@ -305,7 +364,7 @@ impl Backend for NativeBackend {
         // state eq-masks at the segment bounds (no scalar replay needed).
         let storage =
             CamStorage::from_data(self.storage, radix, tile.tile_rows, layout.cols(), &tile.data);
-        let mut ap = Ap::with_storage(storage);
+        let mut ap = self.make_ap(storage);
         let segments = ap.apply_lut_multi_fast_segmented_kernel(
             lut,
             &layout.positions(),
@@ -313,7 +372,9 @@ impl Backend for NativeBackend {
             bounds,
             &kernel,
         );
-        Ok((ap.storage().to_digits(), segments))
+        let data = ap.storage().to_digits();
+        self.reclaim(ap);
+        Ok((data, segments))
     }
 
     fn supports_reduce(&self) -> bool {
@@ -336,10 +397,11 @@ impl Backend for NativeBackend {
         // is not tiled; the fold happens in place across all rounds with
         // the cached adder kernel.
         let (storage, layout) = load_reduce_operands(self.storage, radix, values);
-        let mut ap = Ap::with_storage(storage);
+        let mut ap = self.make_ap(storage);
         let (stats, summary) =
             reduce_vectors(&mut ap, &layout, lut, mode, &kernel, seg_bounds, stat_bounds);
         let results = extract_reduced(ap.storage(), &layout, seg_bounds);
+        self.reclaim(ap);
         Ok((results, stats, summary))
     }
 
@@ -361,7 +423,9 @@ impl Backend for NativeBackend {
             mac: luts.mac.as_ref().map(|l| (l, self.kernel(l, mode))),
             copy: luts.copy.as_ref().map(|l| (l, self.kernel(l, mode))),
         };
-        program_exec::run_storage(self.storage, bound, &kernels)
+        let run = program_exec::run_storage(self.storage, bound, &kernels, self.par)?;
+        self.par_events.merge(run.par_events);
+        Ok(run)
     }
 }
 

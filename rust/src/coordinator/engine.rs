@@ -188,6 +188,7 @@ impl VectorEngine {
         // the program array is sized to the workload: one "tile", 100% fill
         self.metrics.record_tiles(1, bound.rows, bound.rows);
         self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.record_parallel_events(self.backend.take_parallel_events());
         self.metrics.programs += 1;
         self.metrics.program_steps += steps.len() as u64;
         self.metrics.fused_steps += plan.fused_steps;
@@ -257,6 +258,7 @@ impl VectorEngine {
         self.metrics.record(job.rows(), digits, &energy, elapsed);
         self.metrics.record_tiles(tiles.len(), tile_rows, job.rows());
         self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.record_parallel_events(self.backend.take_parallel_events());
         self.metrics.solo_jobs += 1;
         Ok(JobResult {
             id: job.id,
@@ -340,6 +342,7 @@ impl VectorEngine {
         let total_rows: usize = jobs.iter().map(|j| j.rows()).sum();
         self.metrics.record_tiles(n_tiles, tile_rows, total_rows);
         self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.record_parallel_events(self.backend.take_parallel_events());
         self.metrics.batches += 1;
         let mut out = Vec::with_capacity(jobs.len());
         for (i, job) in jobs.iter().enumerate() {
@@ -413,6 +416,7 @@ impl VectorEngine {
         // the reduce array is sized to the workload: one "tile", 100% fill
         self.metrics.record_tiles(1, total_rows, total_rows);
         self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.record_parallel_events(self.backend.take_parallel_events());
         self.metrics.reduce_rounds += summary.rounds;
         self.metrics.reduce_rows_moved += summary.rows_moved;
         if jobs.len() == 1 {

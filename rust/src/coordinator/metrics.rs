@@ -1,6 +1,7 @@
 //! Engine metrics: rows/ops processed, modeled energy, wall-clock, tile
 //! occupancy (fill rate), and coalescing/work-stealing counters.
 
+use crate::ap::ParallelEvents;
 use crate::energy::EnergyBreakdown;
 use std::time::Duration;
 
@@ -51,6 +52,16 @@ pub struct Metrics {
     /// Operand edges served from a CAM-resident intermediate instead of a
     /// host extract/reload round-trip.
     pub resident_reuses: u64,
+    /// Data-parallel scoped-thread dispatches on the bit-sliced hot path:
+    /// one scope per kernel application that split into word blocks
+    /// ([`crate::cam::Parallelism`]).
+    pub par_scopes: u64,
+    /// Word blocks executed across those scopes (each ran on its own
+    /// thread; sequential applications contribute nothing).
+    pub par_blocks: u64,
+    /// Thread-pool capacity offered to those scopes (scopes × configured
+    /// threads); `par_blocks / par_capacity` is the pool utilization.
+    pub par_capacity: u64,
     /// Per-request enqueue→completion latency observed by the sharded
     /// dispatcher ([`super::shard::ShardedService`]): every job and
     /// program submission records exactly one sample when its reply is
@@ -84,6 +95,14 @@ impl Metrics {
         self.kernel_misses += misses;
     }
 
+    /// Record drained data-parallel dispatch events
+    /// ([`super::backend::Backend::take_parallel_events`]).
+    pub fn record_parallel_events(&mut self, ev: ParallelEvents) {
+        self.par_scopes += ev.scopes;
+        self.par_blocks += ev.blocks;
+        self.par_capacity += ev.capacity;
+    }
+
     /// Merge (for aggregating worker metrics).
     pub fn merge(&mut self, other: &Metrics) {
         self.jobs += other.jobs;
@@ -106,6 +125,9 @@ impl Metrics {
         self.program_steps += other.program_steps;
         self.fused_steps += other.fused_steps;
         self.resident_reuses += other.resident_reuses;
+        self.par_scopes += other.par_scopes;
+        self.par_blocks += other.par_blocks;
+        self.par_capacity += other.par_capacity;
         self.latency.merge(&other.latency);
     }
 
@@ -126,6 +148,19 @@ impl Metrics {
             0.0
         } else {
             self.tile_live_rows as f64 / self.tile_capacity_rows as f64
+        }
+    }
+
+    /// Fraction of the offered thread-pool capacity that ran a word
+    /// block. 1.0 means every scope filled its pool; low values mean the
+    /// configured thread count exceeds what the tile heights can use
+    /// (blocks are floored at [`crate::cam::parallel::DEFAULT_MIN_BLOCK_WORDS`]
+    /// words). 0.0 when no parallel scope ever ran.
+    pub fn par_utilization(&self) -> f64 {
+        if self.par_capacity == 0 {
+            0.0
+        } else {
+            self.par_blocks as f64 / self.par_capacity as f64
         }
     }
 
@@ -156,6 +191,14 @@ impl Metrics {
             self.fused_steps,
             self.resident_reuses,
         );
+        if self.par_scopes > 0 {
+            s.push_str(&format!(
+                " par={}sc/{}bl u={:.0}%",
+                self.par_scopes,
+                self.par_blocks,
+                100.0 * self.par_utilization()
+            ));
+        }
         if let Some(slo) = self.latency.slo() {
             s.push_str(&format!(" latency[{slo}]"));
         }
@@ -180,6 +223,8 @@ mod tests {
         assert_eq!(m.digit_ops, 3000);
         assert!(m.rows_per_sec() > 0.0);
         assert!(m.summary().contains("jobs=2"));
+        assert_eq!(m.par_utilization(), 0.0);
+        assert!(!m.summary().contains(" par="), "no parallel suffix when no scopes ran");
     }
 
     #[test]
@@ -197,6 +242,7 @@ mod tests {
         n.batches = 1;
         n.stolen_jobs = 1;
         n.record_kernel_events((5, 2));
+        n.record_parallel_events(ParallelEvents { scopes: 2, blocks: 7, capacity: 8 });
         n.reduce_rounds = 10;
         n.reduce_rows_moved = 1023;
         n.programs = 2;
@@ -214,6 +260,9 @@ mod tests {
         assert_eq!((m.fused_steps, m.resident_reuses), (2, 4));
         assert!(m.summary().contains("fill="));
         assert!(m.summary().contains("kernels=5h/2m"));
+        assert_eq!((m.par_scopes, m.par_blocks, m.par_capacity), (2, 7, 8));
+        assert!((m.par_utilization() - 7.0 / 8.0).abs() < 1e-12);
+        assert!(m.summary().contains("par=2sc/7bl u=88%"), "summary: {}", m.summary());
         assert!(m.summary().contains("reduce=10r/1023mv"));
         assert!(m.summary().contains("programs=2 (7 steps, 2 fused, 4 reuses)"));
     }

@@ -132,24 +132,48 @@ impl EngineService {
 
     /// Convenience: start with a [`BackendKind`]. Native workers share one
     /// kernel cache, so a LUT program compiles once for the whole pool.
+    /// The data-parallel knob comes from the environment
+    /// ([`crate::cam::Parallelism::from_env`]); use
+    /// [`Self::start_kind_parallel`] to set it explicitly.
     pub fn start_kind(
         workers: usize,
         queue_depth: usize,
         kind: BackendKind,
         artifacts_dir: std::path::PathBuf,
     ) -> anyhow::Result<Self> {
+        Self::start_kind_parallel(
+            workers,
+            queue_depth,
+            kind,
+            artifacts_dir,
+            crate::cam::Parallelism::default(),
+        )
+    }
+
+    /// [`Self::start_kind`] with an explicit data-parallel knob: every
+    /// native worker backend splits its plane-kernel applications into
+    /// word blocks over `par.threads` scoped threads (values and stats
+    /// stay bit-identical at any setting; PJRT backends ignore it).
+    pub fn start_kind_parallel(
+        workers: usize,
+        queue_depth: usize,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+        par: crate::cam::Parallelism,
+    ) -> anyhow::Result<Self> {
         use crate::ap::KernelCache;
         use crate::cam::StorageKind;
         let kernels = Arc::new(KernelCache::new());
         Self::start(workers, queue_depth, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
-                BackendKind::Native => {
-                    Box::new(NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels)))
-                }
-                BackendKind::NativeBitSliced => Box::new(NativeBackend::with_cache(
-                    StorageKind::BitSliced,
-                    Arc::clone(&kernels),
-                )),
+                BackendKind::Native => Box::new(
+                    NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels))
+                        .with_parallelism(par),
+                ),
+                BackendKind::NativeBitSliced => Box::new(
+                    NativeBackend::with_cache(StorageKind::BitSliced, Arc::clone(&kernels))
+                        .with_parallelism(par),
+                ),
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })

@@ -44,6 +44,12 @@ pub struct ShardConfig {
     pub flush_after: Duration,
     /// Idle shards steal queued jobs from other shards.
     pub steal: bool,
+    /// Data-parallel knob for every shard's native backend: plane-kernel
+    /// applications split into word blocks over this many scoped threads
+    /// ([`crate::cam::Parallelism`]). Orthogonal to `shards`: shards add
+    /// request-level concurrency (more queues/engines), threads add
+    /// intra-tile data parallelism (one tall tile finishes faster).
+    pub parallelism: crate::cam::Parallelism,
 }
 
 impl Default for ShardConfig {
@@ -55,6 +61,7 @@ impl Default for ShardConfig {
             max_batch_rows: 4 * super::engine::DEFAULT_TILE_ROWS,
             flush_after: Duration::from_millis(2),
             steal: true,
+            parallelism: crate::cam::Parallelism::default(),
         }
     }
 }
@@ -473,15 +480,17 @@ impl ShardedService {
         use crate::ap::KernelCache;
         use crate::cam::StorageKind;
         let kernels = Arc::new(KernelCache::new());
+        let par = cfg.parallelism;
         Self::start(cfg, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
-                BackendKind::Native => {
-                    Box::new(NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels)))
-                }
-                BackendKind::NativeBitSliced => Box::new(NativeBackend::with_cache(
-                    StorageKind::BitSliced,
-                    Arc::clone(&kernels),
-                )),
+                BackendKind::Native => Box::new(
+                    NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels))
+                        .with_parallelism(par),
+                ),
+                BackendKind::NativeBitSliced => Box::new(
+                    NativeBackend::with_cache(StorageKind::BitSliced, Arc::clone(&kernels))
+                        .with_parallelism(par),
+                ),
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })

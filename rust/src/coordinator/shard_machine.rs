@@ -452,6 +452,9 @@ impl ShardSystemMachine {
             max_batch_rows: scenario.max_batch_rows,
             flush_after: Duration::from_micros(1),
             steal: scenario.steal,
+            // the model reasons about dispatch decisions, not intra-tile
+            // execution — the data-parallel knob is invisible to it
+            parallelism: crate::cam::Parallelism::sequential(),
         };
         let flush_after = duration_nanos(cfg.flush_after);
         ShardSystemMachine { scenario, items, offsets, flush_after, cfg }

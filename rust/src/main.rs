@@ -39,22 +39,27 @@ USAGE:
            [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
            [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
            [--shards S] [--flush-us U] [--batch-rows R] [--batch-jobs B]
-           [--no-steal] [--no-coalesce]
+           [--no-steal] [--no-coalesce] [--threads T]
            (--shards > 0 runs the sharded, cross-job-coalescing dispatcher;
             otherwise the worker pool coalesces each submitted batch unless
             --no-coalesce. --op reduce sums each job's rows down to one
-            value with the in-engine tree reduction — native backends only)
+            value with the in-engine tree reduction — native backends only.
+            --threads T splits each bit-sliced kernel application into word
+            blocks over T scoped threads — bit-identical values and stats;
+            defaults to the MVAP_THREADS env var, else 1)
   mvap program --name dot|fir|poly_eval|affine_layer
            [--rows N] [--digits P] [--radix N] [--taps T] [--degree D]
            [--neurons M] [--backend native|native-bitsliced] [--workers W]
            [--shards S] [--blocked|--non-blocked] [--seed S] [--dump-plan]
+           [--threads T]
            (compiles the builtin to a field-allocated plan and runs the
             whole op DAG as ONE engine invocation — intermediates stay
             CAM-resident; --dump-plan prints the schedule and exits)
   mvap serve [--clients N] [--rps R] [--duration SECS]
            [--mix A:S:M:R:P] [--shards S1,S2,..] [--flush-us U1,U2,..]
-           [--req-rows N] [--digits P] [--radix N] [--inflight CAP]
-           [--queue-depth D] [--backend native|native-bitsliced|pjrt]
+           [--threads T1,T2,..] [--req-rows N] [--digits P] [--radix N]
+           [--inflight CAP] [--queue-depth D]
+           [--backend native|native-bitsliced|pjrt]
            [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
            [--json FILE]
            (drives the bounded-admission serving front door with mixed
@@ -160,6 +165,22 @@ fn cmd_lut(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the data-parallel knob: `--threads T` wins, else the
+/// `MVAP_THREADS` environment variable, else sequential.
+fn resolve_threads(args: &Args) -> anyhow::Result<mvap::cam::Parallelism> {
+    use mvap::cam::Parallelism;
+    match args.get("threads") {
+        Some(s) => {
+            let t: usize = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threads: '{s}' is not a thread count"))?;
+            anyhow::ensure!(t > 0, "--threads must be at least 1");
+            Ok(Parallelism::new(t))
+        }
+        None => Ok(Parallelism::from_env()),
+    }
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let op = match args.get_or("op", "add").as_str() {
         "add" => OpKind::Add,
@@ -183,6 +204,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let batch_jobs = args.get_parse_or("batch-jobs", 64usize);
     let no_steal = args.flag("no-steal");
     let no_coalesce = args.flag("no-coalesce");
+    let par = resolve_threads(args)?;
     args.reject_unknown();
 
     let mut rng = Rng::new(seed);
@@ -230,6 +252,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             max_batch_rows: batch_rows.max(1),
             flush_after: std::time::Duration::from_micros(flush_us),
             steal: !no_steal,
+            parallelism: par,
         };
         let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
         for rx in svc.submit_many(workload)? {
@@ -240,7 +263,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let (agg, per_shard) = svc.shutdown();
         (wall, agg, Some(per_shard))
     } else {
-        let svc = EngineService::start_kind(workers, jobs.max(2), backend, artifacts)?;
+        let svc = EngineService::start_kind_parallel(workers, jobs.max(2), backend, artifacts, par)?;
         let receivers = if no_coalesce {
             workload.into_iter().map(|j| svc.submit(j)).collect::<Vec<_>>()
         } else {
@@ -283,6 +306,7 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
     let neurons = args.get_parse_or("neurons", 16usize);
     let dump_plan = args.flag("dump-plan");
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let par = resolve_threads(args)?;
     args.reject_unknown();
     anyhow::ensure!(
         backend != BackendKind::Pjrt,
@@ -329,13 +353,13 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
 
     let started = std::time::Instant::now();
     let (report, metrics) = if shards > 0 {
-        let cfg = ShardConfig { shards, ..ShardConfig::default() };
+        let cfg = ShardConfig { shards, parallelism: par, ..ShardConfig::default() };
         let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
         let report = svc.run_program(bound)?;
         let (agg, _) = svc.shutdown();
         (report, agg)
     } else {
-        let svc = EngineService::start_kind(workers, 2, backend, artifacts)?;
+        let svc = EngineService::start_kind_parallel(workers, 2, backend, artifacts, par)?;
         let report = svc.run_program(bound)?;
         (report, svc.shutdown())
     };
@@ -382,6 +406,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let inflight = args.get_parse_or("inflight", 0usize);
     let shard_counts: Vec<usize> = parse_sweep(args, "shards", 4)?;
     let flush_list: Vec<u64> = parse_sweep(args, "flush-us", 2000)?;
+    let thread_list: Vec<usize> =
+        parse_sweep(args, "threads", mvap::cam::Parallelism::from_env().threads)?;
     let json = args.get("json").map(PathBuf::from);
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     args.reject_unknown();
@@ -395,6 +421,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "nothing to drive: --clients N (closed loop) and/or --rps R (open loop)"
     );
     anyhow::ensure!(shard_counts.iter().all(|&s| s > 0), "--shards entries must be positive");
+    anyhow::ensure!(thread_list.iter().all(|&t| t > 0), "--threads entries must be positive");
 
     // Which loop disciplines to run at each sweep point: closed measures
     // capacity, open measures behaviour under a fixed offered rate.
@@ -419,36 +446,42 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed,
     };
 
-    let mut table = Table::new("serving latency / throughput")
-        .header(&["mode", "shards", "flush", "class", "count", "p50", "p95", "p99", "max", "rps"]);
+    let mut table = Table::new("serving latency / throughput").header(&[
+        "mode", "shards", "flush", "thr", "class", "count", "p50", "p95", "p99", "max", "rps",
+    ]);
     let mut reports = Vec::new();
     for &shards in &shard_counts {
         for &flush_us in &flush_list {
-            for &mode in &modes {
-                let front_cfg = FrontConfig {
-                    max_in_flight,
-                    shard: ShardConfig {
+            for &threads in &thread_list {
+                for &mode in &modes {
+                    let front_cfg = FrontConfig {
+                        max_in_flight,
+                        shard: ShardConfig {
+                            shards,
+                            queue_depth: queue_depth.max(2),
+                            flush_after: std::time::Duration::from_micros(flush_us),
+                            parallelism: mvap::cam::Parallelism::new(threads),
+                            ..ShardConfig::default()
+                        },
+                    };
+                    let report =
+                        loadgen::run_kind(mode, front_cfg, backend, artifacts.clone(), &cfg)?;
+                    println!(
+                        "{:>6} loop, {} shard(s), flush {}us, {} thread(s): offered={} \
+                         completed={} shed={} failed={} ({:.0} req/s)",
+                        mode.name(),
                         shards,
-                        queue_depth: queue_depth.max(2),
-                        flush_after: std::time::Duration::from_micros(flush_us),
-                        ..ShardConfig::default()
-                    },
-                };
-                let report = loadgen::run_kind(mode, front_cfg, backend, artifacts.clone(), &cfg)?;
-                println!(
-                    "{:>6} loop, {} shard(s), flush {}us: offered={} completed={} shed={} \
-                     failed={} ({:.0} req/s)",
-                    mode.name(),
-                    shards,
-                    flush_us,
-                    report.offered,
-                    report.completed,
-                    report.shed,
-                    report.failed,
-                    report.achieved_rps(),
-                );
-                report.table_rows(&mut table);
-                reports.push(report);
+                        flush_us,
+                        threads,
+                        report.offered,
+                        report.completed,
+                        report.shed,
+                        report.failed,
+                        report.achieved_rps(),
+                    );
+                    report.table_rows(&mut table);
+                    reports.push(report);
+                }
             }
         }
     }
@@ -577,6 +610,15 @@ mod tests {
         let bad = parse(&["serve", "--shards", "2,x"]);
         let err = parse_sweep::<usize>(&bad, "shards", 4).unwrap_err();
         assert!(format!("{err}").contains("'x'"), "{err}");
+    }
+
+    /// `--threads` parses and rejects zero/garbage; without the flag the
+    /// knob falls back to the environment (not asserted — env-dependent).
+    #[test]
+    fn threads_flag_resolves() {
+        assert_eq!(resolve_threads(&parse(&["run", "--threads", "4"])).unwrap().threads, 4);
+        assert!(resolve_threads(&parse(&["run", "--threads", "0"])).is_err());
+        assert!(resolve_threads(&parse(&["run", "--threads", "x"])).is_err());
     }
 
     #[test]

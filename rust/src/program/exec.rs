@@ -12,8 +12,10 @@
 
 use super::ir::EwOp;
 use super::plan::{BoundProgram, FieldId, StepKind};
-use crate::ap::{reduce_fields, Ap, ApStats, ExecMode, FieldSpan, LutKernel, ReduceSummary};
-use crate::cam::{CamStorage, StorageKind};
+use crate::ap::{
+    reduce_fields, Ap, ApStats, ExecMode, FieldSpan, LutKernel, ParallelEvents, ReduceSummary,
+};
+use crate::cam::{CamStorage, Parallelism, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::Word;
 use std::sync::Arc;
@@ -76,15 +78,22 @@ pub struct ProgramRun {
     pub step_stats: Vec<ApStats>,
     /// Fold summaries for reduce / fused steps (`None` elsewhere).
     pub step_summaries: Vec<Option<ReduceSummary>>,
+    /// Data-parallel dispatch events the run recorded (all zeros when the
+    /// executor ran sequentially).
+    pub par_events: ParallelEvents,
 }
 
 /// Execute `bound` on a fresh array in `kind` storage. The array is
 /// `rows × (num_fields·digits + 1)`: inputs load once, every step runs on
 /// CAM-resident data, and only the outputs are extracted at the end.
+/// `par` sets the data-parallel knob on the executing [`Ap`]: tall
+/// programs split each plane-kernel application into word blocks across
+/// a scoped-thread pool (bit-identical values and stats at any setting).
 pub fn run_storage(
     kind: StorageKind,
     bound: &BoundProgram,
     kernels: &ProgramKernels,
+    par: Parallelism,
 ) -> anyhow::Result<ProgramRun> {
     let plan = &bound.plan;
     let prog = plan.program();
@@ -108,7 +117,7 @@ pub fn run_storage(
     }
     let storage = CamStorage::from_data(kind, radix, rows, cols, &data);
     drop(data);
-    let mut ap = Ap::with_storage(storage);
+    let mut ap = Ap::with_storage(storage).with_parallelism(par);
 
     let mut step_stats = Vec::with_capacity(plan.steps().len());
     let mut step_summaries = Vec::with_capacity(plan.steps().len());
@@ -190,5 +199,5 @@ pub fn run_storage(
         }
         outputs.push(vec);
     }
-    Ok(ProgramRun { outputs, step_stats, step_summaries })
+    Ok(ProgramRun { outputs, step_stats, step_summaries, par_events: ap.take_parallel_events() })
 }

@@ -223,6 +223,9 @@ pub struct LoadReport {
     pub mode: LoopMode,
     pub shards: usize,
     pub flush_after: Duration,
+    /// Data-parallel threads per shard backend
+    /// ([`crate::cam::Parallelism::threads`]).
+    pub threads: usize,
     /// Requests the generator attempted to submit.
     pub offered: u64,
     /// Requests past admission control.
@@ -253,19 +256,20 @@ impl LoadReport {
         }
     }
 
-    /// A short settings label, e.g. `closed/4s/2000us`.
+    /// A short settings label, e.g. `closed/4s/2000us/1t`.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}s/{}us",
+            "{}/{}s/{}us/{}t",
             self.mode.name(),
             self.shards,
-            self.flush_after.as_micros()
+            self.flush_after.as_micros(),
+            self.threads
         )
     }
 
     /// Append this run's rows (total first, then each populated class)
     /// to a latency table with columns
-    /// `[mode, shards, flush, class, count, p50, p95, p99, max, rps]`.
+    /// `[mode, shards, flush, thr, class, count, p50, p95, p99, max, rps]`.
     pub fn table_rows(&self, table: &mut crate::util::Table) {
         let mut push = |class: &str, h: &LatencyHistogram| {
             let Some(slo) = h.slo() else { return };
@@ -273,6 +277,7 @@ impl LoadReport {
                 self.mode.name().to_string(),
                 self.shards.to_string(),
                 format!("{}us", self.flush_after.as_micros()),
+                self.threads.to_string(),
                 class.to_string(),
                 slo.count.to_string(),
                 format!("{:.1?}", slo.p50),
@@ -301,15 +306,17 @@ impl LoadReport {
             out.push(format!(
                 concat!(
                     "{{\"name\": \"serving_{}/{}\", \"mode\": \"{}\", \"shards\": {}, ",
-                    "\"flush_us\": {}, \"class\": \"{}\", \"count\": {}, \"offered\": {}, ",
-                    "\"completed\": {}, \"shed\": {}, \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, ",
-                    "\"p99_ns\": {:.0}, \"mean_ns\": {:.0}, \"achieved_rps\": {:.1}}}"
+                    "\"flush_us\": {}, \"threads\": {}, \"class\": \"{}\", \"count\": {}, ",
+                    "\"offered\": {}, \"completed\": {}, \"shed\": {}, \"p50_ns\": {:.0}, ",
+                    "\"p95_ns\": {:.0}, \"p99_ns\": {:.0}, \"mean_ns\": {:.0}, ",
+                    "\"achieved_rps\": {:.1}}}"
                 ),
                 self.label().replace('/', "_"),
                 class,
                 self.mode.name(),
                 self.shards,
                 self.flush_after.as_micros(),
+                self.threads,
                 class,
                 h.count(),
                 self.offered,
@@ -470,6 +477,7 @@ fn drive(
         mode,
         shards: front_cfg.shard.shards,
         flush_after: front_cfg.shard.flush_after,
+        threads: front_cfg.shard.parallelism.threads,
         offered: tally.offered,
         admitted: stats.admitted,
         completed: stats.completed,

@@ -1,0 +1,271 @@
+//! Differential property tests for the data-parallel word-block
+//! execution layer (PR 8): a parallel [`Ap`] must be *bit-identical* to
+//! the sequential bit-sliced path and to the scalar reference — same
+//! extracted values, same [`ApStats`] (cycles, set/reset ops, rows
+//! written, mismatch histogram), same priced energy, same modeled delay,
+//! same stored digits — across radices 2–5, word-boundary and mid-word
+//! row counts, don't-care densities (which force the faithful fallback
+//! mid-kernel), segmented per-job attribution, and thread counts
+//! 1/2/3/8. Every sweep replays with `MVAP_PROP_SEED=0x…`.
+
+mod common;
+
+use common::{boundary_rows, random_digit, random_radix, random_words};
+use mvap::ap::{adder_lut, extract_operand, load_operands_storage, Ap, ApStats, ExecMode};
+use mvap::cam::{CamStorage, Parallelism, StorageKind};
+use mvap::energy::{delay_cycles, DelayScheme, EnergyModel, OpShape};
+use mvap::mvl::Radix;
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+
+/// Thread counts every differential sweep runs: 1 (must be the literal
+/// sequential code path), 2, an odd count (uneven block sizes), and more
+/// threads than most test arrays have word blocks.
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+/// A parallelism knob that partitions even tiny test arrays: block
+/// granularity of one 64-row word instead of the production default.
+fn fine_grained(threads: usize) -> Parallelism {
+    Parallelism { threads, min_block_words: 1 }
+}
+
+/// Run the multi-position fast path on one storage/parallelism config
+/// and return every observable: extracted values, stats, digits, priced
+/// energy, and the modeled delay.
+struct Observed {
+    values: Vec<(mvap::mvl::Word, u8)>,
+    stats: ApStats,
+    digits: Vec<u8>,
+    energy: mvap::energy::EnergyBreakdown,
+    delay: u64,
+}
+
+fn run_fast_path(
+    kind: StorageKind,
+    par: Option<Parallelism>,
+    radix: Radix,
+    a: &[mvap::mvl::Word],
+    b: &[mvap::mvl::Word],
+    mode: ExecMode,
+) -> Observed {
+    let lut = adder_lut(radix, mode);
+    let (storage, layout) = load_operands_storage(kind, radix, a, b, None);
+    let mut ap = Ap::with_storage(storage);
+    if let Some(par) = par {
+        ap = ap.with_parallelism(par);
+    }
+    ap.apply_lut_multi_fast(&lut, &layout.positions(), mode);
+    let values = extract_operand(ap.storage(), &layout);
+    let stats = ap.take_stats();
+    let energy = EnergyModel::ternary_default().price(&stats);
+    let delay = delay_cycles(OpShape::of(&lut, layout.positions().len()), DelayScheme::Traditional);
+    Observed { values, stats, digits: ap.storage().to_digits(), energy, delay }
+}
+
+/// Random operands (with don't-care digits mixed in, so some kernel
+/// applications abort to the faithful path mid-flight): every thread
+/// count must reproduce the scalar reference and the sequential
+/// bit-sliced run exactly — values, stats, energy, delay, contents.
+#[test]
+fn parallel_agrees_with_sequential_and_scalar() {
+    forall(Config::cases(60), |rng: &mut Rng| {
+        let radix = random_radix(rng);
+        let p = 1 + rng.index(8);
+        let rows = boundary_rows(rng);
+        let mut a = random_words(rng, rows, p, radix);
+        let b = random_words(rng, rows, p, radix);
+        // sprinkle don't-cares into one operand to hit the abort path
+        if rng.chance(0.3) {
+            let digits: Vec<u8> =
+                (0..p).map(|_| random_digit(rng, radix.n(), 0.3)).collect();
+            a[rng.index(rows)] = mvap::mvl::Word::from_digits(digits, radix);
+        }
+        let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+
+        let scalar = run_fast_path(StorageKind::Scalar, None, radix, &a, &b, mode);
+        let seq = run_fast_path(StorageKind::BitSliced, None, radix, &a, &b, mode);
+        assert_eq!(scalar.values, seq.values, "scalar vs sequential values (rows={rows})");
+        assert_eq!(scalar.stats, seq.stats, "scalar vs sequential stats (rows={rows})");
+
+        for threads in THREADS {
+            let par = run_fast_path(
+                StorageKind::BitSliced,
+                Some(fine_grained(threads)),
+                radix,
+                &a,
+                &b,
+                mode,
+            );
+            let ctx = format!("threads={threads} radix={} rows={rows} {mode:?}", radix.n());
+            assert_eq!(par.values, seq.values, "values ({ctx})");
+            assert_eq!(par.stats, seq.stats, "stats ({ctx})");
+            assert_eq!(par.digits, seq.digits, "contents ({ctx})");
+            assert_eq!(par.energy, seq.energy, "energy ({ctx})");
+            assert_eq!(par.delay, seq.delay, "delay ({ctx})");
+        }
+    });
+}
+
+/// Explicit word-boundary and mid-word row counts, radices 2–5: the
+/// partitioned path must agree exactly where tail-word masking and
+/// uneven block splits live.
+#[test]
+fn word_boundary_row_counts_agree() {
+    for n in 2u8..=5 {
+        let radix = Radix(n);
+        for rows in [63usize, 64, 65, 127, 128, 129, 191, 300] {
+            let mut rng = Rng::new(rows as u64 * 131 + n as u64);
+            let p = 4;
+            let a = random_words(&mut rng, rows, p, radix);
+            let b = random_words(&mut rng, rows, p, radix);
+            let seq = run_fast_path(StorageKind::BitSliced, None, radix, &a, &b, ExecMode::Blocked);
+            for threads in [2usize, 8] {
+                let par = run_fast_path(
+                    StorageKind::BitSliced,
+                    Some(fine_grained(threads)),
+                    radix,
+                    &a,
+                    &b,
+                    ExecMode::Blocked,
+                );
+                assert_eq!(par.values, seq.values, "values (n={n} rows={rows} t={threads})");
+                assert_eq!(par.stats, seq.stats, "stats (n={n} rows={rows} t={threads})");
+                assert_eq!(par.digits, seq.digits, "contents (n={n} rows={rows} t={threads})");
+            }
+        }
+    }
+}
+
+/// The thread-count-invariance property of record (wired into ci.sh
+/// stage 3): at production block granularity and 8k+ rows, every thread
+/// count yields one identical `ApStats`/energy/delay/content tuple —
+/// and the multi-threaded configurations actually engage the scoped
+/// pool (non-zero drained [`mvap::ap::ParallelEvents`]).
+#[test]
+fn thread_count_invariance_at_production_granularity() {
+    let radix = Radix::TERNARY;
+    let p = 8;
+    for rows in [8192usize, 8200, 16384] {
+        let mut rng = Rng::new(rows as u64);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let lut = adder_lut(radix, ExecMode::Blocked);
+        let mut reference: Option<(Vec<u8>, ApStats)> = None;
+        for threads in THREADS {
+            let (storage, layout) =
+                load_operands_storage(StorageKind::BitSliced, radix, &a, &b, None);
+            let mut ap =
+                Ap::with_storage(storage).with_parallelism(Parallelism::new(threads));
+            ap.apply_lut_multi_fast(&lut, &layout.positions(), ExecMode::Blocked);
+            let digits = ap.storage().to_digits();
+            let stats = ap.take_stats();
+            let events = ap.take_parallel_events();
+            if threads == 1 {
+                assert_eq!(events.scopes, 0, "threads=1 must take the sequential path");
+            } else {
+                assert!(
+                    events.scopes > 0 && events.blocks > events.scopes,
+                    "threads={threads} rows={rows}: pool never engaged ({events:?})"
+                );
+            }
+            match &reference {
+                None => reference = Some((digits, stats)),
+                Some((ref_digits, ref_stats)) => {
+                    assert_eq!(&digits, ref_digits, "contents (threads={threads} rows={rows})");
+                    assert_eq!(&stats, ref_stats, "stats (threads={threads} rows={rows})");
+                    assert_eq!(
+                        EnergyModel::ternary_default().price(&stats),
+                        EnergyModel::ternary_default().price(ref_stats),
+                        "energy (threads={threads} rows={rows})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Segmented (coalesced-tile) execution: per-segment stats attribution
+/// must be exact under partitioning — each job's `ApStats` and priced
+/// energy identical to the sequential segmented run, for random segment
+/// bounds that deliberately straddle block cuts.
+#[test]
+fn segmented_attribution_exact_across_threads() {
+    forall(Config::cases(40), |rng: &mut Rng| {
+        let radix = random_radix(rng);
+        let p = 1 + rng.index(6);
+        let rows = 64 + rng.index(400);
+        let a = random_words(rng, rows, p, radix);
+        let b = random_words(rng, rows, p, radix);
+        let mode = if rng.chance(0.5) { ExecMode::Blocked } else { ExecMode::NonBlocked };
+        let lut = adder_lut(radix, mode);
+        // random non-decreasing bounds covering all rows
+        let nsegs = 1 + rng.index(5);
+        let mut bounds: Vec<usize> = (0..nsegs - 1).map(|_| rng.index(rows + 1)).collect();
+        bounds.push(rows);
+        bounds.sort_unstable();
+
+        let run = |par: Option<Parallelism>| {
+            let (storage, layout) =
+                load_operands_storage(StorageKind::BitSliced, radix, &a, &b, None);
+            let mut ap = Ap::with_storage(storage);
+            if let Some(par) = par {
+                ap = ap.with_parallelism(par);
+            }
+            let segs =
+                ap.apply_lut_multi_fast_segmented(&lut, &layout.positions(), mode, &bounds);
+            (segs, ap.take_stats(), ap.storage().to_digits())
+        };
+        let (seq_segs, seq_stats, seq_digits) = run(None);
+        for threads in [2usize, 3, 8] {
+            let (par_segs, par_stats, par_digits) = run(Some(fine_grained(threads)));
+            let ctx = format!("threads={threads} rows={rows} segs={bounds:?} {mode:?}");
+            assert_eq!(par_segs, seq_segs, "per-segment stats ({ctx})");
+            assert_eq!(par_stats, seq_stats, "total stats ({ctx})");
+            assert_eq!(par_digits, seq_digits, "contents ({ctx})");
+            let model = EnergyModel::ternary_default();
+            for (i, (ps, ss)) in par_segs.iter().zip(&seq_segs).enumerate() {
+                assert_eq!(model.price(ps), model.price(ss), "segment {i} energy ({ctx})");
+            }
+        }
+    });
+}
+
+/// Plane-parallel row movement ([`Ap::copy_rows`]): above the size
+/// threshold the per-plane scoped tasks must produce the same digits as
+/// the sequential primitive, for both across-column and within-column
+/// (overlap-free) moves, including misaligned bit offsets.
+#[test]
+fn copy_rows_parallel_agrees() {
+    let radix = Radix::TERNARY;
+    let rows = mvap::ap::COPY_PAR_MIN_ROWS + 65; // straddle the last word
+    let cols = 2;
+    let mut rng = Rng::new(97);
+    let mut data = vec![0u8; rows * cols];
+    for d in data.iter_mut() {
+        *d = random_digit(&mut rng, 3, 0.1);
+    }
+    // (src_col, src_row, dst_col, dst_row, count): across columns with a
+    // misaligned source, and within one column shifting downward.
+    let moves = [
+        (0usize, 1usize, 1usize, 0usize, mvap::ap::COPY_PAR_MIN_ROWS + 3),
+        (0, 64, 0, 7, mvap::ap::COPY_PAR_MIN_ROWS),
+    ];
+    for (src_col, src_row, dst_col, dst_row, count) in moves {
+        let storage =
+            CamStorage::from_data(StorageKind::BitSliced, radix, rows, cols, &data);
+        let mut seq = Ap::with_storage(storage.clone());
+        seq.copy_rows(src_col, src_row, dst_col, dst_row, count);
+        for threads in [2usize, 8] {
+            let mut par =
+                Ap::with_storage(storage.clone()).with_parallelism(Parallelism::new(threads));
+            par.copy_rows(src_col, src_row, dst_col, dst_row, count);
+            assert_eq!(
+                par.storage().to_digits(),
+                seq.storage().to_digits(),
+                "copy ({src_col},{src_row})->({dst_col},{dst_row}) x{count} t={threads}"
+            );
+            let events = par.take_parallel_events();
+            assert_eq!(events.scopes, 1, "copy must engage the pool once ({events:?})");
+        }
+    }
+}

@@ -50,6 +50,7 @@ fn producers_race_submissions_against_flushes_and_steals() {
             // producers instead of waiting them out
             flush_after: Duration::from_micros(50 + rng.next_u64() % 450),
             steal: rng.chance(0.5),
+            parallelism: mvap::cam::Parallelism::sequential(),
         };
         let producers = 2 + rng.index(3);
         let per_producer = 6 + rng.index(5);
@@ -166,6 +167,7 @@ fn close_races_active_producers_without_panicking() {
             max_batch_rows: 256,
             flush_after: Duration::from_micros(200),
             steal: rng.chance(0.5),
+            parallelism: mvap::cam::Parallelism::sequential(),
         };
         let svc = ShardedService::start(cfg, || {
             Ok(Box::new(NativeBackend::default()) as _)
@@ -232,6 +234,7 @@ fn shutdown_races_inflight_work_without_loss() {
             // because Closed flushes them, not because time ran out
             flush_after: Duration::from_millis(200),
             steal: rng.chance(0.5),
+            parallelism: mvap::cam::Parallelism::sequential(),
         };
         let svc = ShardedService::start(cfg, || {
             Ok(Box::new(NativeBackend::default()) as _)

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Fail-loud perf-regression gate over the quick-bench trajectory files.
+
+Usage:
+    python3 tools/perf_gate.py BENCH_8.json [more BENCH_*.json ...]
+
+The first file is the PR-8 trajectory of record (`hot/parallel_apply_*`
+plus the arena and PR-3 benches); any further files are only checked for
+non-emptiness. Three checks, mirrored from ISSUE 8:
+
+  (a) every listed trajectory file must exist and hold at least one
+      result record — an empty trajectory means the bench stage silently
+      recorded nothing, which is exactly the failure this gate exists
+      to catch;
+  (b) the 4-thread bit-sliced kernel application at 256k rows must be at
+      least MIN_SPEEDUP_4T x faster (p50 wall-clock) than the 1-thread
+      run — skipped with a loud warning when the machine itself has
+      fewer than 4 CPUs, since no scheduler can conjure missing cores;
+  (c) the 1-thread run must not be more than MAX_1T_OVERHEAD slower than
+      the plain sequential constructor at 256k rows — the parallel knob
+      at threads=1 takes the identical code path (word_cuts never
+      partitions), so any gap beyond noise is dispatch overhead leaking
+      into the default configuration.
+
+Exit status 0 = gate passed; 1 = regression (or empty trajectory).
+"""
+
+import json
+import os
+import sys
+
+GATE_ROWS = 262_144
+SEQ_BENCH = f"hot/parallel_apply_seq_{GATE_ROWS}rows"
+ONE_T_BENCH = f"hot/parallel_apply_1t_{GATE_ROWS}rows"
+FOUR_T_BENCH = f"hot/parallel_apply_4t_{GATE_ROWS}rows"
+MIN_SPEEDUP_4T = 2.0
+MAX_1T_OVERHEAD = 1.10
+
+
+def fail(msg):
+    print(f"PERF GATE FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_results(path):
+    """Return {bench name: p50 ns} for one trajectory file, or fail."""
+    if not os.path.exists(path):
+        fail(f"trajectory file {path} does not exist")
+    with open(path) as fh:
+        try:
+            doc = json.load(fh)
+        except json.JSONDecodeError as e:
+            fail(f"trajectory file {path} is not valid JSON: {e}")
+    results = doc.get("results", [])
+    if not results:
+        fail(f"trajectory file {path} holds zero results")
+    by_name = {}
+    for rec in results:
+        if "name" not in rec or "p50_ns" not in rec:
+            fail(f"malformed record in {path}: {rec!r}")
+        by_name[rec["name"]] = float(rec["p50_ns"])
+    return by_name
+
+
+def main(argv):
+    if len(argv) < 2:
+        fail("usage: perf_gate.py BENCH_8.json [more trajectories ...]")
+
+    gate_path = argv[1]
+    p50 = load_results(gate_path)
+    for extra in argv[2:]:
+        load_results(extra)  # (a) non-emptiness only
+
+    for name in (SEQ_BENCH, ONE_T_BENCH, FOUR_T_BENCH):
+        if name not in p50:
+            fail(f"{gate_path} is missing the gated bench {name}")
+
+    seq, one_t, four_t = p50[SEQ_BENCH], p50[ONE_T_BENCH], p50[FOUR_T_BENCH]
+    if min(seq, one_t, four_t) <= 0:
+        fail(f"non-positive p50 in gated benches: seq={seq} 1t={one_t} 4t={four_t}")
+
+    # (c) threads=1 must stay within noise of the sequential path.
+    overhead = one_t / seq
+    print(
+        f"perf gate: 1-thread overhead at {GATE_ROWS} rows: "
+        f"{overhead:.3f}x sequential (limit {MAX_1T_OVERHEAD:.2f}x)"
+    )
+    if overhead > MAX_1T_OVERHEAD:
+        fail(
+            f"1-thread p50 ({one_t:.0f} ns) is {overhead:.2f}x the sequential "
+            f"p50 ({seq:.0f} ns) at {GATE_ROWS} rows — limit is "
+            f"{MAX_1T_OVERHEAD:.2f}x; the parallel knob is taxing the default path"
+        )
+
+    # (b) 4 threads must actually buy parallel speedup.
+    cpus = os.cpu_count() or 1
+    speedup = one_t / four_t
+    if cpus < 4:
+        print(
+            f"perf gate: WARNING — only {cpus} CPU(s) visible; skipping the "
+            f">= {MIN_SPEEDUP_4T:.1f}x 4-thread speedup check (measured "
+            f"{speedup:.2f}x). Run on a >= 4-core machine to enforce it.",
+            file=sys.stderr,
+        )
+    else:
+        print(
+            f"perf gate: 4-thread speedup at {GATE_ROWS} rows: {speedup:.2f}x "
+            f"over 1 thread (required >= {MIN_SPEEDUP_4T:.1f}x, {cpus} CPUs)"
+        )
+        if speedup < MIN_SPEEDUP_4T:
+            fail(
+                f"4-thread p50 ({four_t:.0f} ns) is only {speedup:.2f}x faster "
+                f"than 1-thread ({one_t:.0f} ns) at {GATE_ROWS} rows — "
+                f"required >= {MIN_SPEEDUP_4T:.1f}x on a {cpus}-CPU machine"
+            )
+
+    print("perf gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
