@@ -8,15 +8,19 @@
 #   1. cargo build --release        (tier-1, part 1)
 #   2. cargo test -q                (tier-1, part 2: unit + integration + doctests)
 #   3. fixed-seed reproduction      (MVAP_PROP_SEED pins every property
-#                                    sweep of the reduce, program and
-#                                    parallel differential suites to one
+#                                    sweep of the reduce, program, parallel
+#                                    and search differential suites to one
 #                                    replayable case — proves the replay
 #                                    knob stays wired; any failing sweep
 #                                    prints the same knob + seed. The
 #                                    parallel suite includes the
 #                                    thread-count-invariance property:
 #                                    values/stats/energy/delay identical
-#                                    across threads 1..8)
+#                                    across threads 1..8; the search suite
+#                                    proves scalar ≡ bit-sliced ≡ host
+#                                    reference for Search/Min/Max/TopK
+#                                    values, match sets, stats, energy and
+#                                    delay, coalesced ≡ solo included)
 #   4. mvap modelcheck              (exhaustive model check of the shard
 #                                    coordinator machine: every interleaving
 #                                    of the bounded scenarios, no-loss /
@@ -35,18 +39,22 @@
 #                                    exercised with optimizations on)
 #   7. cargo bench --no-run         (benches must keep compiling)
 #   8. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_3/4/5/8.json at the
-#                                    repo root — the perf trajectory
+#                                    recorded to BENCH_3/4/5/8/9.json at
+#                                    the repo root — the perf trajectory
 #                                    artifacts, each filtered to its PR's
-#                                    benches of record; FAILS LOUDLY if any
-#                                    BENCH_*.json holds zero results, as
-#                                    happened to BENCH_3.json. BENCH_8.json
-#                                    then goes through tools/perf_gate.py:
-#                                    4-thread kernel application at 256k
-#                                    rows must be >= 2x the 1-thread p50
-#                                    (skipped loudly on < 4-CPU machines),
-#                                    and 1-thread must stay within 10% of
-#                                    the sequential path)
+#                                    benches of record (BENCH_9: the
+#                                    in-engine search + topk path); FAILS
+#                                    LOUDLY if any BENCH_*.json holds zero
+#                                    results, as happened to BENCH_3.json.
+#                                    BENCH_8.json then goes through
+#                                    tools/perf_gate.py: 4-thread kernel
+#                                    application at 256k rows must be
+#                                    >= 2x the 1-thread p50 (skipped
+#                                    loudly on < 4-CPU machines), and
+#                                    1-thread must stay within 10% of the
+#                                    sequential path; the gate also
+#                                    distinguishes a missing trajectory
+#                                    file from an unpopulated one)
 #   9. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
 #  10. cargo doc --no-deps          (warnings as errors; the crate also denies
@@ -64,9 +72,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program + parallel differential suites)"
+echo "==> fixed-seed reproduction (MVAP_PROP_SEED=0x5eedc0de, reduce + program + parallel + search differential suites)"
 MVAP_PROP_SEED=0x5eedc0de cargo test -q --test reduce_differential --test program_differential \
-    --test parallel_differential
+    --test parallel_differential --test search_differential
 
 echo "==> mvap modelcheck (exhaustive shard-coordinator verification)"
 cargo run --release --quiet -- modelcheck --dot ../docs/shard_machine.dot
@@ -94,6 +102,8 @@ if [[ "$fast" == "0" ]]; then
     cargo bench --bench bench_main -- --quick --json ../BENCH_5.json hot/
     cargo bench --bench bench_main -- --quick --json ../BENCH_8.json \
         hot/parallel_apply hot/arena hot/fast_path hot/kernel_cache hot/reduce
+    cargo bench --bench bench_main -- --quick --json ../BENCH_9.json \
+        hot/search hot/topk
     for trajectory in ../BENCH_*.json; do
         if ! grep -q '"name":' "$trajectory"; then
             echo "ERROR: quick-bench stage recorded zero results in ${trajectory#../}" >&2
@@ -103,7 +113,7 @@ if [[ "$fast" == "0" ]]; then
 
     echo "==> perf-regression gate (tools/perf_gate.py over BENCH_8.json)"
     python3 ../tools/perf_gate.py ../BENCH_8.json ../BENCH_3.json ../BENCH_4.json \
-        ../BENCH_5.json ../BENCH_7.json
+        ../BENCH_5.json ../BENCH_7.json ../BENCH_9.json
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

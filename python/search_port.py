@@ -1,0 +1,242 @@
+"""Exact Python port of the in-engine content-addressable search path.
+
+Mirrors ``rust/src/ap/search.rs`` — both the host oracles
+(``host_exact``/``host_nearest``/``host_extreme``/``host_topk``) and the
+engine's compare schedules with their event accounting:
+
+* **Exact match** — one modeled compare cycle whose mismatch histogram
+  buckets all segment rows by their mismatching-digit count.
+* **Nearest match** — one single-column compare cycle per digit, each
+  recording ``[matches, rows - matches]``.
+* **Min/Max** — most-significant-digit-first candidate elimination.
+  Per digit, probe values run in scan order (min: ``0, 1, ...``; max:
+  ``n-1, n-2, ...``) until some candidate matches; the *last* scan value
+  is never probed (implied — at radix 2 the classic bit-serial schedule
+  costs one compare per bit), and elimination exits early once a single
+  candidate remains. Every probe is recorded over ALL segment rows
+  (the CAM drives the whole array; candidate gating is tag logic).
+* **TopK** — repeated extreme extraction over a shrinking pool.
+
+Words are little-endian digit lists; ``None`` is a stored don't-care
+(matches every probe, so under elimination it acts as 0 for min and
+``n-1`` for max — the same substitution ``effective_value`` makes).
+
+The energy model is the §VI-A composition ported from
+``rust/src/energy/model.rs``: per-mismatch-class compare energies times
+the histogram, plus 1 nJ per write op — and search never writes, so the
+write term is identically zero. Modeled delay is the compare-pass count.
+
+This port is the derivation path for the Min/Max golden pins in
+``rust/tests/golden_values.rs`` (see ``python/tests/test_search_port.py``,
+which pins the same numbers), runnable in toolchain-less containers.
+"""
+
+# ---------------------------------------------------------------------------
+# energy model constants (rust/src/energy/model.rs)
+# ---------------------------------------------------------------------------
+
+COMPARE_TERNARY = [3.60e-15, 18.49e-15, 25.66e-15, 29.05e-15]
+COMPARE_BINARY = [1.85e-15, 17.65e-15, 25.26e-15, 28.86e-15]
+WRITE_OP_ENERGY = 1e-9
+
+
+def compare_class(table, k):
+    """``CompareEnergy::class``: saturate past the last entry."""
+    return table[k] if k < len(table) else table[-1]
+
+
+def price_compare(hist, radix):
+    """Compare energy (J) of a mismatch histogram under the engine's
+    model choice: the binary table at radix 2, ternary otherwise.
+    Search ops never write, so this is the whole energy."""
+    table = COMPARE_BINARY if radix == 2 else COMPARE_TERNARY
+    return sum(count * compare_class(table, k) for k, count in enumerate(hist))
+
+
+class Stats:
+    """The search-relevant slice of ``ApStats``: compare cycles and the
+    mismatch histogram (search records no writes, ever)."""
+
+    def __init__(self):
+        self.compare_cycles = 0
+        self.hist = []
+
+    def record_compare(self, hist):
+        self.compare_cycles += 1
+        if len(self.hist) < len(hist):
+            self.hist += [0] * (len(hist) - len(self.hist))
+        for k, v in enumerate(hist):
+            self.hist[k] += v
+
+
+# ---------------------------------------------------------------------------
+# host oracles (the pure references)
+# ---------------------------------------------------------------------------
+
+def digit_matches(a, b):
+    return a is None or b is None or a == b
+
+
+def host_exact(values, key):
+    """Ascending rows equal to ``key`` under wildcard matching."""
+    return [
+        r for r, w in enumerate(values)
+        if all(digit_matches(a, b) for a, b in zip(w, key))
+    ]
+
+
+def host_nearest(values, key):
+    """``(ascending rows at minimum digit distance, that distance)``."""
+    def dist(w):
+        return sum(0 if digit_matches(a, b) else 1 for a, b in zip(w, key))
+    best = min(dist(w) for w in values)
+    return [r for r, w in enumerate(values) if dist(w) == best], best
+
+
+def effective_value(word, radix, largest):
+    """Don't-care digits assume the best value for the scan direction."""
+    acc = 0
+    for d in reversed(word):
+        e = (radix - 1 if largest else 0) if d is None else d
+        acc = acc * radix + e
+    return acc
+
+
+def host_extreme(values, radix, largest):
+    """Ascending rows holding the extreme effective value."""
+    eff = [effective_value(w, radix, largest) for w in values]
+    best = max(eff) if largest else min(eff)
+    return [r for r, e in enumerate(eff) if e == best]
+
+
+def host_topk(values, radix, k, largest):
+    """``min(k, rows)`` rows ranked by effective value, ties ascending."""
+    eff = [effective_value(w, radix, largest) for w in values]
+    order = sorted(range(len(values)),
+                   key=lambda r: (-eff[r] if largest else eff[r], r))
+    return order[: min(k, len(values))]
+
+
+# ---------------------------------------------------------------------------
+# the engine schedules, with exact event accounting
+# ---------------------------------------------------------------------------
+
+def search_exact(values, key, stats=None):
+    """One compare cycle; ``hist[k]`` = rows with k mismatching digits."""
+    stats = stats if stats is not None else Stats()
+    misses = [
+        sum(0 if digit_matches(a, b) else 1 for a, b in zip(w, key))
+        for w in values
+    ]
+    hist = [0] * (len(key) + 1)
+    for m in misses:
+        hist[m] += 1
+    stats.record_compare(hist)
+    return [r for r, m in enumerate(misses) if m == 0], stats
+
+
+def search_nearest(values, key, stats=None):
+    """p single-column compare cycles; rows at minimum digit distance."""
+    stats = stats if stats is not None else Stats()
+    rows = len(values)
+    for d, kd in enumerate(key):
+        m = sum(1 for w in values if digit_matches(w[d], kd))
+        stats.record_compare([m, rows - m])
+    hit_rows, best = host_nearest(values, key)
+    return hit_rows, best, stats
+
+
+def _probe(values, d, v, stats):
+    """One single-column compare over all rows: matching row set."""
+    matched = {r for r, w in enumerate(values) if w[d] is None or w[d] == v}
+    stats.record_compare([len(matched), len(values) - len(matched)])
+    return matched
+
+
+def _scan(radix, largest):
+    """``SearchKernel`` probe order; the last value is implied."""
+    order = list(range(radix - 1, -1, -1)) if largest else list(range(radix))
+    return order[: radix - 1]
+
+
+def _eliminate(values, radix, largest, cands, stats):
+    """MS-digit-first elimination over candidate rows ``cands``."""
+    p = len(values[0])
+    cands = list(cands)
+    for d in reversed(range(p)):
+        if len(cands) <= 1:
+            break  # early exit: a lone candidate is already the extreme
+        for v in _scan(radix, largest):
+            matched = _probe(values, d, v, stats)
+            survivors = [r for r in cands if r in matched]
+            if survivors:
+                cands = survivors
+                break
+            # all candidates missed: keep scanning; if every probe
+            # misses, all candidates hold the implied last value
+    return cands
+
+
+def search_extreme(values, radix, largest, stats=None):
+    """Min/Max: ``(ascending extreme rows, stats)``."""
+    stats = stats if stats is not None else Stats()
+    return _eliminate(values, radix, largest, range(len(values)), stats), stats
+
+
+def search_topk(values, radix, k, largest, stats=None):
+    """TopK: repeated extraction; ``min(k, rows)`` rows in rank order."""
+    stats = stats if stats is not None else Stats()
+    want = min(k, len(values))
+    pool = list(range(len(values)))
+    ranked = []
+    while len(ranked) < want:
+        winners = _eliminate(values, radix, largest, pool, stats)
+        for w in winners:
+            if len(ranked) == want:
+                break
+            ranked.append(w)
+        pool = [r for r in pool if r not in winners]
+    return ranked, stats
+
+
+# ---------------------------------------------------------------------------
+# golden-pin derivation (the fixture rust/tests/golden_values.rs shares)
+# ---------------------------------------------------------------------------
+
+GOLDEN_ROWS = 48
+GOLDEN_DIGITS = 4
+
+
+def golden_values(radix):
+    """The deterministic golden fixture: row r stores
+    ``(r * 37 + 11) mod radix**4`` as a 4-digit little-endian word —
+    the same formula `golden_search_elimination_pins` builds with
+    ``Word::from_u128``. No RNG, so both languages agree by construction."""
+    span = radix ** GOLDEN_DIGITS
+    out = []
+    for r in range(GOLDEN_ROWS):
+        v = (r * 37 + 11) % span
+        digits = []
+        for _ in range(GOLDEN_DIGITS):
+            digits.append(v % radix)
+            v //= radix
+        out.append(digits)
+    return out
+
+
+def golden_extreme_pin(radix, largest):
+    """``(passes, hist, compare_energy)`` of Min/Max over the fixture."""
+    values = golden_values(radix)
+    rows, stats = search_extreme(values, radix, largest)
+    assert rows == host_extreme(values, radix, largest)
+    return stats.compare_cycles, list(stats.hist), price_compare(stats.hist, radix)
+
+
+if __name__ == "__main__":
+    for radix in (2, 3, 4, 5):
+        for largest in (False, True):
+            passes, hist, energy = golden_extreme_pin(radix, largest)
+            print(
+                f"radix {radix} {'max' if largest else 'min'}: "
+                f"passes={passes} hist={hist} compare_energy={energy:.6e}"
+            )

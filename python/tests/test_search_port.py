@@ -1,0 +1,193 @@
+"""Validation suite for the content-addressable search port
+(search_port.py). Run directly: ``python3 python/tests/test_search_port.py``
+or via pytest. Three layers:
+
+  1. schedule ≡ oracle: the engine compare schedules (exact, nearest,
+     MS-first Min/Max elimination, repeated-extraction TopK) return the
+     same hit sets as the pure host oracles, over randomized radices 2-5,
+     don't-care stored digits, duplicates, and edge shapes (single row,
+     all-equal, k = 0, k > rows);
+  2. event accounting: pass counts follow the schedule structure (exact
+     = 1, nearest = p, radix-2 extremes ≤ p via the implied last probe,
+     early exit at one candidate = 0 passes), histograms sum to
+     rows × passes, and search records no writes by construction;
+  3. the golden pins: the deterministic radix-2..5 Min/Max fixture whose
+     pass counts, histograms, and compare energies
+     ``rust/tests/golden_values.rs`` asserts verbatim — derived HERE, so
+     a drift in either language breaks one suite or the other.
+
+Seed via MVAP_PROP_SEED for replay, like the Rust property tests.
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from search_port import (  # noqa: E402
+    GOLDEN_DIGITS,
+    GOLDEN_ROWS,
+    Stats,
+    golden_extreme_pin,
+    golden_values,
+    host_exact,
+    host_extreme,
+    host_nearest,
+    host_topk,
+    price_compare,
+    search_exact,
+    search_extreme,
+    search_nearest,
+    search_topk,
+)
+
+SEED = int(os.environ.get("MVAP_PROP_SEED", "0x5ea7c4"), 0)
+
+# The numbers golden_search_elimination_pins (rust/tests/golden_values.rs)
+# asserts: {radix: {largest: (passes, [full_matches, mismatches])}} over
+# the shared (r * 37 + 11) % radix**4 fixture, 48 rows x 4 digits.
+GOLDEN_PINS = {
+    2: {False: (4, [96, 96]), True: (4, [96, 96])},
+    3: {False: (3, [47, 97]), True: (4, [63, 129])},
+    4: {False: (5, [61, 179]), True: (4, [49, 143])},
+    5: {False: (5, [50, 190]), True: (6, [54, 234])},
+}
+
+
+def random_words(rng, rows, p, radix, wild_p=0.0):
+    return [
+        [None if rng.random() < wild_p else rng.randrange(radix)
+         for _ in range(p)]
+        for _ in range(rows)
+    ]
+
+
+def test_exact_schedule_matches_oracle():
+    rng = random.Random(SEED)
+    for _ in range(60):
+        radix = rng.randrange(2, 6)
+        p = rng.randrange(1, 6)
+        rows = rng.randrange(1, 60)
+        values = random_words(rng, rows, p, radix, wild_p=0.05)
+        # half the probes are stored rows (guaranteed hits), half random
+        key = (list(values[rng.randrange(rows)]) if rng.random() < 0.5
+               else [rng.randrange(radix) for _ in range(p)])
+        hits, stats = search_exact(values, key)
+        assert hits == host_exact(values, key)
+        assert stats.compare_cycles == 1, "exact match is one compare cycle"
+        assert sum(stats.hist) == rows
+        assert stats.hist[0] == len(hits)
+
+
+def test_nearest_schedule_matches_oracle():
+    rng = random.Random(SEED + 1)
+    for _ in range(60):
+        radix = rng.randrange(2, 6)
+        p = rng.randrange(1, 6)
+        rows = rng.randrange(1, 60)
+        values = random_words(rng, rows, p, radix, wild_p=0.05)
+        key = [rng.randrange(radix) for _ in range(p)]
+        hits, dist, stats = search_nearest(values, key)
+        want_rows, want_dist = host_nearest(values, key)
+        assert hits == want_rows
+        assert dist == want_dist
+        assert stats.compare_cycles == p, "one compare cycle per digit"
+        assert sum(stats.hist) == rows * p
+
+
+def test_extreme_schedule_matches_oracle():
+    rng = random.Random(SEED + 2)
+    for _ in range(80):
+        radix = rng.randrange(2, 6)
+        p = rng.randrange(1, 7)
+        rows = rng.randrange(1, 80)
+        values = random_words(rng, rows, p, radix, wild_p=0.05)
+        for largest in (False, True):
+            hits, stats = search_extreme(values, radix, largest)
+            assert hits == host_extreme(values, radix, largest)
+            assert sorted(hits) == hits, "ties report ascending"
+            # every pass compares the whole segment
+            assert sum(stats.hist) == rows * stats.compare_cycles
+            # the implied-last-value rule bounds the schedule
+            assert stats.compare_cycles <= p * (radix - 1)
+
+
+def test_topk_schedule_matches_oracle():
+    rng = random.Random(SEED + 3)
+    for _ in range(60):
+        radix = rng.randrange(2, 6)
+        p = rng.randrange(1, 6)
+        rows = rng.randrange(1, 40)
+        values = random_words(rng, rows, p, radix)
+        k = rng.randrange(0, rows + 3)
+        largest = rng.random() < 0.5
+        hits, _ = search_topk(values, radix, k, largest)
+        assert hits == host_topk(values, radix, k, largest)
+        assert len(hits) == min(k, rows)
+
+
+def test_edge_cases():
+    # single row: a lone candidate needs no elimination passes
+    hits, stats = search_extreme([[2, 1]], 3, False)
+    assert hits == [0] and stats.compare_cycles == 0
+    # all rows equal: every row ties
+    values = [[1, 2, 0]] * 5
+    hits, _ = search_extreme(values, 3, True)
+    assert hits == [0, 1, 2, 3, 4]
+    # k = 0 is free; k > rows returns the full ordering
+    hits, stats = search_topk(values, 3, 0, True)
+    assert hits == [] and stats.compare_cycles == 0
+    # little-endian digits: [0,1] stores value 3, [1,0] stores value 1
+    hits, _ = search_topk([[0, 1], [1, 0]], 3, 99, True)
+    assert hits == [0, 1]
+    # empty match set: a miss still costs the one compare cycle
+    hits, stats = search_exact([[0, 0], [2, 2]], [1, 1])
+    assert hits == [] and stats.compare_cycles == 1
+    # a stored don't-care matches any key and acts as the scan-best value
+    assert host_exact([[None, 1], [0, 1]], [2, 1]) == [0]
+    assert host_extreme([[None, 0], [2, 0], [1, 1]], 3, False) == [0]
+    assert host_extreme([[None, 2], [1, 2], [0, 0]], 3, True) == [0]
+
+
+def test_binary_extreme_is_one_pass_per_digit():
+    # radix 2: scan length 1 per digit (the classic bit-serial bound)
+    rng = random.Random(SEED + 4)
+    for _ in range(20):
+        p = rng.randrange(1, 8)
+        rows = rng.randrange(2, 40)
+        values = random_words(rng, rows, p, 2)
+        _, stats = search_extreme(values, 2, True)
+        assert stats.compare_cycles <= p
+
+
+def test_stats_merge_shape():
+    s = Stats()
+    s.record_compare([5, 1, 0, 2])
+    s.record_compare([3, 0, 1])
+    assert s.compare_cycles == 2
+    assert s.hist == [8, 1, 1, 2]
+
+
+def test_golden_pins():
+    # the fixture itself is deterministic and in-radix
+    for radix in (2, 3, 4, 5):
+        values = golden_values(radix)
+        assert len(values) == GOLDEN_ROWS
+        assert all(len(w) == GOLDEN_DIGITS for w in values)
+        assert all(0 <= d < radix for w in values for d in w)
+        for largest in (False, True):
+            passes, hist, energy = golden_extreme_pin(radix, largest)
+            want_passes, want_hist = GOLDEN_PINS[radix][largest]
+            assert passes == want_passes, f"radix {radix} largest={largest}"
+            assert hist == want_hist, f"radix {radix} largest={largest}"
+            # energy is derived, not independent: pin the composition
+            assert abs(energy - price_compare(want_hist, radix)) < 1e-24
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"{name} ok")
+    print("all search_port tests passed")

@@ -463,6 +463,57 @@ fn main() {
             }
         }
     }
+    if run("hot/search") {
+        // In-engine content-addressable search (the PR-9 tentpole): one
+        // exact-match job over `rows` stored 8-trit words, scalar vs
+        // bit-sliced at 1k/16k/256k rows. Exact match is a single compare
+        // pass per plane, so this measures raw tag-readout throughput.
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(17);
+            let values = random_words(&mut rng, rows, p, radix);
+            let key = values[rows / 2].clone();
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let tag = match kind {
+                    StorageKind::Scalar => "scalar",
+                    StorageKind::BitSliced => "bitsliced",
+                };
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let job = Job::search(1, radix, values.clone(), key.clone(), false, vec![]);
+                results.push(bench(
+                    &format!("hot/search_{tag}_{rows}rows"),
+                    Some(rows as u64),
+                    || {
+                        black_box(eng.execute(&job).unwrap());
+                    },
+                ));
+            }
+        }
+    }
+    if run("hot/topk") {
+        // Digit-serial top-k elimination (most-significant plane first,
+        // early exit once the candidate pool drains): k = 16 largest of
+        // `rows` stored words on the bit-sliced backend — the schedule is
+        // data-dependent, so this is the bench of record for the
+        // elimination path's host-side bookkeeping.
+        let radix = Radix::TERNARY;
+        let p = 8usize;
+        for &rows in &[1024usize, 16 * 1024, 256 * 1024] {
+            let mut rng = Rng::new(20);
+            let values = random_words(&mut rng, rows, p, radix);
+            let mut eng =
+                VectorEngine::new(Box::new(NativeBackend::new(StorageKind::BitSliced)));
+            let job = Job::topk(1, radix, values, 16, true, vec![]);
+            results.push(bench(
+                &format!("hot/topk_bitsliced_{rows}rows"),
+                Some(rows as u64),
+                || {
+                    black_box(eng.execute(&job).unwrap());
+                },
+            ));
+        }
+    }
     if run("hot/program") {
         // Compiled dataflow programs (the PR-5 tentpole): the whole op
         // DAG executes as ONE engine invocation with CAM-resident

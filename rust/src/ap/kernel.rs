@@ -117,9 +117,57 @@ impl LutKernel {
 /// clone; compilation happens at most once per signature (misses compile
 /// under the lock — kernels compile in microseconds, and serialising
 /// duplicate compiles is the point of the cache).
+/// Compiled elimination schedule for the search-class ops
+/// ([`crate::ap::search`]): the candidate digit values in probe order for
+/// one `(radix, direction)` pair. Tiny, but compiled once and shared like
+/// the LUT kernels — the probe list is consulted per digit of every
+/// Min/Max/TopK elimination, and caching it keeps the search path on the
+/// same signature-keyed machinery as arithmetic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SearchKernel {
+    radix: crate::mvl::Radix,
+    largest: bool,
+    /// Digit values in scan order, best first (min: `0, 1, …, n−1`;
+    /// max: `n−1, …, 0`).
+    scan: Vec<u8>,
+}
+
+impl SearchKernel {
+    /// Compile the schedule for `(radix, direction)`.
+    pub fn compile(radix: crate::mvl::Radix, largest: bool) -> SearchKernel {
+        let n = radix.n();
+        let scan = if largest { (0..n).rev().collect() } else { (0..n).collect() };
+        SearchKernel { radix, largest, scan }
+    }
+
+    /// The radix the schedule was compiled for.
+    pub fn radix(&self) -> crate::mvl::Radix {
+        self.radix
+    }
+
+    /// Max (true) or min (false) direction.
+    pub fn largest(&self) -> bool {
+        self.largest
+    }
+
+    /// Digit values actually probed with a CAM compare: every scan value
+    /// but the last — when all earlier probes miss, every candidate must
+    /// hold the last value, so it is implied rather than compared (at
+    /// radix 2 this is the classic one-compare-per-bit serial Min/Max).
+    pub fn probes(&self) -> &[u8] {
+        &self.scan[..self.scan.len() - 1]
+    }
+
+    /// The full scan order (probes plus the implied last value).
+    pub fn scan(&self) -> &[u8] {
+        &self.scan
+    }
+}
+
 #[derive(Default)]
 pub struct KernelCache {
     map: Mutex<HashMap<KernelSignature, Arc<LutKernel>>>,
+    search: Mutex<HashMap<(u8, bool), Arc<SearchKernel>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -146,9 +194,30 @@ impl KernelCache {
         (kernel, false)
     }
 
-    /// Compiled kernels currently held.
+    /// The elimination schedule for `(radix, direction)`, compiling on
+    /// first use — the search-op counterpart of [`Self::get_or_compile`].
+    /// The `bool` reports a cache hit, feeding the same kernel-traffic
+    /// counters as the LUT path.
+    pub fn search_kernel(
+        &self,
+        radix: crate::mvl::Radix,
+        largest: bool,
+    ) -> (Arc<SearchKernel>, bool) {
+        let mut map = self.search.lock().expect("search kernel cache poisoned");
+        if let Some(kernel) = map.get(&(radix.n(), largest)) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (Arc::clone(kernel), true);
+        }
+        let kernel = Arc::new(SearchKernel::compile(radix, largest));
+        map.insert((radix.n(), largest), Arc::clone(&kernel));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (kernel, false)
+    }
+
+    /// Compiled kernels currently held (LUT + search schedules).
     pub fn len(&self) -> usize {
         self.map.lock().expect("kernel cache poisoned").len()
+            + self.search.lock().expect("search kernel cache poisoned").len()
     }
 
     /// No kernels compiled yet?
@@ -295,6 +364,32 @@ mod tests {
         assert!(!hit3);
         assert_eq!(cache.len(), 2);
         assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn search_kernel_scan_orders() {
+        let min = SearchKernel::compile(Radix(4), false);
+        assert_eq!(min.scan(), &[0, 1, 2, 3]);
+        assert_eq!(min.probes(), &[0, 1, 2], "the last scan value is implied");
+        let max = SearchKernel::compile(Radix(4), true);
+        assert_eq!(max.scan(), &[3, 2, 1, 0]);
+        assert_eq!(max.probes(), &[3, 2, 1]);
+        assert!(max.largest() && !min.largest());
+        // radix 2: exactly one probe per digit
+        assert_eq!(SearchKernel::compile(Radix::BINARY, true).probes(), &[1]);
+    }
+
+    #[test]
+    fn search_kernels_are_cached() {
+        let cache = KernelCache::new();
+        let (k1, hit1) = cache.search_kernel(Radix::TERNARY, false);
+        assert!(!hit1);
+        let (k2, hit2) = cache.search_kernel(Radix::TERNARY, false);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&k1, &k2));
+        let (_, hit3) = cache.search_kernel(Radix::TERNARY, true);
+        assert!(!hit3, "direction is part of the identity");
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -3,15 +3,22 @@
 //! [`crate::cam::CamArray`] or bit-sliced
 //! [`crate::cam::BitSlicedArray`]), multi-digit in-place arithmetic,
 //! precompiled LUT kernels with a shareable signature-keyed cache
-//! ([`kernel`]), and event statistics for the energy/delay models.
+//! ([`kernel`]), content-addressable search ops — exact/nearest match and
+//! digit-serial Min/Max/TopK elimination ([`search`]) — and event
+//! statistics for the energy/delay models.
 
 pub mod stats;
 pub mod kernel;
 pub mod controller;
 pub mod ops;
+pub mod search;
 
 pub use controller::{Ap, ApArena, ExecMode, ParallelEvents, COPY_PAR_MIN_ROWS};
-pub use kernel::{KernelCache, KernelSignature, LutKernel};
+pub use kernel::{KernelCache, KernelSignature, LutKernel, SearchKernel};
+pub use search::{
+    host_exact, host_extreme, host_extreme_passes, host_nearest, host_topk, host_topk_passes,
+    load_search_operands, search_segments, SearchHits, SearchQuery, SearchSummary,
+};
 pub use ops::{
     add_vectors, adder_lut, extract_operand, extract_reduced, fold_rounds, load_mul_operands,
     load_operands, load_operands_storage, load_reduce_operands, mac_lut, mac_vectors, mul_vectors,

@@ -1,0 +1,762 @@
+//! Content-addressable search over the CAM: exact/nearest match against a
+//! key, and digit-serial Min/Max/TopK via most-significant-digit-first
+//! candidate elimination — the search half of what an associative
+//! processor is for, alongside the in-place arithmetic of [`super::ops`].
+//!
+//! ## Algorithms
+//!
+//! * **Exact match** — one CAM compare cycle over all `p` digit columns
+//!   at once: a row matches when every masked cell matches (stored or key
+//!   don't-cares match anything). The recorded event is a single compare
+//!   with the full mismatch histogram (`hist[k]` = rows with exactly `k`
+//!   mismatching digits), exactly [`CamStorage::compare`]'s accounting.
+//! * **Nearest match** — `p` single-column compare cycles, one per digit;
+//!   a row's digit distance is the number of mismatching digits, and the
+//!   match set is every row at the minimum distance.
+//! * **Min/Max** — most-significant-digit-first elimination: per digit,
+//!   candidate values are probed in scan order (min: `0, 1, …`; max:
+//!   `n−1, n−2, …`) until some candidate row matches; the candidate set
+//!   restricts to those rows and the scan moves to the next digit. The
+//!   last scan value is never probed — if every earlier probe missed, all
+//!   candidates must hold it (the classic bit-serial max needs exactly
+//!   one compare per bit at radix 2). Elimination exits early when a
+//!   single candidate remains. Probe order is compiled once per
+//!   `(radix, direction)` as a [`super::kernel::SearchKernel`].
+//! * **TopK** — repeated Min/Max extraction: each round's winners leave
+//!   the candidate pool and append to the ranking in ascending row order.
+//!
+//! ## Tie-breaking (deterministic, pinned by tests)
+//!
+//! Min/Max report *every* row holding the extreme value, in ascending row
+//! order. TopK ranks by value (elimination order), breaking ties by
+//! ascending row index; exactly `min(k, rows)` entries are returned.
+//!
+//! ## Don't-care digits
+//!
+//! A stored `DONT_CARE` digit matches every probe, so under elimination
+//! it behaves as the best value for the scan direction: `0` for Min,
+//! `n−1` for Max. The host references model exactly this substitution.
+//!
+//! ## Statistics and segments
+//!
+//! Search ops are read-only: no write cycles, no set/reset events — the
+//! energy model prices the compare histograms only. Every compare is
+//! recorded over *all* rows of its segment (the CAM drives every row of
+//! the array each cycle; candidate gating lives in the tag logic), and
+//! each segment records exactly the compare events of its own schedule —
+//! so per-segment statistics equal a solo run of that segment by
+//! construction, which is what lets the coordinator coalesce search jobs
+//! stats-exactly ([`crate::coordinator::VectorEngine`]).
+
+use super::kernel::SearchKernel;
+use super::stats::ApStats;
+use crate::cam::{CamStorage, StorageKind};
+use crate::mvl::{Radix, Word, DONT_CARE};
+use std::collections::HashMap;
+
+/// One content-addressable query, applied per segment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SearchQuery {
+    /// All rows equal to `key` (don't-cares on either side match).
+    Exact { key: Word },
+    /// All rows at minimum digit distance from `key`.
+    Nearest { key: Word },
+    /// All rows holding the extreme value (`largest`: max, else min).
+    Extreme { largest: bool },
+    /// The `k` best rows in rank order (`largest`: descending).
+    TopK { k: usize, largest: bool },
+}
+
+impl SearchQuery {
+    /// Compact tag for labels and reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SearchQuery::Exact { .. } => "exact",
+            SearchQuery::Nearest { .. } => "nearest",
+            SearchQuery::Extreme { largest: false } => "min",
+            SearchQuery::Extreme { largest: true } => "max",
+            SearchQuery::TopK { .. } => "topk",
+        }
+    }
+
+    /// The key word, for queries that carry one.
+    pub fn key(&self) -> Option<&Word> {
+        match self {
+            SearchQuery::Exact { key } | SearchQuery::Nearest { key } => Some(key),
+            _ => None,
+        }
+    }
+}
+
+/// One segment's search result.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SearchHits {
+    /// Matching rows, segment-relative. Exact/Nearest/Min/Max: ascending;
+    /// TopK: rank order (ties ascending).
+    pub rows: Vec<usize>,
+    /// The stored word of each matching row (don't-care digits as stored).
+    pub values: Vec<Word>,
+    /// Nearest-match: the minimum digit distance (0 ⇒ exact matches
+    /// exist). 0 for all other queries.
+    pub distance: u32,
+    /// Compare passes this segment's schedule executed — the delay driver
+    /// (each pass is one CAM compare cycle; search ops never write).
+    pub passes: u64,
+}
+
+/// What a search run did, summed over segments (the coordinator meters
+/// these and prices elimination-kernel cache traffic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchSummary {
+    /// Compare passes executed over all segments.
+    pub passes: u64,
+    /// Elimination-kernel cache hits / misses during the run.
+    pub kernel_hits: u64,
+    pub kernel_misses: u64,
+}
+
+/// Load search operands into a fresh `rows × p` array: row r holds
+/// `values[r]`, digit d in column d. Stored words may carry
+/// [`DONT_CARE`] digits (build them with [`Word::from_digits_wild`]).
+pub fn load_search_operands(
+    kind: StorageKind,
+    radix: Radix,
+    values: &[Word],
+) -> (CamStorage, usize) {
+    assert!(!values.is_empty());
+    let p = values[0].width();
+    let mut data = Vec::with_capacity(values.len() * p);
+    for w in values {
+        assert_eq!(w.width(), p, "ragged operand widths");
+        assert_eq!(w.radix(), radix, "operand radix mismatch");
+        data.extend_from_slice(w.digits());
+    }
+    (CamStorage::from_data(kind, radix, values.len(), p, &data), p)
+}
+
+/// Per-run memo of single-column compare tag vectors, keyed by
+/// `(column, probe digit)`. Compares are read-only, so a tag vector is
+/// valid for the whole run — segments sharing a probe (coalesced search
+/// jobs over one array) evaluate it once.
+struct TagCache<'a> {
+    storage: &'a CamStorage,
+    tags: HashMap<(usize, u8), Vec<bool>>,
+}
+
+impl<'a> TagCache<'a> {
+    fn new(storage: &'a CamStorage) -> Self {
+        TagCache { storage, tags: HashMap::new() }
+    }
+
+    fn get(&mut self, col: usize, digit: u8) -> &Vec<bool> {
+        self.tags
+            .entry((col, digit))
+            .or_insert_with(|| self.storage.compare(&[col], &[digit]).tags)
+    }
+}
+
+/// Extract the stored word of an absolute row over `cols`.
+fn stored_word(storage: &CamStorage, cols: &[usize], row: usize) -> Word {
+    let digits: Vec<u8> = cols.iter().map(|&c| storage.get(row, c)).collect();
+    Word::from_digits_wild(digits, storage.radix())
+}
+
+/// Run `queries` over the array's `cols` digit columns (little-endian:
+/// `cols[d]` holds digit d), one query per segment. `queries[i].1` is the
+/// segment's cumulative end row (strictly increasing; the last bound may
+/// stop short of the array — trailing rows are outside every segment, the
+/// program executor's garbage-row case). Returns per-segment hits and
+/// statistics; see the module docs for the event model.
+pub fn search_segments(
+    storage: &CamStorage,
+    cols: &[usize],
+    queries: &[(SearchQuery, usize)],
+    kernels: &super::kernel::KernelCache,
+) -> (Vec<SearchHits>, Vec<ApStats>, SearchSummary) {
+    assert!(!queries.is_empty(), "at least one segment required");
+    assert!(
+        queries.windows(2).all(|w| w[0].1 < w[1].1) && queries[0].1 > 0,
+        "segment bounds must be strictly increasing (no empty segments)"
+    );
+    assert!(
+        *cols.iter().max().expect("at least one digit column") < storage.cols(),
+        "digit column out of range"
+    );
+    let live = queries.last().unwrap().1;
+    assert!(live <= storage.rows(), "segments exceed the array");
+
+    let mut cache = TagCache::new(storage);
+    let mut summary = SearchSummary::default();
+    let mut hits = Vec::with_capacity(queries.len());
+    let mut stats = Vec::with_capacity(queries.len());
+    let mut start = 0usize;
+    for (q, end) in queries {
+        let end = *end;
+        let mut seg_stats = ApStats::default();
+        let mut seg = match q {
+            SearchQuery::Exact { key } => {
+                exact_segment(storage, cols, key, start, end, &mut cache, &mut seg_stats)
+            }
+            SearchQuery::Nearest { key } => {
+                nearest_segment(storage, cols, key, start, end, &mut cache, &mut seg_stats)
+            }
+            SearchQuery::Extreme { largest } => {
+                let (kernel, hit) = kernels.search_kernel(storage.radix(), *largest);
+                summary.kernel_hits += hit as u64;
+                summary.kernel_misses += !hit as u64;
+                let cands =
+                    eliminate(cols, &kernel, start, end, (start..end).collect(), &mut cache, &mut seg_stats);
+                let mut h = SearchHits::default();
+                h.passes = seg_stats.compare_cycles;
+                h.rows = cands.iter().map(|&r| r - start).collect();
+                h.values = cands.iter().map(|&r| stored_word(storage, cols, r)).collect();
+                h
+            }
+            SearchQuery::TopK { k, largest } => {
+                let (kernel, hit) = kernels.search_kernel(storage.radix(), *largest);
+                summary.kernel_hits += hit as u64;
+                summary.kernel_misses += !hit as u64;
+                topk_segment(storage, cols, &kernel, *k, start, end, &mut cache, &mut seg_stats)
+            }
+        };
+        seg.passes = seg_stats.compare_cycles;
+        summary.passes += seg.passes;
+        hits.push(seg);
+        stats.push(seg_stats);
+        start = end;
+    }
+    (hits, stats, summary)
+}
+
+/// Record one single-column compare cycle over the segment `[start, end)`
+/// and return the matching segment rows' absolute indices.
+fn probe(
+    col: usize,
+    digit: u8,
+    start: usize,
+    end: usize,
+    cache: &mut TagCache,
+    stats: &mut ApStats,
+) -> Vec<usize> {
+    let tags = cache.get(col, digit);
+    let matched: Vec<usize> = (start..end).filter(|&r| tags[r]).collect();
+    let m = matched.len() as u64;
+    stats.record_compare(&[m, (end - start) as u64 - m]);
+    matched
+}
+
+/// Exact match: one modeled compare cycle over all digit columns; the
+/// histogram buckets segment rows by their mismatching-digit count.
+fn exact_segment(
+    storage: &CamStorage,
+    cols: &[usize],
+    key: &Word,
+    start: usize,
+    end: usize,
+    cache: &mut TagCache,
+    stats: &mut ApStats,
+) -> SearchHits {
+    assert_eq!(key.width(), cols.len(), "key width must match the searched field");
+    let misses = digit_misses(cols, key, start, end, cache);
+    let mut hist = vec![0u64; cols.len() + 1];
+    for &m in &misses {
+        hist[m as usize] += 1;
+    }
+    stats.record_compare(&hist);
+    let rows: Vec<usize> = misses
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m == 0)
+        .map(|(i, _)| i)
+        .collect();
+    let values = rows.iter().map(|&r| stored_word(storage, cols, start + r)).collect();
+    SearchHits { rows, values, distance: 0, passes: 0 }
+}
+
+/// Nearest match: p single-column compare cycles; match set = rows at the
+/// minimum digit distance.
+fn nearest_segment(
+    storage: &CamStorage,
+    cols: &[usize],
+    key: &Word,
+    start: usize,
+    end: usize,
+    cache: &mut TagCache,
+    stats: &mut ApStats,
+) -> SearchHits {
+    assert_eq!(key.width(), cols.len(), "key width must match the searched field");
+    for (d, &col) in cols.iter().enumerate() {
+        let tags = cache.get(col, key.digits()[d]);
+        let m = (start..end).filter(|&r| tags[r]).count() as u64;
+        stats.record_compare(&[m, (end - start) as u64 - m]);
+    }
+    let misses = digit_misses(cols, key, start, end, cache);
+    let best = *misses.iter().min().expect("non-empty segment");
+    let rows: Vec<usize> = misses
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m == best)
+        .map(|(i, _)| i)
+        .collect();
+    let values = rows.iter().map(|&r| stored_word(storage, cols, start + r)).collect();
+    SearchHits { rows, values, distance: best, passes: 0 }
+}
+
+/// Per-segment-row mismatching-digit counts against `key` (don't-cares on
+/// either side match), derived from cached single-column tag vectors so
+/// both storage backends agree bit-for-bit.
+fn digit_misses(
+    cols: &[usize],
+    key: &Word,
+    start: usize,
+    end: usize,
+    cache: &mut TagCache,
+) -> Vec<u32> {
+    let mut misses = vec![0u32; end - start];
+    for (d, &col) in cols.iter().enumerate() {
+        let tags = cache.get(col, key.digits()[d]);
+        for (i, m) in misses.iter_mut().enumerate() {
+            *m += !tags[start + i] as u32;
+        }
+    }
+    misses
+}
+
+/// MS-digit-first candidate elimination over absolute rows `cands`
+/// (within segment `[start, end)` — the compare events are recorded over
+/// the whole segment). Returns the surviving candidates, ascending.
+fn eliminate(
+    cols: &[usize],
+    kernel: &SearchKernel,
+    start: usize,
+    end: usize,
+    mut cands: Vec<usize>,
+    cache: &mut TagCache,
+    stats: &mut ApStats,
+) -> Vec<usize> {
+    for &col in cols.iter().rev() {
+        if cands.len() <= 1 {
+            break; // early exit: a single candidate is already the extreme
+        }
+        for &v in kernel.probes() {
+            let matched = probe(col, v, start, end, cache, stats);
+            let survivors: Vec<usize> =
+                cands.iter().copied().filter(|r| matched.binary_search(r).is_ok()).collect();
+            if !survivors.is_empty() {
+                cands = survivors;
+                break;
+            }
+            // all candidates missed this probe: keep scanning; if every
+            // probe misses, all candidates hold the implied last value
+        }
+    }
+    cands
+}
+
+/// TopK: repeated extreme extraction, winners removed from the pool and
+/// appended in ascending row order until `min(k, rows)` entries rank.
+#[allow(clippy::too_many_arguments)]
+fn topk_segment(
+    storage: &CamStorage,
+    cols: &[usize],
+    kernel: &SearchKernel,
+    k: usize,
+    start: usize,
+    end: usize,
+    cache: &mut TagCache,
+    stats: &mut ApStats,
+) -> SearchHits {
+    let want = k.min(end - start);
+    let mut pool: Vec<usize> = (start..end).collect();
+    let mut rows = Vec::with_capacity(want);
+    while rows.len() < want {
+        let winners = eliminate(cols, kernel, start, end, pool.clone(), cache, stats);
+        for &w in &winners {
+            if rows.len() == want {
+                break;
+            }
+            rows.push(w - start);
+        }
+        pool.retain(|r| !winners.contains(r));
+    }
+    let values = rows.iter().map(|&r| stored_word(storage, cols, start + r)).collect();
+    SearchHits { rows, values, distance: 0, passes: 0 }
+}
+
+// ---------------------------------------------------------------------------
+// Host references: the pure-`Word` oracles the differential suite checks
+// both storage backends against (and the source of the golden pins, via
+// the exact Python port in python/search_port.py).
+// ---------------------------------------------------------------------------
+
+fn digit_matches(a: u8, b: u8) -> bool {
+    a == DONT_CARE || b == DONT_CARE || a == b
+}
+
+/// Host oracle for exact match: ascending rows equal to `key` under
+/// wildcard matching.
+pub fn host_exact(values: &[Word], key: &Word) -> Vec<usize> {
+    values
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| {
+            w.digits().iter().zip(key.digits()).all(|(&a, &b)| digit_matches(a, b))
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Host oracle for nearest match: `(ascending rows at minimum digit
+/// distance, that distance)`.
+pub fn host_nearest(values: &[Word], key: &Word) -> (Vec<usize>, u32) {
+    let dist = |w: &Word| -> u32 {
+        w.digits()
+            .iter()
+            .zip(key.digits())
+            .filter(|(&a, &b)| !digit_matches(a, b))
+            .count() as u32
+    };
+    let best = values.iter().map(dist).min().expect("non-empty values");
+    let rows = values
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| dist(w) == best)
+        .map(|(i, _)| i)
+        .collect();
+    (rows, best)
+}
+
+/// The effective comparison value of a stored word under elimination:
+/// don't-care digits assume the best value for the scan direction.
+pub fn effective_value(w: &Word, largest: bool) -> u128 {
+    let n = w.radix().n();
+    w.digits().iter().rev().fold(0u128, |acc, &d| {
+        let e = if d == DONT_CARE {
+            if largest {
+                n - 1
+            } else {
+                0
+            }
+        } else {
+            d
+        };
+        acc * n as u128 + e as u128
+    })
+}
+
+/// Host oracle for Min/Max: ascending rows holding the extreme effective
+/// value.
+pub fn host_extreme(values: &[Word], largest: bool) -> Vec<usize> {
+    let eff: Vec<u128> = values.iter().map(|w| effective_value(w, largest)).collect();
+    let best = if largest {
+        *eff.iter().max().expect("non-empty values")
+    } else {
+        *eff.iter().min().expect("non-empty values")
+    };
+    (0..values.len()).filter(|&i| eff[i] == best).collect()
+}
+
+/// Host oracle for TopK: `min(k, rows)` row indices ranked by effective
+/// value (ties ascending by row).
+pub fn host_topk(values: &[Word], k: usize, largest: bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    order.sort_by_key(|&i| {
+        let e = effective_value(&values[i], largest);
+        (if largest { u128::MAX - e } else { e }, i)
+    });
+    order.truncate(k.min(values.len()));
+    order
+}
+
+/// Host oracle for the elimination pass count of one Min/Max segment —
+/// the delay driver the golden pins assert. Simulates the exact probe
+/// schedule: per MS-first digit, probes run until the first candidate
+/// match, the last scan value is implied (never probed), and elimination
+/// exits early once a single candidate remains.
+pub fn host_extreme_passes(values: &[Word], largest: bool) -> u64 {
+    host_eliminate(values, largest, &(0..values.len()).collect::<Vec<_>>()).1
+}
+
+/// Shared host elimination: `(surviving candidates, passes)`.
+fn host_eliminate(values: &[Word], largest: bool, cands: &[usize]) -> (Vec<usize>, u64) {
+    let n = values[0].radix().n();
+    let p = values[0].width();
+    let scan: Vec<u8> =
+        if largest { (0..n).rev().collect() } else { (0..n).collect() };
+    let eff = |r: usize, d: usize| -> u8 {
+        let v = values[r].digits()[d];
+        if v == DONT_CARE {
+            if largest {
+                n - 1
+            } else {
+                0
+            }
+        } else {
+            v
+        }
+    };
+    let mut cands = cands.to_vec();
+    let mut passes = 0u64;
+    for d in (0..p).rev() {
+        if cands.len() <= 1 {
+            break;
+        }
+        for (i, &v) in scan[..n as usize - 1].iter().enumerate() {
+            passes += 1;
+            let survivors: Vec<usize> =
+                cands.iter().copied().filter(|&r| eff(r, d) == v).collect();
+            if !survivors.is_empty() {
+                cands = survivors;
+                break;
+            }
+            if i == n as usize - 2 {
+                // every probe missed: all candidates hold the last value
+            }
+        }
+        // if no probe matched, candidates all hold scan[n-1]: unchanged
+    }
+    (cands, passes)
+}
+
+/// Host oracle for the TopK pass count (repeated extraction over the
+/// shrinking pool, same schedule as [`host_extreme_passes`]).
+pub fn host_topk_passes(values: &[Word], k: usize, largest: bool) -> u64 {
+    let want = k.min(values.len());
+    let mut pool: Vec<usize> = (0..values.len()).collect();
+    let mut ranked = 0usize;
+    let mut passes = 0u64;
+    while ranked < want {
+        let (winners, p) = host_eliminate(values, largest, &pool);
+        passes += p;
+        ranked += winners.len().min(want - ranked);
+        pool.retain(|r| !winners.contains(r));
+    }
+    passes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::KernelCache;
+    use crate::util::prop::{forall, Config};
+
+    fn wild(digits: Vec<u8>, radix: Radix) -> Word {
+        Word::from_digits_wild(digits, radix)
+    }
+
+    fn run(
+        kind: StorageKind,
+        radix: Radix,
+        values: &[Word],
+        q: SearchQuery,
+    ) -> (SearchHits, ApStats) {
+        let (storage, p) = load_search_operands(kind, radix, values);
+        let cols: Vec<usize> = (0..p).collect();
+        let cache = KernelCache::new();
+        let (mut hits, mut stats, _) =
+            search_segments(&storage, &cols, &[(q, values.len())], &cache);
+        (hits.remove(0), stats.remove(0))
+    }
+
+    #[test]
+    fn exact_match_finds_all_duplicates() {
+        let radix = Radix::TERNARY;
+        let values: Vec<Word> = [[1, 2, 0], [0, 1, 1], [1, 2, 0], [2, 2, 2]]
+            .iter()
+            .map(|d| Word::from_digits(d.to_vec(), radix))
+            .collect();
+        let key = Word::from_digits(vec![1, 2, 0], radix);
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let (h, stats) = run(kind, radix, &values, SearchQuery::Exact { key: key.clone() });
+            assert_eq!(h.rows, vec![0, 2]);
+            assert_eq!(h.values, vec![values[0].clone(), values[2].clone()]);
+            assert_eq!(h.passes, 1, "exact match is one compare cycle");
+            assert_eq!(stats.compare_cycles, 1);
+            assert_eq!(stats.write_cycles, 0, "search ops never write");
+            assert_eq!(stats.row_compares(), 4);
+            assert_eq!(h.rows, host_exact(&values, &key));
+        }
+    }
+
+    #[test]
+    fn exact_match_empty_set_and_wildcards() {
+        let radix = Radix::TERNARY;
+        let values = vec![
+            Word::from_digits(vec![0, 1], radix),
+            wild(vec![DONT_CARE, 1], radix),
+            Word::from_digits(vec![2, 2], radix),
+        ];
+        let key = Word::from_digits(vec![1, 1], radix);
+        let (h, _) = run(StorageKind::Scalar, radix, &values, SearchQuery::Exact { key: key.clone() });
+        assert_eq!(h.rows, vec![1], "stored don't-care matches any key digit");
+        // no row matches [1, 0]
+        let key = Word::from_digits(vec![1, 0], radix);
+        let (h, stats) = run(StorageKind::BitSliced, radix, &values, SearchQuery::Exact { key });
+        assert!(h.rows.is_empty());
+        assert_eq!(stats.compare_cycles, 1, "a miss still costs the compare");
+    }
+
+    #[test]
+    fn nearest_match_reports_distance() {
+        let radix = Radix::TERNARY;
+        let values: Vec<Word> = [[0, 0, 0], [2, 1, 0], [1, 1, 2], [2, 2, 2]]
+            .iter()
+            .map(|d| Word::from_digits(d.to_vec(), radix))
+            .collect();
+        let key = Word::from_digits(vec![2, 1, 2], radix);
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let (h, stats) = run(kind, radix, &values, SearchQuery::Nearest { key: key.clone() });
+            let (want_rows, want_d) = host_nearest(&values, &key);
+            assert_eq!(h.rows, want_rows);
+            assert_eq!(h.distance, want_d);
+            assert_eq!(h.passes, 3, "one compare cycle per digit");
+            assert_eq!(stats.compare_cycles, 3);
+        }
+    }
+
+    #[test]
+    fn min_max_match_host_oracle() {
+        forall(Config::cases(40), |rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let p = 1 + rng.index(6);
+            let rows = 1 + rng.index(80);
+            let values: Vec<Word> = (0..rows)
+                .map(|_| {
+                    let digits = (0..p)
+                        .map(|_| {
+                            if rng.chance(0.05) {
+                                DONT_CARE
+                            } else {
+                                rng.digit(radix.n())
+                            }
+                        })
+                        .collect();
+                    wild(digits, radix)
+                })
+                .collect();
+            for largest in [false, true] {
+                for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                    let (h, stats) =
+                        run(kind, radix, &values, SearchQuery::Extreme { largest });
+                    assert_eq!(h.rows, host_extreme(&values, largest), "{kind:?} largest={largest}");
+                    assert_eq!(h.passes, host_extreme_passes(&values, largest));
+                    assert_eq!(stats.compare_cycles, h.passes);
+                    assert_eq!(stats.write_cycles, 0);
+                    assert_eq!(stats.write_ops(), 0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn single_row_extreme_is_free() {
+        let radix = Radix::TERNARY;
+        let values = vec![Word::from_digits(vec![2, 1], radix)];
+        let (h, stats) = run(StorageKind::Scalar, radix, &values, SearchQuery::Extreme { largest: false });
+        assert_eq!(h.rows, vec![0]);
+        assert_eq!(h.passes, 0, "a lone candidate needs no elimination");
+        assert_eq!(stats, ApStats::default());
+    }
+
+    #[test]
+    fn binary_extreme_is_one_pass_per_digit() {
+        // radix 2: the scan probes a single value per digit, so a full
+        // elimination is at most p passes (the classic bit-serial bound)
+        let radix = Radix::BINARY;
+        let values: Vec<Word> = [[0, 1, 0], [1, 1, 0], [0, 0, 1], [1, 0, 1]]
+            .iter()
+            .map(|d| Word::from_digits(d.to_vec(), radix))
+            .collect();
+        let (h, _) = run(StorageKind::BitSliced, radix, &values, SearchQuery::Extreme { largest: true });
+        assert!(h.passes <= 3);
+        assert_eq!(h.rows, host_extreme(&values, true));
+    }
+
+    #[test]
+    fn topk_ranks_with_deterministic_ties() {
+        let radix = Radix::TERNARY;
+        // values: 5, 7, 5, 1, 7  (duplicates on both extremes)
+        let values: Vec<Word> = [5u128, 7, 5, 1, 7]
+            .iter()
+            .map(|&v| Word::from_u128(v, 3, radix))
+            .collect();
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let (h, _) = run(kind, radix, &values, SearchQuery::TopK { k: 3, largest: true });
+            assert_eq!(h.rows, vec![1, 4, 0], "ties break by ascending row");
+            assert_eq!(h.rows, host_topk(&values, 3, true));
+            let (h, _) = run(kind, radix, &values, SearchQuery::TopK { k: 3, largest: false });
+            assert_eq!(h.rows, vec![3, 0, 2]);
+        }
+    }
+
+    #[test]
+    fn topk_edge_cases() {
+        let radix = Radix::TERNARY;
+        let values: Vec<Word> = (0..4).map(|v| Word::from_u128(v, 3, radix)).collect();
+        // k = 0: empty, free
+        let (h, stats) = run(StorageKind::Scalar, radix, &values, SearchQuery::TopK { k: 0, largest: false });
+        assert!(h.rows.is_empty());
+        assert_eq!(stats, ApStats::default());
+        // k > rows: the full ordering
+        let (h, _) = run(StorageKind::BitSliced, radix, &values, SearchQuery::TopK { k: 99, largest: false });
+        assert_eq!(h.rows, vec![0, 1, 2, 3]);
+        assert_eq!(h.rows.len(), values.len());
+    }
+
+    #[test]
+    fn topk_matches_host_oracle() {
+        forall(Config::cases(30), |rng| {
+            let radix = Radix(2 + rng.digit(4));
+            let p = 1 + rng.index(5);
+            let rows = 1 + rng.index(40);
+            let values: Vec<Word> = (0..rows)
+                .map(|_| {
+                    Word::from_digits((0..p).map(|_| rng.digit(radix.n())).collect(), radix)
+                })
+                .collect();
+            let k = rng.index(rows + 3);
+            let largest = rng.chance(0.5);
+            let q = SearchQuery::TopK { k, largest };
+            let (h1, s1) = run(StorageKind::Scalar, radix, &values, q.clone());
+            let (h2, s2) = run(StorageKind::BitSliced, radix, &values, q);
+            assert_eq!(h1, h2, "storage backends agree");
+            assert_eq!(s1, s2);
+            assert_eq!(h1.rows, host_topk(&values, k, largest));
+            assert_eq!(h1.passes, host_topk_passes(&values, k, largest));
+        });
+    }
+
+    #[test]
+    fn segments_are_independent_and_exact() {
+        // a two-segment min: each segment's stats equal its solo run
+        let radix = Radix::TERNARY;
+        let values: Vec<Word> =
+            [3u128, 8, 1, 7, 7, 2].iter().map(|&v| Word::from_u128(v, 2, radix)).collect();
+        let (storage, p) = load_search_operands(StorageKind::BitSliced, radix, &values);
+        let cols: Vec<usize> = (0..p).collect();
+        let cache = KernelCache::new();
+        let q = SearchQuery::Extreme { largest: false };
+        let (hits, stats, summary) =
+            search_segments(&storage, &cols, &[(q.clone(), 3), (q.clone(), 6)], &cache);
+        assert_eq!(hits[0].rows, vec![2], "min of [3,8,1]");
+        assert_eq!(hits[1].rows, vec![2], "min of [7,7,2] (segment-relative)");
+        assert_eq!(summary.passes, hits[0].passes + hits[1].passes);
+        for (seg, (lo, hi)) in [(0, (0, 3)), (1, (3, 6))] {
+            let (solo_hits, solo_stats) =
+                run(StorageKind::BitSliced, radix, &values[lo..hi], q.clone());
+            assert_eq!(hits[seg].rows, solo_hits.rows, "segment {seg}");
+            assert_eq!(stats[seg], solo_stats, "segment {seg} stats equal solo");
+        }
+    }
+
+    #[test]
+    fn all_rows_match_when_equal() {
+        let radix = Radix::TERNARY;
+        let values = vec![Word::from_u128(4, 2, radix); 5];
+        let (h, _) = run(StorageKind::Scalar, radix, &values, SearchQuery::Extreme { largest: true });
+        assert_eq!(h.rows, vec![0, 1, 2, 3, 4], "ties report every row");
+        let key = Word::from_u128(4, 2, radix);
+        let (h, _) = run(StorageKind::BitSliced, radix, &values, SearchQuery::Exact { key });
+        assert_eq!(h.rows.len(), 5);
+    }
+}

@@ -8,7 +8,10 @@
 
 use super::batcher::Tile;
 use super::job::OpKind;
-use crate::ap::{Ap, ApArena, ApStats, ExecMode, KernelCache, ParallelEvents, ReduceSummary};
+use crate::ap::{
+    Ap, ApArena, ApStats, ExecMode, KernelCache, ParallelEvents, ReduceSummary, SearchHits,
+    SearchQuery, SearchSummary,
+};
 use crate::cam::{CamStorage, Parallelism, StorageKind};
 use crate::lutgen::Lut;
 use crate::mvl::{Radix, Word};
@@ -48,6 +51,11 @@ impl std::str::FromStr for BackendKind {
 /// carry)` values, per-stat-segment statistics, and the round/movement
 /// summary.
 pub type ReduceOutput = (Vec<(Word, u8)>, Vec<ApStats>, ReduceSummary);
+
+/// What [`Backend::run_search`] returns: per-segment hits (rows
+/// segment-relative), per-segment statistics, and the pass/kernel-event
+/// summary.
+pub type SearchOutput = (Vec<SearchHits>, Vec<ApStats>, SearchSummary);
 
 /// A tile executor.
 ///
@@ -154,10 +162,32 @@ pub trait Backend {
         )
     }
 
-    /// Does this backend implement [`Backend::run_program`]? The engine
-    /// only routes compiled programs to backends that do.
-    fn supports_programs(&self) -> bool {
+    /// Does this backend implement [`Backend::run_search`]? The engine
+    /// only routes search-class jobs ([`OpKind::is_search`]) to backends
+    /// that do.
+    fn supports_search(&self) -> bool {
         false
+    }
+
+    /// Execute content-addressable queries over one loaded array
+    /// ([`crate::ap::search_segments`]): `values` (one stored word per
+    /// row) are queried per segment of `queries` — each entry pairs a
+    /// query with its cumulative row end bound (strictly increasing, last
+    /// == values.len()). Search ops are read-only, so segments evolve
+    /// independently and coalesced per-segment statistics equal solo runs
+    /// by construction. Returns per-segment hits (rows segment-relative),
+    /// per-segment statistics, and the pass/kernel-event summary.
+    fn run_search(
+        &mut self,
+        radix: Radix,
+        values: &[Word],
+        queries: &[(SearchQuery, usize)],
+    ) -> anyhow::Result<SearchOutput> {
+        let _ = (radix, values, queries);
+        anyhow::bail!(
+            "backend '{}' does not support in-engine search (native backends only)",
+            self.name()
+        )
     }
 
     /// Execute a bound dataflow program ([`crate::program`]): load the
@@ -405,6 +435,28 @@ impl Backend for NativeBackend {
         Ok((results, stats, summary))
     }
 
+    fn supports_search(&self) -> bool {
+        true
+    }
+
+    fn run_search(
+        &mut self,
+        radix: Radix,
+        values: &[Word],
+        queries: &[(SearchQuery, usize)],
+    ) -> anyhow::Result<SearchOutput> {
+        use crate::ap::{load_search_operands, search_segments};
+        // One array sized to the workload — search segments share probe
+        // tag vectors through the per-run cache, so the array is not
+        // tiled; elimination kernels come from the shared cache.
+        let (storage, p) = load_search_operands(self.storage, radix, values);
+        let cols: Vec<usize> = (0..p).collect();
+        let (hits, stats, summary) = search_segments(&storage, &cols, queries, &self.kernels);
+        self.kernel_hits += summary.kernel_hits;
+        self.kernel_misses += summary.kernel_misses;
+        Ok((hits, stats, summary))
+    }
+
     fn supports_programs(&self) -> bool {
         true
     }
@@ -422,9 +474,12 @@ impl Backend for NativeBackend {
             sub: luts.sub.as_ref().map(|l| (l, self.kernel(l, mode))),
             mac: luts.mac.as_ref().map(|l| (l, self.kernel(l, mode))),
             copy: luts.copy.as_ref().map(|l| (l, self.kernel(l, mode))),
+            search: Some(Arc::clone(&self.kernels)),
         };
         let run = program_exec::run_storage(self.storage, bound, &kernels, self.par)?;
         self.par_events.merge(run.par_events);
+        self.kernel_hits += run.search.kernel_hits;
+        self.kernel_misses += run.search.kernel_misses;
         Ok(run)
     }
 }
@@ -639,6 +694,11 @@ mod tests {
             .run_reduce(radix, true, &lut, &a, &[1], &[1])
             .unwrap_err();
         assert!(format!("{err}").contains("in-engine reduction"));
+        assert!(!d.supports_search());
+        let err = d
+            .run_search(radix, &a, &[(SearchQuery::Extreme { largest: false }, 1)])
+            .unwrap_err();
+        assert!(format!("{err}").contains("in-engine search"));
         let plan = std::sync::Arc::new(crate::program::builtin::dot(radix, 2).plan());
         let bound = crate::program::BoundProgram::bind(
             &plan,
@@ -722,6 +782,46 @@ mod tests {
             assert_eq!(v1[s].0.to_u128(), expect, "segment {s}");
             start = end;
         }
+    }
+
+    /// In-engine search: both native storages agree on hits, per-segment
+    /// stats, and pass counts; hits match the host oracles; elimination
+    /// kernels come from the shared cache (one compile per direction).
+    #[test]
+    fn run_search_native_backends_agree() {
+        use crate::ap::{host_exact, host_extreme, host_topk};
+        let radix = Radix::TERNARY;
+        let mut rng = Rng::new(14);
+        let p = 5;
+        let rows = 70; // straddles a 64-row plane-word boundary
+        let values: Vec<Word> =
+            (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let key = values[17].clone();
+        let queries = vec![
+            (SearchQuery::Exact { key: key.clone() }, 40usize),
+            (SearchQuery::Extreme { largest: false }, 41),
+            (SearchQuery::TopK { k: 3, largest: true }, 70),
+        ];
+        let mut outs = Vec::new();
+        for storage in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut be = NativeBackend::new(storage);
+            assert!(be.supports_search());
+            let out = be.run_search(radix, &values, &queries).unwrap();
+            // one search-kernel compile per elimination direction (min,
+            // max); the exact-match segment needs no kernel
+            assert_eq!(be.take_kernel_events(), (0, 2), "{storage}");
+            outs.push(out);
+        }
+        let (h1, s1, sum1) = &outs[0];
+        let (h2, s2, sum2) = &outs[1];
+        assert_eq!(h1, h2);
+        assert_eq!(s1, s2);
+        assert_eq!(sum1.passes, sum2.passes);
+        assert_eq!(h1.len(), 3);
+        // hits are segment-relative; check against host oracles per segment
+        assert_eq!(h1[0].rows, host_exact(&values[..40], &key));
+        assert_eq!(h1[1].rows, host_extreme(&values[40..41], false));
+        assert_eq!(h1[2].rows, host_topk(&values[41..70], 3, true));
     }
 
     /// Tiles sharing a LUT program compile its kernel once: the first

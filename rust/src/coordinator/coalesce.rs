@@ -30,7 +30,9 @@ pub struct JobSignature {
     /// Digits per operand (tile column geometry).
     pub digits: usize,
     /// Lockstep pairwise-fold rounds ([`OpKind::Reduce`] jobs; 0 for
-    /// element-wise ops). Reduce jobs execute their rounds in lockstep
+    /// element-wise and search-class ops — search jobs additionally pin
+    /// `blocked` false, so same-shape searches always share a signature).
+    /// Reduce jobs execute their rounds in lockstep
     /// when coalesced, so only jobs with identical round structure may
     /// share an array — that is what keeps coalesced per-job statistics
     /// exactly equal to solo runs.

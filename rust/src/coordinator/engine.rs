@@ -76,6 +76,11 @@ impl VectorEngine {
                     OpKind::Add | OpKind::Reduce => full_add(radix),
                     OpKind::Sub => full_sub(radix),
                     OpKind::Mac => mac_digit(radix),
+                    OpKind::Search | OpKind::Min | OpKind::Max | OpKind::TopK => {
+                        anyhow::bail!(
+                            "search-class op {op:?} runs compare-only schedules — it has no LUT"
+                        )
+                    }
                 };
                 let d = StateDiagram::build(table).map_err(|err| {
                     anyhow::anyhow!("building {op:?} LUT (radix {}): {err}", radix.n())
@@ -167,6 +172,8 @@ impl VectorEngine {
                     delay_cycles(shape(&luts.mac), DelayScheme::Traditional)
                         + rounds * delay_cycles(shape(&luts.add), DelayScheme::Traditional)
                 }
+                // compare-only schedule: one cycle per recorded compare pass
+                StepKind::Query { .. } => stats.compare_cycles,
             };
             if let Some(summary) = &run.step_summaries[i] {
                 self.metrics.reduce_rounds += summary.rounds;
@@ -181,6 +188,7 @@ impl VectorEngine {
                 energy: model.price(&stats),
                 stats,
                 delay_cycles: delay,
+                hits: run.step_hits[i].clone(),
             });
         }
         let energy = model.price(&total_stats);
@@ -193,6 +201,7 @@ impl VectorEngine {
         self.metrics.program_steps += steps.len() as u64;
         self.metrics.fused_steps += plan.fused_steps;
         self.metrics.resident_reuses += plan.resident_reuses;
+        self.metrics.search_passes += run.search.passes;
         Ok(ProgramReport {
             name: prog.name().to_string(),
             outputs: run.outputs,
@@ -208,10 +217,16 @@ impl VectorEngine {
 
     /// Execute a job: tile, dispatch, reassemble, price.
     /// [`OpKind::Reduce`] jobs route to the in-engine reduction path
-    /// ([`Self::execute_reduce`]) — one array, no tiling.
+    /// ([`Self::execute_reduce`]) and search-class jobs to the
+    /// content-addressable path ([`Self::execute_search`]) — one array,
+    /// no tiling, native backends only.
     pub fn execute(&mut self, job: &Job) -> anyhow::Result<JobResult> {
         if job.op == OpKind::Reduce {
             let mut results = self.execute_reduce(std::slice::from_ref(job))?;
+            return Ok(results.pop().expect("one result per job"));
+        }
+        if job.op.is_search() {
+            let mut results = self.execute_search(std::slice::from_ref(job))?;
             return Ok(results.pop().expect("one result per job"));
         }
         let started = std::time::Instant::now();
@@ -268,6 +283,7 @@ impl VectorEngine {
             delay_cycles: delay,
             elapsed,
             tiles: tiles.len(),
+            hits: Vec::new(),
         })
     }
 
@@ -303,6 +319,16 @@ impl VectorEngine {
             // backends without run_reduce must not reach the tile
             // assembler (reduce jobs have no B operands): dispatch solo
             // so each job gets run_reduce's clean unsupported error
+            return jobs.iter().map(|j| self.execute(j)).collect();
+        }
+        if uniform && sig.op.is_search() {
+            if self.backend.supports_search() {
+                // search ops are read-only, so any same-signature batch
+                // shares one loaded array: segments never interact and
+                // per-segment stats equal solo runs by construction
+                return self.execute_search(jobs);
+            }
+            // solo dispatch for run_search's clean unsupported error
             return jobs.iter().map(|j| self.execute(j)).collect();
         }
         if jobs.len() == 1 || !uniform || !self.backend.supports_coalescing() {
@@ -367,6 +393,7 @@ impl VectorEngine {
                 delay_cycles: delay,
                 elapsed: share,
                 tiles: per_tiles[i],
+                hits: Vec::new(),
             });
         }
         Ok(out)
@@ -445,6 +472,82 @@ impl VectorEngine {
                 delay_cycles: delay,
                 elapsed: share,
                 tiles: 1,
+                hits: Vec::new(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Execute one or more same-signature search-class jobs
+    /// ([`OpKind::is_search`]) as one in-engine content-addressable run:
+    /// every job's stored words share a single array (no tiling — the
+    /// probe tag cache amortises across segments), each segment answers
+    /// its job's query independently, and per-segment statistics are
+    /// schedule-exact ([`Backend::run_search`]).
+    ///
+    /// Per-job `hits` hold one [`crate::ap::SearchHits`] per segment
+    /// (rows segment-relative); `values` stay empty — search ops are
+    /// read-only. Modeled delay is the job's total compare passes (search
+    /// schedules are compare-only, so this equals the job's merged
+    /// `compare_cycles`); energy prices the recorded compare events with
+    /// zero writes. Coalesced per-job stats/energy/delay equal solo runs
+    /// exactly: segments never interact in a read-only CAM schedule.
+    fn execute_search(&mut self, jobs: &[Job]) -> anyhow::Result<Vec<JobResult>> {
+        let started = std::time::Instant::now();
+        let sig = JobSignature::of(&jobs[0]);
+        debug_assert!(jobs.iter().all(|j| JobSignature::of(j) == sig));
+        let digits = sig.digits;
+        // concatenate stored words; expand each job's query across its
+        // segments into (query, cumulative end bound) pairs
+        let mut values = Vec::with_capacity(jobs.iter().map(|j| j.rows()).sum());
+        let mut queries = Vec::new();
+        for job in jobs {
+            let base = values.len();
+            values.extend_from_slice(&job.a);
+            let query = job.query().expect("search job carries a query");
+            queries.extend(job.segments().iter().map(|&end| (query.clone(), base + end)));
+        }
+        let (all_hits, seg_stats, summary) =
+            self.backend.run_search(sig.radix, &values, &queries)?;
+        let elapsed = started.elapsed();
+        let total_rows = values.len();
+        // the search array is sized to the workload: one "tile", 100% fill
+        self.metrics.record_tiles(1, total_rows, total_rows);
+        self.metrics.record_kernel_events(self.backend.take_kernel_events());
+        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        self.metrics.search_jobs += jobs.len() as u64;
+        self.metrics.search_passes += summary.passes;
+        if jobs.len() == 1 {
+            self.metrics.solo_jobs += 1;
+        } else {
+            self.metrics.coalesced_jobs += jobs.len() as u64;
+            self.metrics.batches += 1;
+        }
+        let model = if sig.radix.n() == 2 { &self.energy_binary } else { &self.energy_ternary };
+        let mut out = Vec::with_capacity(jobs.len());
+        let mut seg_at = 0usize;
+        for job in jobs {
+            let nsegs = job.segments().len();
+            let hits = all_hits[seg_at..seg_at + nsegs].to_vec();
+            let mut stats = ApStats::default();
+            for seg in &seg_stats[seg_at..seg_at + nsegs] {
+                stats.merge(seg);
+            }
+            seg_at += nsegs;
+            // compare-only schedule: the pass total IS the cycle count
+            let delay = stats.compare_cycles;
+            let energy = model.price(&stats);
+            let share = elapsed.mul_f64(job.rows() as f64 / total_rows as f64);
+            self.metrics.record(job.rows(), digits, &energy, share);
+            out.push(JobResult {
+                id: job.id,
+                values: Vec::new(),
+                stats,
+                energy,
+                delay_cycles: delay,
+                elapsed: share,
+                tiles: 1,
+                hits,
             });
         }
         Ok(out)
@@ -694,6 +797,96 @@ mod tests {
         });
     }
 
+    /// A search-class job through the engine: hits match the host
+    /// oracles on both storage backends, delay equals the compare-pass
+    /// total, and the search metrics land.
+    #[test]
+    fn search_job_end_to_end() {
+        use crate::ap::{host_exact, host_extreme, host_topk};
+        use crate::cam::StorageKind;
+        use crate::util::Rng;
+        let radix = Radix::TERNARY;
+        let p = 5;
+        let rows = 130; // straddles two 64-row plane-word boundaries
+        let mut rng = Rng::new(19);
+        let values: Vec<Word> =
+            (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+        let key = values[40].clone();
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let res = eng
+                .execute(&Job::search(1, radix, values.clone(), key.clone(), false, vec![]))
+                .unwrap();
+            assert!(res.values.is_empty(), "search jobs return hits, not values");
+            assert_eq!(res.hits.len(), 1);
+            assert_eq!(res.hits[0].rows, host_exact(&values, &key));
+            assert_eq!(res.delay_cycles, res.stats.compare_cycles);
+            assert_eq!(res.stats.write_ops(), 0, "read-only schedule");
+            assert!(res.energy.total() > 0.0);
+
+            let res = eng.execute(&Job::min(2, radix, values.clone(), vec![])).unwrap();
+            assert_eq!(res.hits[0].rows, host_extreme(&values, false));
+            let res = eng
+                .execute(&Job::topk(3, radix, values.clone(), 5, true, vec![]))
+                .unwrap();
+            assert_eq!(res.hits[0].rows, host_topk(&values, 5, true));
+            assert_eq!(res.hits[0].values.len(), 5);
+
+            assert_eq!(eng.metrics().search_jobs, 3);
+            assert!(eng.metrics().search_passes > 0);
+            assert_eq!(eng.metrics().solo_jobs, 3);
+            // the search array runs exactly full
+            assert!((eng.metrics().fill_rate() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    /// Coalesced search jobs (same signature) are hit- and stats-exact
+    /// against solo execution, on both storage backends.
+    #[test]
+    fn coalesced_search_equals_solo() {
+        use crate::cam::StorageKind;
+        forall(Config::cases(8), |rng| {
+            let radix = Radix::TERNARY;
+            let p = 1 + rng.index(5);
+            let njobs = 2 + rng.index(4);
+            let modes = ["exact", "nearest", "min", "max", "topk"];
+            let mode = modes[rng.index(modes.len())];
+            let jobs: Vec<Job> = (0..njobs)
+                .map(|id| {
+                    let rows = 1 + rng.index(90);
+                    let vals: Vec<Word> =
+                        (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+                    let key = Word::from_digits(rng.number(p, 3), radix);
+                    match mode {
+                        "exact" => Job::search(id as u64, radix, vals, key, false, vec![]),
+                        "nearest" => Job::search(id as u64, radix, vals, key, true, vec![]),
+                        "min" => Job::min(id as u64, radix, vals, vec![]),
+                        "max" => Job::max(id as u64, radix, vals, vec![]),
+                        _ => Job::topk(id as u64, radix, vals, 1 + rng.index(6), true, vec![]),
+                    }
+                })
+                .collect();
+            assert!(jobs.windows(2).all(|w| w[0].signature() == w[1].signature()));
+            for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+                let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let want: Vec<_> = jobs.iter().map(|j| solo.execute(j).unwrap()).collect();
+                let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+                let got = eng.execute_coalesced(&jobs).unwrap();
+                assert_eq!(got.len(), jobs.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.id, w.id);
+                    assert_eq!(g.hits, w.hits, "job {} ({kind:?}, {mode})", g.id);
+                    assert_eq!(g.stats, w.stats, "job {} ({kind:?}, {mode})", g.id);
+                    assert_eq!(g.energy, w.energy);
+                    assert_eq!(g.delay_cycles, w.delay_cycles);
+                }
+                assert_eq!(eng.metrics().coalesced_jobs, njobs as u64);
+                assert_eq!(eng.metrics().batches, 1);
+                assert_eq!(eng.metrics().search_jobs, njobs as u64);
+            }
+        });
+    }
+
     /// Reduce jobs with different round structures get different
     /// signatures, so a mixed batch falls back to (exact) solo dispatch.
     #[test]
@@ -815,6 +1008,65 @@ mod tests {
                 (neurons * (per_neuron - 1) + (neurons - 1)) as u64
             );
             assert!(report.render().contains("mac+reduce"));
+        }
+    }
+
+    /// A filter→aggregate program: dot products per segment, then Min and
+    /// TopK queries over the reduced value — hits match the host oracle on
+    /// both storage backends, delay still sums, search metrics land.
+    #[test]
+    fn program_with_queries_end_to_end() {
+        use crate::cam::StorageKind;
+        use crate::program::{reference, BoundProgram, Program, SegmentSpec};
+        use crate::util::Rng;
+        use std::sync::Arc;
+        let radix = Radix::TERNARY;
+        let p = 6;
+        let per = 8;
+        let segs = 6;
+        let rows = per * segs;
+        let mut prog = Program::new("score-min", radix, p);
+        let a = prog.input("w");
+        let b = prog.input("x");
+        let prod = prog.mac(a, b);
+        let s = prog.reduce(prod, SegmentSpec::Every(per));
+        prog.min(s);
+        prog.topk(s, 3, true);
+        prog.output(s);
+        let mut rng = Rng::new(23);
+        let single = |rng: &mut Rng, n: usize| -> Vec<Word> {
+            (0..n).map(|_| Word::from_u128(rng.digit(3) as u128, p, radix)).collect()
+        };
+        let inputs = vec![("w", single(&mut rng, rows)), ("x", single(&mut rng, rows))];
+        let (want_outs, want_hits) = reference::evaluate_full(&prog, &inputs);
+        let plan = Arc::new(prog.plan());
+        for kind in [StorageKind::Scalar, StorageKind::BitSliced] {
+            let bound = BoundProgram::bind(&plan, inputs.clone(), true).unwrap();
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let report = eng.execute_program(&bound).unwrap();
+            assert_eq!(report.outputs, want_outs, "{kind:?}");
+            // the two query steps report the oracle's hit rows, and the
+            // hit values are the stored (reduced) words at those rows
+            let hits = report.query_hits();
+            assert_eq!(hits.len(), 2, "{kind:?}");
+            for ((_, got), (op, rows_want)) in hits.iter().zip(&want_hits) {
+                assert_eq!(&got.rows, rows_want, "{kind:?} op {op}");
+                let vals_want: Vec<Word> =
+                    rows_want.iter().map(|&r| want_outs[0][r].clone()).collect();
+                assert_eq!(got.values, vals_want, "{kind:?} op {op}");
+            }
+            // attribution still sums, and the query passes are metered
+            let delay_sum: u64 = report.steps.iter().map(|s| s.delay_cycles).sum();
+            assert_eq!(delay_sum, report.delay_cycles);
+            let step_sum = ApStats::sum_of(
+                &report.steps.iter().map(|s| s.stats.clone()).collect::<Vec<_>>(),
+            );
+            assert_eq!(step_sum, report.stats);
+            let pass_sum: u64 = hits.iter().map(|(_, h)| h.passes).sum();
+            assert!(pass_sum > 0, "{kind:?}");
+            assert_eq!(eng.metrics().search_passes, pass_sum, "{kind:?}");
+            assert!(report.render().contains("query:min"), "{kind:?}");
+            assert!(report.render().contains("hits ["), "{kind:?}");
         }
     }
 

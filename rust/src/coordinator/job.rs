@@ -1,6 +1,6 @@
-//! Vector-arithmetic jobs and results.
+//! Vector-arithmetic and content-addressable jobs and results.
 
-use crate::ap::ApStats;
+use crate::ap::{ApStats, SearchHits, SearchQuery};
 use crate::energy::EnergyBreakdown;
 use crate::mvl::{Radix, Word};
 
@@ -19,6 +19,16 @@ pub enum OpKind {
     /// LUT with plane-native row movement between rounds
     /// ([`crate::ap::reduce_vectors`]). Native backends only.
     Reduce,
+    /// Content-addressable exact/nearest match against a per-segment key
+    /// ([`Job::search`]); results land in [`JobResult::hits`]. Native
+    /// backends only.
+    Search,
+    /// Per-segment minimum via MS-digit-first elimination ([`Job::min`]).
+    Min,
+    /// Per-segment maximum via MS-digit-first elimination ([`Job::max`]).
+    Max,
+    /// Per-segment top-k ranking by repeated elimination ([`Job::topk`]).
+    TopK,
 }
 
 impl OpKind {
@@ -29,7 +39,17 @@ impl OpKind {
             OpKind::Sub => "sub",
             OpKind::Mac => "mac",
             OpKind::Reduce => "reduce",
+            OpKind::Search => "search",
+            OpKind::Min => "min",
+            OpKind::Max => "max",
+            OpKind::TopK => "topk",
         }
+    }
+
+    /// Is this one of the read-only content-addressable ops
+    /// (Search/Min/Max/TopK)?
+    pub fn is_search(self) -> bool {
+        matches!(self, OpKind::Search | OpKind::Min | OpKind::Max | OpKind::TopK)
     }
 }
 
@@ -47,16 +67,22 @@ pub struct Job {
     /// Second operand vector (empty for [`OpKind::Reduce`] jobs — a
     /// reduction's only operands are `a`).
     pub b: Vec<Word>,
-    /// Cumulative segment end offsets for [`OpKind::Reduce`] (strictly
-    /// increasing, last == rows; each segment folds to one value).
-    /// Empty for element-wise ops. Kept private so the invariants hold.
+    /// Cumulative segment end offsets for [`OpKind::Reduce`] and the
+    /// search-class ops (strictly increasing, last == rows; each segment
+    /// folds/searches independently). Empty for element-wise ops. Kept
+    /// private so the invariants hold.
     segments: Vec<usize>,
+    /// The content-addressable query for search-class ops (`None` for
+    /// arithmetic). Applied to every segment of the job. Kept private so
+    /// only the search constructors set it.
+    query: Option<SearchQuery>,
 }
 
 impl Job {
     /// Build an element-wise job, validating operand geometry.
     pub fn new(id: u64, op: OpKind, radix: Radix, blocked: bool, a: Vec<Word>, b: Vec<Word>) -> Self {
         assert!(op != OpKind::Reduce, "use Job::reduce for reduction jobs");
+        assert!(!op.is_search(), "use Job::search/min/max/topk for search jobs");
         assert_eq!(a.len(), b.len(), "operand vectors must have equal length");
         assert!(!a.is_empty(), "empty job");
         let p = a[0].width();
@@ -64,7 +90,7 @@ impl Job {
             assert_eq!(w.width(), p, "ragged operand widths");
             assert_eq!(w.radix(), radix, "operand radix mismatch");
         }
-        Job { id, op, radix, blocked, a, b, segments: Vec::new() }
+        Job { id, op, radix, blocked, a, b, segments: Vec::new(), query: None }
     }
 
     /// Build a segmented reduction job: `values` are summed down to one
@@ -84,17 +110,110 @@ impl Job {
             assert_eq!(w.width(), p, "ragged operand widths");
             assert_eq!(w.radix(), radix, "operand radix mismatch");
         }
-        let segments = if segments.is_empty() { vec![values.len()] } else { segments };
-        assert_eq!(
-            *segments.last().unwrap(),
-            values.len(),
-            "segments must cover all rows"
-        );
+        let segments = Self::check_segments(segments, values.len());
+        Job {
+            id,
+            op: OpKind::Reduce,
+            radix,
+            blocked,
+            a: values,
+            b: Vec::new(),
+            segments,
+            query: None,
+        }
+    }
+
+    fn check_segments(segments: Vec<usize>, rows: usize) -> Vec<usize> {
+        let segments = if segments.is_empty() { vec![rows] } else { segments };
+        assert_eq!(*segments.last().unwrap(), rows, "segments must cover all rows");
         assert!(
             segments[0] > 0 && segments.windows(2).all(|w| w[0] < w[1]),
             "segments must be strictly increasing (no empty segments)"
         );
-        Job { id, op: OpKind::Reduce, radix, blocked, a: values, b: Vec::new(), segments }
+        segments
+    }
+
+    /// Shared validation + construction for the search-class jobs.
+    fn search_job(
+        id: u64,
+        op: OpKind,
+        radix: Radix,
+        values: Vec<Word>,
+        segments: Vec<usize>,
+        query: SearchQuery,
+    ) -> Self {
+        assert!(!values.is_empty(), "empty job");
+        let p = values[0].width();
+        for w in &values {
+            assert_eq!(w.width(), p, "ragged operand widths");
+            assert_eq!(w.radix(), radix, "operand radix mismatch");
+        }
+        if let Some(key) = query.key() {
+            assert_eq!(key.width(), p, "key width must match the stored words");
+            assert_eq!(key.radix(), radix, "key radix mismatch");
+        }
+        let segments = Self::check_segments(segments, values.len());
+        // search ops run compare-only LUT-less schedules; `blocked` is
+        // meaningless, pinned false so same-shape jobs share a signature
+        Job { id, op, radix, blocked: false, a: values, b: Vec::new(), segments, query: Some(query) }
+    }
+
+    /// Build a content-addressable search job: per segment, find the rows
+    /// matching `key` exactly (`nearest == false`) or at minimum digit
+    /// distance (`nearest == true`). Stored words and the key may carry
+    /// [`crate::mvl::DONT_CARE`] wildcard digits. `segments` as in
+    /// [`Job::reduce`] (empty ⇒ one segment over all rows).
+    pub fn search(
+        id: u64,
+        radix: Radix,
+        values: Vec<Word>,
+        key: Word,
+        nearest: bool,
+        segments: Vec<usize>,
+    ) -> Self {
+        let query = if nearest {
+            SearchQuery::Nearest { key }
+        } else {
+            SearchQuery::Exact { key }
+        };
+        Self::search_job(id, OpKind::Search, radix, values, segments, query)
+    }
+
+    /// Build a per-segment minimum job (all tied rows report, ascending).
+    pub fn min(id: u64, radix: Radix, values: Vec<Word>, segments: Vec<usize>) -> Self {
+        Self::search_job(id, OpKind::Min, radix, values, segments, SearchQuery::Extreme {
+            largest: false,
+        })
+    }
+
+    /// Build a per-segment maximum job (all tied rows report, ascending).
+    pub fn max(id: u64, radix: Radix, values: Vec<Word>, segments: Vec<usize>) -> Self {
+        Self::search_job(id, OpKind::Max, radix, values, segments, SearchQuery::Extreme {
+            largest: true,
+        })
+    }
+
+    /// Build a per-segment top-k job: the `min(k, segment rows)` best
+    /// rows in rank order (`largest`: descending values), ties broken by
+    /// ascending row index.
+    pub fn topk(
+        id: u64,
+        radix: Radix,
+        values: Vec<Word>,
+        k: usize,
+        largest: bool,
+        segments: Vec<usize>,
+    ) -> Self {
+        Self::search_job(id, OpKind::TopK, radix, values, segments, SearchQuery::TopK {
+            k,
+            largest,
+        })
+    }
+
+    /// The content-addressable query of a search-class job (`None` for
+    /// arithmetic jobs).
+    pub fn query(&self) -> Option<&SearchQuery> {
+        self.query.as_ref()
     }
 
     /// Rows in the job.
@@ -119,6 +238,11 @@ impl Job {
     /// only share an array when their round structure matches, which is
     /// what keeps coalesced per-job statistics exactly equal to solo runs.
     pub fn fold_rounds(&self) -> u32 {
+        if self.op != OpKind::Reduce {
+            // search jobs are segmented but never fold; element-wise jobs
+            // have no segments — neither constrains coalescing by rounds
+            return 0;
+        }
         let mut start = 0usize;
         let mut rounds = 0u32;
         for &end in &self.segments {
@@ -151,6 +275,9 @@ pub struct JobResult {
     pub elapsed: std::time::Duration,
     /// Tiles the job was split into.
     pub tiles: usize,
+    /// Per-segment search hits (one entry per segment, rows
+    /// segment-relative). Empty for arithmetic jobs.
+    pub hits: Vec<SearchHits>,
 }
 
 #[cfg(test)]
@@ -228,5 +355,73 @@ mod tests {
     fn rejects_radix_mismatch() {
         let bin = Word::from_u128(3, 4, Radix::BINARY);
         Job::new(1, OpKind::Add, Radix::TERNARY, true, vec![w(5)], vec![bin]);
+    }
+
+    #[test]
+    fn search_job_geometry() {
+        let vals: Vec<Word> = (0..6).map(|v| w(v)).collect();
+        let j = Job::search(3, Radix::TERNARY, vals.clone(), w(4), false, vec![]);
+        assert_eq!(j.op, OpKind::Search);
+        assert_eq!(j.op.tag(), "search");
+        assert!(j.op.is_search());
+        assert_eq!(j.rows(), 6);
+        assert_eq!(j.segments(), &[6]);
+        assert_eq!(j.fold_rounds(), 0);
+        assert!(matches!(j.query(), Some(SearchQuery::Exact { .. })));
+        // blocked is pinned false so same-shape jobs share a signature
+        let sig = j.signature();
+        assert!(!sig.blocked);
+        assert_eq!(sig.op, OpKind::Search);
+        assert_eq!(sig.fold_rounds, 0);
+
+        let j = Job::search(4, Radix::TERNARY, vals.clone(), w(4), true, vec![2, 6]);
+        assert!(matches!(j.query(), Some(SearchQuery::Nearest { .. })));
+        assert_eq!(j.segments(), &[2, 6]);
+
+        let j = Job::min(5, Radix::TERNARY, vals.clone(), vec![]);
+        assert_eq!(j.op, OpKind::Min);
+        assert!(matches!(j.query(), Some(SearchQuery::Extreme { largest: false })));
+        let j = Job::max(6, Radix::TERNARY, vals.clone(), vec![]);
+        assert_eq!(j.op, OpKind::Max);
+        assert!(matches!(j.query(), Some(SearchQuery::Extreme { largest: true })));
+
+        // k = 0 and k > rows are both legal TopK shapes
+        let j = Job::topk(7, Radix::TERNARY, vals.clone(), 0, true, vec![]);
+        assert!(matches!(j.query(), Some(SearchQuery::TopK { k: 0, largest: true })));
+        let j = Job::topk(8, Radix::TERNARY, vals, 99, false, vec![]);
+        assert!(matches!(j.query(), Some(SearchQuery::TopK { k: 99, largest: false })));
+        assert_eq!(j.op.tag(), "topk");
+    }
+
+    #[test]
+    fn search_jobs_accept_wildcard_rows() {
+        let x = Word::from_digits_wild(vec![0, crate::mvl::DONT_CARE, 1, 0], Radix::TERNARY);
+        let j = Job::search(1, Radix::TERNARY, vec![w(5), x], w(5), false, vec![]);
+        assert_eq!(j.rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "use Job::search")]
+    fn new_rejects_search_ops() {
+        Job::new(1, OpKind::Min, Radix::TERNARY, true, vec![w(5)], vec![w(1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "key width")]
+    fn search_rejects_key_width_mismatch() {
+        let key = Word::from_u128(1, 3, Radix::TERNARY);
+        Job::search(1, Radix::TERNARY, vec![w(5)], key, false, vec![]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn search_rejects_bad_segments() {
+        Job::min(1, Radix::TERNARY, vec![w(1), w(2)], vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover all rows")]
+    fn search_rejects_short_segments() {
+        Job::max(1, Radix::TERNARY, vec![w(1), w(2), w(3)], vec![2]);
     }
 }

@@ -41,6 +41,13 @@ pub struct Metrics {
     /// once) plus segment-head compaction after program reduce steps
     /// whose result is consumed again ([`crate::program`]).
     pub reduce_rows_moved: u64,
+    /// Search-class jobs executed in-engine
+    /// ([`super::job::OpKind::is_search`]).
+    pub search_jobs: u64,
+    /// Compare passes executed by those jobs' content-addressable
+    /// schedules (exact: 1/segment; nearest: one per digit; Min/Max/TopK:
+    /// data-dependent elimination probes).
+    pub search_passes: u64,
     /// Compiled dataflow programs executed
     /// ([`crate::program::BoundProgram`]).
     pub programs: u64,
@@ -121,6 +128,8 @@ impl Metrics {
         self.kernel_misses += other.kernel_misses;
         self.reduce_rounds += other.reduce_rounds;
         self.reduce_rows_moved += other.reduce_rows_moved;
+        self.search_jobs += other.search_jobs;
+        self.search_passes += other.search_passes;
         self.programs += other.programs;
         self.program_steps += other.program_steps;
         self.fused_steps += other.fused_steps;
@@ -191,6 +200,12 @@ impl Metrics {
             self.fused_steps,
             self.resident_reuses,
         );
+        if self.search_jobs > 0 {
+            s.push_str(&format!(
+                " search={}j/{}p",
+                self.search_jobs, self.search_passes
+            ));
+        }
         if self.par_scopes > 0 {
             s.push_str(&format!(
                 " par={}sc/{}bl u={:.0}%",
@@ -245,6 +260,8 @@ mod tests {
         n.record_parallel_events(ParallelEvents { scopes: 2, blocks: 7, capacity: 8 });
         n.reduce_rounds = 10;
         n.reduce_rows_moved = 1023;
+        n.search_jobs = 4;
+        n.search_passes = 60;
         n.programs = 2;
         n.program_steps = 7;
         n.fused_steps = 2;
@@ -264,6 +281,8 @@ mod tests {
         assert!((m.par_utilization() - 7.0 / 8.0).abs() < 1e-12);
         assert!(m.summary().contains("par=2sc/7bl u=88%"), "summary: {}", m.summary());
         assert!(m.summary().contains("reduce=10r/1023mv"));
+        assert_eq!((m.search_jobs, m.search_passes), (4, 60));
+        assert!(m.summary().contains("search=4j/60p"), "summary: {}", m.summary());
         assert!(m.summary().contains("programs=2 (7 steps, 2 fused, 4 reuses)"));
     }
 

@@ -403,6 +403,52 @@ mod tests {
         assert_eq!(m.resident_reuses, 6);
     }
 
+    /// Search-class jobs flow through the service like arithmetic: a
+    /// same-signature batch coalesces, hits match the host oracles, and
+    /// the search metrics aggregate across workers.
+    #[test]
+    fn service_runs_search_jobs() {
+        use crate::ap::{host_extreme, host_topk};
+        let radix = Radix::TERNARY;
+        let p = 4;
+        let svc = EngineService::start(2, 8, || {
+            Ok(Box::new(NativeBackend::bit_sliced()) as Box<dyn Backend>)
+        })
+        .unwrap();
+        let mut rng = Rng::new(61);
+        let mut jobs = Vec::new();
+        let mut values_of = Vec::new();
+        for id in 0..6 {
+            let rows = 5 + rng.index(60);
+            let vals: Vec<Word> =
+                (0..rows).map(|_| Word::from_digits(rng.number(p, 3), radix)).collect();
+            jobs.push(if id % 2 == 0 {
+                Job::min(id, radix, vals.clone(), vec![])
+            } else {
+                Job::topk(id, radix, vals.clone(), 3, true, vec![])
+            });
+            values_of.push(vals);
+        }
+        let results = svc.run_batch(jobs).unwrap();
+        for (id, res) in results.iter().enumerate() {
+            assert_eq!(res.id, id as u64);
+            assert!(res.values.is_empty());
+            assert_eq!(res.hits.len(), 1);
+            let want = if id % 2 == 0 {
+                host_extreme(&values_of[id], false)
+            } else {
+                host_topk(&values_of[id], 3, true)
+            };
+            assert_eq!(res.hits[0].rows, want, "job {id}");
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.search_jobs, 6);
+        assert!(m.search_passes > 0);
+        // Min and TopK are distinct signatures: two coalesced batches
+        assert_eq!(m.coalesced_jobs, 6);
+        assert_eq!(m.batches, 2);
+    }
+
     #[test]
     fn run_blocks_for_result() {
         let svc = EngineService::start(1, 1, || Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>))

@@ -4,6 +4,7 @@
 //!   exp <id|all>      regenerate a paper table/figure (results/ CSVs)
 //!   lut <fn>          generate + print a LUT (add|sub|mac, any radix)
 //!   run               run a vector workload through the engine service
+//!   search            content-addressable lookup (exact/nearest/min/max/topk)
 //!   program           compile + run a multi-op dataflow program
 //!   serve             drive the serving front door with a load generator
 //!   modelcheck        exhaustively verify the shard coordinator machine
@@ -47,6 +48,15 @@ USAGE:
             --threads T splits each bit-sliced kernel application into word
             blocks over T scoped threads — bit-identical values and stats;
             defaults to the MVAP_THREADS env var, else 1)
+  mvap search [--mode exact|nearest|min|max|topk] [--rows N] [--digits P]
+           [--radix N] [--key V] [--k K] [--segments S]
+           [--backend native|native-bitsliced] [--workers W] [--seed S]
+           [--threads T]
+           (content-addressable query over N random stored words on one
+            array: exact/nearest match against --key [decimal; defaults to
+            a randomly chosen stored word], or digit-serial min/max/top-k
+            elimination. --segments S splits the rows into S equal
+            segments, each answered independently. native backends only)
   mvap program --name dot|fir|poly_eval|affine_layer
            [--rows N] [--digits P] [--radix N] [--taps T] [--degree D]
            [--neurons M] [--backend native|native-bitsliced] [--workers W]
@@ -56,19 +66,20 @@ USAGE:
             whole op DAG as ONE engine invocation — intermediates stay
             CAM-resident; --dump-plan prints the schedule and exits)
   mvap serve [--clients N] [--rps R] [--duration SECS]
-           [--mix A:S:M:R:P] [--shards S1,S2,..] [--flush-us U1,U2,..]
+           [--mix A:S:M:R:SE:P] [--shards S1,S2,..] [--flush-us U1,U2,..]
            [--threads T1,T2,..] [--req-rows N] [--digits P] [--radix N]
            [--inflight CAP] [--queue-depth D]
            [--backend native|native-bitsliced|pjrt]
            [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
            [--json FILE]
            (drives the bounded-admission serving front door with mixed
-            add:sub:mac:reduce:program traffic and prints p50/p95/p99
+            add:sub:mac:reduce:search:program traffic and prints p50/p95/p99
             latency + throughput per shard-count × flush-policy setting.
             --clients N runs a closed loop [N submit→wait→repeat threads,
             measures capacity]; --rps R adds an open loop [fixed-rate
             pacer that sheds instead of queueing, measures tail latency
-            under offered load]. reduce/program classes are native-only)
+            under offered load]. reduce/search/program classes are
+            native-only)
   mvap modelcheck [--max-states N] [--dot FILE] [--no-liveness]
            (exhaustively explores every interleaving of the bounded shard
             coordinator scenarios — submit/pop/flush/steal/barrier/drain —
@@ -85,6 +96,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("lut") => cmd_lut(&args),
         Some("run") => cmd_run(&args),
+        Some("search") => cmd_search(&args),
         Some("program") => cmd_program(&args),
         Some("serve") => cmd_serve(&args),
         Some("modelcheck") => cmd_modelcheck(&args),
@@ -290,6 +302,92 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let mode = args.get_or("mode", "exact");
+    let rows = args.get_parse_or("rows", 1024usize);
+    let digits = args.get_parse_or("digits", 8usize);
+    let radix = Radix(args.get_parse_or("radix", 3u8));
+    let backend: BackendKind =
+        args.get_or("backend", "native").parse().map_err(anyhow::Error::msg)?;
+    let workers = args.get_parse_or("workers", 2usize);
+    let k = args.get_parse_or("k", 8usize);
+    let key_arg: Option<u128> = match args.get("key") {
+        Some(s) => Some(s.parse().map_err(|_| anyhow::anyhow!("--key: '{s}' is not a number"))?),
+        None => None,
+    };
+    let seed = args.get_parse_or("seed", 7u64);
+    let num_segments = args.get_parse_or("segments", 1usize);
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let par = resolve_threads(args)?;
+    args.reject_unknown();
+    anyhow::ensure!(
+        backend != BackendKind::Pjrt,
+        "search is in-engine — use --backend native or native-bitsliced"
+    );
+    anyhow::ensure!(rows > 0, "--rows must be positive");
+    anyhow::ensure!(
+        num_segments > 0 && rows % num_segments == 0,
+        "--segments {num_segments} must divide --rows {rows}"
+    );
+
+    let mut rng = Rng::new(seed);
+    let values: Vec<Word> = (0..rows)
+        .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+        .collect();
+    let segments: Vec<usize> =
+        (1..=num_segments).map(|i| i * (rows / num_segments)).collect();
+    let key = match key_arg {
+        Some(v) => {
+            let span = (radix.n() as u128).pow(digits as u32);
+            anyhow::ensure!(v < span, "--key {v} does not fit {digits} radix-{} digits", radix.n());
+            Word::from_u128(v, digits, radix)
+        }
+        // default: probe for a word that is actually stored
+        None => values[rng.below(rows as u64) as usize].clone(),
+    };
+    let job = match mode.as_str() {
+        "exact" => Job::search(0, radix, values, key.clone(), false, segments),
+        "nearest" => Job::search(0, radix, values, key.clone(), true, segments),
+        "min" => Job::min(0, radix, values, segments),
+        "max" => Job::max(0, radix, values, segments),
+        "topk" => Job::topk(0, radix, values, k, true, segments),
+        other => anyhow::bail!("unknown mode '{other}' (exact|nearest|min|max|topk)"),
+    };
+    if matches!(mode.as_str(), "exact" | "nearest") {
+        println!("key: {} ({} digits, radix {})", key.to_u128(), digits, radix.n());
+    }
+
+    let svc = EngineService::start_kind_parallel(workers, 2, backend, artifacts, par)?;
+    let res = svc.submit(job).recv().expect("worker died")?;
+    let metrics = svc.shutdown();
+    for (s, h) in res.hits.iter().enumerate() {
+        let preview: Vec<String> = h
+            .rows
+            .iter()
+            .zip(&h.values)
+            .take(16)
+            .map(|(r, v)| format!("{r}:{}", v.to_u128()))
+            .collect();
+        let dist = if mode == "nearest" { format!(", distance {}", h.distance) } else { String::new() };
+        println!(
+            "segment {s}: {} hit(s){dist}, {} compare passes — [{}{}]",
+            h.rows.len(),
+            h.passes,
+            preview.join(" "),
+            if h.rows.len() > 16 { " …" } else { "" },
+        );
+    }
+    println!(
+        "—— {rows} rows × {digits} digits, {num_segments} segment(s) — \
+         energy {:.3e} J, delay {} cycles, {:?}",
+        res.energy.total(),
+        res.delay_cycles,
+        res.elapsed,
+    );
+    println!("—— {}", metrics.summary());
+    Ok(())
+}
+
 fn cmd_program(args: &Args) -> anyhow::Result<()> {
     let name = args.get_or("name", "dot");
     let rows = args.get_parse_or("rows", 1024usize);
@@ -394,7 +492,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let clients = args.get_parse_or("clients", 32usize);
     let rps = args.get_parse_or("rps", 0u64);
     let duration_s = args.get_parse_or("duration", 2.0f64);
-    let mix = Mix::parse(&args.get_or("mix", "4:2:2:1:1"))?;
+    let mix = Mix::parse(&args.get_or("mix", "4:2:2:1:1:1"))?;
     let rows = args.get_parse_or("req-rows", 8usize);
     let digits = args.get_parse_or("digits", 6usize);
     let radix = Radix(args.get_parse_or("radix", 3u8));

@@ -24,6 +24,24 @@ impl Word {
         Word { digits, radix }
     }
 
+    /// As [`Word::from_digits`], but allowing [`super::DONT_CARE`]
+    /// wildcard digits — CAM search patterns and stored rows may be
+    /// partially specified. Arithmetic helpers are undefined on wildcard
+    /// words; the search ops ([`crate::ap::search`]) only compare them.
+    pub fn from_digits_wild(digits: Vec<u8>, radix: Radix) -> Self {
+        assert!(
+            digits.iter().all(|&d| radix.valid(d)),
+            "invalid digit for radix {}",
+            radix.n()
+        );
+        Word { digits, radix }
+    }
+
+    /// Does any digit hold the [`super::DONT_CARE`] wildcard?
+    pub fn has_dont_care(&self) -> bool {
+        self.digits.iter().any(|&d| d == super::DONT_CARE)
+    }
+
     /// Zero of a given width.
     pub fn zero(width: usize, radix: Radix) -> Self {
         Word { digits: vec![0; width], radix }

@@ -13,7 +13,8 @@
 use super::ir::EwOp;
 use super::plan::{BoundProgram, FieldId, StepKind};
 use crate::ap::{
-    reduce_fields, Ap, ApStats, ExecMode, FieldSpan, LutKernel, ParallelEvents, ReduceSummary,
+    reduce_fields, search_segments, Ap, ApStats, ExecMode, FieldSpan, KernelCache, LutKernel,
+    ParallelEvents, ReduceSummary, SearchHits, SearchSummary,
 };
 use crate::cam::{CamStorage, Parallelism, StorageKind};
 use crate::lutgen::Lut;
@@ -38,6 +39,9 @@ pub struct ProgramKernels<'a> {
     pub sub: Option<(&'a Lut, Arc<LutKernel>)>,
     pub mac: Option<(&'a Lut, Arc<LutKernel>)>,
     pub copy: Option<(&'a Lut, Arc<LutKernel>)>,
+    /// Elimination-kernel cache for [`StepKind::Query`] steps (backends
+    /// pass their shared cache; `None` is fine for plans without queries).
+    pub search: Option<Arc<KernelCache>>,
 }
 
 impl<'a> ProgramKernels<'a> {
@@ -78,6 +82,12 @@ pub struct ProgramRun {
     pub step_stats: Vec<ApStats>,
     /// Fold summaries for reduce / fused steps (`None` elsewhere).
     pub step_summaries: Vec<Option<ReduceSummary>>,
+    /// Query hits for [`StepKind::Query`] steps (`None` elsewhere); rows
+    /// are relative to the step's live range.
+    pub step_hits: Vec<Option<SearchHits>>,
+    /// Aggregate search pass / kernel-event summary over the query steps
+    /// (all zeros when the plan has none).
+    pub search: SearchSummary,
     /// Data-parallel dispatch events the run recorded (all zeros when the
     /// executor ran sequentially).
     pub par_events: ParallelEvents,
@@ -121,6 +131,8 @@ pub fn run_storage(
 
     let mut step_stats = Vec::with_capacity(plan.steps().len());
     let mut step_summaries = Vec::with_capacity(plan.steps().len());
+    let mut step_hits: Vec<Option<SearchHits>> = Vec::with_capacity(plan.steps().len());
+    let mut search_sum = SearchSummary::default();
     for (s, step) in plan.steps().iter().enumerate() {
         let live = bound.step_live[s];
         // stats attribution: the live block is the step's; rows past it
@@ -136,6 +148,7 @@ pub fn run_storage(
                 );
                 step_stats.push(blocks.into_iter().next().expect("live block"));
                 step_summaries.push(None);
+                step_hits.push(None);
             }
             StepKind::Ew { op, a, b } => {
                 let (lut, kernel) = kernels.ew(*op)?;
@@ -148,6 +161,29 @@ pub fn run_storage(
                 );
                 step_stats.push(blocks.into_iter().next().expect("live block"));
                 step_summaries.push(None);
+                step_hits.push(None);
+            }
+            StepKind::Query { v, query } => {
+                let cache = kernels.search.as_deref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "plan has query steps but no search-kernel cache was supplied"
+                    )
+                })?;
+                // read-only compare schedule over the field's live rows;
+                // garbage rows past `live` sit outside the one segment
+                let qcols: Vec<usize> = (0..p).map(|d| col(*v, d)).collect();
+                let (mut hits, mut stats, summary) = search_segments(
+                    ap.storage(),
+                    &qcols,
+                    &[(query.clone(), live)],
+                    cache,
+                );
+                search_sum.passes += summary.passes;
+                search_sum.kernel_hits += summary.kernel_hits;
+                search_sum.kernel_misses += summary.kernel_misses;
+                step_stats.push(stats.pop().expect("one segment"));
+                step_summaries.push(None);
+                step_hits.push(Some(hits.pop().expect("one segment")));
             }
             StepKind::Reduce { b, scratch, compact }
             | StepKind::MacReduce { b, scratch, compact, .. } => {
@@ -186,6 +222,7 @@ pub fn run_storage(
                 }
                 step_stats.push(stats);
                 step_summaries.push(Some(summary));
+                step_hits.push(None);
             }
         }
     }
@@ -199,5 +236,12 @@ pub fn run_storage(
         }
         outputs.push(vec);
     }
-    Ok(ProgramRun { outputs, step_stats, step_summaries, par_events: ap.take_parallel_events() })
+    Ok(ProgramRun {
+        outputs,
+        step_stats,
+        step_summaries,
+        step_hits,
+        search: search_sum,
+        par_events: ap.take_parallel_events(),
+    })
 }

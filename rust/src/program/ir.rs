@@ -1,5 +1,6 @@
-//! The program IR: a DAG of element-wise AP ops and segmented reductions
-//! over named input vectors, built with a typed builder.
+//! The program IR: a DAG of element-wise AP ops, segmented reductions,
+//! and terminal content-addressable queries over named input vectors,
+//! built with a typed builder.
 //!
 //! A [`Program`] is pure structure — no operand data, no row counts, no
 //! execution mode. Values are identified by [`ValueId`]s handed out by the
@@ -11,7 +12,7 @@
 //! builder reject element-wise ops over mismatched shapes before any data
 //! exists.
 
-use crate::mvl::Radix;
+use crate::mvl::{Radix, Word};
 
 /// Identifies a value (an op result) inside one [`Program`]. Only valid
 /// for the program that issued it.
@@ -83,6 +84,18 @@ pub enum ProgramOp {
     Ew { op: EwOp, a: ValueId, b: ValueId },
     /// Segmented tree reduction of `v` (one sum per segment).
     Reduce { v: ValueId, spec: SegmentSpec },
+    /// Terminal content-addressable query: the rows of `v` equal to `key`
+    /// (`nearest`: at minimum digit distance instead). Query results
+    /// return to the host as hit lists — they cannot feed further ops or
+    /// be declared outputs.
+    Search { v: ValueId, key: Word, nearest: bool },
+    /// Terminal query: the rows of `v` holding the minimum value.
+    Min { v: ValueId },
+    /// Terminal query: the rows of `v` holding the maximum value.
+    Max { v: ValueId },
+    /// Terminal query: the `k` best rows of `v` in rank order
+    /// (`largest`: descending).
+    TopK { v: ValueId, k: usize, largest: bool },
 }
 
 /// A compiled-LUT dataflow program: element-wise ops and segmented
@@ -139,6 +152,28 @@ impl Program {
         assert!(v.0 < self.ops.len(), "foreign or future ValueId");
     }
 
+    /// Is `v` a terminal query op? Query "results" are host-side hit
+    /// lists, not CAM-resident vectors, so they cannot be consumed.
+    pub fn is_query(&self, v: ValueId) -> bool {
+        self.check(v);
+        matches!(
+            self.ops[v.0],
+            ProgramOp::Search { .. }
+                | ProgramOp::Min { .. }
+                | ProgramOp::Max { .. }
+                | ProgramOp::TopK { .. }
+        )
+    }
+
+    fn query_operand(&self, v: ValueId) -> RowClass {
+        self.check(v);
+        assert!(
+            !self.is_query(v),
+            "query results cannot feed further ops (they return as hits)"
+        );
+        self.klass[v.0]
+    }
+
     /// Declare a named input spanning the driving row count.
     pub fn input(&mut self, name: &str) -> ValueId {
         assert!(!name.is_empty(), "input names must be non-empty");
@@ -154,6 +189,7 @@ impl Program {
     /// reduce) enters the program.
     pub fn input_like(&mut self, name: &str, like: ValueId) -> ValueId {
         self.check(like);
+        assert!(!self.is_query(like), "query results have no row shape to inherit");
         assert!(!name.is_empty(), "input names must be non-empty");
         assert!(
             self.input_names().iter().all(|n| *n != name),
@@ -167,6 +203,10 @@ impl Program {
     pub fn ew(&mut self, op: EwOp, a: ValueId, b: ValueId) -> ValueId {
         self.check(a);
         self.check(b);
+        assert!(
+            !self.is_query(a) && !self.is_query(b),
+            "query results cannot feed element-wise ops"
+        );
         assert_eq!(
             self.klass[a.0], self.klass[b.0],
             "element-wise operands must share a row class"
@@ -194,6 +234,7 @@ impl Program {
     /// segment.
     pub fn reduce(&mut self, v: ValueId, spec: SegmentSpec) -> ValueId {
         self.check(v);
+        assert!(!self.is_query(v), "query results cannot be reduced");
         match &spec {
             SegmentSpec::All => {}
             SegmentSpec::Every(n) => assert!(*n >= 1, "Every(0) segments"),
@@ -209,9 +250,49 @@ impl Program {
         self.push(ProgramOp::Reduce { v, spec }, RowClass::SegsOf(idx))
     }
 
+    /// Terminal exact/nearest-match search over `v`'s rows: which rows
+    /// hold `key` (`nearest`: the rows at minimum digit distance). The
+    /// result returns as a hit list ([`crate::ap::SearchHits`]) — it is
+    /// not a CAM value and cannot be consumed or output.
+    pub fn search(&mut self, v: ValueId, key: Word, nearest: bool) -> ValueId {
+        let class = self.query_operand(v);
+        assert_eq!(
+            key.width(),
+            self.digits,
+            "search key width must match the program digits"
+        );
+        assert_eq!(key.radix(), self.radix, "search key radix mismatch");
+        self.push(ProgramOp::Search { v, key, nearest }, class)
+    }
+
+    /// Terminal query: the rows of `v` holding the minimum value (every
+    /// tied row, ascending).
+    pub fn min(&mut self, v: ValueId) -> ValueId {
+        let class = self.query_operand(v);
+        self.push(ProgramOp::Min { v }, class)
+    }
+
+    /// Terminal query: the rows of `v` holding the maximum value (every
+    /// tied row, ascending).
+    pub fn max(&mut self, v: ValueId) -> ValueId {
+        let class = self.query_operand(v);
+        self.push(ProgramOp::Max { v }, class)
+    }
+
+    /// Terminal query: the `k` best rows of `v` in rank order
+    /// (`largest`: descending; ties ascending by row).
+    pub fn topk(&mut self, v: ValueId, k: usize, largest: bool) -> ValueId {
+        let class = self.query_operand(v);
+        self.push(ProgramOp::TopK { v, k, largest }, class)
+    }
+
     /// Mark a value as a program output (extracted by the executor).
     pub fn output(&mut self, v: ValueId) {
         self.check(v);
+        assert!(
+            !self.is_query(v),
+            "query results are reported as hits, not output values"
+        );
         self.outputs.push(v);
     }
 
@@ -302,6 +383,62 @@ mod tests {
         let mut p = Program::new("t", Radix::TERNARY, 4);
         let a = p.input("a");
         p.reduce(a, SegmentSpec::Bounds(vec![3, 3]));
+    }
+
+    /// Query ops are terminal: they track their operand's row class and
+    /// can share a program with arithmetic, but nothing consumes them.
+    #[test]
+    fn queries_are_terminal_and_tracked() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let y = p.add(a, b);
+        let s = p.reduce(y, SegmentSpec::Every(4));
+        let key = Word::from_u128(7, 4, Radix::TERNARY);
+        let q1 = p.search(y, key, false);
+        let q2 = p.min(s);
+        let q3 = p.topk(s, 2, true);
+        p.output(s);
+        assert!(p.is_query(q1) && p.is_query(q2) && p.is_query(q3));
+        assert!(!p.is_query(y) && !p.is_query(s));
+        assert_eq!(p.row_class(q1), RowClass::Rows);
+        assert_eq!(p.row_class(q2), p.row_class(s));
+        assert_eq!(p.ops().len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot feed element-wise ops")]
+    fn query_result_rejected_as_ew_operand() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let q = p.max(a);
+        p.add(a, q);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be reduced")]
+    fn query_result_rejected_as_reduce_operand() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let q = p.min(a);
+        p.reduce(q, SegmentSpec::All);
+    }
+
+    #[test]
+    #[should_panic(expected = "reported as hits")]
+    fn query_result_rejected_as_output() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let q = p.topk(a, 3, false);
+        p.output(q);
+    }
+
+    #[test]
+    #[should_panic(expected = "key width")]
+    fn search_key_width_checked() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        p.search(a, Word::from_u128(1, 3, Radix::TERNARY), false);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! CAM:
 //!
 //! * [`ir`] — [`Program`]/[`ValueId`]/[`ProgramOp`]: element-wise
-//!   `Add`/`Sub`/`Mac` and segmented `Reduce` over named input vectors,
-//!   built with a typed builder.
+//!   `Add`/`Sub`/`Mac`, segmented `Reduce`, and terminal
+//!   content-addressable queries (`Search`/`Min`/`Max`/`TopK` — hit lists
+//!   over a CAM-resident value, the filter→aggregate idiom) over named
+//!   input vectors, built with a typed builder.
 //! * [`plan`] — the planner: topological schedule, value liveness, CAM
 //!   column *field* allocation (intermediates stay resident between ops;
 //!   dead fields recycle), `Mac → Reduce` fusion into single lockstep-fold
@@ -45,7 +47,7 @@ pub use exec::{ProgramLuts, ProgramRun};
 pub use ir::{EwOp, Program, ProgramOp, RowClass, SegmentSpec, ValueId};
 pub use plan::{BoundProgram, FieldId, Plan, Step, StepKind};
 
-use crate::ap::ApStats;
+use crate::ap::{ApStats, SearchHits};
 use crate::energy::EnergyBreakdown;
 use crate::mvl::Word;
 use std::time::Duration;
@@ -63,8 +65,12 @@ pub struct StepReport {
     pub stats: ApStats,
     /// Priced energy for this step.
     pub energy: EnergyBreakdown,
-    /// Modeled AP delay of this step (fold steps: rounds × adder delay).
+    /// Modeled AP delay of this step (fold steps: rounds × adder delay;
+    /// query steps: compare passes).
     pub delay_cycles: u64,
+    /// Query hits ([`StepKind::Query`] steps only; rows relative to the
+    /// step's live range).
+    pub hits: Option<SearchHits>,
 }
 
 /// Result of executing a bound program: per-output values plus per-step
@@ -93,6 +99,16 @@ pub struct ProgramReport {
 }
 
 impl ProgramReport {
+    /// Query results in step order: `(step index, hits)` for every
+    /// [`StepKind::Query`] step the plan executed.
+    pub fn query_hits(&self) -> Vec<(usize, &SearchHits)> {
+        self.steps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.hits.as_ref().map(|h| (i, h)))
+            .collect()
+    }
+
     /// Multi-line human-readable rendering (the CLI's output).
     pub fn render(&self) -> String {
         let mut out = format!(
@@ -107,13 +123,32 @@ impl ProgramReport {
             self.elapsed,
         );
         for (i, s) in self.steps.iter().enumerate() {
+            let hits = match &s.hits {
+                Some(h) => format!(" — {} hits", h.rows.len()),
+                None => String::new(),
+            };
             out += &format!(
-                "  step {i:>2} (wave {}): {:<28} {:>8} rows — {:.3e} J, {} cycles\n",
+                "  step {i:>2} (wave {}): {:<28} {:>8} rows — {:.3e} J, {} cycles{hits}\n",
                 s.wave,
                 s.label,
                 s.rows,
                 s.energy.total(),
                 s.delay_cycles,
+            );
+        }
+        for (i, h) in self.query_hits() {
+            let preview: Vec<String> = h
+                .rows
+                .iter()
+                .zip(&h.values)
+                .take(8)
+                .map(|(r, v)| format!("{r}:{}", v.to_u128()))
+                .collect();
+            out += &format!(
+                "  query step {i}: {} hits [{}{}]\n",
+                h.rows.len(),
+                preview.join(" "),
+                if h.rows.len() > 8 { " …" } else { "" },
             );
         }
         for (i, o) in self.outputs.iter().enumerate() {

@@ -40,6 +40,7 @@
 //! and the garbage block is discarded, like tile padding).
 
 use super::ir::{EwOp, Program, ProgramOp, RowClass, SegmentSpec, ValueId};
+use crate::ap::SearchQuery;
 use crate::mvl::Word;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -61,6 +62,11 @@ pub enum StepKind {
     Reduce { b: FieldId, scratch: FieldId, compact: bool },
     /// Fused mac + reduction: one engine step, no intermediate boundary.
     MacReduce { a: FieldId, b: FieldId, scratch: FieldId, compact: bool },
+    /// Terminal content-addressable query over field `v`'s live rows —
+    /// read-only (no field is written or consumed), answered by
+    /// [`crate::ap::search_segments`] with hits surfaced through
+    /// [`super::exec::ProgramRun::step_hits`].
+    Query { v: FieldId, query: SearchQuery },
 }
 
 /// One scheduled step of a [`Plan`].
@@ -97,6 +103,10 @@ impl Step {
                 scratch.0,
                 if *compact { " compact" } else { "" }
             ),
+            StepKind::Query { v, query } => match query {
+                SearchQuery::TopK { k, .. } => format!("query:top{k} f{}", v.0),
+                q => format!("query:{} f{}", q.tag(), v.0),
+            },
         }
     }
 }
@@ -157,6 +167,7 @@ enum Draft {
     Ew { op: EwOp, a: usize, b: usize, dst: usize },
     Reduce { v: usize, dst: usize, spec: SegmentSpec, compact: bool },
     MacReduce { a: usize, b: usize, dst: usize, spec: SegmentSpec, compact: bool },
+    Query { v: usize, dst: usize, query: SearchQuery },
 }
 
 impl Draft {
@@ -166,6 +177,7 @@ impl Draft {
             Draft::Ew { a, b, .. } => vec![*a, *b],
             Draft::Reduce { v, .. } => vec![*v],
             Draft::MacReduce { a, b, .. } => vec![*a, *b],
+            Draft::Query { v, .. } => vec![*v],
         }
     }
 
@@ -174,7 +186,8 @@ impl Draft {
             Draft::Copy { dst, .. }
             | Draft::Ew { dst, .. }
             | Draft::Reduce { dst, .. }
-            | Draft::MacReduce { dst, .. } => *dst,
+            | Draft::MacReduce { dst, .. }
+            | Draft::Query { dst, .. } => *dst,
         }
     }
 }
@@ -184,7 +197,11 @@ impl Plan {
     pub fn of(program: Program) -> Plan {
         let ops = program.ops();
         let nops = ops.len();
-        assert!(!program.outputs().is_empty(), "programs must declare at least one output");
+        let has_query = (0..nops).any(|i| program.is_query(ValueId(i)));
+        assert!(
+            !program.outputs().is_empty() || has_query,
+            "programs must declare at least one output or query"
+        );
         assert!(!program.input_names().is_empty(), "programs must declare at least one input");
 
         let is_input = |v: usize| matches!(ops[v], ProgramOp::Input { .. });
@@ -199,6 +216,16 @@ impl Plan {
                     reuses += (!is_input(a.0)) as u64 + (!is_input(b.0)) as u64;
                 }
                 ProgramOp::Reduce { v, .. } => {
+                    consumers[v.0].push(i);
+                    reuses += (!is_input(v.0)) as u64;
+                }
+                ProgramOp::Search { v, .. }
+                | ProgramOp::Min { v }
+                | ProgramOp::Max { v }
+                | ProgramOp::TopK { v, .. } => {
+                    // queries read a CAM-resident value in place — the
+                    // filter→aggregate payoff the resident-reuse counter
+                    // measures
                     consumers[v.0].push(i);
                     reuses += (!is_input(v.0)) as u64;
                 }
@@ -252,6 +279,37 @@ impl Plan {
                         b = emit_copy(b, &mut drafts, &mut copy_src);
                     }
                     drafts.push(Draft::Ew { op: *op, a, b, dst: i });
+                }
+                ProgramOp::Search { v, key, nearest } => {
+                    // read-only: no copy insertion — queries never destroy
+                    // their operand
+                    let query = if *nearest {
+                        SearchQuery::Nearest { key: key.clone() }
+                    } else {
+                        SearchQuery::Exact { key: key.clone() }
+                    };
+                    drafts.push(Draft::Query { v: v.0, dst: i, query });
+                }
+                ProgramOp::Min { v } => {
+                    drafts.push(Draft::Query {
+                        v: v.0,
+                        dst: i,
+                        query: SearchQuery::Extreme { largest: false },
+                    });
+                }
+                ProgramOp::Max { v } => {
+                    drafts.push(Draft::Query {
+                        v: v.0,
+                        dst: i,
+                        query: SearchQuery::Extreme { largest: true },
+                    });
+                }
+                ProgramOp::TopK { v, k, largest } => {
+                    drafts.push(Draft::Query {
+                        v: v.0,
+                        dst: i,
+                        query: SearchQuery::TopK { k: *k, largest: *largest },
+                    });
                 }
                 ProgramOp::Reduce { v, spec } => {
                     let compact = !consumers[i].is_empty();
@@ -361,6 +419,15 @@ impl Plan {
                         Some(spec.clone()),
                     )
                 }
+                Draft::Query { v, query, .. } => {
+                    // read-only: the operand keeps its field, the query
+                    // allocates nothing and produces no CAM value
+                    (
+                        StepKind::Query { v: FieldId(field_of[v]), query: query.clone() },
+                        *v,
+                        None,
+                    )
+                }
                 Draft::MacReduce { a, b, dst, spec, compact } => {
                     let (fa, fb) = (field_of[a], field_of[b]);
                     // the mac reads `a` before the fold touches the
@@ -457,6 +524,8 @@ impl Plan {
                     n.mac = true;
                     n.add = true;
                 }
+                // compare-only schedule: no LUT families
+                StepKind::Query { .. } => {}
             }
         }
         n
@@ -816,6 +885,78 @@ mod tests {
         p.output(s);
         let plan = p.plan();
         assert_eq!(plan.fused_steps, 0);
+    }
+
+    /// A filter→aggregate DAG plans onto one array: the query step reads
+    /// the reduce's compacted field in place, allocates nothing, and the
+    /// reduce compacts because the query consumes it.
+    #[test]
+    fn query_steps_plan_in_place() {
+        let mut p = Program::new("agg-min", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        let prod = p.mac(a, b);
+        let s = p.reduce(prod, SegmentSpec::Every(2));
+        let q = p.min(s);
+        p.output(s);
+        assert!(p.is_query(q));
+        let plan = p.plan();
+        assert_eq!(plan.num_fields, 2, "query steps allocate no field");
+        let query_step = plan
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, StepKind::Query { .. }))
+            .expect("query planned");
+        assert_eq!(query_step.label(), "query:min f1");
+        match &plan.steps[0].kind {
+            StepKind::MacReduce { compact, .. } => {
+                assert!(*compact, "query consumer forces head compaction")
+            }
+            other => panic!("expected fused step, got {other:?}"),
+        }
+        // the query consumes a resident intermediate
+        assert_eq!(plan.resident_reuses, 2);
+        assert!(plan.render().contains("query:min"), "{}", plan.render());
+
+        // bind: the query's live rows are the reduce's segment count
+        let plan = Arc::new(plan);
+        let avec: Vec<Word> = (0..6).map(|v| w(v)).collect();
+        let bvec: Vec<Word> = (0..6).map(|v| w(v + 1)).collect();
+        let bound =
+            BoundProgram::bind(&plan, vec![("a", avec), ("b", bvec)], true).unwrap();
+        let qi = plan
+            .steps
+            .iter()
+            .position(|s| matches!(s.kind, StepKind::Query { .. }))
+            .unwrap();
+        assert_eq!(bound.step_live[qi], 3);
+    }
+
+    /// A pure query program (no arithmetic output) is legal; a program
+    /// with neither outputs nor queries is not.
+    #[test]
+    fn pure_query_program_plans() {
+        let mut p = Program::new("lookup", Radix::TERNARY, 4);
+        let a = p.input("a");
+        p.search(a, w(5), false);
+        let plan = p.plan();
+        assert_eq!(plan.steps.len(), 1);
+        assert!(plan.outputs.is_empty());
+        assert_eq!(plan.steps[0].label(), "query:exact f0");
+        let mut p = Program::new("topk", Radix::TERNARY, 4);
+        let a = p.input("a");
+        p.topk(a, 3, true);
+        assert_eq!(p.plan().steps[0].label(), "query:top3 f0");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one output or query")]
+    fn outputless_queryless_program_rejected() {
+        let mut p = Program::new("t", Radix::TERNARY, 4);
+        let a = p.input("a");
+        let b = p.input("b");
+        p.add(a, b);
+        p.plan();
     }
 
     #[test]

@@ -13,8 +13,12 @@
 //!   rows `[⌈k/2⌉, k)` onto rows `[0, k − ⌈k/2⌉)`, so every fold is a
 //!   `mod radix^p` addition and the result is the segment sum mod
 //!   `radix^p`.
+//! * `Search`/`Min`/`Max`/`TopK` — host content-addressable oracles
+//!   ([`crate::ap::host_exact`] and friends), surfaced through
+//!   [`evaluate_full`] as `(op index, hit rows)` pairs.
 
 use super::ir::{EwOp, Program, ProgramOp, SegmentSpec};
+use crate::ap::{host_exact, host_extreme, host_nearest, host_topk};
 use crate::mvl::{Radix, Word};
 use std::collections::HashMap;
 
@@ -73,9 +77,22 @@ fn bounds_of(spec: &SegmentSpec, rows: usize) -> Vec<usize> {
 /// Panics on malformed inputs — the executable path reports those through
 /// [`super::plan::BoundProgram::bind`]; the reference is test plumbing.
 pub fn evaluate(program: &Program, inputs: &[(&str, Vec<Word>)]) -> Vec<Vec<Word>> {
+    evaluate_full(program, inputs).0
+}
+
+/// [`evaluate`] plus the host-oracle hit rows of every query op, as
+/// `(op index, matching rows)` pairs in op order. Query semantics mirror
+/// the in-engine ops exactly: nearest = minimum digit distance, extremes
+/// report *all* tied rows ascending, TopK ranks by value with ties broken
+/// ascending by row and returns `min(k, rows)` entries.
+pub fn evaluate_full(
+    program: &Program,
+    inputs: &[(&str, Vec<Word>)],
+) -> (Vec<Vec<Word>>, Vec<(usize, Vec<usize>)>) {
     let by_name: HashMap<&str, &Vec<Word>> = inputs.iter().map(|(n, v)| (*n, v)).collect();
     let mut vals: Vec<Vec<Word>> = Vec::with_capacity(program.ops().len());
-    for op in program.ops() {
+    let mut hits: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, op) in program.ops().iter().enumerate() {
         let next = match op {
             ProgramOp::Input { name } => by_name
                 .get(name.as_str())
@@ -99,10 +116,34 @@ pub fn evaluate(program: &Program, inputs: &[(&str, Vec<Word>)]) -> Vec<Vec<Word
                 }
                 out
             }
+            // query ops are terminal (the IR rejects consuming them); an
+            // empty value vector keeps `vals` aligned with op indices
+            ProgramOp::Search { v, key, nearest } => {
+                let rows = if *nearest {
+                    host_nearest(&vals[v.0], key).0
+                } else {
+                    host_exact(&vals[v.0], key)
+                };
+                hits.push((i, rows));
+                Vec::new()
+            }
+            ProgramOp::Min { v } => {
+                hits.push((i, host_extreme(&vals[v.0], false)));
+                Vec::new()
+            }
+            ProgramOp::Max { v } => {
+                hits.push((i, host_extreme(&vals[v.0], true)));
+                Vec::new()
+            }
+            ProgramOp::TopK { v, k, largest } => {
+                hits.push((i, host_topk(&vals[v.0], *k, *largest)));
+                Vec::new()
+            }
         };
         vals.push(next);
     }
-    program.outputs().iter().map(|o| vals[o.0].clone()).collect()
+    let outs = program.outputs().iter().map(|o| vals[o.0].clone()).collect();
+    (outs, hits)
 }
 
 #[cfg(test)]
@@ -136,6 +177,30 @@ mod tests {
         let out = evaluate(&prog, &[("a", av.clone()), ("b", bv.clone())]);
         let want: u128 = av.iter().zip(&bv).map(|(x, y)| x.to_u128() * y.to_u128()).sum();
         assert_eq!(out, vec![vec![w(want, 6)]]);
+    }
+
+    /// Query ops surface host-oracle hits without disturbing outputs.
+    #[test]
+    fn query_hits_track_op_indices() {
+        use super::super::ir::SegmentSpec;
+        let mut prog = Program::new("filter-agg", Radix::TERNARY, 4);
+        let a = prog.input("a");
+        let b = prog.input("b");
+        let prod = prog.mac(a, b);
+        let s = prog.reduce(prod, SegmentSpec::Every(2));
+        prog.min(s);
+        prog.topk(s, 2, true);
+        prog.output(s);
+        let av: Vec<Word> = [1u128, 2, 0, 2, 1, 1].iter().map(|&v| w(v, 4)).collect();
+        let bv: Vec<Word> = [2u128, 2, 1, 0, 1, 2].iter().map(|&v| w(v, 4)).collect();
+        let named = [("a", av), ("b", bv)];
+        let (outs, hits) = evaluate_full(&prog, &named);
+        // segment products: [2+4, 0+0, 1+2] = [6, 0, 3]
+        let want: Vec<Word> = [6u128, 0, 3].iter().map(|&v| w(v, 4)).collect();
+        assert_eq!(outs, vec![want.clone()]);
+        assert_eq!(hits, vec![(4, vec![1]), (5, vec![0, 2])]);
+        // evaluate() stays the hits-free view
+        assert_eq!(evaluate(&prog, &named), vec![want]);
     }
 
     /// Mac is digit-wise, not integer multiplication.

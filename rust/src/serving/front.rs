@@ -41,14 +41,24 @@ pub enum WorkClass {
     Sub,
     Mac,
     Reduce,
+    /// Content-addressable queries: exact/nearest match, Min/Max, TopK
+    /// ([`OpKind::is_search`]) — one SLO class, they share the
+    /// compare-only execution path.
+    Search,
     Program,
 }
 
 impl WorkClass {
-    /// Canonical order (matches the `--mix add:sub:mac:reduce:program`
-    /// weight order).
-    pub const ALL: [WorkClass; 5] =
-        [WorkClass::Add, WorkClass::Sub, WorkClass::Mac, WorkClass::Reduce, WorkClass::Program];
+    /// Canonical order (matches the `--mix
+    /// add:sub:mac:reduce:search:program` weight order).
+    pub const ALL: [WorkClass; 6] = [
+        WorkClass::Add,
+        WorkClass::Sub,
+        WorkClass::Mac,
+        WorkClass::Reduce,
+        WorkClass::Search,
+        WorkClass::Program,
+    ];
 
     /// The class a plain job belongs to.
     pub fn of_op(op: OpKind) -> WorkClass {
@@ -57,6 +67,7 @@ impl WorkClass {
             OpKind::Sub => WorkClass::Sub,
             OpKind::Mac => WorkClass::Mac,
             OpKind::Reduce => WorkClass::Reduce,
+            OpKind::Search | OpKind::Min | OpKind::Max | OpKind::TopK => WorkClass::Search,
         }
     }
 
@@ -67,6 +78,7 @@ impl WorkClass {
             WorkClass::Sub => "sub",
             WorkClass::Mac => "mac",
             WorkClass::Reduce => "reduce",
+            WorkClass::Search => "search",
             WorkClass::Program => "program",
         }
     }
@@ -388,6 +400,30 @@ mod tests {
         assert_eq!(add.1.count(), 20, "all samples under the add class");
         assert_eq!(stats.total_latency().count(), 20);
         assert_eq!(agg.latency.count(), 20, "engine histogram sees every request too");
+    }
+
+    /// Search-class jobs are admitted like arithmetic and their latency
+    /// samples land under the shared Search SLO class.
+    #[test]
+    fn search_jobs_account_under_search_class() {
+        let front = FrontDoor::start(FrontConfig::default(), native).unwrap();
+        let radix = Radix::TERNARY;
+        let vals: Vec<Word> = (0..8).map(|v| Word::from_u128(v, 5, radix)).collect();
+        let key = Word::from_u128(3, 5, radix);
+        let rxs = vec![
+            front.submit(Job::search(1, radix, vals.clone(), key, false, vec![])).unwrap(),
+            front.submit(Job::min(2, radix, vals.clone(), vec![])).unwrap(),
+            front.submit(Job::topk(3, radix, vals, 2, true, vec![])).unwrap(),
+        ];
+        for rx in rxs {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.hits.len(), 1);
+        }
+        let (stats, agg, _) = front.shutdown();
+        assert_eq!(stats.completed, 3);
+        let search = &stats.per_class[WorkClass::Search.index()];
+        assert_eq!(search.1.count(), 3, "all samples under the search class");
+        assert_eq!(agg.search_jobs, 3);
     }
 
     /// Admission control: with the cap reached and the shards parked on a

@@ -14,7 +14,8 @@
 //!   cannot see (coordinated omission).
 //!
 //! Both drive the same mixed workload ([`Mix`]) of element-wise jobs,
-//! in-engine reductions, and compiled dot-product programs, and both
+//! in-engine reductions, content-addressable searches, and compiled
+//! dot-product programs, and both
 //! report per-[`WorkClass`] latency quantiles from the front door's
 //! streaming histograms.
 
@@ -28,29 +29,31 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Workload mix: integer weights per class, in [`WorkClass::ALL`] order
-/// (`add:sub:mac:reduce:program`).
+/// (`add:sub:mac:reduce:search:program`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Mix {
-    pub weights: [u32; 5],
+    pub weights: [u32; 6],
 }
 
 impl Default for Mix {
-    /// `4:2:2:1:1` — add-heavy element-wise traffic with a reduction and
-    /// program tail, roughly the profile of the paper's vector workloads.
+    /// `4:2:2:1:1:1` — add-heavy element-wise traffic with a reduction,
+    /// search, and program tail, roughly the profile of the paper's
+    /// vector workloads.
     fn default() -> Self {
-        Mix { weights: [4, 2, 2, 1, 1] }
+        Mix { weights: [4, 2, 2, 1, 1, 1] }
     }
 }
 
 impl Mix {
-    /// Parse `add:sub:mac:reduce:program` integer weights.
+    /// Parse `add:sub:mac:reduce:search:program` integer weights.
     pub fn parse(s: &str) -> anyhow::Result<Mix> {
         let parts: Vec<&str> = s.split(':').collect();
         anyhow::ensure!(
-            parts.len() == 5,
-            "--mix wants 5 ':'-separated integer weights (add:sub:mac:reduce:program), got '{s}'"
+            parts.len() == 6,
+            "--mix wants 6 ':'-separated integer weights \
+             (add:sub:mac:reduce:search:program), got '{s}'"
         );
-        let mut weights = [0u32; 5];
+        let mut weights = [0u32; 6];
         for (w, part) in weights.iter_mut().zip(&parts) {
             *w = part
                 .trim()
@@ -188,6 +191,20 @@ impl RequestFactory {
                 self.words(rng),
                 Vec::new(),
             )),
+            WorkClass::Search => {
+                // alternate the two search shapes so the class exercises
+                // both the match path and the elimination path
+                let values = self.words(rng);
+                let segments = vec![values.len()];
+                if id % 2 == 0 {
+                    let key =
+                        Word::from_digits(rng.number(self.digits, self.radix.n()), self.radix);
+                    Request::Job(Job::search(id, self.radix, values, key, false, segments))
+                } else {
+                    let k = (values.len() / 2).max(1);
+                    Request::Job(Job::topk(id, self.radix, values, k, true, segments))
+                }
+            }
             WorkClass::Program => {
                 let bound = BoundProgram::bind(
                     &self.plan,
@@ -502,23 +519,24 @@ mod tests {
 
     #[test]
     fn mix_parses_and_rejects() {
-        assert_eq!(Mix::parse("4:2:2:1:1").unwrap(), Mix::default());
-        assert_eq!(Mix::parse("1:0:0:0:0").unwrap().weights, [1, 0, 0, 0, 0]);
+        assert_eq!(Mix::parse("4:2:2:1:1:1").unwrap(), Mix::default());
+        assert_eq!(Mix::parse("1:0:0:0:0:0").unwrap().weights, [1, 0, 0, 0, 0, 0]);
         assert!(Mix::parse("1:2:3").is_err(), "wrong arity");
-        assert!(Mix::parse("1:2:3:4:x").is_err(), "non-integer");
-        assert!(Mix::parse("0:0:0:0:0").is_err(), "all-zero");
+        assert!(Mix::parse("1:2:3:4:5").is_err(), "old 5-class arity");
+        assert!(Mix::parse("1:2:3:4:5:x").is_err(), "non-integer");
+        assert!(Mix::parse("0:0:0:0:0:0").is_err(), "all-zero");
     }
 
     #[test]
     fn mix_pick_respects_zero_weights() {
-        let mix = Mix::parse("0:0:5:0:0").unwrap();
+        let mix = Mix::parse("0:0:5:0:0:0").unwrap();
         let mut rng = Rng::new(3);
         for _ in 0..100 {
             assert_eq!(mix.pick(&mut rng), WorkClass::Mac);
         }
         // every positive-weight class appears eventually
         let mix = Mix::default();
-        let mut seen = [false; 5];
+        let mut seen = [false; 6];
         for _ in 0..2000 {
             seen[mix.pick(&mut rng) as usize] = true;
         }

@@ -6,7 +6,8 @@
 //! counts, model constants, normalized areas) or seeded-deterministic
 //! with a tolerance anchored on the paper's published value.
 
-use mvap::ap::{adder_lut, ExecMode};
+use mvap::ap::{adder_lut, host_extreme, host_extreme_passes, ExecMode};
+use mvap::coordinator::{Job, NativeBackend, VectorEngine};
 use mvap::diagram::StateDiagram;
 use mvap::energy::{
     area_normalized, delay_cycles, CompareEnergy, DelayScheme, EnergyModel, OpShape,
@@ -14,7 +15,7 @@ use mvap::energy::{
 use mvap::exp::table11;
 use mvap::func::{addc, copy_digit, full_sub, mac4, TruthTable};
 use mvap::lutgen::{generate_blocked, generate_non_blocked};
-use mvap::mvl::Radix;
+use mvap::mvl::{Radix, Word};
 
 /// Tables VII/X: the ternary full adder compiles to 21 passes, grouped
 /// into 9 write blocks when blocked; Table VI: the binary adder of [6] is
@@ -132,6 +133,70 @@ fn golden_sub_family_lut_shapes() {
     assert_eq!(shape(full_sub(Radix::TERNARY)), (27, 5, 22, 9, 4));
     assert_eq!(shape(full_sub(Radix(4))), (64, 5, 59, 14, 8));
     assert_eq!(shape(full_sub(Radix(5))), (125, 7, 118, 18, 12));
+}
+
+/// Min/Max elimination-schedule pins over the shared deterministic
+/// fixture `values[r] = (r·37 + 11) mod radix⁴` (48 rows × 4 digits,
+/// little-endian), radix 2–5: compare-pass counts, the accumulated
+/// match/mismatch histogram, modeled delay (= passes; search ops never
+/// write), and compare energy priced from the radix-appropriate §VI-A
+/// table. The numbers are derived by the exact Python port
+/// (`python/search_port.py` — run it to print all eight pins;
+/// `python/tests/test_search_port.py::test_golden_pins` asserts the same
+/// table), so a schedule drift in either language breaks one suite or
+/// the other. Run through the engine job path so delay and energy
+/// pricing are pinned end to end, on both native storage backends.
+#[test]
+fn golden_search_elimination_pins() {
+    // radix -> (min, max), each (passes, [full matches, mismatches])
+    let pins: [(u8, [(u64, [u64; 2]); 2]); 4] = [
+        (2, [(4, [96, 96]), (4, [96, 96])]),
+        (3, [(3, [47, 97]), (4, [63, 129])]),
+        (4, [(5, [61, 179]), (4, [49, 143])]),
+        (5, [(5, [50, 190]), (6, [54, 234])]),
+    ];
+    for (n, pin) in pins {
+        let radix = Radix(n);
+        let span = (n as u128).pow(4);
+        let values: Vec<Word> = (0..48)
+            .map(|r| Word::from_u128((r as u128 * 37 + 11) % span, 4, radix))
+            .collect();
+        let table = if n == 2 {
+            CompareEnergy::default_binary()
+        } else {
+            CompareEnergy::default_ternary()
+        };
+        for (largest, (passes, hist)) in [false, true].into_iter().zip(pin) {
+            // the schedule pin agrees with the host oracle's simulation
+            assert_eq!(host_extreme_passes(&values, largest), passes, "radix {n}");
+            for backend in [NativeBackend::default(), NativeBackend::bit_sliced()] {
+                let mut eng = VectorEngine::new(Box::new(backend));
+                let job = if largest {
+                    Job::max(1, radix, values.clone(), vec![])
+                } else {
+                    Job::min(1, radix, values.clone(), vec![])
+                };
+                let res = eng.execute(&job).unwrap();
+                let tag = format!("radix {n} largest={largest}");
+                assert_eq!(res.hits.len(), 1, "{tag}");
+                assert_eq!(res.hits[0].rows, host_extreme(&values, largest), "{tag}");
+                assert_eq!(res.hits[0].passes, passes, "{tag}: pass count");
+                assert_eq!(res.stats.compare_cycles, passes, "{tag}");
+                assert_eq!(res.stats.mismatch_hist, hist.to_vec(), "{tag}: histogram");
+                assert_eq!(res.delay_cycles, passes, "{tag}: delay = compare passes");
+                assert_eq!(res.stats.write_cycles, 0, "{tag}: search never writes");
+                assert_eq!(res.energy.write, 0.0, "{tag}");
+                assert_eq!(res.energy.write_ops, 0, "{tag}");
+                let want_compare =
+                    hist[0] as f64 * table.by_class[0] + hist[1] as f64 * table.by_class[1];
+                assert!(
+                    (res.energy.compare - want_compare).abs() < 1e-24,
+                    "{tag}: compare energy {} != {want_compare}",
+                    res.energy.compare
+                );
+            }
+        }
+    }
 }
 
 /// Table XI normalized areas for every width pairing, and the 6.25%

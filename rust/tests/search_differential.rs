@@ -1,0 +1,346 @@
+//! Differential property tests for the in-engine content-addressable ops
+//! (`OpKind::{Search, Min, Max, TopK}`): the bit-sliced plane-native path
+//! must be observably identical to the scalar path — hit sets, reported
+//! values, per-job statistics, energy, and modeled delay — and both must
+//! match the pure host oracles, for radices 2–5, row counts straddling
+//! 64-row plane-word boundaries, segment cuts landing mid-word, stored
+//! don't-care digits, and data-parallel thread counts 1 and 4 (search is
+//! a compare-only schedule, so the knob must be a pure no-op). Coalesced
+//! batches of same-signature search jobs must equal solo execution
+//! exactly — the stats-exactness the coordinator's batching relies on —
+//! and the threaded service front door must agree with a direct engine.
+//!
+//! Replay a failing case with `MVAP_PROP_SEED=0x… cargo test -q --test
+//! search_differential` (the seed is printed in the failure message);
+//! ci.sh runs a fixed-seed pass of exactly this suite as its
+//! reproduction stage.
+
+use mvap::ap::{
+    host_exact, host_extreme, host_extreme_passes, host_nearest, host_topk, host_topk_passes,
+    ApStats, SearchQuery,
+};
+use mvap::cam::Parallelism;
+use mvap::coordinator::{
+    BackendKind, EngineService, Job, JobResult, NativeBackend, VectorEngine,
+};
+use mvap::energy::CompareEnergy;
+use mvap::mvl::{Radix, Word, DONT_CARE};
+use mvap::util::prop::{forall, Config};
+use mvap::util::Rng;
+
+mod common;
+
+use common::{boundary_rows, random_digit, random_radix, KINDS};
+
+/// Random strictly-increasing segment bounds over `rows` rows; cuts are
+/// uniform, so they routinely land mid-word.
+fn random_segments(rng: &mut Rng, rows: usize) -> Vec<usize> {
+    let mut bounds = Vec::new();
+    let mut at = 0usize;
+    while at < rows {
+        at += 1 + rng.index(rows - at);
+        bounds.push(at);
+    }
+    bounds
+}
+
+/// `rows` random `p`-digit words with the given don't-care density.
+fn random_wild_words(rng: &mut Rng, rows: usize, p: usize, radix: Radix, dc: f64) -> Vec<Word> {
+    (0..rows)
+        .map(|_| {
+            Word::from_digits_wild(
+                (0..p).map(|_| random_digit(rng, radix.n(), dc)).collect(),
+                radix,
+            )
+        })
+        .collect()
+}
+
+/// A random key: a stored row half the time (guaranteed exact hits),
+/// otherwise fresh digits with a light wildcard density.
+fn random_key(rng: &mut Rng, values: &[Word], p: usize, radix: Radix) -> Word {
+    if rng.chance(0.5) {
+        values[rng.index(values.len())].clone()
+    } else {
+        Word::from_digits_wild(
+            (0..p).map(|_| random_digit(rng, radix.n(), 0.05)).collect(),
+            radix,
+        )
+    }
+}
+
+/// A random search-class job of any of the five query shapes over the
+/// given operands and segment bounds.
+fn random_search_job(
+    rng: &mut Rng,
+    id: u64,
+    radix: Radix,
+    values: Vec<Word>,
+    segments: Vec<usize>,
+) -> Job {
+    let p = values[0].width();
+    match rng.index(5) {
+        0 => {
+            let key = random_key(rng, &values, p, radix);
+            Job::search(id, radix, values, key, false, segments)
+        }
+        1 => {
+            let key = random_key(rng, &values, p, radix);
+            Job::search(id, radix, values, key, true, segments)
+        }
+        2 => Job::min(id, radix, values, segments),
+        3 => Job::max(id, radix, values, segments),
+        _ => {
+            let k = rng.index(values.len() + 3);
+            let largest = rng.chance(0.5);
+            Job::topk(id, radix, values, k, largest, segments)
+        }
+    }
+}
+
+/// The full oracle check of one search-job result: per-segment hit rows,
+/// reported stored values, distances, and pass counts against the host
+/// references; pass/stat/delay consistency; the read-only energy model
+/// (zero writes, compare energy = the histogram priced by the
+/// radix-appropriate §VI-A table).
+fn check_against_host(job: &Job, res: &JobResult) {
+    assert!(res.values.is_empty(), "search jobs return hits, not per-row values");
+    assert_eq!(res.hits.len(), job.segments().len(), "one hit set per segment");
+    let query = job.query().expect("search job carries a query");
+    let mut start = 0usize;
+    for (s, (&end, hits)) in job.segments().iter().zip(&res.hits).enumerate() {
+        let seg = &job.a[start..end];
+        match query {
+            SearchQuery::Exact { key } => {
+                assert_eq!(hits.rows, host_exact(seg, key), "segment {s}: exact rows");
+                assert_eq!(hits.distance, 0, "segment {s}");
+                assert_eq!(hits.passes, 1, "segment {s}: exact match is one cycle");
+            }
+            SearchQuery::Nearest { key } => {
+                let (rows, dist) = host_nearest(seg, key);
+                assert_eq!(hits.rows, rows, "segment {s}: nearest rows");
+                assert_eq!(hits.distance, dist, "segment {s}: distance");
+                assert_eq!(hits.passes, key.width() as u64, "segment {s}: one cycle per digit");
+            }
+            SearchQuery::Extreme { largest } => {
+                assert_eq!(hits.rows, host_extreme(seg, *largest), "segment {s}: extreme rows");
+                assert_eq!(hits.passes, host_extreme_passes(seg, *largest), "segment {s}");
+            }
+            SearchQuery::TopK { k, largest } => {
+                assert_eq!(hits.rows, host_topk(seg, *k, *largest), "segment {s}: topk ranking");
+                assert_eq!(hits.passes, host_topk_passes(seg, *k, *largest), "segment {s}");
+            }
+        }
+        for (&r, v) in hits.rows.iter().zip(&hits.values) {
+            assert_eq!(v, &seg[r], "segment {s}: reported value is the stored word");
+        }
+        start = end;
+    }
+    // pass/stat/delay consistency: the pass total IS the cycle count
+    let pass_sum: u64 = res.hits.iter().map(|h| h.passes).sum();
+    assert_eq!(res.stats.compare_cycles, pass_sum, "stats sum the per-segment passes");
+    assert_eq!(res.delay_cycles, res.stats.compare_cycles, "delay = compare passes");
+    // search ops are read-only: compare energy only, priced per class
+    assert_eq!(res.stats.write_cycles, 0);
+    assert_eq!(res.stats.write_ops(), 0);
+    assert_eq!(res.energy.write, 0.0);
+    assert_eq!(res.energy.write_ops, 0);
+    let table = if job.radix.n() == 2 {
+        CompareEnergy::default_binary()
+    } else {
+        CompareEnergy::default_ternary()
+    };
+    let want: f64 = res
+        .stats
+        .mismatch_hist
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| c as f64 * table.class(k))
+        .sum();
+    assert!(
+        (res.energy.compare - want).abs() < 1e-21,
+        "compare energy {} != histogram pricing {want}",
+        res.energy.compare
+    );
+}
+
+/// The core differential: every query shape on both storage backends at
+/// data-parallel thread counts 1 and 4 — identical hits, stats, energy,
+/// and delay across all four combinations, all matching the host
+/// oracles, over boundary-straddling row counts and mid-word segment
+/// cuts with stored don't-care digits.
+#[test]
+fn search_jobs_scalar_vs_bitsliced_differential() {
+    forall(Config::cases(50), |rng| {
+        let radix = random_radix(rng);
+        let p = 1 + rng.index(6);
+        let rows = boundary_rows(rng);
+        let values = random_wild_words(rng, rows, p, radix, 0.05);
+        let segments = random_segments(rng, rows);
+        let job = random_search_job(rng, 1, radix, values, segments);
+        let mut runs = Vec::new();
+        for kind in KINDS {
+            for threads in [1usize, 4] {
+                let backend =
+                    NativeBackend::new(kind).with_parallelism(Parallelism::new(threads));
+                let mut eng = VectorEngine::new(Box::new(backend));
+                let res = eng.execute(&job).unwrap();
+                check_against_host(&job, &res);
+                runs.push((kind, threads, res));
+            }
+        }
+        let (k0, t0, first) = &runs[0];
+        for (kind, threads, res) in &runs[1..] {
+            let tag = format!("{kind:?}x{threads} vs {k0:?}x{t0}");
+            assert_eq!(res.hits, first.hits, "{tag}: hits diverged");
+            assert_eq!(res.stats, first.stats, "{tag}: stats diverged");
+            assert_eq!(res.energy, first.energy, "{tag}: energy diverged");
+            assert_eq!(res.delay_cycles, first.delay_cycles, "{tag}: delay diverged");
+        }
+    });
+}
+
+/// Coalesced batches of same-signature search jobs equal solo execution
+/// exactly — hits, stats, energy, delay — on both backends. Signatures
+/// key on (op, radix, digits) only: row counts, segment structures, and
+/// keys may all differ across a batch, because read-only segments never
+/// interact on the shared array.
+#[test]
+fn coalesced_search_batches_match_solo_runs() {
+    forall(Config::cases(12), |rng| {
+        let radix = random_radix(rng);
+        let p = 1 + rng.index(5);
+        let shape = rng.index(5); // one query shape per batch (same OpKind)
+        let njobs = 2 + rng.index(3);
+        let jobs: Vec<Job> = (0..njobs)
+            .map(|id| {
+                let rows = 1 + rng.index(120);
+                let values = random_wild_words(rng, rows, p, radix, 0.05);
+                let segments = random_segments(rng, rows);
+                match shape {
+                    0 | 1 => {
+                        let key = random_key(rng, &values, p, radix);
+                        Job::search(id as u64, radix, values, key, shape == 1, segments)
+                    }
+                    2 => Job::min(id as u64, radix, values, segments),
+                    3 => Job::max(id as u64, radix, values, segments),
+                    _ => {
+                        let k = rng.index(values.len() + 3);
+                        Job::topk(id as u64, radix, values, k, rng.chance(0.5), segments)
+                    }
+                }
+            })
+            .collect();
+        let sig = jobs[0].signature();
+        assert!(jobs.iter().all(|j| j.signature() == sig), "search batches share a signature");
+        for kind in KINDS {
+            let mut solo = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let want: Vec<_> = jobs.iter().map(|j| solo.execute(j).unwrap()).collect();
+            let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+            let got = eng.execute_coalesced(&jobs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for ((g, w), job) in got.iter().zip(&want).zip(&jobs) {
+                assert_eq!(g.hits, w.hits, "job {} ({kind:?}): coalesced hits", g.id);
+                assert_eq!(g.stats, w.stats, "job {} ({kind:?}): coalesced stats", g.id);
+                assert_eq!(g.energy, w.energy, "job {} ({kind:?})", g.id);
+                assert_eq!(g.delay_cycles, w.delay_cycles, "job {} ({kind:?})", g.id);
+                check_against_host(job, g);
+            }
+        }
+    });
+}
+
+/// The edge shapes, end to end through the engine on both backends:
+/// misses still cost their compare cycle, all-equal arrays tie on every
+/// row, duplicate extremes break ties ascending, `k = 0` is free,
+/// `k > rows` returns the full ordering, a single row eliminates for
+/// free, and stored don't-care digits match any key and rank as the
+/// scan-best value.
+#[test]
+fn search_edge_cases_through_engine() {
+    let radix = Radix::TERNARY;
+    for kind in KINDS {
+        let mut eng = VectorEngine::new(Box::new(NativeBackend::new(kind)));
+        // single row: a lone candidate needs no elimination passes
+        let one = vec![Word::from_u128(5, 3, radix)];
+        let res = eng.execute(&Job::min(1, radix, one, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![0], "{kind:?}");
+        assert_eq!(res.delay_cycles, 0, "{kind:?}: single-row min is free");
+        assert_eq!(res.energy.total(), 0.0, "{kind:?}");
+        // empty match set: a miss still costs the one compare cycle
+        let vals: Vec<Word> =
+            [3u128, 8, 12].iter().map(|&v| Word::from_u128(v, 3, radix)).collect();
+        let key = Word::from_u128(25, 3, radix);
+        let res = eng.execute(&Job::search(2, radix, vals, key, false, vec![])).unwrap();
+        assert!(res.hits[0].rows.is_empty(), "{kind:?}");
+        assert_eq!(res.delay_cycles, 1, "{kind:?}: a miss is one compare cycle");
+        assert!(res.energy.compare > 0.0, "{kind:?}");
+        // all rows equal: every row ties, ascending
+        let dup = vec![Word::from_u128(7, 3, radix); 4];
+        let res = eng.execute(&Job::max(3, radix, dup, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![0, 1, 2, 3], "{kind:?}: ties report every row");
+        // duplicate extremes under TopK: ties break by ascending row
+        let vals: Vec<Word> =
+            [5u128, 7, 5, 1, 7].iter().map(|&v| Word::from_u128(v, 3, radix)).collect();
+        let res = eng.execute(&Job::topk(4, radix, vals.clone(), 3, true, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![1, 4, 0], "{kind:?}");
+        // k = 0 is free; k > rows returns the full ordering
+        let res = eng.execute(&Job::topk(5, radix, vals.clone(), 0, true, vec![])).unwrap();
+        assert!(res.hits[0].rows.is_empty(), "{kind:?}");
+        assert_eq!(res.stats, ApStats::default(), "{kind:?}: k = 0 costs nothing");
+        let res = eng.execute(&Job::topk(6, radix, vals.clone(), 99, false, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![3, 0, 2, 1, 4], "{kind:?}: full ascending ordering");
+        assert_eq!(res.hits[0].rows.len(), vals.len(), "{kind:?}");
+        // stored don't-care digits: [*, 1, 0] matches keys 3..=5 and
+        // ranks as value 3 (wildcard ⇒ scan-best 0) under Min
+        let wild = vec![
+            Word::from_digits_wild(vec![DONT_CARE, 1, 0], radix),
+            Word::from_u128(4, 3, radix),
+        ];
+        let key = Word::from_u128(4, 3, radix);
+        let res =
+            eng.execute(&Job::search(7, radix, wild.clone(), key, false, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![0, 1], "{kind:?}: wildcard matches the key too");
+        let res = eng.execute(&Job::min(8, radix, wild, vec![])).unwrap();
+        assert_eq!(res.hits[0].rows, vec![0], "{kind:?}: wildcard ranks as scan-best");
+    }
+}
+
+/// The threaded service front door returns bit-identical results to a
+/// direct engine for every query shape, on both native backend kinds —
+/// the submission path adds queueing, never behavior.
+#[test]
+fn search_jobs_match_through_the_service() {
+    let radix = Radix::TERNARY;
+    let mut rng = Rng::new(31);
+    let p = 4;
+    let rows = 70; // straddles a 64-row plane-word boundary
+    let values = random_wild_words(&mut rng, rows, p, radix, 0.05);
+    let key = values[rng.index(rows)].clone();
+    let jobs = vec![
+        Job::search(1, radix, values.clone(), key.clone(), false, vec![35, 70]),
+        Job::search(2, radix, values.clone(), key, true, vec![]),
+        Job::min(3, radix, values.clone(), vec![20, 40, 70]),
+        Job::topk(4, radix, values.clone(), 5, true, vec![]),
+    ];
+    for (backend_kind, storage) in [
+        (BackendKind::Native, KINDS[0]),
+        (BackendKind::NativeBitSliced, KINDS[1]),
+    ] {
+        let svc = EngineService::start_kind(2, 4, backend_kind, std::path::PathBuf::from("."))
+            .unwrap();
+        let mut eng = VectorEngine::new(Box::new(NativeBackend::new(storage)));
+        for job in &jobs {
+            let got = svc.run(job.clone()).unwrap();
+            let want = eng.execute(job).unwrap();
+            assert_eq!(got.hits, want.hits, "job {} ({backend_kind:?})", job.id);
+            assert_eq!(got.stats, want.stats, "job {} ({backend_kind:?})", job.id);
+            assert_eq!(got.energy, want.energy, "job {} ({backend_kind:?})", job.id);
+            assert_eq!(got.delay_cycles, want.delay_cycles, "job {} ({backend_kind:?})", job.id);
+            check_against_host(job, &got);
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.search_jobs, jobs.len() as u64, "{backend_kind:?}");
+        assert!(metrics.search_passes > 0, "{backend_kind:?}");
+    }
+}

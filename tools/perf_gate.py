@@ -43,9 +43,19 @@ def fail(msg):
 
 
 def load_results(path):
-    """Return {bench name: p50 ns} for one trajectory file, or fail."""
+    """Return {bench name: p50 ns} for one trajectory file, or fail.
+
+    Missing file and empty trajectory are distinct failures: a missing
+    file means the bench stage (or the repo) never produced the
+    trajectory at all — check the ci.sh --json invocation and that the
+    placeholder is committed; an empty results array means the stage ran
+    but recorded nothing (wrong bench filter, or an uncommitted
+    placeholder was never populated by a CI run)."""
     if not os.path.exists(path):
-        fail(f"trajectory file {path} does not exist")
+        fail(
+            f"trajectory file {path} does not exist — the bench stage never "
+            f"wrote it (check the ci.sh --json path and the committed placeholder)"
+        )
     with open(path) as fh:
         try:
             doc = json.load(fh)
@@ -53,7 +63,16 @@ def load_results(path):
             fail(f"trajectory file {path} is not valid JSON: {e}")
     results = doc.get("results", [])
     if not results:
-        fail(f"trajectory file {path} holds zero results")
+        if "note" in doc:
+            fail(
+                f"trajectory file {path} is an unpopulated placeholder "
+                f"(empty results array with an authoring note) — run ./ci.sh "
+                f"so the quick-bench stage records real results"
+            )
+        fail(
+            f"trajectory file {path} holds zero results — the bench stage "
+            f"ran but recorded nothing (check its bench-name filters)"
+        )
     by_name = {}
     for rec in results:
         if "name" not in rec or "p50_ns" not in rec:
