@@ -35,31 +35,47 @@
 #                                    curves to BENCH_7.json at the repo root
 #                                    and FAILS LOUDLY if it holds zero
 #                                    results)
-#   6. cargo test --release -q      (the coalescing/bit-sliced fast paths,
+#   6. trace smoke                  (`mvap trace` replays the canned
+#                                    coalesce + steal workload and the
+#                                    resulting Chrome JSON must pass
+#                                    tools/trace_check.py with complete
+#                                    admit->reply flow chains, a stolen
+#                                    reply, a >= 2-job flush, and span
+#                                    energy reconciling with the metrics
+#                                    snapshots to 1e-9; a traced
+#                                    single-config `mvap serve` run is
+#                                    then checked the same way)
+#   7. cargo test --release -q      (the coalescing/bit-sliced fast paths,
 #                                    exercised with optimizations on)
-#   7. cargo bench --no-run         (benches must keep compiling)
-#   8. cargo bench -- --quick       (hot-path benches, 3 iterations each,
-#                                    recorded to BENCH_3/4/5/8/9.json at
+#   8. cargo bench --no-run         (benches must keep compiling)
+#   9. cargo bench -- --quick       (hot-path benches, 3 iterations each,
+#                                    recorded to BENCH_3/4/5/8/9/10.json at
 #                                    the repo root — the perf trajectory
 #                                    artifacts, each filtered to its PR's
 #                                    benches of record (BENCH_9: the
-#                                    in-engine search + topk path); FAILS
-#                                    LOUDLY if any BENCH_*.json holds zero
-#                                    results, as happened to BENCH_3.json.
+#                                    in-engine search + topk path;
+#                                    BENCH_10: the telemetry overhead
+#                                    trio); FAILS LOUDLY if any
+#                                    BENCH_*.json holds zero results, as
+#                                    happened to BENCH_3.json.
 #                                    BENCH_8.json then goes through
 #                                    tools/perf_gate.py: 4-thread kernel
 #                                    application at 256k rows must be
 #                                    >= 2x the 1-thread p50 (skipped
 #                                    loudly on < 4-CPU machines), and
 #                                    1-thread must stay within 10% of the
-#                                    sequential path; the gate also
-#                                    distinguishes a missing trajectory
-#                                    file from an unpopulated one)
-#   9. cargo clippy --all-targets   (warnings as errors; skipped with a note
+#                                    sequential path; BENCH_10.json must
+#                                    show a disarmed tracer <= 1.02x and
+#                                    an armed tracer <= 1.10x of the
+#                                    tracing-disabled execute at 256k
+#                                    rows; the gate also distinguishes a
+#                                    missing trajectory file from an
+#                                    unpopulated one)
+#  10. cargo clippy --all-targets   (warnings as errors; skipped with a note
 #                                    if clippy is absent)
-#  10. cargo doc --no-deps          (warnings as errors; the crate also denies
+#  11. cargo doc --no-deps          (warnings as errors; the crate also denies
 #                                    rustdoc::broken_intra_doc_links)
-#  11. cargo fmt --check            (skipped with a note if rustfmt is absent)
+#  12. cargo fmt --check            (skipped with a note if rustfmt is absent)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -88,6 +104,17 @@ if ! grep -q '"name":' ../BENCH_7.json; then
     exit 1
 fi
 
+echo "==> mvap trace smoke (canned coalesce + steal workload -> TRACE_smoke.json)"
+cargo run --release --quiet -- trace --out ../TRACE_smoke.json
+python3 ../tools/trace_check.py ../TRACE_smoke.json \
+    --require-complete --require-steal --require-coalesce
+
+echo "==> traced serve smoke (single config, every request sampled -> TRACE_serve.json)"
+cargo run --release --quiet -- serve --clients 4 --duration 0.4 \
+    --shards 2 --flush-us 500 --threads 1 --req-rows 8 --digits 6 \
+    --trace ../TRACE_serve.json --trace-sample 1
+python3 ../tools/trace_check.py ../TRACE_serve.json --require-complete --allow-drops
+
 if [[ "$fast" == "0" ]]; then
     echo "==> cargo test --release -q"
     cargo test --release -q
@@ -95,7 +122,7 @@ if [[ "$fast" == "0" ]]; then
     echo "==> cargo bench --no-run (compile gate)"
     cargo bench --no-run
 
-    echo "==> cargo bench -- --quick (recording BENCH_3/4/5/8.json)"
+    echo "==> cargo bench -- --quick (recording BENCH_3/4/5/8/9/10.json)"
     cargo bench --bench bench_main -- --quick --json ../BENCH_3.json \
         hot/fast_path hot/kernel_cache
     cargo bench --bench bench_main -- --quick --json ../BENCH_4.json hot/reduce
@@ -104,6 +131,7 @@ if [[ "$fast" == "0" ]]; then
         hot/parallel_apply hot/arena hot/fast_path hot/kernel_cache hot/reduce
     cargo bench --bench bench_main -- --quick --json ../BENCH_9.json \
         hot/search hot/topk
+    cargo bench --bench bench_main -- --quick --json ../BENCH_10.json hot/trace
     for trajectory in ../BENCH_*.json; do
         if ! grep -q '"name":' "$trajectory"; then
             echo "ERROR: quick-bench stage recorded zero results in ${trajectory#../}" >&2
@@ -111,9 +139,9 @@ if [[ "$fast" == "0" ]]; then
         fi
     done
 
-    echo "==> perf-regression gate (tools/perf_gate.py over BENCH_8.json)"
-    python3 ../tools/perf_gate.py ../BENCH_8.json ../BENCH_3.json ../BENCH_4.json \
-        ../BENCH_5.json ../BENCH_7.json ../BENCH_9.json
+    echo "==> perf-regression gate (tools/perf_gate.py over BENCH_8 + BENCH_10)"
+    python3 ../tools/perf_gate.py ../BENCH_8.json ../BENCH_10.json ../BENCH_3.json \
+        ../BENCH_4.json ../BENCH_5.json ../BENCH_7.json ../BENCH_9.json
 
     if cargo clippy --version >/dev/null 2>&1; then
         echo "==> cargo clippy --all-targets (warnings as errors)"

@@ -1,0 +1,238 @@
+"""Validation suite for tools/trace_check.py, the Chrome-trace checker.
+
+Run directly: ``python3 python/tests/test_trace_check.py``.
+
+The checker guards the CI trace smoke (`ci.sh` runs it over the `mvap
+trace` and traced-serve outputs), so this suite proves both directions:
+a well-formed trace passes every check, and each class of corruption —
+unbalanced stacks, dangling flows, misplaced flow endpoints, energy
+daylight, silent drops — is rejected with a loud error.
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "tools"))
+
+import trace_check  # noqa: E402
+from trace_check import TraceError, check  # noqa: E402
+
+
+def _ev(ph, ts, pid=100, tid=0, name=None, cat=None, eid=None, args=None, **extra):
+    ev = {"ph": ph, "ts": ts, "pid": pid, "tid": tid}
+    if name is not None:
+        ev["name"] = name
+    if cat is not None:
+        ev["cat"] = cat
+    if eid is not None:
+        ev["id"] = eid
+    if args is not None:
+        ev["args"] = args
+    ev.update(extra)
+    return ev
+
+
+def good_doc():
+    """One request's full chain (admit -> flush/exec -> job -> reply with
+    a flow arrow) plus one program span, with reconciling snapshots."""
+    events = [
+        _ev("M", 0, pid=0, tid=0, name="process_name", args={"name": "client edge"}),
+        # client edge: admit span opening flow 0x1
+        _ev("B", 10.0, pid=0, tid=1, name="admit", cat="mvap", args={"class": "batch"}),
+        _ev("s", 12.0, pid=0, tid=1, name="req", cat="flow", eid="0x1"),
+        _ev("E", 14.0, pid=0, tid=1),
+        # shard 0: flush > exec, the async job span, reply finishing the flow
+        _ev("B", 20.0, name="flush", cat="mvap",
+            args={"jobs": 2, "rows": 128, "stolen": 0, "reason": "size"}),
+        _ev("B", 21.0, name="exec", cat="mvap"),
+        _ev("b", 21.5, name="job", cat="req", eid="0x1",
+            args={"energyJ": 2.5e-9, "rows": 64}),
+        _ev("E", 27.0),
+        _ev("e", 27.5, name="job", cat="req", eid="0x1"),
+        _ev("B", 28.0, name="reply", cat="mvap",
+            args={"queueNs": 90, "latencyNs": 250, "stolen": True}),
+        _ev("f", 28.2, name="req", cat="flow", eid="0x1", bp="e"),
+        _ev("E", 28.5),
+        _ev("E", 29.0),
+        # a program span (sync, carries its own energy; steps would not)
+        _ev("B", 30.0, name="program", cat="mvap",
+            args={"req": "0x8000000000000002", "energyJ": 1.0e-9, "steps": 2}),
+        _ev("B", 30.2, name="step", cat="mvap", args={"energyJ": 0.5e-9}),
+        _ev("E", 30.6),
+        _ev("E", 31.0),
+    ]
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"sample": 1, "droppedSpans": 0},
+        "metricsSnapshots": [
+            {"scope": "aggregate", "label": "t", "modeledEnergyJ": 3.5e-9},
+            # shard-scope snapshots must NOT be double-counted
+            {"scope": "shard", "label": "s0", "modeledEnergyJ": 999.0},
+        ],
+    }
+
+
+def run(doc, **kwargs):
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as fh:
+        json.dump(doc, fh)
+        path = fh.name
+    try:
+        check(path, **kwargs)
+    finally:
+        os.unlink(path)
+
+
+def expect_fail(doc, fragment, **kwargs):
+    try:
+        run(doc, **kwargs)
+    except TraceError as e:
+        assert fragment in str(e), f"expected '{fragment}' in: {e}"
+        return
+    raise AssertionError(f"expected failure mentioning '{fragment}', but passed")
+
+
+def test_good_trace_passes():
+    run(good_doc())
+    # ... including under every strictness flag it was built to satisfy
+    run(good_doc(), require_complete=True, require_steal=True,
+        require_coalesce=True)
+    print("good trace ok")
+
+
+def test_envelope_is_required():
+    doc = good_doc()
+    doc["traceEvents"] = []
+    expect_fail(doc, "missing or empty")
+    doc = good_doc()
+    del doc["otherData"]["sample"]
+    expect_fail(doc, "otherData")
+    print("envelope checks ok")
+
+
+def test_sync_stack_discipline():
+    # an extra E with nothing open
+    doc = good_doc()
+    doc["traceEvents"].append(_ev("E", 40.0))
+    expect_fail(doc, "no open span")
+    # an unclosed B
+    doc = good_doc()
+    doc["traceEvents"].append(_ev("B", 41.0, name="exec", cat="mvap"))
+    expect_fail(doc, "unclosed")
+    # time running backwards within a lane
+    doc = good_doc()
+    doc["traceEvents"].extend([
+        _ev("B", 50.0, name="exec", cat="mvap"),
+        _ev("E", 49.0),
+    ])
+    expect_fail(doc, "regressed")
+    print("sync stack checks ok")
+
+
+def test_async_balance():
+    doc = good_doc()
+    doc["traceEvents"].append(
+        _ev("b", 42.0, name="job", cat="req", eid="0x9", args={"energyJ": 0.0}))
+    expect_fail(doc, "never closed")
+    doc = good_doc()
+    doc["traceEvents"].append(_ev("e", 43.0, name="job", cat="req", eid="0x9"))
+    expect_fail(doc, "no open b")
+    print("async balance checks ok")
+
+
+def test_flow_chains():
+    # a started flow that never finishes is always fatal
+    doc = good_doc()
+    doc["traceEvents"][1:1] = [
+        _ev("B", 5.0, pid=0, tid=1, name="admit", cat="mvap"),
+        _ev("s", 5.5, pid=0, tid=1, name="req", cat="flow", eid="0x7"),
+        _ev("E", 6.0, pid=0, tid=1),
+    ]
+    expect_fail(doc, "never finished")
+    # a finish without a start passes by default (edge-less `mvap run`
+    # traces), but --require-complete rejects it
+    doc = good_doc()
+    doc["traceEvents"].extend([
+        _ev("B", 44.0, name="reply", cat="mvap", args={"stolen": False}),
+        _ev("f", 44.2, name="req", cat="flow", eid="0x7", bp="e"),
+        _ev("E", 44.5),
+    ])
+    run(doc)
+    expect_fail(doc, "never started", require_complete=True)
+    # flow endpoints must sit inside the right span kinds
+    doc = good_doc()
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "s":
+            ev["ts"] = 15.0  # after the admit span closed
+    expect_fail(doc, "not inside an admit")
+    doc = good_doc()
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "f":
+            ev["ts"] = 27.8  # between exec and reply
+    expect_fail(doc, "not inside a reply")
+    print("flow chain checks ok")
+
+
+def test_energy_reconciliation():
+    # daylight between span energy and the aggregate snapshot
+    doc = good_doc()
+    doc["metricsSnapshots"][0]["modeledEnergyJ"] = 4.0e-9
+    expect_fail(doc, "reconcile")
+    # sampling below 1/1 skips reconciliation (energy without spans)
+    doc = good_doc()
+    doc["metricsSnapshots"][0]["modeledEnergyJ"] = 4.0e-9
+    doc["otherData"]["sample"] = 4
+    run(doc)
+    # no aggregate snapshots: skipped
+    doc = good_doc()
+    doc["metricsSnapshots"] = []
+    run(doc)
+    # step spans carry energyJ but must not be double-counted: the good
+    # doc already contains one and reconciles without it
+    assert trace_check.span_energy_j(good_doc()["traceEvents"]) == 3.5e-9
+    print("energy reconciliation checks ok")
+
+
+def test_dropped_spans():
+    doc = good_doc()
+    doc["otherData"]["droppedSpans"] = 3
+    expect_fail(doc, "dropped")
+    # --allow-drops tolerates them and skips the deep checks, so even a
+    # dangling flow start goes unpunished (the span it finished in may
+    # have been the one dropped)
+    doc["traceEvents"][1:1] = [
+        _ev("B", 5.0, pid=0, tid=1, name="admit", cat="mvap"),
+        _ev("s", 5.5, pid=0, tid=1, name="req", cat="flow", eid="0x7"),
+        _ev("E", 6.0, pid=0, tid=1),
+    ]
+    run(doc, allow_drops=True)
+    print("dropped-span checks ok")
+
+
+def test_requirements():
+    doc = good_doc()
+    for ev in doc["traceEvents"]:
+        if ev.get("name") == "reply":
+            ev["args"]["stolen"] = False
+    run(doc)
+    expect_fail(doc, "require-steal", require_steal=True)
+    doc = good_doc()
+    for ev in doc["traceEvents"]:
+        if ev.get("name") == "flush":
+            ev["args"]["jobs"] = 1
+    expect_fail(doc, "require-coalesce", require_coalesce=True)
+    print("requirement flag checks ok")
+
+
+if __name__ == "__main__":
+    test_good_trace_passes()
+    test_envelope_is_required()
+    test_sync_stack_discipline()
+    test_async_balance()
+    test_flow_chains()
+    test_energy_reconciliation()
+    test_dropped_spans()
+    test_requirements()
+    print("ALL TRACE CHECK TESTS PASSED")

@@ -282,6 +282,39 @@ fn main() {
             }
         }
     }
+    if run("hot/trace") {
+        // Telemetry overhead (the PR-10 zero-cost contract): the same
+        // 256k-row bit-sliced execute with tracing disabled, attached but
+        // disarmed (the not-sampled request path — one branch per span
+        // site), and attached + armed (every span recorded into the
+        // per-thread ring). `ci.sh` gates disarmed <= 1.02x off and
+        // armed <= 1.10x off via tools/perf_gate.py.
+        use mvap::telemetry::{SpanRecorder, Tracer};
+        let radix = Radix::TERNARY;
+        let (rows, p) = (256 * 1024usize, 8usize);
+        let mut rng = Rng::new(21);
+        let a = random_words(&mut rng, rows, p, radix);
+        let b = random_words(&mut rng, rows, p, radix);
+        let job = Job::new(1, OpKind::Add, radix, true, a, b);
+        let variants: [(&str, bool, bool); 3] =
+            [("off", false, false), ("unsampled", true, false), ("sampled", true, true)];
+        for (tag, attach, armed) in variants {
+            let recorder = SpanRecorder::new(1);
+            let mut eng =
+                VectorEngine::new(Box::new(NativeBackend::new(StorageKind::BitSliced)));
+            if attach {
+                eng.set_tracer(Tracer::attach(&recorder, 1, 0));
+                eng.tracer_mut().set_armed(armed);
+            }
+            results.push(bench(
+                &format!("hot/trace_{tag}_{rows}rows"),
+                Some((rows * p) as u64),
+                || {
+                    black_box(eng.execute(&job).unwrap());
+                },
+            ));
+        }
+    }
     if run("hot/arena") {
         // Per-call scratch hoisting: both variants clone the storage and
         // build a fresh Ap each iteration (identical fixed cost), but

@@ -14,6 +14,7 @@ use crate::func::{copy_digit, full_add, full_sub, mac_digit};
 use crate::lutgen::{generate_blocked, generate_non_blocked, Lut};
 use crate::mvl::{Radix, Word};
 use crate::program::{BoundProgram, ProgramLuts, ProgramReport, StepKind, StepReport};
+use crate::telemetry::{Flow, Payload, SpanKind, StatsDelta, Tracer};
 use std::collections::HashMap;
 
 /// Default tile height when the backend has no static shape requirement.
@@ -29,6 +30,10 @@ pub struct VectorEngine {
     energy_ternary: EnergyModel,
     energy_binary: EnergyModel,
     metrics: Metrics,
+    /// Structured-tracing handle ([`Tracer::Off`] by default — a strict
+    /// no-op). Instrumentation sits at dispatch/tile/step granularity,
+    /// never inside the hot word loops.
+    tracer: Tracer,
 }
 
 impl VectorEngine {
@@ -41,12 +46,28 @@ impl VectorEngine {
             energy_ternary: EnergyModel::ternary_default(),
             energy_binary: EnergyModel::binary_default(),
             metrics: Metrics::default(),
+            tracer: Tracer::off(),
         }
     }
 
     /// Backend name.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Install a tracing handle (workers attach one per thread).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The tracer, for arming/disarming around dispatches.
+    pub fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
+    /// Detach the tracer (flush it before dropping the engine).
+    pub fn take_tracer(&mut self) -> Tracer {
+        std::mem::take(&mut self.tracer)
     }
 
     /// Accumulated metrics.
@@ -140,7 +161,9 @@ impl VectorEngine {
         if needs.copy {
             luts.copy = Some(self.copy_lut(radix, blocked)?.clone());
         }
+        let t_run = self.tracer.begin();
         let run = self.backend.run_program(bound, &luts)?;
+        let t_run_end = self.tracer.begin();
         let elapsed = started.elapsed();
 
         let model = if radix.n() == 2 { &self.energy_binary } else { &self.energy_ternary };
@@ -189,14 +212,63 @@ impl VectorEngine {
                 stats,
                 delay_cycles: delay,
                 hits: run.step_hits[i].clone(),
+                span: 0,
             });
+        }
+        // Step spans: the backend executes the whole plan in one
+        // invocation, so per-step wall time is not observable — each step
+        // gets a slice of the run interval pro-rata by its modeled delay
+        // (the same attribution rule the paper's co-simulator uses).
+        if self.tracer.armed() && total_delay > 0 {
+            let span_total = t_run_end.saturating_sub(t_run);
+            let mut acc = 0u64;
+            for (i, step) in steps.iter_mut().enumerate() {
+                let s0 = t_run + (acc as u128 * span_total as u128 / total_delay as u128) as u64;
+                acc += step.delay_cycles;
+                let s1 = t_run + (acc as u128 * span_total as u128 / total_delay as u128) as u64;
+                step.span = self.tracer.span_at(
+                    SpanKind::Step,
+                    s0,
+                    s1,
+                    0,
+                    Flow::None,
+                    Payload::Step {
+                        index: i as u32,
+                        wave: step.wave as u32,
+                        rows: step.rows as u64,
+                        energy_j: step.energy.total(),
+                        delay_cycles: step.delay_cycles,
+                        stats: StatsDelta::of(&step.stats),
+                    },
+                );
+            }
         }
         let energy = model.price(&total_stats);
         self.metrics.record(bound.rows, digits, &energy, elapsed);
         // the program array is sized to the workload: one "tile", 100% fill
         self.metrics.record_tiles(1, bound.rows, bound.rows);
-        self.metrics.record_kernel_events(self.backend.take_kernel_events());
-        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        let kernel_events = self.backend.take_kernel_events();
+        self.metrics.record_kernel_events(kernel_events);
+        let par_events = self.backend.take_parallel_events();
+        let par_blocks = par_events.blocks;
+        self.metrics.record_parallel_events(par_events);
+        let t_end = self.tracer.begin();
+        self.tracer.span_at(
+            SpanKind::Exec,
+            t_run,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Exec {
+                op: "program",
+                jobs: 1,
+                rows: bound.rows as u64,
+                radix: radix.n(),
+                kernel_hits: kernel_events.0,
+                kernel_misses: kernel_events.1,
+                par_blocks,
+            },
+        );
         self.metrics.programs += 1;
         self.metrics.program_steps += steps.len() as u64;
         self.metrics.fused_steps += plan.fused_steps;
@@ -230,6 +302,7 @@ impl VectorEngine {
             return Ok(results.pop().expect("one result per job"));
         }
         let started = std::time::Instant::now();
+        let t_exec = self.tracer.begin();
         let digits = job.digits();
         let tile_rows = self
             .backend
@@ -242,9 +315,21 @@ impl VectorEngine {
         let mut values = Vec::with_capacity(job.rows());
         let mut stats = ApStats::default();
         for tile in &tiles {
+            let t_tile = self.tracer.begin();
             let (data, mut tile_stats) =
                 self.backend
                     .run_tile(job.op, job.radix, job.blocked, &lut, tile)?;
+            self.tracer.span(
+                SpanKind::Tile,
+                t_tile,
+                0,
+                Flow::None,
+                Payload::Tile {
+                    rows: tile.tile_rows as u32,
+                    live: (tile.tile_rows - tile.pad_rows()) as u32,
+                    segments: 1,
+                },
+            );
             // padding rows contribute `digits` compare events per pass in
             // a known class and never any writes — subtract them so stats
             // reflect live rows only.
@@ -272,9 +357,46 @@ impl VectorEngine {
         let elapsed = started.elapsed();
         self.metrics.record(job.rows(), digits, &energy, elapsed);
         self.metrics.record_tiles(tiles.len(), tile_rows, job.rows());
-        self.metrics.record_kernel_events(self.backend.take_kernel_events());
-        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        let kernel_events = self.backend.take_kernel_events();
+        self.metrics.record_kernel_events(kernel_events);
+        let par_events = self.backend.take_parallel_events();
+        let par_blocks = par_events.blocks;
+        self.metrics.record_parallel_events(par_events);
         self.metrics.solo_jobs += 1;
+        let t_end = self.tracer.begin();
+        self.tracer.span_at(
+            SpanKind::Exec,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Exec {
+                op: job.op.tag(),
+                jobs: 1,
+                rows: job.rows() as u64,
+                radix: job.radix.n(),
+                kernel_hits: kernel_events.0,
+                kernel_misses: kernel_events.1,
+                par_blocks,
+            },
+        );
+        self.tracer.span_at(
+            SpanKind::Job,
+            t_exec,
+            t_end,
+            job.id,
+            Flow::None,
+            Payload::Job {
+                op: job.op.tag(),
+                rows: job.rows() as u64,
+                radix: job.radix.n(),
+                digits: digits as u32,
+                energy_j: energy.total(),
+                delay_cycles: delay,
+                tiles: tiles.len() as u32,
+                stats: StatsDelta::of(&stats),
+            },
+        );
         Ok(JobResult {
             id: job.id,
             values,
@@ -335,6 +457,7 @@ impl VectorEngine {
             return jobs.iter().map(|j| self.execute(j)).collect();
         }
         let started = std::time::Instant::now();
+        let t_exec = self.tracer.begin();
         let digits = sig.digits;
         let tile_rows = self
             .backend
@@ -353,9 +476,21 @@ impl VectorEngine {
         let n_tiles = tiles.len();
         for (tile, segments) in &tiles {
             let bounds = TileAssembler::segment_bounds(segments, tile.tile_rows);
+            let t_tile = self.tracer.begin();
             let (data, seg_stats) = self.backend.run_tile_segmented(
                 sig.op, sig.radix, sig.blocked, &lut, tile, &bounds,
             )?;
+            self.tracer.span(
+                SpanKind::Tile,
+                t_tile,
+                0,
+                Flow::None,
+                Payload::Tile {
+                    rows: tile.tile_rows as u32,
+                    live: (tile.tile_rows - tile.pad_rows()) as u32,
+                    segments: segments.len() as u32,
+                },
+            );
             let values = tile.extract(&data, sig.radix);
             for (k, seg) in segments.iter().enumerate() {
                 per_values[seg.slot].extend_from_slice(&values[seg.start..seg.end]);
@@ -367,9 +502,29 @@ impl VectorEngine {
         let elapsed = started.elapsed();
         let total_rows: usize = jobs.iter().map(|j| j.rows()).sum();
         self.metrics.record_tiles(n_tiles, tile_rows, total_rows);
-        self.metrics.record_kernel_events(self.backend.take_kernel_events());
-        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        let kernel_events = self.backend.take_kernel_events();
+        self.metrics.record_kernel_events(kernel_events);
+        let par_events = self.backend.take_parallel_events();
+        let par_blocks = par_events.blocks;
+        self.metrics.record_parallel_events(par_events);
         self.metrics.batches += 1;
+        let t_end = self.tracer.begin();
+        self.tracer.span_at(
+            SpanKind::Exec,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Exec {
+                op: sig.op.tag(),
+                jobs: jobs.len() as u32,
+                rows: total_rows as u64,
+                radix: sig.radix.n(),
+                kernel_hits: kernel_events.0,
+                kernel_misses: kernel_events.1,
+                par_blocks,
+            },
+        );
         let mut out = Vec::with_capacity(jobs.len());
         for (i, job) in jobs.iter().enumerate() {
             let mut stats = std::mem::take(&mut per_stats[i]);
@@ -385,6 +540,23 @@ impl VectorEngine {
             let share = elapsed.mul_f64(job.rows() as f64 / total_rows as f64);
             self.metrics.record(job.rows(), digits, &energy, share);
             self.metrics.coalesced_jobs += 1;
+            self.tracer.span_at(
+                SpanKind::Job,
+                t_exec,
+                t_end,
+                job.id,
+                Flow::None,
+                Payload::Job {
+                    op: sig.op.tag(),
+                    rows: job.rows() as u64,
+                    radix: sig.radix.n(),
+                    digits: digits as u32,
+                    energy_j: energy.total(),
+                    delay_cycles: delay,
+                    tiles: per_tiles[i] as u32,
+                    stats: StatsDelta::of(&stats),
+                },
+            );
             out.push(JobResult {
                 id: job.id,
                 values: std::mem::take(&mut per_values[i]),
@@ -415,6 +587,7 @@ impl VectorEngine {
     /// (the energy model covers compare/write cycles only).
     fn execute_reduce(&mut self, jobs: &[Job]) -> anyhow::Result<Vec<JobResult>> {
         let started = std::time::Instant::now();
+        let t_exec = self.tracer.begin();
         let sig = JobSignature::of(&jobs[0]);
         debug_assert!(jobs.iter().all(|j| JobSignature::of(j) == sig));
         let digits = sig.digits;
@@ -442,8 +615,40 @@ impl VectorEngine {
         let total_rows = values.len();
         // the reduce array is sized to the workload: one "tile", 100% fill
         self.metrics.record_tiles(1, total_rows, total_rows);
-        self.metrics.record_kernel_events(self.backend.take_kernel_events());
-        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        let kernel_events = self.backend.take_kernel_events();
+        self.metrics.record_kernel_events(kernel_events);
+        let par_events = self.backend.take_parallel_events();
+        let par_blocks = par_events.blocks;
+        self.metrics.record_parallel_events(par_events);
+        let t_end = self.tracer.begin();
+        self.tracer.span_at(
+            SpanKind::Exec,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Exec {
+                op: OpKind::Reduce.tag(),
+                jobs: jobs.len() as u32,
+                rows: total_rows as u64,
+                radix: sig.radix.n(),
+                kernel_hits: kernel_events.0,
+                kernel_misses: kernel_events.1,
+                par_blocks,
+            },
+        );
+        self.tracer.span_at(
+            SpanKind::Tile,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Tile {
+                rows: total_rows as u32,
+                live: total_rows as u32,
+                segments: seg_bounds.len() as u32,
+            },
+        );
         self.metrics.reduce_rounds += summary.rounds;
         self.metrics.reduce_rows_moved += summary.rows_moved;
         if jobs.len() == 1 {
@@ -464,6 +669,23 @@ impl VectorEngine {
             let energy = model.price(&stats);
             let share = elapsed.mul_f64(job.rows() as f64 / total_rows as f64);
             self.metrics.record(job.rows(), digits, &energy, share);
+            self.tracer.span_at(
+                SpanKind::Job,
+                t_exec,
+                t_end,
+                job.id,
+                Flow::None,
+                Payload::Job {
+                    op: OpKind::Reduce.tag(),
+                    rows: job.rows() as u64,
+                    radix: sig.radix.n(),
+                    digits: digits as u32,
+                    energy_j: energy.total(),
+                    delay_cycles: delay,
+                    tiles: 1,
+                    stats: StatsDelta::of(&stats),
+                },
+            );
             out.push(JobResult {
                 id: job.id,
                 values: job_values,
@@ -494,6 +716,7 @@ impl VectorEngine {
     /// exactly: segments never interact in a read-only CAM schedule.
     fn execute_search(&mut self, jobs: &[Job]) -> anyhow::Result<Vec<JobResult>> {
         let started = std::time::Instant::now();
+        let t_exec = self.tracer.begin();
         let sig = JobSignature::of(&jobs[0]);
         debug_assert!(jobs.iter().all(|j| JobSignature::of(j) == sig));
         let digits = sig.digits;
@@ -513,8 +736,40 @@ impl VectorEngine {
         let total_rows = values.len();
         // the search array is sized to the workload: one "tile", 100% fill
         self.metrics.record_tiles(1, total_rows, total_rows);
-        self.metrics.record_kernel_events(self.backend.take_kernel_events());
-        self.metrics.record_parallel_events(self.backend.take_parallel_events());
+        let kernel_events = self.backend.take_kernel_events();
+        self.metrics.record_kernel_events(kernel_events);
+        let par_events = self.backend.take_parallel_events();
+        let par_blocks = par_events.blocks;
+        self.metrics.record_parallel_events(par_events);
+        let t_end = self.tracer.begin();
+        self.tracer.span_at(
+            SpanKind::Exec,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Exec {
+                op: sig.op.tag(),
+                jobs: jobs.len() as u32,
+                rows: total_rows as u64,
+                radix: sig.radix.n(),
+                kernel_hits: kernel_events.0,
+                kernel_misses: kernel_events.1,
+                par_blocks,
+            },
+        );
+        self.tracer.span_at(
+            SpanKind::Tile,
+            t_exec,
+            t_end,
+            0,
+            Flow::None,
+            Payload::Tile {
+                rows: total_rows as u32,
+                live: total_rows as u32,
+                segments: queries.len() as u32,
+            },
+        );
         self.metrics.search_jobs += jobs.len() as u64;
         self.metrics.search_passes += summary.passes;
         if jobs.len() == 1 {
@@ -539,6 +794,23 @@ impl VectorEngine {
             let energy = model.price(&stats);
             let share = elapsed.mul_f64(job.rows() as f64 / total_rows as f64);
             self.metrics.record(job.rows(), digits, &energy, share);
+            self.tracer.span_at(
+                SpanKind::Job,
+                t_exec,
+                t_end,
+                job.id,
+                Flow::None,
+                Payload::Job {
+                    op: job.op.tag(),
+                    rows: job.rows() as u64,
+                    radix: sig.radix.n(),
+                    digits: digits as u32,
+                    energy_j: energy.total(),
+                    delay_cycles: delay,
+                    tiles: 1,
+                    stats: StatsDelta::of(&stats),
+                },
+            );
             out.push(JobResult {
                 id: job.id,
                 values: Vec::new(),

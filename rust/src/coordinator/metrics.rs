@@ -151,12 +151,22 @@ impl Metrics {
 
     /// Fraction of dispatched tile rows that carried live data. 1.0 means
     /// every array ran full; low values mean the row-parallel hardware
-    /// spent its compare cycles on noAction padding.
+    /// spent its compare cycles on noAction padding. Reports 0.0 before
+    /// any dispatch; use [`Self::fill_rate_opt`] to distinguish "empty"
+    /// from "all padding".
     pub fn fill_rate(&self) -> f64 {
+        self.fill_rate_opt().unwrap_or(0.0)
+    }
+
+    /// [`Self::fill_rate`] with an explicit empty case: `None` when no
+    /// tile was ever dispatched (`tile_capacity_rows == 0`), so JSON
+    /// consumers see `null` rather than a fabricated ratio — and never
+    /// NaN.
+    pub fn fill_rate_opt(&self) -> Option<f64> {
         if self.tile_capacity_rows == 0 {
-            0.0
+            None
         } else {
-            self.tile_live_rows as f64 / self.tile_capacity_rows as f64
+            Some(self.tile_live_rows as f64 / self.tile_capacity_rows as f64)
         }
     }
 
@@ -164,12 +174,21 @@ impl Metrics {
     /// block. 1.0 means every scope filled its pool; low values mean the
     /// configured thread count exceeds what the tile heights can use
     /// (blocks are floored at [`crate::cam::parallel::DEFAULT_MIN_BLOCK_WORDS`]
-    /// words). 0.0 when no parallel scope ever ran.
+    /// words). 0.0 when no parallel scope ever ran; use
+    /// [`Self::par_utilization_opt`] to distinguish that case.
     pub fn par_utilization(&self) -> f64 {
+        self.par_utilization_opt().unwrap_or(0.0)
+    }
+
+    /// [`Self::par_utilization`] with an explicit empty case: `None`
+    /// when no capacity was ever offered (`par_capacity == 0`), so JSON
+    /// consumers see `null` rather than a fabricated ratio — and never
+    /// NaN.
+    pub fn par_utilization_opt(&self) -> Option<f64> {
         if self.par_capacity == 0 {
-            0.0
+            None
         } else {
-            self.par_blocks as f64 / self.par_capacity as f64
+            Some(self.par_blocks as f64 / self.par_capacity as f64)
         }
     }
 
@@ -284,6 +303,134 @@ mod tests {
         assert_eq!((m.search_jobs, m.search_passes), (4, 60));
         assert!(m.summary().contains("search=4j/60p"), "summary: {}", m.summary());
         assert!(m.summary().contains("programs=2 (7 steps, 2 fused, 4 reuses)"));
+    }
+
+    /// Zero-denominator edges: the `_opt` ratios are `None`, the plain
+    /// ratios 0.0, and nothing NaN leaks into `summary()`.
+    #[test]
+    fn ratio_metrics_guard_zero_denominators() {
+        let m = Metrics::default();
+        assert_eq!(m.fill_rate_opt(), None, "no tiles dispatched");
+        assert_eq!(m.par_utilization_opt(), None, "no capacity offered");
+        assert_eq!(m.fill_rate(), 0.0);
+        assert_eq!(m.par_utilization(), 0.0);
+        let s = m.summary();
+        assert!(!s.contains("NaN"), "summary: {s}");
+
+        // tiles dispatched but zero live rows: Some(0.0), not None
+        let mut m = Metrics::default();
+        m.record_tiles(1, 256, 0);
+        assert_eq!(m.fill_rate_opt(), Some(0.0));
+        // capacity offered: Some ratio
+        m.record_parallel_events(ParallelEvents { scopes: 1, blocks: 3, capacity: 4 });
+        assert_eq!(m.par_utilization_opt(), Some(0.75));
+        assert!(!m.summary().contains("NaN"));
+    }
+
+    fn assert_metrics_equivalent(a: &Metrics, b: &Metrics, ctx: &str) {
+        let ints = |m: &Metrics| {
+            [
+                m.jobs, m.rows, m.digit_ops, m.tiles, m.tile_capacity_rows, m.tile_live_rows,
+                m.solo_jobs, m.coalesced_jobs, m.batches, m.stolen_jobs, m.kernel_hits,
+                m.kernel_misses, m.reduce_rounds, m.reduce_rows_moved, m.search_jobs,
+                m.search_passes, m.programs, m.program_steps, m.fused_steps, m.resident_reuses,
+                m.par_scopes, m.par_blocks, m.par_capacity,
+            ]
+        };
+        assert_eq!(ints(a), ints(b), "{ctx}: counters diverge");
+        assert_eq!(a.busy, b.busy, "{ctx}: busy");
+        // f64 addition is commutative but not associative: allow rounding
+        let (ea, eb) = (a.modeled_energy_j, b.modeled_energy_j);
+        assert!(
+            (ea - eb).abs() <= 1e-12 * ea.abs().max(eb.abs()).max(1e-300),
+            "{ctx}: energy {ea} vs {eb}"
+        );
+        assert_eq!(a.latency.count(), b.latency.count(), "{ctx}: latency count");
+        assert_eq!(a.latency.min(), b.latency.min(), "{ctx}: latency min");
+        assert_eq!(a.latency.max(), b.latency.max(), "{ctx}: latency max");
+        assert_eq!(a.latency.mean(), b.latency.mean(), "{ctx}: latency mean");
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.latency.quantile_ns(q), b.latency.quantile_ns(q), "{ctx}: q={q}");
+        }
+    }
+
+    fn arb_metrics(rng: &mut crate::util::Rng) -> (Metrics, Vec<u64>) {
+        let mut m = Metrics::default();
+        for _ in 0..rng.index(4) {
+            let e = EnergyBreakdown {
+                write: (1 + rng.below(1000)) as f64 * 1e-12,
+                compare: (1 + rng.below(1000)) as f64 * 1e-15,
+                write_ops: rng.below(100),
+            };
+            m.record(1 + rng.index(512), 1 + rng.index(16), &e, Duration::from_nanos(rng.below(1 << 20)));
+        }
+        for _ in 0..rng.index(3) {
+            m.record_tiles(1 + rng.index(4), 256, rng.index(1024));
+        }
+        m.record_kernel_events((rng.below(100), rng.below(100)));
+        m.record_parallel_events(ParallelEvents {
+            scopes: rng.below(10),
+            blocks: rng.below(40),
+            capacity: rng.below(80),
+        });
+        m.solo_jobs = rng.below(100);
+        m.coalesced_jobs = rng.below(100);
+        m.batches = rng.below(100);
+        m.stolen_jobs = rng.below(100);
+        m.reduce_rounds = rng.below(100);
+        m.reduce_rows_moved = rng.below(100);
+        m.search_jobs = rng.below(100);
+        m.search_passes = rng.below(100);
+        m.programs = rng.below(100);
+        m.program_steps = rng.below(100);
+        m.fused_steps = rng.below(100);
+        m.resident_reuses = rng.below(100);
+        let samples: Vec<u64> = (0..rng.index(40)).map(|_| 1 + rng.next_u64() % 10_000_000).collect();
+        for &s in &samples {
+            m.latency.record_ns(s);
+        }
+        (m, samples)
+    }
+
+    /// `merge` is associative and commutative on every counter, and the
+    /// merged latency histogram equals recording every sample into one
+    /// histogram. Replay a failing case with `MVAP_PROP_SEED=0x...`.
+    #[test]
+    fn prop_merge_is_associative_commutative_and_lossless() {
+        crate::util::prop::forall(crate::util::prop::Config::cases(60), |rng| {
+            let (a, sa) = arb_metrics(rng);
+            let (b, sb) = arb_metrics(rng);
+            let (c, sc) = arb_metrics(rng);
+
+            // commutativity: a+b == b+a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_metrics_equivalent(&ab, &ba, "commutativity");
+
+            // associativity: (a+b)+c == a+(b+c)
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_metrics_equivalent(&ab_c, &a_bc, "associativity");
+
+            // merged latency histogram == record-all
+            let mut all = crate::serving::LatencyHistogram::default();
+            for &s in sa.iter().chain(&sb).chain(&sc) {
+                all.record_ns(s);
+            }
+            assert_eq!(ab_c.latency.count(), all.count());
+            assert_eq!(ab_c.latency.min(), all.min());
+            assert_eq!(ab_c.latency.max(), all.max());
+            assert_eq!(ab_c.latency.mean(), all.mean());
+            for q in [0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                assert_eq!(ab_c.latency.quantile_ns(q), all.quantile_ns(q), "q={q}");
+            }
+        });
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::engine::VectorEngine;
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
 use crate::program::{BoundProgram, ProgramReport};
+use crate::telemetry::{Flow, Payload as SpanPayload, SpanKind, SpanRecorder, StatsDelta, Tracer};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -74,6 +75,21 @@ impl EngineService {
     where
         F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
+        Self::start_traced(workers, queue_depth, None, make_backend)
+    }
+
+    /// [`Self::start`] with an optional [`SpanRecorder`]: pool workers
+    /// record into per-thread sinks (pid 1, tid = worker index on the
+    /// exported timeline), arming per message by the head-sampling rule.
+    pub fn start_traced<F>(
+        workers: usize,
+        queue_depth: usize,
+        recorder: Option<Arc<SpanRecorder>>,
+        make_backend: F,
+    ) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
         assert!(workers >= 1);
         let make_backend = Arc::new(make_backend);
         let (tx, rx) = sync_channel::<Message>(queue_depth);
@@ -81,11 +97,12 @@ impl EngineService {
         let aggregated = Arc::new(Mutex::new(Metrics::default()));
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<()>>(workers);
         let mut handles = Vec::new();
-        for _ in 0..workers {
+        for w in 0..workers {
             let make_backend = Arc::clone(&make_backend);
             let rx = Arc::clone(&rx);
             let agg = Arc::clone(&aggregated);
             let ready = ready_tx.clone();
+            let recorder = recorder.clone();
             handles.push(std::thread::spawn(move || {
                 let backend = match make_backend() {
                     Ok(b) => {
@@ -98,6 +115,9 @@ impl EngineService {
                     }
                 };
                 let mut engine = VectorEngine::new(backend);
+                if let Some(rec) = &recorder {
+                    engine.set_tracer(Tracer::attach(rec, 1, w as u32));
+                }
                 loop {
                     let msg = {
                         let guard = rx.lock().expect("rx poisoned");
@@ -105,19 +125,73 @@ impl EngineService {
                     };
                     match msg {
                         Ok(Message::Run(job, reply)) => {
+                            let sampled = engine.tracer_mut().sampled(job.id);
+                            engine.tracer_mut().set_armed(sampled);
                             let result = engine.execute(&job);
+                            engine.tracer_mut().set_armed(false);
                             // receiver may have given up; ignore send errors
                             let _ = reply.send(result);
                         }
                         Ok(Message::RunBatch(jobs, replies)) => {
+                            // whole-batch arming: one sampled member keeps
+                            // the shared exec/tile spans
+                            let armed = {
+                                let tracer = engine.tracer_mut();
+                                jobs.iter().any(|j| tracer.sampled(j.id))
+                            };
+                            engine.tracer_mut().set_armed(armed);
+                            engine.tracer_mut().begin_batch();
                             dispatch_batch(&mut engine, &jobs, &replies);
+                            engine.tracer_mut().set_armed(false);
+                            engine.tracer_mut().clear_batch();
                         }
                         Ok(Message::RunProgram(bound, reply)) => {
-                            let _ = reply.send(engine.execute_program(&bound));
+                            let req = match engine.tracer_mut().recorder() {
+                                Some(rec) => rec.next_program_req(),
+                                None => 0,
+                            };
+                            let sampled = engine.tracer_mut().sampled(req);
+                            {
+                                let tracer = engine.tracer_mut();
+                                tracer.set_armed(sampled);
+                                tracer.begin_batch();
+                            }
+                            let t_prog = engine.tracer_mut().begin();
+                            let result = engine.execute_program(&bound);
+                            let payload = match &result {
+                                Ok(report) => SpanPayload::Program {
+                                    steps: report.steps.len() as u32,
+                                    rows: report
+                                        .steps
+                                        .iter()
+                                        .map(|s| s.rows as u64)
+                                        .max()
+                                        .unwrap_or(0),
+                                    energy_j: report.energy.total(),
+                                    delay_cycles: report.delay_cycles,
+                                    stats: StatsDelta::of(&report.stats),
+                                },
+                                Err(_) => SpanPayload::None,
+                            };
+                            engine.tracer_mut().span(
+                                SpanKind::Program,
+                                t_prog,
+                                req,
+                                Flow::None,
+                                payload,
+                            );
+                            {
+                                let tracer = engine.tracer_mut();
+                                tracer.set_armed(false);
+                                tracer.clear_batch();
+                            }
+                            let _ = reply.send(result);
                         }
                         Ok(Message::Shutdown) | Err(_) => break,
                     }
                 }
+                let mut tracer = engine.take_tracer();
+                tracer.flush();
                 let metrics = engine.metrics().clone();
                 agg.lock().expect("agg poisoned").merge(&metrics);
                 metrics
@@ -161,10 +235,23 @@ impl EngineService {
         artifacts_dir: std::path::PathBuf,
         par: crate::cam::Parallelism,
     ) -> anyhow::Result<Self> {
+        Self::start_kind_parallel_traced(workers, queue_depth, kind, artifacts_dir, par, None)
+    }
+
+    /// [`Self::start_kind_parallel`] with an optional [`SpanRecorder`]
+    /// (see [`Self::start_traced`]).
+    pub fn start_kind_parallel_traced(
+        workers: usize,
+        queue_depth: usize,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+        par: crate::cam::Parallelism,
+        recorder: Option<Arc<SpanRecorder>>,
+    ) -> anyhow::Result<Self> {
         use crate::ap::KernelCache;
         use crate::cam::StorageKind;
         let kernels = Arc::new(KernelCache::new());
-        Self::start(workers, queue_depth, move || -> anyhow::Result<Box<dyn Backend>> {
+        Self::start_traced(workers, queue_depth, recorder, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
                 BackendKind::Native => Box::new(
                     NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels))

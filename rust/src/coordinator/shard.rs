@@ -21,6 +21,7 @@ use super::job::{Job, JobResult};
 use super::metrics::Metrics;
 use super::shard_machine::{Nanos, ShardCore, WorkItem, WorkerEvent, WorkerStep};
 use crate::program::{BoundProgram, ProgramReport};
+use crate::telemetry::{Flow, Payload as SpanPayload, SpanKind, SpanRecorder, StatsDelta, Tracer};
 use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -112,6 +113,13 @@ struct Submission {
     /// latency measured into [`Metrics::latency`].
     enqueued: Instant,
     on_complete: Option<OnComplete>,
+    /// Telemetry request id: the job id, or a synthetic
+    /// [`crate::telemetry::PROGRAM_REQ_BIT`]-tagged id for programs.
+    req: u64,
+    /// Head-sampling decision, made once at submission so every layer
+    /// downstream agrees ([`SpanRecorder::sampled`]). Always false when
+    /// the service is untraced.
+    sampled: bool,
 }
 
 #[derive(Default)]
@@ -248,30 +256,64 @@ fn work_item(sub: &Submission) -> WorkItem {
     }
 }
 
+/// Per-submission bookkeeping carried from flush/dispatch into
+/// [`complete`]: the latency clock plus the telemetry identity needed
+/// to close the request's span chain.
+struct Completion {
+    enqueued: Instant,
+    /// Enqueue → dispatch-start wait (the queueing share of latency).
+    queue_ns: u64,
+    on_complete: Option<OnComplete>,
+    req: u64,
+    sampled: bool,
+    stolen: bool,
+}
+
 /// Flush the pending batch: execute it coalesced and reply per job. The
 /// worker keeps `pending` signature-coherent (it flushes on a signature
 /// switch), and `execute_coalesced` falls back to solo execution if that
 /// ever stops holding — so no re-grouping is needed here. Only job
 /// submissions batch; programs execute on arrival and never enter
 /// `pending`.
-fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
+///
+/// Telemetry: the batch arms the tracer when *any* member is sampled
+/// (the head-sampling rule keeps whole causal chains), opens a fresh
+/// coalesced-batch id linking the flush/exec/tile/job spans, and records
+/// one [`SpanKind::Flush`] span with `reason` naming the policy decision
+/// that triggered it ("size", "deadline", "barrier", or "close").
+fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize, reason: &'static str) {
     if pending.is_empty() {
         return;
     }
+    let flush_started = Instant::now();
     let subs = std::mem::take(pending);
+    let armed = subs.iter().any(|s| s.sampled);
+    engine.tracer_mut().set_armed(armed);
+    engine.tracer_mut().begin_batch();
+    let t_flush = engine.tracer_mut().begin();
     let mut jobs = Vec::with_capacity(subs.len());
     let mut replies = Vec::with_capacity(subs.len());
     let mut completions = Vec::with_capacity(subs.len());
     let mut stolen = 0u64;
+    let mut rows = 0u64;
     for sub in subs {
-        if sub.home != me {
+        let was_stolen = sub.home != me;
+        if was_stolen {
             stolen += 1;
         }
         match sub.payload {
             Payload::Job(job, reply) => {
+                rows += job.rows() as u64;
                 jobs.push(job);
                 replies.push(reply);
-                completions.push((sub.enqueued, sub.on_complete));
+                completions.push(Completion {
+                    enqueued: sub.enqueued,
+                    queue_ns: duration_ns(flush_started.saturating_duration_since(sub.enqueued)),
+                    on_complete: sub.on_complete,
+                    req: sub.req,
+                    sampled: sub.sampled,
+                    stolen: was_stolen,
+                });
             }
             Payload::Program(..) => unreachable!("programs never enter the pending batch"),
         }
@@ -279,18 +321,51 @@ fn flush(engine: &mut VectorEngine, pending: &mut Vec<Submission>, me: usize) {
     engine.metrics_mut().stolen_jobs += stolen;
     super::service::dispatch_batch(engine, &jobs, &replies);
     complete(engine, completions);
+    engine.tracer_mut().span(
+        SpanKind::Flush,
+        t_flush,
+        0,
+        Flow::None,
+        SpanPayload::Flush { jobs: jobs.len() as u32, rows, stolen: stolen as u32, reason },
+    );
+    engine.tracer_mut().set_armed(false);
+    engine.tracer_mut().clear_batch();
+}
+
+/// Saturating `Duration` → nanoseconds (a >580-year wait does not wrap).
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
 }
 
 /// After replies are sent: record each request's enqueue→completion
-/// latency into the shard's [`Metrics::latency`] histogram and fire its
-/// completion callback (the serving front door's admission accounting).
-/// Runs on every path — success, engine error, dropped receiver — so
-/// accepted work is always accounted exactly once.
-fn complete(engine: &mut VectorEngine, completions: Vec<(Instant, Option<OnComplete>)>) {
-    for (enqueued, on_complete) in completions {
-        let latency = enqueued.elapsed();
+/// latency into the shard's [`Metrics::latency`] histogram, record its
+/// [`SpanKind::Reply`] span (finishing the request's flow arrow when it
+/// was sampled), and fire its completion callback (the serving front
+/// door's admission accounting). Runs on every path — success, engine
+/// error, dropped receiver — so accepted work is always accounted
+/// exactly once.
+fn complete(engine: &mut VectorEngine, completions: Vec<Completion>) {
+    for c in completions {
+        let latency = c.enqueued.elapsed();
         engine.metrics_mut().latency.record(latency);
-        if let Some(cb) = on_complete {
+        let tracer = engine.tracer_mut();
+        if tracer.armed() {
+            let now = tracer.begin();
+            let flow = if c.sampled { Flow::Finish } else { Flow::None };
+            tracer.span_at(
+                SpanKind::Reply,
+                now,
+                now,
+                c.req,
+                flow,
+                SpanPayload::Reply {
+                    queue_ns: c.queue_ns,
+                    latency_ns: duration_ns(latency),
+                    stolen: c.stolen,
+                },
+            );
+        }
+        if let Some(cb) = c.on_complete {
             cb(latency);
         }
     }
@@ -312,12 +387,22 @@ struct Worker<'a> {
     /// payload-carrying twin of the core's policy counters).
     pending: Vec<Submission>,
     clock: WorkerClock,
+    /// Why the *next* flush happens — derived from the event currently
+    /// being handled, purely for the [`SpanKind::Flush`] span payload
+    /// (the decision itself stays inside the model-checked core).
+    flush_reason: &'static str,
 }
 
 impl Worker<'_> {
     /// Feed one event through the decision core and execute the steps.
     /// Returns true when the worker must exit.
     fn handle(&mut self, event: WorkerEvent, item: Option<Submission>) -> bool {
+        self.flush_reason = match &event {
+            WorkerEvent::TimedOut => "deadline",
+            WorkerEvent::Item(WorkItem::Program) => "barrier",
+            WorkerEvent::Item(..) => "size",
+            WorkerEvent::Closed => "close",
+        };
         let steps = self.core.on_event(event, self.clock.now());
         self.run_steps(&steps, item)
     }
@@ -325,7 +410,9 @@ impl Worker<'_> {
     fn run_steps(&mut self, steps: &[WorkerStep], mut item: Option<Submission>) -> bool {
         for &step in steps {
             match step {
-                WorkerStep::Flush => flush(self.engine, &mut self.pending, self.me),
+                WorkerStep::Flush => {
+                    flush(self.engine, &mut self.pending, self.me, self.flush_reason)
+                }
                 WorkerStep::Admit => {
                     let sub = item.take().expect("Admit without a popped submission");
                     self.pending.push(sub);
@@ -334,11 +421,61 @@ impl Worker<'_> {
                     let sub = item.take().expect("RunProgram without a popped submission");
                     match sub.payload {
                         Payload::Program(bound, reply) => {
-                            if sub.home != self.me {
+                            let was_stolen = sub.home != self.me;
+                            if was_stolen {
                                 self.engine.metrics_mut().stolen_jobs += 1;
                             }
-                            let _ = reply.send(self.engine.execute_program(&bound));
-                            complete(self.engine, vec![(sub.enqueued, sub.on_complete)]);
+                            let run_started = Instant::now();
+                            let queue_ns = duration_ns(
+                                run_started.saturating_duration_since(sub.enqueued),
+                            );
+                            {
+                                // programs run standalone, but their step
+                                // spans still share a batch id so the
+                                // tree dump groups them
+                                let tracer = self.engine.tracer_mut();
+                                tracer.set_armed(sub.sampled);
+                                tracer.begin_batch();
+                            }
+                            let t_prog = self.engine.tracer_mut().begin();
+                            let result = self.engine.execute_program(&bound);
+                            let payload = match &result {
+                                Ok(report) => SpanPayload::Program {
+                                    steps: report.steps.len() as u32,
+                                    rows: report
+                                        .steps
+                                        .iter()
+                                        .map(|s| s.rows as u64)
+                                        .max()
+                                        .unwrap_or(0),
+                                    energy_j: report.energy.total(),
+                                    delay_cycles: report.delay_cycles,
+                                    stats: StatsDelta::of(&report.stats),
+                                },
+                                Err(_) => SpanPayload::None,
+                            };
+                            self.engine.tracer_mut().span(
+                                SpanKind::Program,
+                                t_prog,
+                                sub.req,
+                                Flow::None,
+                                payload,
+                            );
+                            let _ = reply.send(result);
+                            complete(
+                                self.engine,
+                                vec![Completion {
+                                    enqueued: sub.enqueued,
+                                    queue_ns,
+                                    on_complete: sub.on_complete,
+                                    req: sub.req,
+                                    sampled: sub.sampled,
+                                    stolen: was_stolen,
+                                }],
+                            );
+                            let tracer = self.engine.tracer_mut();
+                            tracer.set_armed(false);
+                            tracer.clear_batch();
                         }
                         Payload::Job(..) => unreachable!("RunProgram for a job submission"),
                     }
@@ -377,6 +514,7 @@ fn shard_worker(me: usize, cfg: ShardConfig, queues: &[Arc<ShardQueue>], engine:
         core: ShardCore::new(&cfg),
         pending: Vec::new(),
         clock: WorkerClock::start(),
+        flush_reason: "deadline",
     };
     loop {
         // Idle tick: an order of magnitude lazier than the flush deadline
@@ -404,6 +542,9 @@ pub struct ShardedService {
     /// Round-robin cursor for program routing (programs never coalesce,
     /// so unlike jobs they gain nothing from signature co-location).
     next_program: std::sync::atomic::AtomicUsize,
+    /// Shared trace store; `None` means untraced (every submission is
+    /// unsampled and worker tracers stay [`Tracer::Off`]).
+    recorder: Option<Arc<SpanRecorder>>,
 }
 
 impl ShardedService {
@@ -411,6 +552,22 @@ impl ShardedService {
     /// inside its thread (backends are stateful and not `Send`). Fails
     /// fast if any shard's backend cannot be built.
     pub fn start<F>(cfg: ShardConfig, make_backend: F) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        Self::start_traced(cfg, None, make_backend)
+    }
+
+    /// [`Self::start`] with an optional [`SpanRecorder`]: each shard
+    /// worker records into its own per-thread sink (pid `100 + shard` on
+    /// the exported timeline) and hands it to the recorder before
+    /// shutdown, so [`Self::shutdown`] followed by
+    /// [`SpanRecorder::drain`] sees every span.
+    pub fn start_traced<F>(
+        cfg: ShardConfig,
+        recorder: Option<Arc<SpanRecorder>>,
+        make_backend: F,
+    ) -> anyhow::Result<Self>
     where
         F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
@@ -426,6 +583,7 @@ impl ShardedService {
             let make_backend = Arc::clone(&make_backend);
             let queues = queues.clone();
             let ready = ready_tx.clone();
+            let recorder = recorder.clone();
             workers.push(std::thread::spawn(move || {
                 let backend = match make_backend() {
                     Ok(b) => {
@@ -438,7 +596,14 @@ impl ShardedService {
                     }
                 };
                 let mut engine = VectorEngine::new(backend);
+                if let Some(rec) = &recorder {
+                    engine.set_tracer(Tracer::attach(rec, 100 + me as u32, 0));
+                }
                 shard_worker(me, cfg, &queues, &mut engine);
+                // hand the sink over before the thread exits; the
+                // service joins workers before the caller drains
+                let mut tracer = engine.take_tracer();
+                tracer.flush();
                 engine.metrics().clone()
             }));
         }
@@ -465,6 +630,7 @@ impl ShardedService {
             workers,
             cfg,
             next_program: std::sync::atomic::AtomicUsize::new(0),
+            recorder,
         })
     }
 
@@ -477,11 +643,22 @@ impl ShardedService {
         kind: BackendKind,
         artifacts_dir: std::path::PathBuf,
     ) -> anyhow::Result<Self> {
+        Self::start_kind_traced(cfg, kind, artifacts_dir, None)
+    }
+
+    /// [`Self::start_kind`] with an optional [`SpanRecorder`]
+    /// (see [`Self::start_traced`]).
+    pub fn start_kind_traced(
+        cfg: ShardConfig,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+        recorder: Option<Arc<SpanRecorder>>,
+    ) -> anyhow::Result<Self> {
         use crate::ap::KernelCache;
         use crate::cam::StorageKind;
         let kernels = Arc::new(KernelCache::new());
         let par = cfg.parallelism;
-        Self::start(cfg, move || -> anyhow::Result<Box<dyn Backend>> {
+        Self::start_traced(cfg, recorder, move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(match kind {
                 BackendKind::Native => Box::new(
                     NativeBackend::with_cache(StorageKind::Scalar, Arc::clone(&kernels))
@@ -494,6 +671,11 @@ impl ShardedService {
                 BackendKind::Pjrt => Box::new(PjrtBackend::new(&artifacts_dir)?),
             })
         })
+    }
+
+    /// The trace store this service records into, when traced.
+    pub fn recorder(&self) -> Option<&Arc<SpanRecorder>> {
+        self.recorder.as_ref()
     }
 
     /// Shards in the service.
@@ -520,12 +702,16 @@ impl ShardedService {
     ) -> Result<Receiver<anyhow::Result<JobResult>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let home = JobSignature::of(&job).shard(self.queues.len());
+        let req = job.id;
+        let sampled = self.recorder.as_ref().is_some_and(|r| r.sampled(req));
         self.queues[home].push(
             Submission {
                 payload: Payload::Job(job, tx),
                 home,
                 enqueued: Instant::now(),
                 on_complete,
+                req,
+                sampled,
             },
             self.cfg.queue_depth,
         )?;
@@ -542,12 +728,16 @@ impl ShardedService {
     ) -> Result<Receiver<anyhow::Result<JobResult>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let home = JobSignature::of(&job).shard(self.queues.len());
+        let req = job.id;
+        let sampled = self.recorder.as_ref().is_some_and(|r| r.sampled(req));
         self.queues[home].try_push(
             Submission {
                 payload: Payload::Job(job, tx),
                 home,
                 enqueued: Instant::now(),
                 on_complete,
+                req,
+                sampled,
             },
             self.cfg.queue_depth,
         )?;
@@ -571,14 +761,30 @@ impl ShardedService {
         bound: BoundProgram,
         on_complete: Option<OnComplete>,
     ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
+        self.submit_program_with_req(bound, on_complete, None)
+    }
+
+    /// [`Self::submit_program_with`] with a caller-allocated telemetry
+    /// request id: the serving front door allocates the synthetic id
+    /// *before* recording its admit span so both layers agree on the
+    /// flow id. `None` allocates one here (or 0 when untraced).
+    pub(crate) fn submit_program_with_req(
+        &self,
+        bound: BoundProgram,
+        on_complete: Option<OnComplete>,
+        req: Option<u64>,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let home = self.route_program();
+        let (req, sampled) = self.program_req(req);
         self.queues[home].push(
             Submission {
                 payload: Payload::Program(Box::new(bound), tx),
                 home,
                 enqueued: Instant::now(),
                 on_complete,
+                req,
+                sampled,
             },
             self.cfg.queue_depth,
         )?;
@@ -591,18 +797,44 @@ impl ShardedService {
         bound: BoundProgram,
         on_complete: Option<OnComplete>,
     ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
+        self.try_submit_program_with_req(bound, on_complete, None)
+    }
+
+    /// Non-blocking [`Self::submit_program_with_req`].
+    pub(crate) fn try_submit_program_with_req(
+        &self,
+        bound: BoundProgram,
+        on_complete: Option<OnComplete>,
+        req: Option<u64>,
+    ) -> Result<Receiver<anyhow::Result<ProgramReport>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let home = self.route_program();
+        let (req, sampled) = self.program_req(req);
         self.queues[home].try_push(
             Submission {
                 payload: Payload::Program(Box::new(bound), tx),
                 home,
                 enqueued: Instant::now(),
                 on_complete,
+                req,
+                sampled,
             },
             self.cfg.queue_depth,
         )?;
         Ok(rx)
+    }
+
+    /// Resolve a program submission's telemetry identity: the caller's
+    /// pre-allocated id, a freshly allocated synthetic id, or 0 when
+    /// untraced.
+    fn program_req(&self, req: Option<u64>) -> (u64, bool) {
+        match &self.recorder {
+            Some(rec) => {
+                let req = req.unwrap_or_else(|| rec.next_program_req());
+                (req, rec.sampled(req))
+            }
+            None => (req.unwrap_or(0), false),
+        }
     }
 
     fn route_program(&self) -> usize {
@@ -804,6 +1036,8 @@ mod tests {
             home: 0,
             enqueued: Instant::now(),
             on_complete: None,
+            req: id,
+            sampled: false,
         }
     }
 
@@ -928,5 +1162,105 @@ mod tests {
         if agg.stolen_jobs > 0 {
             assert!(busy_shards > 1);
         }
+    }
+
+    /// A traced service (sample = 1) records every request's full span
+    /// chain: one Reply per request (closing its flow), Flush/Exec/Job
+    /// spans on the worker lanes, and modeled Job-span energy that
+    /// reconciles exactly with the aggregate metrics.
+    #[test]
+    fn traced_service_records_request_chains() {
+        let rec = SpanRecorder::new(1);
+        let cfg = ShardConfig {
+            shards: 2,
+            queue_depth: 16,
+            flush_after: Duration::from_millis(1),
+            ..ShardConfig::default()
+        };
+        let svc = ShardedService::start_traced(cfg, Some(Arc::clone(&rec)), native).unwrap();
+        let mut rng = Rng::new(77);
+        let mut jobs = Vec::new();
+        for id in 0..12 {
+            jobs.push(add_job(id, &mut rng, 6, 5).0);
+        }
+        let results = svc.run_many(jobs).unwrap();
+        assert_eq!(results.len(), 12);
+        let (agg, _) = svc.shutdown();
+        let data = rec.drain();
+        assert_eq!(data.dropped, 0);
+
+        let replies: Vec<_> =
+            data.events.iter().filter(|e| e.kind == SpanKind::Reply).collect();
+        assert_eq!(replies.len(), 12, "one reply span per request");
+        assert!(replies.iter().all(|e| e.flow == Flow::Finish), "sample=1 finishes every flow");
+        let mut reply_reqs: Vec<u64> = replies.iter().map(|e| e.req).collect();
+        reply_reqs.sort_unstable();
+        assert_eq!(reply_reqs, (0..12).collect::<Vec<u64>>());
+
+        let job_spans: Vec<_> =
+            data.events.iter().filter(|e| e.kind == SpanKind::Job).collect();
+        assert_eq!(job_spans.len(), 12, "one job span per request");
+        let span_energy: f64 = job_spans.iter().filter_map(|e| e.request_energy_j()).sum();
+        let rel = (span_energy - agg.modeled_energy_j).abs() / agg.modeled_energy_j.max(1e-300);
+        assert!(rel < 1e-9, "span energy {span_energy} vs metrics {}", agg.modeled_energy_j);
+
+        // every flush span names a policy reason and a worker lane
+        for ev in data.events.iter().filter(|e| e.kind == SpanKind::Flush) {
+            assert!(ev.pid >= 100, "flush spans live on shard lanes");
+            match ev.payload {
+                SpanPayload::Flush { jobs, reason, .. } => {
+                    assert!(jobs > 0);
+                    assert!(["size", "deadline", "barrier", "close"].contains(&reason));
+                }
+                _ => panic!("flush span carries a flush payload"),
+            }
+        }
+        // each job span rides a batch that also has a flush span
+        let flush_batches: std::collections::HashSet<u64> = data
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanKind::Flush)
+            .map(|e| e.batch)
+            .collect();
+        for j in &job_spans {
+            assert!(j.batch > 0, "job spans carry their coalesced-batch id");
+            assert!(flush_batches.contains(&j.batch), "job batch {} has a flush", j.batch);
+        }
+    }
+
+    /// Traced program submissions get synthetic request ids (marker bit
+    /// set), a Program span, and a flow-finishing Reply.
+    #[test]
+    fn traced_programs_use_synthetic_request_ids() {
+        use crate::program::{builtin, BoundProgram};
+        use crate::telemetry::PROGRAM_REQ_BIT;
+        let rec = SpanRecorder::new(1);
+        let svc = ShardedService::start_traced(
+            ShardConfig { shards: 1, ..ShardConfig::default() },
+            Some(Arc::clone(&rec)),
+            native,
+        )
+        .unwrap();
+        let mut rng = Rng::new(41);
+        let plan = Arc::new(builtin::dot(Radix::TERNARY, 4).plan());
+        let a: Vec<Word> =
+            (0..10).map(|_| Word::from_digits(rng.number(4, 3), Radix::TERNARY)).collect();
+        let b: Vec<Word> =
+            (0..10).map(|_| Word::from_digits(rng.number(4, 3), Radix::TERNARY)).collect();
+        let bound = BoundProgram::bind(&plan, vec![("a", a), ("b", b)], true).unwrap();
+        svc.run_program(bound).unwrap();
+        let (_, _) = svc.shutdown();
+        let data = rec.drain();
+        let prog =
+            data.events.iter().find(|e| e.kind == SpanKind::Program).expect("program span");
+        assert!(prog.req & PROGRAM_REQ_BIT != 0, "synthetic program req id");
+        let reply =
+            data.events.iter().find(|e| e.kind == SpanKind::Reply).expect("reply span");
+        assert_eq!(reply.req, prog.req);
+        assert_eq!(reply.flow, Flow::Finish);
+        // the program's step spans share its batch id
+        let steps: Vec<_> = data.events.iter().filter(|e| e.kind == SpanKind::Step).collect();
+        assert!(!steps.is_empty(), "program execution records step spans");
+        assert!(steps.iter().all(|s| s.batch == prog.batch && s.batch > 0));
     }
 }

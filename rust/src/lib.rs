@@ -41,6 +41,11 @@
 //!   and backpressure over the sharded dispatcher, per-request latency
 //!   capture into streaming p50/p95/p99 histograms, and closed/open-loop
 //!   load generation (`mvap serve`).
+//! * [`telemetry`] — low-overhead structured tracing of the request path
+//!   (admit → flush → exec → tile → job/program/step → reply) with
+//!   head sampling, Chrome/Perfetto trace export with cross-shard flow
+//!   arrows, a plain-text tree dump, and JSON metrics snapshots; a
+//!   strict no-op when disabled.
 //! * [`runtime`] — PJRT client wrapper and artifact loading.
 //! * [`exp`] — experiment harness regenerating every paper table/figure.
 //!
@@ -68,6 +73,7 @@ pub mod coordinator;
 pub mod modelcheck;
 pub mod program;
 pub mod serving;
+pub mod telemetry;
 pub mod runtime;
 pub mod exp;
 

@@ -7,6 +7,7 @@
 //!   search            content-addressable lookup (exact/nearest/min/max/topk)
 //!   program           compile + run a multi-op dataflow program
 //!   serve             drive the serving front door with a load generator
+//!   trace             replay a canned workload, emit a Chrome trace JSON
 //!   modelcheck        exhaustively verify the shard coordinator machine
 //!   artifacts         list the AOT artifact registry
 //!   sweep             circuit design-space exploration summary
@@ -23,7 +24,8 @@ use mvap::lutgen::{generate_blocked, generate_non_blocked, validate_lut};
 use mvap::mvl::{Radix, Word};
 use mvap::program::{builtin, reference, BoundProgram};
 use mvap::runtime::Registry;
-use mvap::serving::{loadgen, FrontConfig, LoadConfig, LoopMode, Mix};
+use mvap::serving::{loadgen, FrontConfig, FrontDoor, LoadConfig, LoopMode, Mix};
+use mvap::telemetry::{chrome_trace, text_tree, MetricsSnapshot, SpanRecorder};
 use mvap::util::cli::Args;
 use mvap::util::{Rng, Table};
 use std::path::PathBuf;
@@ -40,7 +42,7 @@ USAGE:
            [--backend native|native-bitsliced|pjrt] [--workers W] [--jobs J]
            [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
            [--shards S] [--flush-us U] [--batch-rows R] [--batch-jobs B]
-           [--no-steal] [--no-coalesce] [--threads T]
+           [--no-steal] [--no-coalesce] [--threads T] [--trace FILE]
            (--shards > 0 runs the sharded, cross-job-coalescing dispatcher;
             otherwise the worker pool coalesces each submitted batch unless
             --no-coalesce. --op reduce sums each job's rows down to one
@@ -61,7 +63,7 @@ USAGE:
            [--rows N] [--digits P] [--radix N] [--taps T] [--degree D]
            [--neurons M] [--backend native|native-bitsliced] [--workers W]
            [--shards S] [--blocked|--non-blocked] [--seed S] [--dump-plan]
-           [--threads T]
+           [--threads T] [--trace FILE]
            (compiles the builtin to a field-allocated plan and runs the
             whole op DAG as ONE engine invocation — intermediates stay
             CAM-resident; --dump-plan prints the schedule and exits)
@@ -71,7 +73,7 @@ USAGE:
            [--inflight CAP] [--queue-depth D]
            [--backend native|native-bitsliced|pjrt]
            [--blocked|--non-blocked] [--artifacts DIR] [--seed S]
-           [--json FILE]
+           [--json FILE] [--trace FILE] [--trace-sample N]
            (drives the bounded-admission serving front door with mixed
             add:sub:mac:reduce:search:program traffic and prints p50/p95/p99
             latency + throughput per shard-count × flush-policy setting.
@@ -79,7 +81,18 @@ USAGE:
             measures capacity]; --rps R adds an open loop [fixed-rate
             pacer that sheds instead of queueing, measures tail latency
             under offered load]. reduce/search/program classes are
-            native-only)
+            native-only. --trace FILE records the sampled requests' span
+            chains as Chrome trace-event JSON — one sweep configuration
+            only; --trace-sample N keeps every Nth request's full chain,
+            default 1 = everything)
+  mvap trace [--out FILE] [--sample N] [--text]
+           (replays a canned two-phase workload engineered to show the
+            interesting cross-request schedules — a same-signature burst
+            that coalesces into shared tile batches, then a hot-shard
+            pile-up that triggers work stealing — and writes Chrome
+            trace-event JSON with per-request flow arrows plus engine
+            metrics snapshots. Open the file in ui.perfetto.dev or
+            chrome://tracing; --text also prints a plain-text span tree)
   mvap modelcheck [--max-states N] [--dot FILE] [--no-liveness]
            (exhaustively explores every interleaving of the bounded shard
             coordinator scenarios — submit/pop/flush/steal/barrier/drain —
@@ -99,6 +112,7 @@ fn main() {
         Some("search") => cmd_search(&args),
         Some("program") => cmd_program(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("modelcheck") => cmd_modelcheck(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
@@ -217,7 +231,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let no_steal = args.flag("no-steal");
     let no_coalesce = args.flag("no-coalesce");
     let par = resolve_threads(args)?;
+    let trace_path = args.get("trace").map(PathBuf::from);
     args.reject_unknown();
+    // --trace keeps every request (sample 1): a handful of CLI jobs is
+    // nowhere near the per-thread ring capacity.
+    let recorder = trace_path.as_ref().map(|_| SpanRecorder::new(1));
 
     let mut rng = Rng::new(seed);
     let mut workload = Vec::with_capacity(jobs);
@@ -266,7 +284,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             steal: !no_steal,
             parallelism: par,
         };
-        let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
+        let svc = ShardedService::start_kind_traced(cfg, backend, artifacts, recorder.clone())?;
         for rx in svc.submit_many(workload)? {
             let res = rx.recv().expect("shard died")?;
             print_result(&res);
@@ -275,7 +293,14 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let (agg, per_shard) = svc.shutdown();
         (wall, agg, Some(per_shard))
     } else {
-        let svc = EngineService::start_kind_parallel(workers, jobs.max(2), backend, artifacts, par)?;
+        let svc = EngineService::start_kind_parallel_traced(
+            workers,
+            jobs.max(2),
+            backend,
+            artifacts,
+            par,
+            recorder.clone(),
+        )?;
         let receivers = if no_coalesce {
             workload.into_iter().map(|j| svc.submit(j)).collect::<Vec<_>>()
         } else {
@@ -289,7 +314,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         (wall, svc.shutdown(), None)
     };
     println!("—— {}", metrics.summary());
-    if let Some(per_shard) = per_shard {
+    if let Some(per_shard) = &per_shard {
         for (i, m) in per_shard.iter().enumerate() {
             println!("   shard {i}: {}", m.summary());
         }
@@ -298,6 +323,34 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "—— wall {:?} ({:.0} rows/s end-to-end)",
         wall,
         metrics.rows as f64 / wall.as_secs_f64()
+    );
+    if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+        write_chrome_trace(path, rec, "run", &metrics, per_shard.as_deref())?;
+    }
+    Ok(())
+}
+
+/// Drain `rec` and write the Chrome trace-event JSON with the run's
+/// metrics snapshots attached. Call only after the service that owned the
+/// recorder has shut down — worker sinks are handed over at thread exit.
+fn write_chrome_trace(
+    path: &std::path::Path,
+    rec: &Arc<SpanRecorder>,
+    label: &str,
+    aggregate: &mvap::coordinator::Metrics,
+    per_shard: Option<&[mvap::coordinator::Metrics]>,
+) -> anyhow::Result<()> {
+    let mut snaps = vec![MetricsSnapshot::aggregate(label, aggregate)];
+    for (i, m) in per_shard.into_iter().flatten().enumerate() {
+        snaps.push(MetricsSnapshot::shard(format!("{label}/shard{i}"), m));
+    }
+    let data = rec.drain();
+    std::fs::write(path, chrome_trace(&data, &snaps))?;
+    println!(
+        "—— chrome trace: {} spans ({} dropped) -> {} (open in ui.perfetto.dev)",
+        data.events.len(),
+        data.dropped,
+        path.display()
     );
     Ok(())
 }
@@ -405,7 +458,9 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
     let dump_plan = args.flag("dump-plan");
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let par = resolve_threads(args)?;
+    let trace_path = args.get("trace").map(PathBuf::from);
     args.reject_unknown();
+    let recorder = trace_path.as_ref().map(|_| SpanRecorder::new(1));
     anyhow::ensure!(
         backend != BackendKind::Pjrt,
         "program execution is native-only — use --backend native or native-bitsliced"
@@ -450,16 +505,23 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
     let bound = BoundProgram::bind(&plan, borrowed, blocked)?;
 
     let started = std::time::Instant::now();
-    let (report, metrics) = if shards > 0 {
+    let (report, metrics, per_shard) = if shards > 0 {
         let cfg = ShardConfig { shards, parallelism: par, ..ShardConfig::default() };
-        let svc = ShardedService::start_kind(cfg, backend, artifacts)?;
+        let svc = ShardedService::start_kind_traced(cfg, backend, artifacts, recorder.clone())?;
         let report = svc.run_program(bound)?;
-        let (agg, _) = svc.shutdown();
-        (report, agg)
+        let (agg, per_shard) = svc.shutdown();
+        (report, agg, Some(per_shard))
     } else {
-        let svc = EngineService::start_kind_parallel(workers, 2, backend, artifacts, par)?;
+        let svc = EngineService::start_kind_parallel_traced(
+            workers,
+            2,
+            backend,
+            artifacts,
+            par,
+            recorder.clone(),
+        )?;
         let report = svc.run_program(bound)?;
-        (report, svc.shutdown())
+        (report, svc.shutdown(), None)
     };
     let wall = started.elapsed();
     print!("{}", report.render());
@@ -470,6 +532,9 @@ fn cmd_program(args: &Args) -> anyhow::Result<()> {
     println!("outputs verified against the host reference ✓");
     println!("—— {}", metrics.summary());
     println!("—— wall {wall:?}");
+    if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+        write_chrome_trace(path, rec, "program", &metrics, per_shard.as_deref())?;
+    }
     Ok(())
 }
 
@@ -507,8 +572,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let thread_list: Vec<usize> =
         parse_sweep(args, "threads", mvap::cam::Parallelism::from_env().threads)?;
     let json = args.get("json").map(PathBuf::from);
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let trace_sample = args.get_parse_or("trace-sample", 1u64);
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     args.reject_unknown();
+    anyhow::ensure!(trace_sample > 0, "--trace-sample must be at least 1");
 
     anyhow::ensure!(
         duration_s.is_finite() && duration_s > 0.0,
@@ -530,6 +598,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if rps > 0 {
         modes.push(LoopMode::Open);
     }
+
+    // Tracing a sweep would interleave unrelated configurations in one
+    // timeline; insist on a single point so the trace reads cleanly.
+    if trace_path.is_some() {
+        anyhow::ensure!(
+            shard_counts.len() == 1 && flush_list.len() == 1 && thread_list.len() == 1
+                && modes.len() == 1,
+            "--trace records one configuration: drop the sweep lists and \
+             pick exactly one of --clients / --rps"
+        );
+    }
+    let recorder = trace_path.as_ref().map(|_| SpanRecorder::new(trace_sample));
 
     let max_in_flight = if inflight > 0 { inflight } else { (clients * 2).max(256) };
     let cfg = LoadConfig {
@@ -562,8 +642,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                             ..ShardConfig::default()
                         },
                     };
-                    let report =
-                        loadgen::run_kind(mode, front_cfg, backend, artifacts.clone(), &cfg)?;
+                    let report = loadgen::run_kind_traced(
+                        mode,
+                        front_cfg,
+                        backend,
+                        artifacts.clone(),
+                        &cfg,
+                        recorder.clone(),
+                    )?;
                     println!(
                         "{:>6} loop, {} shard(s), flush {}us, {} thread(s): offered={} \
                          completed={} shed={} failed={} ({:.0} req/s)",
@@ -598,7 +684,161 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         std::fs::write(&path, body)?;
         println!("latency curves -> {}", path.display());
     }
+    if let (Some(path), Some(rec)) = (&trace_path, &recorder) {
+        // Single configuration enforced above, so reports[0] is the run
+        // the recorder watched.
+        write_chrome_trace(path, rec, "serve", &reports[0].engine, None)?;
+    }
     Ok(())
+}
+
+/// `mvap trace` — replay a canned workload engineered to put the two
+/// cross-request schedules worth seeing in a viewer into one trace:
+/// phase A floods two shards with a same-signature burst (plus one
+/// program barrier) so the tile assembler coalesces jobs into shared
+/// batches; phase B funnels every job onto one home shard with
+/// single-job batches and a depth-2 queue so the idle shards steal.
+/// Both are timing-dependent, so the replay retries with a fresh
+/// recorder until the resulting trace actually shows both.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use std::time::Duration;
+
+    let out = PathBuf::from(args.get_or("out", "trace.json"));
+    let sample = args.get_parse_or("sample", 1u64);
+    let want_text = args.flag("text");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown();
+    anyhow::ensure!(sample > 0, "--sample must be at least 1");
+
+    let radix = Radix(3);
+    let digits = 8usize;
+
+    const ATTEMPTS: usize = 5;
+    for attempt in 1..=ATTEMPTS {
+        let recorder = SpanRecorder::new(sample);
+        let mut rng = Rng::new(0x7ace + attempt as u64);
+        let mut words = |rows: usize| -> Vec<Word> {
+            (0..rows)
+                .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+                .collect()
+        };
+
+        // Phase A — cross-job coalescing: 32 same-signature jobs (ids
+        // start at 1; the shared-span lane already owns request 0 in the
+        // text tree) burst into two shards whose batch policy holds the
+        // queue open long enough to pack up to 16 jobs per tile program.
+        let front = FrontDoor::start_kind_traced(
+            FrontConfig {
+                max_in_flight: 64,
+                shard: ShardConfig {
+                    shards: 2,
+                    queue_depth: 64,
+                    max_batch_jobs: 16,
+                    max_batch_rows: 1 << 20,
+                    flush_after: Duration::from_micros(500),
+                    steal: true,
+                    parallelism: mvap::cam::Parallelism::new(1),
+                },
+            },
+            BackendKind::NativeBitSliced,
+            artifacts.clone(),
+            Some(Arc::clone(&recorder)),
+        )?;
+        let mut replies = Vec::new();
+        for id in 1..=32u64 {
+            let (a, b) = (words(64), words(64));
+            let job = Job::new(id, OpKind::Add, radix, true, a, b);
+            replies
+                .push(front.submit(job).map_err(|e| anyhow::anyhow!("burst request shed: {e}"))?);
+        }
+        let plan = Arc::new(builtin::dot(radix, digits).plan());
+        let inputs: Vec<(String, Vec<Word>)> = plan
+            .program()
+            .input_names()
+            .iter()
+            .map(|n| (n.to_string(), words(64)))
+            .collect();
+        let borrowed: Vec<(&str, Vec<Word>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let bound = BoundProgram::bind(&plan, borrowed, true)?;
+        let prog_rx =
+            front.submit_program(bound).map_err(|e| anyhow::anyhow!("program shed: {e}"))?;
+        for rx in replies {
+            rx.recv().expect("shard died")?;
+        }
+        prog_rx.recv().expect("shard died")?;
+        anyhow::ensure!(front.drain(Duration::from_secs(10)), "coalesce phase failed to drain");
+        let (_, coalesce_agg, coalesce_shards) = front.shutdown();
+
+        // Phase B — work stealing: one signature routes every job to the
+        // same home shard; single-job batches and a depth-2 queue leave
+        // the other three shards with nothing to do but rob it.
+        let front = FrontDoor::start_kind_traced(
+            FrontConfig {
+                max_in_flight: 64,
+                shard: ShardConfig {
+                    shards: 4,
+                    queue_depth: 2,
+                    max_batch_jobs: 1,
+                    max_batch_rows: 1 << 20,
+                    flush_after: Duration::from_micros(200),
+                    steal: true,
+                    parallelism: mvap::cam::Parallelism::new(1),
+                },
+            },
+            BackendKind::NativeBitSliced,
+            artifacts.clone(),
+            Some(Arc::clone(&recorder)),
+        )?;
+        let mut replies = Vec::new();
+        for id in 33..=56u64 {
+            let (a, b) = (words(300), words(300));
+            let job = Job::new(id, OpKind::Add, radix, true, a, b);
+            replies
+                .push(front.submit(job).map_err(|e| anyhow::anyhow!("pile-up request shed: {e}"))?);
+        }
+        for rx in replies {
+            rx.recv().expect("shard died")?;
+        }
+        anyhow::ensure!(front.drain(Duration::from_secs(10)), "steal phase failed to drain");
+        let (_, steal_agg, steal_shards) = front.shutdown();
+
+        let (coalesced, stolen) = (coalesce_agg.coalesced_jobs, steal_agg.stolen_jobs);
+        if coalesced == 0 || stolen == 0 {
+            eprintln!(
+                "attempt {attempt}/{ATTEMPTS}: coalesced={coalesced} stolen={stolen} — replaying"
+            );
+            continue;
+        }
+
+        let mut snaps = vec![
+            MetricsSnapshot::aggregate("trace/coalesce", &coalesce_agg),
+            MetricsSnapshot::aggregate("trace/steal", &steal_agg),
+        ];
+        for (i, m) in coalesce_shards.iter().enumerate() {
+            snaps.push(MetricsSnapshot::shard(format!("coalesce/shard{i}"), m));
+        }
+        for (i, m) in steal_shards.iter().enumerate() {
+            snaps.push(MetricsSnapshot::shard(format!("steal/shard{i}"), m));
+        }
+        let data = recorder.drain();
+        std::fs::write(&out, chrome_trace(&data, &snaps))?;
+        println!(
+            "trace: {} spans ({} dropped), {coalesced} coalesced + {stolen} stolen jobs -> {}",
+            data.events.len(),
+            data.dropped,
+            out.display()
+        );
+        println!("open in https://ui.perfetto.dev or chrome://tracing");
+        if want_text {
+            print!("{}", text_tree(&data));
+        }
+        return Ok(());
+    }
+    anyhow::bail!(
+        "the canned workload never both coalesced and stole within {ATTEMPTS} attempts \
+         (schedule-dependent; rerun, or inspect with `mvap run --trace`)"
+    )
 }
 
 fn cmd_modelcheck(args: &Args) -> anyhow::Result<()> {

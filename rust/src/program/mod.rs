@@ -71,6 +71,10 @@ pub struct StepReport {
     /// Query hits ([`StepKind::Query`] steps only; rows relative to the
     /// step's live range).
     pub hits: Option<SearchHits>,
+    /// Telemetry span id of this step's recorded
+    /// [`crate::telemetry::SpanKind::Step`] span; 0 when tracing is off
+    /// or the request was not sampled.
+    pub span: u64,
 }
 
 /// Result of executing a bound program: per-output values plus per-step

@@ -28,6 +28,7 @@ use crate::coordinator::{
     SubmitError,
 };
 use crate::program::{BoundProgram, ProgramReport};
+use crate::telemetry::{Flow, Payload as SpanPayload, SpanEvent, SpanKind, SpanRecorder};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
@@ -195,6 +196,10 @@ pub struct FrontDoor {
     svc: ShardedService,
     state: Arc<FrontState>,
     max_in_flight: usize,
+    /// Trace store shared with the shards; `None` = untraced. The front
+    /// door records the client-edge admit/shed events (pid 0 on the
+    /// exported timeline) and opens each sampled request's flow arrow.
+    recorder: Option<Arc<SpanRecorder>>,
 }
 
 impl FrontDoor {
@@ -204,9 +209,27 @@ impl FrontDoor {
     where
         F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
+        Self::start_traced(cfg, None, make_backend)
+    }
+
+    /// [`Self::start`] with an optional [`SpanRecorder`] shared between
+    /// the client edge and the shard workers.
+    pub fn start_traced<F>(
+        cfg: FrontConfig,
+        recorder: Option<Arc<SpanRecorder>>,
+        make_backend: F,
+    ) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
         assert!(cfg.max_in_flight >= 1, "admit at least one request");
-        let svc = ShardedService::start(cfg.shard, make_backend)?;
-        Ok(FrontDoor { svc, state: Arc::new(FrontState::new()), max_in_flight: cfg.max_in_flight })
+        let svc = ShardedService::start_traced(cfg.shard, recorder.clone(), make_backend)?;
+        Ok(FrontDoor {
+            svc,
+            state: Arc::new(FrontState::new()),
+            max_in_flight: cfg.max_in_flight,
+            recorder,
+        })
     }
 
     /// Start with a [`BackendKind`] (the CLI path; native shards share
@@ -216,9 +239,30 @@ impl FrontDoor {
         kind: BackendKind,
         artifacts_dir: std::path::PathBuf,
     ) -> anyhow::Result<Self> {
+        Self::start_kind_traced(cfg, kind, artifacts_dir, None)
+    }
+
+    /// [`Self::start_kind`] with an optional [`SpanRecorder`].
+    pub fn start_kind_traced(
+        cfg: FrontConfig,
+        kind: BackendKind,
+        artifacts_dir: std::path::PathBuf,
+        recorder: Option<Arc<SpanRecorder>>,
+    ) -> anyhow::Result<Self> {
         assert!(cfg.max_in_flight >= 1, "admit at least one request");
-        let svc = ShardedService::start_kind(cfg.shard, kind, artifacts_dir)?;
-        Ok(FrontDoor { svc, state: Arc::new(FrontState::new()), max_in_flight: cfg.max_in_flight })
+        let svc =
+            ShardedService::start_kind_traced(cfg.shard, kind, artifacts_dir, recorder.clone())?;
+        Ok(FrontDoor {
+            svc,
+            state: Arc::new(FrontState::new()),
+            max_in_flight: cfg.max_in_flight,
+            recorder,
+        })
+    }
+
+    /// The trace store this front door records into, when traced.
+    pub fn recorder(&self) -> Option<&Arc<SpanRecorder>> {
+        self.recorder.as_ref()
     }
 
     /// Shards behind this front door.
@@ -267,20 +311,109 @@ impl FrontDoor {
         Box::new(move |latency| state.complete(class, latency))
     }
 
+    /// Timestamp the start of a sampled request's admit span; 0 (no
+    /// clock read) when untraced or unsampled.
+    fn edge_begin(&self, req: u64) -> u64 {
+        match &self.recorder {
+            Some(rec) if rec.sampled(req) => rec.now_ns(),
+            _ => 0,
+        }
+    }
+
+    /// Record the client-edge admit span of a successfully submitted
+    /// sampled request, opening its flow arrow.
+    fn edge_admit(&self, req: u64, class: &'static str, start_ns: u64) {
+        if let Some(rec) = &self.recorder {
+            if rec.sampled(req) {
+                let end_ns = rec.now_ns().max(start_ns);
+                rec.record_edge(SpanEvent {
+                    kind: SpanKind::Admit,
+                    start_ns,
+                    end_ns,
+                    pid: 0,
+                    tid: rec.edge_lane(),
+                    req,
+                    batch: 0,
+                    id: 0,
+                    flow: Flow::Start,
+                    payload: SpanPayload::Admit { class },
+                });
+            }
+        }
+    }
+
+    /// Record the shed/closed rejection instant of a sampled request.
+    /// No flow is opened — a shed request has no downstream chain.
+    fn edge_shed(&self, req: u64, class: &'static str, err: AdmitError) {
+        if let Some(rec) = &self.recorder {
+            if rec.sampled(req) {
+                let now = rec.now_ns();
+                rec.record_edge(SpanEvent {
+                    kind: SpanKind::Shed,
+                    start_ns: now,
+                    end_ns: now,
+                    pid: 0,
+                    tid: rec.edge_lane(),
+                    req,
+                    batch: 0,
+                    id: 0,
+                    flow: Flow::None,
+                    payload: SpanPayload::Shed { class, closed: err == AdmitError::Closed },
+                });
+            }
+        }
+    }
+
     /// Submit one job (closed-loop path): blocks on shard backpressure
     /// once admitted, sheds only at the in-flight cap.
     pub fn submit(&self, job: Job) -> Result<Receiver<anyhow::Result<JobResult>>, AdmitError> {
-        self.admit()?;
         let class = WorkClass::of_op(job.op);
-        self.svc.submit_with(job, Some(self.completion(class))).map_err(|e| self.unadmit(e))
+        let req = job.id;
+        let t_admit = self.edge_begin(req);
+        if let Err(e) = self.admit() {
+            self.edge_shed(req, class.name(), e);
+            return Err(e);
+        }
+        match self.svc.submit_with(job, Some(self.completion(class))) {
+            Ok(rx) => {
+                self.edge_admit(req, class.name(), t_admit);
+                Ok(rx)
+            }
+            Err(e) => {
+                let err = self.unadmit(e);
+                self.edge_shed(req, class.name(), err);
+                Err(err)
+            }
+        }
     }
 
     /// Submit one job without blocking (open-loop path): sheds at the
     /// in-flight cap *or* when the home shard's queue is full.
     pub fn try_submit(&self, job: Job) -> Result<Receiver<anyhow::Result<JobResult>>, AdmitError> {
-        self.admit()?;
         let class = WorkClass::of_op(job.op);
-        self.svc.try_submit_with(job, Some(self.completion(class))).map_err(|e| self.unadmit(e))
+        let req = job.id;
+        let t_admit = self.edge_begin(req);
+        if let Err(e) = self.admit() {
+            self.edge_shed(req, class.name(), e);
+            return Err(e);
+        }
+        match self.svc.try_submit_with(job, Some(self.completion(class))) {
+            Ok(rx) => {
+                self.edge_admit(req, class.name(), t_admit);
+                Ok(rx)
+            }
+            Err(e) => {
+                let err = self.unadmit(e);
+                self.edge_shed(req, class.name(), err);
+                Err(err)
+            }
+        }
+    }
+
+    /// Allocate the synthetic telemetry request id for a program
+    /// submission (`None` when untraced).
+    fn program_req(&self) -> Option<u64> {
+        self.recorder.as_ref().map(|r| r.next_program_req())
     }
 
     /// Submit a bound program (closed-loop path).
@@ -288,10 +421,30 @@ impl FrontDoor {
         &self,
         bound: BoundProgram,
     ) -> Result<Receiver<anyhow::Result<ProgramReport>>, AdmitError> {
-        self.admit()?;
-        self.svc
-            .submit_program_with(bound, Some(self.completion(WorkClass::Program)))
-            .map_err(|e| self.unadmit(e))
+        let req = self.program_req();
+        let t_admit = req.map_or(0, |r| self.edge_begin(r));
+        if let Err(e) = self.admit() {
+            if let Some(r) = req {
+                self.edge_shed(r, "program", e);
+            }
+            return Err(e);
+        }
+        match self.svc.submit_program_with_req(bound, Some(self.completion(WorkClass::Program)), req)
+        {
+            Ok(rx) => {
+                if let Some(r) = req {
+                    self.edge_admit(r, "program", t_admit);
+                }
+                Ok(rx)
+            }
+            Err(e) => {
+                let err = self.unadmit(e);
+                if let Some(r) = req {
+                    self.edge_shed(r, "program", err);
+                }
+                Err(err)
+            }
+        }
     }
 
     /// Submit a bound program without blocking (open-loop path).
@@ -299,10 +452,33 @@ impl FrontDoor {
         &self,
         bound: BoundProgram,
     ) -> Result<Receiver<anyhow::Result<ProgramReport>>, AdmitError> {
-        self.admit()?;
-        self.svc
-            .try_submit_program_with(bound, Some(self.completion(WorkClass::Program)))
-            .map_err(|e| self.unadmit(e))
+        let req = self.program_req();
+        let t_admit = req.map_or(0, |r| self.edge_begin(r));
+        if let Err(e) = self.admit() {
+            if let Some(r) = req {
+                self.edge_shed(r, "program", e);
+            }
+            return Err(e);
+        }
+        match self.svc.try_submit_program_with_req(
+            bound,
+            Some(self.completion(WorkClass::Program)),
+            req,
+        ) {
+            Ok(rx) => {
+                if let Some(r) = req {
+                    self.edge_admit(r, "program", t_admit);
+                }
+                Ok(rx)
+            }
+            Err(e) => {
+                let err = self.unadmit(e);
+                if let Some(r) = req {
+                    self.edge_shed(r, "program", err);
+                }
+                Err(err)
+            }
+        }
     }
 
     /// Counter + latency snapshot (cheap; live).
@@ -470,5 +646,59 @@ mod tests {
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.closed_rejects, 2);
         assert_eq!(stats.in_flight, 0, "failed submits must roll back their slots");
+    }
+
+    /// Traced front door: every sampled request's flow opens in exactly
+    /// one client-edge admit span and finishes in exactly one reply span;
+    /// closed-door rejections record shed instants.
+    #[test]
+    fn traced_front_door_opens_and_closes_flows() {
+        let rec = SpanRecorder::new(1);
+        let cfg = FrontConfig { max_in_flight: 64, ..FrontConfig::default() };
+        let front = FrontDoor::start_traced(cfg, Some(Arc::clone(&rec)), native).unwrap();
+        let mut rng = Rng::new(29);
+        let mut rxs = Vec::new();
+        for id in 0..8 {
+            rxs.push(front.submit(add_job(id, &mut rng)).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        front.close();
+        assert_eq!(front.submit(add_job(99, &mut rng)).unwrap_err(), AdmitError::Closed);
+        let (stats, _, _) = front.shutdown();
+        assert_eq!(stats.completed, 8);
+        let data = rec.drain();
+
+        let admits: Vec<_> =
+            data.events.iter().filter(|e| e.kind == SpanKind::Admit).collect();
+        assert_eq!(admits.len(), 8, "one admit span per accepted request");
+        assert!(admits.iter().all(|e| e.pid == 0 && e.flow == Flow::Start));
+        let mut admit_reqs: Vec<u64> = admits.iter().map(|e| e.req).collect();
+        admit_reqs.sort_unstable();
+        let mut reply_reqs: Vec<u64> = data
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanKind::Reply && e.flow == Flow::Finish)
+            .map(|e| e.req)
+            .collect();
+        reply_reqs.sort_unstable();
+        assert_eq!(admit_reqs, reply_reqs, "every flow start has its finish");
+
+        let sheds: Vec<_> = data.events.iter().filter(|e| e.kind == SpanKind::Shed).collect();
+        assert_eq!(sheds.len(), 1, "the closed-door rejection records a shed instant");
+        match sheds[0].payload {
+            SpanPayload::Shed { closed, .. } => assert!(closed),
+            _ => panic!("shed span carries a shed payload"),
+        }
+        // admit spans precede (or abut) their reply spans on the timeline
+        for a in &admits {
+            let reply = data
+                .events
+                .iter()
+                .find(|e| e.kind == SpanKind::Reply && e.req == a.req)
+                .expect("reply for admitted request");
+            assert!(a.start_ns <= reply.end_ns);
+        }
     }
 }

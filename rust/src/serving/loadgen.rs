@@ -24,6 +24,7 @@ use super::histogram::LatencyHistogram;
 use crate::coordinator::{Backend, BackendKind, Job, Metrics, OpKind};
 use crate::mvl::{Radix, Word};
 use crate::program::{builtin, BoundProgram, Plan};
+use crate::telemetry::SpanRecorder;
 use crate::util::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -354,16 +355,25 @@ impl LoadReport {
     }
 }
 
-fn deadline_after(d: Duration) -> Instant {
-    // saturate rather than panic on absurd durations
-    Instant::now().checked_add(d).unwrap_or_else(|| {
-        Instant::now() + Duration::from_secs(3600)
-    })
+/// The run's wall-clock deadline: `now + d`, capped at one hour when `d`
+/// itself is not representable (e.g. `Duration::MAX`). Every add is
+/// checked — the old fallback's bare `Instant + Duration` could itself
+/// panic on overflow. Returns `None` only when even the capped deadline
+/// overflows the platform `Instant`; callers then run nothing rather
+/// than panic. (The shard queue's untimed-wait fallback —
+/// `ShardQueue::pop` treating an unrepresentable deadline as "wait on
+/// close/items alone" — does not transplant here: a load loop has no
+/// close signal to wake it, so "no deadline" would hang the drive.)
+fn deadline_after(d: Duration) -> Option<Instant> {
+    let now = Instant::now();
+    now.checked_add(d).or_else(|| now.checked_add(Duration::from_secs(3600)))
 }
 
 /// Closed loop: `cfg.clients` threads in submit→wait→repeat cycles.
 fn run_closed(front: &FrontDoor, cfg: &LoadConfig, factory: &RequestFactory) -> Tally {
-    let deadline = deadline_after(cfg.duration);
+    let Some(deadline) = deadline_after(cfg.duration) else {
+        return Tally::default();
+    };
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients.max(1))
             .map(|c| {
@@ -412,7 +422,9 @@ fn run_closed(front: &FrontDoor, cfg: &LoadConfig, factory: &RequestFactory) -> 
 fn run_open(front: &FrontDoor, cfg: &LoadConfig, factory: &RequestFactory) -> Tally {
     let interval = Duration::from_nanos((1_000_000_000 / cfg.rps.max(1)).max(1));
     let start = Instant::now();
-    let deadline = deadline_after(cfg.duration);
+    let Some(deadline) = deadline_after(cfg.duration) else {
+        return Tally::default();
+    };
     let mut next = start;
     let mut rng = Rng::new(cfg.seed ^ 0xa5a5_a5a5_a5a5_a5a5);
     let mut tally = Tally::default();
@@ -464,7 +476,23 @@ pub fn run_kind(
     artifacts_dir: std::path::PathBuf,
     cfg: &LoadConfig,
 ) -> anyhow::Result<LoadReport> {
-    let front = FrontDoor::start_kind(front_cfg.clone(), kind, artifacts_dir)?;
+    run_kind_traced(mode, front_cfg, kind, artifacts_dir, cfg, None)
+}
+
+/// [`run_kind`] with an optional [`SpanRecorder`]: the client edge and
+/// the shard workers record sampled requests' span chains into it (the
+/// `mvap serve --trace` path). Drain the recorder *after* this returns —
+/// the front door joins its shards on shutdown, so every worker sink has
+/// been handed over by then.
+pub fn run_kind_traced(
+    mode: LoopMode,
+    front_cfg: FrontConfig,
+    kind: BackendKind,
+    artifacts_dir: std::path::PathBuf,
+    cfg: &LoadConfig,
+    recorder: Option<Arc<SpanRecorder>>,
+) -> anyhow::Result<LoadReport> {
+    let front = FrontDoor::start_kind_traced(front_cfg.clone(), kind, artifacts_dir, recorder)?;
     drive(mode, front, front_cfg, cfg)
 }
 
@@ -515,6 +543,27 @@ mod tests {
 
     fn native() -> anyhow::Result<Box<dyn Backend>> {
         Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+    }
+
+    /// Regression: the old `deadline_after` fallback computed
+    /// `Instant::now() + Duration::from_secs(3600)` with the panicking
+    /// `Add` impl — an unrepresentable run duration could abort the load
+    /// generator instead of capping. Every path is checked now.
+    #[test]
+    fn deadline_after_survives_unrepresentable_durations() {
+        // the pathological case: now + Duration::MAX overflows, the
+        // capped fallback applies (and must not itself panic)
+        let capped = deadline_after(Duration::MAX);
+        if let Some(deadline) = capped {
+            assert!(deadline >= Instant::now(), "capped deadline is in the future");
+            // the cap is one hour, not Duration::MAX
+            assert!(deadline <= Instant::now() + Duration::from_secs(2 * 3600));
+        }
+        // the ordinary case: a representable duration lands ~d ahead
+        let before = Instant::now();
+        let deadline = deadline_after(Duration::from_secs(2)).expect("2s is representable");
+        assert!(deadline >= before + Duration::from_secs(2));
+        assert!(deadline <= before + Duration::from_secs(60), "no runaway deadline");
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * [`loadgen`] — closed- and open-loop load generation over mixed
 //!   job/program workloads ([`Mix`]), reporting latency/throughput
 //!   curves per shard-count and flush-policy setting (`mvap serve`).
+//!
+//! With `mvap serve --trace`, the front door and shard workers share a
+//! [`crate::telemetry::SpanRecorder`]: the client edge records
+//! admit/shed events and opens each sampled request's flow arrow, which
+//! the executing shard's reply span finishes (see [`crate::telemetry`]).
 
 pub mod histogram;
 pub mod front;

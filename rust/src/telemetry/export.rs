@@ -1,0 +1,553 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable) and a
+//! plain-text tree dump.
+//!
+//! The Chrome exporter emits:
+//!
+//! * sync `B`/`E` duration pairs for thread-bound spans (admit, flush,
+//!   exec, tile, program, step, reply), nested per `(pid, tid)` with
+//!   strict stack discipline — child ends are clamped to their parent
+//!   and zero-length spans are widened to 1 ns so the begin/end stack
+//!   never inverts;
+//! * async `b`/`e` pairs (category `req`, id = request id) for per-job
+//!   attribution spans, which overlap freely within a coalesced batch;
+//! * flow `s`/`f` events with id = request id, emitted at the midpoint
+//!   of the admit span (start) and the reply span (finish, binding point
+//!   `e`) — Perfetto draws the arrow from the client edge across any
+//!   steal or coalesce to the replying shard;
+//! * `i` instants for sheds and `M` metadata naming the timeline lanes
+//!   (pid 0 = client edge, pid 1 = engine pool, pid 100+N = shard N).
+//!
+//! Extra top-level keys (`otherData`, `metricsSnapshots`) are ignored by
+//! Perfetto but consumed by `tools/trace_check.py`.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::recorder::TraceData;
+use super::snapshot::MetricsSnapshot;
+use super::span::{Flow, Payload, SpanEvent, SpanKind};
+
+/// Kinds exported as sync `B`/`E` pairs (thread-bound, stack-nested).
+fn is_sync(kind: SpanKind) -> bool {
+    !matches!(kind, SpanKind::Job | SpanKind::Shed)
+}
+
+/// Serialize a drained trace plus metrics snapshots as Chrome
+/// trace-event JSON.
+pub fn chrome_trace(data: &TraceData, snapshots: &[MetricsSnapshot]) -> String {
+    // Partition events by thread lane; sync spans need per-lane stacks.
+    let mut lanes: BTreeMap<(u32, u32), Vec<&SpanEvent>> = BTreeMap::new();
+    for ev in &data.events {
+        lanes.entry((ev.pid, ev.tid)).or_default().push(ev);
+    }
+
+    // (ts_ns, rank, json) per emitted record; rank orders records that
+    // share a timestamp: E(0) before B(1) before everything else(2).
+    let mut records: Vec<(u64, u8, String)> = Vec::with_capacity(data.events.len() * 2 + 16);
+
+    for (&(pid, tid), evs) in &lanes {
+        let mut sync: Vec<&SpanEvent> = evs.iter().copied().filter(|e| is_sync(e.kind)).collect();
+        // Parents first: earlier start, then longer span wins ties.
+        sync.sort_by_key(|e| (e.start_ns, Reverse(e.end_ns)));
+        let mut lane_records: Vec<(u64, u8, String)> = Vec::with_capacity(sync.len() * 2);
+        // Stack of open span end times (already clamped).
+        let mut stack: Vec<u64> = Vec::new();
+        for ev in sync {
+            while let Some(&top) = stack.last() {
+                if top <= ev.start_ns {
+                    stack.pop();
+                    lane_records.push((top, 0, event_json("E", top, pid, tid, None, &[])));
+                } else {
+                    break;
+                }
+            }
+            // Widen instants to 1 ns, then clamp inside the parent so
+            // the B/E stack stays balanced.
+            let mut end = ev.end_ns.max(ev.start_ns + 1);
+            if let Some(&top) = stack.last() {
+                end = end.min(top);
+            }
+            lane_records.push((
+                ev.start_ns,
+                1,
+                event_json("B", ev.start_ns, pid, tid, Some(ev.kind.name()), &args_of(ev)),
+            ));
+            stack.push(end);
+            // Flow endpoints bind to the enclosing slice; the midpoint
+            // keeps them inside it after any float rounding.
+            let mid = ev.start_ns + (end - ev.start_ns) / 2;
+            match ev.flow {
+                Flow::Start => lane_records.push((mid, 2, flow_json("s", mid, pid, tid, ev.req, false))),
+                Flow::Finish => lane_records.push((mid, 2, flow_json("f", mid, pid, tid, ev.req, true))),
+                Flow::None => {}
+            }
+        }
+        while let Some(top) = stack.pop() {
+            lane_records.push((top, 0, event_json("E", top, pid, tid, None, &[])));
+        }
+        lane_records.sort_by_key(|&(ts, rank, _)| (ts, rank));
+        records.extend(lane_records);
+
+        // Async + instant events need no stack.
+        for ev in evs.iter().copied().filter(|e| !is_sync(e.kind)) {
+            match ev.kind {
+                SpanKind::Job => {
+                    let end = ev.end_ns.max(ev.start_ns + 1);
+                    records.push((
+                        ev.start_ns,
+                        2,
+                        async_json("b", ev.start_ns, pid, tid, ev.req, &args_of(ev)),
+                    ));
+                    records.push((end, 2, async_json("e", end, pid, tid, ev.req, &[])));
+                }
+                _ => {
+                    records.push((
+                        ev.start_ns,
+                        2,
+                        instant_json(ev.kind.name(), ev.start_ns, pid, tid, &args_of(ev)),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Metadata: name every lane that appeared.
+    let mut meta = String::new();
+    let mut last_pid = None;
+    for &(pid, tid) in lanes.keys() {
+        if last_pid != Some(pid) {
+            last_pid = Some(pid);
+            let pname = match pid {
+                0 => "client edge".to_string(),
+                1 => "engine pool".to_string(),
+                p => format!("shard {}", p - 100),
+            };
+            let _ = write!(
+                meta,
+                "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{pname}\"}}}},"
+            );
+        }
+        let tname = if pid == 0 { format!("caller {tid}") } else { format!("worker {tid}") };
+        let _ = write!(
+            meta,
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{tname}\"}}}},"
+        );
+    }
+
+    let body: Vec<String> = records.into_iter().map(|(_, _, j)| j).collect();
+    let snaps: Vec<String> = snapshots.iter().map(|s| s.to_json()).collect();
+    format!(
+        "{{\"traceEvents\":[{meta}{events}],\"displayTimeUnit\":\"ms\",\
+         \"otherData\":{{\"sample\":{sample},\"droppedSpans\":{dropped}}},\
+         \"metricsSnapshots\":[{snaps}]}}\n",
+        events = body.join(","),
+        sample = data.sample,
+        dropped = data.dropped,
+        snaps = snaps.join(","),
+    )
+}
+
+/// Microsecond timestamp with nanosecond resolution.
+fn ts_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+fn event_json(ph: &str, ts: u64, pid: u32, tid: u32, name: Option<&str>, args: &[(String, String)]) -> String {
+    let mut s = format!("{{\"ph\":\"{ph}\",\"ts\":{},\"pid\":{pid},\"tid\":{tid}", ts_us(ts));
+    if let Some(name) = name {
+        let _ = write!(s, ",\"name\":\"{name}\",\"cat\":\"mvap\"");
+    }
+    push_args(&mut s, args);
+    s.push('}');
+    s
+}
+
+fn async_json(ph: &str, ts: u64, pid: u32, tid: u32, req: u64, args: &[(String, String)]) -> String {
+    let mut s = format!(
+        "{{\"ph\":\"{ph}\",\"ts\":{},\"pid\":{pid},\"tid\":{tid},\"name\":\"job\",\
+         \"cat\":\"req\",\"id\":\"0x{req:x}\"",
+        ts_us(ts)
+    );
+    push_args(&mut s, args);
+    s.push('}');
+    s
+}
+
+fn flow_json(ph: &str, ts: u64, pid: u32, tid: u32, req: u64, bind_enclosing: bool) -> String {
+    let bp = if bind_enclosing { ",\"bp\":\"e\"" } else { "" };
+    format!(
+        "{{\"ph\":\"{ph}\",\"ts\":{},\"pid\":{pid},\"tid\":{tid},\"name\":\"req\",\
+         \"cat\":\"flow\",\"id\":\"0x{req:x}\"{bp}}}",
+        ts_us(ts)
+    )
+}
+
+fn instant_json(name: &str, ts: u64, pid: u32, tid: u32, args: &[(String, String)]) -> String {
+    let mut s = format!(
+        "{{\"ph\":\"i\",\"ts\":{},\"pid\":{pid},\"tid\":{tid},\"name\":\"{name}\",\
+         \"cat\":\"mvap\",\"s\":\"t\"",
+        ts_us(ts)
+    );
+    push_args(&mut s, args);
+    s.push('}');
+    s
+}
+
+fn push_args(s: &mut String, args: &[(String, String)]) {
+    if args.is_empty() {
+        return;
+    }
+    s.push_str(",\"args\":{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "\"{k}\":{v}");
+    }
+    s.push('}');
+}
+
+/// Payload → args key/value pairs (values are JSON literals).
+fn args_of(ev: &SpanEvent) -> Vec<(String, String)> {
+    let mut a: Vec<(String, String)> = Vec::new();
+    let kv = |k: &str, v: String| (k.to_string(), v);
+    if ev.req != 0 {
+        a.push(kv("req", format!("\"0x{:x}\"", ev.req)));
+    }
+    if ev.batch != 0 {
+        a.push(kv("batch", ev.batch.to_string()));
+    }
+    if ev.id != 0 {
+        a.push(kv("span", format!("\"0x{:x}\"", ev.id)));
+    }
+    match ev.payload {
+        Payload::None => {}
+        Payload::Admit { class } => a.push(kv("class", format!("\"{class}\""))),
+        Payload::Shed { class, closed } => {
+            a.push(kv("class", format!("\"{class}\"")));
+            a.push(kv("closed", closed.to_string()));
+        }
+        Payload::Flush { jobs, rows, stolen, reason } => {
+            a.push(kv("jobs", jobs.to_string()));
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("stolen", stolen.to_string()));
+            a.push(kv("reason", format!("\"{reason}\"")));
+        }
+        Payload::Exec { op, jobs, rows, radix, kernel_hits, kernel_misses, par_blocks } => {
+            a.push(kv("op", format!("\"{op}\"")));
+            a.push(kv("jobs", jobs.to_string()));
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("radix", radix.to_string()));
+            a.push(kv("kernelHits", kernel_hits.to_string()));
+            a.push(kv("kernelMisses", kernel_misses.to_string()));
+            a.push(kv("parBlocks", par_blocks.to_string()));
+        }
+        Payload::Tile { rows, live, segments } => {
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("live", live.to_string()));
+            a.push(kv("segments", segments.to_string()));
+        }
+        Payload::Job { op, rows, radix, digits, energy_j, delay_cycles, tiles, stats } => {
+            a.push(kv("op", format!("\"{op}\"")));
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("radix", radix.to_string()));
+            a.push(kv("digits", digits.to_string()));
+            a.push(kv("energyJ", format!("{energy_j:.17e}")));
+            a.push(kv("delayCycles", delay_cycles.to_string()));
+            a.push(kv("tiles", tiles.to_string()));
+            push_stats(&mut a, stats);
+        }
+        Payload::Program { steps, rows, energy_j, delay_cycles, stats } => {
+            a.push(kv("steps", steps.to_string()));
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("energyJ", format!("{energy_j:.17e}")));
+            a.push(kv("delayCycles", delay_cycles.to_string()));
+            push_stats(&mut a, stats);
+        }
+        Payload::Step { index, wave, rows, energy_j, delay_cycles, stats } => {
+            a.push(kv("index", index.to_string()));
+            a.push(kv("wave", wave.to_string()));
+            a.push(kv("rows", rows.to_string()));
+            a.push(kv("energyJ", format!("{energy_j:.17e}")));
+            a.push(kv("delayCycles", delay_cycles.to_string()));
+            push_stats(&mut a, stats);
+        }
+        Payload::Reply { queue_ns, latency_ns, stolen } => {
+            a.push(kv("queueNs", queue_ns.to_string()));
+            a.push(kv("latencyNs", latency_ns.to_string()));
+            a.push(kv("stolen", stolen.to_string()));
+        }
+    }
+    a
+}
+
+fn push_stats(a: &mut Vec<(String, String)>, stats: super::span::StatsDelta) {
+    a.push(("compareCycles".to_string(), stats.compare_cycles.to_string()));
+    a.push(("writeCycles".to_string(), stats.write_cycles.to_string()));
+    a.push(("sets".to_string(), stats.sets.to_string()));
+    a.push(("resets".to_string(), stats.resets.to_string()));
+    a.push(("rowsWritten".to_string(), stats.rows_written.to_string()));
+}
+
+/// Human-readable per-request tree dump.
+pub fn text_tree(data: &TraceData) -> String {
+    let mut out = format!(
+        "trace: {} events, {} dropped, sample 1/{}\n",
+        data.events.len(),
+        data.dropped,
+        data.sample.max(1)
+    );
+    // batch id → shared (req-less) batch events
+    let mut batch_shared: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    // req → its own events
+    let mut by_req: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    let mut orphans: Vec<&SpanEvent> = Vec::new();
+    for ev in &data.events {
+        if ev.req != 0 {
+            by_req.entry(ev.req).or_default().push(ev);
+        } else if ev.batch != 0 {
+            batch_shared.entry(ev.batch).or_default().push(ev);
+        } else {
+            orphans.push(ev);
+        }
+    }
+    for (req, evs) in &by_req {
+        let batches: Vec<u64> = {
+            let mut b: Vec<u64> = evs.iter().map(|e| e.batch).filter(|&b| b != 0).collect();
+            b.sort_unstable();
+            b.dedup();
+            b
+        };
+        out.push_str(&format!("req 0x{req:x}\n"));
+        let mut all: Vec<&SpanEvent> = evs.clone();
+        for b in &batches {
+            if let Some(shared) = batch_shared.get(b) {
+                all.extend(shared.iter().copied());
+            }
+        }
+        all.sort_by_key(|e| (e.start_ns, Reverse(e.end_ns)));
+        let mut stack: Vec<u64> = Vec::new();
+        for ev in all {
+            while stack.last().is_some_and(|&top| top <= ev.start_ns) {
+                stack.pop();
+            }
+            out.push_str(&tree_line(ev, 1 + stack.len()));
+            stack.push(ev.end_ns.max(ev.start_ns + 1));
+        }
+    }
+    if !orphans.is_empty() {
+        out.push_str("unattributed\n");
+        for ev in orphans {
+            out.push_str(&tree_line(ev, 1));
+        }
+    }
+    out
+}
+
+fn tree_line(ev: &SpanEvent, depth: usize) -> String {
+    let pad = "  ".repeat(depth);
+    let lane = match ev.pid {
+        0 => format!("edge/{}", ev.tid),
+        1 => format!("pool/{}", ev.tid),
+        p => format!("shard{}/{}", p - 100, ev.tid),
+    };
+    let dur_us = (ev.end_ns.saturating_sub(ev.start_ns)) as f64 / 1000.0;
+    let mut extra = String::new();
+    if ev.batch != 0 {
+        let _ = write!(extra, " batch={}", ev.batch);
+    }
+    match ev.payload {
+        Payload::Job { energy_j, rows, .. } => {
+            let _ = write!(extra, " rows={rows} energy={energy_j:.3e}J");
+        }
+        Payload::Program { energy_j, steps, .. } => {
+            let _ = write!(extra, " steps={steps} energy={energy_j:.3e}J");
+        }
+        Payload::Step { index, wave, .. } => {
+            let _ = write!(extra, " step={index} wave={wave}");
+        }
+        Payload::Reply { queue_ns, latency_ns, stolen } => {
+            let _ = write!(
+                extra,
+                " queue={:.1}us latency={:.1}us{}",
+                queue_ns as f64 / 1000.0,
+                latency_ns as f64 / 1000.0,
+                if stolen { " stolen" } else { "" }
+            );
+        }
+        Payload::Flush { jobs, rows, reason, .. } => {
+            let _ = write!(extra, " jobs={jobs} rows={rows} reason={reason}");
+        }
+        Payload::Exec { op, jobs, rows, .. } => {
+            let _ = write!(extra, " op={op} jobs={jobs} rows={rows}");
+        }
+        Payload::Tile { rows, live, segments } => {
+            let _ = write!(extra, " rows={rows} live={live} segs={segments}");
+        }
+        Payload::Admit { class } | Payload::Shed { class, .. } => {
+            let _ = write!(extra, " class={class}");
+        }
+        Payload::None => {}
+    }
+    format!(
+        "{pad}{:<8} {lane:<10} @{:>10.3}us +{dur_us:.3}us{extra}\n",
+        ev.kind.name(),
+        ev.start_ns as f64 / 1000.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::StatsDelta;
+
+    fn ev(
+        kind: SpanKind,
+        start: u64,
+        end: u64,
+        pid: u32,
+        tid: u32,
+        req: u64,
+        batch: u64,
+        flow: Flow,
+        payload: Payload,
+    ) -> SpanEvent {
+        SpanEvent { kind, start_ns: start, end_ns: end, pid, tid, req, batch, id: 0, flow, payload }
+    }
+
+    fn data(events: Vec<SpanEvent>) -> TraceData {
+        TraceData { events, dropped: 0, sample: 1 }
+    }
+
+    /// Count B/E balance per (pid, tid) by scanning the emitted JSON.
+    fn be_balanced(json: &str) -> bool {
+        let b = json.matches("\"ph\":\"B\"").count();
+        let e = json.matches("\"ph\":\"E\"").count();
+        b == e
+    }
+
+    #[test]
+    fn emits_balanced_sync_pairs_and_metadata() {
+        let t = data(vec![
+            ev(SpanKind::Flush, 100, 500, 100, 0, 0, 1, Flow::None, Payload::Flush {
+                jobs: 2,
+                rows: 128,
+                stolen: 0,
+                reason: "size",
+            }),
+            ev(SpanKind::Exec, 120, 480, 100, 0, 0, 1, Flow::None, Payload::None),
+            ev(SpanKind::Tile, 150, 400, 100, 0, 0, 1, Flow::None, Payload::Tile {
+                rows: 256,
+                live: 128,
+                segments: 2,
+            }),
+        ]);
+        let json = chrome_trace(&t, &[]);
+        assert!(be_balanced(&json), "json: {json}");
+        assert!(json.contains("\"name\":\"process_name\""));
+        assert!(json.contains("shard 0"));
+        assert!(json.contains("\"reason\":\"size\""));
+        assert!(json.contains("\"droppedSpans\":0"));
+    }
+
+    #[test]
+    fn clamps_children_and_widens_instants() {
+        // child claims to outlive its parent; zero-width span at 100
+        let t = data(vec![
+            ev(SpanKind::Exec, 100, 200, 100, 0, 0, 0, Flow::None, Payload::None),
+            ev(SpanKind::Tile, 150, 300, 100, 0, 0, 0, Flow::None, Payload::None),
+            ev(SpanKind::Reply, 400, 400, 100, 0, 7, 0, Flow::None, Payload::None),
+        ]);
+        let json = chrome_trace(&t, &[]);
+        assert!(be_balanced(&json));
+        // child E clamped to 200 (= 0.200 us), not 300
+        assert!(!json.contains("\"ph\":\"E\",\"ts\":0.300"), "json: {json}");
+        // reply widened to [400, 401] ns
+        assert!(json.contains("\"ph\":\"E\",\"ts\":0.401"), "json: {json}");
+    }
+
+    #[test]
+    fn flows_and_async_jobs_carry_request_ids() {
+        let t = data(vec![
+            ev(SpanKind::Admit, 10, 50, 0, 0, 7, 0, Flow::Start, Payload::Admit { class: "batch" }),
+            ev(SpanKind::Job, 100, 200, 100, 0, 7, 1, Flow::None, Payload::Job {
+                op: "add",
+                rows: 64,
+                radix: 3,
+                digits: 4,
+                energy_j: 1.5e-9,
+                delay_cycles: 10,
+                tiles: 1,
+                stats: StatsDelta::default(),
+            }),
+            ev(SpanKind::Reply, 210, 260, 100, 0, 7, 1, Flow::Finish, Payload::Reply {
+                queue_ns: 90,
+                latency_ns: 250,
+                stolen: true,
+            }),
+        ]);
+        let json = chrome_trace(&t, &[]);
+        assert!(json.contains("\"ph\":\"s\"") && json.contains("\"ph\":\"f\""), "json: {json}");
+        assert!(json.contains("\"bp\":\"e\""));
+        assert!(json.contains("\"ph\":\"b\"") && json.contains("\"ph\":\"e\""));
+        assert!(json.matches("\"id\":\"0x7\"").count() >= 4);
+        assert!(json.contains("\"energyJ\":1.5"));
+        assert!(json.contains("\"stolen\":true"));
+    }
+
+    #[test]
+    fn shed_is_an_instant() {
+        let t = data(vec![ev(
+            SpanKind::Shed,
+            10,
+            10,
+            0,
+            0,
+            9,
+            0,
+            Flow::None,
+            Payload::Shed { class: "interactive", closed: false },
+        )]);
+        let json = chrome_trace(&t, &[]);
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"name\":\"shed\""));
+        assert!(!json.contains("\"ph\":\"B\""));
+    }
+
+    #[test]
+    fn text_tree_groups_by_request() {
+        let t = data(vec![
+            ev(SpanKind::Admit, 10, 50, 0, 0, 7, 0, Flow::Start, Payload::Admit { class: "batch" }),
+            ev(SpanKind::Flush, 100, 500, 100, 0, 0, 3, Flow::None, Payload::Flush {
+                jobs: 1,
+                rows: 64,
+                stolen: 0,
+                reason: "deadline",
+            }),
+            ev(SpanKind::Job, 120, 400, 100, 0, 7, 3, Flow::None, Payload::Job {
+                op: "add",
+                rows: 64,
+                radix: 3,
+                digits: 4,
+                energy_j: 1.5e-9,
+                delay_cycles: 10,
+                tiles: 1,
+                stats: StatsDelta::default(),
+            }),
+            ev(SpanKind::Reply, 410, 460, 100, 0, 7, 3, Flow::Finish, Payload::Reply {
+                queue_ns: 90,
+                latency_ns: 450,
+                stolen: false,
+            }),
+        ]);
+        let tree = text_tree(&t);
+        assert!(tree.contains("req 0x7"), "tree:\n{tree}");
+        assert!(tree.contains("admit"));
+        assert!(tree.contains("flush")); // batch-shared span pulled into the request
+        assert!(tree.contains("reason=deadline"));
+        assert!(tree.contains("latency=0.5us") || tree.contains("latency=0.4"), "tree:\n{tree}");
+    }
+}

@@ -1,0 +1,37 @@
+//! Low-overhead structured tracing for the request path.
+//!
+//! The telemetry layer answers "where did request #4812's 3 ms go, and
+//! which coalesced batch, shard, and kernel did it ride?" without
+//! touching the hot word loops:
+//!
+//! * [`span`] — the typed event model: [`SpanKind`] taxonomy
+//!   (admit → flush → exec → tile → job/program/step → reply) and
+//!   `Copy` domain payloads (rows, radix, modeled energy J, delay
+//!   cycles, [`crate::ap::ApStats`] deltas, kernel hit/miss, stolen
+//!   flag, parallel block count).
+//! * [`recorder`] — bounded drop-oldest per-thread sinks behind a
+//!   [`Tracer`] handle that is a true no-op when off, and head sampling
+//!   keyed by request id so a sampled request keeps its entire causal
+//!   chain (batches are armed if *any* member is sampled).
+//! * [`export`] — Chrome trace-event JSON (load in Perfetto; flow
+//!   arrows follow a request across steal and coalesce boundaries) and
+//!   a plain-text tree dump.
+//! * [`snapshot`] — point-in-time [`crate::coordinator::Metrics`]
+//!   snapshots with histogram quantiles, serialized to JSON for
+//!   scrapers and for `tools/trace_check.py`'s energy-reconciliation
+//!   check.
+//!
+//! See the "Observability" section of `docs/ARCHITECTURE.md` for the
+//! span taxonomy, the sampling rule, and the zero-cost-when-off
+//! contract; `tools/trace_check.py` enforces trace well-formedness in
+//! CI and `tools/perf_gate.py` enforces the overhead budget.
+
+pub mod export;
+pub mod recorder;
+pub mod snapshot;
+pub mod span;
+
+pub use export::{chrome_trace, text_tree};
+pub use recorder::{SpanRecorder, Tracer, TraceData, DEFAULT_SINK_CAPACITY, PROGRAM_REQ_BIT};
+pub use snapshot::{MetricsSnapshot, SnapshotRegistry};
+pub use span::{Flow, Payload, SpanEvent, SpanKind, StatsDelta};

@@ -1,0 +1,509 @@
+//! The recording machinery: bounded per-thread sinks, head sampling, and
+//! the tracer handle threaded through the engine and serving layers.
+//!
+//! Design constraints (the "zero-cost when off" contract):
+//!
+//! * **Off means off.** [`Tracer::Off`] is a unit variant; every record
+//!   method is an inlineable `match` that falls through without reading
+//!   the clock, taking a lock, or touching an atomic. The hot word loops
+//!   never see a tracer at all — instrumentation sits at tile/step
+//!   granularity.
+//! * **No locks or atomics on the record path.** Each worker thread owns
+//!   its [`ActiveTracer`], whose [`SinkBuf`] is plain memory; sinks are
+//!   pushed into the shared recorder under a mutex only at worker
+//!   shutdown ([`ActiveTracer::flush`]) and at the client edge (rare,
+//!   sampled-only).
+//! * **Bounded.** Sinks are drop-oldest rings of
+//!   [`DEFAULT_SINK_CAPACITY`] events; drops are counted, never silent —
+//!   the exporter surfaces `droppedSpans` and `tools/trace_check.py`
+//!   fails on it unless explicitly allowed.
+//! * **Head sampling keeps causal chains whole.** Sampling is a pure
+//!   function of the request id ([`SpanRecorder::sampled`]), decided at
+//!   admission; a coalesced batch is "armed" if *any* member is sampled,
+//!   so a sampled request's shared flush/exec/tile spans are always
+//!   present even when its batchmates are not sampled.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::span::{Flow, Payload, SpanEvent, SpanKind};
+
+/// Default per-sink ring capacity (events), chosen so a worker thread's
+/// sink holds a full smoke run while staying a few MiB at most.
+pub const DEFAULT_SINK_CAPACITY: usize = 1 << 16;
+
+/// High bit marking a synthetic request id allocated for a program
+/// submission (programs have no job id of their own).
+pub const PROGRAM_REQ_BIT: u64 = 1 << 63;
+
+/// `splitmix64` finalizer — decorrelates sequential request ids before
+/// the sampling modulus so `--trace-sample N` takes an unbiased 1-in-N
+/// slice even of a strictly sequential id stream.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Drop-oldest bounded event buffer. One per recording thread; plain
+/// memory, no interior synchronization.
+#[derive(Debug)]
+pub struct SinkBuf {
+    events: VecDeque<SpanEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl SinkBuf {
+    pub fn new(cap: usize) -> Self {
+        SinkBuf { events: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    /// Append, evicting the oldest event when full.
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// Everything drained out of a recorder: the merged event stream (sorted
+/// by start time) plus the drop counter and the sampling modulus the
+/// trace was taken with.
+#[derive(Debug)]
+pub struct TraceData {
+    pub events: Vec<SpanEvent>,
+    pub dropped: u64,
+    pub sample: u64,
+}
+
+/// The shared trace store. Cheap to share (`Arc`), but the hot path
+/// never touches it — worker threads record into their own
+/// [`ActiveTracer`] sinks and hand them over here once, at flush.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    origin: Instant,
+    sample: u64,
+    capacity: usize,
+    drained: Mutex<Vec<SinkBuf>>,
+    /// Client-edge sink: admit/shed spans happen on arbitrary caller
+    /// threads, so they share one mutex-guarded buffer. Locked only for
+    /// sampled requests — unsampled submissions skip it entirely.
+    edge: Mutex<SinkBuf>,
+    next_batch: AtomicU64,
+    next_program_req: AtomicU64,
+}
+
+/// Lane allocator for client-edge threads: each caller thread gets a
+/// stable `tid` on the pid-0 timeline, assigned on first sampled submit.
+static NEXT_EDGE_LANE: AtomicU32 = AtomicU32::new(0);
+thread_local! {
+    static EDGE_LANE: u32 = NEXT_EDGE_LANE.fetch_add(1, Ordering::Relaxed);
+}
+
+impl SpanRecorder {
+    /// `sample` is the head-sampling modulus: 0 or 1 records every
+    /// request; `N > 1` records ~1 in N requests (plus whole batches any
+    /// sampled request rides in).
+    pub fn new(sample: u64) -> Arc<Self> {
+        Self::with_capacity(sample, DEFAULT_SINK_CAPACITY)
+    }
+
+    pub fn with_capacity(sample: u64, capacity: usize) -> Arc<Self> {
+        Arc::new(SpanRecorder {
+            origin: Instant::now(),
+            sample,
+            capacity,
+            drained: Mutex::new(Vec::new()),
+            edge: Mutex::new(SinkBuf::new(capacity)),
+            next_batch: AtomicU64::new(1),
+            next_program_req: AtomicU64::new(1),
+        })
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    pub fn sink_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Head-sampling decision for a request id. Pure and stable: every
+    /// layer that sees the same id makes the same call, which is what
+    /// keeps a sampled request's causal chain unbroken.
+    pub fn sampled(&self, req: u64) -> bool {
+        self.sample <= 1 || splitmix64(req) % self.sample == 0
+    }
+
+    /// Nanoseconds since the recorder's origin (saturating: a clock that
+    /// reads before the origin records 0 rather than panicking).
+    pub fn now_ns(&self) -> u64 {
+        Instant::now().saturating_duration_since(self.origin).as_nanos() as u64
+    }
+
+    /// Allocate a coalesced-batch id (ids start at 1; 0 means "none").
+    pub fn next_batch_id(&self) -> u64 {
+        self.next_batch.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate a synthetic request id for a program submission.
+    pub fn next_program_req(&self) -> u64 {
+        PROGRAM_REQ_BIT | self.next_program_req.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Stable client-edge thread lane (tid on the pid-0 timeline).
+    pub fn edge_lane(&self) -> u32 {
+        EDGE_LANE.with(|l| *l)
+    }
+
+    /// Record a client-edge event (admit/shed). Callers only invoke this
+    /// for sampled requests, so the mutex is off the common path.
+    pub fn record_edge(&self, ev: SpanEvent) {
+        self.edge.lock().unwrap().push(ev);
+    }
+
+    /// Accept a worker thread's finished sink.
+    pub fn adopt(&self, sink: SinkBuf) {
+        self.drained.lock().unwrap().push(sink);
+    }
+
+    /// Merge every adopted sink plus the edge sink into one event stream
+    /// sorted by start time. Workers must have flushed (the serving
+    /// layer joins them before draining); anything recorded afterwards
+    /// lands in a fresh drain.
+    pub fn drain(&self) -> TraceData {
+        let mut sinks = std::mem::take(&mut *self.drained.lock().unwrap());
+        {
+            let mut edge = self.edge.lock().unwrap();
+            let cap = edge.cap;
+            sinks.push(std::mem::replace(&mut *edge, SinkBuf::new(cap)));
+        }
+        let mut dropped = 0;
+        let mut events = Vec::with_capacity(sinks.iter().map(|s| s.len()).sum());
+        for sink in sinks {
+            dropped += sink.dropped;
+            events.extend(sink.events);
+        }
+        events.sort_by_key(|e| (e.start_ns, e.end_ns));
+        TraceData { events, dropped, sample: self.sample }
+    }
+}
+
+/// Per-thread recording state behind [`Tracer::On`].
+#[derive(Debug)]
+pub struct ActiveTracer {
+    recorder: Arc<SpanRecorder>,
+    sink: SinkBuf,
+    pid: u32,
+    tid: u32,
+    /// Whether the work currently running on this thread belongs to a
+    /// sampled causal chain. Toggled by the worker around dispatch;
+    /// while false, `begin`/`span` are no-ops that never read the clock.
+    armed: bool,
+    /// Current coalesced-batch id (0 = none).
+    batch: u64,
+    /// Per-thread span-id sequence.
+    seq: u64,
+}
+
+/// The tracer handle threaded through engine and workers. `Off` is the
+/// default and is free: one word, every method an inlined no-op.
+#[derive(Debug, Default)]
+pub enum Tracer {
+    #[default]
+    Off,
+    On(Box<ActiveTracer>),
+}
+
+impl Tracer {
+    pub fn off() -> Self {
+        Tracer::Off
+    }
+
+    /// Create a recording tracer for one worker thread. `pid`/`tid`
+    /// name the timeline lane (see [`SpanEvent`] field docs).
+    pub fn attach(recorder: &Arc<SpanRecorder>, pid: u32, tid: u32) -> Self {
+        Tracer::On(Box::new(ActiveTracer {
+            sink: SinkBuf::new(recorder.sink_capacity()),
+            recorder: Arc::clone(recorder),
+            pid,
+            tid,
+            armed: false,
+            batch: 0,
+            seq: 0,
+        }))
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, Tracer::On(_))
+    }
+
+    /// True when spans recorded right now would be kept.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        match self {
+            Tracer::Off => false,
+            Tracer::On(t) => t.armed,
+        }
+    }
+
+    /// Arm or disarm recording for the work about to run on this thread.
+    pub fn set_armed(&mut self, armed: bool) {
+        if let Tracer::On(t) = self {
+            t.armed = armed;
+        }
+    }
+
+    /// Head-sampling decision (false when tracing is off).
+    pub fn sampled(&self, req: u64) -> bool {
+        match self {
+            Tracer::Off => false,
+            Tracer::On(t) => t.recorder.sampled(req),
+        }
+    }
+
+    /// Timestamp for a span about to open. Returns 0 — without reading
+    /// the clock — unless armed; `span()` treats a 0 start as "record
+    /// from the recorder origin", but disarmed spans are dropped before
+    /// that matters.
+    #[inline]
+    pub fn begin(&self) -> u64 {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(t) => {
+                if t.armed {
+                    t.recorder.now_ns()
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// Open a coalesced-batch scope: subsequent spans carry the returned
+    /// batch id. Returns 0 when off/disarmed.
+    pub fn begin_batch(&mut self) -> u64 {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(t) => {
+                if !t.armed {
+                    return 0;
+                }
+                t.batch = t.recorder.next_batch_id();
+                t.batch
+            }
+        }
+    }
+
+    pub fn clear_batch(&mut self) {
+        if let Tracer::On(t) = self {
+            t.batch = 0;
+        }
+    }
+
+    pub fn batch(&self) -> u64 {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(t) => t.batch,
+        }
+    }
+
+    /// Record a span that started at `start_ns` (from [`Tracer::begin`])
+    /// and ends now. Returns the span id, 0 when off/disarmed.
+    pub fn span(&mut self, kind: SpanKind, start_ns: u64, req: u64, flow: Flow, payload: Payload) -> u64 {
+        let end = match self {
+            Tracer::Off => return 0,
+            Tracer::On(t) => {
+                if !t.armed {
+                    return 0;
+                }
+                t.recorder.now_ns()
+            }
+        };
+        self.span_at(kind, start_ns, end.max(start_ns), req, flow, payload)
+    }
+
+    /// Record a span with explicit bounds. Returns the span id, 0 when
+    /// off/disarmed.
+    pub fn span_at(
+        &mut self,
+        kind: SpanKind,
+        start_ns: u64,
+        end_ns: u64,
+        req: u64,
+        flow: Flow,
+        payload: Payload,
+    ) -> u64 {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(t) => {
+                if !t.armed {
+                    return 0;
+                }
+                t.seq += 1;
+                let id = span_id(t.pid, t.tid, t.seq);
+                t.sink.push(SpanEvent {
+                    kind,
+                    start_ns,
+                    end_ns: end_ns.max(start_ns),
+                    pid: t.pid,
+                    tid: t.tid,
+                    req,
+                    batch: t.batch,
+                    id,
+                    flow,
+                    payload,
+                });
+                id
+            }
+        }
+    }
+
+    /// Record an instant event (zero duration) at the current time.
+    pub fn instant(&mut self, kind: SpanKind, req: u64, flow: Flow, payload: Payload) -> u64 {
+        let now = match self {
+            Tracer::Off => return 0,
+            Tracer::On(t) => {
+                if !t.armed {
+                    return 0;
+                }
+                t.recorder.now_ns()
+            }
+        };
+        self.span_at(kind, now, now, req, flow, payload)
+    }
+
+    /// Hand this thread's sink to the recorder. Call once, when the
+    /// worker is done; the tracer becomes `Off`.
+    pub fn flush(&mut self) {
+        if let Tracer::On(t) = std::mem::take(self) {
+            if !t.sink.is_empty() || t.sink.dropped > 0 {
+                t.recorder.adopt(t.sink);
+            }
+        }
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<SpanRecorder>> {
+        match self {
+            Tracer::Off => None,
+            Tracer::On(t) => Some(&t.recorder),
+        }
+    }
+}
+
+/// Globally unique span id: timeline lane in the high bits, per-thread
+/// sequence in the low 40.
+fn span_id(pid: u32, tid: u32, seq: u64) -> u64 {
+    ((pid as u64) << 48) | (((tid as u64) & 0xff) << 40) | (seq & 0xff_ffff_ffff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_drops_oldest_and_counts() {
+        let mut sink = SinkBuf::new(2);
+        let ev = |req| SpanEvent {
+            kind: SpanKind::Job,
+            start_ns: req,
+            end_ns: req + 1,
+            pid: 100,
+            tid: 0,
+            req,
+            batch: 0,
+            id: 0,
+            flow: Flow::None,
+            payload: Payload::None,
+        };
+        sink.push(ev(1));
+        sink.push(ev(2));
+        sink.push(ev(3));
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.dropped(), 1);
+        let reqs: Vec<u64> = sink.events.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, vec![2, 3]); // oldest (req 1) evicted
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_one_in_n() {
+        let rec = SpanRecorder::new(4);
+        let hits: Vec<u64> = (0..4096).filter(|&r| rec.sampled(r)).collect();
+        // deterministic: a second pass agrees exactly
+        for &r in &hits {
+            assert!(rec.sampled(r));
+        }
+        // unbiased enough: 1-in-4 of 4096 ids within a loose band
+        assert!(hits.len() > 640 && hits.len() < 1500, "got {}", hits.len());
+        // sample<=1 records everything
+        let all = SpanRecorder::new(1);
+        assert!((0..64).all(|r| all.sampled(r)));
+        let zero = SpanRecorder::new(0);
+        assert!((0..64).all(|r| zero.sampled(r)));
+    }
+
+    #[test]
+    fn off_and_disarmed_record_nothing() {
+        let mut off = Tracer::off();
+        assert_eq!(off.begin(), 0);
+        assert_eq!(off.span(SpanKind::Job, 0, 1, Flow::None, Payload::None), 0);
+        assert_eq!(off.begin_batch(), 0);
+
+        let rec = SpanRecorder::new(1);
+        let mut t = Tracer::attach(&rec, 100, 0);
+        // attached but disarmed: still records nothing
+        assert!(!t.armed());
+        assert_eq!(t.begin(), 0);
+        assert_eq!(t.span(SpanKind::Job, 0, 1, Flow::None, Payload::None), 0);
+        t.flush();
+        assert!(rec.drain().events.is_empty());
+    }
+
+    #[test]
+    fn armed_spans_reach_drain_sorted() {
+        let rec = SpanRecorder::new(1);
+        let mut t = Tracer::attach(&rec, 100, 0);
+        t.set_armed(true);
+        let b = t.begin_batch();
+        assert!(b > 0);
+        let id1 = t.span_at(SpanKind::Job, 10, 20, 7, Flow::None, Payload::None);
+        let id2 = t.span_at(SpanKind::Reply, 5, 25, 7, Flow::Finish, Payload::None);
+        assert!(id1 != 0 && id2 != 0 && id1 != id2);
+        t.flush();
+        let data = rec.drain();
+        assert_eq!(data.events.len(), 2);
+        // sorted by start time: the reply (start 5) comes first
+        assert_eq!(data.events[0].kind, SpanKind::Reply);
+        assert_eq!(data.events[0].batch, b);
+        assert_eq!(data.dropped, 0);
+        assert_eq!(data.sample, 1);
+    }
+
+    #[test]
+    fn program_req_ids_carry_the_marker_bit() {
+        let rec = SpanRecorder::new(1);
+        let a = rec.next_program_req();
+        let b = rec.next_program_req();
+        assert_ne!(a, b);
+        assert!(a & PROGRAM_REQ_BIT != 0);
+        assert!(b & PROGRAM_REQ_BIT != 0);
+    }
+}

@@ -1,0 +1,292 @@
+//! Point-in-time metrics snapshots serialized to JSON for scrapers.
+//!
+//! A [`MetricsSnapshot`] freezes one [`Metrics`] value — every counter,
+//! the derived ratios as explicit `Option`s (never NaN), and the latency
+//! histogram's headline quantiles — under a label and scope. A
+//! [`SnapshotRegistry`] collects them over a run; the Chrome-trace
+//! exporter embeds the registry under a `metricsSnapshots` top-level key
+//! (ignored by Perfetto, consumed by `tools/trace_check.py` for the
+//! energy-reconciliation check).
+
+use crate::coordinator::Metrics;
+
+/// A frozen, serializable view of one [`Metrics`] value.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Free-form label ("serve sweep 0", "shard 2", ...).
+    pub label: String,
+    /// `"aggregate"` for merged metrics, `"shard"` for one worker's.
+    pub scope: &'static str,
+    pub jobs: u64,
+    pub rows: u64,
+    pub digit_ops: u64,
+    pub modeled_energy_j: f64,
+    pub busy_ns: u128,
+    pub tiles: u64,
+    pub tile_capacity_rows: u64,
+    pub tile_live_rows: u64,
+    pub solo_jobs: u64,
+    pub coalesced_jobs: u64,
+    pub batches: u64,
+    pub stolen_jobs: u64,
+    pub kernel_hits: u64,
+    pub kernel_misses: u64,
+    pub reduce_rounds: u64,
+    pub reduce_rows_moved: u64,
+    pub search_jobs: u64,
+    pub search_passes: u64,
+    pub programs: u64,
+    pub program_steps: u64,
+    pub fused_steps: u64,
+    pub resident_reuses: u64,
+    pub par_scopes: u64,
+    pub par_blocks: u64,
+    pub par_capacity: u64,
+    /// [`Metrics::fill_rate_opt`] — `None` when nothing was dispatched.
+    pub fill_rate: Option<f64>,
+    /// [`Metrics::par_utilization_opt`] — `None` when no scope ran.
+    pub par_utilization: Option<f64>,
+    pub latency_count: u64,
+    pub latency_mean_ns: Option<f64>,
+    pub latency_min_ns: Option<f64>,
+    pub latency_max_ns: Option<f64>,
+    pub latency_p50_ns: Option<f64>,
+    pub latency_p95_ns: Option<f64>,
+    pub latency_p99_ns: Option<f64>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot merged (cross-shard) metrics.
+    pub fn aggregate(label: impl Into<String>, m: &Metrics) -> Self {
+        Self::capture(label.into(), "aggregate", m)
+    }
+
+    /// Snapshot one shard/worker's metrics.
+    pub fn shard(label: impl Into<String>, m: &Metrics) -> Self {
+        Self::capture(label.into(), "shard", m)
+    }
+
+    fn capture(label: String, scope: &'static str, m: &Metrics) -> Self {
+        MetricsSnapshot {
+            label,
+            scope,
+            jobs: m.jobs,
+            rows: m.rows,
+            digit_ops: m.digit_ops,
+            modeled_energy_j: m.modeled_energy_j,
+            busy_ns: m.busy.as_nanos(),
+            tiles: m.tiles,
+            tile_capacity_rows: m.tile_capacity_rows,
+            tile_live_rows: m.tile_live_rows,
+            solo_jobs: m.solo_jobs,
+            coalesced_jobs: m.coalesced_jobs,
+            batches: m.batches,
+            stolen_jobs: m.stolen_jobs,
+            kernel_hits: m.kernel_hits,
+            kernel_misses: m.kernel_misses,
+            reduce_rounds: m.reduce_rounds,
+            reduce_rows_moved: m.reduce_rows_moved,
+            search_jobs: m.search_jobs,
+            search_passes: m.search_passes,
+            programs: m.programs,
+            program_steps: m.program_steps,
+            fused_steps: m.fused_steps,
+            resident_reuses: m.resident_reuses,
+            par_scopes: m.par_scopes,
+            par_blocks: m.par_blocks,
+            par_capacity: m.par_capacity,
+            fill_rate: m.fill_rate_opt(),
+            par_utilization: m.par_utilization_opt(),
+            latency_count: m.latency.count(),
+            latency_mean_ns: m.latency.mean().map(|d| d.as_nanos() as f64),
+            latency_min_ns: m.latency.min().map(|d| d.as_nanos() as f64),
+            latency_max_ns: m.latency.max().map(|d| d.as_nanos() as f64),
+            latency_p50_ns: m.latency.quantile_ns(0.50),
+            latency_p95_ns: m.latency.quantile_ns(0.95),
+            latency_p99_ns: m.latency.quantile_ns(0.99),
+        }
+    }
+
+    /// Serialize as one JSON object. `Option` ratios become `null`,
+    /// never NaN — JSON has no NaN literal and scrapers should not have
+    /// to guess.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push('{');
+        push_str_field(&mut s, "label", &self.label);
+        s.push_str(&format!(",\"scope\":\"{}\"", self.scope));
+        for (k, v) in [
+            ("jobs", self.jobs),
+            ("rows", self.rows),
+            ("digitOps", self.digit_ops),
+            ("tiles", self.tiles),
+            ("tileCapacityRows", self.tile_capacity_rows),
+            ("tileLiveRows", self.tile_live_rows),
+            ("soloJobs", self.solo_jobs),
+            ("coalescedJobs", self.coalesced_jobs),
+            ("batches", self.batches),
+            ("stolenJobs", self.stolen_jobs),
+            ("kernelHits", self.kernel_hits),
+            ("kernelMisses", self.kernel_misses),
+            ("reduceRounds", self.reduce_rounds),
+            ("reduceRowsMoved", self.reduce_rows_moved),
+            ("searchJobs", self.search_jobs),
+            ("searchPasses", self.search_passes),
+            ("programs", self.programs),
+            ("programSteps", self.program_steps),
+            ("fusedSteps", self.fused_steps),
+            ("residentReuses", self.resident_reuses),
+            ("parScopes", self.par_scopes),
+            ("parBlocks", self.par_blocks),
+            ("parCapacity", self.par_capacity),
+            ("latencyCount", self.latency_count),
+        ] {
+            s.push_str(&format!(",\"{k}\":{v}"));
+        }
+        s.push_str(&format!(",\"busyNs\":{}", self.busy_ns));
+        s.push_str(&format!(",\"modeledEnergyJ\":{:.17e}", self.modeled_energy_j));
+        for (k, v) in [
+            ("fillRate", self.fill_rate),
+            ("parUtilization", self.par_utilization),
+            ("latencyMeanNs", self.latency_mean_ns),
+            ("latencyMinNs", self.latency_min_ns),
+            ("latencyMaxNs", self.latency_max_ns),
+            ("latencyP50Ns", self.latency_p50_ns),
+            ("latencyP95Ns", self.latency_p95_ns),
+            ("latencyP99Ns", self.latency_p99_ns),
+        ] {
+            match v {
+                Some(x) => s.push_str(&format!(",\"{k}\":{}", fmt_f64(x))),
+                None => s.push_str(&format!(",\"{k}\":null")),
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Ordered collection of snapshots taken over a run.
+#[derive(Debug, Default)]
+pub struct SnapshotRegistry {
+    snaps: Vec<MetricsSnapshot>,
+}
+
+impl SnapshotRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, snap: MetricsSnapshot) {
+        self.snaps.push(snap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snaps.is_empty()
+    }
+
+    pub fn snapshots(&self) -> &[MetricsSnapshot] {
+        &self.snaps
+    }
+
+    /// Serialize as a JSON array.
+    pub fn to_json(&self) -> String {
+        let body: Vec<String> = self.snaps.iter().map(|s| s.to_json()).collect();
+        format!("[{}]", body.join(","))
+    }
+}
+
+/// JSON-safe f64: finite values round-trip via `{:.17e}`; non-finite
+/// values (which the guarded ratios should already have prevented)
+/// degrade to `null`.
+fn fmt_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.17e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Append `"key":"escaped value"`.
+fn push_str_field(s: &mut String, key: &str, val: &str) {
+    s.push('"');
+    s.push_str(key);
+    s.push_str("\":\"");
+    for c in val.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\t' => s.push_str("\\t"),
+            '\r' => s.push_str("\\r"),
+            c if (c as u32) < 0x20 => s.push_str(&format!("\\u{:04x}", c as u32)),
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyBreakdown;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_serializes_without_nan() {
+        // fresh metrics: both ratio denominators are zero
+        let m = Metrics::default();
+        let snap = MetricsSnapshot::aggregate("empty", &m);
+        assert_eq!(snap.fill_rate, None);
+        assert_eq!(snap.par_utilization, None);
+        let json = snap.to_json();
+        assert!(json.contains("\"fillRate\":null"), "json: {json}");
+        assert!(json.contains("\"parUtilization\":null"));
+        assert!(json.contains("\"latencyP50Ns\":null"));
+        assert!(!json.contains("NaN") && !json.contains("inf"), "json: {json}");
+    }
+
+    #[test]
+    fn snapshot_captures_counters_and_quantiles() {
+        let mut m = Metrics::default();
+        let e = EnergyBreakdown { write: 1e-9, compare: 1e-12, write_ops: 2 };
+        m.record(128, 8, &e, Duration::from_millis(3));
+        m.record_tiles(1, 256, 128);
+        m.latency.record(Duration::from_micros(50));
+        m.latency.record(Duration::from_micros(150));
+        let snap = MetricsSnapshot::shard("shard 0", &m);
+        assert_eq!(snap.scope, "shard");
+        assert_eq!(snap.jobs, 1);
+        assert_eq!(snap.rows, 128);
+        assert_eq!(snap.latency_count, 2);
+        assert!(snap.fill_rate.is_some());
+        let json = snap.to_json();
+        assert!(json.contains("\"label\":\"shard 0\""));
+        assert!(json.contains("\"jobs\":1"));
+        assert!(json.contains("\"modeledEnergyJ\":"));
+        assert!(json.contains("\"latencyP95Ns\":"));
+    }
+
+    #[test]
+    fn registry_serializes_as_array() {
+        let mut reg = SnapshotRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.to_json(), "[]");
+        reg.push(MetricsSnapshot::aggregate("a", &Metrics::default()));
+        reg.push(MetricsSnapshot::aggregate("b", &Metrics::default()));
+        assert_eq!(reg.len(), 2);
+        let json = reg.to_json();
+        assert!(json.starts_with('[') && json.ends_with(']'));
+        assert!(json.contains("\"label\":\"a\"") && json.contains("\"label\":\"b\""));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let snap = MetricsSnapshot::aggregate("a\"b\\c\nd", &Metrics::default());
+        let json = snap.to_json();
+        assert!(json.contains("\"label\":\"a\\\"b\\\\c\\nd\""), "json: {json}");
+    }
+}

@@ -1,0 +1,270 @@
+//! The typed span/event model: what the tracer records.
+//!
+//! Every recorded event is a fixed-size [`SpanEvent`] — a kind, start/end
+//! nanosecond offsets from the recorder origin, the timeline lane it
+//! renders on (`pid`/`tid`), the request and coalesced-batch ids it
+//! belongs to, and a [`Payload`] carrying the domain numbers (rows,
+//! radix, modeled energy, delay cycles, [`ApStats`] deltas, kernel
+//! hits/misses, parallel block counts). Payloads are `Copy` and hold no
+//! heap data, so recording a span is a handful of word writes into a
+//! thread-owned ring buffer — see [`super::recorder`].
+
+use crate::ap::ApStats;
+
+/// Span/event kinds — the slice names in the exported timeline. The
+/// taxonomy follows the request path end to end (see the "Observability"
+/// section of `docs/ARCHITECTURE.md`):
+///
+/// `Admit` (client edge) → `Flush` (shard worker batch) → `Exec` (engine
+/// dispatch) → `Tile` (one backend array run) → `Job`/`Program`/`Step`
+/// (per-request attribution) → `Reply` (latency + flow finish). `Shed`
+/// is the admission-control rejection instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Front-door admission: one successful `submit` on a client thread.
+    Admit,
+    /// Front-door rejection instant (saturated or closed).
+    Shed,
+    /// One shard-worker batch flush: dispatch of the pending submissions.
+    Flush,
+    /// One engine dispatch (solo, coalesced, reduce, search, or program).
+    Exec,
+    /// One backend array run inside a dispatch.
+    Tile,
+    /// Per-request engine attribution for a job (async span keyed by
+    /// request id; the one canonical energy-bearing span per job).
+    Job,
+    /// Per-request engine attribution for a program (the energy-bearing
+    /// span for program requests).
+    Program,
+    /// One program plan step ([`crate::program::StepReport::span`] holds
+    /// the recorded span's id).
+    Step,
+    /// Reply sent for one submission: queue wait + total latency +
+    /// stolen flag; carries the request flow's finish.
+    Reply,
+}
+
+impl SpanKind {
+    /// Slice name in the exported timeline.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Shed => "shed",
+            SpanKind::Flush => "flush",
+            SpanKind::Exec => "exec",
+            SpanKind::Tile => "tile",
+            SpanKind::Job => "job",
+            SpanKind::Program => "program",
+            SpanKind::Step => "step",
+            SpanKind::Reply => "reply",
+        }
+    }
+}
+
+/// Flow-arrow role of an event: a sampled request's causal chain is one
+/// flow (id = request id) opened inside its client-edge admit span and
+/// finished inside its reply span — the arrow Perfetto draws across
+/// threads, steals, and coalesced batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    /// Not a flow endpoint.
+    None,
+    /// Opens the request's flow (admit spans of sampled requests).
+    Start,
+    /// Finishes the request's flow (reply spans of sampled requests).
+    Finish,
+}
+
+/// Scalar summary of an [`ApStats`] delta — payloads must be `Copy`, so
+/// the mismatch histogram stays behind; the cycle/op counters are what
+/// the energy model prices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsDelta {
+    pub compare_cycles: u64,
+    pub write_cycles: u64,
+    pub sets: u64,
+    pub resets: u64,
+    pub rows_written: u64,
+}
+
+impl StatsDelta {
+    /// Capture the scalar counters of a stats block.
+    pub fn of(stats: &ApStats) -> Self {
+        StatsDelta {
+            compare_cycles: stats.compare_cycles,
+            write_cycles: stats.write_cycles,
+            sets: stats.sets,
+            resets: stats.resets,
+            rows_written: stats.rows_written,
+        }
+    }
+}
+
+/// Per-kind domain payload. Every variant is `Copy` with `'static`
+/// labels — recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Payload {
+    /// No domain data.
+    None,
+    /// [`SpanKind::Admit`]: the admitted work class.
+    Admit { class: &'static str },
+    /// [`SpanKind::Shed`]: the rejected work class; `closed` distinguishes
+    /// shutdown rejection from saturation shedding.
+    Shed { class: &'static str, closed: bool },
+    /// [`SpanKind::Flush`]: batch shape + why the policy flushed.
+    Flush { jobs: u32, rows: u64, stolen: u32, reason: &'static str },
+    /// [`SpanKind::Exec`]: one engine dispatch (kernel/parallel events
+    /// are drained per dispatch, so they attribute here, not per tile).
+    Exec {
+        op: &'static str,
+        jobs: u32,
+        rows: u64,
+        radix: u8,
+        kernel_hits: u64,
+        kernel_misses: u64,
+        par_blocks: u64,
+    },
+    /// [`SpanKind::Tile`]: one backend array run.
+    Tile { rows: u32, live: u32, segments: u32 },
+    /// [`SpanKind::Job`]: per-request attribution (exactly the numbers
+    /// [`crate::coordinator::Metrics::record`] accumulates for this job).
+    Job {
+        op: &'static str,
+        rows: u64,
+        radix: u8,
+        digits: u32,
+        energy_j: f64,
+        delay_cycles: u64,
+        tiles: u32,
+        stats: StatsDelta,
+    },
+    /// [`SpanKind::Program`]: whole-program attribution.
+    Program {
+        steps: u32,
+        rows: u64,
+        energy_j: f64,
+        delay_cycles: u64,
+        stats: StatsDelta,
+    },
+    /// [`SpanKind::Step`]: one program plan step.
+    Step {
+        index: u32,
+        wave: u32,
+        rows: u64,
+        energy_j: f64,
+        delay_cycles: u64,
+        stats: StatsDelta,
+    },
+    /// [`SpanKind::Reply`]: what the client experienced.
+    Reply { queue_ns: u64, latency_ns: u64, stolen: bool },
+}
+
+/// One recorded event. `start_ns == end_ns` marks an instant.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Nanoseconds from the recorder origin.
+    pub start_ns: u64,
+    /// Nanoseconds from the recorder origin (`>= start_ns`).
+    pub end_ns: u64,
+    /// Timeline process lane: 0 = client edge, 1 = engine-service pool,
+    /// `100 + shard` = shard workers.
+    pub pid: u32,
+    /// Timeline thread lane within the process lane.
+    pub tid: u32,
+    /// Request id the event belongs to (0 = none). Program requests use
+    /// synthetic ids with [`super::recorder::PROGRAM_REQ_BIT`] set.
+    pub req: u64,
+    /// Coalesced-batch id linking job/tile/flush spans (0 = none).
+    pub batch: u64,
+    /// Unique span id (0 = unassigned); [`crate::program::StepReport`]
+    /// cross-references step spans through it.
+    pub id: u64,
+    /// Flow-arrow role.
+    pub flow: Flow,
+    pub payload: Payload,
+}
+
+impl SpanEvent {
+    /// The modeled energy this event attributes to its request, if it is
+    /// an energy-bearing span ([`Payload::Job`] / [`Payload::Program`]).
+    /// Exactly one such span exists per request, so summing this over a
+    /// full (sample = 1) trace reconciles with
+    /// [`crate::coordinator::Metrics::modeled_energy_j`].
+    pub fn request_energy_j(&self) -> Option<f64> {
+        match self.payload {
+            Payload::Job { energy_j, .. } | Payload::Program { energy_j, .. } => Some(energy_j),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_are_stable() {
+        // the exporter and tools/trace_check.py key on these strings
+        for (k, n) in [
+            (SpanKind::Admit, "admit"),
+            (SpanKind::Shed, "shed"),
+            (SpanKind::Flush, "flush"),
+            (SpanKind::Exec, "exec"),
+            (SpanKind::Tile, "tile"),
+            (SpanKind::Job, "job"),
+            (SpanKind::Program, "program"),
+            (SpanKind::Step, "step"),
+            (SpanKind::Reply, "reply"),
+        ] {
+            assert_eq!(k.name(), n);
+        }
+    }
+
+    #[test]
+    fn stats_delta_copies_scalar_counters() {
+        let s = ApStats {
+            compare_cycles: 3,
+            write_cycles: 2,
+            sets: 5,
+            resets: 7,
+            rows_written: 11,
+            mismatch_hist: vec![1, 2, 3],
+        };
+        let d = StatsDelta::of(&s);
+        assert_eq!(d.compare_cycles, 3);
+        assert_eq!(d.write_cycles, 2);
+        assert_eq!(d.sets, 5);
+        assert_eq!(d.resets, 7);
+        assert_eq!(d.rows_written, 11);
+    }
+
+    #[test]
+    fn request_energy_only_on_job_and_program() {
+        let mut ev = SpanEvent {
+            kind: SpanKind::Job,
+            start_ns: 0,
+            end_ns: 1,
+            pid: 100,
+            tid: 0,
+            req: 1,
+            batch: 0,
+            id: 0,
+            flow: Flow::None,
+            payload: Payload::Job {
+                op: "add",
+                rows: 8,
+                radix: 3,
+                digits: 4,
+                energy_j: 2.5e-9,
+                delay_cycles: 840,
+                tiles: 1,
+                stats: StatsDelta::default(),
+            },
+        };
+        assert_eq!(ev.request_energy_j(), Some(2.5e-9));
+        ev.payload = Payload::Tile { rows: 8, live: 8, segments: 1 };
+        assert_eq!(ev.request_energy_j(), None);
+    }
+}

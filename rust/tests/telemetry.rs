@@ -1,0 +1,238 @@
+//! End-to-end tests for the structured-tracing layer: the span chains
+//! recorded across the front door, shard coordinator, and engine must be
+//! complete for every sampled request, head sampling must keep whole
+//! causal chains (never fragments), the Chrome exporter must stay
+//! well-formed even over partial (dropped-span) traces, and the modeled
+//! energy attributed to spans must reconcile exactly with the engine
+//! metrics — two independent accountings of the same physics model.
+
+use mvap::coordinator::{Backend, EngineService, Job, NativeBackend, OpKind, ShardConfig};
+use mvap::mvl::{Radix, Word};
+use mvap::program::{builtin, BoundProgram};
+use mvap::serving::{FrontConfig, FrontDoor};
+use mvap::telemetry::{chrome_trace, Flow, SpanEvent, SpanKind, SpanRecorder, TraceData};
+use mvap::telemetry::PROGRAM_REQ_BIT;
+use mvap::util::Rng;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native() -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::default()) as Box<dyn Backend>)
+}
+
+fn random_words(rng: &mut Rng, rows: usize, digits: usize, radix: Radix) -> Vec<Word> {
+    (0..rows)
+        .map(|_| Word::from_digits(rng.number(digits, radix.n()), radix))
+        .collect()
+}
+
+fn front(recorder: &Arc<SpanRecorder>) -> FrontDoor {
+    FrontDoor::start_traced(
+        FrontConfig {
+            max_in_flight: 64,
+            shard: ShardConfig {
+                shards: 2,
+                queue_depth: 16,
+                flush_after: Duration::from_micros(200),
+                ..ShardConfig::default()
+            },
+        },
+        Some(Arc::clone(recorder)),
+        native,
+    )
+    .expect("front door starts")
+}
+
+/// The request ids of every event matching a predicate.
+fn reqs_where(data: &TraceData, pred: impl Fn(&SpanEvent) -> bool) -> BTreeSet<u64> {
+    data.events.iter().filter(|e| pred(e)).map(|e| e.req).collect()
+}
+
+/// Every request traced at sample 1 leaves a full admit → job → reply
+/// chain, the program leaves a synthetic-request chain, and the span
+/// energy reconciles with the aggregate metrics to 1e-9 relative.
+#[test]
+fn traced_front_door_chains_are_complete_and_energy_reconciles() {
+    let radix = Radix::TERNARY;
+    let recorder = SpanRecorder::new(1);
+    let front = front(&recorder);
+    let mut rng = Rng::new(0x7e1e);
+    let mut replies = Vec::new();
+    for id in 1..=10u64 {
+        let a = random_words(&mut rng, 16, 4, radix);
+        let b = random_words(&mut rng, 16, 4, radix);
+        let job = Job::new(id, OpKind::Add, radix, true, a, b);
+        replies.push(front.submit(job).unwrap());
+    }
+    let plan = Arc::new(builtin::dot(radix, 4).plan());
+    let inputs: Vec<(&str, Vec<Word>)> = plan
+        .program()
+        .input_names()
+        .iter()
+        .map(|n| (*n, random_words(&mut rng, 16, 4, radix)))
+        .collect();
+    let bound = BoundProgram::bind(&plan, inputs, true).unwrap();
+    let prog_rx = front.submit_program(bound).unwrap();
+    for rx in replies {
+        rx.recv().unwrap().unwrap();
+    }
+    prog_rx.recv().unwrap().unwrap();
+    assert!(front.drain(Duration::from_secs(10)), "front door failed to drain");
+    let (_, agg, _) = front.shutdown();
+
+    let data = recorder.drain();
+    assert_eq!(data.dropped, 0, "nothing should drop at this volume");
+
+    let admits = reqs_where(&data, |e| e.kind == SpanKind::Admit);
+    let finished = reqs_where(&data, |e| e.kind == SpanKind::Reply && e.flow == Flow::Finish);
+    assert_eq!(admits, finished, "every admitted request must finish its flow");
+    assert_eq!(admits.len(), 11, "10 jobs + 1 program");
+    assert!(
+        admits.iter().any(|r| r & PROGRAM_REQ_BIT != 0),
+        "the program's synthetic request id must carry the marker bit"
+    );
+    for id in 1..=10u64 {
+        assert!(
+            data.events.iter().any(|e| e.kind == SpanKind::Job && e.req == id),
+            "request {id} lost its job attribution span"
+        );
+    }
+
+    let span_energy: f64 = data.events.iter().filter_map(|e| e.request_energy_j()).sum();
+    let rel = (span_energy - agg.modeled_energy_j).abs() / agg.modeled_energy_j.abs().max(1e-30);
+    assert!(
+        rel < 1e-9,
+        "span energy {span_energy:e} J vs metrics {:e} J (rel {rel:e})",
+        agg.modeled_energy_j
+    );
+
+    // The exporter stays balanced over the real (multi-lane) trace.
+    let json = chrome_trace(&data, &[]);
+    let sync_b = json.matches("\"ph\":\"B\"").count();
+    let sync_e = json.matches("\"ph\":\"E\"").count();
+    assert_eq!(sync_b, sync_e, "sync B/E pairs unbalanced");
+    let async_b = json.matches("\"ph\":\"b\"").count();
+    let async_e = json.matches("\"ph\":\"e\"").count();
+    assert_eq!(async_b, async_e, "async b/e pairs unbalanced");
+    assert_eq!(json.matches("\"ph\":\"s\"").count(), 11, "one flow start per request");
+    assert_eq!(json.matches("\"ph\":\"f\"").count(), 11, "one flow finish per request");
+}
+
+/// Head sampling keeps whole chains: with 1-in-4 sampling, exactly the
+/// deterministically sampled request ids get admit spans and flow
+/// finishes, and each sampled id keeps its job span. Unsampled ids never
+/// open a flow (batch-mates of a sampled request may still leave
+/// execution spans — the causal chain is kept intact by design).
+#[test]
+fn head_sampling_keeps_whole_chains() {
+    let radix = Radix::TERNARY;
+    let recorder = SpanRecorder::new(4);
+    let ids: Vec<u64> = (1..=32).collect();
+    let mut expected = BTreeSet::new();
+    for &id in &ids {
+        if recorder.sampled(id) {
+            expected.insert(id);
+        }
+    }
+    assert!(
+        !expected.is_empty() && expected.len() < ids.len(),
+        "sampler should split 32 ids: kept {}",
+        expected.len()
+    );
+
+    let front = front(&recorder);
+    let mut rng = Rng::new(77);
+    let mut replies = Vec::new();
+    for &id in &ids {
+        let a = random_words(&mut rng, 16, 4, radix);
+        let b = random_words(&mut rng, 16, 4, radix);
+        replies.push(front.submit(Job::new(id, OpKind::Add, radix, true, a, b)).unwrap());
+    }
+    for rx in replies {
+        rx.recv().unwrap().unwrap();
+    }
+    assert!(front.drain(Duration::from_secs(10)), "front door failed to drain");
+    front.shutdown();
+
+    let data = recorder.drain();
+    let admits = reqs_where(&data, |e| e.kind == SpanKind::Admit);
+    assert_eq!(admits, expected, "admit spans must cover exactly the sampled ids");
+    let finished = reqs_where(&data, |e| e.flow == Flow::Finish);
+    assert_eq!(finished, expected, "flow finishes must cover exactly the sampled ids");
+    for &id in &expected {
+        assert!(
+            data.events.iter().any(|e| e.kind == SpanKind::Job && e.req == id),
+            "sampled request {id} lost its job span"
+        );
+    }
+    assert!(
+        data.events.iter().all(|e| e.flow == Flow::None || expected.contains(&e.req)),
+        "an unsampled request opened or finished a flow"
+    );
+}
+
+/// Step reports carry span ids when traced and zeros when not.
+#[test]
+fn step_reports_carry_span_ids_only_when_traced() {
+    let radix = Radix::TERNARY;
+    let mut rng = Rng::new(5);
+    let plan = Arc::new(builtin::fir(radix, 4, 4).plan());
+    let mut run = |recorder: Option<Arc<SpanRecorder>>| {
+        let inputs: Vec<(&str, Vec<Word>)> = plan
+            .program()
+            .input_names()
+            .iter()
+            .map(|n| (*n, random_words(&mut rng, 16, 4, radix)))
+            .collect();
+        let bound = BoundProgram::bind(&plan, inputs, true).unwrap();
+        let svc = EngineService::start_traced(1, 4, recorder, native).unwrap();
+        let report = svc.run_program(bound).unwrap();
+        svc.shutdown();
+        report
+    };
+
+    let untraced = run(None);
+    assert!(untraced.steps.iter().all(|s| s.span == 0), "untraced steps must carry 0");
+
+    let recorder = SpanRecorder::new(1);
+    let traced = run(Some(Arc::clone(&recorder)));
+    assert!(!traced.steps.is_empty());
+    assert!(traced.steps.iter().all(|s| s.span != 0), "traced steps must carry span ids");
+    let data = recorder.drain();
+    let step_ids: BTreeSet<u64> =
+        data.events.iter().filter(|e| e.kind == SpanKind::Step).map(|e| e.id).collect();
+    for s in &traced.steps {
+        assert!(step_ids.contains(&s.span), "step span {:#x} not in the trace", s.span);
+    }
+}
+
+/// Tiny ring buffers overflow under load, but the loss is accounted
+/// (dropped counter) and the exporter still emits a balanced document —
+/// a partial trace degrades, never corrupts.
+#[test]
+fn overflow_drops_oldest_but_export_stays_balanced() {
+    let radix = Radix::TERNARY;
+    let recorder = SpanRecorder::with_capacity(1, 8);
+    let svc = EngineService::start_traced(2, 8, Some(Arc::clone(&recorder)), native).unwrap();
+    let mut rng = Rng::new(9);
+    let mut replies = Vec::new();
+    for id in 0..64u64 {
+        let a = random_words(&mut rng, 8, 4, radix);
+        let b = random_words(&mut rng, 8, 4, radix);
+        replies.push(svc.submit(Job::new(id, OpKind::Add, radix, true, a, b)));
+    }
+    for rx in replies {
+        rx.recv().unwrap().unwrap();
+    }
+    svc.shutdown();
+
+    let data = recorder.drain();
+    assert!(data.dropped > 0, "64 jobs through 8-slot sinks must drop spans");
+    assert!(!data.events.is_empty(), "the newest spans survive");
+    let json = chrome_trace(&data, &[]);
+    let sync_b = json.matches("\"ph\":\"B\"").count();
+    let sync_e = json.matches("\"ph\":\"E\"").count();
+    assert_eq!(sync_b, sync_e, "partial traces must still balance");
+    assert!(json.contains(&format!("\"droppedSpans\":{}", data.dropped)));
+}

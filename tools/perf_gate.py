@@ -2,11 +2,12 @@
 """Fail-loud perf-regression gate over the quick-bench trajectory files.
 
 Usage:
-    python3 tools/perf_gate.py BENCH_8.json [more BENCH_*.json ...]
+    python3 tools/perf_gate.py BENCH_8.json BENCH_10.json [more ...]
 
 The first file is the PR-8 trajectory of record (`hot/parallel_apply_*`
-plus the arena and PR-3 benches); any further files are only checked for
-non-emptiness. Three checks, mirrored from ISSUE 8:
+plus the arena and PR-3 benches); the second is the PR-10 telemetry
+trajectory (`hot/trace_*`); any further files are only checked for
+non-emptiness. Five checks:
 
   (a) every listed trajectory file must exist and hold at least one
       result record — an empty trajectory means the bench stage silently
@@ -20,7 +21,14 @@ non-emptiness. Three checks, mirrored from ISSUE 8:
       the plain sequential constructor at 256k rows — the parallel knob
       at threads=1 takes the identical code path (word_cuts never
       partitions), so any gap beyond noise is dispatch overhead leaking
-      into the default configuration.
+      into the default configuration;
+  (d) an attached-but-disarmed tracer (the not-sampled request path —
+      one branch per span site) must cost at most MAX_TRACE_DISARMED
+      over the tracing-disabled execute at 256k rows: the PR-10
+      zero-cost-when-off contract, measured, not asserted;
+  (e) an armed tracer (every span recorded into the per-thread ring)
+      must cost at most MAX_TRACE_ARMED over disabled — spans are per
+      tile/step, never per row, so overhead must not scale with rows.
 
 Exit status 0 = gate passed; 1 = regression (or empty trajectory).
 """
@@ -35,6 +43,11 @@ ONE_T_BENCH = f"hot/parallel_apply_1t_{GATE_ROWS}rows"
 FOUR_T_BENCH = f"hot/parallel_apply_4t_{GATE_ROWS}rows"
 MIN_SPEEDUP_4T = 2.0
 MAX_1T_OVERHEAD = 1.10
+TRACE_OFF_BENCH = f"hot/trace_off_{GATE_ROWS}rows"
+TRACE_DISARMED_BENCH = f"hot/trace_unsampled_{GATE_ROWS}rows"
+TRACE_ARMED_BENCH = f"hot/trace_sampled_{GATE_ROWS}rows"
+MAX_TRACE_DISARMED = 1.02
+MAX_TRACE_ARMED = 1.10
 
 
 def fail(msg):
@@ -81,13 +94,44 @@ def load_results(path):
     return by_name
 
 
+def check_trace_overhead(path):
+    """(d)+(e): the telemetry overhead gates over the PR-10 trajectory."""
+    p50 = load_results(path)
+    for name in (TRACE_OFF_BENCH, TRACE_DISARMED_BENCH, TRACE_ARMED_BENCH):
+        if name not in p50:
+            fail(f"{path} is missing the gated bench {name}")
+    off = p50[TRACE_OFF_BENCH]
+    disarmed = p50[TRACE_DISARMED_BENCH]
+    armed = p50[TRACE_ARMED_BENCH]
+    if min(off, disarmed, armed) <= 0:
+        fail(
+            f"non-positive p50 in trace benches: off={off} "
+            f"disarmed={disarmed} armed={armed}"
+        )
+    for label, got, limit in (
+        ("disarmed tracer", disarmed / off, MAX_TRACE_DISARMED),
+        ("armed tracer", armed / off, MAX_TRACE_ARMED),
+    ):
+        print(
+            f"perf gate: {label} overhead at {GATE_ROWS} rows: "
+            f"{got:.3f}x disabled (limit {limit:.2f}x)"
+        )
+        if got > limit:
+            fail(
+                f"{label} p50 is {got:.3f}x the tracing-disabled p50 "
+                f"({off:.0f} ns) at {GATE_ROWS} rows — limit is {limit:.2f}x; "
+                f"the zero-cost-when-off contract is broken"
+            )
+
+
 def main(argv):
-    if len(argv) < 2:
-        fail("usage: perf_gate.py BENCH_8.json [more trajectories ...]")
+    if len(argv) < 3:
+        fail("usage: perf_gate.py BENCH_8.json BENCH_10.json [more trajectories ...]")
 
     gate_path = argv[1]
     p50 = load_results(gate_path)
-    for extra in argv[2:]:
+    check_trace_overhead(argv[2])
+    for extra in argv[3:]:
         load_results(extra)  # (a) non-emptiness only
 
     for name in (SEQ_BENCH, ONE_T_BENCH, FOUR_T_BENCH):

@@ -1,0 +1,315 @@
+#!/usr/bin/env python3
+"""Structural checker for `mvap`'s Chrome trace-event JSON exports.
+
+Usage:
+    python3 tools/trace_check.py TRACE.json [options]
+
+Options:
+    --allow-drops       tolerate droppedSpans > 0 (the deep per-request
+                        checks are skipped in that case, loudly — a
+                        partial trace cannot prove chain completeness)
+    --require-complete  every flow finish must have a matching start
+                        (front-door traces only: `mvap serve --trace` and
+                        `mvap trace` open a flow at the admit edge;
+                        `mvap run --trace` has no edge, so its replies
+                        legitimately finish flows nobody started)
+    --require-steal     at least one reply span must be marked stolen
+    --require-coalesce  at least one flush span must carry >= 2 jobs
+
+Checks, in order:
+
+  1. the file parses, `traceEvents` is non-empty, and the `otherData`
+     envelope carries the sample rate and dropped-span counter;
+  2. sync `B`/`E` events balance per (pid, tid) lane in file order —
+     every `E` closes the innermost open `B` at a timestamp no earlier
+     than it opened, and no lane ends with an open span;
+  3. async `b`/`e` pairs (the per-job attribution spans) balance per
+     (category, id);
+  4. each flow id has at most one start and one finish; a start without
+     a finish is always fatal (an admitted request whose causal chain
+     never reached a reply); start precedes finish; the start lies
+     inside an `admit` span and the finish inside a `reply` span on
+     their respective lanes;
+  5. when the trace kept everything (sample == 1, zero drops) and
+     aggregate metrics snapshots are attached, the modeled energy on the
+     job/program spans must reconcile with `modeledEnergyJ` to within
+     1e-9 relative — the spans and the metrics are two independent
+     accountings of the same physics model, so daylight between them
+     means an instrumentation bug.
+
+Exit status 0 = trace is well-formed; 1 = any check failed.
+"""
+
+import json
+import sys
+
+ENERGY_REL_TOL = 1e-9
+
+
+class TraceError(Exception):
+    pass
+
+
+def fail(msg):
+    raise TraceError(msg)
+
+
+def load(path):
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents is missing or empty")
+    other = doc.get("otherData", {})
+    if "sample" not in other or "droppedSpans" not in other:
+        fail(f"{path}: otherData lacks sample/droppedSpans — not an mvap trace")
+    return doc
+
+
+def check_sync_stacks(events):
+    """B/E discipline per lane, in file order. Returns the closed
+    intervals as {(pid, tid): [(name, start_ts, end_ts), ...]}."""
+    stacks = {}  # lane -> [(name, ts)]
+    last_ts = {}  # lane -> most recent B/E timestamp
+    intervals = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in ("B", "E"):
+            continue
+        lane = (ev.get("pid"), ev.get("tid"))
+        ts = float(ev["ts"])
+        if lane in last_ts and ts < last_ts[lane]:
+            fail(
+                f"event {i}: lane {lane} timestamp regressed "
+                f"({ts} after {last_ts[lane]})"
+            )
+        last_ts[lane] = ts
+        if ph == "B":
+            if "name" not in ev:
+                fail(f"event {i}: B without a name on lane {lane}")
+            stacks.setdefault(lane, []).append((ev["name"], ts))
+        else:
+            stack = stacks.get(lane, [])
+            if not stack:
+                fail(f"event {i}: E with no open span on lane {lane}")
+            name, begin = stack.pop()
+            if ts < begin:
+                fail(
+                    f"event {i}: span '{name}' on lane {lane} closes at "
+                    f"{ts} before it opened at {begin}"
+                )
+            intervals.setdefault(lane, []).append((name, begin, ts))
+    for lane, stack in stacks.items():
+        if stack:
+            open_names = [n for n, _ in stack]
+            fail(f"lane {lane} ends with unclosed spans: {open_names}")
+    return intervals
+
+
+def check_async_pairs(events):
+    """b/e balance per (cat, id) — the per-job attribution spans."""
+    open_by_key = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in ("b", "e"):
+            continue
+        key = (ev.get("cat"), ev.get("id"))
+        if key[1] is None:
+            fail(f"event {i}: async {ph} without an id")
+        ts = float(ev["ts"])
+        if ph == "b":
+            open_by_key.setdefault(key, []).append(ts)
+        else:
+            stack = open_by_key.get(key, [])
+            if not stack:
+                fail(f"event {i}: async e with no open b for {key}")
+            begin = stack.pop()
+            if ts < begin:
+                fail(f"event {i}: async span {key} ends at {ts} before {begin}")
+    for key, stack in open_by_key.items():
+        if stack:
+            fail(f"async span {key} never closed ({len(stack)} open)")
+
+
+def enclosed_by(intervals, lane, ts, name):
+    return any(
+        n == name and begin <= ts <= end
+        for n, begin, end in intervals.get(lane, [])
+    )
+
+
+def check_flows(events, intervals, require_complete):
+    """Each flow id: one start inside an admit span, one finish inside a
+    reply span, start before finish. Returns the number of complete
+    (start + finish) chains."""
+    starts, finishes = {}, {}
+    for i, ev in enumerate(events):
+        if ev.get("cat") != "flow":
+            continue
+        ph, fid = ev.get("ph"), ev.get("id")
+        lane = (ev.get("pid"), ev.get("tid"))
+        ts = float(ev["ts"])
+        side = {"s": starts, "f": finishes}.get(ph)
+        if side is None:
+            fail(f"event {i}: unexpected flow phase '{ph}'")
+        if fid in side:
+            fail(f"event {i}: duplicate flow {ph} for id {fid}")
+        side[fid] = (ts, lane)
+    complete = 0
+    for fid, (ts, lane) in starts.items():
+        if not enclosed_by(intervals, lane, ts, "admit"):
+            fail(f"flow {fid}: start at {ts} is not inside an admit span on {lane}")
+        if fid not in finishes:
+            fail(
+                f"flow {fid}: started (request admitted) but never finished — "
+                f"its causal chain never reached a reply"
+            )
+        fts, flane = finishes[fid]
+        if fts < ts:
+            fail(f"flow {fid}: finishes at {fts} before it starts at {ts}")
+        complete += 1
+    for fid, (ts, lane) in finishes.items():
+        if not enclosed_by(intervals, lane, ts, "reply"):
+            fail(f"flow {fid}: finish at {ts} is not inside a reply span on {lane}")
+        if fid not in starts and require_complete:
+            fail(
+                f"flow {fid}: finished but never started — the admit edge "
+                f"span is missing (--require-complete)"
+            )
+    return complete
+
+
+def span_energy_j(events):
+    """Sum the one energy-bearing span per request: async job `b` events
+    plus sync program `B` events (program steps subdivide their program's
+    energy and must NOT be double-counted)."""
+    total = 0.0
+    for ev in events:
+        args = ev.get("args", {})
+        if "energyJ" not in args:
+            continue
+        if ev.get("ph") == "b" and ev.get("cat") == "req":
+            total += float(args["energyJ"])
+        elif ev.get("ph") == "B" and ev.get("name") == "program":
+            total += float(args["energyJ"])
+    return total
+
+
+def check_energy(doc):
+    aggregates = [
+        s for s in doc.get("metricsSnapshots", []) if s.get("scope") == "aggregate"
+    ]
+    if not aggregates:
+        print("trace check: no aggregate snapshots — energy reconciliation skipped")
+        return
+    metered = sum(float(s.get("modeledEnergyJ", 0.0)) for s in aggregates)
+    spanned = span_energy_j(doc["traceEvents"])
+    scale = max(abs(metered), abs(spanned), 1e-30)
+    rel = abs(metered - spanned) / scale
+    if rel > ENERGY_REL_TOL:
+        fail(
+            f"span energy {spanned:.17e} J does not reconcile with the "
+            f"metrics' modeledEnergyJ {metered:.17e} J "
+            f"(relative error {rel:.3e} > {ENERGY_REL_TOL:.0e})"
+        )
+    print(
+        f"trace check: energy reconciles — spans {spanned:.6e} J vs "
+        f"metrics {metered:.6e} J (rel {rel:.2e})"
+    )
+
+
+def check_requirements(events, require_steal, require_coalesce):
+    if require_steal:
+        stolen = any(
+            ev.get("ph") == "B"
+            and ev.get("name") == "reply"
+            and ev.get("args", {}).get("stolen") is True
+            for ev in events
+        )
+        if not stolen:
+            fail("--require-steal: no reply span is marked stolen")
+    if require_coalesce:
+        coalesced = any(
+            ev.get("ph") == "B"
+            and ev.get("name") == "flush"
+            and int(ev.get("args", {}).get("jobs", 0)) >= 2
+            for ev in events
+        )
+        if not coalesced:
+            fail("--require-coalesce: no flush span carries >= 2 jobs")
+
+
+def check(path, allow_drops=False, require_complete=False, require_steal=False,
+          require_coalesce=False):
+    doc = load(path)
+    events = doc["traceEvents"]
+    other = doc["otherData"]
+    dropped = int(other["droppedSpans"])
+    sample = int(other["sample"])
+
+    if dropped > 0 and not allow_drops:
+        fail(
+            f"{dropped} spans were dropped from the ring buffers — "
+            f"raise the sink capacity or sample rate, or pass --allow-drops"
+        )
+
+    intervals = check_sync_stacks(events)
+    check_async_pairs(events)
+
+    if dropped > 0:
+        print(
+            f"trace check: WARNING — {dropped} dropped spans; flow-chain and "
+            f"energy checks skipped (a partial trace cannot prove them)",
+            file=sys.stderr,
+        )
+    else:
+        chains = check_flows(events, intervals, require_complete)
+        print(f"trace check: {chains} complete admit->reply flow chains")
+        if sample <= 1:
+            check_energy(doc)
+        else:
+            print(
+                f"trace check: sample 1/{sample} — energy reconciliation "
+                f"skipped (unsampled requests carry energy but no spans)"
+            )
+
+    check_requirements(events, require_steal, require_coalesce)
+    n_sync = sum(1 for e in events if e.get("ph") == "B")
+    print(f"trace check passed: {path} ({len(events)} events, {n_sync} sync spans)")
+
+
+def main(argv):
+    flags = {a for a in argv[1:] if a.startswith("--")}
+    paths = [a for a in argv[1:] if not a.startswith("--")]
+    known = {"--allow-drops", "--require-complete", "--require-steal",
+             "--require-coalesce"}
+    unknown = flags - known
+    if unknown or len(paths) != 1:
+        print(
+            f"usage: trace_check.py TRACE.json [--allow-drops] "
+            f"[--require-complete] [--require-steal] [--require-coalesce]"
+            + (f"\nunknown flags: {sorted(unknown)}" if unknown else ""),
+            file=sys.stderr,
+        )
+        return 2
+    try:
+        check(
+            paths[0],
+            allow_drops="--allow-drops" in flags,
+            require_complete="--require-complete" in flags,
+            require_steal="--require-steal" in flags,
+            require_coalesce="--require-coalesce" in flags,
+        )
+    except TraceError as e:
+        print(f"TRACE CHECK FAILED: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
